@@ -1,0 +1,67 @@
+//! The MTCNN face-detection cascade (E3, Fig 4).
+//!
+//! The most topologically complex pipeline of the paper: a 5-scale image
+//! pyramid of fully-convolutional P-Nets running in parallel branches,
+//! merged with NMS, refined by R-Net and O-Net stages with image-patch
+//! extraction and bounding-box regression between them.
+//!
+//! ```bash
+//! cargo run --release --example mtcnn_cascade [frames] [device-class: a|b|c]
+//! ```
+
+use nnstreamer::apps::e3_mtcnn::{self, MtcnnConfig};
+use nnstreamer::devices::DeviceClass;
+
+fn main() -> anyhow::Result<()> {
+    let frames: u64 = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let class = std::env::args()
+        .nth(2)
+        .map(|v| DeviceClass::parse(&v))
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap_or(DeviceClass::Pc);
+
+    let cfg = MtcnnConfig {
+        num_frames: frames,
+        class,
+        fps: 10_000.0, // batch: as fast as the cascade can go
+        live: false,
+        ..Default::default()
+    };
+
+    println!(
+        "running MTCNN on device class {} ({} Full-HD frames)...",
+        class.name(),
+        frames
+    );
+    let nns = e3_mtcnn::run_nns(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("running serial Control (the ROS team's implementation)...");
+    let ctl = e3_mtcnn::run_control(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("\n== Table II shape on this machine ({}) ==", class.name());
+    println!("                      Control    NNStreamer");
+    println!(
+        "  throughput (fps)   {:8.2}    {:8.2}",
+        ctl.throughput_fps, nns.throughput_fps
+    );
+    println!(
+        "  P-Net latency (ms) {:8.1}    {:8.1}",
+        ctl.pnet_latency_ms, nns.pnet_latency_ms
+    );
+    println!(
+        "  R-Net latency (ms) {:8.1}    {:8.1}",
+        ctl.rnet_latency_ms, nns.rnet_latency_ms
+    );
+    println!(
+        "  O-Net latency (ms) {:8.1}    {:8.1}",
+        ctl.onet_latency_ms, nns.onet_latency_ms
+    );
+    println!(
+        "\n  NNStreamer throughput gain: {:+.1}%",
+        (nns.throughput_fps / ctl.throughput_fps - 1.0) * 100.0
+    );
+    Ok(())
+}

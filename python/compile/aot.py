@@ -1,0 +1,103 @@
+"""AOT compiler: lower every registry model to HLO text + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the Rust `xla` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via ``make artifacts`` (skips up-to-date outputs) or directly:
+    cd python && python -m compile.aot --out-dir ../artifacts [--only NAME]
+
+Manifest format (line-based; the Rust runtime has no JSON dependency):
+    <name>\tin=<dtype>:<d0>x<d1>...[;<dtype>:...]\tout=...\tflops=<N>
+"""
+import argparse
+import os
+import sys
+
+import jax
+
+# The `ref` backend computes internally in f64 (see kernels/ref.py); without
+# x64 the casts collapse to f32 and the ref/opt performance gap disappears.
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default HLO printing elides big literals as "{...}", which
+    # the text parser silently turns into zeros — every baked-in weight
+    # would be lost. print_large_constants keeps the payloads.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # modern jax emits source_end_line/column metadata the 0.5.1 HLO text
+    # parser rejects; metadata is debug-only, drop it
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _fmt_aval(aval) -> str:
+    dims = "x".join(str(d) for d in aval.shape) or "1"
+    return f"{aval.dtype}:{dims}"
+
+
+def _flops(lowered) -> int:
+    try:
+        cost = lowered.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return int(cost.get("flops", 0))
+    except Exception:
+        return 0
+
+
+def compile_one(name, out_dir, force=False):
+    """Lower one model; returns its manifest line."""
+    fn, example_inputs = model.build(name)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(fn).lower(*example_inputs)
+    in_specs = ";".join(
+        _fmt_aval(jax.api_util.shaped_abstractify(x)) for x in example_inputs
+    )
+    out_avals = jax.eval_shape(fn, *example_inputs)
+    out_specs = ";".join(_fmt_aval(a) for a in out_avals)
+    line = f"{name}\tin={in_specs}\tout={out_specs}\tflops={_flops(lowered)}"
+    if force or not os.path.exists(path):
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {name}: {len(text)} chars -> {path}", file=sys.stderr)
+    else:
+        print(f"[aot] {name}: up to date", file=sys.stderr)
+    return line
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="compile a single model")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = list(model.registry())
+    if args.only:
+        names = [n for n in names if args.only in n]
+        if not names:
+            ap.error(f"no model matches {args.only!r}")
+
+    lines = [compile_one(n, args.out_dir, force=args.force) for n in names]
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[aot] wrote {manifest} ({len(lines)} models)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The kernels here are the compute hot-spot of the NNFW "delegate" that the
+Rust tensor_filter element executes through PJRT. They are written for the
+TPU mental model (MXU-shaped tiles, VMEM-sized blocks expressed through
+BlockSpec) and lowered with ``interpret=True`` so the CPU PJRT plugin can
+execute the resulting HLO. See DESIGN.md "Hardware adaptation".
+"""
+from .matmul import matmul, matmul_bias_act
+from .conv import conv2d, conv1d

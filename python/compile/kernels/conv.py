@@ -1,0 +1,60 @@
+"""conv2d / conv1d built on the Pallas matmul kernel (im2col lowering).
+
+The paper's NNFW delegates (TFLite, Vivante) lower convolutions onto their
+matmul engines; we do the same: patch extraction (cheap, memory-bound,
+stays in the XLA graph) followed by the L1 Pallas matmul with a fused
+bias+activation epilogue (compute-bound hot-spot).
+
+Layout: NHWC activations, HWIO weights — the dominant on-device layout.
+"""
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_bias_act
+
+
+def _im2col(x, kh, kw, stride, padding):
+    """(B,H,W,C) -> (B*OH*OW, KH*KW*C) patch matrix.
+
+    Uses conv_general_dilated_patches, which yields feature order
+    (C, KH, KW) per patch; we transpose to (KH, KW, C) so weight matrices
+    reshape directly from HWIO.
+    """
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, OH, OW, C*KH*KW) with feature order (c, kh, kw)
+    _, oh, ow, f = patches.shape
+    patches = patches.reshape(b, oh, ow, c, kh * kw)
+    patches = patches.transpose(0, 1, 2, 4, 3)  # -> (kh*kw, c) minor order
+    return patches.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def conv2d(x, w, bias=None, stride=1, padding="SAME", act="none"):
+    """NHWC conv2d via im2col + Pallas matmul, fused bias+activation.
+
+    x: (B, H, W, Cin) f32;  w: (KH, KW, Cin, Cout) HWIO;  bias: (Cout,)
+    """
+    kh, kw, cin, cout = w.shape
+    cols, (b, oh, ow) = _im2col(x, kh, kw, stride, padding)
+    wm = w.reshape(kh * kw * cin, cout)
+    out = matmul_bias_act(cols, wm, bias=bias, act=act)
+    return out.reshape(b, oh, ow, cout)
+
+
+def conv1d(x, w, bias=None, stride=1, padding="SAME", act="none"):
+    """(B, T, C) temporal conv via the conv2d path with H=1."""
+    kt, cin, cout = w.shape
+    out = conv2d(
+        x[:, None, :, :],
+        w[None, :, :, :],
+        bias=bias,
+        stride=stride,
+        padding=padding,
+        act=act,
+    )
+    return out[:, 0, :, :]

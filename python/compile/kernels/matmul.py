@@ -1,0 +1,165 @@
+"""Tiled Pallas matmul with optional fused bias+activation epilogue.
+
+Blocking strategy (TPU mental model):
+  * grid = (M/bm, N/bn, K/bk); the K axis is the innermost (minor) grid
+    dimension so each (i, j) output tile stays resident while the K loop
+    streams x/y tiles through VMEM.
+  * default tiles are MXU-aligned 128 multiples; f32 accumulation happens
+    directly in the output ref (all model weights/activations are f32, so
+    no separate accumulator scratch is needed — this also keeps the kernel
+    runnable under interpret=True on the CPU plugin).
+  * VMEM footprint per step = bm*bk + bk*bn + bm*bn floats
+    (128^2 * 3 * 4B = 192 KiB << 16 MiB VMEM), leaving room for
+    double-buffering by the pipeline emitter.
+
+The epilogue (bias add + activation) is fused into the final K step so the
+output tile is written exactly once — the Pallas analog of the fused
+conv-bias-relu blocks the paper's NNFW delegates (TFLite/Vivante) provide.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _activation(x, act):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if act == "prelu":
+        # shared-slope PReLU (slope baked as 0.25, matching our model init)
+        return jnp.where(x >= 0.0, x, 0.25 * x)
+    if act == "softmax":
+        return jax.nn.softmax(x, axis=-1)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk, act, has_bias):
+    """o[i, j] = act(sum_k x[i, k] @ y[k, j] + bias[j]).
+
+    Without bias, refs are (x, y, o); with bias, (x, y, b, o) — pallas_call
+    passes inputs in order, so the bias ref is threaded via closure re-order
+    in `matmul_bias_act` below.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        o_ref[...] = _activation(acc, act)
+
+
+def _matmul_bias_kernel(x_ref, y_ref, b_ref, o_ref, *, nk, act):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        o_ref[...] = _activation(acc, act)
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def _pick_block(size, preferred):
+    """Largest MXU-friendly block <= preferred that keeps padding waste low."""
+    if size >= preferred:
+        return preferred
+    # round size up to the next multiple of 8 (VPU sublane) for small dims
+    return max(8, -(-size // 8) * 8)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def matmul_bias_act(x, y, bias=None, act="none", bm=128, bn=128, bk=128):
+    """f32 (M,K) @ (K,N) + bias(N,) with fused activation, Pallas-tiled.
+
+    Shapes need not be multiples of the block sizes; inputs are zero-padded
+    (zero rows/cols do not perturb the product) and the result is sliced
+    back. Runs under interpret=True — see module docstring.
+
+    Softmax is NOT fused: it normalizes across the full (unpadded) N axis,
+    which a tiled epilogue cannot see (padded zero columns would leak into
+    the denominator). It is applied after the slice-back instead.
+    """
+    fused_act = act if act != "softmax" else "none"
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y.astype(jnp.float32), bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    if bias is not None:
+        bp = _pad_to(bias.astype(jnp.float32).reshape(1, -1), bn, 1)
+        kernel = functools.partial(_matmul_bias_kernel, nk=grid[2], act=fused_act)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, yp, bp)
+    else:
+        kernel = functools.partial(
+            _matmul_kernel, nk=grid[2], act=fused_act, has_bias=False
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, yp)
+    out = out[:m, :n]
+    if act == "softmax":
+        out = jax.nn.softmax(out, axis=-1)
+    return out
+
+
+def matmul(x, y):
+    """Plain tiled matmul (no epilogue)."""
+    return matmul_bias_act(x, y, bias=None, act="none")

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness reference (pytest asserts allclose against them)
+AND the building block of the `ref` artifact variant — the deliberately
+slower "pinned old NNFW" path of E4 (see DESIGN.md substitutions): f64
+internal compute, layout round-trips, and unfused bias/activation, the way
+an unoptimized delegate would execute.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def activation(x, act):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if act == "prelu":
+        return jnp.where(x >= 0.0, x, 0.25 * x)
+    if act == "softmax":
+        return jax.nn.softmax(x, axis=-1)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul_bias_act(x, y, bias=None, act="none"):
+    """Oracle for kernels.matmul.matmul_bias_act (f32, fused semantics)."""
+    out = jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return activation(out, act)
+
+
+def conv2d(x, w, bias=None, stride=1, padding="SAME", act="none"):
+    """Oracle for kernels.conv.conv2d (NHWC, HWIO)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return activation(out, act)
+
+
+def conv1d(x, w, bias=None, stride=1, padding="SAME", act="none"):
+    out = conv2d(
+        x[:, None, :, :], w[None, :, :, :], bias=bias, stride=stride,
+        padding=padding, act=act,
+    )
+    return out[:, 0, :, :]
+
+
+# ---------------------------------------------------------------------------
+# "ref" execution backend: the unoptimized delegate (E4's pinned NNFW 2.1).
+# f64 internal precision, NHWC->NCHW->NHWC layout round-trip per conv, and
+# unfused bias/activation. Numerically equivalent (within f32 tolerance) but
+# measurably slower — this gap is what Table III's (a) vs (b) measures.
+# ---------------------------------------------------------------------------
+
+def conv2d_unopt(x, w, bias=None, stride=1, padding="SAME", act="none"):
+    x64 = x.astype(jnp.float64).transpose(0, 3, 1, 2)  # NCHW round-trip
+    w64 = w.astype(jnp.float64).transpose(3, 2, 0, 1)  # OIHW
+    out = jax.lax.conv_general_dilated(
+        x64,
+        w64,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    out = out.transpose(0, 2, 3, 1)
+    if bias is not None:
+        out = out + bias.astype(jnp.float64)
+    out = activation(out, act)
+    return out.astype(jnp.float32)
+
+
+def matmul_bias_act_unopt(x, y, bias=None, act="none"):
+    out = jnp.dot(x.astype(jnp.float64), y.astype(jnp.float64))
+    if bias is not None:
+        out = out + bias.astype(jnp.float64)
+    return activation(out, act).astype(jnp.float32)
+
+
+def conv1d_unopt(x, w, bias=None, stride=1, padding="SAME", act="none"):
+    out = conv2d_unopt(
+        x[:, None, :, :], w[None, :, :, :], bias=bias, stride=stride,
+        padding=padding, act=act,
+    )
+    return out[:, 0, :, :]

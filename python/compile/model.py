@@ -1,0 +1,46 @@
+"""L2 model registry: every AOT artifact the Rust runtime can load.
+
+Each entry maps an artifact name to a zero-state jax function (weights are
+baked constants) plus its example inputs. `aot.py` lowers every entry to
+``artifacts/<name>.hlo.txt`` and records shapes in ``artifacts/manifest.txt``.
+
+Naming convention: ``<model>[_<part>][_sN]_<variant>`` where variant is
+``opt`` (Pallas L1 kernels) or ``ref`` (unoptimized delegate — E4's pinned
+old-NNFW build; also the artifact used when a filter is bound to
+``accelerator=cpu`` in E1, see DESIGN.md).
+"""
+from .models import ars, inception_small, mtcnn, ssdlite_small
+from .models.common import BACKENDS
+
+
+def registry():
+    """name -> (fn, example_inputs). Built lazily: constructing an entry
+    materializes its weights."""
+    from .models import yolo_small  # local import keeps module load cheap
+
+    entries = {}
+
+    def add(name, builder, *args):
+        for variant, be in BACKENDS.items():
+            entries[f"{name}_{variant}"] = (builder, (be, *args))
+
+    def add_opt(name, builder, *args):
+        entries[f"{name}_opt"] = (builder, (BACKENDS["opt"], *args))
+
+    add("i3", inception_small.build)
+    add("y3", yolo_small.build)
+    add("ssd", ssdlite_small.build)
+    for s in range(len(mtcnn.PYRAMID)):
+        add_opt(f"pnet_s{s}", mtcnn.build_pnet, s)
+    add_opt("rnet", mtcnn.build_rnet)
+    add_opt("onet", mtcnn.build_onet)
+    add_opt("ars_a", ars.build_ars_a)
+    add_opt("ars_b", ars.build_ars_b)
+    add_opt("ars_c", ars.build_ars_c)
+    return entries
+
+
+def build(name):
+    """Materialize one registry entry: returns (fn, example_inputs)."""
+    builder, args = registry()[name]
+    return builder(*args)

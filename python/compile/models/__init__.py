@@ -1,0 +1,3 @@
+"""L2 model zoo — see DESIGN.md "Substitutions" for how each maps to the
+paper's workloads (I3/Y3 in E1, ARS nets in E2, MTCNN in E3, SSDLite in E4).
+"""

@@ -1,0 +1,79 @@
+"""Activity Recognition Sensor (ARS, E2) model stack — Fig 3's three NNs.
+
+The ARS device fuses IIO sensors (3-axis accelerometer + pressure) and a
+microphone. Fig 3 has three NN stages running at different aggregated
+rates:
+  (a) per-window activity classifier over short accel windows  (fast path)
+  (b) long-window fused classifier over mux'ed accel+pressure  (slow path,
+      fed by a tensor_aggregator, hence the low batch rate in the paper)
+  (c) audio-event classifier over mic spectrogram-ish frames   (mid path)
+
+Temporal convs are 1-D (lowered through the same Pallas matmul hot-spot).
+"""
+import jax.numpy as jnp
+
+from .common import Backend, ParamGen, maxpool1d
+
+
+def build_ars_a(backend: Backend):
+    """fn: (1,128,3) accel window -> ((1,8) activity probs,)."""
+    p = ParamGen(seed=71)
+    w1 = p.conv1(5, 3, 16)
+    w2 = p.conv1(5, 16, 32)
+    w3 = p.conv1(3, 32, 32)
+    wd = p.dense(32, 8)
+
+    def fn(x):
+        t = backend.conv1d(x, *w1, stride=2, act="relu")   # 64x16
+        t = backend.conv1d(t, *w2, stride=2, act="relu")   # 32x32
+        t = maxpool1d(t, 2)                                # 16x32
+        t = backend.conv1d(t, *w3, act="relu")             # 16x32
+        t = jnp.mean(t, axis=1)                            # (1,32)
+        return (backend.dense(t, *wd, act="softmax"),)
+
+    return fn, [jnp.zeros((1, 128, 3), jnp.float32)]
+
+
+def build_ars_b(backend: Backend):
+    """fn: (1,512,8) fused long window -> ((1,8) probs,).
+
+    Input = aggregator output: 4 accel windows x (3 accel + 1 pressure +
+    4 derived) channels, mux'ed and concatenated on the time axis.
+    """
+    p = ParamGen(seed=72)
+    w1 = p.conv1(7, 8, 32)
+    w2 = p.conv1(5, 32, 64)
+    w3 = p.conv1(5, 64, 64)
+    w4 = p.conv1(3, 64, 96)
+    wd1 = p.dense(96, 64)
+    wd2 = p.dense(64, 8)
+
+    def fn(x):
+        t = backend.conv1d(x, *w1, stride=2, act="relu")   # 256x32
+        t = backend.conv1d(t, *w2, stride=2, act="relu")   # 128x64
+        t = maxpool1d(t, 2)                                # 64x64
+        t = backend.conv1d(t, *w3, act="relu")             # 64x64
+        t = maxpool1d(t, 2)                                # 32x64
+        t = backend.conv1d(t, *w4, act="relu")             # 32x96
+        t = jnp.mean(t, axis=1)                            # (1,96)
+        t = backend.dense(t, *wd1, act="relu")
+        return (backend.dense(t, *wd2, act="softmax"),)
+
+    return fn, [jnp.zeros((1, 512, 8), jnp.float32)]
+
+
+def build_ars_c(backend: Backend):
+    """fn: (1,64,16) mic feature frame -> ((1,4) audio-event probs,)."""
+    p = ParamGen(seed=73)
+    w1 = p.conv1(5, 16, 32)
+    w2 = p.conv1(3, 32, 48)
+    wd = p.dense(48, 4)
+
+    def fn(x):
+        t = backend.conv1d(x, *w1, stride=2, act="relu")   # 32x32
+        t = backend.conv1d(t, *w2, act="relu")             # 32x48
+        t = maxpool1d(t, 2)                                # 16x48
+        t = jnp.mean(t, axis=1)                            # (1,48)
+        return (backend.dense(t, *wd, act="softmax"),)
+
+    return fn, [jnp.zeros((1, 64, 16), jnp.float32)]

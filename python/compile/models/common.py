@@ -1,0 +1,108 @@
+"""Shared building blocks for the L2 model zoo.
+
+Every model is a pure function over its input tensors with weights baked in
+as constants (deterministic init from a fixed seed), so each AOT artifact is
+self-contained: the Rust runtime feeds input tensors and reads output
+tensors, nothing else — exactly how NNStreamer's tensor_filter treats a
+model file as an opaque delegate.
+
+Two execution backends implement the same math (see DESIGN.md):
+  * ``OPT``  — Pallas L1 kernels (im2col + tiled MXU matmul, fused epilogue)
+  * ``REF``  — the unoptimized delegate (f64, layout round-trips, unfused),
+               standing in for E4's "pinned old NNFW" build
+"""
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels
+from ..kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Dispatch table: which implementation executes each layer type."""
+
+    name: str
+    conv2d: Callable
+    conv1d: Callable
+    dense: Callable
+
+
+OPT = Backend(
+    name="opt",
+    conv2d=kernels.conv2d,
+    conv1d=kernels.conv1d,
+    dense=kernels.matmul_bias_act,
+)
+
+REF = Backend(
+    name="ref",
+    conv2d=ref.conv2d_unopt,
+    conv1d=ref.conv1d_unopt,
+    dense=ref.matmul_bias_act_unopt,
+)
+
+BACKENDS = {"opt": OPT, "ref": REF}
+
+
+class ParamGen:
+    """Deterministic parameter factory (split-per-call PRNG)."""
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def conv(self, kh, kw, cin, cout):
+        scale = (2.0 / (kh * kw * cin)) ** 0.5
+        w = jax.random.normal(self._next(), (kh, kw, cin, cout), jnp.float32)
+        b = 0.01 * jax.random.normal(self._next(), (cout,), jnp.float32)
+        return w * scale, b
+
+    def conv1(self, kt, cin, cout):
+        scale = (2.0 / (kt * cin)) ** 0.5
+        w = jax.random.normal(self._next(), (kt, cin, cout), jnp.float32)
+        b = 0.01 * jax.random.normal(self._next(), (cout,), jnp.float32)
+        return w * scale, b
+
+    def dense(self, fin, fout):
+        scale = (2.0 / fin) ** 0.5
+        w = jax.random.normal(self._next(), (fin, fout), jnp.float32)
+        b = 0.01 * jax.random.normal(self._next(), (fout,), jnp.float32)
+        return w * scale, b
+
+
+def maxpool(x, window=2, stride=None, padding="VALID"):
+    """NHWC max pooling."""
+    stride = stride or window
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding=padding,
+    )
+
+
+def avgpool_global(x):
+    """(B, H, W, C) -> (B, C) global average pool."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def maxpool1d(x, window=2, stride=None):
+    """(B, T, C) temporal max pooling."""
+    stride = stride or window
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, 1),
+        window_strides=(1, stride, 1),
+        padding="VALID",
+    )

@@ -1,0 +1,62 @@
+"""Inception-v3-style classifier ("I3" in Table I), scaled for on-device.
+
+Architecturally faithful op mix: stem convs, two Inception "mixed" blocks
+(1x1 / 3x3 / double-3x3 / pool-proj branches, channel-concatenated), global
+average pool, dense classifier. Input 64x64x3 RGB (the E1 camera stream is
+scaled to this by `videoscale` in the pipeline); 100 classes.
+"""
+import jax.numpy as jnp
+
+from .common import Backend, ParamGen, avgpool_global, maxpool
+
+
+def _mixed_block(be: Backend, p: ParamGen, x, cin, spec):
+    """Inception mixed block. spec = (c1, (c3r, c3), (c5r, c5a, c5b), cp)."""
+    c1, (c3r, c3), (c5r, c5a, c5b), cp = spec
+
+    w, b = p.conv(1, 1, cin, c1)
+    b1 = be.conv2d(x, w, b, act="relu")
+
+    w, b = p.conv(1, 1, cin, c3r)
+    b3 = be.conv2d(x, w, b, act="relu")
+    w, b = p.conv(3, 3, c3r, c3)
+    b3 = be.conv2d(b3, w, b, act="relu")
+
+    w, b = p.conv(1, 1, cin, c5r)
+    b5 = be.conv2d(x, w, b, act="relu")
+    w, b = p.conv(3, 3, c5r, c5a)
+    b5 = be.conv2d(b5, w, b, act="relu")
+    w, b = p.conv(3, 3, c5a, c5b)
+    b5 = be.conv2d(b5, w, b, act="relu")
+
+    bp = maxpool(x, window=3, stride=1, padding="SAME")
+    w, b = p.conv(1, 1, cin, cp)
+    bp = be.conv2d(bp, w, b, act="relu")
+
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def build(backend: Backend):
+    """Returns (fn, input_specs). fn: (1,64,64,3) f32 -> ((1,100) f32,)."""
+    p = ParamGen(seed=31)
+    w1, b1 = p.conv(3, 3, 3, 16)
+    w2, b2 = p.conv(3, 3, 16, 32)
+    # block specs sized so the whole model is ~2.5x lighter than yolo_small
+    spec_a = (16, (16, 24), (8, 12, 16), 16)     # -> 72 ch
+    spec_b = (24, (24, 32), (12, 16, 24), 16)    # -> 96 ch
+    p_a = ParamGen(seed=32)
+    p_b = ParamGen(seed=33)
+    wd, bd = ParamGen(seed=34).dense(96, 100)
+
+    def fn(x):
+        h = backend.conv2d(x, w1, b1, stride=2, act="relu")   # 32x32x16
+        h = backend.conv2d(h, w2, b2, act="relu")             # 32x32x32
+        h = maxpool(h, 2)                                     # 16x16x32
+        h = _mixed_block(backend, p_a, h, 32, spec_a)         # 16x16x72
+        h = maxpool(h, 2)                                     # 8x8x72
+        h = _mixed_block(backend, p_b, h, 72, spec_b)         # 8x8x96
+        h = avgpool_global(h)                                 # (1, 96)
+        logits = backend.dense(h, wd, bd, act="softmax")      # (1, 100)
+        return (logits,)
+
+    return fn, [jnp.zeros((1, 64, 64, 3), jnp.float32)]

@@ -1,0 +1,104 @@
+"""MTCNN face-detection cascade (E3) — paper-faithful architectures.
+
+P-Net / R-Net / O-Net exactly as in Zhang et al. 2016 (the nets are tiny,
+so no scaling is needed). P-Net is fully convolutional and is compiled once
+per image-pyramid scale (AOT requires static shapes; the paper's pipeline
+in Fig 4 likewise instantiates one P-Net filter per scaled stream). R-Net /
+O-Net take fixed-size candidate batches (padded at runtime by the Rust
+image-patch element).
+"""
+import jax.numpy as jnp
+
+from .common import Backend, ParamGen, maxpool
+
+# Pyramid over the 192x108 scaled luma of the Full-HD source (factor ~0.71).
+# (H, W) per scale; fully-conv P-Net output is ((H-10)//2+1 - 2, ...) etc.
+PYRAMID = [(108, 192), (76, 136), (54, 96), (38, 68), (27, 48)]
+RNET_BATCH = 16
+ONET_BATCH = 8
+
+
+def _pnet_params():
+    p = ParamGen(seed=61)
+    return {
+        "w1": p.conv(3, 3, 3, 10),
+        "w2": p.conv(3, 3, 10, 16),
+        "w3": p.conv(3, 3, 16, 32),
+        "wp": p.conv(1, 1, 32, 2),
+        "wb": p.conv(1, 1, 32, 4),
+    }
+
+
+_PNET = _pnet_params()
+
+
+def build_pnet(backend: Backend, scale_idx: int):
+    """fn: (1,H,W,3) -> ((1,h,w,2) face prob, (1,h,w,4) bbox reg)."""
+    h, w = PYRAMID[scale_idx]
+    pr = _PNET
+
+    def fn(x):
+        t = backend.conv2d(x, *pr["w1"], padding="VALID", act="prelu")
+        t = maxpool(t, 2, padding="SAME")
+        t = backend.conv2d(t, *pr["w2"], padding="VALID", act="prelu")
+        t = backend.conv2d(t, *pr["w3"], padding="VALID", act="prelu")
+        prob = backend.conv2d(t, *pr["wp"], padding="VALID", act="softmax")
+        reg = backend.conv2d(t, *pr["wb"], padding="VALID", act="none")
+        return prob, reg
+
+    return fn, [jnp.zeros((1, h, w, 3), jnp.float32)]
+
+
+def build_rnet(backend: Backend):
+    """fn: (16,24,24,3) -> ((16,2) prob, (16,4) bbox reg)."""
+    p = ParamGen(seed=62)
+    w1 = p.conv(3, 3, 3, 28)
+    w2 = p.conv(3, 3, 28, 48)
+    w3 = p.conv(2, 2, 48, 64)
+    wd = p.dense(3 * 3 * 64, 128)
+    wp = p.dense(128, 2)
+    wb = p.dense(128, 4)
+
+    def fn(x):
+        t = backend.conv2d(x, *w1, padding="VALID", act="prelu")  # 22x22x28
+        t = maxpool(t, 3, 2, padding="SAME")                      # 11x11x28
+        t = backend.conv2d(t, *w2, padding="VALID", act="prelu")  # 9x9x48
+        t = maxpool(t, 3, 2, padding="VALID")                     # 4x4x48
+        t = backend.conv2d(t, *w3, padding="VALID", act="prelu")  # 3x3x64
+        t = t.reshape(t.shape[0], -1)
+        t = backend.dense(t, *wd, act="prelu")                    # (B,128)
+        prob = backend.dense(t, *wp, act="softmax")
+        reg = backend.dense(t, *wb, act="none")
+        return prob, reg
+
+    return fn, [jnp.zeros((RNET_BATCH, 24, 24, 3), jnp.float32)]
+
+
+def build_onet(backend: Backend):
+    """fn: (8,48,48,3) -> ((8,2) prob, (8,4) bbox reg, (8,10) landmarks)."""
+    p = ParamGen(seed=63)
+    w1 = p.conv(3, 3, 3, 32)
+    w2 = p.conv(3, 3, 32, 64)
+    w3 = p.conv(3, 3, 64, 64)
+    w4 = p.conv(2, 2, 64, 128)
+    wd = p.dense(3 * 3 * 128, 256)
+    wp = p.dense(256, 2)
+    wb = p.dense(256, 4)
+    wl = p.dense(256, 10)
+
+    def fn(x):
+        t = backend.conv2d(x, *w1, padding="VALID", act="prelu")  # 46x46x32
+        t = maxpool(t, 3, 2, padding="SAME")                      # 23x23x32
+        t = backend.conv2d(t, *w2, padding="VALID", act="prelu")  # 21x21x64
+        t = maxpool(t, 3, 2, padding="VALID")                     # 10x10x64
+        t = backend.conv2d(t, *w3, padding="VALID", act="prelu")  # 8x8x64
+        t = maxpool(t, 2, 2, padding="VALID")                     # 4x4x64
+        t = backend.conv2d(t, *w4, padding="VALID", act="prelu")  # 3x3x128
+        t = t.reshape(t.shape[0], -1)
+        t = backend.dense(t, *wd, act="prelu")                    # (B,256)
+        prob = backend.dense(t, *wp, act="softmax")
+        reg = backend.dense(t, *wb, act="none")
+        lmk = backend.dense(t, *wl, act="none")
+        return prob, reg, lmk
+
+    return fn, [jnp.zeros((ONET_BATCH, 48, 48, 3), jnp.float32)]

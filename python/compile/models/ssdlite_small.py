@@ -1,0 +1,56 @@
+"""SSDLite-style object detector for E4 ("ssdlite_object_detection" analog).
+
+Depthwise-separable-flavored backbone (1x1 expansions + 3x3 convs) with two
+feature-map scales feeding box-regression and class-score heads, like the
+MediaPipe reference model. Outputs raw (boxes, scores) tensors; decoding
+(anchor application + NMS) happens in the Rust tensor_decoder, as in the
+paper's pipeline (Fig 5).
+"""
+import jax.numpy as jnp
+
+from .common import Backend, ParamGen, maxpool
+
+NUM_CLASSES = 11  # 10 + background
+ANCHORS_PER_CELL = 2
+# feature maps: 12x12 and 6x6 -> (144 + 36) * 2 = 360 anchors
+NUM_ANCHORS = (12 * 12 + 6 * 6) * ANCHORS_PER_CELL
+
+
+def _head(be, p, feat, cin):
+    wl, bl = p.conv(3, 3, cin, ANCHORS_PER_CELL * 4)
+    wc, bc = p.conv(3, 3, cin, ANCHORS_PER_CELL * NUM_CLASSES)
+    loc = be.conv2d(feat, wl, bl, act="none")
+    conf = be.conv2d(feat, wc, bc, act="none")
+    n = feat.shape[1] * feat.shape[2] * ANCHORS_PER_CELL
+    return loc.reshape(1, n, 4), conf.reshape(1, n, NUM_CLASSES)
+
+
+def build(backend: Backend):
+    """fn: (1,96,96,3) -> ((1,360,4) locs, (1,360,11) scores)."""
+    p = ParamGen(seed=51)
+    w1, b1 = p.conv(3, 3, 3, 16)
+    w2, b2 = p.conv(1, 1, 16, 32)
+    w3, b3 = p.conv(3, 3, 32, 32)
+    w4, b4 = p.conv(1, 1, 32, 64)
+    w5, b5 = p.conv(3, 3, 64, 64)
+    w6, b6 = p.conv(3, 3, 64, 96)
+    ph = ParamGen(seed=52)
+
+    def fn(x):
+        h = backend.conv2d(x, w1, b1, stride=2, act="relu6")  # 48x48x16
+        h = backend.conv2d(h, w2, b2, act="relu6")            # 48x48x32
+        h = maxpool(h, 2)                                     # 24x24x32
+        h = backend.conv2d(h, w3, b3, act="relu6")            # 24x24x32
+        h = backend.conv2d(h, w4, b4, act="relu6")            # 24x24x64
+        h = maxpool(h, 2)                                     # 12x12x64
+        f1 = backend.conv2d(h, w5, b5, act="relu6")           # 12x12x64
+        f2 = backend.conv2d(
+            maxpool(f1, 2), w6, b6, act="relu6"
+        )                                                     # 6x6x96
+        l1, c1 = _head(backend, ph, f1, 64)
+        l2, c2 = _head(backend, ph, f2, 96)
+        locs = jnp.concatenate([l1, l2], axis=1)
+        confs = jnp.concatenate([c1, c2], axis=1)
+        return locs, confs
+
+    return fn, [jnp.zeros((1, 96, 96, 3), jnp.float32)]

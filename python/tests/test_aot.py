@@ -1,0 +1,74 @@
+"""AOT pipeline: HLO text emission + manifest consistency."""
+import os
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model  # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke(tmp_path):
+    line = aot.compile_one("ars_c_opt", str(tmp_path), force=True)
+    path = tmp_path / "ars_c_opt.hlo.txt"
+    text = path.read_text()
+    assert text.startswith("HloModule")
+    # entry computation carries the expected IO signature
+    assert "f32[1,64,16]" in text
+    assert "f32[1,4]" in text
+    assert line.split("\t")[0] == "ars_c_opt"
+    assert "in=float32:1x64x16" in line
+    assert "out=float32:1x4" in line
+
+
+def test_manifest_covers_registry():
+    manifest = os.path.join(ARTIFACTS, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    names = {line.split("\t")[0] for line in open(manifest) if line.strip()}
+    assert names == set(model.registry())
+
+
+def test_artifacts_exist_for_manifest():
+    manifest = os.path.join(ARTIFACTS, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    for line in open(manifest):
+        if not line.strip():
+            continue
+        name = line.split("\t")[0]
+        path = os.path.join(ARTIFACTS, f"{name}.hlo.txt")
+        assert os.path.exists(path), path
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), f"{name}: not HLO text"
+
+
+def test_hlo_text_keeps_large_constants(tmp_path):
+    """Regression: default HLO printing elides big literals as "{...}",
+    silently zeroing every baked-in weight after the text round-trip."""
+    aot.compile_one("ars_c_opt", str(tmp_path), force=True)
+    text = (tmp_path / "ars_c_opt.hlo.txt").read_text()
+    assert "constant({...})" not in text
+    # at least one multi-kilobyte constant payload must be spelled out
+    assert any(
+        line.count(",") > 500 for line in text.splitlines() if "constant(" in line
+    ), "no large constant payload found in HLO text"
+
+
+def test_manifest_flops_recorded():
+    manifest = os.path.join(ARTIFACTS, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built")
+    flops = {}
+    for line in open(manifest):
+        fields = dict(
+            f.split("=", 1) for f in line.strip().split("\t")[1:] if "=" in f
+        )
+        flops[line.split("\t")[0]] = int(fields.get("flops", 0))
+    # cost analysis must see through the pallas while-loops
+    assert flops["i3_opt"] > 1e6
+    # the paper's relative cost: Y3 >> I3
+    assert flops["y3_opt"] > flops["i3_opt"]

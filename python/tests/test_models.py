@@ -1,0 +1,111 @@
+"""L2 model zoo: shapes, determinism, variant equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.models import ars, inception_small, mtcnn, ssdlite_small  # noqa: E402
+from compile.models.common import BACKENDS  # noqa: E402
+
+
+def run(name):
+    fn, inputs = model.build(name)
+    key = jax.random.PRNGKey(0)
+    reals = [
+        jax.random.uniform(key, x.shape, jnp.float32, -1.0, 1.0) for x in inputs
+    ]
+    return fn(*reals), reals
+
+
+@pytest.mark.parametrize(
+    "name,out_shapes",
+    [
+        ("i3_opt", [(1, 100)]),
+        ("y3_opt", [(1, 12, 12, 40)]),
+        ("ssd_opt", [(1, 360, 4), (1, 360, 11)]),
+        ("rnet_opt", [(16, 2), (16, 4)]),
+        ("onet_opt", [(8, 2), (8, 4), (8, 10)]),
+        ("ars_a_opt", [(1, 8)]),
+        ("ars_b_opt", [(1, 8)]),
+        ("ars_c_opt", [(1, 4)]),
+    ],
+)
+def test_output_shapes(name, out_shapes):
+    outs, _ = run(name)
+    assert [tuple(o.shape) for o in outs] == out_shapes
+
+
+@pytest.mark.parametrize("scale", range(len(mtcnn.PYRAMID)))
+def test_pnet_pyramid_shapes(scale):
+    outs, _ = run(f"pnet_s{scale}_opt")
+    prob, reg = outs
+    assert prob.shape[-1] == 2
+    assert reg.shape[-1] == 4
+    assert prob.shape[:3] == reg.shape[:3]
+    # fully-conv map must shrink with the pyramid
+    h, w = mtcnn.PYRAMID[scale]
+    assert prob.shape[1] < h and prob.shape[2] < w
+
+
+def test_classifier_outputs_are_probabilities():
+    for name in ["i3_opt", "ars_a_opt", "ars_b_opt", "ars_c_opt"]:
+        outs, _ = run(name)
+        probs = np.asarray(outs[0])
+        assert np.all(probs >= 0)
+        np.testing.assert_allclose(probs.sum(axis=-1), 1.0, rtol=1e-4)
+
+
+def test_variants_numerically_equivalent():
+    """opt (Pallas) and ref (unoptimized delegate) builds of the same model
+    must agree — the E4 performance gap may not change results."""
+    for stem in ["i3", "y3", "ssd"]:
+        fn_o, inputs = model.build(f"{stem}_opt")
+        fn_r, _ = model.build(f"{stem}_ref")
+        x = jax.random.uniform(
+            jax.random.PRNGKey(7), inputs[0].shape, jnp.float32, 0.0, 1.0
+        )
+        for a, b in zip(fn_o(x), fn_r(x)):
+            np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-4)
+
+
+def test_weights_are_deterministic():
+    fn1, inputs = inception_small.build(BACKENDS["opt"])
+    fn2, _ = inception_small.build(BACKENDS["opt"])
+    x = jnp.ones(inputs[0].shape, jnp.float32) * 0.3
+    np.testing.assert_array_equal(fn1(x)[0], fn2(x)[0])
+
+
+def test_model_cost_ordering():
+    """Relative model cost must preserve the paper's structure:
+    Y3 heavier than I3 (Table I throughput ordering)."""
+    flops = {}
+    for stem in ["i3", "y3"]:
+        fn, inputs = model.build(f"{stem}_opt")
+        lowered = jax.jit(fn).lower(*inputs)
+        cost = lowered.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        flops[stem] = cost.get("flops", 0)
+    assert flops["y3"] > 1.5 * flops["i3"], flops
+
+
+def test_registry_is_complete():
+    names = set(model.registry())
+    for expected in [
+        "i3_opt", "i3_ref", "y3_opt", "y3_ref", "ssd_opt", "ssd_ref",
+        "rnet_opt", "onet_opt", "ars_a_opt", "ars_b_opt", "ars_c_opt",
+    ] + [f"pnet_s{i}_opt" for i in range(len(mtcnn.PYRAMID))]:
+        assert expected in names, expected
+
+
+def test_ssd_anchor_count_consistent():
+    assert ssdlite_small.NUM_ANCHORS == 360
+
+
+def test_ars_stage_shapes_match_pipeline_wiring():
+    # the Rust ARS pipeline merges 8 channels and aggregates 4x128 windows
+    _, inputs = ars.build_ars_b(BACKENDS["opt"])
+    assert inputs[0].shape == (1, 512, 8)

@@ -1,0 +1,118 @@
+//! Regenerates **Table I** (E1): multi-model pipelines on heterogeneous
+//! resources — Control vs NNStreamer, I3/Y3 on the simulated NPU, C/I3 on
+//! the CPU envelope, 1–3 models.
+//!
+//! ```bash
+//! cargo bench --bench e1_table1            # quick (~1.5 min)
+//! cargo bench --bench e1_table1 -- --full  # paper scale (100 s per case)
+//! ```
+//!
+//! Expected *shape* (not absolute numbers — see DESIGN.md):
+//!   * NNS single-model throughput > Control, with much lower app CPU;
+//!   * two models on one NPU: per-model rates ≈ capacity split, near-zero
+//!     sharing overhead;
+//!   * CPU+NPU mixes: both rates virtually unaffected (< ~5% overhead).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use nnstreamer::apps::e1::{run_case, E1Case, E1Config};
+use nnstreamer::devices::NpuSim;
+use nnstreamer::metrics::report::{f, Table};
+
+/// Paper-calibrated NPU service times: I3 -> 28 fps ceiling, Y3 -> 10.8.
+const I3_SERVICE_MS: f64 = 35.7;
+const Y3_SERVICE_MS: f64 = 92.6;
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let frames = args.frames_or(120, 3000);
+
+    harness::warm_models(&["i3_opt", "y3_opt", "i3_ref"]);
+    let npu = NpuSim::global();
+    npu.set_service_override("i3_opt", Duration::from_secs_f64(I3_SERVICE_MS / 1e3));
+    npu.set_service_override("y3_opt", Duration::from_secs_f64(Y3_SERVICE_MS / 1e3));
+
+    let cfg = E1Config {
+        num_frames: frames,
+        live: true,
+        ..Default::default()
+    };
+    println!(
+        "E1 / Table I — {} frames at {} fps live input (paper: 3000 @ 30)",
+        cfg.num_frames, cfg.fps
+    );
+
+    let mut table = Table::new(
+        "Table I: E1 multi-model pipelines (A311D analog)",
+        &[
+            "Configuration",
+            "Throughput (fps)",
+            "CPU (%)",
+            "Mem (MiB)",
+            "Improved",
+        ],
+    );
+
+    // single-model NNS rates are the baselines for the paper's
+    // improved-throughput formula
+    let mut base: std::collections::HashMap<&str, f64> = Default::default();
+
+    for case in E1Case::all() {
+        let row = run_case(&cfg, case).expect(case.label());
+        let fps_cell = row
+            .fps
+            .iter()
+            .map(|v| f(*v, 1))
+            .collect::<Vec<_>>()
+            .join(", ");
+        // paper formula: (sum_i fps_i / fps_single_i) / #HW
+        let improved = match case {
+            E1Case::NnsI3 => {
+                base.insert("i3", row.fps[0]);
+                String::from("-")
+            }
+            E1Case::NnsY3 => {
+                base.insert("y3", row.fps[0]);
+                String::from("-")
+            }
+            E1Case::NnsCpuI3 => {
+                base.insert("c/i3", row.fps[0]);
+                String::from("-")
+            }
+            E1Case::ControlI3 | E1Case::ControlY3 => String::from("-"),
+            _ => {
+                let branches = case.branches();
+                let mut ratio = 0.0;
+                let mut hw = std::collections::HashSet::new();
+                for ((stem, on_npu), fps) in branches.iter().zip(&row.fps) {
+                    let key = if *on_npu { *stem } else { "c/i3" };
+                    ratio += fps / base.get(key).copied().unwrap_or(1.0);
+                    hw.insert(*on_npu);
+                }
+                let v = (ratio / hw.len() as f64 - 1.0) * 100.0;
+                format!("{v:+.1}%")
+            }
+        };
+        table.row(&[
+            row.label.clone(),
+            fps_cell,
+            f(row.cpu_percent, 1),
+            f(row.mem_mib, 1),
+            improved,
+        ]);
+        eprintln!("  done: {}", row.label);
+    }
+    table.print();
+
+    let stats = &npu.stats;
+    println!(
+        "\nNPU totals: {} jobs, mean queue {:.1} ms, mean service {:.1} ms",
+        stats.jobs(),
+        stats.mean_queue().as_secs_f64() * 1e3,
+        stats.mean_service().as_secs_f64() * 1e3
+    );
+    npu.clear_service_overrides();
+}

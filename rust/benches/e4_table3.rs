@@ -1,0 +1,132 @@
+//! Regenerates **Table III** (E4): NNStreamer vs the MediaPipe-like
+//! framework on SSDLite object detection, plus the pre-processor-only
+//! comparison (the 25% / 40% numbers).
+//!
+//! ```bash
+//! cargo bench --bench e4_table3 [-- --full --repeats 3]
+//! ```
+//!
+//! Expected shape: (a) opt-NNFW ≫ (b) ref-NNFW (the paper's 3.5x from
+//! NNFW-version freedom); (b) slightly better than (c) MediaPipe-like;
+//! (d) hybrid close to (c); MediaPipe-like moves more bytes (row 4).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::pm;
+use nnstreamer::apps::e4::{preprocessor_comparison, run_case, E4Case, E4Config};
+use nnstreamer::metrics::report::Table;
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let frames = args.frames_or(150, 1818);
+    let repeats = args.repeats.max(1);
+    harness::warm_models(&["ssd_opt", "ssd_ref"]);
+
+    let cfg = E4Config {
+        num_frames: frames,
+        ..Default::default()
+    };
+    println!("E4 / Table III — {frames} frames per case, {repeats} repeat(s)");
+
+    let mut t = Table::new(
+        "Table III: object detection, NNStreamer vs MediaPipe-like",
+        &[
+            "Row",
+            "(a) NNS-opt",
+            "(b) NNS-ref",
+            "(c) MediaPipe",
+            "(d) Hybrid",
+            "Paper shape",
+        ],
+    );
+
+    // collect per-case row samples
+    let mut cpu = vec![vec![]; 4];
+    let mut fps = vec![vec![]; 4];
+    let mut lat = vec![vec![]; 4];
+    let mut acc = vec![vec![]; 4];
+    let mut mem = vec![vec![]; 4];
+    for rep in 0..repeats {
+        for (i, case) in E4Case::all().into_iter().enumerate() {
+            let row = run_case(&cfg, case).expect(case.label());
+            eprintln!("  rep {rep}: {} done ({:.1} fps)", row.label, row.throughput_fps);
+            cpu[i].push(row.cpu_percent);
+            fps[i].push(row.throughput_fps);
+            lat[i].push(row.latency_ms);
+            acc[i].push(row.mem_access_m);
+            mem[i].push(row.mem_mib);
+        }
+    }
+
+    let cell = |xs: &Vec<f64>, d: usize| {
+        let (m, s) = harness::mean_std(xs);
+        pm(m, s, d)
+    };
+    t.row(&[
+        "1. CPU (%)".into(),
+        cell(&cpu[0], 1),
+        cell(&cpu[1], 1),
+        cell(&cpu[2], 1),
+        cell(&cpu[3], 1),
+        "352.8 / 168.7 / 168.2 / 168.0".into(),
+    ]);
+    t.row(&[
+        "2. Throughput (fps)".into(),
+        cell(&fps[0], 1),
+        cell(&fps[1], 1),
+        cell(&fps[2], 1),
+        cell(&fps[3], 1),
+        "46.9 / 13.8 / 13.3 / 12.8".into(),
+    ]);
+    t.row(&[
+        "3. Latency (ms)".into(),
+        cell(&lat[0], 1),
+        cell(&lat[1], 1),
+        cell(&lat[2], 1),
+        cell(&lat[3], 1),
+        "20.8 / 72.7 / 74.5 / 76.3".into(),
+    ]);
+    t.row(&[
+        "4. Mem access (M bytes)".into(),
+        cell(&acc[0], 0),
+        cell(&acc[1], 0),
+        cell(&acc[2], 0),
+        cell(&acc[3], 0),
+        "21.9 / 21.8 / 23.5 / 25.3 (G accesses)".into(),
+    ]);
+    t.row(&[
+        "5. Mem size (MiB)".into(),
+        cell(&mem[0], 1),
+        cell(&mem[1], 1),
+        cell(&mem[2], 1),
+        cell(&mem[3], 1),
+        "199.5 / 194.9 / 185.1 / 300.4".into(),
+    ]);
+    t.print();
+
+    let (fa, _) = harness::mean_std(&fps[0]);
+    let (fb, _) = harness::mean_std(&fps[1]);
+    let (fc, _) = harness::mean_std(&fps[2]);
+    println!(
+        "\nNNFW-version freedom: opt/ref throughput = {:.2}x (paper: 3.54x)",
+        fa / fb
+    );
+    println!(
+        "framework overhead: NNS-ref vs MediaPipe-like = {:+.1}% (paper: +3.8%)",
+        (fb / fc - 1.0) * 100.0
+    );
+
+    // pre-processor comparison (paper: MP 25% slower, 40% more CPU overhead)
+    let pf = args.frames_or(200, 1818);
+    let ((nns_cpu, nns_real), (mp_cpu, mp_real)) =
+        preprocessor_comparison(&cfg, pf).expect("preprocessor comparison");
+    println!("\npre-processors only ({pf} frames):");
+    println!("  NNStreamer     : cpu {nns_cpu:.2}s real {nns_real:.2}s");
+    println!("  MediaPipe-like : cpu {mp_cpu:.2}s real {mp_real:.2}s");
+    println!(
+        "  MP is {:+.0}% slower with {:+.0}% more CPU overhead (paper: +25% / +40%)",
+        (mp_real / nns_real - 1.0) * 100.0,
+        (mp_cpu / nns_cpu - 1.0) * 100.0
+    );
+}

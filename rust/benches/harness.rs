@@ -1,0 +1,66 @@
+//! Shared bench harness (criterion is not in the offline vendor set; each
+//! bench is a plain binary that prints its paper table).
+#![allow(dead_code)]
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// `value ± std` cell formatting (Table III style).
+pub fn pm(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{:.*} ±{:.*}", decimals, mean, decimals, std)
+}
+
+/// Bench CLI: `--full` restores paper-scale frame counts; `--frames N`
+/// overrides directly.
+pub struct BenchArgs {
+    pub full: bool,
+    pub frames: Option<u64>,
+    pub repeats: usize,
+}
+
+impl BenchArgs {
+    pub fn parse() -> Self {
+        let mut out = BenchArgs {
+            full: false,
+            frames: None,
+            repeats: 1,
+        };
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--full" => out.full = true,
+                "--frames" => out.frames = args.next().and_then(|v| v.parse().ok()),
+                "--repeats" => {
+                    out.repeats = args.next().and_then(|v| v.parse().ok()).unwrap_or(1)
+                }
+                // `cargo bench` passes --bench; tolerate unknown flags so
+                // the binaries also run under the test harness
+                _ => {}
+            }
+        }
+        out
+    }
+
+    pub fn frames_or(&self, quick: u64, full: u64) -> u64 {
+        self.frames.unwrap_or(if self.full { full } else { quick })
+    }
+}
+
+/// Warm the model registry so per-case RSS deltas reflect steady state,
+/// not first-compile costs.
+pub fn warm_models(names: &[&str]) {
+    let reg = nnstreamer::runtime::ModelRegistry::global().expect(
+        "artifacts/ missing — run `make artifacts` first",
+    );
+    for n in names {
+        reg.load(n).expect(n);
+    }
+}

@@ -1,0 +1,172 @@
+//! Micro-benchmarks + ablations of the framework itself (not a paper
+//! table, but the §Perf substrate): per-element throughput, scheduler
+//! hop cost, zero-copy mux vs a deep-copy ablation, blocking vs leaky
+//! queues, parser cost.
+//!
+//! ```bash
+//! cargo bench --bench micro_elements
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use nnstreamer::metrics::report::{f, Table};
+use nnstreamer::pipeline::Pipeline;
+use nnstreamer::tensor::{Buffer, Chunk};
+
+fn run_fps(desc: &str, frames: u64) -> f64 {
+    let mut p = Pipeline::parse(desc).expect(desc);
+    let report = p.run().expect(desc);
+    frames as f64 / report.wall.as_secs_f64()
+}
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let n = args.frames_or(3000, 30000);
+    let mut t = Table::new("micro: element throughput", &["case", "frames/s"]);
+
+    // scheduler hop cost: source -> sink vs source -> 8 queues -> sink
+    let direct = run_fps(
+        &format!(
+            "sensorsrc window=16 channels=1 rate=1000000 num-buffers={n} ! fakesink"
+        ),
+        n,
+    );
+    t.row(&["1 hop (src!sink)".into(), f(direct, 0)]);
+    let hops = run_fps(
+        &format!(
+            "sensorsrc window=16 channels=1 rate=1000000 num-buffers={n} ! \
+             queue ! queue ! queue ! queue ! queue ! queue ! queue ! queue ! fakesink"
+        ),
+        n,
+    );
+    t.row(&["9 hops (8 queues)".into(), f(hops, 0)]);
+
+    // tee fanout
+    let tee = run_fps(
+        &format!(
+            "sensorsrc window=16 channels=1 rate=1000000 num-buffers={n} ! tee name=t \
+             t. ! queue ! fakesink t. ! queue ! fakesink t. ! queue ! fakesink"
+        ),
+        n,
+    );
+    t.row(&["tee x3 fanout".into(), f(tee, 0)]);
+
+    // transform ops on video-sized tensors
+    let nv = n / 10;
+    let tr = run_fps(
+        &format!(
+            "videotestsrc pattern=gradient num-buffers={nv} ! \
+             video/x-raw,format=RGB,width=320,height=240,framerate=1000000 ! \
+             tensor_converter ! tensor_transform mode=typecast option=float32 ! \
+             tensor_transform mode=arithmetic option=add:-127.5,div:127.5 ! fakesink"
+        ),
+        nv,
+    );
+    t.row(&["convert+cast+arith 320x240".into(), f(tr, 0)]);
+
+    // videoscale
+    let vs = run_fps(
+        &format!(
+            "videotestsrc pattern=gradient num-buffers={nv} ! \
+             video/x-raw,format=RGB,width=640,height=480,framerate=1000000 ! \
+             videoscale width=96 height=96 ! fakesink"
+        ),
+        nv,
+    );
+    t.row(&["videoscale 640x480->96".into(), f(vs, 0)]);
+
+    // mux of 4 streams
+    let mux = run_fps(
+        &format!(
+            "sensorsrc window=64 channels=1 rate=1000000 num-buffers={nv} seed=1 ! tensor_mux name=m sync-mode=slowest \
+             sensorsrc window=64 channels=1 rate=1000000 num-buffers={nv} seed=2 ! m. \
+             sensorsrc window=64 channels=1 rate=1000000 num-buffers={nv} seed=3 ! m. \
+             sensorsrc window=64 channels=1 rate=1000000 num-buffers={nv} seed=4 ! m. \
+             m. ! fakesink"
+        ),
+        nv,
+    );
+    t.row(&["tensor_mux x4 (slowest)".into(), f(mux, 0)]);
+    t.print();
+
+    // ---- ablation: zero-copy chunk bundling vs deep copy ----
+    let frames = 20_000usize;
+    let payload: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+    let bufs: Vec<Buffer> = (0..16)
+        .map(|i| Buffer::from_f32(i, &payload))
+        .collect();
+
+    let t0 = Instant::now();
+    for _ in 0..frames {
+        let parts: Vec<Buffer> = bufs.iter().cloned().collect();
+        let bundled = Buffer::bundle(parts).unwrap();
+        std::hint::black_box(bundled.unbundle());
+    }
+    let zero_copy = frames as f64 / t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for _ in 0..frames {
+        // ablation: what mux would cost if it copied payloads
+        let parts: Vec<Buffer> = bufs
+            .iter()
+            .map(|b| Buffer::single(b.pts_ns, Chunk::from_f32(b.chunk().as_f32().unwrap())))
+            .collect();
+        let bundled = Buffer::bundle(parts).unwrap();
+        std::hint::black_box(bundled.unbundle());
+    }
+    let deep_copy = frames as f64 / t0.elapsed().as_secs_f64();
+
+    let mut t2 = Table::new(
+        "ablation: mux/demux bundling (16 tensors x 16 KiB)",
+        &["strategy", "bundles/s", "speedup"],
+    );
+    t2.row(&["zero-copy (ours, §III)".into(), f(zero_copy, 0), f(zero_copy / deep_copy, 1)]);
+    t2.row(&["deep-copy (ablation)".into(), f(deep_copy, 0), "1.0".into()]);
+    t2.print();
+
+    // ---- ablation: blocking vs leaky queue under an overloaded branch ----
+    let slow_consumer = |leaky: bool| -> (f64, u64) {
+        let desc = format!(
+            "sensorsrc window=128 channels=3 rate=1000000 num-buffers=60 ! \
+             queue max-size-buffers=2 {} name=q ! \
+             tensor_filter framework=xla model=ars_a_opt ! fakesink name=out",
+            if leaky { "leaky=downstream" } else { "" }
+        );
+        let mut p = Pipeline::parse(&desc).unwrap();
+        let report = p.run().unwrap();
+        (
+            report.wall.as_secs_f64(),
+            report.element("q").unwrap().dropped(),
+        )
+    };
+    harness::warm_models(&["ars_a_opt"]);
+    let (wall_block, d0) = slow_consumer(false);
+    let (wall_leaky, d1) = slow_consumer(true);
+    let mut t3 = Table::new(
+        "ablation: queue policy with a slow model branch (60 frames)",
+        &["policy", "wall (s)", "dropped"],
+    );
+    t3.row(&["blocking".into(), f(wall_block, 2), d0.to_string()]);
+    t3.row(&["leaky=downstream".into(), f(wall_leaky, 2), d1.to_string()]);
+    t3.print();
+
+    // ---- parser cost ----
+    let t0 = Instant::now();
+    let reps = 2000;
+    for _ in 0..reps {
+        let g = nnstreamer::pipeline::parser::parse(
+            "videotestsrc num-buffers=1 ! videoconvert format=RGB ! tee name=t \
+             t. ! queue ! tensor_converter ! tensor_transform mode=normalize ! fakesink \
+             t. ! queue ! fakesink",
+        )
+        .unwrap();
+        std::hint::black_box(g.nodes.len());
+    }
+    println!(
+        "\nparser: {:.0} pipelines/s (8-element description)",
+        reps as f64 / t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,233 @@
+//! E2: the Activity Recognition Sensor pipeline (Fig 3).
+//!
+//! Multi-modal and multi-model: IIO sensors (3-axis accelerometer +
+//! pressure) and a microphone feed three NN stages at different aggregated
+//! rates:
+//!
+//! ```text
+//! sensorsrc(accel 3ch)    ! tee ta
+//!   ta. ! queue ! tensor_filter(ars_a)              -> sink_a   (a)
+//!   ta. ! queue ! tensor_transform(stand)           -> merge
+//! sensorsrc(pressure 1ch) ! tee tp
+//!   tp. ! queue                                     -> merge
+//!   tp. ! queue ! tensor_transform(stand)           -> merge
+//!   ta. ! queue                                     -> merge
+//! tensor_merge(axis 0: 3+1+3+1 = 8ch) ! tensor_aggregator(4x)
+//!   ! tensor_filter(ars_b)                          -> sink_b   (b)
+//! sensorsrc(mic 16ch) ! tensor_aggregator(2x, flush 2 = decimate)
+//!   ! tensor_filter(ars_c)                          -> sink_c   (c)
+//! ```
+//!
+//! The paper's headline: one developer, a dozen lines of pipeline
+//! description, −48% memory, −43% CPU, +65.5% batch rate vs the
+//! conventional serial implementation ([`crate::baselines::control`]).
+
+use crate::error::Result;
+use crate::metrics::MemInfo;
+use crate::pipeline::{Graph, Pipeline};
+
+#[derive(Debug, Clone)]
+pub struct ArsConfig {
+    /// Sensor window rate (windows/s) for live runs; batch runs use a high
+    /// rate with no pacing.
+    pub rate: f64,
+    pub num_windows: u64,
+    pub live: bool,
+}
+
+impl Default for ArsConfig {
+    fn default() -> Self {
+        Self {
+            rate: 30.0,
+            num_windows: 240,
+            live: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ArsReport {
+    pub rate_a: f64,
+    pub rate_b: f64,
+    pub rate_c: f64,
+    pub cpu_percent: f64,
+    pub mem_mib: f64,
+    pub wall_s: f64,
+    pub dropped: u64,
+    /// The pipeline description length (the paper's "dozen lines" claim).
+    pub description_lines: usize,
+}
+
+/// The ARS pipeline as a launch description (measured for the paper's
+/// developmental-effort claim: this is the entire application).
+pub fn launch_description(cfg: &ArsConfig) -> String {
+    let live = if cfg.live { "true" } else { "false" };
+    let n = cfg.num_windows;
+    let rate = cfg.rate;
+    format!(
+        "sensorsrc kind=accel window=128 channels=3 rate={rate} num-buffers={n} is-live={live} ! tee name=ta\n\
+         ta. ! queue ! tensor_filter framework=xla model=ars_a_opt ! fakesink name=sink_a\n\
+         sensorsrc kind=pressure window=128 channels=1 rate={rate} num-buffers={n} is-live={live} ! tee name=tp\n\
+         ta. ! queue ! tensor_merge mode=linear option=0 sync-mode=slowest name=m\n\
+         tp. ! queue ! m.\n\
+         ta. ! queue ! tensor_transform mode=stand ! m.\n\
+         tp. ! queue ! tensor_transform mode=stand ! m.\n\
+         m. ! tensor_aggregator frames-in=4 frames-dim=1 ! tensor_filter framework=xla model=ars_b_opt ! fakesink name=sink_b\n\
+         sensorsrc kind=mic window=64 channels=16 rate={rate} num-buffers={n} is-live={live} ! \
+           tensor_rate framerate={half} ! tensor_filter framework=xla model=ars_c_opt ! fakesink name=sink_c",
+        half = rate / 2.0,
+    )
+}
+
+/// Build the Fig 3 graph programmatically (the launch string above is the
+/// paper-facing "dozen lines"; the builder keeps branch wiring explicit).
+pub fn build_pipeline(cfg: &ArsConfig) -> Result<Graph> {
+    use crate::element::Registry;
+    let mut g = Graph::new();
+    let live = if cfg.live { "true" } else { "false" };
+
+    // accel source + tee
+    let accel = g.add("sensorsrc")?;
+    g.set_property(accel, "kind", "accel")?;
+    g.set_property(accel, "window", "128")?;
+    g.set_property(accel, "channels", "3")?;
+    g.set_property(accel, "rate", &cfg.rate.to_string())?;
+    g.set_property(accel, "num-buffers", &cfg.num_windows.to_string())?;
+    g.set_property(accel, "is-live", live)?;
+    let ta = g.add("tee")?;
+    g.link(accel, ta)?;
+
+    // (a) fast path: per-window activity classifier
+    let qa = g.add("queue")?;
+    g.link(ta, qa)?;
+    let fa = g.add("tensor_filter")?;
+    g.set_property(fa, "framework", "xla")?;
+    g.set_property(fa, "model", "ars_a_opt")?;
+    g.link(qa, fa)?;
+    let sink_a = g.add_element("sink_a", Registry::make("fakesink")?)?;
+    g.link(fa, sink_a)?;
+
+    // pressure source + tee
+    let pres = g.add("sensorsrc")?;
+    g.set_property(pres, "kind", "pressure")?;
+    g.set_property(pres, "window", "128")?;
+    g.set_property(pres, "channels", "1")?;
+    g.set_property(pres, "rate", &cfg.rate.to_string())?;
+    g.set_property(pres, "num-buffers", &cfg.num_windows.to_string())?;
+    g.set_property(pres, "is-live", live)?;
+    let tp = g.add("tee")?;
+    g.link(pres, tp)?;
+
+    // (b) slow path: 8-channel fusion -> 4x aggregation -> long classifier
+    let merge = g.add("tensor_merge")?;
+    g.set_property(merge, "mode", "linear")?;
+    g.set_property(merge, "option", "0")?; // channel axis (minor)
+    g.set_property(merge, "sync-mode", "slowest")?;
+    for (tee, stand) in [(ta, false), (tp, false), (ta, true), (tp, true)] {
+        let q = g.add("queue")?;
+        g.link(tee, q)?;
+        if stand {
+            let t = g.add("tensor_transform")?;
+            g.set_property(t, "mode", "stand")?;
+            g.link(q, t)?;
+            g.link(t, merge)?;
+        } else {
+            g.link(q, merge)?;
+        }
+    }
+    let agg = g.add("tensor_aggregator")?;
+    g.set_property(agg, "frames-in", "4")?;
+    g.set_property(agg, "frames-dim", "1")?; // time axis
+    g.link(merge, agg)?;
+    let fb = g.add("tensor_filter")?;
+    g.set_property(fb, "framework", "xla")?;
+    g.set_property(fb, "model", "ars_b_opt")?;
+    g.link(agg, fb)?;
+    let sink_b = g.add_element("sink_b", Registry::make("fakesink")?)?;
+    g.link(fb, sink_b)?;
+
+    // (c) mic path: rate-decimated audio event classifier
+    let mic = g.add("sensorsrc")?;
+    g.set_property(mic, "kind", "mic")?;
+    g.set_property(mic, "window", "64")?;
+    g.set_property(mic, "channels", "16")?;
+    g.set_property(mic, "rate", &cfg.rate.to_string())?;
+    g.set_property(mic, "num-buffers", &cfg.num_windows.to_string())?;
+    g.set_property(mic, "is-live", live)?;
+    let rate_el = g.add("tensor_rate")?;
+    g.set_property(rate_el, "framerate", &(cfg.rate / 2.0).to_string())?;
+    g.link(mic, rate_el)?;
+    let fc = g.add("tensor_filter")?;
+    g.set_property(fc, "framework", "xla")?;
+    g.set_property(fc, "model", "ars_c_opt")?;
+    g.link(rate_el, fc)?;
+    let sink_c = g.add_element("sink_c", Registry::make("fakesink")?)?;
+    g.link(fc, sink_c)?;
+
+    Ok(g)
+}
+
+/// Run the NNStreamer ARS pipeline and collect Fig 3 measurements.
+pub fn run_nns(cfg: &ArsConfig) -> Result<ArsReport> {
+    let mem_before = MemInfo::read().vm_rss_kib;
+    let mut pipeline = Pipeline::new(build_pipeline(cfg)?);
+    let report = pipeline.run()?;
+    let mem_after = MemInfo::read().vm_rss_kib;
+    // tensor_rate drops are intentional decimation, not lost frames
+    let dropped = report
+        .elements
+        .iter()
+        .filter(|e| !e.name.starts_with("tensor_rate"))
+        .map(|e| e.dropped())
+        .sum();
+    Ok(ArsReport {
+        rate_a: report.fps("sink_a"),
+        rate_b: report.fps("sink_b"),
+        rate_c: report.fps("sink_c"),
+        cpu_percent: report.element_cpu_percent(),
+        mem_mib: ((mem_after.saturating_sub(mem_before)) as f64 / 1024.0).max(0.0),
+        wall_s: report.wall.as_secs_f64(),
+        dropped,
+        description_lines: launch_description(cfg).lines().count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ars_pipeline_negotiates() {
+        let cfg = ArsConfig {
+            num_windows: 4,
+            ..Default::default()
+        };
+        let mut g = build_pipeline(&cfg).unwrap();
+        g.negotiate_all().unwrap();
+    }
+
+    #[test]
+    fn ars_pipeline_stage_rates() {
+        let cfg = ArsConfig {
+            num_windows: 64,
+            live: false,
+            ..Default::default()
+        };
+        // assert on processed *counts* (rates race in batch mode):
+        // a sees every window; b every 4th (aggregator); c every 2nd (rate)
+        let mut p = Pipeline::new(build_pipeline(&cfg).unwrap());
+        let report = p.run().unwrap();
+        let count = |n: &str| report.element(n).unwrap().buffers_in();
+        assert_eq!(count("sink_a"), 64);
+        let b = count("sink_b");
+        assert!((12..=16).contains(&b), "b decimated 4x, got {b}");
+        let c = count("sink_c");
+        assert!((28..=34).contains(&c), "c decimated 2x, got {c}");
+    }
+
+    #[test]
+    fn description_is_a_dozen_lines() {
+        let lines = launch_description(&ArsConfig::default()).lines().count();
+        assert!(lines <= 12, "paper: 'only a dozen lines', got {lines}");
+    }
+}

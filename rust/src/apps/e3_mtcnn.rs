@@ -1,0 +1,577 @@
+//! E3: the MTCNN face-detection cascade (Fig 4, Table II).
+//!
+//! Pipeline shape (as in the paper's figure):
+//!
+//! ```text
+//! videotestsrc(FullHD) ! videoconvert ! tee t
+//!   t. ! queue ! videoscale(scale i) ! tensor_converter ! typecast !
+//!        normalize ! tensor_filter(pnet_s{i}) ! custom(pnet_post_s{i}) \
+//!     -> tensor_mux (5 scales) ! custom(merge+NMS)          [P-Net Stage]
+//!   t. ! queue ! videoscale(base) ! tensor_converter ! typecast !
+//!        normalize ! tee frame_f32
+//!   mux(frame_f32, pnet boxes) ! custom(rnet_stage)          [R-Net Stage]
+//!   mux(frame_f32, rnet boxes) ! custom(onet_stage)          [O-Net Stage]
+//!   ! tensor_decoder(direct_video) ! fakesink                [Video Sink]
+//! ```
+//!
+//! The N/B/I boxes of Fig 4 (NMS, bounding-box regression, image patch)
+//! live in [`super::postproc`] and run as `framework=custom` filter stages,
+//! like the paper's 1004 lines of re-implemented post-processing.
+//!
+//! The R/O stages embed their model execution inside the custom stage
+//! (patch extraction and regression need the candidate boxes next to the
+//! tensor batch); P-Nets are plain `tensor_filter` elements. Device classes
+//! (Table II's A/B/C columns) throttle all model executions.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::devices::DeviceClass;
+use crate::elements::decoder::{decode_boxes, encode_boxes, DetBox, MAX_BOXES};
+use crate::error::{Error, Result};
+use crate::nnfw::register_custom;
+use crate::pipeline::Graph;
+use crate::runtime::{Model, ModelRegistry};
+use crate::tensor::{Chunk, DType, TensorInfo};
+
+use super::postproc::{extract_patches, nms, pnet_candidates, apply_bbr};
+
+/// The pyramid must match `python/compile/models/mtcnn.py`.
+pub const PYRAMID: [(usize, usize); 5] = [(108, 192), (76, 136), (54, 96), (38, 68), (27, 48)];
+pub const BASE: (usize, usize) = (108, 192); // (H, W)
+pub const RNET_BATCH: usize = 16;
+pub const ONET_BATCH: usize = 8;
+
+const BOXES_LEN: usize = 1 + MAX_BOXES * 6;
+
+#[derive(Debug, Clone)]
+pub struct MtcnnConfig {
+    pub class: DeviceClass,
+    /// Source resolution (paper: Full-HD).
+    pub src_w: usize,
+    pub src_h: usize,
+    pub thresholds: [f32; 3],
+    pub num_frames: u64,
+    pub fps: f64,
+    pub live: bool,
+}
+
+impl Default for MtcnnConfig {
+    fn default() -> Self {
+        Self {
+            class: DeviceClass::Pc,
+            src_w: 1920,
+            src_h: 1080,
+            thresholds: [0.6, 0.6, 0.55],
+            num_frames: 30,
+            fps: 30.0,
+            live: false,
+        }
+    }
+}
+
+fn boxes_info() -> TensorInfo {
+    TensorInfo::new(DType::F32, [BOXES_LEN])
+}
+
+fn class_suffix(class: DeviceClass) -> &'static str {
+    match class {
+        DeviceClass::MidEmbedded => "a",
+        DeviceClass::HighEmbedded => "b",
+        DeviceClass::Pc => "c",
+    }
+}
+
+/// Throttle a model execution to the device class (sleep-padded envelope;
+/// see DESIGN.md substitutions).
+fn execute_throttled(
+    model: &Arc<Model>,
+    inputs: &[&Chunk],
+    class: DeviceClass,
+) -> Result<Vec<Chunk>> {
+    let t0 = Instant::now();
+    let out = model.execute(inputs)?;
+    class.throttle(t0.elapsed());
+    Ok(out)
+}
+
+/// Register every custom stage for a device class. Idempotent per class.
+pub fn register_stages(class: DeviceClass) -> Result<()> {
+    let reg = ModelRegistry::global()?;
+    let sfx = class_suffix(class);
+    let (bh, bw) = BASE;
+
+    // P-Net post per scale: (prob, reg) maps -> candidate boxes
+    for (i, (h, w)) in PYRAMID.iter().enumerate() {
+        let spec = reg
+            .load(&format!("pnet_s{i}_opt"))?
+            .spec
+            .clone();
+        // output maps (1, mh, mw, 2/4)
+        let mh = spec.outputs[0].dims.as_slice()[1];
+        let mw = spec.outputs[0].dims.as_slice()[2];
+        let scale = *w as f32 / bw as f32;
+        let threshold = 0.6f32;
+        let _ = (h, bh);
+        register_custom(
+            &format!("mtcnn_pnet_post_s{i}"),
+            vec![
+                TensorInfo::new(DType::F32, [2, mw, mh, 1]),
+                TensorInfo::new(DType::F32, [4, mw, mh, 1]),
+            ],
+            vec![boxes_info()],
+            move |ins| {
+                let prob = ins[0].to_f32_vec()?;
+                let rg = ins[1].to_f32_vec()?;
+                let cands = pnet_candidates(
+                    &prob, &rg, mh, mw, scale, bw as f32, bh as f32, threshold,
+                );
+                let kept = nms(cands, 0.5);
+                Ok(vec![encode_boxes(&kept[..kept.len().min(MAX_BOXES)])])
+            },
+        );
+    }
+
+    // Cross-scale merge + NMS
+    register_custom(
+        "mtcnn_merge_nms",
+        vec![boxes_info(); PYRAMID.len()],
+        vec![boxes_info()],
+        move |ins| {
+            let mut all = Vec::new();
+            for c in ins {
+                all.extend(decode_boxes(c)?);
+            }
+            let kept = nms(all, 0.7);
+            Ok(vec![encode_boxes(&kept[..kept.len().min(RNET_BATCH)])])
+        },
+    );
+
+    // R-Net stage: (frame_f32, boxes) -> refined boxes
+    let rnet = reg.load("rnet_opt")?;
+    let t_r = 0.6f32;
+    register_custom(
+        &format!("mtcnn_rnet_stage_{sfx}"),
+        vec![
+            TensorInfo::new(DType::F32, [3, bw, bh, 1]),
+            boxes_info(),
+        ],
+        vec![boxes_info()],
+        move |ins| {
+            let frame = ins[0].as_f32()?;
+            let boxes = decode_boxes(ins[1])?;
+            if boxes.is_empty() {
+                return Ok(vec![encode_boxes(&[])]);
+            }
+            let patches =
+                extract_patches(frame, bh, bw, 3, &boxes, 24, RNET_BATCH);
+            let input = Chunk::from_f32(&patches);
+            let outs = execute_throttled(&rnet, &[&input], class)?;
+            let probs = outs[0].to_f32_vec()?;
+            let regs = outs[1].to_f32_vec()?;
+            let mut refined = Vec::new();
+            for (i, b) in boxes.iter().take(RNET_BATCH).enumerate() {
+                let p = probs[i * 2 + 1];
+                if p < t_r {
+                    continue;
+                }
+                let r: [f32; 4] = regs[i * 4..i * 4 + 4].try_into().unwrap();
+                let mut nb = apply_bbr(b, &r);
+                nb.score = p;
+                refined.push(nb);
+            }
+            let kept = nms(refined, 0.7);
+            Ok(vec![encode_boxes(&kept[..kept.len().min(ONET_BATCH)])])
+        },
+    );
+
+    // O-Net stage: (frame_f32, boxes) -> final boxes
+    let onet = reg.load("onet_opt")?;
+    let t_o = 0.55f32;
+    register_custom(
+        &format!("mtcnn_onet_stage_{sfx}"),
+        vec![
+            TensorInfo::new(DType::F32, [3, bw, bh, 1]),
+            boxes_info(),
+        ],
+        vec![boxes_info()],
+        move |ins| {
+            let frame = ins[0].as_f32()?;
+            let boxes = decode_boxes(ins[1])?;
+            if boxes.is_empty() {
+                return Ok(vec![encode_boxes(&[])]);
+            }
+            let patches =
+                extract_patches(frame, bh, bw, 3, &boxes, 48, ONET_BATCH);
+            let input = Chunk::from_f32(&patches);
+            let outs = execute_throttled(&onet, &[&input], class)?;
+            let probs = outs[0].to_f32_vec()?;
+            let regs = outs[1].to_f32_vec()?;
+            let mut refined = Vec::new();
+            for (i, b) in boxes.iter().take(ONET_BATCH).enumerate() {
+                let p = probs[i * 2 + 1];
+                if p < t_o {
+                    continue;
+                }
+                let r: [f32; 4] = regs[i * 4..i * 4 + 4].try_into().unwrap();
+                let mut nb = apply_bbr(b, &r);
+                nb.score = p;
+                refined.push(nb);
+            }
+            let kept = nms(refined, 0.6);
+            Ok(vec![encode_boxes(&kept)])
+        },
+    );
+    Ok(())
+}
+
+/// Build the full MTCNN NNStreamer pipeline graph.
+pub fn build_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
+    register_stages(cfg.class)?;
+    let sfx = class_suffix(cfg.class);
+    let (bh, bw) = BASE;
+    let mut g = Graph::new();
+
+    let src = g.add("videotestsrc")?;
+    g.set_property(src, "pattern", "ball")?;
+    g.set_property(src, "width", &cfg.src_w.to_string())?;
+    g.set_property(src, "height", &cfg.src_h.to_string())?;
+    g.set_property(src, "framerate", &cfg.fps.to_string())?;
+    g.set_property(src, "num-buffers", &cfg.num_frames.to_string())?;
+    g.set_property(src, "is-live", if cfg.live { "true" } else { "false" })?;
+
+    let tee = g.add("tee")?;
+    g.link(src, tee)?;
+
+    // P-Net branches
+    let mux = g.add("tensor_mux")?;
+    g.set_property(mux, "sync-mode", "slowest")?;
+    for (i, (h, w)) in PYRAMID.iter().enumerate() {
+        let q = g.add("queue")?;
+        g.link(tee, q)?;
+        let scale = g.add("videoscale")?;
+        g.set_property(scale, "width", &w.to_string())?;
+        g.set_property(scale, "height", &h.to_string())?;
+        g.link(q, scale)?;
+        let conv = g.add("tensor_converter")?;
+        g.link(scale, conv)?;
+        let cast = g.add("tensor_transform")?;
+        g.set_property(cast, "mode", "typecast")?;
+        g.set_property(cast, "option", "float32")?;
+        g.link(conv, cast)?;
+        let norm = g.add("tensor_transform")?;
+        g.set_property(norm, "mode", "arithmetic")?;
+        g.set_property(norm, "option", "add:-127.5,div:128")?;
+        g.link(cast, norm)?;
+        let pnet = g.add_element(
+            format!("pnet_s{i}"),
+            crate::element::Registry::make("tensor_filter")?,
+        )?;
+        g.set_property(pnet, "framework", "xla")?;
+        g.set_property(pnet, "model", &format!("pnet_s{i}_opt"))?;
+        g.set_property(pnet, "device-class", sfx)?;
+        g.link(norm, pnet)?;
+        let post = g.add("tensor_filter")?;
+        g.set_property(post, "framework", "custom")?;
+        g.set_property(post, "model", &format!("mtcnn_pnet_post_s{i}"))?;
+        g.link(pnet, post)?;
+        let q2 = g.add("queue")?;
+        g.link(post, q2)?;
+        g.link(q2, mux)?;
+    }
+    let merge = g.add_element("pnet_merge", crate::element::Registry::make("tensor_filter")?)?;
+    g.set_property(merge, "framework", "custom")?;
+    g.set_property(merge, "model", "mtcnn_merge_nms")?;
+    g.link(mux, merge)?;
+
+    // base frame branch (f32, normalized)
+    let qf = g.add("queue")?;
+    g.link(tee, qf)?;
+    let scale_f = g.add("videoscale")?;
+    g.set_property(scale_f, "width", &bw.to_string())?;
+    g.set_property(scale_f, "height", &bh.to_string())?;
+    g.link(qf, scale_f)?;
+    let conv_f = g.add("tensor_converter")?;
+    g.link(scale_f, conv_f)?;
+    let cast_f = g.add("tensor_transform")?;
+    g.set_property(cast_f, "mode", "typecast")?;
+    g.set_property(cast_f, "option", "float32")?;
+    g.link(conv_f, cast_f)?;
+    let norm_f = g.add("tensor_transform")?;
+    g.set_property(norm_f, "mode", "arithmetic")?;
+    g.set_property(norm_f, "option", "add:-127.5,div:128")?;
+    g.link(cast_f, norm_f)?;
+    let tee_f = g.add("tee")?;
+    g.link(norm_f, tee_f)?;
+
+    // R-Net stage
+    let mux_r = g.add("tensor_mux")?;
+    g.set_property(mux_r, "sync-mode", "slowest")?;
+    let qf1 = g.add("queue")?;
+    g.link(tee_f, qf1)?;
+    g.link(qf1, mux_r)?;
+    let qb1 = g.add("queue")?;
+    g.link(merge, qb1)?;
+    g.link(qb1, mux_r)?;
+    let rnet = g.add_element("rnet_stage", crate::element::Registry::make("tensor_filter")?)?;
+    g.set_property(rnet, "framework", "custom")?;
+    g.set_property(rnet, "model", &format!("mtcnn_rnet_stage_{sfx}"))?;
+    g.link(mux_r, rnet)?;
+
+    // O-Net stage
+    let mux_o = g.add("tensor_mux")?;
+    g.set_property(mux_o, "sync-mode", "slowest")?;
+    let qf2 = g.add("queue")?;
+    g.link(tee_f, qf2)?;
+    g.link(qf2, mux_o)?;
+    let qb2 = g.add("queue")?;
+    g.link(rnet, qb2)?;
+    g.link(qb2, mux_o)?;
+    let onet = g.add_element("onet_stage", crate::element::Registry::make("tensor_filter")?)?;
+    g.set_property(onet, "framework", "custom")?;
+    g.set_property(onet, "model", &format!("mtcnn_onet_stage_{sfx}"))?;
+    g.link(mux_o, onet)?;
+
+    // Video sink: draw boxes on a transparent canvas
+    let dec = g.add("tensor_decoder")?;
+    g.set_property(dec, "mode", "direct_video")?;
+    g.set_property(dec, "width", &bw.to_string())?;
+    g.set_property(dec, "height", &bh.to_string())?;
+    g.link(onet, dec)?;
+    let sink = g.add_element("video_sink", crate::element::Registry::make("fakesink")?)?;
+    g.link(dec, sink)?;
+
+    Ok(g)
+}
+
+/// Per-run measurements shared by the NNS pipeline and the Control loop.
+#[derive(Debug, Default, Clone)]
+pub struct MtcnnReport {
+    pub frames: u64,
+    pub wall_s: f64,
+    pub throughput_fps: f64,
+    /// Mean end-to-end latency (ms), measured at 1 fps live input.
+    pub overall_latency_ms: f64,
+    pub pnet_latency_ms: f64,
+    pub rnet_latency_ms: f64,
+    pub onet_latency_ms: f64,
+}
+
+/// Run the NNStreamer MTCNN pipeline and collect Table II measurements.
+pub fn run_nns(cfg: &MtcnnConfig) -> Result<MtcnnReport> {
+    let mut g = build_pipeline(cfg)?;
+    let mut pipeline = crate::pipeline::Pipeline::new(g_take(&mut g));
+    let report = pipeline.run()?;
+    let sink = report
+        .element("video_sink")
+        .ok_or_else(|| Error::Runtime("no video_sink stats".into()))?;
+    let frames = sink.buffers_in();
+    // P-Net stage latency: slowest P-Net branch (filter + post) mean
+    let mut pnet_ms: f64 = 0.0;
+    for i in 0..PYRAMID.len() {
+        if let Some(e) = report.element(&format!("pnet_s{i}")) {
+            pnet_ms = pnet_ms.max(e.latency().mean.as_secs_f64() * 1e3);
+        }
+    }
+    let stage_ms = |name: &str| -> f64 {
+        report
+            .element(name)
+            .map(|e| e.latency().mean.as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
+    };
+    // overall latency: mean over sink arrivals vs pts (live runs only)
+    Ok(MtcnnReport {
+        frames,
+        wall_s: report.wall.as_secs_f64(),
+        throughput_fps: frames as f64 / report.wall.as_secs_f64(),
+        overall_latency_ms: 0.0, // filled by latency runs (run_nns_latency)
+        pnet_latency_ms: pnet_ms,
+        rnet_latency_ms: stage_ms("rnet_stage"),
+        onet_latency_ms: stage_ms("onet_stage"),
+    })
+}
+
+// Graph is not Clone; move helper keeps run_nns tidy.
+fn g_take(g: &mut Graph) -> Graph {
+    std::mem::take(g)
+}
+
+/// Serial Control implementation (the paper's ROS-based C++ team's code):
+/// every stage for every frame, one after another, single thread.
+pub fn run_control(cfg: &MtcnnConfig) -> Result<MtcnnReport> {
+    let reg = ModelRegistry::global()?;
+    let (bh, bw) = BASE;
+    let mut pnets = Vec::new();
+    for i in 0..PYRAMID.len() {
+        pnets.push(reg.load(&format!("pnet_s{i}_opt"))?);
+    }
+    let rnet = reg.load("rnet_opt")?;
+    let onet = reg.load("onet_opt")?;
+
+    let t0 = Instant::now();
+    let mut pnet_ms = 0.0f64;
+    let mut rnet_ms = 0.0f64;
+    let mut onet_ms = 0.0f64;
+    let mut total_ms = 0.0f64;
+    for n in 0..cfg.num_frames {
+        let f0 = Instant::now();
+        // fetch + convert (the Control code also caches everything: it
+        // keeps full-res copies around, i.e. an extra frame copy per stage)
+        let frame = crate::video::pattern::generate_rgb(
+            crate::video::Pattern::Ball,
+            cfg.src_w,
+            cfg.src_h,
+            n,
+        );
+        let _cached = frame.clone(); // "caching everything in memory"
+        // P-Net over the pyramid — serial
+        let ps = Instant::now();
+        let mut cands: Vec<DetBox> = Vec::new();
+        for (i, (h, w)) in PYRAMID.iter().enumerate() {
+            let scaled = crate::video::scale_bilinear(
+                crate::tensor::VideoFormat::Rgb,
+                cfg.src_w,
+                cfg.src_h,
+                *w,
+                *h,
+                &frame,
+            );
+            let norm: Vec<f32> = scaled.iter().map(|&v| (v as f32 - 127.5) / 128.0).collect();
+            let input = Chunk::from_f32(&norm);
+            let outs = execute_throttled(&pnets[i], &[&input], cfg.class)?;
+            let prob = outs[0].to_f32_vec()?;
+            let rg = outs[1].to_f32_vec()?;
+            let spec = &pnets[i].spec;
+            let mh = spec.outputs[0].dims.as_slice()[1];
+            let mw = spec.outputs[0].dims.as_slice()[2];
+            let scale = *w as f32 / bw as f32;
+            cands.extend(pnet_candidates(
+                &prob,
+                &rg,
+                mh,
+                mw,
+                scale,
+                bw as f32,
+                bh as f32,
+                cfg.thresholds[0],
+            ));
+        }
+        let boxes = nms(cands, 0.7);
+        let boxes = &boxes[..boxes.len().min(RNET_BATCH)];
+        pnet_ms += ps.elapsed().as_secs_f64() * 1e3;
+
+        // base frame for patches
+        let base = crate::video::scale_bilinear(
+            crate::tensor::VideoFormat::Rgb,
+            cfg.src_w,
+            cfg.src_h,
+            bw,
+            bh,
+            &frame,
+        );
+        let base_f: Vec<f32> = base.iter().map(|&v| (v as f32 - 127.5) / 128.0).collect();
+
+        // R-Net — serial
+        let rs = Instant::now();
+        let mut rboxes = Vec::new();
+        if !boxes.is_empty() {
+            let patches = extract_patches(&base_f, bh, bw, 3, boxes, 24, RNET_BATCH);
+            let input = Chunk::from_f32(&patches);
+            let outs = execute_throttled(&rnet, &[&input], cfg.class)?;
+            let probs = outs[0].to_f32_vec()?;
+            let regs = outs[1].to_f32_vec()?;
+            for (i, b) in boxes.iter().take(RNET_BATCH).enumerate() {
+                let p = probs[i * 2 + 1];
+                if p < cfg.thresholds[1] {
+                    continue;
+                }
+                let r: [f32; 4] = regs[i * 4..i * 4 + 4].try_into().unwrap();
+                let mut nb = apply_bbr(b, &r);
+                nb.score = p;
+                rboxes.push(nb);
+            }
+            rboxes = nms(rboxes, 0.7);
+            rboxes.truncate(ONET_BATCH);
+        }
+        rnet_ms += rs.elapsed().as_secs_f64() * 1e3;
+
+        // O-Net — serial
+        let os = Instant::now();
+        let mut fboxes = Vec::new();
+        if !rboxes.is_empty() {
+            let patches = extract_patches(&base_f, bh, bw, 3, &rboxes, 48, ONET_BATCH);
+            let input = Chunk::from_f32(&patches);
+            let outs = execute_throttled(&onet, &[&input], cfg.class)?;
+            let probs = outs[0].to_f32_vec()?;
+            let regs = outs[1].to_f32_vec()?;
+            for (i, b) in rboxes.iter().take(ONET_BATCH).enumerate() {
+                let p = probs[i * 2 + 1];
+                if p < cfg.thresholds[2] {
+                    continue;
+                }
+                let r: [f32; 4] = regs[i * 4..i * 4 + 4].try_into().unwrap();
+                let mut nb = apply_bbr(b, &r);
+                nb.score = p;
+                fboxes.push(nb);
+            }
+            fboxes = nms(fboxes, 0.6);
+        }
+        onet_ms += os.elapsed().as_secs_f64() * 1e3;
+        std::hint::black_box(&fboxes);
+        total_ms += f0.elapsed().as_secs_f64() * 1e3;
+    }
+    let n = cfg.num_frames.max(1) as f64;
+    Ok(MtcnnReport {
+        frames: cfg.num_frames,
+        wall_s: t0.elapsed().as_secs_f64(),
+        throughput_fps: cfg.num_frames as f64 / t0.elapsed().as_secs_f64(),
+        overall_latency_ms: total_ms / n,
+        pnet_latency_ms: pnet_ms / n,
+        rnet_latency_ms: rnet_ms / n,
+        onet_latency_ms: onet_ms / n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_builds_and_negotiates() {
+        let cfg = MtcnnConfig {
+            num_frames: 2,
+            src_w: 480,
+            src_h: 270,
+            ..Default::default()
+        };
+        let mut g = build_pipeline(&cfg).unwrap();
+        g.negotiate_all().unwrap();
+    }
+
+    #[test]
+    fn nns_produces_frames() {
+        let cfg = MtcnnConfig {
+            num_frames: 3,
+            src_w: 480,
+            src_h: 270,
+            fps: 1000.0,
+            ..Default::default()
+        };
+        let report = run_nns(&cfg).unwrap();
+        assert_eq!(report.frames, 3);
+        assert!(report.pnet_latency_ms > 0.0);
+    }
+
+    #[test]
+    fn control_runs() {
+        let cfg = MtcnnConfig {
+            num_frames: 2,
+            src_w: 480,
+            src_h: 270,
+            ..Default::default()
+        };
+        let report = run_control(&cfg).unwrap();
+        assert!(report.overall_latency_ms > 0.0);
+        assert!(report.throughput_fps > 0.0);
+    }
+}

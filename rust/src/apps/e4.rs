@@ -1,0 +1,312 @@
+//! E4: NNStreamer vs the MediaPipe-like framework (Fig 5, Table III).
+//!
+//! Four cases on the same SSDLite object-detection workload:
+//! * (a) NNStreamer with the `ssd_opt` build ("TFLite 1.15.2")
+//! * (b) NNStreamer with the `ssd_ref` build ("TFLite 2.1")
+//! * (c) the MediaPipe-like calculator graph (pinned to `ssd_ref`)
+//! * (d) hybrid: the NNStreamer pipeline embedding graph (c) as a filter
+//!
+//! Metrics per case: CPU %, throughput, latency, memory accesses (byte
+//! traffic — see DESIGN.md), peak memory.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::baselines::mediapipe_like::{CalculatorGraph, Packet};
+use crate::error::Result;
+use crate::metrics::{traffic, CpuTracker, MemInfo};
+use crate::nnfw::register_custom;
+use crate::pipeline::Pipeline;
+use crate::tensor::{Chunk, DType, TensorInfo};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum E4Case {
+    NnsOpt,
+    NnsRef,
+    MediaPipe,
+    Hybrid,
+}
+
+impl E4Case {
+    pub fn label(self) -> &'static str {
+        match self {
+            E4Case::NnsOpt => "(a) NNStreamer-a",
+            E4Case::NnsRef => "(b) NNStreamer-b",
+            E4Case::MediaPipe => "(c) MediaPipe",
+            E4Case::Hybrid => "(d) Hybrid",
+        }
+    }
+
+    pub fn all() -> [E4Case; 4] {
+        [
+            E4Case::NnsOpt,
+            E4Case::NnsRef,
+            E4Case::MediaPipe,
+            E4Case::Hybrid,
+        ]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct E4Config {
+    pub src_w: usize,
+    pub src_h: usize,
+    /// The paper feeds 1818 frames.
+    pub num_frames: u64,
+}
+
+impl Default for E4Config {
+    fn default() -> Self {
+        Self {
+            src_w: 320,
+            src_h: 240,
+            num_frames: 300,
+        }
+    }
+}
+
+/// One row set of Table III.
+#[derive(Debug, Clone, Default)]
+pub struct E4Row {
+    pub label: String,
+    pub cpu_percent: f64,
+    pub throughput_fps: f64,
+    pub latency_ms: f64,
+    /// Byte traffic through the streaming layer (the perf "memory access"
+    /// substitute), in millions.
+    pub mem_access_m: f64,
+    pub mem_mib: f64,
+}
+
+fn nns_launch(cfg: &E4Config, variant: &str) -> String {
+    format!(
+        "videotestsrc pattern=ball width={w} height={h} framerate=1000 num-buffers={n} is-live=false ! \
+         videoconvert format=RGB ! videoscale width=96 height=96 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255 ! \
+         tensor_filter framework=xla model=ssd_{variant} accelerator=cpu ! \
+         tensor_decoder mode=bounding_boxes option1=ssd option2=0.5 ! \
+         fakesink name=out",
+        w = cfg.src_w,
+        h = cfg.src_h,
+        n = cfg.num_frames,
+    )
+}
+
+/// Run an NNStreamer case (a or b).
+fn run_nns(cfg: &E4Config, variant: &str, label: &str) -> Result<E4Row> {
+    let mem_before = MemInfo::read().vm_rss_kib;
+    let tr0 = traffic::snapshot();
+    let cpu = CpuTracker::start();
+    let mut p = Pipeline::parse(&nns_launch(cfg, variant))?;
+    let report = p.run()?;
+    let tr = traffic::since(tr0);
+    let mem_after = MemInfo::read().vm_rss_kib;
+    let out = report.element("out").unwrap();
+    Ok(E4Row {
+        label: label.to_string(),
+        cpu_percent: cpu.cpu_percent(),
+        throughput_fps: out.buffers_in() as f64 / report.wall.as_secs_f64(),
+        // per-frame latency along the processing chain (sum of element
+        // means on the path)
+        latency_ms: report
+            .elements
+            .iter()
+            .filter(|e| e.buffers_in() > 0)
+            .map(|e| e.latency().mean.as_secs_f64() * 1e3)
+            .sum(),
+        mem_access_m: tr.total() as f64 / 1e6,
+        mem_mib: ((mem_after.saturating_sub(mem_before)) as f64 / 1024.0).max(0.0),
+    })
+}
+
+/// Run the MediaPipe-like case (c).
+fn run_mediapipe(cfg: &E4Config) -> Result<E4Row> {
+    let mem_before = MemInfo::read().vm_rss_kib;
+    let tr0 = traffic::snapshot();
+    let cpu = CpuTracker::start();
+    let mut graph = CalculatorGraph::object_detection(cfg.src_w, cfg.src_h)?;
+    let t0 = Instant::now();
+    let mut lat_sum = 0.0f64;
+    let mut done = 0u64;
+    for n in 0..cfg.num_frames {
+        let rgb = crate::video::pattern::generate_rgb(
+            crate::video::Pattern::Ball,
+            cfg.src_w,
+            cfg.src_h,
+            n,
+        );
+        let data: Vec<f32> = rgb.iter().map(|&v| v as f32).collect();
+        traffic::count_write(data.len() * 4);
+        let f0 = Instant::now();
+        // FlowLimiter: frames offered while a detection is in flight are
+        // dropped; in this synchronous harness we run to idle each frame
+        if graph.add_frame(Packet {
+            ts_us: n,
+            data: Arc::new(data),
+        }) {
+            graph.run_until_idle()?;
+            lat_sum += f0.elapsed().as_secs_f64() * 1e3;
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let tr = traffic::since(tr0);
+    let mem_after = MemInfo::read().vm_rss_kib;
+    Ok(E4Row {
+        label: E4Case::MediaPipe.label().to_string(),
+        cpu_percent: cpu.cpu_percent(),
+        throughput_fps: done as f64 / wall,
+        latency_ms: lat_sum / done.max(1) as f64,
+        mem_access_m: tr.total() as f64 / 1e6,
+        mem_mib: ((mem_after.saturating_sub(mem_before)) as f64 / 1024.0).max(0.0),
+    })
+}
+
+/// Run the hybrid case (d): NNStreamer pipeline embedding the MediaPipe
+/// graph as a tensor_filter (framework=custom).
+fn run_hybrid(cfg: &E4Config) -> Result<E4Row> {
+    // the embedded graph re-runs its (now lighter) pre-processing on the
+    // already pre-processed 96x96 frame, then infers with its pinned NNFW
+    let graph = Arc::new(Mutex::new(CalculatorGraph::object_detection(96, 96)?));
+    let g2 = graph.clone();
+    register_custom(
+        "mediapipe_embedded",
+        vec![TensorInfo::new(DType::F32, [3, 96, 96, 1])],
+        vec![TensorInfo::new(DType::F32, [1])],
+        move |ins| {
+            let data = ins[0].to_f32_vec()?;
+            // MediaPipe expects 0..255 floats; the NNS pipeline normalized
+            let scaled: Vec<f32> = data.iter().map(|v| v * 255.0).collect();
+            let mut g = g2.lock().unwrap();
+            if g.add_frame(Packet {
+                ts_us: 0,
+                data: Arc::new(scaled),
+            }) {
+                let outs = g.run_until_idle()?;
+                let n = outs.last().map(|p| p.data.len()).unwrap_or(0);
+                return Ok(vec![Chunk::from_f32(&[n as f32])]);
+            }
+            Ok(vec![Chunk::from_f32(&[0.0])])
+        },
+    );
+    let mem_before = MemInfo::read().vm_rss_kib;
+    let tr0 = traffic::snapshot();
+    let cpu = CpuTracker::start();
+    let desc = format!(
+        "videotestsrc pattern=ball width={w} height={h} framerate=1000 num-buffers={n} is-live=false ! \
+         videoconvert format=RGB ! videoscale width=96 height=96 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255 ! \
+         tensor_filter framework=custom model=mediapipe_embedded ! \
+         fakesink name=out",
+        w = cfg.src_w,
+        h = cfg.src_h,
+        n = cfg.num_frames,
+    );
+    let mut p = Pipeline::parse(&desc)?;
+    let report = p.run()?;
+    let tr = traffic::since(tr0);
+    let mem_after = MemInfo::read().vm_rss_kib;
+    let out = report.element("out").unwrap();
+    Ok(E4Row {
+        label: E4Case::Hybrid.label().to_string(),
+        cpu_percent: cpu.cpu_percent(),
+        throughput_fps: out.buffers_in() as f64 / report.wall.as_secs_f64(),
+        latency_ms: report
+            .elements
+            .iter()
+            .filter(|e| e.buffers_in() > 0)
+            .map(|e| e.latency().mean.as_secs_f64() * 1e3)
+            .sum(),
+        mem_access_m: tr.total() as f64 / 1e6,
+        mem_mib: ((mem_after.saturating_sub(mem_before)) as f64 / 1024.0).max(0.0),
+    })
+}
+
+/// Run one Table III case.
+pub fn run_case(cfg: &E4Config, case: E4Case) -> Result<E4Row> {
+    crate::nnfw::set_cpu_rate_flops(0); // desktop PC: no CPU envelope
+    match case {
+        E4Case::NnsOpt => run_nns(cfg, "opt", E4Case::NnsOpt.label()),
+        E4Case::NnsRef => run_nns(cfg, "ref", E4Case::NnsRef.label()),
+        E4Case::MediaPipe => run_mediapipe(cfg),
+        E4Case::Hybrid => run_hybrid(cfg),
+    }
+}
+
+/// The pre-processor-only comparison (E4's 25% / 40% numbers): returns
+/// ((nns_cpu_s, nns_real_s), (mp_cpu_s, mp_real_s)).
+pub fn preprocessor_comparison(
+    cfg: &E4Config,
+    frames: u64,
+) -> Result<((f64, f64), (f64, f64))> {
+    // NNStreamer path: off-the-shelf videoscale + converter + transform
+    let desc = format!(
+        "videotestsrc pattern=ball width={w} height={h} framerate=100000 num-buffers={n} is-live=false ! \
+         videoconvert format=RGB ! videoscale width=96 height=96 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255 ! \
+         fakesink name=out",
+        w = cfg.src_w,
+        h = cfg.src_h,
+        n = frames,
+    );
+    let cpu = CpuTracker::start();
+    let t0 = Instant::now();
+    let mut p = Pipeline::parse(&desc)?;
+    p.run()?;
+    let nns_real = t0.elapsed().as_secs_f64();
+    let nns_cpu = cpu.cpu_percent() / 100.0 * cpu.elapsed_secs();
+
+    let (mp_cpu, mp_real) =
+        CalculatorGraph::preprocess_only(cfg.src_w, cfg.src_h, frames)?;
+    Ok(((nns_cpu, nns_real), (mp_cpu, mp_real)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> E4Config {
+        E4Config {
+            src_w: 160,
+            src_h: 120,
+            num_frames: 6,
+        }
+    }
+
+    #[test]
+    fn all_cases_run() {
+        for case in E4Case::all() {
+            let row = run_case(&quick(), case).unwrap();
+            assert!(row.throughput_fps > 0.0, "{case:?}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn opt_beats_ref() {
+        let cfg = E4Config {
+            num_frames: 10,
+            ..quick()
+        };
+        let a = run_case(&cfg, E4Case::NnsOpt).unwrap();
+        let b = run_case(&cfg, E4Case::NnsRef).unwrap();
+        assert!(
+            a.throughput_fps > b.throughput_fps,
+            "opt {} <= ref {}",
+            a.throughput_fps,
+            b.throughput_fps
+        );
+    }
+
+    #[test]
+    fn preprocessor_gap() {
+        let ((_, nns_real), (_, mp_real)) =
+            preprocessor_comparison(&quick(), 40).unwrap();
+        assert!(
+            mp_real > nns_real,
+            "MediaPipe-like preprocessing should be slower: {mp_real} vs {nns_real}"
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Scenario applications: the paper's E1–E4 pipelines and the MTCNN
+//! post-processing substrate.
+
+pub mod e1;
+pub mod e2_ars;
+pub mod e3_mtcnn;
+pub mod e4;
+pub mod postproc;

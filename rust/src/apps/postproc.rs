@@ -1,0 +1,292 @@
+//! MTCNN post-processing: non-maximum suppression, bounding-box
+//! regression, image-patch extraction.
+//!
+//! The paper notes its E3 NNStreamer implementation re-implements these
+//! (1004 of its 1959 lines); they run as `framework=custom` tensor_filter
+//! stages between the P/R/O-Net model filters (the N/B/I boxes of Fig 4).
+
+use crate::elements::decoder::DetBox;
+
+/// Intersection-over-union of two center-format boxes.
+pub fn iou(a: &DetBox, b: &DetBox) -> f32 {
+    let (ax0, ax1) = (a.x - a.w / 2.0, a.x + a.w / 2.0);
+    let (ay0, ay1) = (a.y - a.h / 2.0, a.y + a.h / 2.0);
+    let (bx0, bx1) = (b.x - b.w / 2.0, b.x + b.w / 2.0);
+    let (by0, by1) = (b.y - b.h / 2.0, b.y + b.h / 2.0);
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let union = a.w * a.h + b.w * b.h - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Greedy non-maximum suppression (descending score, drop above
+/// `iou_threshold`). Returns surviving boxes in score order.
+pub fn nms(mut boxes: Vec<DetBox>, iou_threshold: f32) -> Vec<DetBox> {
+    boxes.sort_by(|a, b| b.score.total_cmp(&a.score));
+    let mut keep: Vec<DetBox> = Vec::new();
+    'cand: for b in boxes {
+        for k in &keep {
+            if iou(k, &b) > iou_threshold {
+                continue 'cand;
+            }
+        }
+        keep.push(b);
+    }
+    keep
+}
+
+/// Class-aware NMS: suppression applies only within the same class.
+pub fn nms_per_class(boxes: Vec<DetBox>, iou_threshold: f32) -> Vec<DetBox> {
+    let mut classes: Vec<usize> = boxes.iter().map(|b| b.class).collect();
+    classes.sort_unstable();
+    classes.dedup();
+    let mut out = Vec::new();
+    for c in classes {
+        let cls: Vec<DetBox> = boxes.iter().copied().filter(|b| b.class == c).collect();
+        out.extend(nms(cls, iou_threshold));
+    }
+    out.sort_by(|a, b| b.score.total_cmp(&a.score));
+    out
+}
+
+/// Apply bounding-box regression offsets: `reg = (dx0, dy0, dx1, dy1)`
+/// scaled by box size (MTCNN convention, corner format internally).
+pub fn apply_bbr(b: &DetBox, reg: &[f32; 4]) -> DetBox {
+    let (x0, y0) = (b.x - b.w / 2.0, b.y - b.h / 2.0);
+    let (x1, y1) = (b.x + b.w / 2.0, b.y + b.h / 2.0);
+    let nx0 = x0 + reg[0] * b.w;
+    let ny0 = y0 + reg[1] * b.h;
+    let nx1 = x1 + reg[2] * b.w;
+    let ny1 = y1 + reg[3] * b.h;
+    DetBox {
+        x: ((nx0 + nx1) / 2.0).clamp(0.0, 1.0),
+        y: ((ny0 + ny1) / 2.0).clamp(0.0, 1.0),
+        w: (nx1 - nx0).clamp(0.0, 1.0),
+        h: (ny1 - ny0).clamp(0.0, 1.0),
+        score: b.score,
+        class: b.class,
+    }
+}
+
+/// Make a box square (MTCNN rerects candidates before patch extraction).
+pub fn square(b: &DetBox) -> DetBox {
+    let side = b.w.max(b.h);
+    DetBox {
+        w: side,
+        h: side,
+        ..*b
+    }
+}
+
+/// Generate P-Net candidates from its fully-convolutional output maps.
+///
+/// `prob` is (h, w, 2) NHWC-flattened face probabilities, `reg` (h, w, 4)
+/// regressions. The P-Net sliding window has cell size 12 and stride 2 in
+/// the *scaled* image; `scale` maps scaled coords back to the base frame.
+/// Returned coords are relative ([0,1]) to the base frame.
+pub fn pnet_candidates(
+    prob: &[f32],
+    reg: &[f32],
+    map_h: usize,
+    map_w: usize,
+    scale: f32,
+    base_w: f32,
+    base_h: f32,
+    threshold: f32,
+) -> Vec<DetBox> {
+    const CELL: f32 = 12.0;
+    const STRIDE: f32 = 2.0;
+    let mut out = Vec::new();
+    for gy in 0..map_h {
+        for gx in 0..map_w {
+            let p_face = prob[(gy * map_w + gx) * 2 + 1];
+            if p_face < threshold {
+                continue;
+            }
+            let r = &reg[(gy * map_w + gx) * 4..(gy * map_w + gx) * 4 + 4];
+            // window in scaled-image pixels
+            let x0 = gx as f32 * STRIDE / scale;
+            let y0 = gy as f32 * STRIDE / scale;
+            let side = CELL / scale;
+            let b = DetBox {
+                x: (x0 + side / 2.0) / base_w,
+                y: (y0 + side / 2.0) / base_h,
+                w: side / base_w,
+                h: side / base_h,
+                score: p_face,
+                class: 0,
+            };
+            out.push(apply_bbr(&b, &[r[0], r[1], r[2], r[3]]));
+        }
+    }
+    out
+}
+
+/// Extract and bilinearly resize patches from an f32 NHWC frame.
+///
+/// `frame` is (H, W, C) f32; boxes are relative center-format. The output
+/// is a dense (batch, size, size, C) block, zero-padded to `batch` (AOT
+/// executables need static batch shapes — see DESIGN.md).
+pub fn extract_patches(
+    frame: &[f32],
+    fh: usize,
+    fw: usize,
+    ch: usize,
+    boxes: &[DetBox],
+    size: usize,
+    batch: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; batch * size * size * ch];
+    for (bi, b) in boxes.iter().take(batch).enumerate() {
+        let b = square(b);
+        let x0 = ((b.x - b.w / 2.0) * fw as f32).max(0.0);
+        let y0 = ((b.y - b.h / 2.0) * fh as f32).max(0.0);
+        let pw = (b.w * fw as f32).max(1.0);
+        let ph = (b.h * fh as f32).max(1.0);
+        for oy in 0..size {
+            for ox in 0..size {
+                // bilinear sample from the source rect
+                let sx = x0 + (ox as f32 + 0.5) / size as f32 * pw - 0.5;
+                let sy = y0 + (oy as f32 + 0.5) / size as f32 * ph - 0.5;
+                let x_lo = sx.floor().max(0.0) as usize;
+                let y_lo = sy.floor().max(0.0) as usize;
+                let x_hi = (x_lo + 1).min(fw - 1);
+                let y_hi = (y_lo + 1).min(fh - 1);
+                let wx = (sx - x_lo as f32).clamp(0.0, 1.0);
+                let wy = (sy - y_lo as f32).clamp(0.0, 1.0);
+                for c in 0..ch {
+                    let s = |y: usize, x: usize| frame[(y * fw + x) * ch + c];
+                    let top = s(y_lo.min(fh - 1), x_lo.min(fw - 1)) * (1.0 - wx)
+                        + s(y_lo.min(fh - 1), x_hi) * wx;
+                    let bot = s(y_hi, x_lo.min(fw - 1)) * (1.0 - wx) + s(y_hi, x_hi) * wx;
+                    out[((bi * size + oy) * size + ox) * ch + c] =
+                        top * (1.0 - wy) + bot * wy;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bx(x: f32, y: f32, w: f32, h: f32, score: f32) -> DetBox {
+        DetBox {
+            x,
+            y,
+            w,
+            h,
+            score,
+            class: 0,
+        }
+    }
+
+    #[test]
+    fn iou_identical_is_one() {
+        let a = bx(0.5, 0.5, 0.2, 0.2, 1.0);
+        assert!((iou(&a, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        let a = bx(0.2, 0.2, 0.1, 0.1, 1.0);
+        let b = bx(0.8, 0.8, 0.1, 0.1, 1.0);
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn nms_keeps_best_of_overlapping() {
+        let boxes = vec![
+            bx(0.5, 0.5, 0.2, 0.2, 0.9),
+            bx(0.51, 0.5, 0.2, 0.2, 0.8), // overlaps the first
+            bx(0.1, 0.1, 0.1, 0.1, 0.7),  // separate
+        ];
+        let keep = nms(boxes, 0.4);
+        assert_eq!(keep.len(), 2);
+        assert_eq!(keep[0].score, 0.9);
+        assert_eq!(keep[1].score, 0.7);
+    }
+
+    #[test]
+    fn nms_per_class_keeps_cross_class_overlaps() {
+        let mut a = bx(0.5, 0.5, 0.2, 0.2, 0.9);
+        let mut b = bx(0.5, 0.5, 0.2, 0.2, 0.8);
+        a.class = 0;
+        b.class = 1;
+        let keep = nms_per_class(vec![a, b], 0.4);
+        assert_eq!(keep.len(), 2);
+    }
+
+    #[test]
+    fn bbr_shifts_box() {
+        let b = bx(0.5, 0.5, 0.2, 0.2, 1.0);
+        let out = apply_bbr(&b, &[0.1, 0.1, 0.1, 0.1]);
+        // both corners moved by +0.1*w: center shifts, size constant
+        assert!((out.x - 0.52).abs() < 1e-6);
+        assert!((out.w - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn square_takes_max_side() {
+        let b = square(&bx(0.5, 0.5, 0.1, 0.3, 1.0));
+        assert_eq!(b.w, 0.3);
+        assert_eq!(b.h, 0.3);
+    }
+
+    #[test]
+    fn pnet_candidates_thresholded() {
+        // 2x2 map, only cell (1,0) above threshold
+        let prob = vec![
+            0.9, 0.1, //
+            0.8, 0.2, //
+            0.05, 0.95, //
+            0.9, 0.1,
+        ];
+        let reg = vec![0.0; 16];
+        let cands = pnet_candidates(&prob, &reg, 2, 2, 1.0, 100.0, 100.0, 0.5);
+        assert_eq!(cands.len(), 1);
+        let c = cands[0];
+        assert!((c.score - 0.95).abs() < 1e-6);
+        // cell (gy=1, gx=0): window at (0, 2) size 12
+        assert!((c.w - 0.12).abs() < 1e-6);
+    }
+
+    #[test]
+    fn patches_constant_frame() {
+        // constant frame -> constant patches regardless of box
+        let frame = vec![0.7f32; 20 * 20 * 3];
+        let boxes = vec![bx(0.5, 0.5, 0.4, 0.4, 1.0)];
+        let p = extract_patches(&frame, 20, 20, 3, &boxes, 8, 2);
+        assert_eq!(p.len(), 2 * 8 * 8 * 3);
+        for v in &p[..8 * 8 * 3] {
+            assert!((v - 0.7).abs() < 1e-4);
+        }
+        // padded second slot is zero
+        assert!(p[8 * 8 * 3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn patches_preserve_gradient_direction() {
+        // horizontal gradient frame: patch should be monotonic in x
+        let (h, w) = (16, 16);
+        let mut frame = vec![0f32; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                frame[y * w + x] = x as f32 / w as f32;
+            }
+        }
+        let boxes = vec![bx(0.5, 0.5, 0.5, 0.5, 1.0)];
+        let p = extract_patches(&frame, h, w, 1, &boxes, 4, 1);
+        for row in 0..4 {
+            let r = &p[row * 4..(row + 1) * 4];
+            assert!(r.windows(2).all(|v| v[0] <= v[1] + 1e-6), "{r:?}");
+        }
+    }
+}

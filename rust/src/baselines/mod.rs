@@ -1,0 +1,10 @@
+//! Baseline implementations the paper compares against.
+//!
+//! * [`control`] — the "conventional implementation": a straight-line
+//!   serial per-frame loop (E1/E2/E3's Control columns).
+//! * [`mediapipe_like`] — a re-implemented calculator-graph framework with
+//!   its own (naive) pre-processors and a FlowLimiter back-edge, pinned to
+//!   the `*_ref` NNFW build (E4's MediaPipe column).
+
+pub mod control;
+pub mod mediapipe_like;

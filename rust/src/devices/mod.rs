@@ -1,0 +1,95 @@
+//! Simulated compute devices (see DESIGN.md "Substitutions").
+//!
+//! * [`NpuSim`] — the Vivante-NPU stand-in of E1: a single hardware queue
+//!   serviced by one dedicated thread. Models sharing the NPU serialize on
+//!   the queue; work done there is charged to the NPU domain, not app CPU.
+//! * [`DeviceClass`] — E3's device classes (mid-end embedded / high-end
+//!   embedded / PC) as deterministic compute-throttle factors.
+
+pub mod npu;
+
+pub use npu::{NpuSim, NpuStats};
+
+use crate::error::{Error, Result};
+
+/// E3 device classes: a slowdown factor applied to model execution,
+/// reproducing the A (Exynos 5422) / B (Exynos 8890) / C (i7 PC) spread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// Device A — mid-end embedded (largest slowdown).
+    MidEmbedded,
+    /// Device B — high-end automotive embedded.
+    HighEmbedded,
+    /// Device C — PC (no slowdown; the measurement baseline).
+    Pc,
+}
+
+impl DeviceClass {
+    /// Multiplier on compute time relative to this machine.
+    /// Calibrated from the paper's Control rows (Table II): PC≈10.4 fps,
+    /// B≈1.48 fps (~7x slower), A≈1.01 fps (~10.3x slower).
+    pub fn throttle_factor(self) -> f64 {
+        match self {
+            DeviceClass::MidEmbedded => 10.3,
+            DeviceClass::HighEmbedded => 7.0,
+            DeviceClass::Pc => 1.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "a" | "mid" | "mid-embedded" => DeviceClass::MidEmbedded,
+            "b" | "high" | "high-embedded" => DeviceClass::HighEmbedded,
+            "c" | "pc" => DeviceClass::Pc,
+            other => return Err(Error::Parse(format!("unknown device class {other:?}"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceClass::MidEmbedded => "A/mid-embedded",
+            DeviceClass::HighEmbedded => "B/high-embedded",
+            DeviceClass::Pc => "C/PC",
+        }
+    }
+
+    /// Sleep for `(factor - 1) * busy` to emulate the slower device: the
+    /// computation itself already took `busy` on this machine.
+    pub fn throttle(self, busy: std::time::Duration) -> std::time::Duration {
+        let extra = busy.mul_f64(self.throttle_factor() - 1.0);
+        if !extra.is_zero() {
+            std::thread::sleep(extra);
+        }
+        busy.mul_f64(self.throttle_factor())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn parse_classes() {
+        assert_eq!(DeviceClass::parse("a").unwrap(), DeviceClass::MidEmbedded);
+        assert_eq!(DeviceClass::parse("PC").unwrap(), DeviceClass::Pc);
+        assert!(DeviceClass::parse("q").is_err());
+    }
+
+    #[test]
+    fn pc_has_no_throttle() {
+        let t0 = std::time::Instant::now();
+        let total = DeviceClass::Pc.throttle(Duration::from_millis(50));
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        assert_eq!(total, Duration::from_millis(50));
+    }
+
+    #[test]
+    fn mid_embedded_stretches_time() {
+        let t0 = std::time::Instant::now();
+        let total = DeviceClass::MidEmbedded.throttle(Duration::from_millis(5));
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(40), "waited {waited:?}");
+        assert!(total >= Duration::from_millis(51));
+    }
+}

@@ -1,0 +1,336 @@
+//! The element model: pipe-and-filter nodes with pads, properties, caps.
+//!
+//! Mirrors GStreamer's model at the granularity the paper relies on:
+//! elements expose *sink pads* (inputs) and *src pads* (outputs), declare
+//! caps through negotiation, and process timestamped [`Buffer`]s. The
+//! scheduler (in [`crate::pipeline`]) runs each element on its own thread
+//! and connects pads with bounded channels — GStreamer's "transparent and
+//! easy-to-apply parallelism" (§III requirement list).
+
+pub mod registry;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::metrics::stats::{Domain, ElementStats};
+use crate::tensor::{Buffer, Caps};
+
+pub use registry::Registry;
+
+/// What flows over a link.
+#[derive(Debug, Clone)]
+pub enum Item {
+    Buffer(Buffer),
+    /// End of stream on this pad.
+    Eos,
+}
+
+/// Element processing verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flow {
+    Continue,
+    /// The element is done (it will produce nothing more): the scheduler
+    /// sends EOS downstream and drains remaining input.
+    Eos,
+}
+
+/// How a link delivers when the consumer is saturated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// Block the producer (GStreamer's default push semantics).
+    Blocking,
+    /// Drop the new buffer (a `leaky=downstream` queue).
+    Leaky,
+}
+
+/// Sending half of a link, as seen from the producer's src pad.
+pub struct LinkSender {
+    tx: SyncSender<(usize, Item)>,
+    dst_pad: usize,
+    delivery: Delivery,
+    dst_stats: Arc<ElementStats>,
+}
+
+impl LinkSender {
+    pub fn new(
+        tx: SyncSender<(usize, Item)>,
+        dst_pad: usize,
+        delivery: Delivery,
+        dst_stats: Arc<ElementStats>,
+    ) -> Self {
+        Self {
+            tx,
+            dst_pad,
+            delivery,
+            dst_stats,
+        }
+    }
+
+    /// Deliver an item; returns false if the consumer is gone.
+    fn send(&self, item: Item) -> bool {
+        match self.delivery {
+            Delivery::Blocking => self.tx.send((self.dst_pad, item)).is_ok(),
+            Delivery::Leaky => match self.tx.try_send((self.dst_pad, item)) {
+                Ok(()) => true,
+                Err(TrySendError::Full(_)) => {
+                    self.dst_stats.record_drop();
+                    true
+                }
+                Err(TrySendError::Disconnected(_)) => false,
+            },
+        }
+    }
+}
+
+/// Execution context handed to an element while it processes.
+pub struct Ctx {
+    /// One sender per src pad (index = src pad index).
+    pub(crate) outputs: Vec<Option<LinkSender>>,
+    pub(crate) stats: Arc<ElementStats>,
+    pub(crate) stop: Arc<AtomicBool>,
+    /// Pipeline epoch: pts 0 corresponds to this instant (live pacing and
+    /// end-to-end latency measurement).
+    pub epoch: Instant,
+    /// Which compute domain this element's busy time is charged to.
+    pub domain: Domain,
+    /// Time spent waiting (blocked pushes, live pacing) during the current
+    /// handle()/generate() call — subtracted from busy-time accounting.
+    pub(crate) idle_ns: u64,
+}
+
+impl Ctx {
+    /// Push a buffer out of src pad `pad`. Time spent blocked on a
+    /// saturated downstream is accounted as idle, not busy.
+    pub fn push(&mut self, pad: usize, buf: Buffer) -> Result<()> {
+        let bytes = buf.size();
+        let Some(sender) = self.outputs.get(pad).and_then(Option::as_ref) else {
+            // unlinked src pad: buffer is discarded (like an unlinked tee pad)
+            return Ok(());
+        };
+        let t0 = Instant::now();
+        let delivered = sender.send(Item::Buffer(buf));
+        self.idle_ns += t0.elapsed().as_nanos() as u64;
+        if !delivered {
+            // downstream went away: treat as stop request, not an error
+            self.stop.store(true, Ordering::Relaxed);
+        }
+        self.stats.record_out(bytes);
+        Ok(())
+    }
+
+    /// Sleep until the pipeline-relative deadline `pts_ns`, accounted as
+    /// idle time (live-source pacing).
+    pub fn sleep_until_pts(&mut self, pts_ns: u64) {
+        let t0 = Instant::now();
+        crate::pipeline::scheduler::sleep_until(self.epoch, pts_ns);
+        self.idle_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Take and reset the idle counter (scheduler-internal).
+    pub(crate) fn take_idle(&mut self) -> std::time::Duration {
+        std::time::Duration::from_nanos(std::mem::take(&mut self.idle_ns))
+    }
+
+    /// Send EOS on one src pad.
+    pub fn push_eos(&mut self, pad: usize) {
+        if let Some(sender) = self.outputs.get(pad).and_then(Option::as_ref) {
+            let _ = sender.send(Item::Eos);
+        }
+    }
+
+    pub fn n_src_pads(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Has someone requested pipeline stop?
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Request pipeline stop (used by sinks with `num-buffers` style caps).
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> &Arc<ElementStats> {
+        &self.stats
+    }
+}
+
+/// A pipeline element. Implementations live in [`crate::elements`].
+pub trait Element: Send {
+    /// Factory name (e.g. `"tensor_converter"`).
+    fn type_name(&self) -> &'static str;
+
+    /// Set a property from its string form (parser and builder API).
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        Err(Error::Property {
+            key: key.into(),
+            value: value.into(),
+            reason: format!("{} has no such property", self.type_name()),
+        })
+    }
+
+    /// Number of sink pads this element expects given `n` attached links
+    /// (fixed-pad elements must return their fixed count).
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(1)
+    }
+
+    /// Src pad specification.
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Fixed(1)
+    }
+
+    /// Caps negotiation: given fixed caps on each sink pad, return the caps
+    /// produced on each src pad. Called once before the pipeline starts,
+    /// in topological order. `n_srcs` is the number of attached src links.
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>>;
+
+    /// Downstream caps hint: when a source is directly followed by a
+    /// capsfilter, the graph proposes the filter's caps before the
+    /// topological negotiation pass (the limited upstream direction of
+    /// GStreamer's bidirectional negotiation — `videotestsrc ! video/x-raw,
+    /// width=...` configures the source). Default: ignore.
+    fn propose_caps(&mut self, _downstream: &Caps) -> Result<()> {
+        Ok(())
+    }
+
+    /// For capsfilter-like elements: the restriction they will impose
+    /// (drives the [`propose_caps`](Element::propose_caps) pre-pass).
+    fn proposed_caps(&self) -> Option<Caps> {
+        None
+    }
+
+    /// Process one input item arriving on sink pad `pad`.
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow>;
+
+    /// Called when every sink pad has seen EOS: flush buffered state.
+    fn flush(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Sources produce data instead of consuming it. Return `Flow::Eos`
+    /// when exhausted.
+    fn generate(&mut self, _ctx: &mut Ctx) -> Result<Flow> {
+        Err(Error::element(self.type_name(), "not a source"))
+    }
+
+    fn is_source(&self) -> bool {
+        matches!(self.sink_pads(), PadSpec::Fixed(0))
+    }
+
+    /// Capacity of this element's input channel (a `queue` raises it).
+    fn preferred_input_capacity(&self) -> usize {
+        1
+    }
+
+    /// Link delivery into this element ([`Delivery::Leaky`] for leaky queues).
+    fn input_delivery(&self) -> Delivery {
+        Delivery::Blocking
+    }
+
+    /// Compute domain for busy-time accounting (NPU-bound filters override).
+    fn domain(&self) -> Domain {
+        Domain::Cpu
+    }
+
+    /// Downcast support for elements with post-run state (sinks that
+    /// collected data, sources handing out push handles).
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+}
+
+/// Pad cardinality specification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PadSpec {
+    Fixed(usize),
+    /// Request pads: 1..=max (mux, tee, demux, ...).
+    Variadic { max: usize },
+}
+
+impl PadSpec {
+    /// Validate an attached-link count against the spec.
+    pub fn accepts(&self, n: usize) -> bool {
+        match *self {
+            PadSpec::Fixed(k) => n == k,
+            PadSpec::Variadic { max } => n >= 1 && n <= max,
+        }
+    }
+}
+
+/// Receiver side of an element's input (all sink pads share one channel;
+/// items are tagged with the pad index).
+pub type InputReceiver = Receiver<(usize, Item)>;
+
+/// Test-only helper: drive a single element directly, collecting outputs.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::metrics::stats::Domain;
+    use crate::tensor::Buffer;
+    use std::sync::mpsc::sync_channel;
+
+    /// Build a ctx with `n_src` outputs and return (ctx, receivers).
+    pub fn ctx_with_outputs(n_src: usize) -> (Ctx, Vec<Receiver<(usize, Item)>>) {
+        let stats = crate::metrics::stats::ElementStats::new("testutil");
+        let mut outputs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n_src {
+            let (tx, rx) = sync_channel(1024);
+            outputs.push(Some(LinkSender::new(
+                tx,
+                0,
+                Delivery::Blocking,
+                stats.clone(),
+            )));
+            rxs.push(rx);
+        }
+        let ctx = Ctx {
+            outputs,
+            stats,
+            stop: Arc::new(AtomicBool::new(false)),
+            epoch: Instant::now(),
+            domain: Domain::Cpu,
+            idle_ns: 0,
+        };
+        (ctx, rxs)
+    }
+
+    /// Feed one buffer into sink pad `pad`; drain buffers from src pad 0.
+    pub fn drive(el: &mut dyn Element, pad: usize, buf: Buffer) -> Vec<Buffer> {
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        el.handle(pad, Item::Buffer(buf), &mut ctx).unwrap();
+        drop(ctx);
+        drain(&rxs[0])
+    }
+
+    pub fn drain(rx: &Receiver<(usize, Item)>) -> Vec<Buffer> {
+        let mut out = Vec::new();
+        while let Ok((_, item)) = rx.try_recv() {
+            if let Item::Buffer(b) = item {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padspec_accepts() {
+        assert!(PadSpec::Fixed(2).accepts(2));
+        assert!(!PadSpec::Fixed(2).accepts(1));
+        assert!(PadSpec::Variadic { max: 16 }.accepts(1));
+        assert!(PadSpec::Variadic { max: 16 }.accepts(16));
+        assert!(!PadSpec::Variadic { max: 16 }.accepts(17));
+        assert!(!PadSpec::Variadic { max: 16 }.accepts(0));
+    }
+}

@@ -1,0 +1,85 @@
+//! Element factory registry — the plugin system.
+//!
+//! Like GStreamer's registry, element types are registered by name and
+//! instantiated by factories; anything (including user code) can register
+//! additional elements, which is how NNStreamer itself extends GStreamer.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::element::Element;
+use crate::error::{Error, Result};
+
+type Factory = Box<dyn Fn() -> Box<dyn Element> + Send + Sync>;
+
+static REGISTRY: Lazy<Mutex<HashMap<String, Factory>>> = Lazy::new(|| {
+    let mut m: HashMap<String, Factory> = HashMap::new();
+    crate::elements::register_builtins(&mut m);
+    Mutex::new(m)
+});
+
+/// Handle to the global element registry.
+pub struct Registry;
+
+impl Registry {
+    /// Instantiate an element by factory name.
+    pub fn make(name: &str) -> Result<Box<dyn Element>> {
+        let reg = REGISTRY.lock().unwrap();
+        let factory = reg
+            .get(name)
+            .ok_or_else(|| Error::Parse(format!("no such element factory {name:?}")))?;
+        Ok(factory())
+    }
+
+    /// Register a custom element factory (plug-in style).
+    pub fn register<F>(name: &str, factory: F)
+    where
+        F: Fn() -> Box<dyn Element> + Send + Sync + 'static,
+    {
+        REGISTRY
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Box::new(factory));
+    }
+
+    /// Names of all registered factories (sorted).
+    pub fn names() -> Vec<String> {
+        let mut v: Vec<String> = REGISTRY.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn exists(name: &str) -> bool {
+        REGISTRY.lock().unwrap().contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_registered() {
+        for name in [
+            "tensor_converter",
+            "tensor_filter",
+            "tensor_mux",
+            "tensor_demux",
+            "tensor_aggregator",
+            "tensor_transform",
+            "queue",
+            "tee",
+            "videotestsrc",
+            "appsink",
+        ] {
+            assert!(Registry::exists(name), "missing builtin {name}");
+        }
+    }
+
+    #[test]
+    fn unknown_element_errors() {
+        assert!(Registry::make("definitely_not_an_element").is_err());
+    }
+}

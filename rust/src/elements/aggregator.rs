@@ -1,0 +1,241 @@
+//! `tensor_aggregator`: temporal frame aggregation (§III).
+//!
+//! Merges `frames-in` consecutive frames into one output every
+//! `frames-flush` frames (default: no overlap, i.e. flush = frames-in),
+//! concatenating along `frames-dim`. E.g. merging frames 2i and 2i+1
+//! halves the frame rate — the paper's LSTM/Seq2seq building block, and
+//! the rate-decimation stage of the ARS pipeline (E2, Fig 3).
+
+use std::collections::VecDeque;
+
+use crate::element::{Ctx, Element, Flow, Item};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
+
+use super::sources::parse_usize;
+
+pub struct TensorAggregator {
+    frames_in: usize,
+    frames_flush: usize,
+    frames_dim: usize,
+    window: VecDeque<Buffer>,
+    in_info: Option<TensorInfo>,
+    out_info: Option<TensorInfo>,
+}
+
+impl TensorAggregator {
+    pub fn new() -> Self {
+        Self {
+            frames_in: 2,
+            frames_flush: 0,
+            frames_dim: 0,
+            window: VecDeque::new(),
+            in_info: None,
+            out_info: None,
+        }
+    }
+
+    fn flush_count(&self) -> usize {
+        if self.frames_flush == 0 {
+            self.frames_in
+        } else {
+            self.frames_flush
+        }
+    }
+
+    fn emit(&mut self, ctx: &mut Ctx) -> Result<()> {
+        let info = self.in_info.as_ref().unwrap();
+        let esz = info.size_bytes();
+        let mut data = Vec::with_capacity(esz * self.frames_in);
+        // concat along frames_dim: for dim 0..rank-1 we'd need interleaving;
+        // aggregation along the *major* (last) axis is plain concatenation.
+        // For minor axes, interleave elementwise rows.
+        let rank = info.dims.rank();
+        if self.frames_dim >= rank || self.frames_dim == rank.saturating_sub(1) + 1 {
+            // append as a new major axis (or beyond current rank)
+            for b in self.window.iter().take(self.frames_in) {
+                data.extend_from_slice(b.chunk().as_bytes());
+            }
+        } else {
+            // interleave along an existing axis
+            let ebytes = info.dtype.size_bytes();
+            let inner: usize = (0..self.frames_dim)
+                .map(|d| info.dims.dim_or_1(d))
+                .product::<usize>()
+                * ebytes;
+            let axis = info.dims.dim_or_1(self.frames_dim);
+            let row = axis * inner;
+            let outer = esz / row;
+            data.resize(esz * self.frames_in, 0);
+            let n = self.frames_in;
+            for (fi, b) in self.window.iter().take(n).enumerate() {
+                let src = b.chunk().as_bytes();
+                for o in 0..outer {
+                    let dst_off = o * row * n + fi * row;
+                    data[dst_off..dst_off + row]
+                        .copy_from_slice(&src[o * row..(o + 1) * row]);
+                }
+            }
+        }
+        let last = &self.window[self.frames_in - 1];
+        let mut out = Buffer::single(last.pts_ns, Chunk::from_vec(data));
+        out.seq = last.seq;
+        for _ in 0..self.flush_count().min(self.window.len()) {
+            self.window.pop_front();
+        }
+        ctx.push(0, out)
+    }
+}
+
+impl Default for TensorAggregator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorAggregator {
+    fn type_name(&self) -> &'static str {
+        "tensor_aggregator"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "frames-in" => self.frames_in = parse_usize(key, value)?.max(1),
+            "frames-flush" => self.frames_flush = parse_usize(key, value)?,
+            "frames-dim" => self.frames_dim = parse_usize(key, value)?,
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of tensor_aggregator".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Tensor { info, fps_millis } = &in_caps[0] else {
+            return Err(Error::Negotiation(format!(
+                "tensor_aggregator needs other/tensor input, got {}",
+                in_caps[0]
+            )));
+        };
+        self.in_info = Some(info.clone());
+        let rank = info.dims.rank();
+        let out_info = if self.frames_dim >= rank {
+            // new axis appended
+            TensorInfo::new(info.dtype, info.dims.with_dim(rank, self.frames_in))
+        } else {
+            TensorInfo::new(
+                info.dtype,
+                info.dims.with_dim(
+                    self.frames_dim,
+                    info.dims.dim_or_1(self.frames_dim) * self.frames_in,
+                ),
+            )
+        };
+        self.out_info = Some(out_info.clone());
+        // output rate = input rate / flush
+        let out_fps = fps_millis / self.flush_count().max(1) as u64;
+        Ok(vec![
+            Caps::Tensor {
+                info: out_info,
+                fps_millis: out_fps
+            };
+            n_srcs.max(1)
+        ])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        self.window.push_back(buf);
+        if self.window.len() >= self.frames_in {
+            self.emit(ctx)?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::{ctx_with_outputs, drain};
+    use crate::tensor::DType;
+
+    #[test]
+    fn aggregates_pairs_halving_rate() {
+        let mut a = TensorAggregator::new();
+        a.set_property("frames-in", "2").unwrap();
+        a.set_property("frames-dim", "1").unwrap();
+        let caps = Caps::tensor(DType::F32, [2], 30.0);
+        let out = a.negotiate(&[caps], 1).unwrap();
+        match &out[0] {
+            Caps::Tensor { info, fps_millis } => {
+                assert_eq!(info.dims.as_slice(), &[2, 2]);
+                assert_eq!(*fps_millis, 15000, "rate halves");
+            }
+            _ => panic!(),
+        }
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        for i in 0..4 {
+            let b = Buffer::from_f32(i * 10, &[i as f32, i as f32 + 0.5]);
+            a.handle(0, Item::Buffer(b), &mut ctx).unwrap();
+        }
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].chunk().as_f32().unwrap(), &[0.0, 0.5, 1.0, 1.5]);
+        assert_eq!(out[1].chunk().as_f32().unwrap(), &[2.0, 2.5, 3.0, 3.5]);
+        // latest timestamp of each pair
+        assert_eq!(out[0].pts_ns, 10);
+        assert_eq!(out[1].pts_ns, 30);
+    }
+
+    #[test]
+    fn sliding_window_with_flush() {
+        let mut a = TensorAggregator::new();
+        a.set_property("frames-in", "3").unwrap();
+        a.set_property("frames-flush", "1").unwrap();
+        a.set_property("frames-dim", "1").unwrap();
+        let caps = Caps::tensor(DType::F32, [1], 10.0);
+        a.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        for i in 0..5 {
+            a.handle(0, Item::Buffer(Buffer::from_f32(i, &[i as f32])), &mut ctx)
+                .unwrap();
+        }
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        // windows [0,1,2], [1,2,3], [2,3,4]
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[1].chunk().as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn interleave_minor_axis() {
+        let mut a = TensorAggregator::new();
+        a.set_property("frames-in", "2").unwrap();
+        a.set_property("frames-dim", "0").unwrap();
+        let caps = Caps::tensor(DType::F32, [2, 2], 0.0);
+        let out_caps = a.negotiate(&[caps], 1).unwrap();
+        match &out_caps[0] {
+            Caps::Tensor { info, .. } => assert_eq!(info.dims.as_slice(), &[4, 2]),
+            _ => panic!(),
+        }
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        a.handle(0, Item::Buffer(Buffer::from_f32(0, &[1., 2., 3., 4.])), &mut ctx)
+            .unwrap();
+        a.handle(0, Item::Buffer(Buffer::from_f32(1, &[5., 6., 7., 8.])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        // rows interleaved along minor axis
+        assert_eq!(
+            out[0].chunk().as_f32().unwrap(),
+            &[1., 2., 5., 6., 3., 4., 7., 8.]
+        );
+    }
+}

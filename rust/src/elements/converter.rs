@@ -1,0 +1,130 @@
+//! `tensor_converter`: media streams → `other/tensor` streams (§III).
+//!
+//! Video frames become uint8 tensors of dimension `C:W:H` (NNStreamer's
+//! dimension order for video); audio becomes `S:C` int16; text/flatbuf
+//! become opaque byte tensors. NV12 input is converted to RGB first, like
+//! NNStreamer's converter requires RGB/GRAY8 (we fold the conversion in
+//! for convenience, as real pipelines put `videoconvert` before it).
+
+use crate::element::{Ctx, Element, Flow, Item};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo, VideoFormat, VideoInfo};
+use crate::video::convert::convert_raw;
+
+pub struct TensorConverter {
+    in_video: Option<VideoInfo>,
+    in_audio: Option<crate::tensor::AudioInfo>,
+}
+
+impl TensorConverter {
+    pub fn new() -> Self {
+        Self {
+            in_video: None,
+            in_audio: None,
+        }
+    }
+}
+
+impl Default for TensorConverter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorConverter {
+    fn type_name(&self) -> &'static str {
+        "tensor_converter"
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let out = match &in_caps[0] {
+            Caps::Video(v) => {
+                self.in_video = Some(v.clone());
+                let ch = v.format.channels();
+                Caps::Tensor {
+                    info: TensorInfo::new(DType::U8, Dims::new(&[ch, v.width, v.height])),
+                    fps_millis: v.fps_millis,
+                }
+            }
+            Caps::Audio(a) => {
+                self.in_audio = Some(a.clone());
+                Caps::Tensor {
+                    info: TensorInfo::new(
+                        DType::I16,
+                        Dims::new(&[a.samples_per_buffer, a.channels]),
+                    ),
+                    fps_millis: 0,
+                }
+            }
+            Caps::Text | Caps::FlatBuf => Caps::Tensor {
+                info: TensorInfo::new(DType::U8, Dims::new(&[1])),
+                fps_millis: 0,
+            },
+            // tensors pass through unchanged (converter is idempotent)
+            t @ (Caps::Tensor { .. } | Caps::Tensors { .. }) => t.clone(),
+            Caps::Any => {
+                return Err(Error::Negotiation(
+                    "tensor_converter needs fixed upstream caps".into(),
+                ))
+            }
+        };
+        Ok(vec![out; n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(mut buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        if let Some(v) = &self.in_video {
+            let chunk = if v.format == VideoFormat::Nv12 {
+                let rgb = convert_raw(
+                    VideoFormat::Nv12,
+                    VideoFormat::Rgb,
+                    v.width,
+                    v.height,
+                    buf.chunk().as_bytes(),
+                );
+                Chunk::from_vec(rgb)
+            } else {
+                // zero-copy: u8 video payload is already the tensor payload
+                buf.chunks.remove(0)
+            };
+            let mut out = Buffer::single(buf.pts_ns, chunk);
+            out.seq = buf.seq;
+            out.duration_ns = buf.duration_ns;
+            ctx.push(0, out)?;
+        } else {
+            // audio/text/tensor: payload is forwarded as-is
+            ctx.push(0, buf)?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn video_to_tensor_caps() {
+        let mut c = TensorConverter::new();
+        let caps = Caps::parse("video/x-raw,format=RGB,width=64,height=48,framerate=30").unwrap();
+        let out = c.negotiate(&[caps], 1).unwrap();
+        match &out[0] {
+            Caps::Tensor { info, fps_millis } => {
+                assert_eq!(info.dims.as_slice(), &[3, 64, 48]);
+                assert_eq!(info.dtype, DType::U8);
+                assert_eq!(*fps_millis, 30000);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tensor_passthrough() {
+        let mut c = TensorConverter::new();
+        let caps = Caps::tensor(DType::F32, [4, 4], 10.0);
+        let out = c.negotiate(&[caps.clone()], 1).unwrap();
+        assert_eq!(out[0], caps);
+    }
+}

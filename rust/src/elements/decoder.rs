@@ -1,0 +1,454 @@
+//! `tensor_decoder`: tensor streams → media/other streams (§III).
+//!
+//! Sub-plugins (property `mode=`):
+//! * `image_labeling` — classifier probs → text label index stream
+//! * `bounding_boxes` — detector raw output → framed box list
+//!   (`option1=yolo|ssd` selects the head layout; thresholds via option2)
+//! * `direct_video` — tensor → RGB overlay frame (transparent background
+//!   with detection boxes, as in Fig 1)
+//! * `flatbuf` — framed binary serialization of the tensors (the paper's
+//!   Flatbuf/Protobuf interconnection for heterogeneous pipelines)
+
+use crate::element::{Ctx, Element, Flow, Item};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo, VideoFormat, VideoInfo};
+
+use super::sources::{parse_f64, parse_usize};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Mode {
+    ImageLabeling,
+    BoundingBoxes,
+    DirectVideo,
+    FlatBuf,
+}
+
+pub struct TensorDecoder {
+    mode: Mode,
+    /// head layout for bounding_boxes: "yolo" or "ssd"
+    head: String,
+    threshold: f32,
+    /// output canvas for direct_video
+    width: usize,
+    height: usize,
+    in_infos: Vec<TensorInfo>,
+}
+
+/// One decoded detection box, serialized into the output tensor stream as
+/// 6 f32 values: (x, y, w, h, score, class).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DetBox {
+    pub x: f32,
+    pub y: f32,
+    pub w: f32,
+    pub h: f32,
+    pub score: f32,
+    pub class: usize,
+}
+
+/// Serialize boxes into a flat f32 chunk (6 per box, prefixed by count).
+pub fn encode_boxes(boxes: &[DetBox]) -> Chunk {
+    let mut data = Vec::with_capacity(1 + boxes.len() * 6);
+    data.push(boxes.len() as f32);
+    for b in boxes {
+        data.extend_from_slice(&[b.x, b.y, b.w, b.h, b.score, b.class as f32]);
+    }
+    Chunk::from_f32(&data)
+}
+
+/// Parse boxes back from a decoded chunk.
+pub fn decode_boxes(chunk: &Chunk) -> Result<Vec<DetBox>> {
+    let data = chunk.to_f32_vec()?;
+    if data.is_empty() {
+        return Ok(vec![]);
+    }
+    let n = data[0] as usize;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let o = 1 + i * 6;
+        if o + 6 > data.len() {
+            break;
+        }
+        out.push(DetBox {
+            x: data[o],
+            y: data[o + 1],
+            w: data[o + 2],
+            h: data[o + 3],
+            score: data[o + 4],
+            class: data[o + 5] as usize,
+        });
+    }
+    Ok(out)
+}
+
+/// Max number of boxes the decoder emits per frame (fixed-size stream).
+pub const MAX_BOXES: usize = 32;
+
+impl TensorDecoder {
+    pub fn new() -> Self {
+        Self {
+            mode: Mode::ImageLabeling,
+            head: "ssd".to_string(),
+            threshold: 0.5,
+            width: 320,
+            height: 240,
+            in_infos: Vec::new(),
+        }
+    }
+
+    fn decode_yolo(&self, raw: &[f32], grid: usize, anchors: usize, classes: usize) -> Vec<DetBox> {
+        // raw layout: (grid, grid, anchors*(5+classes)) NHWC-flattened
+        let stride = anchors * (5 + classes);
+        let mut boxes = Vec::new();
+        for gy in 0..grid {
+            for gx in 0..grid {
+                let cell = &raw[(gy * grid + gx) * stride..(gy * grid + gx + 1) * stride];
+                for a in 0..anchors {
+                    let o = a * (5 + classes);
+                    let obj = sigmoid(cell[o + 4]);
+                    if obj < self.threshold {
+                        continue;
+                    }
+                    let (mut best_c, mut best_p) = (0usize, f32::MIN);
+                    for c in 0..classes {
+                        if cell[o + 5 + c] > best_p {
+                            best_p = cell[o + 5 + c];
+                            best_c = c;
+                        }
+                    }
+                    boxes.push(DetBox {
+                        x: (gx as f32 + sigmoid(cell[o])) / grid as f32,
+                        y: (gy as f32 + sigmoid(cell[o + 1])) / grid as f32,
+                        w: cell[o + 2].exp().min(grid as f32) / grid as f32,
+                        h: cell[o + 3].exp().min(grid as f32) / grid as f32,
+                        score: obj,
+                        class: best_c,
+                    });
+                }
+            }
+        }
+        boxes.truncate(MAX_BOXES);
+        boxes
+    }
+
+    fn decode_ssd(&self, locs: &[f32], confs: &[f32], n_anchors: usize, classes: usize) -> Vec<DetBox> {
+        let mut boxes = Vec::new();
+        for i in 0..n_anchors {
+            // softmax over classes; class 0 is background
+            let c = &confs[i * classes..(i + 1) * classes];
+            let m = c.iter().fold(f32::MIN, |a, &b| a.max(b));
+            let exps: Vec<f32> = c.iter().map(|&v| (v - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let (mut best_c, mut best_p) = (0usize, 0.0f32);
+            for (ci, &e) in exps.iter().enumerate().skip(1) {
+                let p = e / z;
+                if p > best_p {
+                    best_p = p;
+                    best_c = ci;
+                }
+            }
+            if best_p < self.threshold {
+                continue;
+            }
+            let l = &locs[i * 4..(i + 1) * 4];
+            // anchor grid: row-major square-ish layout in [0,1]
+            let side = (n_anchors as f32).sqrt().ceil() as usize;
+            let ax = (i % side) as f32 / side as f32;
+            let ay = (i / side) as f32 / side as f32;
+            boxes.push(DetBox {
+                x: (ax + sigmoid(l[0]) / side as f32).clamp(0.0, 1.0),
+                y: (ay + sigmoid(l[1]) / side as f32).clamp(0.0, 1.0),
+                w: sigmoid(l[2]),
+                h: sigmoid(l[3]),
+                score: best_p,
+                class: best_c,
+            });
+            if boxes.len() >= MAX_BOXES {
+                break;
+            }
+        }
+        boxes
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl Default for TensorDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorDecoder {
+    fn type_name(&self) -> &'static str {
+        "tensor_decoder"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "mode" => {
+                self.mode = match value {
+                    "image_labeling" => Mode::ImageLabeling,
+                    "bounding_boxes" => Mode::BoundingBoxes,
+                    "direct_video" => Mode::DirectVideo,
+                    "flatbuf" => Mode::FlatBuf,
+                    _ => {
+                        return Err(Error::Property {
+                            key: key.into(),
+                            value: value.into(),
+                            reason: "image_labeling|bounding_boxes|direct_video|flatbuf".into(),
+                        })
+                    }
+                }
+            }
+            "option1" => self.head = value.to_string(),
+            "option2" | "threshold" => self.threshold = parse_f64(key, value)? as f32,
+            "width" => self.width = parse_usize(key, value)?,
+            "height" => self.height = parse_usize(key, value)?,
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of tensor_decoder".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let (infos, fps) = match &in_caps[0] {
+            Caps::Tensor { info, fps_millis } => (vec![info.clone()], *fps_millis),
+            Caps::Tensors { infos, fps_millis } => (infos.clone(), *fps_millis),
+            other => {
+                return Err(Error::Negotiation(format!(
+                    "tensor_decoder needs tensor input, got {other}"
+                )))
+            }
+        };
+        self.in_infos = infos;
+        let out = match self.mode {
+            Mode::ImageLabeling => Caps::Tensor {
+                info: TensorInfo::new(DType::F32, Dims::new(&[2])),
+                fps_millis: fps,
+            },
+            Mode::BoundingBoxes => Caps::Tensor {
+                info: TensorInfo::new(DType::F32, Dims::new(&[1 + MAX_BOXES * 6])),
+                fps_millis: fps,
+            },
+            Mode::DirectVideo => Caps::Video(VideoInfo {
+                format: VideoFormat::Rgb,
+                width: self.width,
+                height: self.height,
+                fps_millis: fps,
+            }),
+            Mode::FlatBuf => Caps::FlatBuf,
+        };
+        Ok(vec![out; n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let out_chunk = match self.mode {
+            Mode::ImageLabeling => {
+                let probs = buf.chunk().to_f32_vec()?;
+                let (mut best, mut best_p) = (0usize, f32::MIN);
+                for (i, &p) in probs.iter().enumerate() {
+                    if p > best_p {
+                        best_p = p;
+                        best = i;
+                    }
+                }
+                Chunk::from_f32(&[best as f32, best_p])
+            }
+            Mode::BoundingBoxes => {
+                let boxes = match self.head.as_str() {
+                    "yolo" => {
+                        let raw = buf.chunk().to_f32_vec()?;
+                        // infer grid from input info: dims minor-first
+                        // (ch : gw : gh : 1)
+                        let dims = &self.in_infos[0].dims;
+                        let grid = dims.dim_or_1(1);
+                        let ch = dims.dim_or_1(0);
+                        let anchors = 2;
+                        let classes = ch / anchors - 5;
+                        self.decode_yolo(&raw, grid, anchors, classes)
+                    }
+                    "ssd" => {
+                        if buf.chunks.len() != 2 {
+                            return Err(Error::element(
+                                "tensor_decoder",
+                                "ssd head needs (locs, confs) tensor pair",
+                            ));
+                        }
+                        let locs = buf.chunks[0].to_f32_vec()?;
+                        let confs = buf.chunks[1].to_f32_vec()?;
+                        let n = locs.len() / 4;
+                        let classes = confs.len() / n.max(1);
+                        self.decode_ssd(&locs, &confs, n, classes)
+                    }
+                    other => {
+                        return Err(Error::element(
+                            "tensor_decoder",
+                            format!("unknown box head {other:?}"),
+                        ))
+                    }
+                };
+                let mut data = vec![0f32; 1 + MAX_BOXES * 6];
+                data[0] = boxes.len().min(MAX_BOXES) as f32;
+                for (i, b) in boxes.iter().take(MAX_BOXES).enumerate() {
+                    let o = 1 + i * 6;
+                    data[o..o + 6]
+                        .copy_from_slice(&[b.x, b.y, b.w, b.h, b.score, b.class as f32]);
+                }
+                Chunk::from_f32(&data)
+            }
+            Mode::DirectVideo => {
+                // render boxes onto a transparent (black) canvas
+                let boxes = decode_boxes(buf.chunk())?;
+                let mut canvas = vec![0u8; self.width * self.height * 3];
+                for b in &boxes {
+                    draw_box(&mut canvas, self.width, self.height, b);
+                }
+                Chunk::from_vec(canvas)
+            }
+            Mode::FlatBuf => {
+                // framed binary: [n_tensors][len_i...][payload_i...]
+                let mut out: Vec<u8> = Vec::new();
+                out.extend((buf.chunks.len() as u32).to_le_bytes());
+                for c in &buf.chunks {
+                    out.extend((c.len() as u32).to_le_bytes());
+                }
+                for c in &buf.chunks {
+                    out.extend_from_slice(c.as_bytes());
+                }
+                Chunk::from_vec(out)
+            }
+        };
+        let mut out = Buffer::single(buf.pts_ns, out_chunk);
+        out.seq = buf.seq;
+        ctx.push(0, out)?;
+        Ok(Flow::Continue)
+    }
+}
+
+fn draw_box(canvas: &mut [u8], w: usize, h: usize, b: &DetBox) {
+    let x0 = ((b.x - b.w / 2.0).max(0.0) * w as f32) as usize;
+    let x1 = (((b.x + b.w / 2.0).min(1.0)) * w as f32) as usize;
+    let y0 = ((b.y - b.h / 2.0).max(0.0) * h as f32) as usize;
+    let y1 = (((b.y + b.h / 2.0).min(1.0)) * h as f32) as usize;
+    let color = [(40 + b.class * 50 % 200) as u8, 220, 60];
+    for x in x0..x1.min(w) {
+        for &y in &[y0, y1.saturating_sub(1)] {
+            if y < h {
+                let o = (y * w + x) * 3;
+                canvas[o..o + 3].copy_from_slice(&color);
+            }
+        }
+    }
+    for y in y0..y1.min(h) {
+        for &x in &[x0, x1.saturating_sub(1)] {
+            if x < w {
+                let o = (y * w + x) * 3;
+                canvas[o..o + 3].copy_from_slice(&color);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::{ctx_with_outputs, drain};
+
+    #[test]
+    fn image_labeling_argmax() {
+        let mut d = TensorDecoder::new();
+        d.set_property("mode", "image_labeling").unwrap();
+        let caps = Caps::tensor(DType::F32, [4], 0.0);
+        d.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        d.handle(
+            0,
+            Item::Buffer(Buffer::from_f32(0, &[0.1, 0.7, 0.15, 0.05])),
+            &mut ctx,
+        )
+        .unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        let v = out[0].chunk().to_f32_vec().unwrap();
+        assert_eq!(v[0], 1.0);
+        assert!((v[1] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn boxes_roundtrip() {
+        let boxes = vec![
+            DetBox {
+                x: 0.5,
+                y: 0.5,
+                w: 0.2,
+                h: 0.1,
+                score: 0.9,
+                class: 3,
+            },
+            DetBox {
+                x: 0.1,
+                y: 0.2,
+                w: 0.05,
+                h: 0.05,
+                score: 0.6,
+                class: 0,
+            },
+        ];
+        let c = encode_boxes(&boxes);
+        let back = decode_boxes(&c).unwrap();
+        assert_eq!(back, boxes);
+    }
+
+    #[test]
+    fn direct_video_draws_something() {
+        let mut d = TensorDecoder::new();
+        d.set_property("mode", "direct_video").unwrap();
+        d.set_property("width", "32").unwrap();
+        d.set_property("height", "32").unwrap();
+        let caps = Caps::tensor(DType::F32, [7], 0.0);
+        d.negotiate(&[caps], 1).unwrap();
+        let boxes = vec![DetBox {
+            x: 0.5,
+            y: 0.5,
+            w: 0.5,
+            h: 0.5,
+            score: 1.0,
+            class: 0,
+        }];
+        let buf = Buffer::single(0, encode_boxes(&boxes));
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        d.handle(0, Item::Buffer(buf), &mut ctx).unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        let px = out[0].chunk().as_bytes_unaccounted();
+        assert_eq!(px.len(), 32 * 32 * 3);
+        assert!(px.iter().any(|&v| v > 0), "box drawn");
+    }
+
+    #[test]
+    fn flatbuf_framing() {
+        let mut d = TensorDecoder::new();
+        d.set_property("mode", "flatbuf").unwrap();
+        let caps = Caps::tensor(DType::F32, [2], 0.0);
+        d.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        d.handle(0, Item::Buffer(Buffer::from_f32(0, &[1.0, 2.0])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        let bytes = out[0].chunk().as_bytes_unaccounted();
+        assert_eq!(u32::from_le_bytes(bytes[0..4].try_into().unwrap()), 1);
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 8);
+    }
+}

@@ -1,0 +1,240 @@
+//! `tensor_filter`: neural networks as pipeline filters — the paper's
+//! central element.
+//!
+//! Properties:
+//! * `framework=` `xla` | `custom` | `passthrough` (the sub-plugin)
+//! * `model=` artifact name (xla) or registered function name (custom)
+//! * `accelerator=` `cpu` (default) | `npu`
+//! * `device-class=` `a` | `b` | `c` (E3's hardware classes; default c)
+//!
+//! Input caps must carry the same element count/type the model expects
+//! (insert `tensor_transform mode=typecast` upstream as real NNStreamer
+//! pipelines do); dims are checked element-count-wise with rank-agnostic
+//! semantics.
+
+use crate::devices::DeviceClass;
+use crate::element::{Ctx, Element, Flow, Item};
+use crate::error::{Error, Result};
+use crate::metrics::stats::Domain;
+use crate::nnfw::{Accelerator, CustomNnfw, Nnfw, PassthroughNnfw, XlaNnfw};
+use crate::tensor::{Buffer, Caps, TensorInfo};
+
+pub struct TensorFilter {
+    framework: String,
+    model_name: String,
+    accelerator: Accelerator,
+    class: DeviceClass,
+    plugin: Option<Box<dyn Nnfw>>,
+    out_fps: u64,
+}
+
+impl TensorFilter {
+    pub fn new() -> Self {
+        Self {
+            framework: "xla".to_string(),
+            model_name: String::new(),
+            accelerator: Accelerator::Cpu,
+            class: DeviceClass::Pc,
+            plugin: None,
+            out_fps: 0,
+        }
+    }
+
+    fn load_plugin(&mut self, in_infos: &[TensorInfo]) -> Result<()> {
+        let plugin: Box<dyn Nnfw> = match self.framework.as_str() {
+            "xla" => Box::new(XlaNnfw::load(
+                &self.model_name,
+                self.accelerator,
+                self.class,
+            )?),
+            "custom" => Box::new(CustomNnfw::load(&self.model_name)?),
+            "passthrough" => Box::new(PassthroughNnfw {
+                info: in_infos.to_vec(),
+            }),
+            other => {
+                return Err(Error::Negotiation(format!(
+                    "tensor_filter: unknown framework {other:?}"
+                )))
+            }
+        };
+        // validate input compatibility (element count + dtype per tensor)
+        let expect = plugin.inputs();
+        if expect.len() != in_infos.len() {
+            return Err(Error::Negotiation(format!(
+                "tensor_filter {}: model wants {} input tensors, caps carry {}",
+                self.model_name,
+                expect.len(),
+                in_infos.len()
+            )));
+        }
+        for (have, want) in in_infos.iter().zip(&expect) {
+            if have.dtype != want.dtype {
+                return Err(Error::Negotiation(format!(
+                    "tensor_filter {}: input dtype {} != model {}",
+                    self.model_name, have.dtype, want.dtype
+                )));
+            }
+            if have.dims.num_elements() != want.dims.num_elements() {
+                return Err(Error::Negotiation(format!(
+                    "tensor_filter {}: input {} has {} elements, model wants {} ({})",
+                    self.model_name,
+                    have.dims,
+                    have.dims.num_elements(),
+                    want.dims.num_elements(),
+                    want.dims
+                )));
+            }
+        }
+        self.plugin = Some(plugin);
+        Ok(())
+    }
+}
+
+impl Default for TensorFilter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorFilter {
+    fn type_name(&self) -> &'static str {
+        "tensor_filter"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "framework" => self.framework = value.to_string(),
+            "model" => self.model_name = value.to_string(),
+            "accelerator" => self.accelerator = Accelerator::parse(value)?,
+            "device-class" => self.class = DeviceClass::parse(value)?,
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of tensor_filter".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn domain(&self) -> Domain {
+        if self.accelerator == Accelerator::Npu {
+            Domain::Npu
+        } else {
+            Domain::Cpu
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let (in_infos, fps) = match &in_caps[0] {
+            Caps::Tensor { info, fps_millis } => (vec![info.clone()], *fps_millis),
+            Caps::Tensors { infos, fps_millis } => (infos.clone(), *fps_millis),
+            other => {
+                return Err(Error::Negotiation(format!(
+                    "tensor_filter needs tensor input, got {other}"
+                )))
+            }
+        };
+        self.load_plugin(&in_infos)?;
+        self.out_fps = fps;
+        let outs = self.plugin.as_ref().unwrap().outputs();
+        let caps = if outs.len() == 1 {
+            Caps::Tensor {
+                info: outs[0].clone(),
+                fps_millis: fps,
+            }
+        } else {
+            Caps::Tensors {
+                infos: outs,
+                fps_millis: fps,
+            }
+        };
+        Ok(vec![caps; n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let plugin = self
+            .plugin
+            .as_ref()
+            .ok_or_else(|| Error::element("tensor_filter", "not negotiated"))?;
+        let refs: Vec<&crate::tensor::Chunk> = buf.chunks.iter().collect();
+        let outs = plugin.invoke(&refs).map_err(|e| {
+            Error::element(
+                format!("tensor_filter({})", self.model_name),
+                e.to_string(),
+            )
+        })?;
+        let mut out = Buffer::new(buf.pts_ns, outs);
+        out.seq = buf.seq;
+        out.duration_ns = buf.duration_ns;
+        ctx.push(0, out)?;
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::{ctx_with_outputs, drain};
+    use crate::tensor::{Chunk, DType};
+
+    #[test]
+    fn passthrough_filter() {
+        let mut f = TensorFilter::new();
+        f.set_property("framework", "passthrough").unwrap();
+        let caps = Caps::tensor(DType::F32, [4], 30.0);
+        let out_caps = f.negotiate(&[caps.clone()], 1).unwrap();
+        assert!(out_caps[0].compatible(&caps));
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        f.handle(0, Item::Buffer(Buffer::from_f32(7, &[1., 2., 3., 4.])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        assert_eq!(out[0].pts_ns, 7);
+        assert_eq!(out[0].chunk().as_f32().unwrap(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn xla_filter_end_to_end() {
+        let mut f = TensorFilter::new();
+        f.set_property("framework", "xla").unwrap();
+        f.set_property("model", "ars_a_opt").unwrap();
+        // ars_a: (1,128,3) f32 -> minor-first stream dims 3:128:1
+        let caps = Caps::tensor(DType::F32, [3, 128, 1], 10.0);
+        let out_caps = f.negotiate(&[caps], 1).unwrap();
+        match &out_caps[0] {
+            Caps::Tensor { info, .. } => {
+                assert_eq!(info.dims.num_elements(), 8);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        let input = Buffer::single(0, Chunk::from_f32(&vec![0.3f32; 128 * 3]));
+        f.handle(0, Item::Buffer(input), &mut ctx).unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        let probs = out[0].chunk().to_f32_vec().unwrap();
+        assert_eq!(probs.len(), 8);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rejects_wrong_input_size() {
+        let mut f = TensorFilter::new();
+        f.set_property("model", "ars_a_opt").unwrap();
+        let caps = Caps::tensor(DType::F32, [7], 10.0);
+        assert!(f.negotiate(&[caps], 1).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let mut f = TensorFilter::new();
+        f.set_property("model", "ars_a_opt").unwrap();
+        let caps = Caps::tensor(DType::U8, [3, 128, 1], 10.0);
+        assert!(f.negotiate(&[caps], 1).is_err());
+    }
+}

@@ -1,0 +1,396 @@
+//! Stream-flow utilities: `queue`, `tee`, `valve`, `capsfilter`,
+//! `input-selector`, `output-selector`.
+//!
+//! These are the "dynamic flow control" components the paper lists as
+//! product requirements (§III): valves and selectors let application
+//! threads steer flows; `tensor_if` (see [`super::tensor_if`]) steers on
+//! tensor values without application involvement.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::element::{Ctx, Delivery, Element, Flow, Item, PadSpec};
+use crate::error::{Error, Result};
+use crate::tensor::Caps;
+
+use super::sources::parse_usize;
+
+/// Decouples producer from consumer by raising the input-channel capacity.
+/// Properties: `max-size-buffers` (default 16), `leaky` (drop when full).
+pub struct Queue {
+    capacity: usize,
+    leaky: bool,
+}
+
+impl Queue {
+    pub fn new() -> Self {
+        Self {
+            capacity: 16,
+            leaky: false,
+        }
+    }
+}
+
+impl Default for Queue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for Queue {
+    fn type_name(&self) -> &'static str {
+        "queue"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "max-size-buffers" => self.capacity = parse_usize(key, value)?.max(1),
+            "leaky" => self.leaky = value == "downstream" || value == "true" || value == "2",
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of queue".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn preferred_input_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn input_delivery(&self) -> Delivery {
+        if self.leaky {
+            Delivery::Leaky
+        } else {
+            Delivery::Blocking
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        Ok(vec![in_caps[0].clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            ctx.push(0, buf)?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Fans one stream out to N branches (buffers are shared, not copied:
+/// chunks are refcounted).
+pub struct Tee;
+
+impl Tee {
+    pub fn new() -> Self {
+        Tee
+    }
+}
+
+impl Default for Tee {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for Tee {
+    fn type_name(&self) -> &'static str {
+        "tee"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: 64 }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        Ok(vec![in_caps[0].clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            let n = ctx.n_src_pads();
+            for pad in 0..n {
+                ctx.push(pad, buf.clone())?;
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Shared on/off switch usable from application threads.
+#[derive(Clone, Default)]
+pub struct ValveControl(Arc<AtomicBool>);
+
+impl ValveControl {
+    pub fn set_open(&self, open: bool) {
+        self.0.store(open, Ordering::Relaxed);
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Drops all buffers while closed. Properties: `drop` (initial state,
+/// `true` = dropping). Use [`Valve::control`] for runtime switching.
+pub struct Valve {
+    control: ValveControl,
+}
+
+impl Valve {
+    pub fn new() -> Self {
+        let control = ValveControl::default();
+        control.set_open(true);
+        Self { control }
+    }
+
+    pub fn control(&self) -> ValveControl {
+        self.control.clone()
+    }
+}
+
+impl Default for Valve {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for Valve {
+    fn type_name(&self) -> &'static str {
+        "valve"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "drop" => {
+                self.control.set_open(!(value == "true" || value == "1"));
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of valve".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        Ok(vec![in_caps[0].clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            if self.control.is_open() {
+                ctx.push(0, buf)?;
+            } else {
+                ctx.stats().record_drop();
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Restricts caps on a link (`video/x-raw,format=RGB,...` in launch syntax).
+pub struct CapsFilter {
+    caps: Caps,
+}
+
+impl CapsFilter {
+    pub fn new() -> Self {
+        Self { caps: Caps::Any }
+    }
+}
+
+impl Default for CapsFilter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for CapsFilter {
+    fn type_name(&self) -> &'static str {
+        "capsfilter"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "caps" => {
+                self.caps = Caps::parse(value)?;
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of capsfilter".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let fixed = in_caps[0].intersect(&self.caps)?;
+        Ok(vec![fixed; n_srcs.max(1)])
+    }
+
+    fn proposed_caps(&self) -> Option<Caps> {
+        if self.caps == Caps::Any {
+            None
+        } else {
+            Some(self.caps.clone())
+        }
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            ctx.push(0, buf)?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Shared pad selector for input-/output-selector.
+#[derive(Clone, Default)]
+pub struct SelectorControl(Arc<AtomicUsize>);
+
+impl SelectorControl {
+    pub fn select(&self, pad: usize) {
+        self.0.store(pad, Ordering::Relaxed);
+    }
+
+    pub fn selected(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// N inputs, 1 output: forwards only the active input pad.
+pub struct InputSelector {
+    control: SelectorControl,
+}
+
+impl InputSelector {
+    pub fn new() -> Self {
+        Self {
+            control: SelectorControl::default(),
+        }
+    }
+
+    pub fn control(&self) -> SelectorControl {
+        self.control.clone()
+    }
+}
+
+impl Default for InputSelector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for InputSelector {
+    fn type_name(&self) -> &'static str {
+        "input-selector"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: 16 }
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "active-pad" => {
+                self.control.select(parse_usize(key, value)?);
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of input-selector".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        // all inputs must be mutually compatible
+        for c in in_caps.iter().skip(1) {
+            if !in_caps[0].compatible(c) {
+                return Err(Error::Negotiation(format!(
+                    "input-selector inputs disagree: {} vs {}",
+                    in_caps[0], c
+                )));
+            }
+        }
+        Ok(vec![in_caps[0].clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            if pad == self.control.selected() {
+                ctx.push(0, buf)?;
+            } else {
+                ctx.stats().record_drop();
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// 1 input, N outputs: forwards to the active output pad only.
+pub struct OutputSelector {
+    control: SelectorControl,
+}
+
+impl OutputSelector {
+    pub fn new() -> Self {
+        Self {
+            control: SelectorControl::default(),
+        }
+    }
+
+    pub fn control(&self) -> SelectorControl {
+        self.control.clone()
+    }
+}
+
+impl Default for OutputSelector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for OutputSelector {
+    fn type_name(&self) -> &'static str {
+        "output-selector"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: 16 }
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "active-pad" => {
+                self.control.select(parse_usize(key, value)?);
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of output-selector".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        Ok(vec![in_caps[0].clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            let sel = self.control.selected().min(ctx.n_src_pads().saturating_sub(1));
+            ctx.push(sel, buf)?;
+        }
+        Ok(Flow::Continue)
+    }
+}

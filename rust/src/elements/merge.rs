@@ -1,0 +1,462 @@
+//! `tensor_merge` / `tensor_split`: dimension surgery across streams (§III).
+//!
+//! From two `3x4` streams, merge creates a `6x4`, `3x8`, or `3x4x2` stream
+//! (concatenation along a chosen axis); split is the inverse. Unlike
+//! mux/demux these *do* touch payload bytes (a single contiguous tensor
+//! must be produced).
+
+use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, Chunk, Dims, TensorInfo, MAX_TENSORS};
+
+use super::sources::parse_usize;
+use super::sync::{SyncPolicy, Synchronizer};
+
+/// N×`other/tensor` → 1×`other/tensor`, concatenated along `option` axis.
+/// Properties: `mode=linear` (only mode, NNStreamer-compatible),
+/// `option=<axis>`, `sync-mode`.
+pub struct TensorMerge {
+    axis: usize,
+    policy: SyncPolicy,
+    sync: Option<Synchronizer>,
+    in_infos: Vec<TensorInfo>,
+    out_info: Option<TensorInfo>,
+}
+
+impl TensorMerge {
+    pub fn new() -> Self {
+        Self {
+            axis: 0,
+            policy: SyncPolicy::Slowest,
+            sync: None,
+            in_infos: Vec::new(),
+            out_info: None,
+        }
+    }
+
+    /// Compute the merged TensorInfo for concatenation along `axis`.
+    fn merged_info(infos: &[TensorInfo], axis: usize) -> Result<TensorInfo> {
+        let first = &infos[0];
+        let rank = first.dims.rank().max(axis + 1);
+        for info in infos.iter().skip(1) {
+            if info.dtype != first.dtype {
+                return Err(Error::Negotiation(
+                    "tensor_merge inputs must share dtype".into(),
+                ));
+            }
+            for d in 0..rank {
+                if d != axis && info.dims.dim_or_1(d) != first.dims.dim_or_1(d) {
+                    return Err(Error::Negotiation(format!(
+                        "tensor_merge inputs disagree on dim {d}: {} vs {}",
+                        first.dims, info.dims
+                    )));
+                }
+            }
+        }
+        let total: usize = infos.iter().map(|i| i.dims.dim_or_1(axis)).sum();
+        let mut dims: Vec<usize> = (0..rank).map(|d| first.dims.dim_or_1(d)).collect();
+        dims[axis] = total;
+        Ok(TensorInfo::new(first.dtype, Dims::new(&dims)))
+    }
+}
+
+impl Default for TensorMerge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Concatenate raw tensor payloads along `axis` (minor-first dims).
+///
+/// Treat each tensor as [outer][axis_dim][inner] where inner = product of
+/// dims below `axis` and outer = product of dims above it.
+fn concat_axis(
+    parts: &[(&[u8], &TensorInfo)],
+    axis: usize,
+    out_info: &TensorInfo,
+) -> Vec<u8> {
+    let esz = out_info.dtype.size_bytes();
+    let inner: usize = (0..axis)
+        .map(|d| out_info.dims.dim_or_1(d))
+        .product::<usize>()
+        * esz;
+    let rank = out_info.dims.rank();
+    let outer: usize = ((axis + 1)..rank)
+        .map(|d| out_info.dims.dim_or_1(d))
+        .product();
+    let mut out = vec![0u8; out_info.size_bytes()];
+    let out_axis = out_info.dims.dim_or_1(axis);
+    let out_row = out_axis * inner;
+    let mut axis_off = 0usize;
+    for (data, info) in parts {
+        let a = info.dims.dim_or_1(axis);
+        let row = a * inner;
+        for o in 0..outer {
+            let src = &data[o * row..(o + 1) * row];
+            let dst_off = o * out_row + axis_off * inner;
+            out[dst_off..dst_off + row].copy_from_slice(src);
+        }
+        axis_off += a;
+    }
+    out
+}
+
+/// Slice a tensor into parts along `axis` with the given axis sizes.
+fn split_axis(
+    data: &[u8],
+    in_info: &TensorInfo,
+    axis: usize,
+    sizes: &[usize],
+) -> Vec<Vec<u8>> {
+    let esz = in_info.dtype.size_bytes();
+    let inner: usize = (0..axis)
+        .map(|d| in_info.dims.dim_or_1(d))
+        .product::<usize>()
+        * esz;
+    let rank = in_info.dims.rank().max(axis + 1);
+    let outer: usize = ((axis + 1)..rank)
+        .map(|d| in_info.dims.dim_or_1(d))
+        .product();
+    let in_axis = in_info.dims.dim_or_1(axis);
+    let in_row = in_axis * inner;
+    let mut outs = Vec::with_capacity(sizes.len());
+    let mut axis_off = 0usize;
+    for &a in sizes {
+        let row = a * inner;
+        let mut part = vec![0u8; row * outer];
+        for o in 0..outer {
+            let src_off = o * in_row + axis_off * inner;
+            part[o * row..(o + 1) * row].copy_from_slice(&data[src_off..src_off + row]);
+        }
+        outs.push(part);
+        axis_off += a;
+    }
+    outs
+}
+
+impl Element for TensorMerge {
+    fn type_name(&self) -> &'static str {
+        "tensor_merge"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: MAX_TENSORS }
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "mode" => {
+                if value != "linear" {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: "only mode=linear supported".into(),
+                    });
+                }
+                Ok(())
+            }
+            "option" => {
+                self.axis = parse_usize(key, value)?;
+                Ok(())
+            }
+            "sync-mode" | "sync_mode" => {
+                self.policy = SyncPolicy::parse(value)?;
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of tensor_merge".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let mut infos = Vec::new();
+        let mut fps = 0u64;
+        for c in in_caps {
+            match c {
+                Caps::Tensor { info, fps_millis } => {
+                    infos.push(info.clone());
+                    fps = fps.max(*fps_millis);
+                }
+                other => {
+                    return Err(Error::Negotiation(format!(
+                        "tensor_merge pads need other/tensor, got {other}"
+                    )))
+                }
+            }
+        }
+        let out = Self::merged_info(&infos, self.axis)?;
+        self.in_infos = infos;
+        self.out_info = Some(out.clone());
+        self.sync = Some(Synchronizer::new(self.policy, in_caps.len()));
+        Ok(vec![
+            Caps::Tensor {
+                info: out,
+                fps_millis: fps
+            };
+            n_srcs.max(1)
+        ])
+    }
+
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let sync = self
+            .sync
+            .as_mut()
+            .ok_or_else(|| Error::element("tensor_merge", "not negotiated"))?;
+        match item {
+            Item::Buffer(buf) => sync.push(pad, buf),
+            Item::Eos => sync.set_eos(pad),
+        }
+        let out_info = self.out_info.as_ref().unwrap();
+        while let Some(set) = sync.try_collect() {
+            let pts = set.iter().map(|b| b.pts_ns).max().unwrap_or(0);
+            let seq = set.iter().map(|b| b.seq).max().unwrap_or(0);
+            let datas: Vec<(&[u8], &TensorInfo)> = set
+                .iter()
+                .zip(&self.in_infos)
+                .map(|(b, i)| (b.chunk().as_bytes(), i))
+                .collect();
+            let merged = concat_axis(&datas, self.axis, out_info);
+            let mut out = Buffer::single(pts, Chunk::from_vec(merged));
+            out.seq = seq;
+            ctx.push(0, out)?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// 1×`other/tensor` → N×`other/tensor`, sliced along `option` axis with
+/// per-pad sizes from `tensorseg` (e.g. `tensorseg=3:3:2` splits axis into
+/// 3,3,2). Default: equal split across attached pads.
+pub struct TensorSplit {
+    axis: usize,
+    seg: Vec<usize>,
+    in_info: Option<TensorInfo>,
+    out_sizes: Vec<usize>,
+}
+
+impl TensorSplit {
+    pub fn new() -> Self {
+        Self {
+            axis: 0,
+            seg: Vec::new(),
+            in_info: None,
+            out_sizes: Vec::new(),
+        }
+    }
+}
+
+impl Default for TensorSplit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorSplit {
+    fn type_name(&self) -> &'static str {
+        "tensor_split"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: MAX_TENSORS }
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "option" => {
+                self.axis = parse_usize(key, value)?;
+                Ok(())
+            }
+            "tensorseg" => {
+                self.seg = value
+                    .split(':')
+                    .map(|v| parse_usize(key, v))
+                    .collect::<Result<_>>()?;
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of tensor_split".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Tensor { info, fps_millis } = &in_caps[0] else {
+            return Err(Error::Negotiation(format!(
+                "tensor_split needs other/tensor input, got {}",
+                in_caps[0]
+            )));
+        };
+        let axis_dim = info.dims.dim_or_1(self.axis);
+        let sizes: Vec<usize> = if !self.seg.is_empty() {
+            if self.seg.iter().sum::<usize>() != axis_dim {
+                return Err(Error::Negotiation(format!(
+                    "tensorseg {:?} does not sum to axis dim {axis_dim}",
+                    self.seg
+                )));
+            }
+            if self.seg.len() != n_srcs {
+                return Err(Error::Negotiation(format!(
+                    "tensorseg has {} parts but {} src pads attached",
+                    self.seg.len(),
+                    n_srcs
+                )));
+            }
+            self.seg.clone()
+        } else {
+            if n_srcs == 0 || axis_dim % n_srcs != 0 {
+                return Err(Error::Negotiation(format!(
+                    "axis dim {axis_dim} not divisible by {n_srcs} pads (use tensorseg=)"
+                )));
+            }
+            vec![axis_dim / n_srcs; n_srcs]
+        };
+        self.in_info = Some(info.clone());
+        self.out_sizes = sizes.clone();
+        Ok(sizes
+            .iter()
+            .map(|&a| Caps::Tensor {
+                info: TensorInfo::new(info.dtype, info.dims.with_dim(self.axis, a)),
+                fps_millis: *fps_millis,
+            })
+            .collect())
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let info = self
+            .in_info
+            .as_ref()
+            .ok_or_else(|| Error::element("tensor_split", "not negotiated"))?;
+        let parts = split_axis(buf.chunk().as_bytes(), info, self.axis, &self.out_sizes);
+        for (i, part) in parts.into_iter().enumerate() {
+            let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(part));
+            out.seq = buf.seq;
+            ctx.push(i, out)?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::{ctx_with_outputs, drain};
+    use crate::tensor::DType;
+
+    #[test]
+    fn merge_axis0_makes_6x4() {
+        // two 3:4 tensors -> 6:4 on axis 0 (paper's example)
+        let mut m = TensorMerge::new();
+        m.set_property("mode", "linear").unwrap();
+        m.set_property("option", "0").unwrap();
+        let a = Caps::tensor(DType::F32, [3, 4], 30.0);
+        let b = Caps::tensor(DType::F32, [3, 4], 30.0);
+        let out = m.negotiate(&[a, b], 1).unwrap();
+        match &out[0] {
+            Caps::Tensor { info, .. } => assert_eq!(info.dims.as_slice(), &[6, 4]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn merge_axis1_makes_3x8() {
+        let mut m = TensorMerge::new();
+        m.set_property("option", "1").unwrap();
+        let a = Caps::tensor(DType::F32, [3, 4], 0.0);
+        let b = Caps::tensor(DType::F32, [3, 4], 0.0);
+        let out = m.negotiate(&[a, b], 1).unwrap();
+        match &out[0] {
+            Caps::Tensor { info, .. } => assert_eq!(info.dims.as_slice(), &[3, 8]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn merge_axis2_makes_3x4x2() {
+        let mut m = TensorMerge::new();
+        m.set_property("option", "2").unwrap();
+        let a = Caps::tensor(DType::F32, [3, 4], 0.0);
+        let b = Caps::tensor(DType::F32, [3, 4], 0.0);
+        let out = m.negotiate(&[a, b], 1).unwrap();
+        match &out[0] {
+            Caps::Tensor { info, .. } => assert_eq!(info.dims.as_slice(), &[3, 4, 2]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn merge_concat_values_axis0() {
+        let mut m = TensorMerge::new();
+        m.set_property("option", "0").unwrap();
+        let a = Caps::tensor(DType::F32, [2, 2], 0.0);
+        let b = Caps::tensor(DType::F32, [2, 2], 0.0);
+        m.negotiate(&[a, b], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        m.handle(0, Item::Buffer(Buffer::from_f32(0, &[1., 2., 3., 4.])), &mut ctx)
+            .unwrap();
+        m.handle(1, Item::Buffer(Buffer::from_f32(0, &[5., 6., 7., 8.])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        // minor-first: axis0 concat interleaves rows of the minor dim
+        assert_eq!(
+            out[0].chunk().as_f32().unwrap(),
+            &[1., 2., 5., 6., 3., 4., 7., 8.]
+        );
+    }
+
+    #[test]
+    fn split_then_merge_roundtrip() {
+        let mut s = TensorSplit::new();
+        s.set_property("option", "0").unwrap();
+        let caps = Caps::tensor(DType::F32, [4, 2], 0.0);
+        let out_caps = s.negotiate(&[caps], 2).unwrap();
+        assert_eq!(out_caps.len(), 2);
+        let data = [1., 2., 3., 4., 5., 6., 7., 8.];
+        let (mut ctx, rxs) = ctx_with_outputs(2);
+        s.handle(0, Item::Buffer(Buffer::from_f32(0, &data)), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        let p0 = drain(&rxs[0]);
+        let p1 = drain(&rxs[1]);
+        assert_eq!(p0[0].chunk().as_f32().unwrap(), &[1., 2., 5., 6.]);
+        assert_eq!(p1[0].chunk().as_f32().unwrap(), &[3., 4., 7., 8.]);
+
+        // merging the parts back reproduces the original
+        let mut m = TensorMerge::new();
+        m.set_property("option", "0").unwrap();
+        let a = Caps::tensor(DType::F32, [2, 2], 0.0);
+        let b = Caps::tensor(DType::F32, [2, 2], 0.0);
+        m.negotiate(&[a, b], 1).unwrap();
+        let (mut ctx2, rxs2) = ctx_with_outputs(1);
+        m.handle(0, Item::Buffer(p0[0].clone()), &mut ctx2).unwrap();
+        m.handle(1, Item::Buffer(p1[0].clone()), &mut ctx2).unwrap();
+        drop(ctx2);
+        let merged = drain(&rxs2[0]);
+        assert_eq!(merged[0].chunk().as_f32().unwrap(), &data);
+    }
+
+    #[test]
+    fn split_rejects_bad_seg() {
+        let mut s = TensorSplit::new();
+        s.set_property("tensorseg", "3:2").unwrap();
+        let caps = Caps::tensor(DType::F32, [4, 2], 0.0);
+        assert!(s.negotiate(&[caps], 2).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_dims() {
+        let mut m = TensorMerge::new();
+        m.set_property("option", "0").unwrap();
+        let a = Caps::tensor(DType::F32, [3, 4], 0.0);
+        let b = Caps::tensor(DType::F32, [3, 5], 0.0);
+        assert!(m.negotiate(&[a, b], 1).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Built-in element set.
+//!
+//! Two families, mirroring the paper's Fig. 1:
+//! * **off-the-shelf stream elements** (what NNStreamer inherits from
+//!   GStreamer): sources, sinks, `queue`, `tee`, `valve`, selectors,
+//!   `videoconvert`, `videoscale`, ...
+//! * **NNStreamer elements** (the paper's contribution): `tensor_converter`,
+//!   `tensor_filter`, `tensor_decoder`, `tensor_transform`, `tensor_mux`,
+//!   `tensor_demux`, `tensor_merge`, `tensor_split`, `tensor_aggregator`,
+//!   `tensor_rate`, `tensor_if`, `tensor_repo_src`/`sink`, `tensor_sink`,
+//!   `sensorsrc` (the Tensor-Src-IIO analog).
+
+pub mod aggregator;
+pub mod converter;
+pub mod decoder;
+pub mod filter;
+pub mod flow;
+pub mod merge;
+pub mod mux;
+pub mod rate;
+pub mod repo;
+pub mod sinks;
+pub mod sources;
+pub mod sync;
+pub mod tensor_if;
+pub mod transform;
+pub mod videofilters;
+
+use std::collections::HashMap;
+
+use crate::element::Element;
+
+type Factory = Box<dyn Fn() -> Box<dyn Element> + Send + Sync>;
+
+macro_rules! reg {
+    ($m:expr, $name:literal, $ctor:expr) => {
+        $m.insert(
+            $name.to_string(),
+            Box::new(|| Box::new($ctor) as Box<dyn Element>) as Factory,
+        );
+    };
+}
+
+/// Register every built-in element factory (called once by the registry).
+pub fn register_builtins(m: &mut HashMap<String, Factory>) {
+    // sources
+    reg!(m, "videotestsrc", sources::VideoTestSrc::new());
+    reg!(m, "appsrc", sources::AppSrc::new());
+    reg!(m, "sensorsrc", sources::SensorSrc::new());
+    reg!(m, "filesrc", sources::FileSrc::new());
+    // sinks
+    reg!(m, "fakesink", sinks::FakeSink::new());
+    reg!(m, "appsink", sinks::AppSink::new());
+    reg!(m, "tensor_sink", sinks::TensorSink::new());
+    reg!(m, "filesink", sinks::FileSink::new());
+    // flow utilities
+    reg!(m, "queue", flow::Queue::new());
+    reg!(m, "tee", flow::Tee::new());
+    reg!(m, "valve", flow::Valve::new());
+    reg!(m, "capsfilter", flow::CapsFilter::new());
+    reg!(m, "input-selector", flow::InputSelector::new());
+    reg!(m, "output-selector", flow::OutputSelector::new());
+    // video filters
+    reg!(m, "videoconvert", videofilters::VideoConvert::new());
+    reg!(m, "videoscale", videofilters::VideoScale::new());
+    reg!(m, "videocrop", videofilters::VideoCrop::new());
+    reg!(m, "videoflip", videofilters::VideoFlip::new());
+    // NNStreamer elements
+    reg!(m, "tensor_converter", converter::TensorConverter::new());
+    reg!(m, "tensor_decoder", decoder::TensorDecoder::new());
+    reg!(m, "tensor_filter", filter::TensorFilter::new());
+    reg!(m, "tensor_transform", transform::TensorTransform::new());
+    reg!(m, "tensor_mux", mux::TensorMux::new());
+    reg!(m, "tensor_demux", mux::TensorDemux::new());
+    reg!(m, "tensor_merge", merge::TensorMerge::new());
+    reg!(m, "tensor_split", merge::TensorSplit::new());
+    reg!(m, "tensor_aggregator", aggregator::TensorAggregator::new());
+    reg!(m, "tensor_rate", rate::TensorRate::new());
+    reg!(m, "tensor_if", tensor_if::TensorIf::new());
+    reg!(m, "tensor_repo_src", repo::TensorRepoSrc::new());
+    reg!(m, "tensor_repo_sink", repo::TensorRepoSink::new());
+}

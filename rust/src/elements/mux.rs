@@ -1,0 +1,240 @@
+//! `tensor_mux` / `tensor_demux`: bundle N `other/tensor` streams into one
+//! `other/tensors` stream and back (§III). Zero-copy: chunks move, payloads
+//! don't.
+
+use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, MAX_TENSORS};
+
+use super::sync::{SyncPolicy, Synchronizer};
+
+/// N×`other/tensor` → 1×`other/tensors`. Property: `sync-mode`
+/// (slowest|fastest|base[:k]).
+pub struct TensorMux {
+    policy: SyncPolicy,
+    sync: Option<Synchronizer>,
+}
+
+impl TensorMux {
+    pub fn new() -> Self {
+        Self {
+            policy: SyncPolicy::Slowest,
+            sync: None,
+        }
+    }
+}
+
+impl Default for TensorMux {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorMux {
+    fn type_name(&self) -> &'static str {
+        "tensor_mux"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: MAX_TENSORS }
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "sync-mode" | "sync_mode" => {
+                self.policy = SyncPolicy::parse(value)?;
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of tensor_mux".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let mut infos = Vec::new();
+        let mut fps = 0u64;
+        for c in in_caps {
+            match c {
+                Caps::Tensor { info, fps_millis } => {
+                    infos.push(info.clone());
+                    fps = fps.max(*fps_millis);
+                }
+                Caps::Tensors {
+                    infos: i,
+                    fps_millis,
+                } => {
+                    infos.extend(i.iter().cloned());
+                    fps = fps.max(*fps_millis);
+                }
+                other => {
+                    return Err(Error::Negotiation(format!(
+                        "tensor_mux pads need tensors, got {other}"
+                    )))
+                }
+            }
+        }
+        if infos.len() > MAX_TENSORS {
+            return Err(Error::Negotiation(format!(
+                "tensor_mux: {} tensors exceed the {MAX_TENSORS}-chunk frame limit",
+                infos.len()
+            )));
+        }
+        self.sync = Some(Synchronizer::new(self.policy, in_caps.len()));
+        // output rate depends on the policy; expose variable (0) unless base
+        let out_fps = match self.policy {
+            SyncPolicy::Base(k) => in_caps
+                .get(k)
+                .and_then(|c| c.fps())
+                .map(|f| (f * 1000.0) as u64)
+                .unwrap_or(0),
+            _ => 0,
+        };
+        Ok(vec![
+            Caps::Tensors {
+                infos,
+                fps_millis: out_fps
+            };
+            n_srcs.max(1)
+        ])
+    }
+
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let sync = self
+            .sync
+            .as_mut()
+            .ok_or_else(|| Error::element("tensor_mux", "not negotiated"))?;
+        match item {
+            Item::Buffer(buf) => sync.push(pad, buf),
+            Item::Eos => sync.set_eos(pad),
+        }
+        while let Some(set) = sync.try_collect() {
+            let bundled = Buffer::bundle(set)?;
+            ctx.push(0, bundled)?;
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// 1×`other/tensors` → N×`other/tensor` (zero-copy unbundle).
+pub struct TensorDemux;
+
+impl TensorDemux {
+    pub fn new() -> Self {
+        TensorDemux
+    }
+}
+
+impl Default for TensorDemux {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorDemux {
+    fn type_name(&self) -> &'static str {
+        "tensor_demux"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: MAX_TENSORS }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Tensors { infos, fps_millis } = &in_caps[0] else {
+            return Err(Error::Negotiation(format!(
+                "tensor_demux needs other/tensors input, got {}",
+                in_caps[0]
+            )));
+        };
+        if n_srcs > infos.len() {
+            return Err(Error::Negotiation(format!(
+                "tensor_demux: {} src pads but only {} tensors",
+                n_srcs,
+                infos.len()
+            )));
+        }
+        Ok(infos
+            .iter()
+            .map(|i| Caps::Tensor {
+                info: i.clone(),
+                fps_millis: *fps_millis,
+            })
+            .collect())
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            let parts = buf.unbundle();
+            for (i, part) in parts.into_iter().enumerate() {
+                if i < ctx.n_src_pads() {
+                    ctx.push(i, part)?;
+                }
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::ctx_with_outputs;
+    use crate::tensor::DType;
+
+    #[test]
+    fn mux_negotiates_tensors_caps() {
+        let mut m = TensorMux::new();
+        let a = Caps::tensor(DType::F32, [4], 30.0);
+        let b = Caps::tensor(DType::U8, [8, 2], 30.0);
+        let out = m.negotiate(&[a, b], 1).unwrap();
+        match &out[0] {
+            Caps::Tensors { infos, .. } => {
+                assert_eq!(infos.len(), 2);
+                assert_eq!(infos[1].dims.as_slice(), &[8, 2]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mux_then_demux_roundtrip_zero_copy() {
+        let mut m = TensorMux::new();
+        let a = Caps::tensor(DType::F32, [1], 30.0);
+        let b = Caps::tensor(DType::F32, [1], 30.0);
+        m.negotiate(&[a, b], 1).unwrap();
+
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        let b0 = Buffer::from_f32(0, &[1.0]);
+        let b1 = Buffer::from_f32(0, &[2.0]);
+        let (p0, p1) = (b0.chunk().ptr(), b1.chunk().ptr());
+        m.handle(0, Item::Buffer(b0), &mut ctx).unwrap();
+        m.handle(1, Item::Buffer(b1), &mut ctx).unwrap();
+        drop(ctx);
+        let out = crate::element::testutil::drain(&rxs[0]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].chunks.len(), 2);
+        assert_eq!(out[0].chunks[0].ptr(), p0);
+        assert_eq!(out[0].chunks[1].ptr(), p1);
+
+        // demux back
+        let mut d = TensorDemux::new();
+        let caps = Caps::Tensors {
+            infos: vec![
+                crate::tensor::TensorInfo::new(DType::F32, [1]),
+                crate::tensor::TensorInfo::new(DType::F32, [1]),
+            ],
+            fps_millis: 30000,
+        };
+        d.negotiate(&[caps], 2).unwrap();
+        let (mut ctx2, rxs2) = ctx_with_outputs(2);
+        d.handle(0, Item::Buffer(out[0].clone()), &mut ctx2).unwrap();
+        drop(ctx2);
+        let o0 = crate::element::testutil::drain(&rxs2[0]);
+        let o1 = crate::element::testutil::drain(&rxs2[1]);
+        assert_eq!(o0[0].chunk().ptr(), p0);
+        assert_eq!(o1[0].chunk().ptr(), p1);
+    }
+}

@@ -1,0 +1,179 @@
+//! `tensor_rate`: rate override and QoS control (§III).
+//!
+//! Throttles (or pads) a tensor stream to a target frame rate using buffer
+//! timestamps: excess frames are dropped, gaps are filled by duplicating
+//! the previous frame (when `throttle=false`, only dropping happens).
+
+use crate::element::{Ctx, Element, Flow, Item};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps};
+
+use super::sources::parse_f64;
+
+pub struct TensorRate {
+    /// Target rate (frames/s); 0 keeps the input rate (passthrough).
+    framerate: f64,
+    /// Duplicate frames to maintain the target rate on slow inputs.
+    fill_gaps: bool,
+    next_slot: u64,
+    last: Option<Buffer>,
+}
+
+impl TensorRate {
+    pub fn new() -> Self {
+        Self {
+            framerate: 0.0,
+            fill_gaps: false,
+            next_slot: 0,
+            last: None,
+        }
+    }
+
+    fn interval_ns(&self) -> u64 {
+        (1e9 / self.framerate.max(1e-9)) as u64
+    }
+}
+
+impl Default for TensorRate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorRate {
+    fn type_name(&self) -> &'static str {
+        "tensor_rate"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "framerate" => {
+                // accept "15" or "15/1"
+                let v = value.split('/').next().unwrap_or(value);
+                self.framerate = parse_f64(key, v)?;
+                Ok(())
+            }
+            "throttle" => {
+                self.fill_gaps = value == "true" || value == "1";
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of tensor_rate".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let out = match (&in_caps[0], self.framerate) {
+            (c, r) if r <= 0.0 => c.clone(),
+            (Caps::Tensor { info, .. }, r) => Caps::Tensor {
+                info: info.clone(),
+                fps_millis: (r * 1000.0) as u64,
+            },
+            (Caps::Tensors { infos, .. }, r) => Caps::Tensors {
+                infos: infos.clone(),
+                fps_millis: (r * 1000.0) as u64,
+            },
+            (other, _) => {
+                return Err(Error::Negotiation(format!(
+                    "tensor_rate needs tensor input, got {other}"
+                )))
+            }
+        };
+        Ok(vec![out; n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        if self.framerate <= 0.0 {
+            ctx.push(0, buf)?;
+            return Ok(Flow::Continue);
+        }
+        let interval = self.interval_ns();
+        if buf.pts_ns + 1 < self.next_slot {
+            // too early: drop (rate throttling)
+            ctx.stats().record_drop();
+            return Ok(Flow::Continue);
+        }
+        // fill gaps by duplicating the previous frame at slot boundaries
+        if self.fill_gaps {
+            if let Some(last) = &self.last {
+                while self.next_slot + interval <= buf.pts_ns {
+                    let mut dup = last.clone();
+                    dup.pts_ns = self.next_slot;
+                    ctx.push(0, dup)?;
+                    self.next_slot += interval;
+                }
+            }
+        }
+        self.next_slot = (buf.pts_ns - buf.pts_ns % interval) + interval;
+        self.last = Some(buf.clone());
+        ctx.push(0, buf)?;
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::{ctx_with_outputs, drain};
+    use crate::tensor::DType;
+
+    #[test]
+    fn drops_to_target_rate() {
+        let mut r = TensorRate::new();
+        r.set_property("framerate", "15").unwrap();
+        let caps = Caps::tensor(DType::F32, [1], 30.0);
+        let out_caps = r.negotiate(&[caps], 1).unwrap();
+        assert_eq!(out_caps[0].fps(), Some(15.0));
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        // 30 fps input: pts every 33.3 ms for 1 second
+        for i in 0..30u64 {
+            let b = Buffer::from_f32(i * 33_333_333, &[i as f32]);
+            r.handle(0, Item::Buffer(b), &mut ctx).unwrap();
+        }
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        assert!(
+            (13..=17).contains(&out.len()),
+            "expected ~15 fps, got {}",
+            out.len()
+        );
+    }
+
+    #[test]
+    fn passthrough_when_unset() {
+        let mut r = TensorRate::new();
+        let caps = Caps::tensor(DType::F32, [1], 30.0);
+        r.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        for i in 0..5u64 {
+            r.handle(0, Item::Buffer(Buffer::from_f32(i, &[0.0])), &mut ctx)
+                .unwrap();
+        }
+        drop(ctx);
+        assert_eq!(drain(&rxs[0]).len(), 5);
+    }
+
+    #[test]
+    fn fills_gaps_when_throttling() {
+        let mut r = TensorRate::new();
+        r.set_property("framerate", "10").unwrap();
+        r.set_property("throttle", "true").unwrap();
+        let caps = Caps::tensor(DType::F32, [1], 2.0);
+        r.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        // 2 fps input for 1s -> 10 fps output expects ~10 frames
+        for i in 0..3u64 {
+            let b = Buffer::from_f32(i * 500_000_000, &[i as f32]);
+            r.handle(0, Item::Buffer(b), &mut ctx).unwrap();
+        }
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        assert!(out.len() >= 9, "gap filling should emit ~10, got {}", out.len());
+    }
+}

@@ -1,0 +1,258 @@
+//! `tensor_repo_src` / `tensor_repo_sink`: recurrence without stream
+//! cycles (§III).
+//!
+//! GStreamer (and our graph) prohibits cycles. A repo-sink stores each
+//! frame into a named slot; a repo-src emits the most recent frame of that
+//! slot (or a configured initial value before anything arrives), paced at
+//! its own rate. This is how NNStreamer expresses recurrent paths
+//! (LSTM state, detection feedback like E4's FlowLimiter cycle).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo};
+
+use super::sources::{parse_f64, parse_usize};
+
+/// Global named-slot repository shared by all pipelines in the process.
+static REPO: Lazy<Mutex<HashMap<String, Buffer>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Store a frame into a named repo slot (used by tests and applications).
+pub fn repo_store(slot: &str, buf: Buffer) {
+    REPO.lock().unwrap().insert(slot.to_string(), buf);
+}
+
+/// Fetch the current frame of a slot.
+pub fn repo_fetch(slot: &str) -> Option<Buffer> {
+    REPO.lock().unwrap().get(slot).cloned()
+}
+
+/// Clear a slot (benches reset state between runs).
+pub fn repo_clear(slot: &str) {
+    REPO.lock().unwrap().remove(slot);
+}
+
+/// Terminal sink that publishes every frame into its named slot.
+pub struct TensorRepoSink {
+    slot: String,
+}
+
+impl TensorRepoSink {
+    pub fn new() -> Self {
+        Self {
+            slot: String::new(),
+        }
+    }
+}
+
+impl Default for TensorRepoSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorRepoSink {
+    fn type_name(&self) -> &'static str {
+        "tensor_repo_sink"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "slot" => {
+                self.slot = value.to_string();
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of tensor_repo_sink".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
+        if self.slot.is_empty() {
+            return Err(Error::Negotiation("tensor_repo_sink needs slot=".into()));
+        }
+        Ok(vec![])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            repo_store(&self.slot, buf);
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Source that emits the latest frame of its slot at a fixed rate.
+/// Properties: `slot`, `rate`, `num-buffers`, `dimension`, `type`
+/// (the dimension/type describe the slot's tensors for negotiation and the
+/// zero-filled initial frame emitted before the slot is first written).
+pub struct TensorRepoSrc {
+    slot: String,
+    rate: f64,
+    num_buffers: Option<u64>,
+    info: Option<TensorInfo>,
+    is_live: bool,
+    n: u64,
+}
+
+impl TensorRepoSrc {
+    pub fn new() -> Self {
+        Self {
+            slot: String::new(),
+            rate: 30.0,
+            num_buffers: None,
+            info: None,
+            is_live: true,
+            n: 0,
+        }
+    }
+}
+
+impl Default for TensorRepoSrc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorRepoSrc {
+    fn type_name(&self) -> &'static str {
+        "tensor_repo_src"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "slot" => self.slot = value.to_string(),
+            "rate" => self.rate = parse_f64(key, value)?,
+            "num-buffers" => self.num_buffers = Some(parse_usize(key, value)? as u64),
+            "is-live" => self.is_live = value == "true" || value == "1",
+            "dimension" => {
+                let dims = Dims::parse(value)?;
+                let dtype = self.info.as_ref().map(|i| i.dtype).unwrap_or(DType::F32);
+                self.info = Some(TensorInfo::new(dtype, dims));
+            }
+            "type" => {
+                let dtype = DType::parse(value)?;
+                let dims = self
+                    .info
+                    .as_ref()
+                    .map(|i| i.dims.clone())
+                    .unwrap_or_else(|| Dims::new(&[1]));
+                self.info = Some(TensorInfo::new(dtype, dims));
+            }
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of tensor_repo_src".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        if self.slot.is_empty() {
+            return Err(Error::Negotiation("tensor_repo_src needs slot=".into()));
+        }
+        let info = self
+            .info
+            .clone()
+            .ok_or_else(|| Error::Negotiation("tensor_repo_src needs dimension=/type=".into()))?;
+        Ok(vec![
+            Caps::Tensor {
+                info,
+                fps_millis: (self.rate * 1000.0) as u64
+            };
+            n_srcs.max(1)
+        ])
+    }
+
+    fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        unreachable!()
+    }
+
+    fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
+        if let Some(max) = self.num_buffers {
+            if self.n >= max {
+                return Ok(Flow::Eos);
+            }
+        }
+        let dur = (1e9 / self.rate.max(0.001)) as u64;
+        let pts = self.n * dur;
+        if self.is_live {
+            ctx.sleep_until_pts(pts);
+            if ctx.stopped() {
+                return Ok(Flow::Eos);
+            }
+        }
+        let mut buf = match repo_fetch(&self.slot) {
+            Some(mut b) => {
+                b.pts_ns = pts;
+                b
+            }
+            None => {
+                // initial zero frame
+                let info = self.info.as_ref().unwrap();
+                Buffer::single(pts, Chunk::from_vec(vec![0u8; info.size_bytes()]))
+            }
+        };
+        buf.seq = self.n;
+        self.n += 1;
+        ctx.push(0, buf)?;
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_roundtrip() {
+        repo_clear("t");
+        assert!(repo_fetch("t").is_none());
+        repo_store("t", Buffer::from_f32(5, &[1.0, 2.0]));
+        let b = repo_fetch("t").unwrap();
+        assert_eq!(b.chunk().as_f32().unwrap(), &[1.0, 2.0]);
+        repo_clear("t");
+    }
+
+    #[test]
+    fn recurrence_through_pipeline() {
+        use crate::pipeline::Pipeline;
+        repo_clear("rec");
+        // writer pipeline: sensor windows -> repo slot "rec"
+        let mut p = Pipeline::parse(
+            "sensorsrc num-buffers=5 window=4 channels=1 rate=100 ! \
+             tensor_repo_sink slot=rec",
+        )
+        .unwrap();
+        p.run().unwrap();
+        assert!(repo_fetch("rec").is_some());
+
+        // reader pipeline: repo src replays the last stored frame
+        let mut p2 = Pipeline::parse(
+            "tensor_repo_src slot=rec dimension=4:1 type=float32 rate=1000 \
+             num-buffers=3 is-live=false ! fakesink name=out",
+        )
+        .unwrap();
+        let report = p2.run().unwrap();
+        assert_eq!(report.element("out").unwrap().buffers_in(), 3);
+        repo_clear("rec");
+    }
+}

@@ -1,0 +1,325 @@
+//! Sink elements: `fakesink`, `appsink`, `tensor_sink`, `filesink`.
+
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::time::Instant;
+
+use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps};
+
+use super::sources::parse_usize;
+
+/// Discards everything; optionally records end-to-end latency (pts vs
+/// wall-clock against the pipeline epoch) for live pipelines.
+pub struct FakeSink {
+    num_buffers: Option<u64>,
+    seen: u64,
+    /// Sum/max of (arrival wall time − pts) for live latency reporting.
+    lat_sum_ns: u64,
+    lat_max_ns: u64,
+}
+
+impl FakeSink {
+    pub fn new() -> Self {
+        Self {
+            num_buffers: None,
+            seen: 0,
+            lat_sum_ns: 0,
+            lat_max_ns: 0,
+        }
+    }
+
+    /// Mean end-to-end latency (only meaningful for live pipelines).
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.lat_sum_ns as f64 / self.seen as f64 / 1e6
+        }
+    }
+
+    pub fn max_latency_ms(&self) -> f64 {
+        self.lat_max_ns as f64 / 1e6
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+}
+
+impl Default for FakeSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for FakeSink {
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn type_name(&self) -> &'static str {
+        "fakesink"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "num-buffers" => {
+                self.num_buffers = Some(parse_usize(key, value)? as u64);
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of fakesink".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
+        Ok(vec![])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        match item {
+            Item::Buffer(buf) => {
+                self.seen += 1;
+                let arrival = Instant::now().duration_since(ctx.epoch).as_nanos() as u64;
+                let lat = arrival.saturating_sub(buf.pts_ns);
+                self.lat_sum_ns += lat;
+                self.lat_max_ns = self.lat_max_ns.max(lat);
+                if let Some(max) = self.num_buffers {
+                    if self.seen >= max {
+                        ctx.request_stop();
+                        return Ok(Flow::Eos);
+                    }
+                }
+                Ok(Flow::Continue)
+            }
+            Item::Eos => Ok(Flow::Continue),
+        }
+    }
+}
+
+/// Hands buffers to the application through a bounded channel.
+pub struct AppSink {
+    tx: SyncSender<Buffer>,
+    rx: Option<Receiver<Buffer>>,
+    /// Drop instead of blocking when the app is slow (`drop=true`).
+    drop_on_full: bool,
+}
+
+impl AppSink {
+    pub fn new() -> Self {
+        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        Self {
+            tx,
+            rx: Some(rx),
+            drop_on_full: false,
+        }
+    }
+
+    /// Take the receiving end (call before `Pipeline::play`).
+    pub fn take_receiver(&mut self) -> Option<Receiver<Buffer>> {
+        self.rx.take()
+    }
+}
+
+impl Default for AppSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for AppSink {
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn type_name(&self) -> &'static str {
+        "appsink"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "drop" => {
+                self.drop_on_full = value == "true" || value == "1";
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of appsink".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
+        Ok(vec![])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            let gone = if self.drop_on_full {
+                match self.tx.try_send(buf) {
+                    Ok(()) => false,
+                    Err(TrySendError::Full(_)) => {
+                        ctx.stats().record_drop();
+                        false
+                    }
+                    Err(TrySendError::Disconnected(_)) => true,
+                }
+            } else {
+                self.tx.send(buf).is_err()
+            };
+            if gone {
+                // application dropped the receiver: stop consuming
+                return Ok(Flow::Eos);
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Collects buffers in memory for post-run inspection (tests/benches).
+pub struct TensorSink {
+    pub buffers: Vec<Buffer>,
+    max_kept: usize,
+    seen: u64,
+}
+
+impl TensorSink {
+    pub fn new() -> Self {
+        Self {
+            buffers: Vec::new(),
+            max_kept: 4096,
+            seen: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+}
+
+impl Default for TensorSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorSink {
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn type_name(&self) -> &'static str {
+        "tensor_sink"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "max-kept" => {
+                self.max_kept = parse_usize(key, value)?;
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of tensor_sink".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
+        Ok(vec![])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        if let Item::Buffer(buf) = item {
+            self.seen += 1;
+            if self.buffers.len() < self.max_kept {
+                self.buffers.push(buf);
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+/// Appends payloads to a file.
+pub struct FileSink {
+    location: String,
+    file: Option<std::fs::File>,
+}
+
+impl FileSink {
+    pub fn new() -> Self {
+        Self {
+            location: String::new(),
+            file: None,
+        }
+    }
+}
+
+impl Default for FileSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for FileSink {
+    fn type_name(&self) -> &'static str {
+        "filesink"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "location" => {
+                self.location = value.to_string();
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of filesink".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
+        if self.location.is_empty() {
+            return Err(Error::Negotiation("filesink needs location=".into()));
+        }
+        Ok(vec![])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        use std::io::Write;
+        if let Item::Buffer(buf) = item {
+            if self.file.is_none() {
+                self.file = Some(std::fs::File::create(&self.location)?);
+            }
+            let f = self.file.as_mut().unwrap();
+            for c in &buf.chunks {
+                f.write_all(c.as_bytes())?;
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}

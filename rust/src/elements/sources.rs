@@ -1,0 +1,513 @@
+//! Source elements: `videotestsrc`, `appsrc`, `sensorsrc` (Tensor-Src-IIO
+//! analog), `filesrc`.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+
+use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo, VideoFormat, VideoInfo};
+use crate::video::pattern::{generate_pattern, splitmix64, Pattern};
+
+/// Procedural raw-video source with live pacing (like GStreamer's
+/// `videotestsrc is-live=true`).
+///
+/// Properties: `pattern`, `num-buffers`, `is-live`, `format`, `width`,
+/// `height`, `framerate` (the caps can also come from a downstream
+/// capsfilter, which overrides these).
+pub struct VideoTestSrc {
+    pattern: Pattern,
+    num_buffers: Option<u64>,
+    is_live: bool,
+    info: VideoInfo,
+    n: u64,
+}
+
+impl VideoTestSrc {
+    pub fn new() -> Self {
+        Self {
+            pattern: Pattern::Smpte,
+            num_buffers: None,
+            is_live: false,
+            info: VideoInfo::new(VideoFormat::Rgb, 640, 480, 30.0),
+            n: 0,
+        }
+    }
+}
+
+impl Default for VideoTestSrc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for VideoTestSrc {
+    fn type_name(&self) -> &'static str {
+        "videotestsrc"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "pattern" => self.pattern = Pattern::parse(value)?,
+            "num-buffers" => {
+                self.num_buffers = Some(value.parse().map_err(|_| Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "expected integer".into(),
+                })?)
+            }
+            "is-live" => self.is_live = value == "true" || value == "1",
+            "format" => self.info.format = VideoFormat::parse(value)?,
+            "width" => self.info.width = parse_usize(key, value)?,
+            "height" => self.info.height = parse_usize(key, value)?,
+            "framerate" => {
+                let fps: f64 = value.parse().map_err(|_| Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "expected number".into(),
+                })?;
+                self.info.fps_millis = (fps * 1000.0).round() as u64;
+            }
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of videotestsrc".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        Ok(vec![Caps::Video(self.info.clone()); n_srcs.max(1)])
+    }
+
+    fn propose_caps(&mut self, downstream: &Caps) -> Result<()> {
+        if let Caps::Video(v) = downstream {
+            self.info = v.clone();
+        }
+        Ok(())
+    }
+
+    fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        unreachable!("source has no sink pads")
+    }
+
+    fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
+        if let Some(max) = self.num_buffers {
+            if self.n >= max {
+                return Ok(Flow::Eos);
+            }
+        }
+        let fps = self.info.fps().max(0.001);
+        let frame_dur_ns = (1e9 / fps) as u64;
+        let pts = self.n * frame_dur_ns;
+        if self.is_live {
+            ctx.sleep_until_pts(pts);
+            if ctx.stopped() {
+                return Ok(Flow::Eos);
+            }
+        }
+        let data = generate_pattern(
+            self.pattern,
+            self.info.format,
+            self.info.width,
+            self.info.height,
+            self.n,
+        );
+        let mut buf = Buffer::single(pts, Chunk::from_vec(data));
+        buf.duration_ns = frame_dur_ns;
+        buf.seq = self.n;
+        self.n += 1;
+        ctx.push(0, buf)?;
+        Ok(Flow::Continue)
+    }
+}
+
+/// Caps negotiated by a downstream capsfilter also need to reach the src;
+/// our negotiation is one-directional (topological), so the test source
+/// must be configured directly or via properties. The parser maps a
+/// directly-following capsfilter's fields back onto the source as a
+/// convenience — handled in `CapsFilter::negotiate` by accepting Any.
+///
+/// `appsrc`: the application pushes buffers through a channel.
+pub struct AppSrc {
+    tx: SyncSender<Option<(Buffer, u64)>>,
+    rx: Receiver<Option<(Buffer, u64)>>,
+    caps: Caps,
+    n: u64,
+}
+
+/// Cloneable handle for pushing data into a running pipeline.
+#[derive(Clone)]
+pub struct AppSrcHandle {
+    tx: SyncSender<Option<(Buffer, u64)>>,
+}
+
+impl AppSrcHandle {
+    /// Push a buffer (blocking if the pipeline is saturated).
+    pub fn push(&self, buf: Buffer) -> Result<()> {
+        self.tx
+            .send(Some((buf, 0)))
+            .map_err(|_| Error::Runtime("appsrc: pipeline gone".into()))
+    }
+
+    /// Signal end of stream.
+    pub fn end(&self) {
+        let _ = self.tx.send(None);
+    }
+}
+
+impl AppSrc {
+    pub fn new() -> Self {
+        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        Self {
+            tx,
+            rx,
+            caps: Caps::Any,
+            n: 0,
+        }
+    }
+
+    /// Get a push handle (call before `Pipeline::play`).
+    pub fn handle(&self) -> AppSrcHandle {
+        AppSrcHandle {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Set the caps this source will announce.
+    pub fn set_caps(&mut self, caps: Caps) {
+        self.caps = caps;
+    }
+}
+
+impl Default for AppSrc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for AppSrc {
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn type_name(&self) -> &'static str {
+        "appsrc"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "caps" => {
+                self.caps = Caps::parse(value)?;
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of appsrc".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        Ok(vec![self.caps.clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        unreachable!()
+    }
+
+    fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
+        match self.rx.recv() {
+            Ok(Some((mut buf, _))) => {
+                buf.seq = self.n;
+                self.n += 1;
+                ctx.push(0, buf)?;
+                Ok(Flow::Continue)
+            }
+            Ok(None) | Err(_) => Ok(Flow::Eos),
+        }
+    }
+}
+
+/// Synthetic IIO-style sensor source (`Tensor-Src-IIO` analog): emits
+/// `other/tensor` windows of waveform data with activity segments, standing
+/// in for the accelerometer/pressure sensors of the ARS device (E2).
+///
+/// Properties: `kind` (accel|pressure|mic), `rate` (windows per second),
+/// `num-buffers`, `is-live`, `window` (samples per window), `channels`.
+pub struct SensorSrc {
+    kind: SensorKind,
+    rate: f64,
+    num_buffers: Option<u64>,
+    is_live: bool,
+    window: usize,
+    channels: usize,
+    n: u64,
+    seed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SensorKind {
+    Accel,
+    Pressure,
+    Mic,
+}
+
+impl SensorSrc {
+    pub fn new() -> Self {
+        Self {
+            kind: SensorKind::Accel,
+            rate: 10.0,
+            num_buffers: None,
+            is_live: false,
+            window: 128,
+            channels: 3,
+            n: 0,
+            seed: 17,
+        }
+    }
+
+    fn sample(&self, t: f64, ch: usize, idx: u64) -> f32 {
+        // activity segments switch every ~3 seconds, deterministic
+        let segment = (t / 3.0) as u64;
+        let activity = splitmix64(self.seed ^ segment) % 4;
+        let base = match self.kind {
+            SensorKind::Accel => {
+                let f = 0.8 + activity as f64 * 1.7;
+                (2.0 * std::f64::consts::PI * f * t + ch as f64).sin()
+                    * (0.3 + 0.5 * activity as f64)
+            }
+            SensorKind::Pressure => 1013.0 + (t * 0.05).sin() * 2.0 + activity as f64 * 0.3,
+            SensorKind::Mic => {
+                let f = 200.0 + activity as f64 * 400.0;
+                (2.0 * std::f64::consts::PI * f * t).sin() * 0.4
+            }
+        };
+        let noise =
+            (splitmix64(idx ^ (ch as u64) << 32 ^ self.seed) % 1000) as f64 / 1000.0 - 0.5;
+        (base + noise * 0.05) as f32
+    }
+}
+
+impl Default for SensorSrc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for SensorSrc {
+    fn type_name(&self) -> &'static str {
+        "sensorsrc"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "kind" => {
+                self.kind = match value {
+                    "accel" => SensorKind::Accel,
+                    "pressure" => SensorKind::Pressure,
+                    "mic" => SensorKind::Mic,
+                    _ => {
+                        return Err(Error::Property {
+                            key: key.into(),
+                            value: value.into(),
+                            reason: "accel|pressure|mic".into(),
+                        })
+                    }
+                }
+            }
+            "rate" => self.rate = parse_f64(key, value)?,
+            "num-buffers" => self.num_buffers = Some(parse_usize(key, value)? as u64),
+            "is-live" => self.is_live = value == "true" || value == "1",
+            "window" => self.window = parse_usize(key, value)?,
+            "channels" => self.channels = parse_usize(key, value)?,
+            "seed" => self.seed = parse_usize(key, value)? as u64,
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of sensorsrc".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        // layout is [sample][channel]: channels vary fastest -> minor-first dims
+        let info = TensorInfo::new(DType::F32, Dims::new(&[self.channels, self.window]));
+        Ok(vec![
+            Caps::Tensor {
+                info,
+                fps_millis: (self.rate * 1000.0) as u64,
+            };
+            n_srcs.max(1)
+        ])
+    }
+
+    fn propose_caps(&mut self, downstream: &Caps) -> Result<()> {
+        if let Caps::Tensor { info, fps_millis } = downstream {
+            if info.dtype == DType::F32 && info.dims.effective_rank() <= 2 {
+                self.channels = info.dims.dim_or_1(0);
+                self.window = info.dims.dim_or_1(1);
+                if *fps_millis > 0 {
+                    self.rate = *fps_millis as f64 / 1000.0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        unreachable!()
+    }
+
+    fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
+        if let Some(max) = self.num_buffers {
+            if self.n >= max {
+                return Ok(Flow::Eos);
+            }
+        }
+        let dur_ns = (1e9 / self.rate.max(0.001)) as u64;
+        let pts = self.n * dur_ns;
+        if self.is_live {
+            ctx.sleep_until_pts(pts);
+            if ctx.stopped() {
+                return Ok(Flow::Eos);
+            }
+        }
+        let t_window = 1.0 / self.rate.max(0.001);
+        let mut data = vec![0f32; self.window * self.channels];
+        for s in 0..self.window {
+            let t = self.n as f64 * t_window + s as f64 * t_window / self.window as f64;
+            for c in 0..self.channels {
+                data[s * self.channels + c] =
+                    self.sample(t, c, self.n * self.window as u64 + s as u64);
+            }
+        }
+        let mut buf = Buffer::from_f32(pts, &data);
+        buf.duration_ns = dur_ns;
+        buf.seq = self.n;
+        self.n += 1;
+        ctx.push(0, buf)?;
+        Ok(Flow::Continue)
+    }
+}
+
+/// Reads a file and emits it as fixed-size binary frames.
+/// Properties: `location`, `blocksize` (bytes per buffer; 0 = whole file).
+pub struct FileSrc {
+    location: String,
+    blocksize: usize,
+    data: Option<Arc<Vec<u8>>>,
+    offset: usize,
+    n: u64,
+}
+
+impl FileSrc {
+    pub fn new() -> Self {
+        Self {
+            location: String::new(),
+            blocksize: 0,
+            data: None,
+            offset: 0,
+            n: 0,
+        }
+    }
+}
+
+impl Default for FileSrc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for FileSrc {
+    fn type_name(&self) -> &'static str {
+        "filesrc"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "location" => self.location = value.to_string(),
+            "blocksize" => self.blocksize = parse_usize(key, value)?,
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of filesrc".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        if self.location.is_empty() {
+            return Err(Error::Negotiation("filesrc needs location=".into()));
+        }
+        Ok(vec![Caps::Any; n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        unreachable!()
+    }
+
+    fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
+        if self.data.is_none() {
+            self.data = Some(Arc::new(std::fs::read(&self.location)?));
+        }
+        let data = self.data.as_ref().unwrap().clone();
+        if self.offset >= data.len() {
+            return Ok(Flow::Eos);
+        }
+        let end = if self.blocksize == 0 {
+            data.len()
+        } else {
+            (self.offset + self.blocksize).min(data.len())
+        };
+        let chunk = Chunk::from_vec(data[self.offset..end].to_vec());
+        self.offset = end;
+        let mut buf = Buffer::single(0, chunk);
+        buf.seq = self.n;
+        self.n += 1;
+        ctx.push(0, buf)?;
+        Ok(Flow::Continue)
+    }
+}
+
+pub(crate) fn parse_usize(key: &str, value: &str) -> Result<usize> {
+    value.parse().map_err(|_| Error::Property {
+        key: key.into(),
+        value: value.into(),
+        reason: "expected integer".into(),
+    })
+}
+
+pub(crate) fn parse_f64(key: &str, value: &str) -> Result<f64> {
+    value.parse().map_err(|_| Error::Property {
+        key: key.into(),
+        value: value.into(),
+        reason: "expected number".into(),
+    })
+}

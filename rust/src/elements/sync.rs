@@ -1,0 +1,261 @@
+//! Stream-synchronization policies for merging elements (§III).
+//!
+//! When N tensor streams meet (tensor_mux / tensor_merge), their rates may
+//! differ. The paper defines three policies:
+//! * **slowest** — emit at the slowest input's rate, dropping frames of
+//!   faster sources;
+//! * **fastest** — emit at the fastest input's rate, duplicating frames of
+//!   slower sources;
+//! * **base(k)** — keep the rate of designated input `k`.
+//!
+//! All merging elements stamp outputs with the *latest* input timestamp.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+use crate::tensor::Buffer;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    Slowest,
+    Fastest,
+    /// Base pad index.
+    Base(usize),
+}
+
+impl SyncPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "slowest" {
+            return Ok(SyncPolicy::Slowest);
+        }
+        if s == "fastest" {
+            return Ok(SyncPolicy::Fastest);
+        }
+        if let Some(k) = s.strip_prefix("base:") {
+            return Ok(SyncPolicy::Base(k.parse().map_err(|_| {
+                Error::Parse(format!("bad base pad in sync policy {s:?}"))
+            })?));
+        }
+        if s == "base" {
+            return Ok(SyncPolicy::Base(0));
+        }
+        Err(Error::Parse(format!("unknown sync policy {s:?}")))
+    }
+}
+
+/// Per-pad buffering + policy evaluation shared by mux and merge.
+pub struct Synchronizer {
+    policy: SyncPolicy,
+    pads: Vec<PadState>,
+}
+
+struct PadState {
+    queue: VecDeque<Buffer>,
+    /// Most recent buffer ever seen (for `fastest` duplication).
+    last: Option<Buffer>,
+    eos: bool,
+}
+
+impl Synchronizer {
+    pub fn new(policy: SyncPolicy, n_pads: usize) -> Self {
+        Self {
+            policy,
+            pads: (0..n_pads)
+                .map(|_| PadState {
+                    queue: VecDeque::new(),
+                    last: None,
+                    eos: false,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_pads(&self) -> usize {
+        self.pads.len()
+    }
+
+    pub fn push(&mut self, pad: usize, buf: Buffer) {
+        let st = &mut self.pads[pad];
+        st.last = Some(buf.clone());
+        st.queue.push_back(buf);
+        // bound growth: a pad racing far ahead keeps only recent frames
+        // (its older frames would be dropped by any policy anyway)
+        while st.queue.len() > 64 {
+            st.queue.pop_front();
+        }
+    }
+
+    pub fn set_eos(&mut self, pad: usize) {
+        self.pads[pad].eos = true;
+    }
+
+    pub fn all_eos(&self) -> bool {
+        self.pads.iter().all(|p| p.eos)
+    }
+
+    /// Try to emit one synchronized set of buffers (one per pad).
+    /// Returns `None` until the policy can produce a complete set.
+    pub fn try_collect(&mut self) -> Option<Vec<Buffer>> {
+        match self.policy {
+            SyncPolicy::Slowest => {
+                // need at least one queued frame on every live pad
+                if self
+                    .pads
+                    .iter()
+                    .any(|p| p.queue.is_empty() && !p.eos)
+                {
+                    return None;
+                }
+                if self.pads.iter().any(|p| p.queue.is_empty()) {
+                    // some pad is EOS with nothing queued: no complete sets anymore
+                    return None;
+                }
+                // emit the oldest set: pop one from each, dropping any
+                // extra queued frames of faster pads beyond the newest
+                let target_pts = self
+                    .pads
+                    .iter()
+                    .map(|p| p.queue.front().unwrap().pts_ns)
+                    .max()
+                    .unwrap();
+                let mut set = Vec::with_capacity(self.pads.len());
+                for p in &mut self.pads {
+                    // drop frames older than the slowest pad's current frame
+                    while p.queue.len() > 1 && p.queue[1].pts_ns <= target_pts {
+                        p.queue.pop_front();
+                    }
+                    set.push(p.queue.pop_front().unwrap());
+                }
+                Some(set)
+            }
+            SyncPolicy::Fastest => {
+                // emit whenever any pad has a fresh frame, duplicating the
+                // latest frame of the others; wait until all pads have seen
+                // at least one frame
+                if self.pads.iter().any(|p| p.last.is_none()) {
+                    // drain queues (they are retained in `last`)
+                    for p in &mut self.pads {
+                        p.queue.clear();
+                    }
+                    return None;
+                }
+                let any_fresh = self.pads.iter().any(|p| !p.queue.is_empty());
+                if !any_fresh {
+                    return None;
+                }
+                let mut set = Vec::with_capacity(self.pads.len());
+                for p in &mut self.pads {
+                    if let Some(b) = p.queue.pop_front() {
+                        set.push(b);
+                    } else {
+                        set.push(p.last.clone().unwrap());
+                    }
+                }
+                // clear any remaining backlog beyond one frame per round
+                Some(set)
+            }
+            SyncPolicy::Base(k) => {
+                let k = k.min(self.pads.len() - 1);
+                if self.pads[k].queue.is_empty() {
+                    return None;
+                }
+                if self.pads.iter().any(|p| p.last.is_none()) {
+                    return None;
+                }
+                let base = self.pads[k].queue.pop_front().unwrap();
+                let base_pts = base.pts_ns;
+                let mut set = Vec::with_capacity(self.pads.len());
+                for (i, p) in self.pads.iter_mut().enumerate() {
+                    if i == k {
+                        set.push(base.clone());
+                        continue;
+                    }
+                    // take the newest frame not newer than base (or the
+                    // closest available)
+                    while p.queue.len() > 1 && p.queue[1].pts_ns <= base_pts {
+                        p.queue.pop_front();
+                    }
+                    if let Some(front) = p.queue.front() {
+                        if front.pts_ns <= base_pts {
+                            let b = p.queue.pop_front().unwrap();
+                            p.last = Some(b.clone());
+                            set.push(b);
+                            continue;
+                        }
+                    }
+                    set.push(p.last.clone().unwrap());
+                }
+                Some(set)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(pts: u64, v: f32) -> Buffer {
+        Buffer::from_f32(pts, &[v])
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(SyncPolicy::parse("slowest").unwrap(), SyncPolicy::Slowest);
+        assert_eq!(SyncPolicy::parse("fastest").unwrap(), SyncPolicy::Fastest);
+        assert_eq!(SyncPolicy::parse("base:2").unwrap(), SyncPolicy::Base(2));
+        assert!(SyncPolicy::parse("warpspeed").is_err());
+    }
+
+    #[test]
+    fn slowest_waits_for_all() {
+        let mut s = Synchronizer::new(SyncPolicy::Slowest, 2);
+        s.push(0, buf(0, 1.0));
+        assert!(s.try_collect().is_none());
+        s.push(1, buf(0, 2.0));
+        let set = s.try_collect().unwrap();
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn slowest_drops_fast_pad_backlog() {
+        let mut s = Synchronizer::new(SyncPolicy::Slowest, 2);
+        // pad 0 is fast: 4 frames at pts 0,10,20,30; pad 1 slow: one at 25
+        for (pts, v) in [(0, 0.0), (10, 1.0), (20, 2.0), (30, 3.0)] {
+            s.push(0, buf(pts, v));
+        }
+        s.push(1, buf(25, 9.0));
+        let set = s.try_collect().unwrap();
+        // fast pad should have skipped to pts 20 (newest <= 25)
+        assert_eq!(set[0].pts_ns, 20);
+        assert_eq!(set[1].pts_ns, 25);
+    }
+
+    #[test]
+    fn fastest_duplicates_slow_pad() {
+        let mut s = Synchronizer::new(SyncPolicy::Fastest, 2);
+        s.push(0, buf(0, 1.0));
+        s.push(1, buf(0, 2.0));
+        let _ = s.try_collect().unwrap();
+        // only pad 0 gets a new frame; pad 1's last frame is duplicated
+        s.push(0, buf(10, 1.5));
+        let set = s.try_collect().unwrap();
+        assert_eq!(set[0].pts_ns, 10);
+        assert_eq!(set[1].pts_ns, 0, "slow pad duplicated");
+    }
+
+    #[test]
+    fn base_keeps_designated_rate() {
+        let mut s = Synchronizer::new(SyncPolicy::Base(0), 2);
+        // base pad at 10 Hz, other at 30 Hz
+        s.push(1, buf(0, 0.0));
+        s.push(1, buf(3, 0.1));
+        s.push(1, buf(6, 0.2));
+        assert!(s.try_collect().is_none(), "waits for base pad");
+        s.push(0, buf(5, 1.0));
+        let set = s.try_collect().unwrap();
+        assert_eq!(set[0].pts_ns, 5);
+        // newest non-base frame with pts <= 5 is pts 3
+        assert_eq!(set[1].pts_ns, 3);
+    }
+}

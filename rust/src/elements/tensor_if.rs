@@ -1,0 +1,290 @@
+//! `tensor_if`: value-predicated flow control (§III).
+//!
+//! Routes buffers based on tensor values *without application-thread
+//! intervention*: compare a computed value (average/max/element) against a
+//! threshold and either pass/drop or route to the then/else src pad.
+//!
+//! Properties (NNStreamer-flavored):
+//! * `compared-value=average|max|element:<idx>`
+//! * `operator=gt|ge|lt|le|eq`
+//! * `threshold=<float>`
+//! * `action=pass|route` — `pass`: forward on pad 0 when true else drop;
+//!   `route`: pad 0 when true, pad 1 when false.
+
+use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, DType, TensorInfo};
+
+use super::sources::parse_f64;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ComparedValue {
+    Average,
+    Max,
+    Element(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Op {
+    Gt,
+    Ge,
+    Lt,
+    Le,
+    Eq,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Action {
+    Pass,
+    Route,
+}
+
+pub struct TensorIf {
+    cv: ComparedValue,
+    op: Op,
+    threshold: f64,
+    action: Action,
+    in_info: Option<TensorInfo>,
+}
+
+impl TensorIf {
+    pub fn new() -> Self {
+        Self {
+            cv: ComparedValue::Average,
+            op: Op::Gt,
+            threshold: 0.0,
+            action: Action::Pass,
+            in_info: None,
+        }
+    }
+
+    fn value_of(&self, buf: &Buffer, dtype: DType) -> Result<f64> {
+        let data = buf.chunk().as_bytes();
+        let esz = dtype.size_bytes();
+        let n = data.len() / esz;
+        let get = |i: usize| -> f64 {
+            let o = i * esz;
+            match dtype {
+                DType::U8 => data[o] as f64,
+                DType::I8 => data[o] as i8 as f64,
+                DType::F32 => {
+                    f32::from_le_bytes([data[o], data[o + 1], data[o + 2], data[o + 3]]) as f64
+                }
+                DType::F64 => f64::from_le_bytes(data[o..o + 8].try_into().unwrap()),
+                DType::I16 => i16::from_le_bytes([data[o], data[o + 1]]) as f64,
+                DType::U16 => u16::from_le_bytes([data[o], data[o + 1]]) as f64,
+                DType::I32 => {
+                    i32::from_le_bytes([data[o], data[o + 1], data[o + 2], data[o + 3]]) as f64
+                }
+                DType::U32 => {
+                    u32::from_le_bytes([data[o], data[o + 1], data[o + 2], data[o + 3]]) as f64
+                }
+                DType::I64 => i64::from_le_bytes(data[o..o + 8].try_into().unwrap()) as f64,
+                DType::U64 => u64::from_le_bytes(data[o..o + 8].try_into().unwrap()) as f64,
+            }
+        };
+        Ok(match self.cv {
+            ComparedValue::Average => (0..n).map(get).sum::<f64>() / n.max(1) as f64,
+            ComparedValue::Max => (0..n).map(get).fold(f64::MIN, f64::max),
+            ComparedValue::Element(i) => {
+                if i >= n {
+                    return Err(Error::element(
+                        "tensor_if",
+                        format!("element index {i} out of range ({n} elements)"),
+                    ));
+                }
+                get(i)
+            }
+        })
+    }
+
+    fn test(&self, v: f64) -> bool {
+        match self.op {
+            Op::Gt => v > self.threshold,
+            Op::Ge => v >= self.threshold,
+            Op::Lt => v < self.threshold,
+            Op::Le => v <= self.threshold,
+            Op::Eq => (v - self.threshold).abs() < 1e-9,
+        }
+    }
+}
+
+impl Default for TensorIf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for TensorIf {
+    fn type_name(&self) -> &'static str {
+        "tensor_if"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Variadic { max: 2 }
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "compared-value" => {
+                self.cv = if value == "average" {
+                    ComparedValue::Average
+                } else if value == "max" {
+                    ComparedValue::Max
+                } else if let Some(i) = value.strip_prefix("element:") {
+                    ComparedValue::Element(i.parse().map_err(|_| Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: "bad element index".into(),
+                    })?)
+                } else {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: "average|max|element:<idx>".into(),
+                    });
+                };
+            }
+            "operator" => {
+                self.op = match value {
+                    "gt" => Op::Gt,
+                    "ge" => Op::Ge,
+                    "lt" => Op::Lt,
+                    "le" => Op::Le,
+                    "eq" => Op::Eq,
+                    _ => {
+                        return Err(Error::Property {
+                            key: key.into(),
+                            value: value.into(),
+                            reason: "gt|ge|lt|le|eq".into(),
+                        })
+                    }
+                }
+            }
+            "threshold" => self.threshold = parse_f64(key, value)?,
+            "action" => {
+                self.action = match value {
+                    "pass" => Action::Pass,
+                    "route" => Action::Route,
+                    _ => {
+                        return Err(Error::Property {
+                            key: key.into(),
+                            value: value.into(),
+                            reason: "pass|route".into(),
+                        })
+                    }
+                }
+            }
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of tensor_if".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Tensor { info, .. } = &in_caps[0] else {
+            return Err(Error::Negotiation(format!(
+                "tensor_if needs other/tensor input, got {}",
+                in_caps[0]
+            )));
+        };
+        self.in_info = Some(info.clone());
+        if self.action == Action::Route && n_srcs != 2 {
+            return Err(Error::Negotiation(
+                "tensor_if action=route needs exactly 2 src pads".into(),
+            ));
+        }
+        Ok(vec![in_caps[0].clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let dtype = self.in_info.as_ref().unwrap().dtype;
+        let v = self.value_of(&buf, dtype)?;
+        let verdict = self.test(v);
+        match (self.action, verdict) {
+            (Action::Pass, true) => ctx.push(0, buf)?,
+            (Action::Pass, false) => ctx.stats().record_drop(),
+            (Action::Route, true) => ctx.push(0, buf)?,
+            (Action::Route, false) => ctx.push(1, buf)?,
+        }
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::{ctx_with_outputs, drain};
+
+    fn iff(props: &[(&str, &str)]) -> TensorIf {
+        let mut t = TensorIf::new();
+        for (k, v) in props {
+            t.set_property(k, v).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn pass_drops_below_threshold() {
+        let mut t = iff(&[
+            ("compared-value", "average"),
+            ("operator", "gt"),
+            ("threshold", "0.5"),
+        ]);
+        let caps = Caps::tensor(DType::F32, [2], 0.0);
+        t.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        t.handle(0, Item::Buffer(Buffer::from_f32(0, &[0.9, 0.9])), &mut ctx)
+            .unwrap();
+        t.handle(0, Item::Buffer(Buffer::from_f32(1, &[0.1, 0.1])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].pts_ns, 0);
+    }
+
+    #[test]
+    fn route_splits_by_predicate() {
+        let mut t = iff(&[
+            ("compared-value", "max"),
+            ("operator", "ge"),
+            ("threshold", "1.0"),
+            ("action", "route"),
+        ]);
+        let caps = Caps::tensor(DType::F32, [2], 0.0);
+        t.negotiate(&[caps], 2).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(2);
+        t.handle(0, Item::Buffer(Buffer::from_f32(0, &[2.0, 0.0])), &mut ctx)
+            .unwrap();
+        t.handle(0, Item::Buffer(Buffer::from_f32(1, &[0.5, 0.2])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        assert_eq!(drain(&rxs[0]).len(), 1);
+        assert_eq!(drain(&rxs[1]).len(), 1);
+    }
+
+    #[test]
+    fn element_selector() {
+        let mut t = iff(&[
+            ("compared-value", "element:1"),
+            ("operator", "eq"),
+            ("threshold", "7"),
+        ]);
+        let caps = Caps::tensor(DType::F32, [2], 0.0);
+        t.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        t.handle(0, Item::Buffer(Buffer::from_f32(0, &[0.0, 7.0])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        assert_eq!(drain(&rxs[0]).len(), 1);
+    }
+}

@@ -1,0 +1,389 @@
+//! Off-the-shelf media filters: `videoconvert`, `videoscale`, `videocrop`,
+//! `videoflip`.
+//!
+//! These are the P4 components: reusing them (instead of re-implementing
+//! pre-processing inside the AI framework, as MediaPipe does) is one of the
+//! paper's core arguments, quantified in E4's pre-processor comparison.
+
+use crate::element::{Ctx, Element, Flow, Item};
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Caps, Chunk, VideoFormat, VideoInfo};
+use crate::video::{convert_format, crop, scale_bilinear};
+
+use super::sources::parse_usize;
+
+/// Pixel-format conversion. Property: `format` (target).
+pub struct VideoConvert {
+    target: VideoFormat,
+    in_info: Option<VideoInfo>,
+}
+
+impl VideoConvert {
+    pub fn new() -> Self {
+        Self {
+            target: VideoFormat::Rgb,
+            in_info: None,
+        }
+    }
+}
+
+impl Default for VideoConvert {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for VideoConvert {
+    fn type_name(&self) -> &'static str {
+        "videoconvert"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "format" => {
+                self.target = VideoFormat::parse(value)?;
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of videoconvert".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Video(v) = &in_caps[0] else {
+            return Err(Error::Negotiation(format!(
+                "videoconvert needs video input, got {}",
+                in_caps[0]
+            )));
+        };
+        self.in_info = Some(v.clone());
+        let mut out = v.clone();
+        out.format = self.target;
+        Ok(vec![Caps::Video(out); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let v = self.in_info.as_ref().unwrap();
+        let out_buf = if v.format == self.target {
+            buf // zero-copy passthrough
+        } else {
+            let data = convert_format(
+                v.format,
+                self.target,
+                v.width,
+                v.height,
+                buf.chunk().as_bytes(),
+            );
+            let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(data));
+            out.seq = buf.seq;
+            out.duration_ns = buf.duration_ns;
+            out
+        };
+        ctx.push(0, out_buf)?;
+        Ok(Flow::Continue)
+    }
+}
+
+/// Bilinear scaling. Properties: `width`, `height`.
+pub struct VideoScale {
+    width: usize,
+    height: usize,
+    in_info: Option<VideoInfo>,
+}
+
+impl VideoScale {
+    pub fn new() -> Self {
+        Self {
+            width: 0,
+            height: 0,
+            in_info: None,
+        }
+    }
+}
+
+impl Default for VideoScale {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for VideoScale {
+    fn type_name(&self) -> &'static str {
+        "videoscale"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "width" => self.width = parse_usize(key, value)?,
+            "height" => self.height = parse_usize(key, value)?,
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of videoscale".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Video(v) = &in_caps[0] else {
+            return Err(Error::Negotiation(format!(
+                "videoscale needs video input, got {}",
+                in_caps[0]
+            )));
+        };
+        if v.format == VideoFormat::Nv12 {
+            return Err(Error::Negotiation(
+                "videoscale: convert NV12 to RGB before scaling".into(),
+            ));
+        }
+        if self.width == 0 || self.height == 0 {
+            return Err(Error::Negotiation(
+                "videoscale needs width= and height=".into(),
+            ));
+        }
+        self.in_info = Some(v.clone());
+        let mut out = v.clone();
+        out.width = self.width;
+        out.height = self.height;
+        Ok(vec![Caps::Video(out); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let v = self.in_info.as_ref().unwrap();
+        let out_buf = if v.width == self.width && v.height == self.height {
+            buf
+        } else {
+            let data = scale_bilinear(
+                v.format,
+                v.width,
+                v.height,
+                self.width,
+                self.height,
+                buf.chunk().as_bytes(),
+            );
+            let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(data));
+            out.seq = buf.seq;
+            out.duration_ns = buf.duration_ns;
+            out
+        };
+        ctx.push(0, out_buf)?;
+        Ok(Flow::Continue)
+    }
+}
+
+/// Rectangle crop. Properties: `left`, `top`, `width`, `height`.
+pub struct VideoCrop {
+    left: usize,
+    top: usize,
+    width: usize,
+    height: usize,
+    in_info: Option<VideoInfo>,
+}
+
+impl VideoCrop {
+    pub fn new() -> Self {
+        Self {
+            left: 0,
+            top: 0,
+            width: 0,
+            height: 0,
+            in_info: None,
+        }
+    }
+}
+
+impl Default for VideoCrop {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for VideoCrop {
+    fn type_name(&self) -> &'static str {
+        "videocrop"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "left" => self.left = parse_usize(key, value)?,
+            "top" => self.top = parse_usize(key, value)?,
+            "width" => self.width = parse_usize(key, value)?,
+            "height" => self.height = parse_usize(key, value)?,
+            _ => {
+                return Err(Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "unknown property of videocrop".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Video(v) = &in_caps[0] else {
+            return Err(Error::Negotiation("videocrop needs video input".into()));
+        };
+        if self.width == 0 || self.height == 0 {
+            return Err(Error::Negotiation("videocrop needs width/height".into()));
+        }
+        self.in_info = Some(v.clone());
+        let mut out = v.clone();
+        out.width = self.width.min(v.width - self.left.min(v.width));
+        out.height = self.height.min(v.height - self.top.min(v.height));
+        Ok(vec![Caps::Video(out); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let v = self.in_info.as_ref().unwrap();
+        let data = crop(
+            v.format,
+            v.width,
+            v.height,
+            self.left,
+            self.top,
+            self.width,
+            self.height,
+            buf.chunk().as_bytes(),
+        );
+        let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(data));
+        out.seq = buf.seq;
+        ctx.push(0, out)?;
+        Ok(Flow::Continue)
+    }
+}
+
+/// Horizontal/vertical flip. Property: `method` (horizontal|vertical).
+pub struct VideoFlip {
+    horizontal: bool,
+    in_info: Option<VideoInfo>,
+}
+
+impl VideoFlip {
+    pub fn new() -> Self {
+        Self {
+            horizontal: true,
+            in_info: None,
+        }
+    }
+}
+
+impl Default for VideoFlip {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Element for VideoFlip {
+    fn type_name(&self) -> &'static str {
+        "videoflip"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "method" => {
+                self.horizontal = value == "horizontal";
+                Ok(())
+            }
+            _ => Err(Error::Property {
+                key: key.into(),
+                value: value.into(),
+                reason: "unknown property of videoflip".into(),
+            }),
+        }
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        let Caps::Video(v) = &in_caps[0] else {
+            return Err(Error::Negotiation("videoflip needs video input".into()));
+        };
+        self.in_info = Some(v.clone());
+        Ok(vec![in_caps[0].clone(); n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let v = self.in_info.as_ref().unwrap();
+        let ch = v.format.channels();
+        let src = buf.chunk().as_bytes();
+        let mut out = vec![0u8; src.len()];
+        let (w, h) = (v.width, v.height);
+        if self.horizontal {
+            for y in 0..h {
+                for x in 0..w {
+                    let s = (y * w + x) * ch;
+                    let d = (y * w + (w - 1 - x)) * ch;
+                    out[d..d + ch].copy_from_slice(&src[s..s + ch]);
+                }
+            }
+        } else {
+            for y in 0..h {
+                let s = y * w * ch;
+                let d = (h - 1 - y) * w * ch;
+                out[d..d + w * ch].copy_from_slice(&src[s..s + w * ch]);
+            }
+        }
+        let mut ob = Buffer::single(buf.pts_ns, Chunk::from_vec(out));
+        ob.seq = buf.seq;
+        ctx.push(0, ob)?;
+        Ok(Flow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::testutil::drive;
+
+    #[test]
+    fn convert_rgb_to_gray() {
+        let mut el = VideoConvert::new();
+        el.set_property("format", "GRAY8").unwrap();
+        let caps = Caps::parse("video/x-raw,format=RGB,width=2,height=1,framerate=30").unwrap();
+        el.negotiate(&[caps], 1).unwrap();
+        let buf = Buffer::single(0, Chunk::from_vec(vec![255, 255, 255, 0, 0, 0]));
+        let out = drive(&mut el, 0, buf);
+        assert_eq!(out.len(), 1);
+        let g = out[0].chunk().as_bytes_unaccounted();
+        assert!(g[0] >= 254 && g[1] <= 1);
+    }
+
+    #[test]
+    fn scale_halves() {
+        let mut el = VideoScale::new();
+        el.set_property("width", "2").unwrap();
+        el.set_property("height", "2").unwrap();
+        let caps = Caps::parse("video/x-raw,format=GRAY8,width=4,height=4,framerate=30").unwrap();
+        el.negotiate(&[caps], 1).unwrap();
+        let buf = Buffer::single(0, Chunk::from_vec((0..16).collect()));
+        let out = drive(&mut el, 0, buf);
+        assert_eq!(out[0].chunk().as_bytes_unaccounted().len(), 4);
+    }
+
+    #[test]
+    fn flip_horizontal() {
+        let mut el = VideoFlip::new();
+        let caps = Caps::parse("video/x-raw,format=GRAY8,width=3,height=1,framerate=1").unwrap();
+        el.negotiate(&[caps], 1).unwrap();
+        let buf = Buffer::single(0, Chunk::from_vec(vec![1, 2, 3]));
+        let out = drive(&mut el, 0, buf);
+        assert_eq!(out[0].chunk().as_bytes_unaccounted(), &[3, 2, 1]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Crate-wide error type.
+
+/// Errors produced by the streaming framework and its elements.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Pipeline description could not be parsed.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Caps negotiation between two linked pads failed.
+    #[error("negotiation failed: {0}")]
+    Negotiation(String),
+
+    /// An element property was unknown or had an invalid value.
+    #[error("bad property {key}={value}: {reason}")]
+    Property {
+        key: String,
+        value: String,
+        reason: String,
+    },
+
+    /// Graph-level error (duplicate names, bad links, cycles, ...).
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// An element failed at runtime while processing a buffer.
+    #[error("element {element}: {reason}")]
+    Element { element: String, reason: String },
+
+    /// NNFW / model runtime failure (PJRT compile or execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest missing/invalid.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience constructor for element-scoped runtime failures.
+    pub fn element(element: impl Into<String>, reason: impl Into<String>) -> Self {
+        Error::Element {
+            element: element.into(),
+            reason: reason.into(),
+        }
+    }
+}

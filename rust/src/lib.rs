@@ -1,0 +1,44 @@
+//! # nnstreamer-rs
+//!
+//! A reproduction of **NNStreamer: Efficient and Agile Development of
+//! On-Device AI Systems** (Ham et al., 2021) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! NNStreamer treats neural networks as *filters* of *stream pipelines*
+//! (pipe-and-filter architecture). This crate implements the streaming
+//! framework (Layer 3) in Rust: tensor stream types, caps negotiation,
+//! a pipeline graph with a tokio-based scheduler, the full set of
+//! `tensor_*` elements from the paper, NNFW sub-plugins that execute
+//! AOT-compiled JAX/Pallas models through XLA PJRT, and the baselines
+//! ("Control" serial implementations and a MediaPipe-like framework)
+//! needed to regenerate every table and figure of the paper's evaluation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nnstreamer::pipeline::Pipeline;
+//!
+//! # fn main() -> nnstreamer::Result<()> {
+//! let mut pipeline = Pipeline::parse(
+//!     "videotestsrc num-buffers=32 ! videoconvert format=RGB ! \
+//!      tensor_converter ! tensor_transform mode=normalize ! \
+//!      tensor_sink name=out",
+//! )?;
+//! pipeline.run()?;
+//! # Ok(())
+//! # }
+//! ```
+pub mod apps;
+pub mod baselines;
+pub mod devices;
+pub mod element;
+pub mod elements;
+pub mod error;
+pub mod metrics;
+pub mod nnfw;
+pub mod pipeline;
+pub mod runtime;
+pub mod tensor;
+pub mod video;
+
+pub use error::{Error, Result};

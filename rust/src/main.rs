@@ -1,0 +1,108 @@
+//! `nns-launch`: the gst-launch-style CLI.
+//!
+//! ```text
+//! nns-launch 'videotestsrc num-buffers=30 ! tensor_converter ! fakesink'
+//! nns-launch --list            # registered elements
+//! nns-launch --models          # artifacts in the manifest
+//! ```
+
+use nnstreamer::element::Registry;
+use nnstreamer::pipeline::Pipeline;
+use nnstreamer::runtime::ModelRegistry;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: nns-launch [--list | --models | --stats] '<pipeline description>'\n\
+         \n\
+         examples:\n\
+           nns-launch 'videotestsrc num-buffers=30 ! videoconvert format=RGB ! \\\n\
+                       tensor_converter ! tensor_transform mode=normalize ! fakesink'\n\
+           nns-launch --list"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let mut show_stats = false;
+    let mut desc: Option<String> = None;
+    for a in &args {
+        match a.as_str() {
+            "--list" => {
+                for name in Registry::names() {
+                    println!("{name}");
+                }
+                return;
+            }
+            "--models" => match ModelRegistry::global() {
+                Ok(reg) => {
+                    for name in reg.manifest().names() {
+                        let spec = reg.manifest().get(name).unwrap();
+                        println!(
+                            "{name}\tin={:?}\tout={:?}\tflops={}",
+                            spec.inputs
+                                .iter()
+                                .map(|i| i.to_string())
+                                .collect::<Vec<_>>(),
+                            spec.outputs
+                                .iter()
+                                .map(|i| i.to_string())
+                                .collect::<Vec<_>>(),
+                            spec.flops
+                        );
+                    }
+                    return;
+                }
+                Err(e) => {
+                    eprintln!("cannot open artifacts: {e}");
+                    std::process::exit(1);
+                }
+            },
+            "--stats" => show_stats = true,
+            "--help" | "-h" => usage(),
+            other if desc.is_none() => desc = Some(other.to_string()),
+            other => {
+                eprintln!("unexpected argument {other:?}");
+                usage();
+            }
+        }
+    }
+    let Some(desc) = desc else { usage() };
+    let mut pipeline = match Pipeline::parse(&desc) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("parse error: {e}");
+            std::process::exit(1);
+        }
+    };
+    match pipeline.run() {
+        Ok(report) => {
+            eprintln!(
+                "pipeline finished in {:.3}s (cpu {:.1}%, peak rss {:.1} MiB)",
+                report.wall.as_secs_f64(),
+                report.cpu_percent,
+                report.peak_rss_mib
+            );
+            if show_stats {
+                for e in &report.elements {
+                    eprintln!(
+                        "  {:24} in={:6} out={:6} drop={:4} busy_cpu={:8.3}ms busy_npu={:8.3}ms",
+                        e.name,
+                        e.buffers_in(),
+                        e.buffers_out(),
+                        e.dropped(),
+                        e.busy_cpu().as_secs_f64() * 1e3,
+                        e.busy_npu().as_secs_f64() * 1e3,
+                    );
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("pipeline error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Measurement infrastructure for the paper's evaluation metrics.
+//!
+//! * per-element probes: buffer count, bytes, busy time, per-buffer latency
+//! * process-level CPU% (from `/proc/self/stat`) and peak RSS (`VmHWM`)
+//! * global byte-traffic counters — the substitute for the paper's
+//!   perf-measured "memory access" row (Table III row 4, see DESIGN.md)
+//! * simple reporting tables shared by the benches
+
+pub mod process;
+pub mod report;
+pub mod stats;
+pub mod traffic;
+
+pub use process::{CpuTracker, MemInfo};
+pub use stats::{ElementStats, LatencyStats, PipelineReport};

@@ -1,0 +1,125 @@
+//! Process-level CPU and memory measurement via procfs.
+//!
+//! CPU% is computed the way the paper reports it (`top`-style: utime+stime
+//! delta over wall-clock, so 4 saturated cores read as 400%). Memory is
+//! peak RSS (`VmHWM`), matching the paper's "peak VmRSS" (Table III row 5).
+
+use std::time::Instant;
+
+fn read_proc_stat_jiffies() -> Option<u64> {
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // fields 14/15 (1-based) are utime/stime; field 2 (comm) may contain
+    // spaces but is parenthesized — split after the closing paren.
+    let rest = stat.rsplit_once(')')?.1;
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some(utime + stime)
+}
+
+fn jiffies_per_second() -> f64 {
+    // SAFETY: sysconf is async-signal-safe and always callable.
+    let hz = unsafe { libc::sysconf(libc::_SC_CLK_TCK) };
+    if hz > 0 {
+        hz as f64
+    } else {
+        100.0
+    }
+}
+
+/// Tracks process CPU usage between `start()` and `stop()`.
+pub struct CpuTracker {
+    start_jiffies: u64,
+    start_wall: Instant,
+}
+
+impl CpuTracker {
+    pub fn start() -> Self {
+        Self {
+            start_jiffies: read_proc_stat_jiffies().unwrap_or(0),
+            start_wall: Instant::now(),
+        }
+    }
+
+    /// CPU usage in percent-of-one-core units (may exceed 100).
+    pub fn cpu_percent(&self) -> f64 {
+        let jiffies = read_proc_stat_jiffies().unwrap_or(self.start_jiffies) - self.start_jiffies;
+        let cpu_secs = jiffies as f64 / jiffies_per_second();
+        let wall = self.start_wall.elapsed().as_secs_f64();
+        if wall <= 0.0 {
+            0.0
+        } else {
+            100.0 * cpu_secs / wall
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start_wall.elapsed().as_secs_f64()
+    }
+}
+
+/// Memory info snapshot from /proc/self/status.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemInfo {
+    /// Current resident set size, KiB.
+    pub vm_rss_kib: u64,
+    /// Peak resident set size, KiB.
+    pub vm_hwm_kib: u64,
+}
+
+impl MemInfo {
+    pub fn read() -> MemInfo {
+        let mut out = MemInfo::default();
+        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+            for line in status.lines() {
+                if let Some(v) = line.strip_prefix("VmRSS:") {
+                    out.vm_rss_kib = parse_kib(v);
+                } else if let Some(v) = line.strip_prefix("VmHWM:") {
+                    out.vm_hwm_kib = parse_kib(v);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn rss_mib(&self) -> f64 {
+        self.vm_rss_kib as f64 / 1024.0
+    }
+
+    pub fn peak_mib(&self) -> f64 {
+        self.vm_hwm_kib as f64 / 1024.0
+    }
+}
+
+fn parse_kib(v: &str) -> u64 {
+    v.trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_tracker_measures_busy_loop() {
+        let t = CpuTracker::start();
+        let mut acc = 0u64;
+        let start = Instant::now();
+        while start.elapsed().as_millis() < 60 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        std::hint::black_box(acc);
+        let pct = t.cpu_percent();
+        assert!(pct > 25.0, "busy loop should register CPU, got {pct}");
+    }
+
+    #[test]
+    fn meminfo_reads_something() {
+        let m = MemInfo::read();
+        assert!(m.vm_rss_kib > 0);
+        assert!(m.vm_hwm_kib >= m.vm_rss_kib);
+    }
+}

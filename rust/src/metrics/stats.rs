@@ -1,0 +1,212 @@
+//! Per-element and per-pipeline statistics probes.
+//!
+//! Every scheduled element owns an [`ElementStats`] handle; the scheduler
+//! records buffers, bytes and busy time as items flow. Work executed on the
+//! simulated NPU is recorded in the `npu` domain so that "app CPU" numbers
+//! reproduce the paper's offload accounting (see DESIGN.md substitutions).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which compute domain an element's busy time belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    Cpu,
+    Npu,
+}
+
+#[derive(Debug, Default)]
+pub struct ElementStats {
+    pub name: String,
+    buffers_in: AtomicU64,
+    buffers_out: AtomicU64,
+    bytes_out: AtomicU64,
+    busy_ns_cpu: AtomicU64,
+    busy_ns_npu: AtomicU64,
+    dropped: AtomicU64,
+    /// wall-clock offsets (ns since pipeline epoch) of first/last arrivals
+    first_in_ns: AtomicU64,
+    last_in_ns: AtomicU64,
+    /// min/max/sum of per-buffer processing latency (ns)
+    lat_sum_ns: AtomicU64,
+    lat_max_ns: AtomicU64,
+    lat_count: AtomicU64,
+}
+
+impl ElementStats {
+    pub fn new(name: &str) -> Arc<Self> {
+        Arc::new(ElementStats {
+            name: name.to_string(),
+            ..Default::default()
+        })
+    }
+
+    pub fn record_in(&self) {
+        self.buffers_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an arrival with its wall-clock offset from the pipeline
+    /// epoch (lets throughput be computed over the element's own active
+    /// span instead of the global wall, which may include the draining of
+    /// unrelated slow branches after EOS).
+    pub fn record_in_at(&self, ns_since_epoch: u64) {
+        if self.buffers_in.fetch_add(1, Ordering::Relaxed) == 0 {
+            self.first_in_ns.store(ns_since_epoch, Ordering::Relaxed);
+        }
+        self.last_in_ns.fetch_max(ns_since_epoch, Ordering::Relaxed);
+    }
+
+    /// (first, last) arrival offsets, if any buffers arrived.
+    pub fn arrival_span(&self) -> Option<(Duration, Duration)> {
+        if self.buffers_in.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        Some((
+            Duration::from_nanos(self.first_in_ns.load(Ordering::Relaxed)),
+            Duration::from_nanos(self.last_in_ns.load(Ordering::Relaxed)),
+        ))
+    }
+
+    pub fn record_out(&self, bytes: usize) {
+        self.buffers_out.fetch_add(1, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_drop(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_busy(&self, domain: Domain, dur: Duration) {
+        let ns = dur.as_nanos() as u64;
+        match domain {
+            Domain::Cpu => self.busy_ns_cpu.fetch_add(ns, Ordering::Relaxed),
+            Domain::Npu => self.busy_ns_npu.fetch_add(ns, Ordering::Relaxed),
+        };
+        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.lat_max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.lat_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn buffers_in(&self) -> u64 {
+        self.buffers_in.load(Ordering::Relaxed)
+    }
+
+    pub fn buffers_out(&self) -> u64 {
+        self.buffers_out.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_cpu(&self) -> Duration {
+        Duration::from_nanos(self.busy_ns_cpu.load(Ordering::Relaxed))
+    }
+
+    pub fn busy_npu(&self) -> Duration {
+        Duration::from_nanos(self.busy_ns_npu.load(Ordering::Relaxed))
+    }
+
+    pub fn latency(&self) -> LatencyStats {
+        let count = self.lat_count.load(Ordering::Relaxed);
+        LatencyStats {
+            count,
+            mean: if count == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_nanos(self.lat_sum_ns.load(Ordering::Relaxed) / count)
+            },
+            max: Duration::from_nanos(self.lat_max_ns.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+/// Summary of one pipeline run, assembled by the scheduler.
+#[derive(Debug, Default)]
+pub struct PipelineReport {
+    pub wall: Duration,
+    pub elements: Vec<Arc<ElementStats>>,
+    pub cpu_percent: f64,
+    pub peak_rss_mib: f64,
+}
+
+impl PipelineReport {
+    pub fn element(&self, name: &str) -> Option<&Arc<ElementStats>> {
+        self.elements.iter().find(|e| e.name == name)
+    }
+
+    /// Frame rate at element `name`, measured over the element's own
+    /// arrival span (a pipeline's slow branch draining after EOS must not
+    /// dilute a fast branch's throughput).
+    pub fn fps(&self, name: &str) -> f64 {
+        let Some(e) = self.element(name) else {
+            return 0.0;
+        };
+        let count = e.buffers_in();
+        if count >= 8 {
+            if let Some((first, last)) = e.arrival_span() {
+                let span = last.saturating_sub(first);
+                if !span.is_zero() {
+                    return (count - 1) as f64 / span.as_secs_f64();
+                }
+            }
+        }
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        count as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Sum of CPU-domain busy time across elements.
+    pub fn total_cpu_busy(&self) -> Duration {
+        self.elements.iter().map(|e| e.busy_cpu()).sum()
+    }
+
+    /// Sum of NPU-domain busy time across elements.
+    pub fn total_npu_busy(&self) -> Duration {
+        self.elements.iter().map(|e| e.busy_npu()).sum()
+    }
+
+    /// Element busy CPU over wallclock, percent-of-one-core (the
+    /// framework-attributed CPU load, excluding NPU-domain work).
+    pub fn element_cpu_percent(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        100.0 * self.total_cpu_busy().as_secs_f64() / self.wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let s = ElementStats::new("x");
+        s.record_in();
+        s.record_out(100);
+        s.record_busy(Domain::Cpu, Duration::from_millis(5));
+        s.record_busy(Domain::Npu, Duration::from_millis(7));
+        assert_eq!(s.buffers_in(), 1);
+        assert_eq!(s.buffers_out(), 1);
+        assert_eq!(s.bytes_out(), 100);
+        assert_eq!(s.busy_cpu(), Duration::from_millis(5));
+        assert_eq!(s.busy_npu(), Duration::from_millis(7));
+        let l = s.latency();
+        assert_eq!(l.count, 2);
+        assert_eq!(l.max, Duration::from_millis(7));
+    }
+}

@@ -1,0 +1,75 @@
+//! Global byte-traffic accounting.
+//!
+//! The paper measures "memory access (billions)" with `perf` (Table III
+//! row 4). Hardware counters are not portable to this substrate, so we
+//! count bytes moved through the streaming layer instead: every chunk
+//! allocation/copy counts as a write, every payload access as a read.
+//! The *ordering* between frameworks (NNStreamer vs MediaPipe-like) is what
+//! the table compares, and byte traffic preserves it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static READS: AtomicU64 = AtomicU64::new(0);
+static WRITES: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+pub fn count_read(bytes: usize) {
+    READS.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn count_write(bytes: usize) {
+    WRITES.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Snapshot of (read, write) byte counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Snapshot {
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Snapshot {
+    pub fn total(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        reads: READS.load(Ordering::Relaxed),
+        writes: WRITES.load(Ordering::Relaxed),
+    }
+}
+
+/// Traffic accumulated since an earlier snapshot.
+pub fn since(start: Snapshot) -> Snapshot {
+    let now = snapshot();
+    Snapshot {
+        reads: now.reads - start.reads,
+        writes: now.writes - start.writes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Chunk;
+
+    #[test]
+    fn chunk_alloc_counts_write() {
+        let start = snapshot();
+        let _c = Chunk::from_vec(vec![0u8; 1000]);
+        let d = since(start);
+        assert!(d.writes >= 1000);
+    }
+
+    #[test]
+    fn chunk_read_counts_read() {
+        let c = Chunk::from_vec(vec![0u8; 512]);
+        let start = snapshot();
+        let _ = c.as_bytes();
+        let d = since(start);
+        assert!(d.reads >= 512);
+    }
+}

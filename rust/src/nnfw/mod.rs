@@ -1,0 +1,259 @@
+//! NNFW sub-plugins for `tensor_filter` (§III).
+//!
+//! NNStreamer's Tensor-Filter delegates model execution to interchangeable
+//! NNFW sub-plugins (TensorFlow, TFLite, Vivante, ... — 15+ in release
+//! 1.6.0). Here the same structure exists with:
+//!
+//! * [`XlaNnfw`] — AOT-compiled JAX/Pallas artifacts through PJRT, bound to
+//!   an accelerator (`cpu` with a modeled envelope, or the simulated NPU).
+//!   The `*_opt` / `*_ref` artifact variants stand in for different NNFW
+//!   versions (E4's TFLite 1.15 vs 2.1 — see DESIGN.md).
+//! * [`CustomNnfw`] — user-registered Rust functions (NNStreamer's
+//!   custom-filter sub-plugin, used heavily by E3's NMS/BBR/patch stages).
+//! * passthrough — identity (testing).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use once_cell::sync::Lazy;
+
+use crate::devices::{DeviceClass, NpuSim};
+use crate::error::{Error, Result};
+use crate::runtime::{Model, ModelRegistry};
+use crate::tensor::{Chunk, TensorInfo};
+
+/// Which accelerator executes an [`XlaNnfw`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Accelerator {
+    /// Host CPU with a modeled service envelope (see [`cpu_rate_flops`]).
+    Cpu,
+    /// The simulated NPU (single shared hardware queue).
+    Npu,
+}
+
+impl Accelerator {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "cpu" => Accelerator::Cpu,
+            "npu" => Accelerator::Npu,
+            other => {
+                return Err(Error::Parse(format!("unknown accelerator {other:?}")))
+            }
+        })
+    }
+}
+
+/// Modeled CPU inference throughput (FLOPs/s). The embedded-CPU envelope of
+/// E1's "C/I3" rows: the A311D's Cortex-A73 runs I3 ~23x slower than its
+/// NPU. Settable by benches via [`set_cpu_rate_flops`]; 0 disables the
+/// envelope (pure real time).
+static CPU_RATE_FLOPS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+pub fn set_cpu_rate_flops(rate: u64) {
+    CPU_RATE_FLOPS.store(rate, std::sync::atomic::Ordering::Relaxed);
+}
+
+pub fn cpu_rate_flops() -> u64 {
+    CPU_RATE_FLOPS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// An NNFW sub-plugin instance bound to one model.
+pub trait Nnfw: Send {
+    /// Input tensor specs (NNStreamer minor-first dim order).
+    fn inputs(&self) -> Vec<TensorInfo>;
+    /// Output tensor specs (minor-first).
+    fn outputs(&self) -> Vec<TensorInfo>;
+    /// Run inference on one frame's chunks.
+    fn invoke(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>>;
+    /// Whether invoke() blocks on the NPU queue (busy time charged to NPU).
+    fn is_npu(&self) -> bool {
+        false
+    }
+}
+
+/// Convert a manifest (numpy major-first) spec to stream (minor-first) dims.
+fn to_stream_info(info: &TensorInfo) -> TensorInfo {
+    let mut dims: Vec<usize> = info.dims.as_slice().to_vec();
+    dims.reverse();
+    TensorInfo::new(info.dtype, crate::tensor::Dims::new(&dims))
+}
+
+/// XLA/PJRT sub-plugin.
+pub struct XlaNnfw {
+    model: Arc<Model>,
+    accel: Accelerator,
+    class: DeviceClass,
+}
+
+impl XlaNnfw {
+    pub fn load(name: &str, accel: Accelerator, class: DeviceClass) -> Result<Self> {
+        let reg = ModelRegistry::global()?;
+        Ok(Self {
+            model: reg.load(name)?,
+            accel,
+            class,
+        })
+    }
+
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+}
+
+impl Nnfw for XlaNnfw {
+    fn inputs(&self) -> Vec<TensorInfo> {
+        self.model.spec.inputs.iter().map(to_stream_info).collect()
+    }
+
+    fn outputs(&self) -> Vec<TensorInfo> {
+        self.model.spec.outputs.iter().map(to_stream_info).collect()
+    }
+
+    fn invoke(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>> {
+        match self.accel {
+            Accelerator::Npu => {
+                let owned: Vec<Chunk> = inputs.iter().map(|&c| c.clone()).collect();
+                NpuSim::global().submit(self.model.clone(), owned)
+            }
+            Accelerator::Cpu => {
+                let t0 = Instant::now();
+                let out = self.model.execute(inputs)?;
+                let real = t0.elapsed();
+                // modeled envelope: embedded-CPU rate x device class
+                let rate = cpu_rate_flops();
+                let mut target = if rate > 0 {
+                    Duration::from_secs_f64(self.model.spec.flops as f64 / rate as f64)
+                } else {
+                    real
+                };
+                target = target.max(real).mul_f64(self.class.throttle_factor());
+                if target > real {
+                    std::thread::sleep(target - real);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn is_npu(&self) -> bool {
+        self.accel == Accelerator::Npu
+    }
+}
+
+/// A registered custom-filter function: chunks in, chunks out.
+pub type CustomFn =
+    Arc<dyn Fn(&[&Chunk]) -> Result<Vec<Chunk>> + Send + Sync + 'static>;
+
+struct CustomEntry {
+    f: CustomFn,
+    inputs: Vec<TensorInfo>,
+    outputs: Vec<TensorInfo>,
+}
+
+static CUSTOM_REGISTRY: Lazy<Mutex<HashMap<String, Arc<CustomEntry>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Register a custom filter function under `name` (the
+/// `framework=custom model=<name>` path of tensor_filter).
+pub fn register_custom(
+    name: &str,
+    inputs: Vec<TensorInfo>,
+    outputs: Vec<TensorInfo>,
+    f: impl Fn(&[&Chunk]) -> Result<Vec<Chunk>> + Send + Sync + 'static,
+) {
+    CUSTOM_REGISTRY.lock().unwrap().insert(
+        name.to_string(),
+        Arc::new(CustomEntry {
+            f: Arc::new(f),
+            inputs,
+            outputs,
+        }),
+    );
+}
+
+/// Custom-function sub-plugin.
+pub struct CustomNnfw {
+    entry: Arc<CustomEntry>,
+}
+
+impl CustomNnfw {
+    pub fn load(name: &str) -> Result<Self> {
+        let entry = CUSTOM_REGISTRY
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Runtime(format!("custom filter {name:?} not registered")))?;
+        Ok(Self { entry })
+    }
+}
+
+impl Nnfw for CustomNnfw {
+    fn inputs(&self) -> Vec<TensorInfo> {
+        self.entry.inputs.clone()
+    }
+
+    fn outputs(&self) -> Vec<TensorInfo> {
+        self.entry.outputs.clone()
+    }
+
+    fn invoke(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>> {
+        (self.entry.f)(inputs)
+    }
+}
+
+/// Identity sub-plugin (framework=passthrough).
+pub struct PassthroughNnfw {
+    pub info: Vec<TensorInfo>,
+}
+
+impl Nnfw for PassthroughNnfw {
+    fn inputs(&self) -> Vec<TensorInfo> {
+        self.info.clone()
+    }
+
+    fn outputs(&self) -> Vec<TensorInfo> {
+        self.info.clone()
+    }
+
+    fn invoke(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>> {
+        Ok(inputs.iter().map(|&c| c.clone()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn custom_registration_and_invoke() {
+        register_custom(
+            "double",
+            vec![TensorInfo::new(DType::F32, [2])],
+            vec![TensorInfo::new(DType::F32, [2])],
+            |ins| {
+                let v = ins[0].to_f32_vec()?;
+                let out: Vec<f32> = v.iter().map(|x| x * 2.0).collect();
+                Ok(vec![Chunk::from_f32(&out)])
+            },
+        );
+        let f = CustomNnfw::load("double").unwrap();
+        let c = Chunk::from_f32(&[1.0, 2.5]);
+        let out = f.invoke(&[&c]).unwrap();
+        assert_eq!(out[0].to_f32_vec().unwrap(), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn unknown_custom_errors() {
+        assert!(CustomNnfw::load("nope").is_err());
+    }
+
+    #[test]
+    fn stream_info_reverses_dims() {
+        let spec = TensorInfo::new(DType::F32, [1, 64, 48, 3]);
+        let s = to_stream_info(&spec);
+        assert_eq!(s.dims.as_slice(), &[3, 48, 64, 1]);
+    }
+}

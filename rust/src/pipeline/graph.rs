@@ -1,0 +1,344 @@
+//! Pipeline graph: elements + links, validation, caps negotiation.
+
+use std::collections::HashMap;
+
+use crate::element::{Element, PadSpec, Registry};
+use crate::error::{Error, Result};
+use crate::tensor::Caps;
+
+/// Node identifier within a [`Graph`].
+pub type NodeId = usize;
+
+pub struct Node {
+    pub name: String,
+    pub element: Box<dyn Element>,
+    /// Resolved output caps per src pad (filled by [`Graph::negotiate_all`]).
+    pub out_caps: Vec<Caps>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Link {
+    pub src_node: NodeId,
+    pub src_pad: usize,
+    pub dst_node: NodeId,
+    pub dst_pad: usize,
+}
+
+/// A directed acyclic element graph.
+#[derive(Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    names: HashMap<String, NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an element instance under a unique name.
+    pub fn add_element(
+        &mut self,
+        name: impl Into<String>,
+        element: Box<dyn Element>,
+    ) -> Result<NodeId> {
+        let name = name.into();
+        if self.names.contains_key(&name) {
+            return Err(Error::Graph(format!("duplicate element name {name:?}")));
+        }
+        let id = self.nodes.len();
+        self.names.insert(name.clone(), id);
+        self.nodes.push(Node {
+            name,
+            element,
+            out_caps: Vec::new(),
+        });
+        Ok(id)
+    }
+
+    /// Add an element by factory name with an auto-generated unique name.
+    pub fn add(&mut self, factory: &str) -> Result<NodeId> {
+        let element = Registry::make(factory)?;
+        let mut i = self.nodes.len();
+        loop {
+            let name = format!("{factory}{i}");
+            if !self.names.contains_key(&name) {
+                return self.add_element(name, element);
+            }
+            i += 1;
+        }
+    }
+
+    /// Rename a node (used by the parser when it sees `name=`).
+    pub fn rename(&mut self, id: NodeId, new_name: impl Into<String>) -> Result<()> {
+        let new_name = new_name.into();
+        if self.names.contains_key(&new_name) {
+            return Err(Error::Graph(format!("duplicate element name {new_name:?}")));
+        }
+        let old = std::mem::replace(&mut self.nodes[id].name, new_name.clone());
+        self.names.remove(&old);
+        self.names.insert(new_name, id);
+        Ok(())
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<NodeId> {
+        self.names.get(name).copied()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    pub fn set_property(&mut self, id: NodeId, key: &str, value: &str) -> Result<()> {
+        self.nodes[id].element.set_property(key, value)
+    }
+
+    /// Number of links already attached to `id`'s src side.
+    pub fn n_src_links(&self, id: NodeId) -> usize {
+        self.links.iter().filter(|l| l.src_node == id).count()
+    }
+
+    /// Number of links already attached to `id`'s sink side.
+    pub fn n_sink_links(&self, id: NodeId) -> usize {
+        self.links.iter().filter(|l| l.dst_node == id).count()
+    }
+
+    /// Link with automatic pad assignment (next free pad on both sides).
+    pub fn link(&mut self, src: NodeId, dst: NodeId) -> Result<()> {
+        let src_pad = self.n_src_links(src);
+        let dst_pad = self.n_sink_links(dst);
+        self.link_pads(src, src_pad, dst, dst_pad)
+    }
+
+    pub fn link_pads(
+        &mut self,
+        src_node: NodeId,
+        src_pad: usize,
+        dst_node: NodeId,
+        dst_pad: usize,
+    ) -> Result<()> {
+        if src_node >= self.nodes.len() || dst_node >= self.nodes.len() {
+            return Err(Error::Graph("link references unknown node".into()));
+        }
+        for l in &self.links {
+            if l.src_node == src_node && l.src_pad == src_pad {
+                return Err(Error::Graph(format!(
+                    "src pad {}:{src_pad} already linked",
+                    self.nodes[src_node].name
+                )));
+            }
+            if l.dst_node == dst_node && l.dst_pad == dst_pad {
+                return Err(Error::Graph(format!(
+                    "sink pad {}:{dst_pad} already linked",
+                    self.nodes[dst_node].name
+                )));
+            }
+        }
+        self.links.push(Link {
+            src_node,
+            src_pad,
+            dst_node,
+            dst_pad,
+        });
+        Ok(())
+    }
+
+    /// Validate pad cardinality and acyclicity; returns a topological order.
+    pub fn validate(&self) -> Result<Vec<NodeId>> {
+        for (id, node) in self.nodes.iter().enumerate() {
+            let n_sinks = self.n_sink_links(id);
+            let n_srcs = self.n_src_links(id);
+            let spec_sink = node.element.sink_pads();
+            let spec_src = node.element.src_pads();
+            // sources have Fixed(0) sink specs; sinks have Fixed(0) src specs
+            let sink_ok = match spec_sink {
+                PadSpec::Fixed(0) => n_sinks == 0,
+                spec => spec.accepts(n_sinks),
+            };
+            if !sink_ok {
+                return Err(Error::Graph(format!(
+                    "element {} ({}) has {} sink links, wants {:?}",
+                    node.name,
+                    node.element.type_name(),
+                    n_sinks,
+                    spec_sink
+                )));
+            }
+            let src_ok = match spec_src {
+                PadSpec::Fixed(0) => n_srcs == 0,
+                spec => spec.accepts(n_srcs) || n_srcs == 0, // unlinked src ok for some
+            };
+            if !src_ok {
+                return Err(Error::Graph(format!(
+                    "element {} ({}) has {} src links, wants {:?}",
+                    node.name,
+                    node.element.type_name(),
+                    n_srcs,
+                    spec_src
+                )));
+            }
+            // dense pad indices
+            for pad in 0..n_sinks {
+                if !self
+                    .links
+                    .iter()
+                    .any(|l| l.dst_node == id && l.dst_pad == pad)
+                {
+                    return Err(Error::Graph(format!(
+                        "element {} sink pads not dense (missing pad {pad})",
+                        node.name
+                    )));
+                }
+            }
+        }
+        self.topo_order()
+    }
+
+    /// Kahn topological sort; errors on cycles (§III: GStreamer prohibits
+    /// stream cycles — recurrence goes through tensor_repo instead).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for l in &self.links {
+            indeg[l.dst_node] += 1;
+        }
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for l in self.links.iter().filter(|l| l.src_node == id) {
+                indeg[l.dst_node] -= 1;
+                if indeg[l.dst_node] == 0 {
+                    queue.push(l.dst_node);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(Error::Graph(
+                "pipeline contains a cycle (use tensor_repo_src/sink for recurrences)".into(),
+            ));
+        }
+        Ok(order)
+    }
+
+    /// Run caps negotiation over the whole graph in topological order.
+    /// After this, every node's `out_caps[pad]` is fixed.
+    pub fn negotiate_all(&mut self) -> Result<()> {
+        let order = self.validate()?;
+        // Pre-pass: propagate capsfilter restrictions onto direct upstream
+        // neighbors (the `src ! caps ! ...` idiom of gst-launch).
+        let proposals: Vec<(NodeId, Caps)> = self
+            .links
+            .iter()
+            .filter_map(|l| {
+                let dst = &self.nodes[l.dst_node];
+                if dst.element.type_name() == "capsfilter" {
+                    dst.element
+                        .proposed_caps()
+                        .map(|caps| (l.src_node, caps))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for (node, caps) in proposals {
+            self.nodes[node].element.propose_caps(&caps)?;
+        }
+        for id in order {
+            let n_sinks = self.n_sink_links(id);
+            let n_srcs = self.n_src_links(id);
+            let mut in_caps = vec![Caps::Any; n_sinks];
+            for l in self.links.iter().filter(|l| l.dst_node == id) {
+                let up = &self.nodes[l.src_node];
+                let caps = up.out_caps.get(l.src_pad).cloned().ok_or_else(|| {
+                    Error::Negotiation(format!(
+                        "upstream {} pad {} has no negotiated caps",
+                        up.name, l.src_pad
+                    ))
+                })?;
+                in_caps[l.dst_pad] = caps;
+            }
+            let node = &mut self.nodes[id];
+            let out = node
+                .element
+                .negotiate(&in_caps, n_srcs)
+                .map_err(|e| Error::Negotiation(format!("{}: {e}", node.name)))?;
+            if out.len() < n_srcs {
+                return Err(Error::Negotiation(format!(
+                    "{} produced {} caps for {} src links",
+                    node.name,
+                    out.len(),
+                    n_srcs
+                )));
+            }
+            node.out_caps = out;
+        }
+        Ok(())
+    }
+
+    /// Links out of a node, ordered by src pad.
+    pub fn links_from(&self, id: NodeId) -> Vec<Link> {
+        let mut v: Vec<Link> = self
+            .links
+            .iter()
+            .copied()
+            .filter(|l| l.src_node == id)
+            .collect();
+        v.sort_by_key(|l| l.src_pad);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_validate_linear() {
+        let mut g = Graph::new();
+        let src = g.add("videotestsrc").unwrap();
+        g.set_property(src, "num-buffers", "4").unwrap();
+        let conv = g.add("tensor_converter").unwrap();
+        let sink = g.add("fakesink").unwrap();
+        g.link(src, conv).unwrap();
+        g.link(conv, sink).unwrap();
+        let order = g.validate().unwrap();
+        assert_eq!(order.len(), 3);
+        g.negotiate_all().unwrap();
+        assert!(matches!(g.node(conv).out_caps[0], Caps::Tensor { .. }));
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let mut g = Graph::new();
+        let a = g.add("tensor_transform").unwrap();
+        let b = g.add("tensor_transform").unwrap();
+        g.link(a, b).unwrap();
+        g.link(b, a).unwrap();
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut g = Graph::new();
+        g.add_element("x", Registry::make("queue").unwrap()).unwrap();
+        assert!(g
+            .add_element("x", Registry::make("queue").unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn double_link_same_pad_rejected() {
+        let mut g = Graph::new();
+        let a = g.add("videotestsrc").unwrap();
+        let b = g.add("fakesink").unwrap();
+        let c = g.add("fakesink").unwrap();
+        g.link_pads(a, 0, b, 0).unwrap();
+        assert!(g.link_pads(a, 0, c, 0).is_err());
+    }
+}

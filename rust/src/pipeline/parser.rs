@@ -1,0 +1,219 @@
+//! gst-launch-style pipeline description parser.
+//!
+//! Supported grammar (the subset the paper's pipelines use):
+//!
+//! ```text
+//! pipeline   := chain { chain }
+//! chain      := endpoint { "!" endpoint }
+//! endpoint   := element | capsfilter | branchref
+//! element    := FACTORY { prop }
+//! prop       := KEY "=" VALUE        (quotes allowed around VALUE)
+//! capsfilter := MEDIA "," FIELDS     (e.g. video/x-raw,format=RGB,...)
+//! branchref  := NAME "."             (continue from a named element)
+//! ```
+//!
+//! `name=foo` renames an element so later chains can branch from `foo.`,
+//! exactly like gst-launch:
+//!
+//! ```text
+//! videotestsrc ! tee name=t   t. ! queue ! fakesink   t. ! queue ! fakesink
+//! ```
+
+use crate::element::Registry;
+use crate::error::{Error, Result};
+use crate::pipeline::graph::{Graph, NodeId};
+use crate::tensor::Caps;
+
+/// Parse a launch description into a [`Graph`].
+pub fn parse(desc: &str) -> Result<Graph> {
+    let tokens = tokenize(desc)?;
+    if tokens.is_empty() {
+        return Err(Error::Parse("empty pipeline description".into()));
+    }
+    let mut g = Graph::new();
+    // current chain head: the node new links attach from
+    let mut current: Option<NodeId> = None;
+    // whether a "!" is pending between current and the next endpoint
+    let mut pending_link = false;
+
+    for tok in tokens {
+        match tok.as_str() {
+            "!" => {
+                if current.is_none() || pending_link {
+                    return Err(Error::Parse("dangling '!'".into()));
+                }
+                pending_link = true;
+            }
+            t if t.ends_with('.') && !t.contains('=') && !t.contains('/') => {
+                // branch reference: `name. ! ...` continues from a named
+                // element; `... ! name.` links into it (gst-launch both ways)
+                let name = &t[..t.len() - 1];
+                let id = g
+                    .by_name(name)
+                    .ok_or_else(|| Error::Parse(format!("unknown branch reference {name:?}")))?;
+                if pending_link {
+                    let src = current
+                        .ok_or_else(|| Error::Parse("link without source".into()))?;
+                    g.link(src, id)?;
+                    pending_link = false;
+                    // the chain terminates at the reference
+                    current = None;
+                } else {
+                    current = Some(id);
+                }
+            }
+            t if t.contains('=') && !t.contains('/') && current.is_some() && !pending_link => {
+                // property on the current element
+                let (k, v) = t.split_once('=').unwrap();
+                let id = current.unwrap();
+                if k == "name" {
+                    g.rename(id, v)?;
+                } else {
+                    g.set_property(id, k, unquote(v))?;
+                }
+            }
+            t if t.contains('/') => {
+                // caps filter
+                let caps = Caps::parse(t)?;
+                let id = g.add("capsfilter")?;
+                g.set_property(id, "caps", &caps.to_string())?;
+                attach(&mut g, &mut current, &mut pending_link, id)?;
+            }
+            t => {
+                if !Registry::exists(t) {
+                    return Err(Error::Parse(format!("no such element {t:?}")));
+                }
+                let id = g.add(t)?;
+                attach(&mut g, &mut current, &mut pending_link, id)?;
+            }
+        }
+    }
+    if pending_link {
+        return Err(Error::Parse("pipeline ends with '!'".into()));
+    }
+    Ok(g)
+}
+
+fn attach(
+    g: &mut Graph,
+    current: &mut Option<NodeId>,
+    pending_link: &mut bool,
+    id: NodeId,
+) -> Result<()> {
+    if *pending_link {
+        let src = current.ok_or_else(|| Error::Parse("link without source".into()))?;
+        g.link(src, id)?;
+        *pending_link = false;
+    }
+    *current = Some(id);
+    Ok(())
+}
+
+fn unquote(v: &str) -> &str {
+    let v = v.trim();
+    if (v.starts_with('"') && v.ends_with('"') && v.len() >= 2)
+        || (v.starts_with('\'') && v.ends_with('\'') && v.len() >= 2)
+    {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
+/// Split on whitespace, honoring quotes inside property values.
+fn tokenize(desc: &str) -> Result<Vec<String>> {
+    let mut tokens = Vec::new();
+    let mut cur = String::new();
+    let mut quote: Option<char> = None;
+    for c in desc.chars() {
+        match quote {
+            Some(q) => {
+                cur.push(c);
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => {
+                    cur.push(c);
+                    quote = Some(c);
+                }
+                c if c.is_whitespace() => {
+                    if !cur.is_empty() {
+                        tokens.push(std::mem::take(&mut cur));
+                    }
+                }
+                c => cur.push(c),
+            },
+        }
+    }
+    if quote.is_some() {
+        return Err(Error::Parse("unterminated quote".into()));
+    }
+    if !cur.is_empty() {
+        tokens.push(cur);
+    }
+    Ok(tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_linear_pipeline() {
+        let g = parse(
+            "videotestsrc num-buffers=8 ! videoconvert format=RGB ! \
+             tensor_converter ! fakesink",
+        )
+        .unwrap();
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.links.len(), 3);
+    }
+
+    #[test]
+    fn parses_named_branches() {
+        let g = parse(
+            "videotestsrc num-buffers=4 ! tee name=t \
+             t. ! queue ! fakesink \
+             t. ! queue ! fakesink",
+        )
+        .unwrap();
+        assert_eq!(g.links.len(), 5);
+        let t = g.by_name("t").unwrap();
+        assert_eq!(g.n_src_links(t), 2);
+    }
+
+    #[test]
+    fn parses_caps_filter() {
+        let g = parse(
+            "videotestsrc ! video/x-raw,format=RGB,width=64,height=64,framerate=30 ! fakesink",
+        )
+        .unwrap();
+        assert_eq!(g.nodes.len(), 3);
+        let cf = g.by_name("capsfilter1").unwrap();
+        assert_eq!(g.node(cf).element.type_name(), "capsfilter");
+    }
+
+    #[test]
+    fn rejects_unknown_element() {
+        assert!(parse("nosuchelement ! fakesink").is_err());
+    }
+
+    #[test]
+    fn rejects_dangling_link() {
+        assert!(parse("videotestsrc !").is_err());
+        assert!(parse("! fakesink").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_branch() {
+        assert!(parse("videotestsrc ! fakesink nope. ! fakesink").is_err());
+    }
+
+    #[test]
+    fn quoted_property_values() {
+        let g = parse("videotestsrc pattern=\"smpte\" ! fakesink").unwrap();
+        assert_eq!(g.nodes.len(), 2);
+    }
+}

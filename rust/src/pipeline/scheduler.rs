@@ -1,0 +1,255 @@
+//! Thread-per-element scheduler with bounded-channel links.
+//!
+//! Every element runs on its own OS thread; links are bounded MPSC
+//! channels, so push blocks when a consumer is saturated (GStreamer's
+//! synchronous push + implicit backpressure). `queue` elements raise the
+//! channel capacity and thereby decouple producer from consumer — exactly
+//! the role queues play in the paper's pipelines.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::element::{Ctx, Element, Flow, Item, LinkSender};
+use crate::error::{Error, Result};
+use crate::metrics::stats::{ElementStats, PipelineReport};
+use crate::metrics::CpuTracker;
+use crate::pipeline::graph::Graph;
+
+/// A running pipeline: join to completion via [`Running::wait`].
+pub struct Running {
+    threads: Vec<std::thread::JoinHandle<Result<Box<dyn Element>>>>,
+    node_names: Vec<String>,
+    pub stats: Vec<Arc<ElementStats>>,
+    pub stop: Arc<AtomicBool>,
+    pub epoch: Instant,
+    cpu: CpuTracker,
+}
+
+impl Running {
+    /// Request a stop (live sources exit at the next frame boundary).
+    pub fn request_stop(&self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Join all element threads and assemble the run report.
+    /// Elements are returned (in node order) for post-run inspection.
+    pub fn wait(self) -> Result<(PipelineReport, Vec<(String, Box<dyn Element>)>)> {
+        let mut elements = Vec::new();
+        let mut first_err: Option<Error> = None;
+        for (th, name) in self.threads.into_iter().zip(self.node_names) {
+            match th.join() {
+                Ok(Ok(el)) => elements.push((name, el)),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(Error::Runtime(format!("element {name} panicked")));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mem = crate::metrics::MemInfo::read();
+        let report = PipelineReport {
+            wall: self.epoch.elapsed(),
+            elements: self.stats,
+            cpu_percent: self.cpu.cpu_percent(),
+            peak_rss_mib: mem.peak_mib(),
+        };
+        Ok((report, elements))
+    }
+}
+
+/// Start every element of a negotiated graph. Consumes the graph's
+/// elements; they come back from [`Running::wait`].
+pub fn start(graph: &mut Graph) -> Result<Running> {
+    graph.negotiate_all()?;
+
+    let n = graph.nodes.len();
+    let stop = Arc::new(AtomicBool::new(false));
+    let epoch = Instant::now();
+
+    // Per-node stats + input channels.
+    let stats: Vec<Arc<ElementStats>> = graph
+        .nodes
+        .iter()
+        .map(|node| ElementStats::new(&node.name))
+        .collect();
+
+    let mut senders: Vec<Option<SyncSender<(usize, Item)>>> = vec![None; n];
+    let mut receivers: Vec<Option<std::sync::mpsc::Receiver<(usize, Item)>>> =
+        (0..n).map(|_| None).collect();
+    for id in 0..n {
+        let n_sinks = graph.n_sink_links(id);
+        if n_sinks > 0 {
+            let cap = graph.nodes[id]
+                .element
+                .preferred_input_capacity()
+                .max(1);
+            let (tx, rx) = sync_channel(cap);
+            senders[id] = Some(tx);
+            receivers[id] = Some(rx);
+        }
+    }
+
+    // Build per-node output sender tables.
+    let mut outputs: Vec<Vec<Option<LinkSender>>> = (0..n).map(|_| Vec::new()).collect();
+    for id in 0..n {
+        let links = graph.links_from(id);
+        let n_pads = links.iter().map(|l| l.src_pad + 1).max().unwrap_or(0);
+        let mut table: Vec<Option<LinkSender>> = (0..n_pads).map(|_| None).collect();
+        for l in links {
+            let tx = senders[l.dst_node]
+                .as_ref()
+                .expect("linked dst must have a channel")
+                .clone();
+            let delivery = graph.nodes[l.dst_node].element.input_delivery();
+            table[l.src_pad] = Some(LinkSender::new(
+                tx,
+                l.dst_pad,
+                delivery,
+                stats[l.dst_node].clone(),
+            ));
+        }
+        outputs[id] = table;
+    }
+    // Drop the original senders so channels close when all producers exit.
+    drop(senders);
+
+    let mut threads = Vec::with_capacity(n);
+    let mut node_names = Vec::with_capacity(n);
+    // Move elements out of the graph into their threads.
+    let nodes = std::mem::take(&mut graph.nodes);
+    for (id, node) in nodes.into_iter().enumerate() {
+        let n_sink_links = graph
+            .links
+            .iter()
+            .filter(|l| l.dst_node == id)
+            .count();
+        let mut ctx = Ctx {
+            outputs: std::mem::take(&mut outputs[id]),
+            stats: stats[id].clone(),
+            stop: stop.clone(),
+            epoch,
+            domain: node.element.domain(),
+            idle_ns: 0,
+        };
+        let rx = receivers[id].take();
+        let name = node.name.clone();
+        node_names.push(name.clone());
+        let mut element = node.element;
+        let th = std::thread::Builder::new()
+            .name(name.clone())
+            .spawn(move || -> Result<Box<dyn Element>> {
+                if element.is_source() {
+                    run_source(&mut *element, &mut ctx)?;
+                } else {
+                    run_consumer(&mut *element, rx.expect("consumer has channel"), n_sink_links, &mut ctx)?;
+                }
+                Ok(element)
+            })
+            .map_err(|e| Error::Runtime(format!("spawn {name}: {e}")))?;
+        threads.push(th);
+    }
+
+    Ok(Running {
+        threads,
+        node_names,
+        stats,
+        stop,
+        epoch,
+        cpu: CpuTracker::start(),
+    })
+}
+
+fn run_source(element: &mut dyn Element, ctx: &mut Ctx) -> Result<()> {
+    loop {
+        if ctx.stopped() {
+            break;
+        }
+        let t0 = Instant::now();
+        let flow = element.generate(ctx)?;
+        let busy = t0.elapsed().saturating_sub(ctx.take_idle());
+        ctx.stats.record_busy(ctx.domain, busy);
+        if flow == Flow::Eos {
+            break;
+        }
+    }
+    for pad in 0..ctx.n_src_pads() {
+        ctx.push_eos(pad);
+    }
+    Ok(())
+}
+
+fn run_consumer(
+    element: &mut dyn Element,
+    rx: std::sync::mpsc::Receiver<(usize, Item)>,
+    n_sink_links: usize,
+    ctx: &mut Ctx,
+) -> Result<()> {
+    let mut eos_seen = 0usize;
+    let mut early_eos = false;
+    while let Ok((pad, item)) = rx.recv() {
+        let is_eos = matches!(item, Item::Eos);
+        if is_eos {
+            eos_seen += 1;
+        } else {
+            let at = Instant::now().duration_since(ctx.epoch).as_nanos() as u64;
+            ctx.stats.record_in_at(at);
+        }
+        if !early_eos {
+            let t0 = Instant::now();
+            let flow = element.handle(pad, item, ctx);
+            let busy = t0.elapsed().saturating_sub(ctx.take_idle());
+            ctx.stats.record_busy(ctx.domain, busy);
+            match flow {
+                Ok(Flow::Continue) => {}
+                Ok(Flow::Eos) => {
+                    // Element declared end-of-stream: flush, notify
+                    // downstream, then keep draining input (discarding) so
+                    // upstream never blocks on a dead consumer.
+                    element.flush(ctx)?;
+                    for p in 0..ctx.n_src_pads() {
+                        ctx.push_eos(p);
+                    }
+                    early_eos = true;
+                }
+                Err(e) => {
+                    // Propagate EOS downstream so the pipeline unwinds,
+                    // then surface the error.
+                    for p in 0..ctx.n_src_pads() {
+                        ctx.push_eos(p);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        if eos_seen >= n_sink_links {
+            break;
+        }
+    }
+    if !early_eos {
+        element.flush(ctx)?;
+        for p in 0..ctx.n_src_pads() {
+            ctx.push_eos(p);
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: sleep until the pipeline-relative deadline `pts_ns`
+/// (live-source pacing helper).
+pub fn sleep_until(epoch: Instant, pts_ns: u64) {
+    let deadline = epoch + Duration::from_nanos(pts_ns);
+    let now = Instant::now();
+    if deadline > now {
+        std::thread::sleep(deadline - now);
+    }
+}

@@ -1,0 +1,139 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes one line per model:
+//! ```text
+//! name\tin=float32:1x64x64x3[;...]\tout=float32:1x100[;...]\tflops=N
+//! ```
+//! (Line-based on purpose: the offline vendor set has no JSON crate, and a
+//! TSV manifest diffs nicely in review.)
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::{DType, Dims, TensorInfo};
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub inputs: Vec<TensorInfo>,
+    pub outputs: Vec<TensorInfo>,
+    pub flops: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    models: HashMap<String, ModelSpec>,
+}
+
+fn parse_tensor_list(s: &str) -> Result<Vec<TensorInfo>> {
+    s.split(';')
+        .map(|spec| {
+            let (dtype, dims) = spec
+                .split_once(':')
+                .ok_or_else(|| Error::Manifest(format!("bad tensor spec {spec:?}")))?;
+            let dims: Vec<usize> = dims
+                .split('x')
+                .map(|d| {
+                    d.parse()
+                        .map_err(|_| Error::Manifest(format!("bad dim {d:?} in {spec:?}")))
+                })
+                .collect::<Result<_>>()?;
+            Ok(TensorInfo::new(DType::parse(dtype)?, Dims::new(&dims)))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut models = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut inputs = None;
+            let mut outputs = None;
+            let mut flops = 0u64;
+            for (i, field) in line.split('\t').enumerate() {
+                if i == 0 {
+                    name = Some(field.to_string());
+                } else if let Some(v) = field.strip_prefix("in=") {
+                    inputs = Some(parse_tensor_list(v)?);
+                } else if let Some(v) = field.strip_prefix("out=") {
+                    outputs = Some(parse_tensor_list(v)?);
+                } else if let Some(v) = field.strip_prefix("flops=") {
+                    flops = v.parse().unwrap_or(0);
+                }
+            }
+            let spec = ModelSpec {
+                name: name
+                    .ok_or_else(|| Error::Manifest(format!("line {}: no name", lineno + 1)))?,
+                inputs: inputs
+                    .ok_or_else(|| Error::Manifest(format!("line {}: no in=", lineno + 1)))?,
+                outputs: outputs
+                    .ok_or_else(|| Error::Manifest(format!("line {}: no out=", lineno + 1)))?,
+                flops,
+            };
+            models.insert(spec.name.clone(), spec);
+        }
+        Ok(Self { models })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.models.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let m = Manifest::parse(
+            "i3_opt\tin=float32:1x64x64x3\tout=float32:1x100\tflops=12345\n\
+             ssd_opt\tin=float32:1x96x96x3\tout=float32:1x360x4;float32:1x360x11\tflops=0\n\
+             # comment\n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 2);
+        let i3 = m.get("i3_opt").unwrap();
+        assert_eq!(i3.inputs[0].dims.as_slice(), &[1, 64, 64, 3]);
+        assert_eq!(i3.flops, 12345);
+        let ssd = m.get("ssd_opt").unwrap();
+        assert_eq!(ssd.outputs.len(), 2);
+        assert_eq!(ssd.outputs[1].dims.as_slice(), &[1, 360, 11]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("name_only\n").is_err());
+        assert!(Manifest::parse("x\tin=float32:ZxZ\tout=float32:1\n").is_err());
+    }
+}

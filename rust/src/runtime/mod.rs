@@ -1,0 +1,246 @@
+//! Model runtime: loads AOT artifacts (HLO text) and executes them through
+//! the XLA PJRT CPU client.
+//!
+//! This is the "NNFW delegation" layer of the paper: the pipeline never
+//! computes tensors itself, it hands frames to a compiled model executable
+//! — here one produced by `python/compile/aot.py` (JAX + Pallas, lowered
+//! once at build time; Python is never on this path).
+
+pub mod manifest;
+pub mod single;
+
+pub use manifest::{Manifest, ModelSpec};
+pub use single::SingleShot;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use crate::error::{Error, Result};
+use crate::tensor::{Buffer, Chunk};
+
+/// A compiled model executable plus its IO spec.
+pub struct Model {
+    pub spec: ModelSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// xla's loaded executable wraps a thread-safe PJRT client.
+unsafe impl Send for Model {}
+unsafe impl Sync for Model {}
+
+impl Model {
+    /// Execute on f32 input buffers; returns one output buffer per output
+    /// tensor. Inputs are validated against the manifest spec.
+    pub fn execute(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (chunk, info) in inputs.iter().zip(&self.spec.inputs) {
+            if chunk.len() != info.size_bytes() {
+                return Err(Error::Runtime(format!(
+                    "{}: input payload {}B does not match {} ({}B)",
+                    self.spec.name,
+                    chunk.len(),
+                    info,
+                    info.size_bytes()
+                )));
+            }
+            let vals = chunk.as_f32()?;
+            let dims: Vec<i64> = info.dims.as_slice().iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(vals).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let outs = result.decompose_tuple()?;
+        let mut chunks = Vec::with_capacity(outs.len());
+        for (lit, info) in outs.iter().zip(&self.spec.outputs) {
+            let vals: Vec<f32> = lit.to_vec()?;
+            if vals.len() != info.dims.num_elements() {
+                return Err(Error::Runtime(format!(
+                    "{}: output has {} elements, manifest says {}",
+                    self.spec.name,
+                    vals.len(),
+                    info.dims.num_elements()
+                )));
+            }
+            chunks.push(Chunk::from_f32(&vals));
+        }
+        Ok(chunks)
+    }
+
+    /// Execute on a buffer's chunks (1 chunk per model input).
+    pub fn execute_buffer(&self, buf: &Buffer) -> Result<Vec<Chunk>> {
+        let refs: Vec<&Chunk> = buf.chunks.iter().collect();
+        self.execute(&refs)
+    }
+}
+
+/// Process-wide model registry: compiles each artifact once, shares the
+/// executable across all filters (like NNStreamer sharing a model between
+/// pipelines).
+pub struct ModelRegistry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Model>>>,
+}
+
+unsafe impl Send for ModelRegistry {}
+unsafe impl Sync for ModelRegistry {}
+
+static GLOBAL: Lazy<Mutex<Option<Arc<ModelRegistry>>>> = Lazy::new(|| Mutex::new(None));
+
+impl ModelRegistry {
+    /// Open an artifacts directory (reads `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Arc::new(Self {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    /// Process-wide shared registry rooted at `$NNS_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn global() -> Result<Arc<Self>> {
+        let mut g = GLOBAL.lock().unwrap();
+        if let Some(r) = g.as_ref() {
+            return Ok(r.clone());
+        }
+        let dir = std::env::var("NNS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        let reg = Self::open(dir)?;
+        *g = Some(reg.clone());
+        Ok(reg)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (compile-once, cached) a model by artifact name.
+    pub fn load(&self, name: &str) -> Result<Arc<Model>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("model {name:?} not in manifest")))?
+            .clone();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Manifest("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let model = Arc::new(Model { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Arc<ModelRegistry> {
+        ModelRegistry::global().expect("artifacts/ must be built (make artifacts)")
+    }
+
+    #[test]
+    fn loads_manifest_and_runs_i3() {
+        let reg = registry();
+        let model = reg.load("i3_opt").unwrap();
+        assert_eq!(model.spec.inputs.len(), 1);
+        let n = model.spec.inputs[0].dims.num_elements();
+        let input = Chunk::from_f32(&vec![0.5f32; n]);
+        let out = model.execute(&[&input]).unwrap();
+        assert_eq!(out.len(), 1);
+        let probs = out[0].to_f32_vec().unwrap();
+        assert_eq!(probs.len(), 100);
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "softmax sums to 1, got {sum}");
+    }
+
+    #[test]
+    fn opt_and_ref_variants_agree() {
+        let reg = registry();
+        let opt = reg.load("i3_opt").unwrap();
+        let rf = reg.load("i3_ref").unwrap();
+        let n = opt.spec.inputs[0].dims.num_elements();
+        let data: Vec<f32> = (0..n).map(|i| ((i % 255) as f32) / 255.0).collect();
+        let input = Chunk::from_f32(&data);
+        let a = opt.execute(&[&input]).unwrap()[0].to_f32_vec().unwrap();
+        let b = rf.execute(&[&input]).unwrap()[0].to_f32_vec().unwrap();
+        let max_err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "variants disagree: {max_err}");
+    }
+
+    #[test]
+    fn outputs_depend_on_inputs() {
+        // Regression: if artifact weights were elided in the text
+        // round-trip (zeroed), outputs collapse to input-independent
+        // constants. Two different inputs must produce different outputs.
+        let reg = registry();
+        let model = reg.load("pnet_s4_opt").unwrap();
+        let n = model.spec.inputs[0].dims.num_elements();
+        let a: Vec<f32> = (0..n).map(|i| ((i * 37 % 251) as f32) / 251.0 - 0.5).collect();
+        let b: Vec<f32> = (0..n).map(|i| ((i * 11 % 113) as f32) / 113.0 - 0.5).collect();
+        let oa = model.execute(&[&Chunk::from_f32(&a)]).unwrap()[0]
+            .to_f32_vec()
+            .unwrap();
+        let ob = model.execute(&[&Chunk::from_f32(&b)]).unwrap()[0]
+            .to_f32_vec()
+            .unwrap();
+        let diff = oa
+            .iter()
+            .zip(&ob)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff > 1e-4, "outputs are input-independent (weights lost?)");
+        // and the probability map must have spatial variation
+        let spread = oa.iter().cloned().fold(f32::MIN, f32::max)
+            - oa.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread > 1e-3, "flat output map");
+    }
+
+    #[test]
+    fn rejects_wrong_input_count() {
+        let reg = registry();
+        let model = reg.load("i3_opt").unwrap();
+        assert!(model.execute(&[]).is_err());
+    }
+
+    #[test]
+    fn multi_output_model() {
+        let reg = registry();
+        let ssd = reg.load("ssd_opt").unwrap();
+        assert_eq!(ssd.spec.outputs.len(), 2);
+        let n = ssd.spec.inputs[0].dims.num_elements();
+        let input = Chunk::from_f32(&vec![0.1f32; n]);
+        let out = ssd.execute(&[&input]).unwrap();
+        assert_eq!(out.len(), 2);
+    }
+}

@@ -1,0 +1,63 @@
+//! "Single API set" analog (§III): run one model without building a
+//! pipeline — the unified Tensor-Filter interface NNStreamer exposes to
+//! Tizen (C/.NET) and Android (Java) applications.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::runtime::{Model, ModelRegistry};
+use crate::tensor::{Chunk, TensorInfo};
+
+/// One-shot model invocation handle.
+pub struct SingleShot {
+    model: Arc<Model>,
+}
+
+impl SingleShot {
+    /// Open a model by artifact name from the global registry.
+    pub fn open(name: &str) -> Result<Self> {
+        let reg = ModelRegistry::global()?;
+        Ok(Self {
+            model: reg.load(name)?,
+        })
+    }
+
+    /// Open from a specific registry (tests, multi-directory setups).
+    pub fn open_in(reg: &ModelRegistry, name: &str) -> Result<Self> {
+        Ok(Self {
+            model: reg.load(name)?,
+        })
+    }
+
+    pub fn input_info(&self) -> &[TensorInfo] {
+        &self.model.spec.inputs
+    }
+
+    pub fn output_info(&self) -> &[TensorInfo] {
+        &self.model.spec.outputs
+    }
+
+    /// Invoke the model on raw f32 tensors.
+    pub fn invoke(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let chunks: Vec<Chunk> = inputs.iter().map(|d| Chunk::from_f32(d)).collect();
+        let refs: Vec<&Chunk> = chunks.iter().collect();
+        let outs = self.model.execute(&refs)?;
+        outs.iter().map(|c| c.to_f32_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shot_runs_ars_model() {
+        let s = SingleShot::open("ars_a_opt").expect("artifacts built");
+        assert_eq!(s.input_info()[0].dims.as_slice(), &[1, 128, 3]);
+        let input = vec![0.25f32; 128 * 3];
+        let out = s.invoke(&[&input]).unwrap();
+        assert_eq!(out[0].len(), 8);
+        let sum: f32 = out[0].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,216 @@
+//! Stream buffers: timestamped frames of up to [`MAX_TENSORS`] memory chunks.
+//!
+//! Each tensor of an `other/tensors` frame lives in its own refcounted
+//! chunk, so `tensor_mux` / `tensor_demux` move `Arc`s around instead of
+//! copying payloads (§III: "We store each tensor in an individual memory
+//! chunk so that mux and de-mux do not incur memory copies").
+//!
+//! All chunk allocations and copies are accounted to the global traffic
+//! counters in [`crate::metrics::traffic`] — this is the substrate for the
+//! paper's perf-based "memory access" row in Table III.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::metrics::traffic;
+
+/// Default memory-chunk limit per frame (GStreamer's default, §III).
+pub const MAX_TENSORS: usize = 16;
+
+/// One immutable, refcounted payload chunk.
+#[derive(Debug, Clone)]
+pub struct Chunk(Arc<Vec<u8>>);
+
+impl Chunk {
+    /// Allocate a chunk from a byte vector (counted as written traffic).
+    pub fn from_vec(data: Vec<u8>) -> Self {
+        traffic::count_write(data.len());
+        Chunk(Arc::new(data))
+    }
+
+    /// Allocate a chunk from an f32 slice.
+    pub fn from_f32(data: &[f32]) -> Self {
+        let mut bytes = vec![0u8; data.len() * 4];
+        for (i, v) in data.iter().enumerate() {
+            bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        Chunk::from_vec(bytes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        traffic::count_read(self.0.len());
+        &self.0
+    }
+
+    /// Bytes without traffic accounting (for metrics/tests themselves).
+    pub fn as_bytes_unaccounted(&self) -> &[u8] {
+        &self.0
+    }
+
+    /// View as f32 slice. Vec allocations are 8/16-byte aligned in
+    /// practice; we verify instead of assuming.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        traffic::count_read(self.0.len());
+        let (pre, body, post) = unsafe { self.0.align_to::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(Error::Runtime("chunk not f32-aligned/sized".into()));
+        }
+        Ok(body)
+    }
+
+    /// Copy out as f32 vector.
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.as_f32()?.to_vec())
+    }
+
+    /// Number of strong references (used by zero-copy tests).
+    pub fn refcount(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+
+    /// Pointer identity (used by zero-copy tests).
+    pub fn ptr(&self) -> *const u8 {
+        self.0.as_ptr()
+    }
+}
+
+/// A timestamped stream frame.
+#[derive(Debug, Clone, Default)]
+pub struct Buffer {
+    /// Presentation timestamp in nanoseconds.
+    pub pts_ns: u64,
+    /// Frame duration in nanoseconds (0 = unknown).
+    pub duration_ns: u64,
+    /// Monotonic sequence number assigned by the producing source.
+    pub seq: u64,
+    /// Payload chunks (1 for `other/tensor`/media, N for `other/tensors`).
+    pub chunks: Vec<Chunk>,
+}
+
+impl Buffer {
+    pub fn new(pts_ns: u64, chunks: Vec<Chunk>) -> Self {
+        assert!(
+            chunks.len() <= MAX_TENSORS,
+            "buffer exceeds MAX_TENSORS chunks"
+        );
+        Self {
+            pts_ns,
+            duration_ns: 0,
+            seq: 0,
+            chunks,
+        }
+    }
+
+    pub fn single(pts_ns: u64, chunk: Chunk) -> Self {
+        Self::new(pts_ns, vec![chunk])
+    }
+
+    pub fn from_f32(pts_ns: u64, data: &[f32]) -> Self {
+        Self::single(pts_ns, Chunk::from_f32(data))
+    }
+
+    /// Total payload bytes across chunks.
+    pub fn size(&self) -> usize {
+        self.chunks.iter().map(Chunk::len).sum()
+    }
+
+    /// First chunk (the common single-tensor case).
+    pub fn chunk(&self) -> &Chunk {
+        &self.chunks[0]
+    }
+
+    /// Bundle several buffers into one `other/tensors` frame without
+    /// copying payloads. Timestamp policy: latest of the inputs (§III:
+    /// "All merging filters choose the latest timestamp").
+    pub fn bundle(parts: Vec<Buffer>) -> Result<Buffer> {
+        let mut chunks = Vec::new();
+        let mut pts = 0u64;
+        let mut seq = 0u64;
+        for b in parts {
+            pts = pts.max(b.pts_ns);
+            seq = seq.max(b.seq);
+            chunks.extend(b.chunks);
+        }
+        if chunks.len() > MAX_TENSORS {
+            return Err(Error::Runtime(format!(
+                "bundle of {} chunks exceeds MAX_TENSORS={MAX_TENSORS}",
+                chunks.len()
+            )));
+        }
+        let mut out = Buffer::new(pts, chunks);
+        out.seq = seq;
+        Ok(out)
+    }
+
+    /// Split an `other/tensors` frame into per-tensor buffers (zero-copy).
+    pub fn unbundle(self) -> Vec<Buffer> {
+        let (pts, seq, dur) = (self.pts_ns, self.seq, self.duration_ns);
+        self.chunks
+            .into_iter()
+            .map(|c| {
+                let mut b = Buffer::single(pts, c);
+                b.seq = seq;
+                b.duration_ns = dur;
+                b
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25];
+        let c = Chunk::from_f32(&data);
+        assert_eq!(c.as_f32().unwrap(), &data[..]);
+        assert_eq!(c.len(), 12);
+    }
+
+    #[test]
+    fn bundle_is_zero_copy_and_picks_latest_pts() {
+        let a = Buffer::from_f32(100, &[1.0]);
+        let b = Buffer::from_f32(250, &[2.0]);
+        let pa = a.chunk().ptr();
+        let pb = b.chunk().ptr();
+        let bundled = Buffer::bundle(vec![a, b]).unwrap();
+        assert_eq!(bundled.pts_ns, 250);
+        assert_eq!(bundled.chunks.len(), 2);
+        // same allocations, no copy
+        assert_eq!(bundled.chunks[0].ptr(), pa);
+        assert_eq!(bundled.chunks[1].ptr(), pb);
+
+        let parts = bundled.unbundle();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].chunk().ptr(), pa);
+        assert_eq!(parts[1].chunk().ptr(), pb);
+        // unbundled buffers inherit the bundle pts
+        assert_eq!(parts[0].pts_ns, 250);
+    }
+
+    #[test]
+    fn bundle_rejects_overflow() {
+        let parts: Vec<Buffer> = (0..MAX_TENSORS + 1)
+            .map(|i| Buffer::from_f32(i as u64, &[0.0]))
+            .collect();
+        assert!(Buffer::bundle(parts).is_err());
+    }
+
+    #[test]
+    fn clone_shares_chunks() {
+        let b = Buffer::from_f32(0, &[1.0, 2.0]);
+        let b2 = b.clone();
+        assert_eq!(b.chunk().ptr(), b2.chunk().ptr());
+        assert_eq!(b.chunk().refcount(), 2);
+    }
+}

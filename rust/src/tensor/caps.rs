@@ -1,0 +1,431 @@
+//! Stream capabilities ("caps") and negotiation.
+//!
+//! Caps describe what flows on a link: conventional media (`video/x-raw`,
+//! `audio/x-raw`, `text/x-raw`), the paper's tensor types (`other/tensor`,
+//! `other/tensors`), or framed binaries (`other/flatbuf`). Negotiation is
+//! intersection-based like GStreamer's: a pad offers caps, the peer
+//! restricts them; [`Caps::intersect`] computes the common subset with
+//! rank-agnostic tensor dimension matching.
+
+use super::{DType, TensorInfo};
+use crate::error::{Error, Result};
+
+/// Raw video pixel formats supported by the built-in media filters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VideoFormat {
+    Rgb,
+    Bgr,
+    Gray8,
+    /// 4:2:0 planar, the typical camera output; converters handle it.
+    Nv12,
+}
+
+impl VideoFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            VideoFormat::Rgb => "RGB",
+            VideoFormat::Bgr => "BGR",
+            VideoFormat::Gray8 => "GRAY8",
+            VideoFormat::Nv12 => "NV12",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_uppercase().as_str() {
+            "RGB" => VideoFormat::Rgb,
+            "BGR" => VideoFormat::Bgr,
+            "GRAY8" | "GRAY" => VideoFormat::Gray8,
+            "NV12" => VideoFormat::Nv12,
+            other => return Err(Error::Parse(format!("unknown video format {other:?}"))),
+        })
+    }
+
+    /// Bytes per frame for WxH.
+    pub fn frame_size(self, width: usize, height: usize) -> usize {
+        match self {
+            VideoFormat::Rgb | VideoFormat::Bgr => width * height * 3,
+            VideoFormat::Gray8 => width * height,
+            VideoFormat::Nv12 => width * height + width * height / 2,
+        }
+    }
+
+    /// Channel count as seen by tensor_converter (NV12 converts to RGB first).
+    pub fn channels(self) -> usize {
+        match self {
+            VideoFormat::Rgb | VideoFormat::Bgr => 3,
+            VideoFormat::Gray8 => 1,
+            VideoFormat::Nv12 => 3,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VideoInfo {
+    pub format: VideoFormat,
+    pub width: usize,
+    pub height: usize,
+    /// Frames per second, in 1/1000 units (30000 = 30 fps). 0 = variable.
+    pub fps_millis: u64,
+}
+
+impl VideoInfo {
+    pub fn new(format: VideoFormat, width: usize, height: usize, fps: f64) -> Self {
+        Self {
+            format,
+            width,
+            height,
+            fps_millis: (fps * 1000.0).round() as u64,
+        }
+    }
+
+    pub fn fps(&self) -> f64 {
+        self.fps_millis as f64 / 1000.0
+    }
+
+    pub fn frame_size(&self) -> usize {
+        self.format.frame_size(self.width, self.height)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AudioInfo {
+    pub rate: usize,
+    pub channels: usize,
+    /// S16LE assumed; samples per buffer.
+    pub samples_per_buffer: usize,
+}
+
+/// Stream capabilities.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Caps {
+    /// Anything — the starting offer of pads with no constraints.
+    Any,
+    Video(VideoInfo),
+    Audio(AudioInfo),
+    Text,
+    /// `other/tensor`: one tensor per frame. fps_millis as in [`VideoInfo`].
+    Tensor { info: TensorInfo, fps_millis: u64 },
+    /// `other/tensors`: up to [`super::MAX_TENSORS`] tensors per frame,
+    /// synchronized to a single rate.
+    Tensors {
+        infos: Vec<TensorInfo>,
+        fps_millis: u64,
+    },
+    /// Framed serialized tensors (flatbuf/protobuf analog).
+    FlatBuf,
+}
+
+impl Caps {
+    pub fn tensor(dtype: DType, dims: impl Into<super::Dims>, fps: f64) -> Self {
+        Caps::Tensor {
+            info: TensorInfo::new(dtype, dims),
+            fps_millis: (fps * 1000.0).round() as u64,
+        }
+    }
+
+    pub fn media_name(&self) -> &'static str {
+        match self {
+            Caps::Any => "ANY",
+            Caps::Video(_) => "video/x-raw",
+            Caps::Audio(_) => "audio/x-raw",
+            Caps::Text => "text/x-raw",
+            Caps::Tensor { .. } => "other/tensor",
+            Caps::Tensors { .. } => "other/tensors",
+            Caps::FlatBuf => "other/flatbuf",
+        }
+    }
+
+    pub fn fps(&self) -> Option<f64> {
+        match self {
+            Caps::Video(v) => Some(v.fps()),
+            Caps::Tensor { fps_millis, .. } | Caps::Tensors { fps_millis, .. } => {
+                Some(*fps_millis as f64 / 1000.0)
+            }
+            _ => None,
+        }
+    }
+
+    /// Per-frame payload size if statically known.
+    pub fn frame_size(&self) -> Option<usize> {
+        match self {
+            Caps::Video(v) => Some(v.frame_size()),
+            Caps::Audio(a) => Some(a.samples_per_buffer * a.channels * 2),
+            Caps::Tensor { info, .. } => Some(info.size_bytes()),
+            Caps::Tensors { infos, .. } => Some(infos.iter().map(|i| i.size_bytes()).sum()),
+            _ => None,
+        }
+    }
+
+    /// Tensor infos carried by this caps (empty for media).
+    pub fn tensor_infos(&self) -> Vec<TensorInfo> {
+        match self {
+            Caps::Tensor { info, .. } => vec![info.clone()],
+            Caps::Tensors { infos, .. } => infos.clone(),
+            _ => vec![],
+        }
+    }
+
+    /// Intersection-based compatibility: can a producer offering `self`
+    /// feed a consumer requiring `other`? Tensor dims compare
+    /// rank-agnostically; fps 0 (variable) matches any rate.
+    pub fn compatible(&self, other: &Caps) -> bool {
+        match (self, other) {
+            (Caps::Any, _) | (_, Caps::Any) => true,
+            (Caps::Video(a), Caps::Video(b)) => {
+                a.format == b.format
+                    && a.width == b.width
+                    && a.height == b.height
+                    && (a.fps_millis == b.fps_millis || a.fps_millis == 0 || b.fps_millis == 0)
+            }
+            (Caps::Audio(a), Caps::Audio(b)) => a.rate == b.rate && a.channels == b.channels,
+            (Caps::Text, Caps::Text) | (Caps::FlatBuf, Caps::FlatBuf) => true,
+            (
+                Caps::Tensor {
+                    info: a,
+                    fps_millis: fa,
+                },
+                Caps::Tensor {
+                    info: b,
+                    fps_millis: fb,
+                },
+            ) => a.equivalent(b) && (fa == fb || *fa == 0 || *fb == 0),
+            (
+                Caps::Tensors {
+                    infos: a,
+                    fps_millis: fa,
+                },
+                Caps::Tensors {
+                    infos: b,
+                    fps_millis: fb,
+                },
+            ) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.equivalent(y))
+                    && (fa == fb || *fa == 0 || *fb == 0)
+            }
+            // A single-tensor `other/tensors` is interchangeable with
+            // `other/tensor` (NNStreamer auto-converts at link time).
+            (Caps::Tensor { info, fps_millis }, Caps::Tensors { infos, fps_millis: fb })
+            | (Caps::Tensors { infos, fps_millis: fb }, Caps::Tensor { info, fps_millis }) => {
+                infos.len() == 1
+                    && infos[0].equivalent(info)
+                    && (fps_millis == fb || *fps_millis == 0 || *fb == 0)
+            }
+            _ => false,
+        }
+    }
+
+    /// Intersect producer caps with a consumer restriction, producing the
+    /// fixed caps that flow on the link.
+    pub fn intersect(&self, other: &Caps) -> Result<Caps> {
+        if !self.compatible(other) {
+            return Err(Error::Negotiation(format!(
+                "{self} not compatible with {other}"
+            )));
+        }
+        Ok(match (self, other) {
+            (Caps::Any, o) => o.clone(),
+            (s, Caps::Any) => s.clone(),
+            // prefer the side with a fixed rate
+            (Caps::Tensor { fps_millis: 0, .. }, o @ Caps::Tensor { .. }) => o.clone(),
+            (Caps::Video(a), Caps::Video(b)) if a.fps_millis == 0 => Caps::Video(b.clone()),
+            (s, _) => s.clone(),
+        })
+    }
+
+    /// Parse a caps-filter string, e.g.
+    /// `other/tensor,dimension=3:64:64,type=float32,framerate=30`
+    /// `video/x-raw,format=RGB,width=640,height=480,framerate=30`
+    pub fn parse(s: &str) -> Result<Caps> {
+        let mut parts = s.split(',').map(str::trim);
+        let media = parts
+            .next()
+            .ok_or_else(|| Error::Parse(format!("empty caps {s:?}")))?;
+        let mut fields = std::collections::HashMap::new();
+        for p in parts {
+            let (k, v) = p
+                .split_once('=')
+                .ok_or_else(|| Error::Parse(format!("bad caps field {p:?}")))?;
+            fields.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let fps = fields
+            .get("framerate")
+            .map(|v| {
+                // accept "30", "30.0" or GStreamer "30/1"
+                let v = v.split('/').next().unwrap_or(v);
+                v.parse::<f64>()
+                    .map_err(|_| Error::Parse(format!("bad framerate {v:?}")))
+            })
+            .transpose()?
+            .unwrap_or(0.0);
+        match media {
+            "video/x-raw" => {
+                let format = VideoFormat::parse(fields.get("format").map(String::as_str).unwrap_or("RGB"))?;
+                let width = parse_field(&fields, "width")?.unwrap_or(640);
+                let height = parse_field(&fields, "height")?.unwrap_or(480);
+                Ok(Caps::Video(VideoInfo::new(format, width, height, fps)))
+            }
+            "other/tensor" => {
+                let dims = fields
+                    .get("dimension")
+                    .map(|d| super::Dims::parse(d))
+                    .transpose()?
+                    .ok_or_else(|| Error::Parse(format!("other/tensor needs dimension= in {s:?}")))?;
+                let dtype = DType::parse(fields.get("type").map(String::as_str).unwrap_or("float32"))?;
+                Ok(Caps::Tensor {
+                    info: TensorInfo::new(dtype, dims),
+                    fps_millis: (fps * 1000.0).round() as u64,
+                })
+            }
+            "other/tensors" => {
+                // dimensions=d0. d1. d2,types=t0.t1.t2 (dot-separated lists)
+                let dims_list = fields
+                    .get("dimensions")
+                    .ok_or_else(|| Error::Parse("other/tensors needs dimensions=".into()))?;
+                let types_list = fields
+                    .get("types")
+                    .ok_or_else(|| Error::Parse("other/tensors needs types=".into()))?;
+                let dims: Vec<_> = dims_list.split('.').collect();
+                let types: Vec<_> = types_list.split('.').collect();
+                if dims.len() != types.len() {
+                    return Err(Error::Parse("dimensions/types count mismatch".into()));
+                }
+                let infos = dims
+                    .iter()
+                    .zip(&types)
+                    .map(|(d, t)| {
+                        Ok(TensorInfo::new(DType::parse(t)?, super::Dims::parse(d)?))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Caps::Tensors {
+                    infos,
+                    fps_millis: (fps * 1000.0).round() as u64,
+                })
+            }
+            "text/x-raw" => Ok(Caps::Text),
+            "other/flatbuf" => Ok(Caps::FlatBuf),
+            "audio/x-raw" => Ok(Caps::Audio(AudioInfo {
+                rate: parse_field(&fields, "rate")?.unwrap_or(16000),
+                channels: parse_field(&fields, "channels")?.unwrap_or(1),
+                samples_per_buffer: parse_field(&fields, "samples")?.unwrap_or(1600),
+            })),
+            other => Err(Error::Parse(format!("unknown media type {other:?}"))),
+        }
+    }
+}
+
+fn parse_field(
+    fields: &std::collections::HashMap<String, String>,
+    key: &str,
+) -> Result<Option<usize>> {
+    fields
+        .get(key)
+        .map(|v| {
+            v.parse::<usize>()
+                .map_err(|_| Error::Parse(format!("bad {key}={v:?}")))
+        })
+        .transpose()
+}
+
+impl std::fmt::Display for Caps {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Caps::Any => write!(f, "ANY"),
+            Caps::Video(v) => write!(
+                f,
+                "video/x-raw,format={},width={},height={},framerate={}",
+                v.format.name(),
+                v.width,
+                v.height,
+                v.fps()
+            ),
+            Caps::Audio(a) => write!(f, "audio/x-raw,rate={},channels={}", a.rate, a.channels),
+            Caps::Text => write!(f, "text/x-raw"),
+            Caps::FlatBuf => write!(f, "other/flatbuf"),
+            Caps::Tensor { info, fps_millis } => write!(
+                f,
+                "other/tensor,dimension={},type={},framerate={}",
+                info.dims,
+                info.dtype,
+                *fps_millis as f64 / 1000.0
+            ),
+            Caps::Tensors { infos, fps_millis } => {
+                let dims: Vec<String> = infos.iter().map(|i| i.dims.to_string()).collect();
+                let types: Vec<String> = infos.iter().map(|i| i.dtype.to_string()).collect();
+                write!(
+                    f,
+                    "other/tensors,dimensions={},types={},framerate={}",
+                    dims.join("."),
+                    types.join("."),
+                    *fps_millis as f64 / 1000.0
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_video_caps() {
+        let c = Caps::parse("video/x-raw,format=RGB,width=640,height=480,framerate=30").unwrap();
+        match &c {
+            Caps::Video(v) => {
+                assert_eq!(v.format, VideoFormat::Rgb);
+                assert_eq!((v.width, v.height), (640, 480));
+                assert_eq!(v.fps(), 30.0);
+                assert_eq!(v.frame_size(), 640 * 480 * 3);
+            }
+            _ => panic!("wrong caps {c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_tensor_caps_roundtrip() {
+        let c = Caps::parse("other/tensor,dimension=3:64:64,type=float32,framerate=30").unwrap();
+        let c2 = Caps::parse(&c.to_string()).unwrap();
+        assert!(c.compatible(&c2));
+    }
+
+    #[test]
+    fn tensor_rank_agnostic_compat() {
+        let a = Caps::parse("other/tensor,dimension=640:480,type=uint8").unwrap();
+        let b = Caps::parse("other/tensor,dimension=640:480:1:1,type=uint8").unwrap();
+        assert!(a.compatible(&b));
+    }
+
+    #[test]
+    fn single_tensors_matches_tensor() {
+        let a = Caps::parse("other/tensor,dimension=4:2,type=float32").unwrap();
+        let b = Caps::parse("other/tensors,dimensions=4:2,types=float32").unwrap();
+        assert!(a.compatible(&b));
+    }
+
+    #[test]
+    fn incompatible_formats() {
+        let a = Caps::parse("video/x-raw,format=RGB,width=4,height=4").unwrap();
+        let b = Caps::parse("video/x-raw,format=BGR,width=4,height=4").unwrap();
+        assert!(!a.compatible(&b));
+    }
+
+    #[test]
+    fn variable_rate_matches_fixed() {
+        let a = Caps::tensor(DType::F32, [4], 0.0);
+        let b = Caps::tensor(DType::F32, [4], 30.0);
+        assert!(a.compatible(&b));
+        // intersection picks the fixed rate
+        match a.intersect(&b).unwrap() {
+            Caps::Tensor { fps_millis, .. } => assert_eq!(fps_millis, 30000),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn any_intersects_to_other_side() {
+        let b = Caps::tensor(DType::F32, [4], 30.0);
+        assert_eq!(Caps::Any.intersect(&b).unwrap(), b);
+        assert_eq!(b.intersect(&Caps::Any).unwrap(), b);
+    }
+}

@@ -1,0 +1,179 @@
+//! Tensor dimensions with rank-agnostic equivalence.
+//!
+//! NNStreamer does not express rank in tensor stream types: `640:480`
+//! (rank 2) and `640:480:1:1` (rank 4) are *equivalent* during caps
+//! negotiation (§III). We keep the declared rank (a few NNFWs such as
+//! TensorRT need it) but compare modulo trailing 1s.
+
+use crate::error::{Error, Result};
+
+/// Maximum supported rank (NNStreamer supports up to 8 in recent versions).
+pub const MAX_RANK: usize = 8;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Dims {
+    d: [usize; MAX_RANK],
+    rank: usize,
+}
+
+impl Dims {
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(
+            dims.len() <= MAX_RANK,
+            "rank {} exceeds MAX_RANK {}",
+            dims.len(),
+            MAX_RANK
+        );
+        assert!(!dims.is_empty(), "Dims must have at least one dimension");
+        let mut d = [1usize; MAX_RANK];
+        d[..dims.len()].copy_from_slice(dims);
+        Self {
+            d,
+            rank: dims.len(),
+        }
+    }
+
+    /// Scalar (rank-1, size-1) dims.
+    pub fn scalar() -> Self {
+        Self::new(&[1])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Dimensions as declared (length == rank).
+    pub fn as_slice(&self) -> &[usize] {
+        &self.d[..self.rank]
+    }
+
+    /// Dimension at `idx`, treating out-of-rank indices as 1 (rank-agnostic
+    /// accessor, used by dimension-surgery elements).
+    pub fn dim_or_1(&self, idx: usize) -> usize {
+        if idx < MAX_RANK {
+            self.d[idx]
+        } else {
+            1
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.as_slice().iter().product()
+    }
+
+    /// Effective rank: declared rank with trailing 1s stripped (min 1).
+    pub fn effective_rank(&self) -> usize {
+        let mut r = self.rank;
+        while r > 1 && self.d[r - 1] == 1 {
+            r -= 1;
+        }
+        r
+    }
+
+    /// Rank-agnostic equivalence: `640:480` == `640:480:1:1`.
+    pub fn equivalent(&self, other: &Dims) -> bool {
+        let r = self.effective_rank().max(other.effective_rank());
+        (0..r).all(|i| self.dim_or_1(i) == other.dim_or_1(i))
+    }
+
+    /// Parse NNStreamer dimension syntax `"3:224:224"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<usize> = s
+            .split(':')
+            .map(|p| {
+                p.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::Parse(format!("bad dimension {p:?} in {s:?}")))
+            })
+            .collect::<Result<_>>()?;
+        if parts.is_empty() || parts.len() > MAX_RANK {
+            return Err(Error::Parse(format!("bad dimension count in {s:?}")));
+        }
+        if parts.iter().any(|&d| d == 0) {
+            return Err(Error::Parse(format!("zero dimension in {s:?}")));
+        }
+        Ok(Self::new(&parts))
+    }
+
+    /// A copy with the dimension at `axis` replaced.
+    pub fn with_dim(&self, axis: usize, value: usize) -> Self {
+        let mut out = self.clone();
+        assert!(axis < MAX_RANK);
+        out.d[axis] = value;
+        if axis >= out.rank {
+            out.rank = axis + 1;
+        }
+        out
+    }
+}
+
+impl From<&[usize]> for Dims {
+    fn from(s: &[usize]) -> Self {
+        Dims::new(s)
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for Dims {
+    fn from(s: [usize; N]) -> Self {
+        Dims::new(&s)
+    }
+}
+
+impl From<Vec<usize>> for Dims {
+    fn from(s: Vec<usize>) -> Self {
+        Dims::new(&s)
+    }
+}
+
+impl std::fmt::Display for Dims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = self.as_slice().iter().map(|d| d.to_string()).collect();
+        f.write_str(&parts.join(":"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let d = Dims::parse("3:224:224").unwrap();
+        assert_eq!(d.rank(), 3);
+        assert_eq!(d.as_slice(), &[3, 224, 224]);
+        assert_eq!(d.to_string(), "3:224:224");
+        assert_eq!(d.num_elements(), 3 * 224 * 224);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Dims::parse("").is_err());
+        assert!(Dims::parse("3:x").is_err());
+        assert!(Dims::parse("3:0:2").is_err());
+        assert!(Dims::parse("1:2:3:4:5:6:7:8:9").is_err());
+    }
+
+    #[test]
+    fn equivalence_ignores_trailing_ones() {
+        let a = Dims::parse("640:480").unwrap();
+        let b = Dims::parse("640:480:1:1").unwrap();
+        assert!(a.equivalent(&b));
+        assert_eq!(a.effective_rank(), 2);
+        assert_eq!(b.effective_rank(), 2);
+        // but declared rank is preserved for rank-sensitive NNFWs
+        assert_eq!(b.rank(), 4);
+    }
+
+    #[test]
+    fn equivalence_respects_interior_ones() {
+        let a = Dims::parse("640:1:480").unwrap();
+        let b = Dims::parse("640:480").unwrap();
+        assert!(!a.equivalent(&b));
+    }
+
+    #[test]
+    fn with_dim_extends_rank() {
+        let d = Dims::parse("4:8").unwrap().with_dim(2, 7);
+        assert_eq!(d.as_slice(), &[4, 8, 7]);
+    }
+}

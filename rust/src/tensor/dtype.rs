@@ -1,0 +1,74 @@
+//! Tensor element types (mirrors NNStreamer's `other/tensor` type set).
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    U8,
+    I8,
+    U16,
+    I16,
+    U32,
+    I32,
+    U64,
+    I64,
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::U8 | DType::I8 => 1,
+            DType::U16 | DType::I16 => 2,
+            DType::U32 | DType::I32 | DType::F32 => 4,
+            DType::U64 | DType::I64 | DType::F64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::U8 => "uint8",
+            DType::I8 => "int8",
+            DType::U16 => "uint16",
+            DType::I16 => "int16",
+            DType::U32 => "uint32",
+            DType::I32 => "int32",
+            DType::U64 => "uint64",
+            DType::I64 => "int64",
+            DType::F32 => "float32",
+            DType::F64 => "float64",
+        }
+    }
+
+    /// Parse both NNStreamer spellings (`uint8`) and numpy spellings the
+    /// AOT manifest uses (`float32`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "uint8" | "u8" => DType::U8,
+            "int8" | "i8" => DType::I8,
+            "uint16" | "u16" => DType::U16,
+            "int16" | "i16" => DType::I16,
+            "uint32" | "u32" => DType::U32,
+            "int32" | "i32" => DType::I32,
+            "uint64" | "u64" => DType::U64,
+            "int64" | "i64" => DType::I64,
+            "float32" | "f32" => DType::F32,
+            "float64" | "f64" => DType::F64,
+            other => {
+                return Err(Error::Parse(format!("unknown tensor dtype {other:?}")))
+            }
+        })
+    }
+
+    /// Is this a floating-point type?
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F64)
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

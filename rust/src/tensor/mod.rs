@@ -1,0 +1,73 @@
+//! Tensor stream data model: dtypes, dimensions, caps, buffers.
+//!
+//! This is the `other/tensor` / `other/tensors` layer of the paper (§III):
+//! tensors are first-class stream citizens with an element type, dimensions
+//! and a frame rate, and an `other/tensors` frame bundles up to
+//! [`MAX_TENSORS`] tensors as *separate memory chunks* so that mux/demux
+//! never copy payloads.
+
+mod buffer;
+mod caps;
+mod dims;
+mod dtype;
+
+pub use buffer::{Buffer, Chunk, MAX_TENSORS};
+pub use caps::{AudioInfo, Caps, VideoFormat, VideoInfo};
+pub use dims::{Dims, MAX_RANK};
+pub use dtype::DType;
+
+/// Element type + dimensions of one tensor (no frame rate; rate lives in
+/// [`Caps`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorInfo {
+    pub dtype: DType,
+    pub dims: Dims,
+}
+
+impl TensorInfo {
+    pub fn new(dtype: DType, dims: impl Into<Dims>) -> Self {
+        Self {
+            dtype,
+            dims: dims.into(),
+        }
+    }
+
+    /// Payload size of one frame of this tensor.
+    pub fn size_bytes(&self) -> usize {
+        self.dtype.size_bytes() * self.dims.num_elements()
+    }
+
+    /// Rank-agnostic compatibility (see [`Dims::equivalent`]).
+    pub fn equivalent(&self, other: &TensorInfo) -> bool {
+        self.dtype == other.dtype && self.dims.equivalent(&other.dims)
+    }
+}
+
+impl std::fmt::Display for TensorInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.dtype, self.dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_info_size() {
+        let ti = TensorInfo::new(DType::F32, [3, 64, 64]);
+        assert_eq!(ti.size_bytes(), 4 * 3 * 64 * 64);
+        assert_eq!(ti.to_string(), "float32:3:64:64");
+    }
+
+    #[test]
+    fn tensor_info_rank_agnostic_equivalence() {
+        let a = TensorInfo::new(DType::U8, [640, 480]);
+        let b = TensorInfo::new(DType::U8, [640, 480, 1, 1]);
+        assert!(a.equivalent(&b));
+        let c = TensorInfo::new(DType::U8, [640, 480, 3]);
+        assert!(!a.equivalent(&c));
+        let d = TensorInfo::new(DType::I8, [640, 480]);
+        assert!(!a.equivalent(&d));
+    }
+}

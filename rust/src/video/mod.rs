@@ -1,0 +1,37 @@
+//! Raw-video substrate: procedural frame generation, color conversion,
+//! scaling, cropping — the "off-the-shelf media filters" NNStreamer reuses
+//! from GStreamer (P4). These are the *optimized* implementations; the
+//! MediaPipe-like baseline deliberately re-implements them naively (see
+//! [`crate::baselines::mediapipe_like`]), reproducing E4's pre-processor
+//! comparison.
+
+pub mod convert;
+pub mod pattern;
+pub mod scale;
+
+pub use convert::convert_format;
+pub use pattern::{generate_pattern, Pattern};
+pub use scale::{crop, scale_bilinear};
+
+use crate::tensor::VideoFormat;
+
+/// A borrowed view over one raw video frame.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameView<'a> {
+    pub format: VideoFormat,
+    pub width: usize,
+    pub height: usize,
+    pub data: &'a [u8],
+}
+
+impl<'a> FrameView<'a> {
+    pub fn new(format: VideoFormat, width: usize, height: usize, data: &'a [u8]) -> Self {
+        debug_assert_eq!(data.len(), format.frame_size(width, height));
+        Self {
+            format,
+            width,
+            height,
+            data,
+        }
+    }
+}

