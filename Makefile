@@ -1,0 +1,27 @@
+# Convenience targets; the Rust side needs only artifacts/manifest.txt
+# (checked in). `make artifacts` regenerates the manifest and the real
+# HLO programs through JAX when a Python environment is available.
+
+.PHONY: all test bench artifacts doc fmt
+
+all:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench e1_table1
+	cargo bench --bench e2_ars
+	cargo bench --bench e3_table2
+	cargo bench --bench e4_table3
+	cargo bench --bench e5_batching
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+doc:
+	cargo doc --no-deps
+
+fmt:
+	cargo fmt

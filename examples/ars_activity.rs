@@ -12,7 +12,7 @@
 use nnstreamer::apps::e2_ars::{self, ArsConfig};
 use nnstreamer::baselines::control;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let windows: u64 = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
@@ -27,10 +27,10 @@ fn main() -> anyhow::Result<()> {
     println!("{}\n", e2_ars::launch_description(&cfg));
 
     println!("running NNStreamer pipeline ({windows} sensor windows)...");
-    let nns = e2_ars::run_nns(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let nns = e2_ars::run_nns(&cfg)?;
     println!("running conventional serial implementation...");
     let ctl =
-        control::run_ars_control(windows, None).map_err(|e| anyhow::anyhow!("{e}"))?;
+        control::run_ars_control(windows, None)?;
 
     println!("\n== batch processing rates (windows/s), Fig 3 stages ==");
     println!("  stage          Control    NNStreamer   improvement");

@@ -12,7 +12,7 @@
 use nnstreamer::apps::e3_mtcnn::{self, MtcnnConfig};
 use nnstreamer::devices::DeviceClass;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let frames: u64 = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
@@ -20,8 +20,7 @@ fn main() -> anyhow::Result<()> {
     let class = std::env::args()
         .nth(2)
         .map(|v| DeviceClass::parse(&v))
-        .transpose()
-        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .transpose()?
         .unwrap_or(DeviceClass::Pc);
 
     let cfg = MtcnnConfig {
@@ -37,9 +36,9 @@ fn main() -> anyhow::Result<()> {
         class.name(),
         frames
     );
-    let nns = e3_mtcnn::run_nns(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let nns = e3_mtcnn::run_nns(&cfg)?;
     println!("running serial Control (the ROS team's implementation)...");
-    let ctl = e3_mtcnn::run_control(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ctl = e3_mtcnn::run_control(&cfg)?;
 
     println!("\n== Table II shape on this machine ({}) ==", class.name());
     println!("                      Control    NNStreamer");

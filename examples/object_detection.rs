@@ -13,7 +13,7 @@ use nnstreamer::elements::decoder::decode_boxes;
 use nnstreamer::elements::sinks::TensorSink;
 use nnstreamer::pipeline::Pipeline;
 
-fn serve(variant: &str, frames: u64) -> anyhow::Result<(f64, f64)> {
+fn serve(variant: &str, frames: u64) -> Result<(f64, f64), Box<dyn std::error::Error>> {
     let desc = format!(
         "videotestsrc pattern=ball num-buffers={frames} ! \
          video/x-raw,format=RGB,width=320,height=240,framerate=10000 ! \
@@ -24,8 +24,8 @@ fn serve(variant: &str, frames: u64) -> anyhow::Result<(f64, f64)> {
          tensor_decoder mode=bounding_boxes option1=ssd option2=0.4 ! \
          tensor_sink name=dets"
     );
-    let mut pipeline = Pipeline::parse(&desc).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let report = pipeline.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut pipeline = Pipeline::parse(&desc)?;
+    let report = pipeline.run()?;
     let fps = report.fps("dets");
     let lat_ms: f64 = report
         .elements
@@ -40,7 +40,7 @@ fn serve(variant: &str, frames: u64) -> anyhow::Result<(f64, f64)> {
                 println!("sample detections (ssd_{variant}):");
                 for b in sink.buffers.iter().take(3) {
                     let boxes =
-                        decode_boxes(b.chunk()).map_err(|e| anyhow::anyhow!("{e}"))?;
+                        decode_boxes(b.chunk())?;
                     println!("  frame pts={:>9}ns: {} boxes", b.pts_ns, boxes.len());
                     for bx in boxes.iter().take(3) {
                         println!(
@@ -55,7 +55,7 @@ fn serve(variant: &str, frames: u64) -> anyhow::Result<(f64, f64)> {
     Ok((fps, lat_ms))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let frames: u64 = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())

@@ -12,7 +12,7 @@
 use nnstreamer::elements::sinks::TensorSink;
 use nnstreamer::pipeline::Pipeline;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let desc = "videotestsrc pattern=ball is-live=true framerate=30 num-buffers=90 ! \
                 video/x-raw,format=RGB,width=640,height=480,framerate=30 ! \
                 videoscale width=64 height=64 ! \
@@ -24,8 +24,8 @@ fn main() -> anyhow::Result<()> {
                 tensor_sink name=labels";
     println!("pipeline:\n  {}\n", desc.replace(" ! ", " !\n  "));
 
-    let mut pipeline = Pipeline::parse(desc).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let report = pipeline.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut pipeline = Pipeline::parse(desc)?;
+    let report = pipeline.run()?;
 
     println!("== per-element statistics ==");
     for e in &report.elements {
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         if let Some(sink) = el.as_any().and_then(|a| a.downcast_mut::<TensorSink>()) {
             println!("\nfirst labels (class, confidence):");
             for b in sink.buffers.iter().take(5) {
-                let v = b.chunk().to_f32_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+                let v = b.chunk().to_f32_vec()?;
                 println!(
                     "  pts={:6.2}s  class={:3}  p={:.3}",
                     b.pts_ns as f64 / 1e9,

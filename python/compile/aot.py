@@ -9,7 +9,7 @@ Run via ``make artifacts`` (skips up-to-date outputs) or directly:
     cd python && python -m compile.aot --out-dir ../artifacts [--only NAME]
 
 Manifest format (line-based; the Rust runtime has no JSON dependency):
-    <name>\tin=<dtype>:<d0>x<d1>...[;<dtype>:...]\tout=...\tflops=<N>
+    <name>\tin=<dtype>:<d0>x<d1>...[;<dtype>:...]\tout=...\tflops=<N>\tact=<head>[;...]
 """
 import argparse
 import os
@@ -68,6 +68,9 @@ def compile_one(name, out_dir, force=False):
     out_avals = jax.eval_shape(fn, *example_inputs)
     out_specs = ";".join(_fmt_aval(a) for a in out_avals)
     line = f"{name}\tin={in_specs}\tout={out_specs}\tflops={_flops(lowered)}"
+    acts = model.acts_for(name)
+    if acts:
+        line += "\tact=" + ";".join(acts)
     if force or not os.path.exists(path):
         text = to_hlo_text(lowered)
         with open(path, "w") as f:

@@ -44,3 +44,21 @@ def build(name):
     """Materialize one registry entry: returns (fn, example_inputs)."""
     builder, args = registry()[name]
     return builder(*args)
+
+
+def acts_for(name):
+    """Final activation of each output head, for the manifest ``act=``
+    field. Compiled HLO embeds the activation in the program; the Rust
+    runtime's surrogate backend uses the hint to reproduce head semantics
+    (e.g. that classifier outputs are probability distributions)."""
+    if name.startswith(("i3", "ars")):
+        return ["softmax"]
+    if name.startswith("y3"):
+        return ["none"]
+    if name.startswith("ssd"):
+        return ["none", "none"]
+    if name.startswith(("pnet", "rnet")):
+        return ["softmax", "none"]
+    if name.startswith("onet"):
+        return ["softmax", "none", "none"]
+    return []

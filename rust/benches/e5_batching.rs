@@ -1,0 +1,84 @@
+//! **E5: batched `tensor_filter` execution** — batch=1 vs batch=4/8 on the
+//! E1 single-model pipeline (Fig 2's I3 branch), CPU accelerator with the
+//! embedded envelope disabled so the measurement is the real per-dispatch
+//! overhead being amortized.
+//!
+//! ```bash
+//! cargo bench --bench e5_batching [-- --full]
+//! ```
+//!
+//! Expected shape: throughput grows with the batch size because the
+//! per-dispatch cost (executable launch + weight residency) is paid once
+//! per stacked invocation; batch=4 should land at >= 1.3x the batch=1
+//! frames/s. De-batched outputs are bit-identical to unbatched execution
+//! (asserted by `tests/integration.rs`), so this is a pure-throughput
+//! knob bounded by `latency-budget`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use nnstreamer::metrics::report::{f, Table};
+use nnstreamer::pipeline::Pipeline;
+use nnstreamer::runtime::ModelPool;
+
+fn run_once(batch: usize, frames: u64) -> f64 {
+    let desc = format!(
+        "videotestsrc pattern=ball num-buffers={frames} is-live=false ! \
+         video/x-raw,format=RGB,width=128,height=128,framerate=100000 ! \
+         videoscale width=64 height=64 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255 ! \
+         tensor_filter framework=xla model=i3_opt accelerator=cpu \
+           batch={batch} latency-budget=20 ! \
+         tensor_decoder mode=image_labeling ! fakesink name=out"
+    );
+    let mut p = Pipeline::parse(&desc).expect("parse");
+    let report = p.run().expect("run");
+    let seen = report.element("out").expect("sink stats").buffers_in();
+    assert_eq!(seen, frames, "batching must not drop or duplicate frames");
+    seen as f64 / report.wall.as_secs_f64()
+}
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let frames = args.frames_or(240, 2000);
+
+    // desktop measurement: no embedded-CPU envelope, real dispatch cost
+    nnstreamer::nnfw::set_cpu_rate_flops(0);
+    harness::warm_models(&["i3_opt"]);
+
+    println!("E5 — batched tensor_filter on the E1/I3 pipeline ({frames} frames per case)");
+    let mut t = Table::new(
+        "E5: batch size vs throughput (i3_opt, CPU dispatch)",
+        &["batch", "frames/s", "speedup vs batch=1"],
+    );
+
+    let mut base = 0.0f64;
+    let mut speedup4 = 0.0f64;
+    for batch in [1usize, 4, 8] {
+        let fps = run_once(batch, frames);
+        if batch == 1 {
+            base = fps;
+        }
+        if batch == 4 {
+            speedup4 = fps / base.max(1e-9);
+        }
+        t.row(&[
+            batch.to_string(),
+            f(fps, 1),
+            format!("{:.2}x", fps / base.max(1e-9)),
+        ]);
+        eprintln!("  done: batch={batch}");
+    }
+    t.print();
+
+    println!(
+        "\nspeedup(batch=4) = {speedup4:.2}x (acceptance target >= 1.30x)"
+    );
+    let pool = ModelPool::global().expect("pool");
+    println!(
+        "pool: i3_opt loads={} acquires={} (all cases shared one instance)",
+        pool.loads("i3_opt"),
+        pool.acquires("i3_opt")
+    );
+}

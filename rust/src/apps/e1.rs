@@ -231,8 +231,13 @@ mod tests {
         }
     }
 
+    fn env_lock() -> crate::nnfw::CpuEnvelopeTestGuard {
+        crate::nnfw::cpu_envelope_test_guard()
+    }
+
     #[test]
     fn single_model_pipeline_runs() {
+        let _env = env_lock();
         let row = run_case(&quick_cfg(), E1Case::NnsI3).unwrap();
         assert_eq!(row.fps.len(), 1);
         assert!(row.fps[0] > 0.0, "{row:?}");
@@ -240,6 +245,7 @@ mod tests {
 
     #[test]
     fn three_model_pipeline_runs() {
+        let _env = env_lock();
         let row = run_case(&quick_cfg(), E1Case::NnsAll3).unwrap();
         assert_eq!(row.fps.len(), 3);
         for f in &row.fps {
@@ -249,6 +255,7 @@ mod tests {
 
     #[test]
     fn control_cases_run() {
+        let _env = env_lock();
         let row = run_case(&quick_cfg(), E1Case::ControlI3).unwrap();
         assert!(row.fps[0] > 0.0, "{row:?}");
     }

@@ -276,8 +276,13 @@ mod tests {
         }
     }
 
+    fn env_lock() -> crate::nnfw::CpuEnvelopeTestGuard {
+        crate::nnfw::cpu_envelope_test_guard()
+    }
+
     #[test]
     fn all_cases_run() {
+        let _env = env_lock();
         for case in E4Case::all() {
             let row = run_case(&quick(), case).unwrap();
             assert!(row.throughput_fps > 0.0, "{case:?}: {row:?}");
@@ -286,6 +291,7 @@ mod tests {
 
     #[test]
     fn opt_beats_ref() {
+        let _env = env_lock();
         let cfg = E4Config {
             num_frames: 10,
             ..quick()

@@ -141,8 +141,12 @@ fn idle_estimate(
     if npu_jobs == 0 {
         return 0.0;
     }
-    let per_job = NpuSim::global().stats.mean_service().as_secs_f64();
-    (per_job * (npu_jobs * frames) as f64).min(wall.as_secs_f64())
+    // normalize by frames, not jobs: batched submissions make a "job"
+    // cover several frames, while Control always submits one frame per job
+    let stats = &NpuSim::global().stats;
+    let per_frame =
+        stats.total_service().as_secs_f64() / stats.frames().max(1) as f64;
+    (per_frame * (npu_jobs * frames) as f64).min(wall.as_secs_f64())
 }
 
 /// E2 Control: the pre-NNStreamer ARS implementation — serial multi-sensor

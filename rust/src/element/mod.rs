@@ -9,10 +9,11 @@
 
 pub mod registry;
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::stats::{Domain, ElementStats};
@@ -99,6 +100,14 @@ pub struct Ctx {
     /// Time spent waiting (blocked pushes, live pacing) during the current
     /// handle()/generate() call — subtracted from busy-time accounting.
     pub(crate) idle_ns: u64,
+    /// The element's input channel (None for sources and test harnesses).
+    /// Owned by the ctx so elements can drain additional ready items
+    /// mid-`handle` (the batching path of `tensor_filter`).
+    pub(crate) input: Option<InputReceiver>,
+    /// Items pulled ahead by an element and returned via
+    /// [`push_back_input`](Ctx::push_back_input); delivered before the
+    /// channel on the next scheduler iteration.
+    pub(crate) pending: VecDeque<(usize, Item)>,
 }
 
 impl Ctx {
@@ -132,6 +141,74 @@ impl Ctx {
     /// Take and reset the idle counter (scheduler-internal).
     pub(crate) fn take_idle(&mut self) -> std::time::Duration {
         std::time::Duration::from_nanos(std::mem::take(&mut self.idle_ns))
+    }
+
+    /// Record an arrival pulled from the input channel. Items replayed
+    /// from the push-back queue are *not* re-recorded, so every buffer is
+    /// counted exactly once however it reaches the element.
+    fn record_arrival(&self, item: &(usize, Item)) {
+        if matches!(item.1, Item::Buffer(_)) {
+            let at = Instant::now().duration_since(self.epoch).as_nanos() as u64;
+            self.stats.record_in_at(at);
+        }
+    }
+
+    /// Blocking pull of the next input item: pushed-back items first, then
+    /// the input channel. `None` once the channel is closed and drained.
+    /// Scheduler-internal — elements receive items through
+    /// [`Element::handle`] and drain extras with
+    /// [`try_pull_input`](Ctx::try_pull_input).
+    pub(crate) fn next_input(&mut self) -> Option<(usize, Item)> {
+        if let Some(item) = self.pending.pop_front() {
+            return Some(item);
+        }
+        let item = self.input.as_ref()?.recv().ok()?;
+        self.record_arrival(&item);
+        Some(item)
+    }
+
+    /// Non-blocking attempt to pull one more queued input item while
+    /// processing (the `tensor_filter` batch-aggregation path). Returns
+    /// `None` when nothing is ready or the element has no input channel.
+    ///
+    /// An element that pulls an item it cannot consume — in particular
+    /// [`Item::Eos`] — **must** hand it back via
+    /// [`push_back_input`](Ctx::push_back_input) so the scheduler's
+    /// end-of-stream accounting stays correct.
+    pub fn try_pull_input(&mut self) -> Option<(usize, Item)> {
+        if let Some(item) = self.pending.pop_front() {
+            return Some(item);
+        }
+        let item = self.input.as_ref()?.try_recv().ok()?;
+        self.record_arrival(&item);
+        Some(item)
+    }
+
+    /// Like [`try_pull_input`](Ctx::try_pull_input), but waits up to
+    /// `timeout` for an item. The wait is accounted as idle time, not
+    /// element busy time.
+    pub fn pull_input_timeout(&mut self, timeout: Duration) -> Option<(usize, Item)> {
+        if let Some(item) = self.pending.pop_front() {
+            return Some(item);
+        }
+        let t0 = Instant::now();
+        let item = match self.input.as_ref() {
+            Some(rx) => rx.recv_timeout(timeout).ok(),
+            None => None,
+        };
+        self.idle_ns += t0.elapsed().as_nanos() as u64;
+        if let Some(it) = &item {
+            self.record_arrival(it);
+        }
+        item
+    }
+
+    /// Return an item obtained from [`try_pull_input`](Ctx::try_pull_input)
+    /// / [`pull_input_timeout`](Ctx::pull_input_timeout) that the element
+    /// did not consume. It is redelivered (in pull order) before any new
+    /// channel items.
+    pub fn push_back_input(&mut self, pad: usize, item: Item) {
+        self.pending.push_back((pad, item));
     }
 
     /// Send EOS on one src pad.
@@ -297,6 +374,8 @@ pub(crate) mod testutil {
             epoch: Instant::now(),
             domain: Domain::Cpu,
             idle_ns: 0,
+            input: None,
+            pending: std::collections::VecDeque::new(),
         };
         (ctx, rxs)
     }

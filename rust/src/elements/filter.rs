@@ -6,24 +6,48 @@
 //! * `model=` artifact name (xla) or registered function name (custom)
 //! * `accelerator=` `cpu` (default) | `npu`
 //! * `device-class=` `a` | `b` | `c` (E3's hardware classes; default c)
+//! * `batch=` max frames executed as one stacked invocation (default 1)
+//! * `latency-budget=` max milliseconds to wait for more frames while
+//!   assembling a batch (default 0: drain only already-queued frames)
+//!
+//! ## Batched execution
+//!
+//! With `batch=N`, the filter aggregates up to `N` frames per invocation:
+//! the frame delivered by the scheduler plus whatever is already queued on
+//! its bounded input channel (waiting at most `latency-budget` ms for
+//! stragglers), then executes them as **one dispatch** through the NNFW
+//! sub-plugin and de-batches the results, re-attaching each frame's
+//! original timestamp, sequence number and duration. Outputs are
+//! bit-identical to unbatched execution; only the per-dispatch overhead is
+//! amortized. A partial batch always executes — frames are never held
+//! across `handle` calls, so EOS needs no flush and a slow source simply
+//! degrades to `batch=1` behavior.
 //!
 //! Input caps must carry the same element count/type the model expects
 //! (insert `tensor_transform mode=typecast` upstream as real NNStreamer
 //! pipelines do); dims are checked element-count-wise with rank-agnostic
 //! semantics.
 
+use std::time::{Duration, Instant};
+
 use crate::devices::DeviceClass;
 use crate::element::{Ctx, Element, Flow, Item};
 use crate::error::{Error, Result};
 use crate::metrics::stats::Domain;
 use crate::nnfw::{Accelerator, CustomNnfw, Nnfw, PassthroughNnfw, XlaNnfw};
-use crate::tensor::{Buffer, Caps, TensorInfo};
+use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
+
+/// Upper bound on `batch=` (a saturated channel of huge stacked frames
+/// would otherwise balloon memory).
+pub const MAX_BATCH: usize = 64;
 
 pub struct TensorFilter {
     framework: String,
     model_name: String,
     accelerator: Accelerator,
     class: DeviceClass,
+    batch: usize,
+    latency_budget: Duration,
     plugin: Option<Box<dyn Nnfw>>,
     out_fps: u64,
 }
@@ -35,8 +59,41 @@ impl TensorFilter {
             model_name: String::new(),
             accelerator: Accelerator::Cpu,
             class: DeviceClass::Pc,
+            batch: 1,
+            latency_budget: Duration::ZERO,
             plugin: None,
             out_fps: 0,
+        }
+    }
+
+    /// Drain up to `batch - 1` additional ready frames from the input
+    /// channel into `frames`, honoring the latency budget. Anything that
+    /// is not a pad-0 buffer (EOS in particular) is pushed back for the
+    /// scheduler.
+    fn gather_batch(&self, frames: &mut Vec<Buffer>, ctx: &mut Ctx) {
+        let deadline = Instant::now() + self.latency_budget;
+        while frames.len() < self.batch {
+            match ctx.try_pull_input() {
+                Some((0, Item::Buffer(b))) => frames.push(b),
+                Some((pad, item)) => {
+                    ctx.push_back_input(pad, item);
+                    return;
+                }
+                None => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return;
+                    }
+                    match ctx.pull_input_timeout(deadline - now) {
+                        Some((0, Item::Buffer(b))) => frames.push(b),
+                        Some((pad, item)) => {
+                            ctx.push_back_input(pad, item);
+                            return;
+                        }
+                        None => return,
+                    }
+                }
+            }
         }
     }
 
@@ -107,6 +164,36 @@ impl Element for TensorFilter {
             "model" => self.model_name = value.to_string(),
             "accelerator" => self.accelerator = Accelerator::parse(value)?,
             "device-class" => self.class = DeviceClass::parse(value)?,
+            "batch" => {
+                let n: usize = value.parse().map_err(|_| Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "expected integer".into(),
+                })?;
+                if n == 0 || n > MAX_BATCH {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: format!("batch must be in 1..={MAX_BATCH}"),
+                    });
+                }
+                self.batch = n;
+            }
+            "latency-budget" => {
+                let ms: f64 = value.parse().map_err(|_| Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "expected milliseconds".into(),
+                })?;
+                if !(ms >= 0.0) {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: "latency budget must be >= 0".into(),
+                    });
+                }
+                self.latency_budget = Duration::from_secs_f64(ms / 1e3);
+            }
             _ => {
                 return Err(Error::Property {
                     key: key.into(),
@@ -116,6 +203,15 @@ impl Element for TensorFilter {
             }
         }
         Ok(())
+    }
+
+    /// A batching filter needs channel headroom to aggregate from.
+    fn preferred_input_capacity(&self) -> usize {
+        if self.batch > 1 {
+            self.batch * 2
+        } else {
+            1
+        }
     }
 
     fn domain(&self) -> Domain {
@@ -161,17 +257,35 @@ impl Element for TensorFilter {
             .plugin
             .as_ref()
             .ok_or_else(|| Error::element("tensor_filter", "not negotiated"))?;
-        let refs: Vec<&crate::tensor::Chunk> = buf.chunks.iter().collect();
-        let outs = plugin.invoke(&refs).map_err(|e| {
+        let mut frames = vec![buf];
+        if self.batch > 1 {
+            self.gather_batch(&mut frames, ctx);
+        }
+        let chunk_refs: Vec<Vec<&Chunk>> = frames
+            .iter()
+            .map(|b| b.chunks.iter().collect())
+            .collect();
+        let frame_refs: Vec<&[&Chunk]> =
+            chunk_refs.iter().map(|v| v.as_slice()).collect();
+        let outs = plugin.invoke_batch(&frame_refs).map_err(|e| {
             Error::element(
                 format!("tensor_filter({})", self.model_name),
                 e.to_string(),
             )
         })?;
-        let mut out = Buffer::new(buf.pts_ns, outs);
-        out.seq = buf.seq;
-        out.duration_ns = buf.duration_ns;
-        ctx.push(0, out)?;
+        if outs.len() != frames.len() {
+            return Err(Error::element(
+                format!("tensor_filter({})", self.model_name),
+                format!("batch of {} produced {} results", frames.len(), outs.len()),
+            ));
+        }
+        // De-batch: each result keeps its frame's timestamp and ordering.
+        for (frame, chunks) in frames.iter().zip(outs) {
+            let mut out = Buffer::new(frame.pts_ns, chunks);
+            out.seq = frame.seq;
+            out.duration_ns = frame.duration_ns;
+            ctx.push(0, out)?;
+        }
         Ok(Flow::Continue)
     }
 }
@@ -220,6 +334,43 @@ mod tests {
         let probs = out[0].chunk().to_f32_vec().unwrap();
         assert_eq!(probs.len(), 8);
         assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn batch_property_validated() {
+        let mut f = TensorFilter::new();
+        f.set_property("batch", "4").unwrap();
+        assert_eq!(f.preferred_input_capacity(), 8);
+        f.set_property("latency-budget", "2.5").unwrap();
+        assert!(f.set_property("batch", "0").is_err());
+        assert!(f
+            .set_property("batch", &(MAX_BATCH + 1).to_string())
+            .is_err());
+        assert!(f.set_property("batch", "x").is_err());
+        assert!(f.set_property("latency-budget", "-1").is_err());
+    }
+
+    #[test]
+    fn batched_filter_without_queued_input_runs_partial_batches() {
+        // the testutil ctx has no input channel: every handle() call is a
+        // batch of one, and must still produce one output per input
+        let mut f = TensorFilter::new();
+        f.set_property("framework", "passthrough").unwrap();
+        f.set_property("batch", "4").unwrap();
+        let caps = Caps::tensor(DType::F32, [3], 30.0);
+        f.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        for i in 0..3u64 {
+            let buf = Buffer::from_f32(i * 100, &[i as f32, 1.0, 2.0]);
+            f.handle(0, Item::Buffer(buf), &mut ctx).unwrap();
+        }
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        assert_eq!(out.len(), 3);
+        for (i, b) in out.iter().enumerate() {
+            assert_eq!(b.pts_ns, i as u64 * 100);
+            assert_eq!(b.chunk().as_f32().unwrap()[0], i as f32);
+        }
     }
 
     #[test]

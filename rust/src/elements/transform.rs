@@ -374,6 +374,8 @@ mod tests {
             epoch: std::time::Instant::now(),
             domain: crate::metrics::stats::Domain::Cpu,
             idle_ns: 0,
+            input: None,
+            pending: std::collections::VecDeque::new(),
         };
         el.handle(0, Item::Buffer(buf), &mut ctx).unwrap();
         match rx.try_recv().unwrap() {

@@ -1,18 +1,18 @@
 //! Crate-wide error type.
+//!
+//! `Display`/`Error` are implemented by hand: the crate is dependency-free
+//! apart from `once_cell`, so there is no `thiserror` to derive them.
 
 /// Errors produced by the streaming framework and its elements.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Pipeline description could not be parsed.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Caps negotiation between two linked pads failed.
-    #[error("negotiation failed: {0}")]
     Negotiation(String),
 
     /// An element property was unknown or had an invalid value.
-    #[error("bad property {key}={value}: {reason}")]
     Property {
         key: String,
         value: String,
@@ -20,31 +20,50 @@ pub enum Error {
     },
 
     /// Graph-level error (duplicate names, bad links, cycles, ...).
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// An element failed at runtime while processing a buffer.
-    #[error("element {element}: {reason}")]
     Element { element: String, reason: String },
 
-    /// NNFW / model runtime failure (PJRT compile or execute).
-    #[error("runtime error: {0}")]
+    /// NNFW / model runtime failure (artifact load or execute).
     Runtime(String),
 
     /// Artifact manifest missing/invalid.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
-    Xla(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::Negotiation(msg) => write!(f, "negotiation failed: {msg}"),
+            Error::Property { key, value, reason } => {
+                write!(f, "bad property {key}={value}: {reason}")
+            }
+            Error::Graph(msg) => write!(f, "graph error: {msg}"),
+            Error::Element { element, reason } => write!(f, "element {element}: {reason}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
@@ -57,5 +76,38 @@ impl Error {
             element: element.into(),
             reason: reason.into(),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_keep_their_prefixes() {
+        assert_eq!(
+            Error::Parse("x".into()).to_string(),
+            "parse error: x"
+        );
+        assert_eq!(
+            Error::Property {
+                key: "k".into(),
+                value: "v".into(),
+                reason: "r".into(),
+            }
+            .to_string(),
+            "bad property k=v: r"
+        );
+        assert_eq!(
+            Error::element("queue", "boom").to_string(),
+            "element queue: boom"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

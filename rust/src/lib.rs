@@ -7,11 +7,20 @@
 //! NNStreamer treats neural networks as *filters* of *stream pipelines*
 //! (pipe-and-filter architecture). This crate implements the streaming
 //! framework (Layer 3) in Rust: tensor stream types, caps negotiation,
-//! a pipeline graph with a tokio-based scheduler, the full set of
-//! `tensor_*` elements from the paper, NNFW sub-plugins that execute
-//! AOT-compiled JAX/Pallas models through XLA PJRT, and the baselines
-//! ("Control" serial implementations and a MediaPipe-like framework)
-//! needed to regenerate every table and figure of the paper's evaluation.
+//! a pipeline graph with a thread-per-element scheduler over bounded
+//! channels, the full set of `tensor_*` elements from the paper, NNFW
+//! sub-plugins that execute AOT-compiled JAX/Pallas artifacts, and the
+//! baselines ("Control" serial implementations and a MediaPipe-like
+//! framework) needed to regenerate every table and figure of the paper's
+//! evaluation.
+//!
+//! Two throughput subsystems sit under `tensor_filter` (see DESIGN.md):
+//!
+//! * a shared **model-instance pool** ([`runtime::ModelPool`]) — pipeline
+//!   branches referencing the same artifact lease one loaded model;
+//! * **batched execution** (`tensor_filter batch=N latency-budget=M`) —
+//!   ready frames are stacked into a single dispatch and de-batched with
+//!   their original timestamps, amortizing per-dispatch overhead.
 //!
 //! ## Quickstart
 //!

@@ -20,7 +20,7 @@ use once_cell::sync::Lazy;
 
 use crate::devices::{DeviceClass, NpuSim};
 use crate::error::{Error, Result};
-use crate::runtime::{Model, ModelRegistry};
+use crate::runtime::{Model, ModelPool, PoolLease};
 use crate::tensor::{Chunk, TensorInfo};
 
 /// Which accelerator executes an [`XlaNnfw`].
@@ -54,6 +54,35 @@ pub fn set_cpu_rate_flops(rate: u64) {
     CPU_RATE_FLOPS.store(rate, std::sync::atomic::Ordering::Relaxed);
 }
 
+/// Serializes tests that reconfigure the process-global CPU envelope
+/// (E1 sets an embedded rate, E4 disables it); without this, concurrent
+/// test threads would flip the envelope mid-measurement.
+#[cfg(test)]
+pub(crate) static CPU_ENVELOPE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds [`CPU_ENVELOPE_TEST_LOCK`] and restores the no-envelope default
+/// on drop, so a test's rate never leaks into later tests.
+#[cfg(test)]
+pub(crate) struct CpuEnvelopeTestGuard {
+    _lock: std::sync::MutexGuard<'static, ()>,
+}
+
+#[cfg(test)]
+impl Drop for CpuEnvelopeTestGuard {
+    fn drop(&mut self) {
+        set_cpu_rate_flops(0);
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn cpu_envelope_test_guard() -> CpuEnvelopeTestGuard {
+    CpuEnvelopeTestGuard {
+        _lock: CPU_ENVELOPE_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner()),
+    }
+}
+
 pub fn cpu_rate_flops() -> u64 {
     CPU_RATE_FLOPS.load(std::sync::atomic::Ordering::Relaxed)
 }
@@ -66,6 +95,17 @@ pub trait Nnfw: Send {
     fn outputs(&self) -> Vec<TensorInfo>;
     /// Run inference on one frame's chunks.
     fn invoke(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>>;
+    /// Run inference on several frames; `frames[i]` holds frame `i`'s
+    /// input chunks and the result holds frame `i`'s outputs, in order.
+    ///
+    /// The default loops over [`invoke`](Nnfw::invoke); backends with a
+    /// cheaper batched path ([`XlaNnfw`] stacking frames into a single
+    /// dispatch) override it. Implementations must keep per-frame results
+    /// identical to per-frame `invoke` calls — `tensor_filter` relies on
+    /// that to de-batch transparently.
+    fn invoke_batch(&self, frames: &[&[&Chunk]]) -> Result<Vec<Vec<Chunk>>> {
+        frames.iter().map(|inputs| self.invoke(inputs)).collect()
+    }
     /// Whether invoke() blocks on the NPU queue (busy time charged to NPU).
     fn is_npu(&self) -> bool {
         false
@@ -79,58 +119,84 @@ fn to_stream_info(info: &TensorInfo) -> TensorInfo {
     TensorInfo::new(info.dtype, crate::tensor::Dims::new(&dims))
 }
 
-/// XLA/PJRT sub-plugin.
+/// XLA sub-plugin: executes AOT artifacts leased from the shared
+/// [`ModelPool`], so pipeline branches referencing the same artifact share
+/// one loaded instance.
 pub struct XlaNnfw {
-    model: Arc<Model>,
+    lease: PoolLease,
     accel: Accelerator,
     class: DeviceClass,
 }
 
 impl XlaNnfw {
     pub fn load(name: &str, accel: Accelerator, class: DeviceClass) -> Result<Self> {
-        let reg = ModelRegistry::global()?;
+        let pool = ModelPool::global()?;
         Ok(Self {
-            model: reg.load(name)?,
+            lease: pool.acquire(name)?,
             accel,
             class,
         })
     }
 
     pub fn model(&self) -> &Arc<Model> {
-        &self.model
+        self.lease.model()
+    }
+
+    /// Pad a CPU execution to the modeled envelope (embedded-CPU rate x
+    /// device class) for `n` frames of work.
+    fn cpu_envelope(&self, real: Duration, n: u64) {
+        let rate = cpu_rate_flops();
+        let mut target = if rate > 0 {
+            Duration::from_secs_f64(
+                self.model().spec.flops.saturating_mul(n) as f64 / rate as f64,
+            )
+        } else {
+            real
+        };
+        target = target.max(real).mul_f64(self.class.throttle_factor());
+        if target > real {
+            std::thread::sleep(target - real);
+        }
     }
 }
 
 impl Nnfw for XlaNnfw {
     fn inputs(&self) -> Vec<TensorInfo> {
-        self.model.spec.inputs.iter().map(to_stream_info).collect()
+        self.model().spec.inputs.iter().map(to_stream_info).collect()
     }
 
     fn outputs(&self) -> Vec<TensorInfo> {
-        self.model.spec.outputs.iter().map(to_stream_info).collect()
+        self.model().spec.outputs.iter().map(to_stream_info).collect()
     }
 
     fn invoke(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>> {
         match self.accel {
             Accelerator::Npu => {
                 let owned: Vec<Chunk> = inputs.iter().map(|&c| c.clone()).collect();
-                NpuSim::global().submit(self.model.clone(), owned)
+                NpuSim::global().submit(self.model().clone(), owned)
             }
             Accelerator::Cpu => {
                 let t0 = Instant::now();
-                let out = self.model.execute(inputs)?;
-                let real = t0.elapsed();
-                // modeled envelope: embedded-CPU rate x device class
-                let rate = cpu_rate_flops();
-                let mut target = if rate > 0 {
-                    Duration::from_secs_f64(self.model.spec.flops as f64 / rate as f64)
-                } else {
-                    real
-                };
-                target = target.max(real).mul_f64(self.class.throttle_factor());
-                if target > real {
-                    std::thread::sleep(target - real);
-                }
+                let out = self.model().execute(inputs)?;
+                self.cpu_envelope(t0.elapsed(), 1);
+                Ok(out)
+            }
+        }
+    }
+
+    fn invoke_batch(&self, frames: &[&[&Chunk]]) -> Result<Vec<Vec<Chunk>>> {
+        match self.accel {
+            Accelerator::Npu => {
+                let owned: Vec<Vec<Chunk>> = frames
+                    .iter()
+                    .map(|inputs| inputs.iter().map(|&c| c.clone()).collect())
+                    .collect();
+                NpuSim::global().submit_batch(self.model().clone(), owned)
+            }
+            Accelerator::Cpu => {
+                let t0 = Instant::now();
+                let out = self.model().execute_batch(frames)?;
+                self.cpu_envelope(t0.elapsed(), frames.len() as u64);
                 Ok(out)
             }
         }
@@ -248,6 +314,30 @@ mod tests {
     #[test]
     fn unknown_custom_errors() {
         assert!(CustomNnfw::load("nope").is_err());
+    }
+
+    #[test]
+    fn default_invoke_batch_loops_per_frame() {
+        register_custom(
+            "triple",
+            vec![TensorInfo::new(DType::F32, [2])],
+            vec![TensorInfo::new(DType::F32, [2])],
+            |ins| {
+                let v = ins[0].to_f32_vec()?;
+                let out: Vec<f32> = v.iter().map(|x| x * 3.0).collect();
+                Ok(vec![Chunk::from_f32(&out)])
+            },
+        );
+        let f = CustomNnfw::load("triple").unwrap();
+        let a = Chunk::from_f32(&[1.0, 2.0]);
+        let b = Chunk::from_f32(&[3.0, 4.0]);
+        let ra: Vec<&Chunk> = vec![&a];
+        let rb: Vec<&Chunk> = vec![&b];
+        let frames: [&[&Chunk]; 2] = [ra.as_slice(), rb.as_slice()];
+        let outs = f.invoke_batch(&frames).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0][0].to_f32_vec().unwrap(), vec![3.0, 6.0]);
+        assert_eq!(outs[1][0].to_f32_vec().unwrap(), vec![9.0, 12.0]);
     }
 
     #[test]

@@ -33,6 +33,18 @@ impl Pipeline {
     }
 
     /// Parse a gst-launch-style description (see [`parser`]).
+    ///
+    /// ```
+    /// use nnstreamer::pipeline::Pipeline;
+    ///
+    /// # fn main() -> nnstreamer::Result<()> {
+    /// let p = Pipeline::parse(
+    ///     "videotestsrc num-buffers=4 ! tensor_converter ! fakesink",
+    /// )?;
+    /// assert_eq!(p.graph.nodes.len(), 3);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn parse(desc: &str) -> Result<Self> {
         Ok(Self::new(parser::parse(desc)?))
     }

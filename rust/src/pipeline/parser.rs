@@ -216,4 +216,24 @@ mod tests {
         let g = parse("videotestsrc pattern=\"smpte\" ! fakesink").unwrap();
         assert_eq!(g.nodes.len(), 2);
     }
+
+    #[test]
+    fn tensor_filter_batch_properties_parse() {
+        let g = parse(
+            "videotestsrc num-buffers=4 ! tensor_converter ! \
+             tensor_filter framework=passthrough batch=4 latency-budget=2 name=f ! \
+             fakesink",
+        )
+        .unwrap();
+        assert!(g.by_name("f").is_some());
+    }
+
+    #[test]
+    fn tensor_filter_rejects_bad_batch_values() {
+        assert!(parse("videotestsrc ! tensor_filter batch=0 ! fakesink").is_err());
+        assert!(parse("videotestsrc ! tensor_filter batch=nope ! fakesink").is_err());
+        assert!(
+            parse("videotestsrc ! tensor_filter latency-budget=-3 ! fakesink").is_err()
+        );
+    }
 }

@@ -140,8 +140,11 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
             epoch,
             domain: node.element.domain(),
             idle_ns: 0,
+            // consumers own their input channel through the ctx so they
+            // can drain ready items mid-handle (tensor_filter batching)
+            input: receivers[id].take(),
+            pending: std::collections::VecDeque::new(),
         };
-        let rx = receivers[id].take();
         let name = node.name.clone();
         node_names.push(name.clone());
         let mut element = node.element;
@@ -151,7 +154,7 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
                 if element.is_source() {
                     run_source(&mut *element, &mut ctx)?;
                 } else {
-                    run_consumer(&mut *element, rx.expect("consumer has channel"), n_sink_links, &mut ctx)?;
+                    run_consumer(&mut *element, n_sink_links, &mut ctx)?;
                 }
                 Ok(element)
             })
@@ -190,19 +193,17 @@ fn run_source(element: &mut dyn Element, ctx: &mut Ctx) -> Result<()> {
 
 fn run_consumer(
     element: &mut dyn Element,
-    rx: std::sync::mpsc::Receiver<(usize, Item)>,
     n_sink_links: usize,
     ctx: &mut Ctx,
 ) -> Result<()> {
     let mut eos_seen = 0usize;
     let mut early_eos = false;
-    while let Ok((pad, item)) = rx.recv() {
+    // Arrival accounting happens inside Ctx::next_input (shared with the
+    // mid-handle drain paths), pushed-back items replay first.
+    while let Some((pad, item)) = ctx.next_input() {
         let is_eos = matches!(item, Item::Eos);
         if is_eos {
             eos_seen += 1;
-        } else {
-            let at = Instant::now().duration_since(ctx.epoch).as_nanos() as u64;
-            ctx.stats.record_in_at(at);
         }
         if !early_eos {
             let t0 = Instant::now();

@@ -1,0 +1,218 @@
+//! Execution backend for AOT artifacts.
+//!
+//! The runtime is backend-agnostic: a [`Executable`] turns per-frame input
+//! tensors into output tensors and charges a per-dispatch cost, and
+//! everything above it (registry, pool, NNFW sub-plugins, NPU simulator)
+//! only sees that contract. The offline build ships one backend, the
+//! *deterministic surrogate* below; a PJRT/XLA backend slots in behind the
+//! same `run_batch` seam (see DESIGN.md "Execution backends").
+//!
+//! ## Surrogate semantics
+//!
+//! The surrogate is a pure function of the model's *stem* (artifact name
+//! minus the `_opt`/`_ref` variant suffix) and the frame's input values:
+//!
+//! * every output element mixes a fixed pseudo-random sample of the input
+//!   (so outputs are input-dependent and spatially varied);
+//! * heads marked `act=softmax` in the manifest are normalized into
+//!   probability distributions over their last axis;
+//! * `_opt` and `_ref` variants of one stem produce *identical values* —
+//!   they model the same network built by two NNFW versions — but `_ref`
+//!   pays a larger per-dispatch cost (E4's pinned old-NNFW build);
+//! * the per-dispatch cost is real, deterministic CPU work sized from the
+//!   manifest `flops=` field, modeling executable launch + weight
+//!   residency. It is paid **once per dispatch**, not once per frame,
+//!   which is precisely what makes batched invocation profitable.
+
+use std::hint::black_box;
+
+use crate::runtime::manifest::{Act, ModelSpec};
+use crate::video::pattern::splitmix64;
+
+/// Input samples mixed into each output element.
+const SAMPLES: usize = 16;
+/// Lower/upper bounds on modeled dispatch work (mixer iterations).
+const DISPATCH_MIN: u64 = 200_000;
+const DISPATCH_MAX: u64 = 20_000_000;
+/// Dispatch-cost multiplier for `_ref` artifacts (the slower NNFW build).
+const REF_DISPATCH_FACTOR: u64 = 3;
+
+/// Artifact name minus the `_opt` / `_ref` variant suffix.
+pub(crate) fn stem(name: &str) -> &str {
+    name.strip_suffix("_opt")
+        .or_else(|| name.strip_suffix("_ref"))
+        .unwrap_or(name)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A loaded, executable model (surrogate backend).
+pub(crate) struct Executable {
+    seed: u64,
+    dispatch_iters: u64,
+}
+
+impl Executable {
+    pub(crate) fn new(spec: &ModelSpec) -> Self {
+        let mut iters = (spec.flops / 10).clamp(DISPATCH_MIN, DISPATCH_MAX);
+        if spec.name.ends_with("_ref") {
+            iters = iters.saturating_mul(REF_DISPATCH_FACTOR);
+        }
+        Self {
+            seed: fnv1a(stem(&spec.name)),
+            dispatch_iters: iters,
+        }
+    }
+
+    /// Deterministic busy work standing in for executable launch + weight
+    /// traffic. Paid once per dispatch regardless of batch size.
+    fn dispatch_pad(&self) {
+        let mut h = self.seed;
+        for _ in 0..self.dispatch_iters {
+            h = splitmix64(h);
+        }
+        black_box(h);
+    }
+
+    /// Execute a batch of frames in one dispatch. `frames[i]` holds frame
+    /// `i`'s input tensors (borrowed views); the result holds frame `i`'s
+    /// output tensors. Per-frame values are independent of the batch they
+    /// ran in, so batched and unbatched execution are bit-identical.
+    pub(crate) fn run_batch(
+        &self,
+        spec: &ModelSpec,
+        frames: &[Vec<&[f32]>],
+    ) -> Vec<Vec<Vec<f32>>> {
+        self.dispatch_pad();
+        frames.iter().map(|f| self.run_frame(spec, f)).collect()
+    }
+
+    fn run_frame(&self, spec: &ModelSpec, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
+        let concat: Vec<f32> = inputs.iter().flat_map(|v| v.iter().copied()).collect();
+        let n_in = concat.len().max(1);
+        spec.outputs
+            .iter()
+            .enumerate()
+            .map(|(j, info)| {
+                let n = info.dims.num_elements();
+                let mut out = vec![0f32; n];
+                for (k, slot) in out.iter_mut().enumerate() {
+                    let mut h = self.seed
+                        ^ (j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                        ^ (k as u64).wrapping_mul(0xd1b5_4a32_d192_ed03);
+                    let mut acc = 0f32;
+                    for _ in 0..SAMPLES {
+                        h = splitmix64(h);
+                        let idx = (h as usize) % n_in;
+                        let w = ((h >> 32) & 0xFFFF) as f32 / 65535.0 - 0.5;
+                        acc += w * concat.get(idx).copied().unwrap_or(0.0);
+                    }
+                    *slot = (acc * (8.0 / SAMPLES as f32)).tanh();
+                }
+                if spec.acts.get(j) == Some(&Act::Softmax) {
+                    let row = info
+                        .dims
+                        .as_slice()
+                        .last()
+                        .copied()
+                        .unwrap_or(n)
+                        .max(1);
+                    softmax_rows(&mut out, row);
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+/// In-place softmax over consecutive rows of length `row`.
+fn softmax_rows(v: &mut [f32], row: usize) {
+    for chunk in v.chunks_mut(row) {
+        let m = chunk.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0f32;
+        for x in chunk.iter_mut() {
+            *x = (*x - m).exp();
+            z += *x;
+        }
+        if z > 0.0 {
+            for x in chunk.iter_mut() {
+                *x /= z;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, TensorInfo};
+
+    fn spec(name: &str, out_dims: &[usize], act: Act) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            inputs: vec![TensorInfo::new(DType::F32, [1, 8, 4])],
+            outputs: vec![TensorInfo::new(DType::F32, out_dims)],
+            flops: 1,
+            acts: vec![act],
+        }
+    }
+
+    #[test]
+    fn stem_strips_variant_suffix() {
+        assert_eq!(stem("i3_opt"), "i3");
+        assert_eq!(stem("i3_ref"), "i3");
+        assert_eq!(stem("plain"), "plain");
+    }
+
+    #[test]
+    fn softmax_head_sums_to_one_and_depends_on_input() {
+        let s = spec("toy_opt", &[1, 8], Act::Softmax);
+        let exe = Executable::new(&s);
+        let a: Vec<f32> = (0..32).map(|i| i as f32 / 32.0).collect();
+        let b: Vec<f32> = (0..32).map(|i| 1.0 - i as f32 / 32.0).collect();
+        let oa = &exe.run_batch(&s, &[vec![a.as_slice()]])[0][0];
+        let ob = &exe.run_batch(&s, &[vec![b.as_slice()]])[0][0];
+        assert!((oa.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        let diff = oa
+            .iter()
+            .zip(ob)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff > 1e-4, "outputs must depend on inputs");
+    }
+
+    #[test]
+    fn opt_and_ref_values_agree_but_ref_dispatch_is_heavier() {
+        let so = spec("toy_opt", &[1, 8], Act::None);
+        let sr = spec("toy_ref", &[1, 8], Act::None);
+        let eo = Executable::new(&so);
+        let er = Executable::new(&sr);
+        let input: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        let oo = &eo.run_batch(&so, &[vec![input.as_slice()]])[0][0];
+        let or = &er.run_batch(&sr, &[vec![input.as_slice()]])[0][0];
+        assert_eq!(oo, or, "variants model the same network");
+        assert!(er.dispatch_iters > eo.dispatch_iters);
+    }
+
+    #[test]
+    fn batched_run_is_bit_identical_to_single() {
+        let s = spec("toy_opt", &[1, 6], Act::Softmax);
+        let exe = Executable::new(&s);
+        let data: Vec<Vec<f32>> = (0..5)
+            .map(|i| (0..32).map(|k| ((i * 32 + k) as f32).cos()).collect())
+            .collect();
+        let frames: Vec<Vec<&[f32]>> = data.iter().map(|d| vec![d.as_slice()]).collect();
+        let batched = exe.run_batch(&s, &frames);
+        for (i, frame) in frames.iter().enumerate() {
+            let single = exe.run_batch(&s, std::slice::from_ref(frame));
+            assert_eq!(batched[i], single[0]);
+        }
+    }
+}

@@ -2,10 +2,16 @@
 //!
 //! `python/compile/aot.py` writes one line per model:
 //! ```text
-//! name\tin=float32:1x64x64x3[;...]\tout=float32:1x100[;...]\tflops=N
+//! name\tin=float32:1x64x64x3[;...]\tout=float32:1x100[;...]\tflops=N\tact=softmax[;none...]
 //! ```
 //! (Line-based on purpose: the offline vendor set has no JSON crate, and a
 //! TSV manifest diffs nicely in review.)
+//!
+//! The optional `act=` field records the final activation of each output
+//! head (`none` when absent). Compiled HLO artifacts embed the activation
+//! in the program itself; the surrogate execution backend (see
+//! `runtime::exec`) uses the hint to reproduce head semantics — e.g. that
+//! a classifier output is a probability distribution.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -13,12 +19,36 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::tensor::{DType, Dims, TensorInfo};
 
+/// Final activation of one model output head (manifest `act=` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// Raw values (regression heads, logit maps, ...).
+    None,
+    /// Probability distribution over the output's last (minor) axis.
+    Softmax,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim() {
+            "none" | "" => Act::None,
+            "softmax" => Act::Softmax,
+            other => {
+                return Err(Error::Manifest(format!("unknown activation {other:?}")))
+            }
+        })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
     pub name: String,
     pub inputs: Vec<TensorInfo>,
     pub outputs: Vec<TensorInfo>,
     pub flops: u64,
+    /// Per-output head activation, aligned with `outputs` (padded with
+    /// [`Act::None`] when the manifest has no `act=` field).
+    pub acts: Vec<Act>,
 }
 
 #[derive(Debug, Default)]
@@ -56,6 +86,7 @@ impl Manifest {
             let mut inputs = None;
             let mut outputs = None;
             let mut flops = 0u64;
+            let mut acts: Vec<Act> = Vec::new();
             for (i, field) in line.split('\t').enumerate() {
                 if i == 0 {
                     name = Some(field.to_string());
@@ -65,16 +96,32 @@ impl Manifest {
                     outputs = Some(parse_tensor_list(v)?);
                 } else if let Some(v) = field.strip_prefix("flops=") {
                     flops = v.parse().unwrap_or(0);
+                } else if let Some(v) = field.strip_prefix("act=") {
+                    acts = v.split(';').map(Act::parse).collect::<Result<_>>()?;
                 }
             }
+            let outputs: Vec<TensorInfo> = outputs
+                .ok_or_else(|| Error::Manifest(format!("line {}: no out=", lineno + 1)))?;
+            // act= absent means all heads default to None; when present it
+            // must name every head (partial lists would silently shift
+            // semantics between heads)
+            if !acts.is_empty() && acts.len() != outputs.len() {
+                return Err(Error::Manifest(format!(
+                    "line {}: {} act entries for {} outputs",
+                    lineno + 1,
+                    acts.len(),
+                    outputs.len()
+                )));
+            }
+            acts.resize(outputs.len(), Act::None);
             let spec = ModelSpec {
                 name: name
                     .ok_or_else(|| Error::Manifest(format!("line {}: no name", lineno + 1)))?,
                 inputs: inputs
                     .ok_or_else(|| Error::Manifest(format!("line {}: no in=", lineno + 1)))?,
-                outputs: outputs
-                    .ok_or_else(|| Error::Manifest(format!("line {}: no out=", lineno + 1)))?,
+                outputs,
                 flops,
+                acts,
             };
             models.insert(spec.name.clone(), spec);
         }
@@ -129,6 +176,38 @@ mod tests {
         let ssd = m.get("ssd_opt").unwrap();
         assert_eq!(ssd.outputs.len(), 2);
         assert_eq!(ssd.outputs[1].dims.as_slice(), &[1, 360, 11]);
+        // no act= field: every head defaults to Act::None
+        assert_eq!(ssd.acts, vec![Act::None, Act::None]);
+    }
+
+    #[test]
+    fn parses_act_field() {
+        let m = Manifest::parse(
+            "rnet\tin=float32:16x24x24x3\tout=float32:16x2;float32:16x4\tflops=1\tact=softmax;none\n",
+        )
+        .unwrap();
+        let r = m.get("rnet").unwrap();
+        assert_eq!(r.acts, vec![Act::Softmax, Act::None]);
+    }
+
+    #[test]
+    fn rejects_unknown_act() {
+        assert!(
+            Manifest::parse("x\tin=float32:1\tout=float32:1\tact=relu6\n").is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_act_output_count_mismatch() {
+        assert!(
+            Manifest::parse("x\tin=float32:1\tout=float32:1\tact=none;softmax\n")
+                .is_err()
+        );
+        // too few entries is just as wrong as too many
+        assert!(Manifest::parse(
+            "x\tin=float32:1\tout=float32:1;float32:2\tact=softmax\n"
+        )
+        .is_err());
     }
 
     #[test]

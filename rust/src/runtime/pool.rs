@@ -1,0 +1,235 @@
+//! Shared model-instance pool.
+//!
+//! `tensor_filter` elements do not load models directly: they *lease* them
+//! from the process-wide [`ModelPool`]. Two pipeline branches (or two
+//! pipelines) that reference the same artifact share one loaded
+//! [`Model`] instance — the paper's observation that NNStreamer can run
+//! "multiple instances of a single neural network model without
+//! duplicated overheads" (§V, E1) — and the pool makes that sharing
+//! observable and manageable:
+//!
+//! * per-artifact counters: how often it was loaded (compiled) vs merely
+//!   re-acquired, and how many leases are currently live;
+//! * idle eviction: [`ModelPool::evict_idle`] drops executables no filter
+//!   is using (long-running daemons swap model sets without restarting).
+//!
+//! Loading delegates to [`ModelRegistry`], so pool users and direct
+//! registry users (the Control baselines, the E3 custom stages) still end
+//! up sharing the same `Arc<Model>`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use crate::error::Result;
+use crate::runtime::{Model, ModelRegistry};
+
+struct Entry {
+    /// `None` after idle eviction; re-loaded on the next acquire.
+    model: Option<Arc<Model>>,
+    live: Arc<AtomicUsize>,
+    acquires: u64,
+    loads: u64,
+}
+
+/// A leased model handle. Dropping the lease releases the pool slot (the
+/// executable itself stays cached until [`ModelPool::evict_idle`]).
+pub struct PoolLease {
+    model: Arc<Model>,
+    live: Arc<AtomicUsize>,
+}
+
+impl PoolLease {
+    /// The shared model instance backing this lease.
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+}
+
+impl std::ops::Deref for PoolLease {
+    type Target = Model;
+
+    fn deref(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl Drop for PoolLease {
+    fn drop(&mut self) {
+        self.live.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Aggregate pool counters (see [`ModelPool::snapshot`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStatsSnapshot {
+    /// Artifacts currently resident (not evicted).
+    pub resident_models: usize,
+    /// Total acquires across all artifacts.
+    pub total_acquires: u64,
+    /// Total loads (compiles) across all artifacts.
+    pub total_loads: u64,
+    /// Currently live leases across all artifacts.
+    pub live_leases: usize,
+}
+
+/// The shared model-instance pool.
+pub struct ModelPool {
+    registry: Arc<ModelRegistry>,
+    entries: Mutex<HashMap<String, Entry>>,
+}
+
+static GLOBAL: Lazy<Mutex<Option<Arc<ModelPool>>>> = Lazy::new(|| Mutex::new(None));
+
+impl ModelPool {
+    /// A pool over an explicit registry (tests, multi-directory setups).
+    pub fn new(registry: Arc<ModelRegistry>) -> Self {
+        Self {
+            registry,
+            entries: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The process-wide pool over [`ModelRegistry::global`].
+    pub fn global() -> Result<Arc<Self>> {
+        let mut g = GLOBAL.lock().unwrap();
+        if let Some(p) = g.as_ref() {
+            return Ok(p.clone());
+        }
+        let pool = Arc::new(Self::new(ModelRegistry::global()?));
+        *g = Some(pool.clone());
+        Ok(pool)
+    }
+
+    /// Lease a model by artifact name, loading it on first use.
+    pub fn acquire(&self, name: &str) -> Result<PoolLease> {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            model: None,
+            live: Arc::new(AtomicUsize::new(0)),
+            acquires: 0,
+            loads: 0,
+        });
+        if entry.model.is_none() {
+            entry.model = Some(self.registry.load(name)?);
+            entry.loads += 1;
+        }
+        entry.acquires += 1;
+        entry.live.fetch_add(1, Ordering::Relaxed);
+        Ok(PoolLease {
+            model: entry.model.as_ref().expect("just loaded").clone(),
+            live: entry.live.clone(),
+        })
+    }
+
+    /// Times `name` was loaded (compiled). Stays at 1 however many
+    /// branches lease the artifact — the sharing proof.
+    pub fn loads(&self, name: &str) -> u64 {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(name)
+            .map_or(0, |e| e.loads)
+    }
+
+    /// Times `name` was leased.
+    pub fn acquires(&self, name: &str) -> u64 {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(name)
+            .map_or(0, |e| e.acquires)
+    }
+
+    /// Currently live leases on `name`.
+    pub fn live_leases(&self, name: &str) -> usize {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(name)
+            .map_or(0, |e| e.live.load(Ordering::Relaxed))
+    }
+
+    /// Aggregate counters over every artifact the pool has seen.
+    pub fn snapshot(&self) -> PoolStatsSnapshot {
+        let entries = self.entries.lock().unwrap();
+        let mut s = PoolStatsSnapshot::default();
+        for e in entries.values() {
+            if e.model.is_some() {
+                s.resident_models += 1;
+            }
+            s.total_acquires += e.acquires;
+            s.total_loads += e.loads;
+            s.live_leases += e.live.load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    /// Evict every resident executable with zero live leases; returns how
+    /// many were dropped. Counters survive eviction, so `loads` reflects
+    /// genuine recompiles.
+    pub fn evict_idle(&self) -> usize {
+        let mut entries = self.entries.lock().unwrap();
+        let mut evicted = 0;
+        for (name, e) in entries.iter_mut() {
+            if e.model.is_some() && e.live.load(Ordering::Relaxed) == 0 {
+                e.model = None;
+                self.registry.evict(name);
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn private_pool() -> ModelPool {
+        ModelPool::new(ModelRegistry::global().expect("artifacts present"))
+    }
+
+    #[test]
+    fn leases_share_one_instance() {
+        let pool = private_pool();
+        let a = pool.acquire("onet_opt").unwrap();
+        let b = pool.acquire("onet_opt").unwrap();
+        assert!(
+            Arc::ptr_eq(a.model(), b.model()),
+            "two leases must share one Model instance"
+        );
+        assert_eq!(pool.loads("onet_opt"), 1);
+        assert_eq!(pool.acquires("onet_opt"), 2);
+        assert_eq!(pool.live_leases("onet_opt"), 2);
+        drop(a);
+        assert_eq!(pool.live_leases("onet_opt"), 1);
+        drop(b);
+        assert_eq!(pool.live_leases("onet_opt"), 0);
+        let s = pool.snapshot();
+        assert_eq!(s.resident_models, 1);
+        assert_eq!(s.total_acquires, 2);
+    }
+
+    #[test]
+    fn idle_eviction_reloads_on_next_acquire() {
+        let pool = private_pool();
+        let lease = pool.acquire("onet_opt").unwrap();
+        assert_eq!(pool.evict_idle(), 0, "live lease must not be evicted");
+        drop(lease);
+        assert_eq!(pool.evict_idle(), 1);
+        assert_eq!(pool.snapshot().resident_models, 0);
+        let again = pool.acquire("onet_opt").unwrap();
+        assert_eq!(pool.loads("onet_opt"), 2, "eviction forces a reload");
+        assert_eq!(again.spec.name, "onet_opt");
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = ModelPool::global().unwrap();
+        let b = ModelPool::global().unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -37,12 +37,39 @@ impl SingleShot {
         &self.model.spec.outputs
     }
 
-    /// Invoke the model on raw f32 tensors.
+    /// Invoke the model on raw f32 tensors (one slice per model input).
+    ///
+    /// ```no_run
+    /// use nnstreamer::runtime::SingleShot;
+    ///
+    /// # fn main() -> nnstreamer::Result<()> {
+    /// let s = SingleShot::open("ars_a_opt")?;
+    /// let window = vec![0.25f32; 128 * 3]; // one accelerometer window
+    /// let out = s.invoke(&[&window])?;
+    /// println!("activity probabilities: {:?}", out[0]);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn invoke(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let chunks: Vec<Chunk> = inputs.iter().map(|d| Chunk::from_f32(d)).collect();
         let refs: Vec<&Chunk> = chunks.iter().collect();
         let outs = self.model.execute(&refs)?;
         outs.iter().map(|c| c.to_f32_vec()).collect()
+    }
+
+    /// Invoke a **single-input** model on several frames in one dispatch
+    /// (see [`Model::execute_batch`]); returns per-frame output lists.
+    /// De-batched results are bit-identical to per-frame [`invoke`] calls.
+    ///
+    /// [`invoke`]: SingleShot::invoke
+    pub fn invoke_batch(&self, frames: &[&[f32]]) -> Result<Vec<Vec<Vec<f32>>>> {
+        let chunks: Vec<Chunk> = frames.iter().map(|d| Chunk::from_f32(d)).collect();
+        let frame_refs: Vec<Vec<&Chunk>> = chunks.iter().map(|c| vec![c]).collect();
+        let slices: Vec<&[&Chunk]> = frame_refs.iter().map(|v| v.as_slice()).collect();
+        let outs = self.model.execute_batch(&slices)?;
+        outs.into_iter()
+            .map(|frame| frame.iter().map(|c| c.to_f32_vec()).collect())
+            .collect()
     }
 }
 
@@ -52,12 +79,26 @@ mod tests {
 
     #[test]
     fn single_shot_runs_ars_model() {
-        let s = SingleShot::open("ars_a_opt").expect("artifacts built");
+        let s = SingleShot::open("ars_a_opt").expect("artifacts present");
         assert_eq!(s.input_info()[0].dims.as_slice(), &[1, 128, 3]);
         let input = vec![0.25f32; 128 * 3];
         let out = s.invoke(&[&input]).unwrap();
         assert_eq!(out[0].len(), 8);
         let sum: f32 = out[0].iter().sum();
         assert!((sum - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn invoke_batch_matches_invoke() {
+        let s = SingleShot::open("ars_a_opt").expect("artifacts present");
+        let frames: Vec<Vec<f32>> = (0..3)
+            .map(|f| (0..128 * 3).map(|i| ((i + f * 7) % 13) as f32 / 13.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = frames.iter().map(|v| v.as_slice()).collect();
+        let batched = s.invoke_batch(&refs).unwrap();
+        for (i, frame) in refs.iter().enumerate() {
+            let single = s.invoke(&[frame]).unwrap();
+            assert_eq!(batched[i], single);
+        }
     }
 }

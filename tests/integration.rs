@@ -222,3 +222,100 @@ fn single_api_without_pipeline() {
     let out = s.invoke(&[&vec![0.5f32; n]]).unwrap();
     assert_eq!(out[0].len(), 12 * 12 * 40);
 }
+
+#[test]
+fn batched_filter_outputs_bit_identical_to_unbatched() {
+    use nnstreamer::elements::sinks::AppSink;
+    use nnstreamer::elements::sources::AppSrc;
+    use nnstreamer::pipeline::Graph;
+    use nnstreamer::runtime::SingleShot;
+    use nnstreamer::tensor::Buffer;
+
+    // 7 frames through `batch=4` (one full batch + one partial) must give
+    // byte-for-byte the same outputs as per-frame SingleShot invocations,
+    // in order, with original timestamps.
+    let window = 128 * 3;
+    let frames: Vec<Vec<f32>> = (0..7)
+        .map(|f| {
+            (0..window)
+                .map(|i| ((i * 13 + f * 977) % 251) as f32 / 251.0)
+                .collect()
+        })
+        .collect();
+
+    let mut g = Graph::new();
+    let mut src = AppSrc::new();
+    src.set_caps(Caps::tensor(DType::F32, [3, 128, 1], 0.0));
+    let handle = src.handle();
+    let src_id = g.add_element("in", Box::new(src)).unwrap();
+    let filter = g.add("tensor_filter").unwrap();
+    g.set_property(filter, "framework", "xla").unwrap();
+    g.set_property(filter, "model", "ars_a_opt").unwrap();
+    g.set_property(filter, "batch", "4").unwrap();
+    g.set_property(filter, "latency-budget", "50").unwrap();
+    let mut sink = AppSink::new();
+    let rx = sink.take_receiver().unwrap();
+    let sink_id = g.add_element("out", Box::new(sink)).unwrap();
+    g.link(src_id, filter).unwrap();
+    g.link(filter, sink_id).unwrap();
+
+    let mut p = Pipeline::new(g);
+    let running = p.play().unwrap();
+    for (i, frame) in frames.iter().enumerate() {
+        handle
+            .push(Buffer::from_f32(i as u64 * 10, frame))
+            .unwrap();
+    }
+    handle.end();
+
+    let single = SingleShot::open("ars_a_opt").unwrap();
+    let mut got = Vec::new();
+    while let Ok(buf) = rx.recv() {
+        got.push(buf);
+    }
+    running.wait().unwrap();
+
+    assert_eq!(got.len(), 7, "every frame must be de-batched back out");
+    for (i, buf) in got.iter().enumerate() {
+        assert_eq!(buf.pts_ns, i as u64 * 10, "timestamps must survive batching");
+        let batched = buf.chunk().to_f32_vec().unwrap();
+        let reference = single.invoke(&[&frames[i]]).unwrap();
+        assert_eq!(
+            batched, reference[0],
+            "frame {i}: batched output differs from unbatched"
+        );
+    }
+}
+
+#[test]
+fn branches_share_one_pooled_model_instance() {
+    use nnstreamer::runtime::ModelPool;
+    use std::sync::Arc;
+
+    // two pipeline branches bind the same artifact...
+    let report = run(
+        "sensorsrc kind=mic window=64 channels=16 rate=1000 num-buffers=4 ! tee name=t \
+         t. ! queue ! tensor_filter framework=xla model=ars_c_opt ! fakesink name=o1 \
+         t. ! queue ! tensor_filter framework=xla model=ars_c_opt ! fakesink name=o2",
+    );
+    assert_eq!(report.element("o1").unwrap().buffers_in(), 4);
+    assert_eq!(report.element("o2").unwrap().buffers_in(), 4);
+
+    // ...and the pool stats prove they shared one loaded instance
+    let pool = ModelPool::global().unwrap();
+    assert_eq!(
+        pool.loads("ars_c_opt"),
+        1,
+        "two branches must not load the artifact twice"
+    );
+    assert!(
+        pool.acquires("ars_c_opt") >= 2,
+        "both branches lease through the pool"
+    );
+    let a = pool.acquire("ars_c_opt").unwrap();
+    let b = pool.acquire("ars_c_opt").unwrap();
+    assert!(
+        Arc::ptr_eq(a.model(), b.model()),
+        "leases must point at the same Model"
+    );
+}
