@@ -2,7 +2,7 @@
 # (checked in). `make artifacts` regenerates the manifest and the real
 # HLO programs through JAX when a Python environment is available.
 
-.PHONY: all test bench artifacts doc fmt
+.PHONY: all test bench bench-smoke artifacts doc fmt
 
 all:
 	cargo build --release
@@ -16,6 +16,14 @@ bench:
 	cargo bench --bench e3_table2
 	cargo bench --bench e4_table3
 	cargo bench --bench e5_batching
+	cargo bench --bench e6_memory
+
+# Quick perf gate: compiles every bench, then runs the E6 memory bench
+# with a short frame budget and records artifacts/BENCH_e6_memory.json
+# (the bench asserts >= 30% allocation reduction and bit-identical output).
+bench-smoke:
+	cargo bench --no-run
+	cargo bench --bench e6_memory -- --frames 64 --record
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts

@@ -1,0 +1,166 @@
+//! **E6: hot-path memory subsystem** — chunk-pool recycling, copy-on-write
+//! in-place kernels and zero-copy output adoption, measured on the E1/I3
+//! pipeline as bytes *allocated* per frame with pooling off vs on.
+//!
+//! ```bash
+//! cargo bench --bench e6_memory [-- --full] [-- --record]
+//! ```
+//!
+//! Method: the same pipeline runs twice with identical inputs. Case A
+//! disables the [`ChunkPool`] (every chunk is a fresh heap allocation,
+//! the pre-pool behavior); case B enables it, with one warmup run so the
+//! size classes are populated and the measured run is steady state. The
+//! `traffic::Snapshot.alloc` counter (fresh-allocation bytes) gives
+//! bytes/frame for each case; sink payloads are asserted bit-identical,
+//! so recycling is a pure allocator-traffic optimization.
+//!
+//! Acceptance (ISSUE 2): pooled steady state allocates >= 30% fewer
+//! bytes/frame than unpooled. `--record` writes the measurement to
+//! `../artifacts/BENCH_e6_memory.json` (the `make bench-smoke` target).
+
+#[path = "harness.rs"]
+mod harness;
+
+use nnstreamer::elements::sinks::TensorSink;
+use nnstreamer::metrics::report::{f, Table};
+use nnstreamer::metrics::traffic;
+use nnstreamer::pipeline::Pipeline;
+use nnstreamer::tensor::ChunkPool;
+
+fn desc(frames: u64) -> String {
+    format!(
+        "videotestsrc pattern=ball num-buffers={frames} is-live=false ! \
+         video/x-raw,format=RGB,width=128,height=128,framerate=100000 ! \
+         videoscale width=64 height=64 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255 ! \
+         tensor_filter framework=xla model=i3_opt accelerator=cpu ! \
+         tensor_sink name=out"
+    )
+}
+
+struct Case {
+    /// Sink payloads, per frame (for the bit-identity assertion).
+    outputs: Vec<Vec<u8>>,
+    traffic: traffic::Snapshot,
+    fps: f64,
+}
+
+fn run_case(frames: u64) -> Case {
+    let t0 = traffic::snapshot();
+    let mut p = Pipeline::parse(&desc(frames)).expect("parse");
+    let report = p.run().expect("run");
+    let fps = report.fps("out");
+    let seen = report.element("out").expect("sink stats").buffers_in();
+    assert_eq!(seen, frames, "pipeline must deliver every frame");
+    let sink = p
+        .finished_element("out")
+        .and_then(|el| el.as_any())
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .expect("tensor_sink");
+    let outputs = sink
+        .buffers
+        .iter()
+        .map(|b| b.chunk().as_bytes_unaccounted().to_vec())
+        .collect();
+    Case {
+        outputs,
+        traffic: traffic::since(t0),
+        fps,
+    }
+}
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let frames = args.frames_or(96, 1000);
+    let record = std::env::args().any(|a| a == "--record");
+
+    // desktop measurement: no embedded-CPU envelope, real dispatch cost
+    nnstreamer::nnfw::set_cpu_rate_flops(0);
+    harness::warm_models(&["i3_opt"]);
+    let pool = ChunkPool::global();
+
+    println!("E6 — chunk-pool memory subsystem on the E1/I3 pipeline ({frames} frames per case)");
+
+    // Case A: pooling off — every chunk is a fresh allocation.
+    pool.set_enabled(false);
+    pool.clear();
+    let unpooled = run_case(frames);
+
+    // Case B: pooling on — one warmup run populates the size classes,
+    // then the measured run is steady state.
+    pool.set_enabled(true);
+    let _warmup = run_case(frames);
+    let pooled = run_case(frames);
+
+    assert_eq!(
+        unpooled.outputs, pooled.outputs,
+        "pooled sink output must be bit-identical to unpooled"
+    );
+    println!(
+        "sink output bit-identical across {} frames ✓",
+        pooled.outputs.len()
+    );
+
+    let per_frame = |t: &traffic::Snapshot| t.alloc as f64 / frames as f64;
+    let a = per_frame(&unpooled.traffic);
+    let b = per_frame(&pooled.traffic);
+    let reduction = 1.0 - b / a.max(1e-9);
+
+    let mut t = Table::new(
+        "E6: bytes allocated per frame, pooling off vs on (i3_opt, CPU)",
+        &[
+            "case",
+            "alloc B/frame",
+            "pool-reuse B/frame",
+            "in-place B/frame",
+            "frames/s",
+        ],
+    );
+    for (label, case) in [("unpooled", &unpooled), ("pooled", &pooled)] {
+        t.row(&[
+            label.to_string(),
+            f(case.traffic.alloc as f64 / frames as f64, 0),
+            f(case.traffic.pool_reuse as f64 / frames as f64, 0),
+            f(case.traffic.inplace as f64 / frames as f64, 0),
+            f(case.fps, 1),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nalloc reduction = {:.1}% (acceptance target >= 30%); steady-state reuse ratio = {:.1}%",
+        reduction * 100.0,
+        pooled.traffic.reuse_ratio() * 100.0
+    );
+    println!("pool retains {} KiB across size classes", pool.retained_bytes() / 1024);
+
+    if record {
+        let json = format!(
+            "{{\n  \"bench\": \"e6_memory\",\n  \"pipeline\": \"E1/I3 (i3_opt, cpu)\",\n  \"frames_per_case\": {frames},\n  \"alloc_bytes_per_frame_unpooled\": {:.1},\n  \"alloc_bytes_per_frame_pooled\": {:.1},\n  \"alloc_reduction\": {:.4},\n  \"pool_reuse_bytes_per_frame\": {:.1},\n  \"inplace_bytes_per_frame\": {:.1},\n  \"fps_unpooled\": {:.2},\n  \"fps_pooled\": {:.2},\n  \"bit_identical_output\": true\n}}\n",
+            a,
+            b,
+            reduction,
+            pooled.traffic.pool_reuse as f64 / frames as f64,
+            pooled.traffic.inplace as f64 / frames as f64,
+            unpooled.fps,
+            pooled.fps,
+        );
+        // same ./artifacts vs ../artifacts resolution as ModelRegistry
+        let path = if std::path::Path::new("../artifacts/manifest.txt").exists()
+            && !std::path::Path::new("artifacts/manifest.txt").exists()
+        {
+            "../artifacts/BENCH_e6_memory.json"
+        } else {
+            "artifacts/BENCH_e6_memory.json"
+        };
+        std::fs::write(path, json).expect("write snapshot");
+        println!("recorded {path}");
+    }
+
+    assert!(
+        reduction >= 0.30,
+        "pooling must cut allocated bytes/frame by >= 30% (got {:.1}%)",
+        reduction * 100.0
+    );
+}

@@ -8,8 +8,10 @@
 
 use crate::element::{Ctx, Element, Flow, Item};
 use crate::error::{Error, Result};
-use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo, VideoFormat, VideoInfo};
-use crate::video::convert::convert_raw;
+use crate::tensor::{
+    Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
+};
+use crate::video::convert::convert_into;
 
 pub struct TensorConverter {
     in_video: Option<VideoInfo>,
@@ -77,14 +79,17 @@ impl Element for TensorConverter {
         };
         if let Some(v) = &self.in_video {
             let chunk = if v.format == VideoFormat::Nv12 {
-                let rgb = convert_raw(
+                let mut rgb = ChunkPool::global()
+                    .take(VideoFormat::Rgb.frame_size(v.width, v.height));
+                convert_into(
                     VideoFormat::Nv12,
                     VideoFormat::Rgb,
                     v.width,
                     v.height,
                     buf.chunk().as_bytes(),
+                    &mut rgb,
                 );
-                Chunk::from_vec(rgb)
+                Chunk::from_pooled(rgb)
             } else {
                 // zero-copy: u8 video payload is already the tensor payload
                 buf.chunks.remove(0)

@@ -23,6 +23,12 @@
 //! across `handle` calls, so EOS needs no flush and a slow source simply
 //! degrades to `batch=1` behavior.
 //!
+//! Memory: input chunks are borrowed straight into the backend (no input
+//! copy), the backend draws its per-output scratch from the chunk pool's
+//! f32 classes, and results adopt that storage directly as chunks
+//! (`Chunk::from_pooled_f32`) — zero copies, zero steady-state
+//! allocations (see DESIGN.md "Memory model").
+//!
 //! Input caps must carry the same element count/type the model expects
 //! (insert `tensor_transform mode=typecast` upstream as real NNStreamer
 //! pipelines do); dims are checked element-count-wise with rank-agnostic
@@ -257,7 +263,8 @@ impl Element for TensorFilter {
             .plugin
             .as_ref()
             .ok_or_else(|| Error::element("tensor_filter", "not negotiated"))?;
-        let mut frames = vec![buf];
+        let mut frames = Vec::with_capacity(self.batch);
+        frames.push(buf);
         if self.batch > 1 {
             self.gather_batch(&mut frames, ctx);
         }

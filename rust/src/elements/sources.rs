@@ -6,8 +6,11 @@ use std::sync::Arc;
 
 use crate::element::{Ctx, Element, Flow, Item, PadSpec};
 use crate::error::{Error, Result};
-use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo, VideoFormat, VideoInfo};
-use crate::video::pattern::{generate_pattern, splitmix64, Pattern};
+use crate::tensor::{
+    Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
+};
+use crate::video::convert_into;
+use crate::video::pattern::{generate_rgb_into, splitmix64, Pattern};
 
 /// Procedural raw-video source with live pacing (like GStreamer's
 /// `videotestsrc is-live=true`).
@@ -113,14 +116,23 @@ impl Element for VideoTestSrc {
                 return Ok(Flow::Eos);
             }
         }
-        let data = generate_pattern(
-            self.pattern,
-            self.info.format,
-            self.info.width,
-            self.info.height,
-            self.n,
-        );
-        let mut buf = Buffer::single(pts, Chunk::from_vec(data));
+        // generate into pooled storage: steady-state frame production
+        // reuses the previous frames' allocations
+        let pool = ChunkPool::global();
+        let (w, h) = (self.info.width, self.info.height);
+        let data = if self.info.format == VideoFormat::Rgb {
+            let mut rgb = pool.take(w * h * 3);
+            generate_rgb_into(self.pattern, w, h, self.n, &mut rgb);
+            rgb
+        } else {
+            let mut rgb = pool.take(w * h * 3);
+            generate_rgb_into(self.pattern, w, h, self.n, &mut rgb);
+            let mut out = pool.take(self.info.frame_size());
+            convert_into(VideoFormat::Rgb, self.info.format, w, h, &rgb, &mut out);
+            pool.recycle(rgb);
+            out
+        };
+        let mut buf = Buffer::single(pts, Chunk::from_pooled(data));
         buf.duration_ns = frame_dur_ns;
         buf.seq = self.n;
         self.n += 1;

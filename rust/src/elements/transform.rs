@@ -9,7 +9,7 @@
 
 use crate::element::{Ctx, Element, Flow, Item};
 use crate::error::{Error, Result};
-use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo};
+use crate::tensor::{Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo};
 
 #[derive(Debug, Clone)]
 enum Mode {
@@ -97,55 +97,47 @@ impl Default for TensorTransform {
     }
 }
 
-/// Read any supported dtype as f64 for arithmetic.
-fn read_as_f64(data: &[u8], dtype: DType) -> Vec<f64> {
-    let n = data.len() / dtype.size_bytes();
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let o = i * dtype.size_bytes();
-        let v = match dtype {
-            DType::U8 => data[o] as f64,
-            DType::I8 => data[o] as i8 as f64,
-            DType::U16 => u16::from_le_bytes([data[o], data[o + 1]]) as f64,
-            DType::I16 => i16::from_le_bytes([data[o], data[o + 1]]) as f64,
-            DType::U32 => {
-                u32::from_le_bytes([data[o], data[o + 1], data[o + 2], data[o + 3]]) as f64
-            }
-            DType::I32 => {
-                i32::from_le_bytes([data[o], data[o + 1], data[o + 2], data[o + 3]]) as f64
-            }
-            DType::U64 => u64::from_le_bytes(data[o..o + 8].try_into().unwrap()) as f64,
-            DType::I64 => i64::from_le_bytes(data[o..o + 8].try_into().unwrap()) as f64,
-            DType::F32 => {
-                f32::from_le_bytes([data[o], data[o + 1], data[o + 2], data[o + 3]]) as f64
-            }
-            DType::F64 => f64::from_le_bytes(data[o..o + 8].try_into().unwrap()),
-        };
-        out.push(v);
+/// Read one element of any supported dtype as f64.
+#[inline]
+fn read_elem_f64(e: &[u8], dtype: DType) -> f64 {
+    match dtype {
+        DType::U8 => e[0] as f64,
+        DType::I8 => e[0] as i8 as f64,
+        DType::U16 => u16::from_le_bytes([e[0], e[1]]) as f64,
+        DType::I16 => i16::from_le_bytes([e[0], e[1]]) as f64,
+        DType::U32 => u32::from_le_bytes([e[0], e[1], e[2], e[3]]) as f64,
+        DType::I32 => i32::from_le_bytes([e[0], e[1], e[2], e[3]]) as f64,
+        DType::U64 => u64::from_le_bytes(e[..8].try_into().unwrap()) as f64,
+        DType::I64 => i64::from_le_bytes(e[..8].try_into().unwrap()) as f64,
+        DType::F32 => f32::from_le_bytes([e[0], e[1], e[2], e[3]]) as f64,
+        DType::F64 => f64::from_le_bytes(e[..8].try_into().unwrap()),
     }
-    out
 }
 
-/// Write f64 values into the requested dtype (saturating integer casts).
-fn write_from_f64(values: &[f64], dtype: DType) -> Vec<u8> {
-    let mut out = Vec::with_capacity(values.len() * dtype.size_bytes());
-    for &v in values {
-        match dtype {
-            DType::U8 => out.push(v.clamp(0.0, 255.0) as u8),
-            DType::I8 => out.push(v.clamp(-128.0, 127.0) as i8 as u8),
-            DType::U16 => out.extend((v.clamp(0.0, 65535.0) as u16).to_le_bytes()),
-            DType::I16 => {
-                out.extend((v.clamp(-32768.0, 32767.0) as i16).to_le_bytes())
-            }
-            DType::U32 => out.extend((v.max(0.0) as u32).to_le_bytes()),
-            DType::I32 => out.extend((v as i32).to_le_bytes()),
-            DType::U64 => out.extend((v.max(0.0) as u64).to_le_bytes()),
-            DType::I64 => out.extend((v as i64).to_le_bytes()),
-            DType::F32 => out.extend((v as f32).to_le_bytes()),
-            DType::F64 => out.extend(v.to_le_bytes()),
+/// Write one f64 value as the requested dtype (saturating integer casts).
+#[inline]
+fn write_elem_f64(v: f64, dtype: DType, out: &mut [u8]) {
+    match dtype {
+        DType::U8 => out[0] = v.clamp(0.0, 255.0) as u8,
+        DType::I8 => out[0] = v.clamp(-128.0, 127.0) as i8 as u8,
+        DType::U16 => out[..2].copy_from_slice(&(v.clamp(0.0, 65535.0) as u16).to_le_bytes()),
+        DType::I16 => {
+            out[..2].copy_from_slice(&(v.clamp(-32768.0, 32767.0) as i16).to_le_bytes())
         }
+        DType::U32 => out[..4].copy_from_slice(&(v.max(0.0) as u32).to_le_bytes()),
+        DType::I32 => out[..4].copy_from_slice(&(v as i32).to_le_bytes()),
+        DType::U64 => out[..8].copy_from_slice(&(v.max(0.0) as u64).to_le_bytes()),
+        DType::I64 => out[..8].copy_from_slice(&(v as i64).to_le_bytes()),
+        DType::F32 => out[..4].copy_from_slice(&(v as f32).to_le_bytes()),
+        DType::F64 => out[..8].copy_from_slice(&v.to_le_bytes()),
     }
-    out
+}
+
+/// Read any supported dtype as f64 for arithmetic.
+fn read_as_f64(data: &[u8], dtype: DType) -> Vec<f64> {
+    data.chunks_exact(dtype.size_bytes())
+        .map(|e| read_elem_f64(e, dtype))
+        .collect()
 }
 
 impl Element for TensorTransform {
@@ -226,7 +218,7 @@ impl Element for TensorTransform {
     }
 
     fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
-        let Item::Buffer(buf) = item else {
+        let Item::Buffer(mut buf) = item else {
             return Ok(Flow::Continue);
         };
         let in_info = self
@@ -236,35 +228,53 @@ impl Element for TensorTransform {
         let out_info = self.out_info.clone().unwrap();
 
         let out_chunk = match &self.mode {
-            None => buf.chunks[0].clone(),
-            // fast path: u8 -> f32 (the dominant video-pipeline cast)
+            // passthrough moves the chunk (keeps it uniquely owned for
+            // downstream in-place stages)
+            None => buf.chunks.swap_remove(0),
+            // fast path: u8 -> f32 (the dominant video-pipeline cast),
+            // streamed straight into pooled storage
             Some(Mode::Typecast(DType::F32)) if in_info.dtype == DType::U8 => {
                 let src = buf.chunk().as_bytes();
-                let vals: Vec<f32> = src.iter().map(|&v| v as f32).collect();
-                Chunk::from_f32(&vals)
+                Chunk::from_f32_iter(src.len(), src.iter().map(|&v| v as f32))
             }
             Some(Mode::Typecast(t)) => {
-                let vals = read_as_f64(buf.chunk().as_bytes(), in_info.dtype);
-                Chunk::from_vec(write_from_f64(&vals, *t))
+                let t = *t;
+                let src = buf.chunk().as_bytes();
+                let esz_in = in_info.dtype.size_bytes();
+                let n = src.len() / esz_in;
+                let mut out = ChunkPool::global().take(n * t.size_bytes());
+                for (e, dst) in src
+                    .chunks_exact(esz_in)
+                    .zip(out.chunks_exact_mut(t.size_bytes()))
+                {
+                    write_elem_f64(read_elem_f64(e, in_info.dtype), t, dst);
+                }
+                Chunk::from_pooled(out)
             }
             Some(Mode::Normalize) if in_info.dtype == DType::U8 => {
                 let src = buf.chunk().as_bytes();
-                let vals: Vec<f32> = src.iter().map(|&v| v as f32 / 255.0).collect();
-                Chunk::from_f32(&vals)
+                Chunk::from_f32_iter(src.len(), src.iter().map(|&v| v as f32 / 255.0))
             }
             Some(Mode::Normalize) => {
                 let vals = read_as_f64(buf.chunk().as_bytes(), in_info.dtype);
-                let scaled: Vec<f64> = vals.iter().map(|v| v / 255.0).collect();
-                Chunk::from_vec(write_from_f64(&scaled, DType::F32))
+                Chunk::from_f32_iter(vals.len(), vals.iter().map(|v| (*v / 255.0) as f32))
             }
+            // f32 standardization runs in place (CoW when the chunk is
+            // shared, e.g. behind a tee)
             Some(Mode::Stand) if in_info.dtype == DType::F32 => {
-                let vals = buf.chunk().to_f32_vec()?;
-                let n = vals.len().max(1) as f32;
-                let mean = vals.iter().sum::<f32>() / n;
-                let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
-                let sd = var.sqrt().max(1e-10);
-                let std: Vec<f32> = vals.iter().map(|v| (v - mean) / sd).collect();
-                Chunk::from_f32(&std)
+                let mut chunk = buf.chunks.swap_remove(0);
+                {
+                    let vals = chunk.make_mut_f32()?;
+                    let n = vals.len().max(1) as f32;
+                    let mean = vals.iter().sum::<f32>() / n;
+                    let var =
+                        vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+                    let sd = var.sqrt().max(1e-10);
+                    for v in vals.iter_mut() {
+                        *v = (*v - mean) / sd;
+                    }
+                }
+                chunk
             }
             Some(Mode::Stand) => {
                 let vals = read_as_f64(buf.chunk().as_bytes(), in_info.dtype);
@@ -272,34 +282,48 @@ impl Element for TensorTransform {
                 let mean = vals.iter().sum::<f64>() / n;
                 let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
                 let sd = var.sqrt().max(1e-10);
-                let std: Vec<f64> = vals.iter().map(|v| (v - mean) / sd).collect();
-                Chunk::from_vec(write_from_f64(&std, DType::F32))
+                Chunk::from_f32_iter(
+                    vals.len(),
+                    vals.iter().map(|v| ((*v - mean) / sd) as f32),
+                )
             }
-            // fast path: f32 arithmetic stays in f32 (no f64 round-trip)
+            // fast path: f32 arithmetic stays in f32 and runs in place
             Some(Mode::Arithmetic(ops)) if in_info.dtype == DType::F32 => {
-                let mut vals = buf.chunk().to_f32_vec()?;
-                for (op, c) in ops {
-                    let c = *c as f32;
-                    match op {
-                        ArithOp::Add => vals.iter_mut().for_each(|v| *v += c),
-                        ArithOp::Sub => vals.iter_mut().for_each(|v| *v -= c),
-                        ArithOp::Mul => vals.iter_mut().for_each(|v| *v *= c),
-                        ArithOp::Div => vals.iter_mut().for_each(|v| *v /= c),
+                let mut chunk = buf.chunks.swap_remove(0);
+                {
+                    let vals = chunk.make_mut_f32()?;
+                    for (op, c) in ops {
+                        let c = *c as f32;
+                        match op {
+                            ArithOp::Add => vals.iter_mut().for_each(|v| *v += c),
+                            ArithOp::Sub => vals.iter_mut().for_each(|v| *v -= c),
+                            ArithOp::Mul => vals.iter_mut().for_each(|v| *v *= c),
+                            ArithOp::Div => vals.iter_mut().for_each(|v| *v /= c),
+                        }
                     }
                 }
-                Chunk::from_f32(&vals)
+                chunk
             }
+            // same-dtype element-wise arithmetic: through f64, in place
             Some(Mode::Arithmetic(ops)) => {
-                let mut vals = read_as_f64(buf.chunk().as_bytes(), in_info.dtype);
-                for (op, c) in ops {
-                    match op {
-                        ArithOp::Add => vals.iter_mut().for_each(|v| *v += c),
-                        ArithOp::Sub => vals.iter_mut().for_each(|v| *v -= c),
-                        ArithOp::Mul => vals.iter_mut().for_each(|v| *v *= c),
-                        ArithOp::Div => vals.iter_mut().for_each(|v| *v /= c),
+                let dtype = in_info.dtype;
+                let mut chunk = buf.chunks.swap_remove(0);
+                {
+                    let bytes = chunk.make_mut();
+                    for e in bytes.chunks_exact_mut(dtype.size_bytes()) {
+                        let mut v = read_elem_f64(e, dtype);
+                        for (op, c) in ops {
+                            match op {
+                                ArithOp::Add => v += c,
+                                ArithOp::Sub => v -= c,
+                                ArithOp::Mul => v *= c,
+                                ArithOp::Div => v /= c,
+                            }
+                        }
+                        write_elem_f64(v, dtype, e);
                     }
                 }
-                Chunk::from_vec(write_from_f64(&vals, in_info.dtype))
+                chunk
             }
             Some(Mode::Transpose(axes)) => {
                 let esz = in_info.dtype.size_bytes();
@@ -314,7 +338,7 @@ impl Element for TensorTransform {
                 }
                 let out_dims = out_info.dims.as_slice().to_vec();
                 let total: usize = out_dims.iter().product();
-                let mut out = vec![0u8; total * esz];
+                let mut out = ChunkPool::global().take(total * esz);
                 let mut idx = vec![0usize; rank];
                 for lin in 0..total {
                     // decompose lin into out coords (minor-first)
@@ -331,7 +355,7 @@ impl Element for TensorTransform {
                     out[lin * esz..(lin + 1) * esz]
                         .copy_from_slice(&data[src * esz..(src + 1) * esz]);
                 }
-                Chunk::from_vec(out)
+                Chunk::from_pooled(out)
             }
         };
         let mut out = Buffer::single(buf.pts_ns, out_chunk);
@@ -439,6 +463,48 @@ mod tests {
         let out = run_transform(&mut t, caps, buf);
         // transposed to 3:2
         assert_eq!(out.chunk().as_f32().unwrap(), &[1., 3., 5., 2., 4., 6.]);
+    }
+
+    #[test]
+    fn f32_arithmetic_runs_in_place_when_unshared() {
+        let mut t = TensorTransform::new();
+        t.set_property("mode", "arithmetic").unwrap();
+        t.set_property("option", "add:1").unwrap();
+        let caps = Caps::tensor(DType::F32, [2], 0.0);
+        let buf = Buffer::from_f32(0, &[1.0, 2.0]);
+        let p = buf.chunk().ptr();
+        let out = run_transform(&mut t, caps, buf);
+        assert_eq!(out.chunk().as_f32().unwrap(), &[2.0, 3.0]);
+        assert_eq!(out.chunk().ptr(), p, "unique input must mutate in place");
+    }
+
+    #[test]
+    fn f32_arithmetic_copies_when_input_is_shared() {
+        let mut t = TensorTransform::new();
+        t.set_property("mode", "arithmetic").unwrap();
+        t.set_property("option", "add:1").unwrap();
+        let caps = Caps::tensor(DType::F32, [2], 0.0);
+        let buf = Buffer::from_f32(0, &[1.0, 2.0]);
+        let upstream = buf.clone(); // e.g. a tee branch holding the chunk
+        let out = run_transform(&mut t, caps, buf);
+        assert_eq!(out.chunk().as_f32().unwrap(), &[2.0, 3.0]);
+        assert_eq!(
+            upstream.chunk().as_f32().unwrap(),
+            &[1.0, 2.0],
+            "CoW must not mutate the shared sibling"
+        );
+        assert_ne!(out.chunk().ptr(), upstream.chunk().ptr());
+    }
+
+    #[test]
+    fn u8_arithmetic_saturates_like_the_vec_path() {
+        let mut t = TensorTransform::new();
+        t.set_property("mode", "arithmetic").unwrap();
+        t.set_property("option", "add:200").unwrap();
+        let caps = Caps::tensor(DType::U8, [3], 0.0);
+        let buf = Buffer::single(0, Chunk::from_vec(vec![0, 100, 255]));
+        let out = run_transform(&mut t, caps, buf);
+        assert_eq!(out.chunk().as_bytes_unaccounted(), &[200, 255, 255]);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 
 use crate::element::{Ctx, Element, Flow, Item};
 use crate::error::{Error, Result};
-use crate::tensor::{Buffer, Caps, Chunk, VideoFormat, VideoInfo};
-use crate::video::{convert_format, crop, scale_bilinear};
+use crate::tensor::{Buffer, Caps, Chunk, ChunkPool, VideoFormat, VideoInfo};
+use crate::video::{convert_into, crop_into, crop_rect, scale_bilinear_into};
 
 use super::sources::parse_usize;
 
@@ -71,16 +71,19 @@ impl Element for VideoConvert {
         };
         let v = self.in_info.as_ref().unwrap();
         let out_buf = if v.format == self.target {
-            buf // zero-copy passthrough
+            buf // zero-copy passthrough: forward the input chunk untouched
         } else {
-            let data = convert_format(
+            let mut data =
+                ChunkPool::global().take(self.target.frame_size(v.width, v.height));
+            convert_into(
                 v.format,
                 self.target,
                 v.width,
                 v.height,
                 buf.chunk().as_bytes(),
+                &mut data,
             );
-            let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(data));
+            let mut out = Buffer::single(buf.pts_ns, Chunk::from_pooled(data));
             out.seq = buf.seq;
             out.duration_ns = buf.duration_ns;
             out
@@ -165,15 +168,18 @@ impl Element for VideoScale {
         let out_buf = if v.width == self.width && v.height == self.height {
             buf
         } else {
-            let data = scale_bilinear(
+            let ch = v.format.channels();
+            let mut data = ChunkPool::global().take(self.width * self.height * ch);
+            scale_bilinear_into(
                 v.format,
                 v.width,
                 v.height,
                 self.width,
                 self.height,
                 buf.chunk().as_bytes(),
+                &mut data,
             );
-            let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(data));
+            let mut out = Buffer::single(buf.pts_ns, Chunk::from_pooled(data));
             out.seq = buf.seq;
             out.duration_ns = buf.duration_ns;
             out
@@ -251,17 +257,12 @@ impl Element for VideoCrop {
             return Ok(Flow::Continue);
         };
         let v = self.in_info.as_ref().unwrap();
-        let data = crop(
-            v.format,
-            v.width,
-            v.height,
-            self.left,
-            self.top,
-            self.width,
-            self.height,
-            buf.chunk().as_bytes(),
-        );
-        let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(data));
+        let ch = v.format.channels();
+        let (x, y, w, h) =
+            crop_rect(v.width, v.height, self.left, self.top, self.width, self.height);
+        let mut data = ChunkPool::global().take(w * h * ch);
+        crop_into(v.format, v.width, x, y, w, h, buf.chunk().as_bytes(), &mut data);
+        let mut out = Buffer::single(buf.pts_ns, Chunk::from_pooled(data));
         out.seq = buf.seq;
         ctx.push(0, out)?;
         Ok(Flow::Continue)
@@ -323,7 +324,7 @@ impl Element for VideoFlip {
         let v = self.in_info.as_ref().unwrap();
         let ch = v.format.channels();
         let src = buf.chunk().as_bytes();
-        let mut out = vec![0u8; src.len()];
+        let mut out = ChunkPool::global().take(src.len());
         let (w, h) = (v.width, v.height);
         if self.horizontal {
             for y in 0..h {
@@ -340,7 +341,7 @@ impl Element for VideoFlip {
                 out[d..d + w * ch].copy_from_slice(&src[s..s + w * ch]);
             }
         }
-        let mut ob = Buffer::single(buf.pts_ns, Chunk::from_vec(out));
+        let mut ob = Buffer::single(buf.pts_ns, Chunk::from_pooled(out));
         ob.seq = buf.seq;
         ctx.push(0, ob)?;
         Ok(Flow::Continue)
@@ -375,6 +376,20 @@ mod tests {
         let buf = Buffer::single(0, Chunk::from_vec((0..16).collect()));
         let out = drive(&mut el, 0, buf);
         assert_eq!(out[0].chunk().as_bytes_unaccounted().len(), 4);
+    }
+
+    #[test]
+    fn same_format_convert_forwards_the_input_chunk() {
+        // satellite: matching formats must be a true zero-copy passthrough
+        let mut el = VideoConvert::new();
+        el.set_property("format", "RGB").unwrap();
+        let caps = Caps::parse("video/x-raw,format=RGB,width=2,height=2,framerate=30").unwrap();
+        el.negotiate(&[caps], 1).unwrap();
+        let buf = Buffer::single(0, Chunk::from_vec(vec![7u8; 2 * 2 * 3]));
+        let p = buf.chunk().ptr();
+        let out = drive(&mut el, 0, buf);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].chunk().ptr(), p, "same-format must not copy");
     }
 
     #[test]

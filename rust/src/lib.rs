@@ -14,13 +14,19 @@
 //! framework) needed to regenerate every table and figure of the paper's
 //! evaluation.
 //!
-//! Two throughput subsystems sit under `tensor_filter` (see DESIGN.md):
+//! Three hot-path subsystems keep steady-state streaming cheap (see
+//! DESIGN.md):
 //!
 //! * a shared **model-instance pool** ([`runtime::ModelPool`]) — pipeline
 //!   branches referencing the same artifact lease one loaded model;
 //! * **batched execution** (`tensor_filter batch=N latency-budget=M`) —
 //!   ready frames are stacked into a single dispatch and de-batched with
-//!   their original timestamps, amortizing per-dispatch overhead.
+//!   their original timestamps, amortizing per-dispatch overhead;
+//! * a **chunk-recycling memory subsystem** ([`tensor::ChunkPool`] +
+//!   [`tensor::Chunk::make_mut`]) — per-frame kernels and model-output
+//!   scratch write into recycled buffers, and uniquely-owned chunks
+//!   mutate in place (copy-on-write), so the steady-state hot path runs
+//!   without fresh heap allocations.
 //!
 //! ## Quickstart
 //!

@@ -140,6 +140,9 @@ pub struct PipelineReport {
     pub elements: Vec<Arc<ElementStats>>,
     pub cpu_percent: f64,
     pub peak_rss_mib: f64,
+    /// Byte-traffic and allocator counters accumulated during the run
+    /// (process-global deltas: concurrent pipelines share the counters).
+    pub traffic: crate::metrics::traffic::Snapshot,
 }
 
 impl PipelineReport {

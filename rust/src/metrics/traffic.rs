@@ -1,4 +1,4 @@
-//! Global byte-traffic accounting.
+//! Global byte-traffic and allocation accounting.
 //!
 //! The paper measures "memory access (billions)" with `perf` (Table III
 //! row 4). Hardware counters are not portable to this substrate, so we
@@ -6,11 +6,34 @@
 //! allocation/copy counts as a write, every payload access as a read.
 //! The *ordering* between frameworks (NNStreamer vs MediaPipe-like) is what
 //! the table compares, and byte traffic preserves it.
+//!
+//! On top of reads/writes, the chunk-pool memory subsystem adds five
+//! allocator-level counters:
+//!
+//! * `alloc` — bytes served by fresh heap allocations (chunk storage and
+//!   pool misses);
+//! * `pool_reuse` — bytes served from recycled pool storage instead of
+//!   the allocator;
+//! * `pool_recycle` — bytes of capacity returned to the pool by chunk
+//!   drop hooks;
+//! * `inplace` — bytes mutated in place by [`Chunk::make_mut`] on a
+//!   uniquely owned chunk (a copy that did *not* happen);
+//! * `cow` — bytes copied because `make_mut` hit a shared chunk.
+//!
+//! `benches/e6_memory.rs` compares `alloc` per frame with pooling on vs
+//! off; [`crate::metrics::PipelineReport`] carries a per-run delta.
+//!
+//! [`Chunk::make_mut`]: crate::tensor::Chunk::make_mut
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static READS: AtomicU64 = AtomicU64::new(0);
 static WRITES: AtomicU64 = AtomicU64::new(0);
+static ALLOC: AtomicU64 = AtomicU64::new(0);
+static POOL_REUSE: AtomicU64 = AtomicU64::new(0);
+static POOL_RECYCLE: AtomicU64 = AtomicU64::new(0);
+static INPLACE: AtomicU64 = AtomicU64::new(0);
+static COW: AtomicU64 = AtomicU64::new(0);
 
 #[inline]
 pub fn count_read(bytes: usize) {
@@ -22,16 +45,68 @@ pub fn count_write(bytes: usize) {
     WRITES.fetch_add(bytes as u64, Ordering::Relaxed);
 }
 
-/// Snapshot of (read, write) byte counters.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Bytes served by a fresh heap allocation.
+#[inline]
+pub fn count_alloc(bytes: usize) {
+    ALLOC.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Bytes served from recycled pool storage.
+#[inline]
+pub fn count_pool_reuse(bytes: usize) {
+    POOL_REUSE.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Bytes of capacity returned to the pool.
+#[inline]
+pub fn count_pool_recycle(bytes: usize) {
+    POOL_RECYCLE.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Bytes mutated in place by copy-on-write on a uniquely owned chunk.
+#[inline]
+pub fn count_inplace(bytes: usize) {
+    INPLACE.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Bytes copied by copy-on-write on a shared chunk.
+#[inline]
+pub fn count_cow(bytes: usize) {
+    COW.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Snapshot of the traffic and allocation counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Snapshot {
     pub reads: u64,
     pub writes: u64,
+    /// Bytes served by fresh heap allocations.
+    pub alloc: u64,
+    /// Bytes served from recycled pool storage.
+    pub pool_reuse: u64,
+    /// Bytes of capacity returned to the pool.
+    pub pool_recycle: u64,
+    /// Bytes mutated in place instead of copied (CoW fast path).
+    pub inplace: u64,
+    /// Bytes copied by CoW on shared chunks.
+    pub cow: u64,
 }
 
 impl Snapshot {
+    /// Total byte traffic (the Table III "memory access" substitute).
     pub fn total(&self) -> u64 {
         self.reads + self.writes
+    }
+
+    /// Fraction of chunk-storage demand served without a fresh heap
+    /// allocation (0.0 when nothing was requested).
+    pub fn reuse_ratio(&self) -> f64 {
+        let demand = self.alloc + self.pool_reuse;
+        if demand == 0 {
+            0.0
+        } else {
+            self.pool_reuse as f64 / demand as f64
+        }
     }
 }
 
@@ -39,6 +114,11 @@ pub fn snapshot() -> Snapshot {
     Snapshot {
         reads: READS.load(Ordering::Relaxed),
         writes: WRITES.load(Ordering::Relaxed),
+        alloc: ALLOC.load(Ordering::Relaxed),
+        pool_reuse: POOL_REUSE.load(Ordering::Relaxed),
+        pool_recycle: POOL_RECYCLE.load(Ordering::Relaxed),
+        inplace: INPLACE.load(Ordering::Relaxed),
+        cow: COW.load(Ordering::Relaxed),
     }
 }
 
@@ -48,6 +128,11 @@ pub fn since(start: Snapshot) -> Snapshot {
     Snapshot {
         reads: now.reads - start.reads,
         writes: now.writes - start.writes,
+        alloc: now.alloc - start.alloc,
+        pool_reuse: now.pool_reuse - start.pool_reuse,
+        pool_recycle: now.pool_recycle - start.pool_recycle,
+        inplace: now.inplace - start.inplace,
+        cow: now.cow - start.cow,
     }
 }
 
@@ -62,6 +147,7 @@ mod tests {
         let _c = Chunk::from_vec(vec![0u8; 1000]);
         let d = since(start);
         assert!(d.writes >= 1000);
+        assert!(d.alloc >= 1000);
     }
 
     #[test]
@@ -71,5 +157,30 @@ mod tests {
         let _ = c.as_bytes();
         let d = since(start);
         assert!(d.reads >= 512);
+    }
+
+    #[test]
+    fn make_mut_counts_inplace_then_cow() {
+        let start = snapshot();
+        let mut c = Chunk::from_vec(vec![0u8; 256]);
+        c.make_mut()[0] = 1;
+        let d = since(start);
+        assert!(d.inplace >= 256);
+        let keep = c.clone();
+        c.make_mut()[1] = 2;
+        let d = since(start);
+        assert!(d.cow >= 256);
+        drop(keep);
+    }
+
+    #[test]
+    fn reuse_ratio_bounds() {
+        let s = Snapshot {
+            alloc: 100,
+            pool_reuse: 300,
+            ..Default::default()
+        };
+        assert!((s.reuse_ratio() - 0.75).abs() < 1e-9);
+        assert_eq!(Snapshot::default().reuse_ratio(), 0.0);
     }
 }

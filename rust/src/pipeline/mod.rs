@@ -91,6 +91,9 @@ mod tests {
         // all 6 frames reached the sink
         let sink = report.elements.iter().find(|e| e.name.starts_with("fakesink")).unwrap();
         assert_eq!(sink.buffers_in(), 6);
+        // the run report carries traffic/allocator counters
+        assert!(report.traffic.writes > 0);
+        assert!(report.traffic.alloc + report.traffic.pool_reuse > 0);
     }
 
     #[test]

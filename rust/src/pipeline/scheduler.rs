@@ -25,6 +25,7 @@ pub struct Running {
     pub stop: Arc<AtomicBool>,
     pub epoch: Instant,
     cpu: CpuTracker,
+    traffic0: crate::metrics::traffic::Snapshot,
 }
 
 impl Running {
@@ -62,6 +63,7 @@ impl Running {
             elements: self.stats,
             cpu_percent: self.cpu.cpu_percent(),
             peak_rss_mib: mem.peak_mib(),
+            traffic: crate::metrics::traffic::since(self.traffic0),
         };
         Ok((report, elements))
     }
@@ -169,6 +171,7 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
         stop,
         epoch,
         cpu: CpuTracker::start(),
+        traffic0: crate::metrics::traffic::snapshot(),
     })
 }
 

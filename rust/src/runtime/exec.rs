@@ -27,6 +27,7 @@
 use std::hint::black_box;
 
 use crate::runtime::manifest::{Act, ModelSpec};
+use crate::tensor::ChunkPool;
 use crate::video::pattern::splitmix64;
 
 /// Input samples mixed into each output element.
@@ -95,14 +96,24 @@ impl Executable {
     }
 
     fn run_frame(&self, spec: &ModelSpec, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
-        let concat: Vec<f32> = inputs.iter().flat_map(|v| v.iter().copied()).collect();
+        // single-input models (the common case) sample the input slice
+        // directly; only multi-input models pay for a concat scratch copy
+        let owned: Vec<f32>;
+        let concat: &[f32] = if inputs.len() == 1 {
+            inputs[0]
+        } else {
+            owned = inputs.iter().flat_map(|v| v.iter().copied()).collect();
+            &owned
+        };
         let n_in = concat.len().max(1);
         spec.outputs
             .iter()
             .enumerate()
             .map(|(j, info)| {
                 let n = info.dims.num_elements();
-                let mut out = vec![0f32; n];
+                // per-output scratch from the pool: steady-state dispatch
+                // reuses the previous frames' output allocations
+                let mut out = ChunkPool::global().take_f32(n);
                 for (k, slot) in out.iter_mut().enumerate() {
                     let mut h = self.seed
                         ^ (j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)

@@ -87,9 +87,11 @@ impl Model {
             decoded.push(vals);
         }
         let raw = self.exe.run_batch(&self.spec, &decoded);
+        // adopt each pooled output Vec<f32> as chunk storage (no copy);
+        // the storage recycles into the pool's f32 classes on drop
         Ok(raw
             .into_iter()
-            .map(|frame| frame.iter().map(|vals| Chunk::from_f32(vals)).collect())
+            .map(|frame| frame.into_iter().map(Chunk::from_pooled_f32).collect())
             .collect())
     }
 

@@ -5,61 +5,185 @@
 //! copying payloads (§III: "We store each tensor in an individual memory
 //! chunk so that mux and de-mux do not incur memory copies").
 //!
-//! All chunk allocations and copies are accounted to the global traffic
-//! counters in [`crate::metrics::traffic`] — this is the substrate for the
-//! paper's perf-based "memory access" row in Table III.
+//! Chunk storage is recycled: when the last reference to a chunk drops,
+//! its byte buffer returns to the global [`ChunkPool`] and the next
+//! per-frame kernel gets it back without touching the system allocator.
+//! [`Chunk::make_mut`] adds copy-on-write in-place mutation: a uniquely
+//! owned chunk is mutated in place, a shared one is first copied into a
+//! pooled buffer. All allocations, copies and reuses are accounted to the
+//! global traffic counters in [`crate::metrics::traffic`] — the substrate
+//! for the paper's perf-based "memory access" row in Table III and for
+//! `benches/e6_memory.rs`.
 
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::metrics::traffic;
+use crate::tensor::pool::ChunkPool;
 
 /// Default memory-chunk limit per frame (GStreamer's default, §III).
 pub const MAX_TENSORS: usize = 16;
 
-/// One immutable, refcounted payload chunk.
-#[derive(Debug, Clone)]
-pub struct Chunk(Arc<Vec<u8>>);
+/// Chunk payload storage. Most chunks hold plain bytes; `F32` lets
+/// [`Chunk::from_f32_vec`] adopt a `Vec<f32>` allocation without copying
+/// it into a byte vector first.
+#[derive(Debug)]
+enum Storage {
+    Bytes(Vec<u8>),
+    F32(Vec<f32>),
+}
 
-impl Chunk {
-    /// Allocate a chunk from a byte vector (counted as written traffic).
-    pub fn from_vec(data: Vec<u8>) -> Self {
-        traffic::count_write(data.len());
-        Chunk(Arc::new(data))
+impl Storage {
+    fn as_bytes(&self) -> &[u8] {
+        match self {
+            Storage::Bytes(v) => v,
+            // SAFETY: any 4-byte f32 is 4 valid u8s; shrinking alignment
+            // from 4 to 1 is always sound, and the borrow pins the Vec.
+            Storage::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        }
     }
 
-    /// Allocate a chunk from an f32 slice.
-    pub fn from_f32(data: &[f32]) -> Self {
-        let mut bytes = vec![0u8; data.len() * 4];
-        for (i, v) in data.iter().enumerate() {
-            bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        match self {
+            Storage::Bytes(v) => v,
+            // SAFETY: as above; u8 has no invalid bit patterns, so writes
+            // through the view always leave the f32s initialized.
+            Storage::F32(v) => unsafe {
+                std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4)
+            },
         }
-        Chunk::from_vec(bytes)
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Storage::Bytes(v) => v.len(),
+            Storage::F32(v) => v.len() * 4,
+        }
+    }
+}
+
+/// Uniquely-owned chunk storage; hands byte buffers back to the global
+/// [`ChunkPool`] when the last [`Chunk`] reference drops.
+#[derive(Debug)]
+struct PooledStorage(Storage);
+
+impl Drop for PooledStorage {
+    fn drop(&mut self) {
+        match &mut self.0 {
+            Storage::Bytes(v) => ChunkPool::global().recycle(std::mem::take(v)),
+            Storage::F32(v) => ChunkPool::global().recycle_f32(std::mem::take(v)),
+        }
+    }
+}
+
+/// One refcounted payload chunk (immutable unless uniquely owned — see
+/// [`Chunk::make_mut`]).
+#[derive(Debug, Clone)]
+pub struct Chunk(Arc<PooledStorage>);
+
+impl Chunk {
+    /// Allocate a chunk from a caller-allocated byte vector (counted as
+    /// written + freshly allocated traffic). Prefer [`ChunkPool::take`] +
+    /// [`Chunk::from_pooled`] on per-frame paths.
+    pub fn from_vec(data: Vec<u8>) -> Self {
+        traffic::count_write(data.len());
+        traffic::count_alloc(data.len());
+        Chunk(Arc::new(PooledStorage(Storage::Bytes(data))))
+    }
+
+    /// Wrap a buffer obtained from [`ChunkPool::take`] (the pool already
+    /// accounted the allocation or reuse; only the write is counted here).
+    ///
+    /// Note: chunk storage always recycles into the *global* pool on
+    /// drop, whatever pool instance it was taken from — private
+    /// [`ChunkPool`] instances are for tests and explicit scratch, not
+    /// for backing chunks.
+    pub fn from_pooled(data: Vec<u8>) -> Self {
+        traffic::count_write(data.len());
+        Chunk(Arc::new(PooledStorage(Storage::Bytes(data))))
+    }
+
+    /// Wrap an f32 buffer obtained from [`ChunkPool::take_f32`] (the
+    /// model-output path; allocation already accounted by the pool).
+    pub fn from_pooled_f32(data: Vec<f32>) -> Self {
+        traffic::count_write(data.len() * 4);
+        Chunk(Arc::new(PooledStorage(Storage::F32(data))))
+    }
+
+    /// Allocate a chunk from an f32 slice via one bulk byte copy into a
+    /// pooled buffer (no per-element `to_le_bytes` loop).
+    pub fn from_f32(data: &[f32]) -> Self {
+        let n = data.len() * 4;
+        let mut bytes = ChunkPool::global().take(n);
+        if cfg!(target_endian = "little") {
+            // SAFETY: an f32 slice is always a valid byte slice of 4x the
+            // length (alignment only shrinks, no padding, no invalid u8s).
+            let src = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, n)
+            };
+            bytes.copy_from_slice(src);
+        } else {
+            for (dst, v) in bytes.chunks_exact_mut(4).zip(data) {
+                dst.copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        Chunk::from_pooled(bytes)
+    }
+
+    /// Adopt a caller-allocated `Vec<f32>` as chunk storage without
+    /// copying — the symmetric zero-copy counterpart of
+    /// [`Chunk::from_f32`]. The vector's allocation is counted as fresh;
+    /// storage still recycles into the pool's f32 classes on drop. Hot
+    /// paths should prefer [`ChunkPool::take_f32`] +
+    /// [`Chunk::from_pooled_f32`].
+    pub fn from_f32_vec(data: Vec<f32>) -> Self {
+        let n = data.len() * 4;
+        traffic::count_write(n);
+        traffic::count_alloc(n);
+        Chunk(Arc::new(PooledStorage(Storage::F32(data))))
+    }
+
+    /// Build an f32 chunk by streaming exactly `len` values into a pooled
+    /// buffer (one allocation-or-reuse, no intermediate `Vec<f32>`).
+    pub fn from_f32_iter(len: usize, values: impl Iterator<Item = f32>) -> Self {
+        let mut bytes = ChunkPool::global().take(len * 4);
+        let mut written = 0usize;
+        for (dst, v) in bytes.chunks_exact_mut(4).zip(values) {
+            dst.copy_from_slice(&v.to_le_bytes());
+            written += 1;
+        }
+        debug_assert_eq!(
+            written, len,
+            "from_f32_iter: iterator yielded {written} of {len} values"
+        );
+        Chunk::from_pooled(bytes)
     }
 
     pub fn len(&self) -> usize {
-        self.0.len()
+        self.0 .0.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.0.is_empty()
+        self.len() == 0
     }
 
     pub fn as_bytes(&self) -> &[u8] {
-        traffic::count_read(self.0.len());
-        &self.0
+        traffic::count_read(self.len());
+        self.0 .0.as_bytes()
     }
 
     /// Bytes without traffic accounting (for metrics/tests themselves).
     pub fn as_bytes_unaccounted(&self) -> &[u8] {
-        &self.0
+        self.0 .0.as_bytes()
     }
 
     /// View as f32 slice. Vec allocations are 8/16-byte aligned in
     /// practice; we verify instead of assuming.
     pub fn as_f32(&self) -> Result<&[f32]> {
-        traffic::count_read(self.0.len());
-        let (pre, body, post) = unsafe { self.0.align_to::<f32>() };
+        traffic::count_read(self.len());
+        let (pre, body, post) = unsafe { self.0 .0.as_bytes().align_to::<f32>() };
         if !pre.is_empty() || !post.is_empty() {
             return Err(Error::Runtime("chunk not f32-aligned/sized".into()));
         }
@@ -71,6 +195,44 @@ impl Chunk {
         Ok(self.as_f32()?.to_vec())
     }
 
+    /// Copy-on-write mutable access: reuses the allocation in place when
+    /// this is the only reference, otherwise replaces it with a pooled
+    /// copy first (so a tee'd sibling never observes the mutation).
+    ///
+    /// Either way the caller is assumed to read and rewrite the payload
+    /// once, so a read+write of `len` bytes is charged to the traffic
+    /// counters — in-place mutation only avoids *allocator* traffic, not
+    /// CPU memory access, keeping `Snapshot::total()` (the Table III
+    /// "memory access" substitute) comparable with the pre-pool code.
+    pub fn make_mut(&mut self) -> &mut [u8] {
+        let len = self.len();
+        traffic::count_read(len);
+        traffic::count_write(len);
+        if Arc::get_mut(&mut self.0).is_some() {
+            traffic::count_inplace(len);
+        } else {
+            let mut fresh = ChunkPool::global().take(len);
+            fresh.copy_from_slice(self.0 .0.as_bytes());
+            traffic::count_cow(len);
+            self.0 = Arc::new(PooledStorage(Storage::Bytes(fresh)));
+        }
+        Arc::get_mut(&mut self.0)
+            .expect("chunk is uniquely owned after CoW")
+            .0
+            .as_bytes_mut()
+    }
+
+    /// [`make_mut`](Chunk::make_mut) viewed as f32 (same alignment
+    /// verification as [`as_f32`](Chunk::as_f32)).
+    pub fn make_mut_f32(&mut self) -> Result<&mut [f32]> {
+        let bytes = self.make_mut();
+        let (pre, body, post) = unsafe { bytes.align_to_mut::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(Error::Runtime("chunk not f32-aligned/sized".into()));
+        }
+        Ok(body)
+    }
+
     /// Number of strong references (used by zero-copy tests).
     pub fn refcount(&self) -> usize {
         Arc::strong_count(&self.0)
@@ -78,7 +240,7 @@ impl Chunk {
 
     /// Pointer identity (used by zero-copy tests).
     pub fn ptr(&self) -> *const u8 {
-        self.0.as_ptr()
+        self.0 .0.as_bytes().as_ptr()
     }
 }
 
@@ -175,6 +337,76 @@ mod tests {
         let c = Chunk::from_f32(&data);
         assert_eq!(c.as_f32().unwrap(), &data[..]);
         assert_eq!(c.len(), 12);
+    }
+
+    #[test]
+    fn from_f32_bulk_matches_per_element_le() {
+        let data = vec![0.0f32, 1.5, -3.75, f32::MAX, f32::MIN_POSITIVE];
+        let c = Chunk::from_f32(&data);
+        let mut expect = vec![0u8; data.len() * 4];
+        for (i, v) in data.iter().enumerate() {
+            expect[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(c.as_bytes_unaccounted(), &expect[..]);
+    }
+
+    #[test]
+    fn from_f32_vec_adopts_the_allocation() {
+        let v = vec![1.0f32, 2.0, 3.0];
+        let p = v.as_ptr() as *const u8;
+        let c = Chunk::from_f32_vec(v);
+        assert_eq!(c.ptr(), p, "no copy: chunk views the original Vec<f32>");
+        assert_eq!(c.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.len(), 12);
+    }
+
+    #[test]
+    fn from_f32_iter_matches_from_f32() {
+        let data = vec![0.25f32, -1.0, 9.5];
+        let a = Chunk::from_f32(&data);
+        let b = Chunk::from_f32_iter(data.len(), data.iter().copied());
+        assert_eq!(a.as_bytes_unaccounted(), b.as_bytes_unaccounted());
+    }
+
+    #[test]
+    fn make_mut_is_in_place_iff_unshared() {
+        let mut c = Chunk::from_vec(vec![1u8, 2, 3, 4]);
+        let p0 = c.ptr();
+        c.make_mut()[0] = 9;
+        assert_eq!(c.ptr(), p0, "unique chunk mutates in place");
+        assert_eq!(c.as_bytes_unaccounted()[0], 9);
+
+        let sibling = c.clone();
+        assert_eq!(c.refcount(), 2);
+        c.make_mut()[1] = 7;
+        assert_ne!(c.ptr(), sibling.ptr(), "shared chunk copies on write");
+        assert_eq!(c.refcount(), 1);
+        assert_eq!(sibling.as_bytes_unaccounted(), &[9, 2, 3, 4]);
+        assert_eq!(c.as_bytes_unaccounted(), &[9, 7, 3, 4]);
+    }
+
+    #[test]
+    fn make_mut_f32_roundtrip() {
+        let mut c = Chunk::from_f32(&[1.0, 2.0]);
+        {
+            let vals = c.make_mut_f32().unwrap();
+            vals[0] = 5.0;
+        }
+        assert_eq!(c.as_f32().unwrap(), &[5.0, 2.0]);
+    }
+
+    #[test]
+    fn dropped_chunk_storage_is_recycled() {
+        let pool = ChunkPool::global();
+        let before = pool.stats();
+        drop(Chunk::from_vec(vec![0u8; 777]));
+        let after = pool.stats();
+        // parallel tests may race the class to its retention cap, in which
+        // case the storage is discarded — either way the hook must run
+        assert!(
+            after.recycles + after.discards > before.recycles + before.discards,
+            "drop hook must offer storage back to the pool"
+        );
     }
 
     #[test]

@@ -10,11 +10,13 @@ mod buffer;
 mod caps;
 mod dims;
 mod dtype;
+pub mod pool;
 
 pub use buffer::{Buffer, Chunk, MAX_TENSORS};
 pub use caps::{AudioInfo, Caps, VideoFormat, VideoInfo};
 pub use dims::{Dims, MAX_RANK};
 pub use dtype::DType;
+pub use pool::{ChunkPool, PoolStats};
 
 /// Element type + dimensions of one tensor (no frame rate; rate lives in
 /// [`Caps`]).

@@ -1,0 +1,475 @@
+//! Size-classed chunk recycling pool — the hot-path memory subsystem.
+//!
+//! Steady-state streaming allocates the same handful of buffer sizes once
+//! per frame per element. Instead of hitting the system allocator every
+//! time, [`ChunkPool`] keeps dropped chunk storage in power-of-two size
+//! classes and hands it back out on the next [`take`](ChunkPool::take):
+//!
+//! ```text
+//! take(len) ──▶ Chunk (via Chunk::from_pooled) ──▶ shared via Arc ──▶
+//!   last ref drops ──▶ storage recycled into its size class ──▶ take(len)
+//! ```
+//!
+//! The recycle hook lives in the chunk storage's `Drop` impl
+//! (`tensor/buffer.rs`), so *every* chunk in the system returns its bytes
+//! here automatically; only `take` decides whether a request is served
+//! from recycled storage. Allocation vs. reuse is accounted through
+//! [`crate::metrics::traffic`], which is how `benches/e6_memory.rs`
+//! measures bytes-allocated-per-frame with pooling on vs. off.
+//!
+//! The pool is deliberately simple: per-class `Mutex<Vec<Vec<u8>>>` free
+//! lists (uncontended in steady state — each element thread takes and a
+//! downstream thread recycles, touching one class each), a per-class
+//! retention budget so an occasional large frame cannot pin memory
+//! forever, and a global enable switch for A/B measurement.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::metrics::traffic;
+
+/// Smallest size class: 64 bytes (2^6). Requests below it round up.
+const MIN_CLASS_SHIFT: usize = 6;
+/// Power-of-two classes from 64 B up to 2 GiB.
+const NUM_CLASSES: usize = 26;
+/// Per-class retention budget in bytes (caps pool-held memory).
+const CLASS_BUDGET_BYTES: usize = 8 << 20;
+/// Hard cap on buffers retained per class regardless of size.
+const CLASS_MAX_ENTRIES: usize = 64;
+
+#[inline]
+fn class_size(i: usize) -> usize {
+    1usize << (MIN_CLASS_SHIFT + i)
+}
+
+/// Smallest class whose buffers can serve a request of `len` bytes.
+#[inline]
+fn class_for_request(len: usize) -> Option<usize> {
+    if len == 0 {
+        return None;
+    }
+    let needed = len.next_power_of_two().max(1 << MIN_CLASS_SHIFT);
+    let i = needed.trailing_zeros() as usize - MIN_CLASS_SHIFT;
+    if i < NUM_CLASSES {
+        Some(i)
+    } else {
+        None
+    }
+}
+
+/// Largest class a buffer of capacity `cap` can serve (floor), i.e. every
+/// buffer stored in class `i` has capacity >= `class_size(i)`.
+#[inline]
+fn class_for_storage(cap: usize) -> Option<usize> {
+    if cap < (1 << MIN_CLASS_SHIFT) {
+        return None;
+    }
+    let i = (usize::BITS - 1 - cap.leading_zeros()) as usize - MIN_CLASS_SHIFT;
+    Some(i.min(NUM_CLASSES - 1))
+}
+
+/// How many buffers class `i` may retain. Classes larger than the whole
+/// budget keep at most one buffer — a recurring jumbo frame still reuses
+/// it, but a transient burst cannot pin multiples for the process
+/// lifetime.
+#[inline]
+fn class_capacity(i: usize) -> usize {
+    let size = class_size(i);
+    if size > CLASS_BUDGET_BYTES {
+        1
+    } else {
+        (CLASS_BUDGET_BYTES / size).clamp(2, CLASS_MAX_ENTRIES)
+    }
+}
+
+/// Monotonic pool counters (all cumulative since process start).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` calls served by a fresh heap allocation.
+    pub fresh_allocs: u64,
+    /// Bytes requested through fresh allocations.
+    pub fresh_bytes: u64,
+    /// `take` calls served from recycled storage.
+    pub reuses: u64,
+    /// Bytes requested that were served from recycled storage.
+    pub reuse_bytes: u64,
+    /// Buffers accepted back into a size class.
+    pub recycles: u64,
+    /// Bytes of capacity accepted back into size classes.
+    pub recycle_bytes: u64,
+    /// Buffers dropped instead of retained (budget full / pool disabled /
+    /// too small to classify).
+    pub discards: u64,
+}
+
+/// A size-classed recycling allocator for chunk payload storage.
+///
+/// Two families of free lists: byte buffers (`Vec<u8>`, the chunk
+/// storage of every media/tensor kernel) and f32 buffers (`Vec<f32>`,
+/// the model-execution layer's output scratch — kept separate because a
+/// `Vec`'s allocation cannot change element type soundly).
+pub struct ChunkPool {
+    classes: Vec<Mutex<Vec<Vec<u8>>>>,
+    f32_classes: Vec<Mutex<Vec<Vec<f32>>>>,
+    enabled: AtomicBool,
+    fresh_allocs: AtomicU64,
+    fresh_bytes: AtomicU64,
+    reuses: AtomicU64,
+    reuse_bytes: AtomicU64,
+    recycles: AtomicU64,
+    recycle_bytes: AtomicU64,
+    discards: AtomicU64,
+}
+
+static GLOBAL: Lazy<ChunkPool> = Lazy::new(ChunkPool::new);
+
+impl ChunkPool {
+    /// A fresh, enabled pool (tests use private instances; production code
+    /// goes through [`ChunkPool::global`]).
+    pub fn new() -> Self {
+        Self {
+            classes: (0..NUM_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+            f32_classes: (0..NUM_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+            enabled: AtomicBool::new(true),
+            fresh_allocs: AtomicU64::new(0),
+            fresh_bytes: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+            reuse_bytes: AtomicU64::new(0),
+            recycles: AtomicU64::new(0),
+            recycle_bytes: AtomicU64::new(0),
+            discards: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide pool every [`crate::tensor::Chunk`] recycles into.
+    pub fn global() -> &'static ChunkPool {
+        &GLOBAL
+    }
+
+    /// Turn recycling on/off (off: `take` always allocates fresh and
+    /// `recycle` drops). Used by `benches/e6_memory.rs` for A/B runs.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Hand out a zero-filled buffer of exactly `len` bytes, reusing a
+    /// recycled allocation from the matching size class when available.
+    /// Wrap the filled buffer with `Chunk::from_pooled` so it returns
+    /// here when dropped.
+    ///
+    /// Reused buffers are deliberately re-zeroed: kernels with
+    /// subsampled planes (e.g. NV12 chroma at odd frame widths) may
+    /// leave a few bytes untouched, and stale contents there would make
+    /// pooled output diverge from the freshly-allocated (OS-zeroed)
+    /// path. One memset is far cheaper than the allocation it replaces.
+    pub fn take(&self, len: usize) -> Vec<u8> {
+        if len == 0 {
+            return Vec::new();
+        }
+        if self.enabled() {
+            if let Some(i) = class_for_request(len) {
+                let recycled = self.classes[i]
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .pop();
+                if let Some(mut v) = recycled {
+                    self.reuses.fetch_add(1, Ordering::Relaxed);
+                    self.reuse_bytes.fetch_add(len as u64, Ordering::Relaxed);
+                    traffic::count_pool_reuse(len);
+                    v.clear();
+                    v.resize(len, 0);
+                    return v;
+                }
+            }
+        }
+        self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+        if self.enabled() {
+            // allocate the full class size so the buffer can serve any
+            // request of its class once recycled; account the rounded
+            // capacity, not the request, so pooled-vs-unpooled alloc
+            // comparisons stay honest
+            let cap = class_for_request(len)
+                .map(class_size)
+                .unwrap_or(len)
+                .max(len);
+            self.fresh_bytes.fetch_add(cap as u64, Ordering::Relaxed);
+            traffic::count_alloc(cap);
+            let mut v = Vec::with_capacity(cap);
+            v.resize(len, 0);
+            v
+        } else {
+            self.fresh_bytes.fetch_add(len as u64, Ordering::Relaxed);
+            traffic::count_alloc(len);
+            vec![0u8; len]
+        }
+    }
+
+    /// f32 variant of [`take`](ChunkPool::take): a zero-filled
+    /// `Vec<f32>` of `len` elements. The model-execution layer draws its
+    /// per-output scratch here; wrap results with `Chunk::from_pooled_f32`
+    /// so the storage recycles when downstream drops the chunk.
+    ///
+    /// (Kept in lockstep with [`take`](ChunkPool::take) — the families
+    /// differ only in element type, because a `Vec`'s allocation cannot
+    /// change element type soundly.)
+    pub fn take_f32(&self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let bytes = len * 4;
+        if self.enabled() {
+            if let Some(i) = class_for_request(bytes) {
+                let recycled = self.f32_classes[i]
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .pop();
+                if let Some(mut v) = recycled {
+                    self.reuses.fetch_add(1, Ordering::Relaxed);
+                    self.reuse_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                    traffic::count_pool_reuse(bytes);
+                    v.clear();
+                    v.resize(len, 0.0);
+                    return v;
+                }
+            }
+        }
+        self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+        if self.enabled() {
+            let cap_bytes = class_for_request(bytes)
+                .map(class_size)
+                .unwrap_or(bytes)
+                .max(bytes);
+            self.fresh_bytes.fetch_add(cap_bytes as u64, Ordering::Relaxed);
+            traffic::count_alloc(cap_bytes);
+            let mut v = Vec::with_capacity(cap_bytes / 4);
+            v.resize(len, 0.0);
+            v
+        } else {
+            self.fresh_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+            traffic::count_alloc(bytes);
+            vec![0.0; len]
+        }
+    }
+
+    /// Return uniquely-owned storage to its size class. Called from the
+    /// chunk storage `Drop` hook; also usable directly for scratch buffers
+    /// obtained via [`take`](ChunkPool::take).
+    pub fn recycle(&self, v: Vec<u8>) {
+        let cap = v.capacity();
+        if !self.enabled() {
+            self.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let Some(i) = class_for_storage(cap) else {
+            self.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let mut class = self.classes[i].lock().unwrap_or_else(|e| e.into_inner());
+        if class.len() >= class_capacity(i) {
+            self.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        class.push(v);
+        self.recycles.fetch_add(1, Ordering::Relaxed);
+        self.recycle_bytes.fetch_add(cap as u64, Ordering::Relaxed);
+        traffic::count_pool_recycle(cap);
+    }
+
+    /// f32 variant of [`recycle`](ChunkPool::recycle); called by the
+    /// chunk storage drop hook for `Vec<f32>`-backed chunks.
+    pub fn recycle_f32(&self, v: Vec<f32>) {
+        let cap_bytes = v.capacity() * 4;
+        if !self.enabled() {
+            self.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let Some(i) = class_for_storage(cap_bytes) else {
+            self.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let mut class = self.f32_classes[i].lock().unwrap_or_else(|e| e.into_inner());
+        if class.len() >= class_capacity(i) {
+            self.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        class.push(v);
+        self.recycles.fetch_add(1, Ordering::Relaxed);
+        self.recycle_bytes.fetch_add(cap_bytes as u64, Ordering::Relaxed);
+        traffic::count_pool_recycle(cap_bytes);
+    }
+
+    /// Drop all retained storage (benches call this between A/B cases so
+    /// RSS comparisons start from the same baseline).
+    pub fn clear(&self) {
+        for class in &self.classes {
+            class.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        }
+        for class in &self.f32_classes {
+            class.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        }
+    }
+
+    /// Bytes of capacity currently retained across all classes.
+    pub fn retained_bytes(&self) -> usize {
+        let bytes: usize = self
+            .classes
+            .iter()
+            .map(|c| {
+                c.lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .iter()
+                    .map(Vec::capacity)
+                    .sum::<usize>()
+            })
+            .sum();
+        let f32s: usize = self
+            .f32_classes
+            .iter()
+            .map(|c| {
+                c.lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .iter()
+                    .map(|v| v.capacity() * 4)
+                    .sum::<usize>()
+            })
+            .sum();
+        bytes + f32s
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
+            fresh_bytes: self.fresh_bytes.load(Ordering::Relaxed),
+            reuses: self.reuses.load(Ordering::Relaxed),
+            reuse_bytes: self.reuse_bytes.load(Ordering::Relaxed),
+            recycles: self.recycles.load(Ordering::Relaxed),
+            recycle_bytes: self.recycle_bytes.load(Ordering::Relaxed),
+            discards: self.discards.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for ChunkPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_math() {
+        assert_eq!(class_for_request(0), None);
+        assert_eq!(class_for_request(1), Some(0));
+        assert_eq!(class_for_request(64), Some(0));
+        assert_eq!(class_for_request(65), Some(1));
+        assert_eq!(class_for_request(49152), Some(10)); // -> 64 KiB
+        assert_eq!(class_size(10), 65536);
+        assert_eq!(class_for_storage(63), None);
+        assert_eq!(class_for_storage(64), Some(0));
+        assert_eq!(class_for_storage(100), Some(0));
+        assert_eq!(class_for_storage(65536), Some(10));
+        // stored class always serves its own requests
+        for len in [1usize, 64, 100, 4096, 49152] {
+            let i = class_for_request(len).unwrap();
+            assert!(class_size(i) >= len);
+            assert_eq!(class_for_storage(class_size(i)), Some(i));
+        }
+    }
+
+    #[test]
+    fn reuse_returns_the_same_allocation() {
+        let pool = ChunkPool::new();
+        let v = pool.take(1000);
+        assert_eq!(v.len(), 1000);
+        assert!(v.iter().all(|&b| b == 0));
+        let p = v.as_ptr() as usize;
+        pool.recycle(v);
+        // 900 rounds up to the same 1024-byte class
+        let v2 = pool.take(900);
+        assert_eq!(v2.as_ptr() as usize, p, "pool must reuse the allocation");
+        assert_eq!(v2.len(), 900);
+        let s = pool.stats();
+        assert_eq!(s.fresh_allocs, 1);
+        assert_eq!(s.reuses, 1);
+        assert_eq!(s.recycles, 1);
+    }
+
+    #[test]
+    fn reused_buffers_come_back_zeroed() {
+        let pool = ChunkPool::new();
+        let mut v = pool.take(256);
+        v.iter_mut().for_each(|b| *b = 0xAB);
+        pool.recycle(v);
+        let v2 = pool.take(256);
+        assert!(v2.iter().all(|&b| b == 0), "stale bytes must be cleared");
+    }
+
+    #[test]
+    fn f32_reuse_returns_the_same_allocation() {
+        let pool = ChunkPool::new();
+        let mut v = pool.take_f32(100);
+        assert_eq!(v.len(), 100);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        let p = v.as_ptr() as usize;
+        pool.recycle_f32(v);
+        // 90 * 4 = 360 bytes rounds up to the same 512-byte class
+        let v2 = pool.take_f32(90);
+        assert_eq!(v2.as_ptr() as usize, p, "f32 pool must reuse the allocation");
+        assert_eq!(v2.len(), 90);
+        assert!(v2.iter().all(|&x| x == 0.0), "reused f32s come back zeroed");
+    }
+
+    #[test]
+    fn disabled_pool_always_allocates_fresh() {
+        let pool = ChunkPool::new();
+        pool.set_enabled(false);
+        let v = pool.take(512);
+        pool.recycle(v);
+        let s = pool.stats();
+        assert_eq!(s.recycles, 0);
+        assert_eq!(s.discards, 1);
+        let _v2 = pool.take(512);
+        assert_eq!(pool.stats().fresh_allocs, 2);
+        assert_eq!(pool.stats().reuses, 0);
+    }
+
+    #[test]
+    fn budget_bounds_retention() {
+        let pool = ChunkPool::new();
+        let i = class_for_request(1 << 20).unwrap(); // 1 MiB class
+        let cap = class_capacity(i);
+        assert!(cap >= 2);
+        for _ in 0..cap + 3 {
+            pool.recycle(Vec::with_capacity(1 << 20));
+        }
+        let s = pool.stats();
+        assert_eq!(s.recycles as usize, cap);
+        assert_eq!(s.discards as usize, 3);
+        assert!(pool.retained_bytes() >= cap * (1 << 20));
+        pool.clear();
+        assert_eq!(pool.retained_bytes(), 0);
+    }
+
+    #[test]
+    fn tiny_and_zero_requests() {
+        let pool = ChunkPool::new();
+        assert!(pool.take(0).is_empty());
+        let v = pool.take(3);
+        assert_eq!(v.len(), 3);
+        // capacity was rounded up to the 64-byte minimum class
+        assert!(v.capacity() >= 64);
+        // sub-minimum storage is discarded, not classified
+        pool.recycle(Vec::with_capacity(8));
+        assert_eq!(pool.stats().discards, 1);
+    }
+}

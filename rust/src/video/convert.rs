@@ -4,11 +4,54 @@
 //! vectorize — these stand in for the SIMD/hardware-accelerated media
 //! filters that come "off the shelf" with GStreamer (the paper's P4 and
 //! the E4 pre-processing comparison hinge on these being fast).
+//!
+//! Every conversion has two entry points: `convert_raw` returns a fresh
+//! `Vec<u8>` (tests, one-off callers) and [`convert_into`] writes into a
+//! caller-provided buffer — the `videoconvert` element feeds it storage
+//! from the [`crate::tensor::ChunkPool`] so steady-state frames allocate
+//! nothing. Size the destination with `VideoFormat::frame_size`.
 
 use crate::tensor::VideoFormat;
 
-/// Convert `data` between raw formats. Same-format input is returned
-/// as a copy (the caller decides whether to reuse the original chunk).
+/// Convert `data` between raw formats into `out` (sized
+/// `to.frame_size(width, height)`; `data` and `out` must not alias).
+/// Same-format input is copied — the `videoconvert` element
+/// short-circuits that case by forwarding the input chunk untouched
+/// instead of calling here.
+pub fn convert_into(
+    from: VideoFormat,
+    to: VideoFormat,
+    width: usize,
+    height: usize,
+    data: &[u8],
+    out: &mut [u8],
+) {
+    use VideoFormat::*;
+    debug_assert_eq!(out.len(), to.frame_size(width, height));
+    match (from, to) {
+        (a, b) if a == b => out.copy_from_slice(data),
+        (Rgb, Bgr) | (Bgr, Rgb) => swap_rb_into(data, out),
+        (Rgb, Gray8) => rgb_to_gray_into(data, false, out),
+        (Bgr, Gray8) => rgb_to_gray_into(data, true, out),
+        (Gray8, Rgb) | (Gray8, Bgr) => gray_to_rgb_into(data, out),
+        (Rgb, Nv12) => rgb_to_nv12_into(data, width, height, false, out),
+        (Bgr, Nv12) => rgb_to_nv12_into(data, width, height, true, out),
+        (Nv12, Rgb) => nv12_to_rgb_into(data, width, height, false, out),
+        (Nv12, Bgr) => nv12_to_rgb_into(data, width, height, true, out),
+        (Nv12, Gray8) => out.copy_from_slice(&data[..width * height]),
+        (Gray8, Nv12) => {
+            out[..width * height].copy_from_slice(data);
+            out[width * height..].fill(128);
+        }
+        // equal-format pairs are handled by the first arm; rustc cannot see
+        // through the guard, so spell it out
+        (Rgb, Rgb) | (Bgr, Bgr) | (Gray8, Gray8) | (Nv12, Nv12) => {
+            out.copy_from_slice(data)
+        }
+    }
+}
+
+/// Convert `data` between raw formats into a fresh vector.
 pub fn convert_raw(
     from: VideoFormat,
     to: VideoFormat,
@@ -16,30 +59,12 @@ pub fn convert_raw(
     height: usize,
     data: &[u8],
 ) -> Vec<u8> {
-    use VideoFormat::*;
-    match (from, to) {
-        (a, b) if a == b => data.to_vec(),
-        (Rgb, Bgr) | (Bgr, Rgb) => swap_rb(data),
-        (Rgb, Gray8) => rgb_to_gray(data, false),
-        (Bgr, Gray8) => rgb_to_gray(data, true),
-        (Gray8, Rgb) | (Gray8, Bgr) => gray_to_rgb(data),
-        (Rgb, Nv12) => rgb_to_nv12(data, width, height, false),
-        (Bgr, Nv12) => rgb_to_nv12(data, width, height, true),
-        (Nv12, Rgb) => nv12_to_rgb(data, width, height, false),
-        (Nv12, Bgr) => nv12_to_rgb(data, width, height, true),
-        (Nv12, Gray8) => data[..width * height].to_vec(),
-        (Gray8, Nv12) => {
-            let mut out = vec![128u8; width * height * 3 / 2];
-            out[..width * height].copy_from_slice(data);
-            out
-        }
-        // equal-format pairs are handled by the first arm; rustc cannot see
-        // through the guard, so spell it out
-        (Rgb, Rgb) | (Bgr, Bgr) | (Gray8, Gray8) | (Nv12, Nv12) => data.to_vec(),
-    }
+    let mut out = vec![0u8; to.frame_size(width, height)];
+    convert_into(from, to, width, height, data, &mut out);
+    out
 }
 
-/// Public entry used by the videoconvert element.
+/// Public entry used by non-element callers.
 pub fn convert_format(
     from: VideoFormat,
     to: VideoFormat,
@@ -50,36 +75,33 @@ pub fn convert_format(
     convert_raw(from, to, width, height, data)
 }
 
-fn swap_rb(data: &[u8]) -> Vec<u8> {
-    let mut out = data.to_vec();
-    for px in out.chunks_exact_mut(3) {
-        px.swap(0, 2);
+fn swap_rb_into(data: &[u8], out: &mut [u8]) {
+    for (src, dst) in data.chunks_exact(3).zip(out.chunks_exact_mut(3)) {
+        dst[0] = src[2];
+        dst[1] = src[1];
+        dst[2] = src[0];
     }
-    out
 }
 
-fn rgb_to_gray(data: &[u8], bgr: bool) -> Vec<u8> {
+fn rgb_to_gray_into(data: &[u8], bgr: bool, out: &mut [u8]) {
     let (ri, bi) = if bgr { (2, 0) } else { (0, 2) };
-    data.chunks_exact(3)
-        .map(|px| {
-            // integer BT.601 luma
-            let y = 77 * px[ri] as u32 + 150 * px[1] as u32 + 29 * px[bi] as u32;
-            (y >> 8) as u8
-        })
-        .collect()
-}
-
-fn gray_to_rgb(data: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(data.len() * 3);
-    for &g in data {
-        out.extend_from_slice(&[g, g, g]);
+    for (px, dst) in data.chunks_exact(3).zip(out.iter_mut()) {
+        // integer BT.601 luma
+        let y = 77 * px[ri] as u32 + 150 * px[1] as u32 + 29 * px[bi] as u32;
+        *dst = (y >> 8) as u8;
     }
-    out
 }
 
-fn rgb_to_nv12(data: &[u8], width: usize, height: usize, bgr: bool) -> Vec<u8> {
+fn gray_to_rgb_into(data: &[u8], out: &mut [u8]) {
+    for (&g, dst) in data.iter().zip(out.chunks_exact_mut(3)) {
+        dst[0] = g;
+        dst[1] = g;
+        dst[2] = g;
+    }
+}
+
+fn rgb_to_nv12_into(data: &[u8], width: usize, height: usize, bgr: bool, out: &mut [u8]) {
     let (ri, bi) = if bgr { (2, 0) } else { (0, 2) };
-    let mut out = vec![0u8; width * height * 3 / 2];
     // luma plane
     for (i, px) in data.chunks_exact(3).enumerate() {
         let y = 77 * px[ri] as u32 + 150 * px[1] as u32 + 29 * px[bi] as u32;
@@ -100,12 +122,10 @@ fn rgb_to_nv12(data: &[u8], width: usize, height: usize, bgr: bool) -> Vec<u8> {
             out[uo + 1] = v.clamp(0, 255) as u8;
         }
     }
-    out
 }
 
-fn nv12_to_rgb(data: &[u8], width: usize, height: usize, bgr: bool) -> Vec<u8> {
+fn nv12_to_rgb_into(data: &[u8], width: usize, height: usize, bgr: bool, out: &mut [u8]) {
     let (ri, bi) = if bgr { (2, 0) } else { (0, 2) };
-    let mut out = vec![0u8; width * height * 3];
     let uv_base = width * height;
     for y in 0..height {
         for x in 0..width {
@@ -122,7 +142,6 @@ fn nv12_to_rgb(data: &[u8], width: usize, height: usize, bgr: bool) -> Vec<u8> {
             out[o + bi] = b.clamp(0, 255) as u8;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -166,5 +185,32 @@ mod tests {
             .sum::<f64>()
             / rgb.len() as f64;
         assert!(err < 40.0, "roundtrip err {err}");
+    }
+
+    #[test]
+    fn into_matches_vec_path_for_all_format_pairs() {
+        use crate::tensor::ChunkPool;
+        let formats = [Rgb, Bgr, Gray8, Nv12];
+        let (w, h) = (16, 16);
+        let rgb = crate::video::pattern::generate_rgb(
+            crate::video::Pattern::Gradient,
+            w,
+            h,
+            3,
+        );
+        let pool = ChunkPool::new();
+        for from in formats {
+            let src = convert_raw(Rgb, from, w, h, &rgb);
+            for to in formats {
+                let expect = convert_raw(from, to, w, h, &src);
+                let mut pooled = pool.take(to.frame_size(w, h));
+                convert_into(from, to, w, h, &src, &mut pooled);
+                assert_eq!(
+                    pooled, expect,
+                    "pooled {from:?}->{to:?} must be bit-identical"
+                );
+                pool.recycle(pooled);
+            }
+        }
     }
 }

@@ -9,9 +9,9 @@ pub mod convert;
 pub mod pattern;
 pub mod scale;
 
-pub use convert::convert_format;
+pub use convert::{convert_format, convert_into};
 pub use pattern::{generate_pattern, Pattern};
-pub use scale::{crop, scale_bilinear};
+pub use scale::{crop, crop_into, crop_rect, scale_bilinear, scale_bilinear_into};
 
 use crate::tensor::VideoFormat;
 

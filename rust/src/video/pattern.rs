@@ -52,6 +52,21 @@ pub fn splitmix64(mut x: u64) -> u64 {
 /// Generate one RGB frame of `pattern` at frame index `n`.
 pub fn generate_rgb(pattern: Pattern, width: usize, height: usize, n: u64) -> Vec<u8> {
     let mut out = vec![0u8; width * height * 3];
+    generate_rgb_into(pattern, width, height, n, &mut out);
+    out
+}
+
+/// Generate one RGB frame into `out` (`width * height * 3` bytes; every
+/// byte is overwritten). The `videotestsrc` element feeds this pooled
+/// storage so steady-state frame production allocates nothing.
+pub fn generate_rgb_into(
+    pattern: Pattern,
+    width: usize,
+    height: usize,
+    n: u64,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(out.len(), width * height * 3);
     match pattern {
         Pattern::Smpte => {
             let shift = (n as usize * 4) % width.max(1);
@@ -107,7 +122,6 @@ pub fn generate_rgb(pattern: Pattern, width: usize, height: usize, n: u64) -> Ve
             }
         }
     }
-    out
 }
 
 /// Generate a frame in the requested output format.

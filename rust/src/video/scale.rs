@@ -1,26 +1,37 @@
 //! Scaling and cropping (the `videoscale` / `videocrop` substrate).
+//!
+//! Like `convert.rs`, each kernel has a `Vec`-returning form and an
+//! `_into` form that writes into caller-provided (typically
+//! [`crate::tensor::ChunkPool`]-recycled) storage.
 
 use crate::tensor::VideoFormat;
 
-/// Bilinear scaling for packed formats (RGB/BGR/GRAY8). NV12 callers
-/// convert to RGB first (as real pipelines do before inference).
-pub fn scale_bilinear(
+fn packed_channels(format: VideoFormat, op: &str) -> usize {
+    match format {
+        VideoFormat::Rgb | VideoFormat::Bgr => 3,
+        VideoFormat::Gray8 => 1,
+        VideoFormat::Nv12 => panic!("{op} NV12 via RGB"),
+    }
+}
+
+/// Bilinear scaling for packed formats (RGB/BGR/GRAY8) into `out`
+/// (`dst_w * dst_h * channels` bytes; must not alias `data`). NV12
+/// callers convert to RGB first (as real pipelines do before inference).
+pub fn scale_bilinear_into(
     format: VideoFormat,
     src_w: usize,
     src_h: usize,
     dst_w: usize,
     dst_h: usize,
     data: &[u8],
-) -> Vec<u8> {
-    let ch = match format {
-        VideoFormat::Rgb | VideoFormat::Bgr => 3,
-        VideoFormat::Gray8 => 1,
-        VideoFormat::Nv12 => panic!("scale NV12 via RGB"),
-    };
+    out: &mut [u8],
+) {
+    let ch = packed_channels(format, "scale");
+    debug_assert_eq!(out.len(), dst_w * dst_h * ch);
     if src_w == dst_w && src_h == dst_h {
-        return data.to_vec();
+        out.copy_from_slice(data);
+        return;
     }
-    let mut out = vec![0u8; dst_w * dst_h * ch];
     let x_ratio = if dst_w > 1 {
         (src_w - 1) as f32 / (dst_w - 1) as f32
     } else {
@@ -62,7 +73,59 @@ pub fn scale_bilinear(
             }
         }
     }
+}
+
+/// Bilinear scaling into a fresh vector.
+pub fn scale_bilinear(
+    format: VideoFormat,
+    src_w: usize,
+    src_h: usize,
+    dst_w: usize,
+    dst_h: usize,
+    data: &[u8],
+) -> Vec<u8> {
+    let ch = packed_channels(format, "scale");
+    let mut out = vec![0u8; dst_w * dst_h * ch];
+    scale_bilinear_into(format, src_w, src_h, dst_w, dst_h, data, &mut out);
     out
+}
+
+/// Clamp a crop request to the source bounds; returns `(x, y, w, h)` of
+/// the rectangle [`crop_into`] will actually extract.
+pub fn crop_rect(
+    src_w: usize,
+    src_h: usize,
+    x: usize,
+    y: usize,
+    w: usize,
+    h: usize,
+) -> (usize, usize, usize, usize) {
+    let x = x.min(src_w.saturating_sub(1));
+    let y = y.min(src_h.saturating_sub(1));
+    let w = w.min(src_w - x);
+    let h = h.min(src_h - y);
+    (x, y, w, h)
+}
+
+/// Crop a packed-format frame to an already-clamped rectangle (from
+/// [`crop_rect`]) into `out` (`w * h * channels` bytes).
+pub fn crop_into(
+    format: VideoFormat,
+    src_w: usize,
+    x: usize,
+    y: usize,
+    w: usize,
+    h: usize,
+    data: &[u8],
+    out: &mut [u8],
+) {
+    let ch = packed_channels(format, "crop");
+    debug_assert_eq!(out.len(), w * h * ch);
+    for row in 0..h {
+        let src_off = ((y + row) * src_w + x) * ch;
+        let dst_off = row * w * ch;
+        out[dst_off..dst_off + w * ch].copy_from_slice(&data[src_off..src_off + w * ch]);
+    }
 }
 
 /// Crop a packed-format frame to a rectangle (clamped to bounds).
@@ -76,21 +139,10 @@ pub fn crop(
     h: usize,
     data: &[u8],
 ) -> Vec<u8> {
-    let ch = match format {
-        VideoFormat::Rgb | VideoFormat::Bgr => 3,
-        VideoFormat::Gray8 => 1,
-        VideoFormat::Nv12 => panic!("crop NV12 via RGB"),
-    };
-    let x = x.min(src_w.saturating_sub(1));
-    let y = y.min(src_h.saturating_sub(1));
-    let w = w.min(src_w - x);
-    let h = h.min(src_h - y);
+    let ch = packed_channels(format, "crop");
+    let (x, y, w, h) = crop_rect(src_w, src_h, x, y, w, h);
     let mut out = vec![0u8; w * h * ch];
-    for row in 0..h {
-        let src_off = ((y + row) * src_w + x) * ch;
-        let dst_off = row * w * ch;
-        out[dst_off..dst_off + w * ch].copy_from_slice(&data[src_off..src_off + w * ch]);
-    }
+    crop_into(format, src_w, x, y, w, h, data, &mut out);
     out
 }
 
@@ -136,5 +188,30 @@ mod tests {
         let data: Vec<u8> = (0..9).collect();
         let out = crop(VideoFormat::Gray8, 3, 3, 2, 2, 5, 5, &data);
         assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn into_matches_vec_path() {
+        use crate::tensor::ChunkPool;
+        let pool = ChunkPool::new();
+        let data = crate::video::pattern::generate_rgb(
+            crate::video::Pattern::Gradient,
+            12,
+            10,
+            1,
+        );
+        // downscale, upscale, identity
+        for (dw, dh) in [(6, 5), (20, 16), (12, 10)] {
+            let expect = scale_bilinear(VideoFormat::Rgb, 12, 10, dw, dh, &data);
+            let mut pooled = pool.take(dw * dh * 3);
+            scale_bilinear_into(VideoFormat::Rgb, 12, 10, dw, dh, &data, &mut pooled);
+            assert_eq!(pooled, expect, "pooled scale {dw}x{dh} bit-identical");
+            pool.recycle(pooled);
+        }
+        let expect = crop(VideoFormat::Rgb, 12, 10, 2, 3, 5, 4, &data);
+        let (x, y, w, h) = crop_rect(12, 10, 2, 3, 5, 4);
+        let mut pooled = pool.take(w * h * 3);
+        crop_into(VideoFormat::Rgb, 12, x, y, w, h, &data, &mut pooled);
+        assert_eq!(pooled, expect, "pooled crop bit-identical");
     }
 }
