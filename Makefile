@@ -2,7 +2,7 @@
 # (checked in). `make artifacts` regenerates the manifest and the real
 # HLO programs through JAX when a Python environment is available.
 
-.PHONY: all test bench bench-smoke artifacts doc fmt
+.PHONY: all test bench bench-smoke artifacts doc fmt lint
 
 all:
 	cargo build --release
@@ -33,3 +33,8 @@ doc:
 
 fmt:
 	cargo fmt
+
+# Mirrors the CI `lint` job.
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings

@@ -1,30 +1,59 @@
 //! Object detection serving (the E4 workload as an application).
 //!
-//! Loads the SSDLite-style detector, serves a batch of frames, and prints
-//! detections plus latency/throughput — including a comparison between the
-//! two NNFW builds the pipeline can choose from (the paper's P6 argument:
+//! Builds the SSDLite-style detection pipeline with the typed
+//! `PipelineBuilder`, serves a batch of frames, and prints detections
+//! plus latency/throughput — including a comparison between the two NNFW
+//! builds the pipeline can choose from (the paper's P6 argument:
 //! framework flexibility is a performance feature).
 //!
 //! ```bash
 //! cargo run --release --example object_detection [frames]
 //! ```
 
-use nnstreamer::elements::decoder::decode_boxes;
-use nnstreamer::elements::sinks::TensorSink;
-use nnstreamer::pipeline::Pipeline;
+use nnstreamer::elements::converter::TensorConverterProps;
+use nnstreamer::elements::decoder::{decode_boxes, DecoderMode, TensorDecoderProps};
+use nnstreamer::elements::filter::{Framework, TensorFilterProps};
+use nnstreamer::elements::sinks::{TensorSink, TensorSinkProps};
+use nnstreamer::elements::sources::VideoTestSrcProps;
+use nnstreamer::elements::transform::{ArithOp, TensorTransformProps};
+use nnstreamer::elements::videofilters::{VideoConvertProps, VideoScaleProps};
+use nnstreamer::pipeline::PipelineBuilder;
+use nnstreamer::tensor::{DType, VideoFormat};
+use nnstreamer::video::Pattern;
 
 fn serve(variant: &str, frames: u64) -> Result<(f64, f64), Box<dyn std::error::Error>> {
-    let desc = format!(
-        "videotestsrc pattern=ball num-buffers={frames} ! \
-         video/x-raw,format=RGB,width=320,height=240,framerate=10000 ! \
-         videoconvert format=RGB ! videoscale width=96 height=96 ! \
-         tensor_converter ! tensor_transform mode=typecast option=float32 ! \
-         tensor_transform mode=arithmetic option=div:255 ! \
-         tensor_filter framework=xla model=ssd_{variant} ! \
-         tensor_decoder mode=bounding_boxes option1=ssd option2=0.4 ! \
-         tensor_sink name=dets"
-    );
-    let mut pipeline = Pipeline::parse(&desc)?;
+    let mut b = PipelineBuilder::new();
+    b.chain(VideoTestSrcProps {
+        pattern: Pattern::Ball,
+        width: 320,
+        height: 240,
+        framerate: 10_000.0,
+        num_buffers: Some(frames),
+        ..Default::default()
+    })?
+    .chain(VideoConvertProps {
+        format: VideoFormat::Rgb,
+    })?
+    .chain(VideoScaleProps {
+        width: 96,
+        height: 96,
+    })?
+    .chain(TensorConverterProps)?
+    .chain(TensorTransformProps::typecast(DType::F32))?
+    .chain(TensorTransformProps::arithmetic(vec![(ArithOp::Div, 255.0)]))?
+    .chain(TensorFilterProps {
+        framework: Framework::Xla,
+        model: format!("ssd_{variant}"),
+        ..Default::default()
+    })?
+    .chain(TensorDecoderProps {
+        mode: DecoderMode::BoundingBoxes,
+        head: "ssd".into(),
+        threshold: 0.4,
+        ..Default::default()
+    })?
+    .chain_named("dets", TensorSinkProps::default())?;
+    let mut pipeline = b.build();
     let report = pipeline.run()?;
     let fps = report.fps("dets");
     let lat_ms: f64 = report
@@ -39,8 +68,7 @@ fn serve(variant: &str, frames: u64) -> Result<(f64, f64), Box<dyn std::error::E
             if let Some(sink) = el.as_any().and_then(|a| a.downcast_mut::<TensorSink>()) {
                 println!("sample detections (ssd_{variant}):");
                 for b in sink.buffers.iter().take(3) {
-                    let boxes =
-                        decode_boxes(b.chunk())?;
+                    let boxes = decode_boxes(b.chunk())?;
                     println!("  frame pts={:>9}ns: {} boxes", b.pts_ns, boxes.len());
                     for bx in boxes.iter().take(3) {
                         println!(

@@ -1,33 +1,78 @@
-//! Quickstart: the Fig 1-style pipeline, end to end.
+//! Quickstart: the Fig 1-style pipeline, end to end — built with the
+//! typed `PipelineBuilder` (no launch strings, no stringly properties).
 //!
 //! Serves a live 30 fps camera stream (synthetic) through scaling,
 //! conversion, normalization, an AOT-compiled Inception-style classifier
 //! on the simulated NPU, and a label decoder — then prints per-stage
-//! statistics, throughput and end-to-end latency.
+//! statistics, throughput and end-to-end latency. A live subscription on
+//! the `tensor_sink` streams labels while the pipeline plays.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use nnstreamer::elements::sinks::TensorSink;
-use nnstreamer::pipeline::Pipeline;
+use nnstreamer::elements::converter::TensorConverterProps;
+use nnstreamer::elements::decoder::{DecoderMode, TensorDecoderProps};
+use nnstreamer::elements::filter::{Framework, TensorFilterProps};
+use nnstreamer::elements::sinks::{TensorSink, TensorSinkProps};
+use nnstreamer::elements::sources::VideoTestSrcProps;
+use nnstreamer::elements::transform::{ArithOp, TensorTransformProps};
+use nnstreamer::elements::videofilters::VideoScaleProps;
+use nnstreamer::nnfw::Accelerator;
+use nnstreamer::pipeline::PipelineBuilder;
+use nnstreamer::tensor::DType;
+use nnstreamer::video::Pattern;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let desc = "videotestsrc pattern=ball is-live=true framerate=30 num-buffers=90 ! \
-                video/x-raw,format=RGB,width=640,height=480,framerate=30 ! \
-                videoscale width=64 height=64 ! \
-                tensor_converter ! \
-                tensor_transform mode=typecast option=float32 ! \
-                tensor_transform mode=arithmetic option=div:255 ! \
-                tensor_filter framework=xla model=i3_opt accelerator=npu ! \
-                tensor_decoder mode=image_labeling ! \
-                tensor_sink name=labels";
-    println!("pipeline:\n  {}\n", desc.replace(" ! ", " !\n  "));
+    let mut b = PipelineBuilder::new();
+    b.chain(VideoTestSrcProps {
+        pattern: Pattern::Ball,
+        width: 640,
+        height: 480,
+        framerate: 30.0,
+        num_buffers: Some(90),
+        is_live: true,
+        ..Default::default()
+    })?
+    .chain(VideoScaleProps {
+        width: 64,
+        height: 64,
+    })?
+    .chain(TensorConverterProps)?
+    .chain(TensorTransformProps::typecast(DType::F32))?
+    .chain(TensorTransformProps::arithmetic(vec![(ArithOp::Div, 255.0)]))?
+    .chain(TensorFilterProps {
+        framework: Framework::Xla,
+        model: "i3_opt".into(),
+        accelerator: Accelerator::Npu,
+        ..Default::default()
+    })?
+    .chain(TensorDecoderProps {
+        mode: DecoderMode::ImageLabeling,
+        ..Default::default()
+    })?
+    .chain_named("labels", TensorSinkProps::default())?;
+    let mut pipeline = b.build();
 
-    let mut pipeline = Pipeline::parse(desc)?;
-    let report = pipeline.run()?;
+    // play + live subscription: labels stream to the app as they decode
+    let running = pipeline.play()?;
+    let mut live_seen = 0u64;
+    running.subscribe("labels", move |buf| {
+        live_seen += 1;
+        if live_seen <= 3 {
+            if let Ok(v) = buf.chunk().to_f32_vec() {
+                println!(
+                    "live label: pts={:6.2}s class={:3} p={:.3}",
+                    buf.pts_ns as f64 / 1e9,
+                    v[0],
+                    v[1]
+                );
+            }
+        }
+    })?;
+    let (report, elements) = running.wait()?;
 
-    println!("== per-element statistics ==");
+    println!("\n== per-element statistics ==");
     for e in &report.elements {
         println!(
             "  {:22} in={:4} out={:4} busy_cpu={:9.3}ms busy_npu={:9.3}ms mean_lat={:7.3}ms",
@@ -47,8 +92,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         report.peak_rss_mib
     );
 
-    // inspect a few classified labels
-    if let Some(el) = pipeline.finished_element("labels") {
+    // inspect a few classified labels from the pull-based collection
+    if let Some((_, mut el)) = elements.into_iter().find(|(n, _)| n == "labels") {
         if let Some(sink) = el.as_any().and_then(|a| a.downcast_mut::<TensorSink>()) {
             println!("\nfirst labels (class, confidence):");
             for b in sink.buffers.iter().take(5) {

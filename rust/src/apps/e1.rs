@@ -7,10 +7,19 @@
 
 use crate::baselines::control;
 use crate::devices::NpuSim;
+use crate::elements::decoder::{DecoderMode, TensorDecoderProps};
+use crate::elements::filter::{Framework, TensorFilterProps};
+use crate::elements::flow::{QueueProps, TeeProps};
+use crate::elements::sinks::FakeSinkProps;
+use crate::elements::sources::VideoTestSrcProps;
+use crate::elements::transform::{ArithOp, TensorTransformProps};
+use crate::elements::videofilters::VideoScaleProps;
 use crate::error::Result;
 use crate::metrics::MemInfo;
-use crate::nnfw;
-use crate::pipeline::{Graph, Pipeline};
+use crate::nnfw::{self, Accelerator};
+use crate::pipeline::{Graph, Pipeline, PipelineBuilder};
+use crate::tensor::DType;
+use crate::video::Pattern;
 
 /// Which models a configuration runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -114,77 +123,114 @@ pub struct E1Row {
 }
 
 /// Build a model branch: scale -> convert -> normalize -> filter -> decode.
-fn add_branch(
-    g: &mut Graph,
-    tee: crate::pipeline::NodeId,
-    idx: usize,
-    stem: &str,
-    on_npu: bool,
-) -> Result<()> {
-    use crate::element::Registry;
-    let (side, decoder_mode, dec_opt) = match stem {
-        "i3" => (64, "image_labeling", None),
-        _ => (96, "bounding_boxes", Some("yolo")),
+///
+/// All typed props: the leaky queue keeps a slow model branch from
+/// stalling the tee (exactly how production GStreamer pipelines wire
+/// slow consumers). Both branches run the optimized artifact; the
+/// accelerator decides the device envelope (the C/I3 slowdown comes from
+/// the modeled embedded-CPU rate, not from a different model build).
+fn add_branch(b: &mut PipelineBuilder, idx: usize, stem: &str, on_npu: bool) -> Result<()> {
+    let (side, decoder) = match stem {
+        "i3" => (
+            64,
+            TensorDecoderProps {
+                mode: DecoderMode::ImageLabeling,
+                ..Default::default()
+            },
+        ),
+        _ => (
+            96,
+            TensorDecoderProps {
+                mode: DecoderMode::BoundingBoxes,
+                head: "yolo".into(),
+                ..Default::default()
+            },
+        ),
     };
-    // leaky: a slow model branch drops frames instead of stalling the tee
-    // (exactly how production GStreamer pipelines wire slow consumers)
-    let q = g.add("queue")?;
-    g.set_property(q, "max-size-buffers", "2")?;
-    g.set_property(q, "leaky", "downstream")?;
-    g.link(tee, q)?;
-    let scale = g.add("videoscale")?;
-    g.set_property(scale, "width", &side.to_string())?;
-    g.set_property(scale, "height", &side.to_string())?;
-    g.link(q, scale)?;
-    let conv = g.add("tensor_converter")?;
-    g.link(scale, conv)?;
-    let cast = g.add("tensor_transform")?;
-    g.set_property(cast, "mode", "typecast")?;
-    g.set_property(cast, "option", "float32")?;
-    g.link(conv, cast)?;
-    let norm = g.add("tensor_transform")?;
-    g.set_property(norm, "mode", "arithmetic")?;
-    g.set_property(norm, "option", "div:255")?;
-    g.link(cast, norm)?;
-    let filter = g.add_element(
-        format!("model_{idx}"),
-        Registry::make("tensor_filter")?,
-    )?;
-    // Both branches run the optimized artifact; the accelerator property
-    // decides the device envelope (the C/I3 slowdown comes from the
-    // modeled embedded-CPU rate, not from a different model build).
-    g.set_property(filter, "framework", "xla")?;
-    g.set_property(filter, "model", &format!("{stem}_opt"))?;
-    g.set_property(filter, "accelerator", if on_npu { "npu" } else { "cpu" })?;
-    g.link(norm, filter)?;
-    let dec = g.add("tensor_decoder")?;
-    g.set_property(dec, "mode", decoder_mode)?;
-    if let Some(o) = dec_opt {
-        g.set_property(dec, "option1", o)?;
-    }
-    g.link(filter, dec)?;
-    let sink = g.add_element(format!("sink_{idx}"), Registry::make("fakesink")?)?;
-    g.link(dec, sink)?;
+    b.from("t")?
+        .chain(QueueProps {
+            max_size_buffers: 2,
+            leaky: true,
+        })?
+        .chain(VideoScaleProps {
+            width: side,
+            height: side,
+        })?
+        .chain(crate::elements::converter::TensorConverterProps)?
+        .chain(TensorTransformProps::typecast(DType::F32))?
+        .chain(TensorTransformProps::arithmetic(vec![(ArithOp::Div, 255.0)]))?
+        .chain_named(
+            format!("model_{idx}"),
+            TensorFilterProps {
+                framework: Framework::Xla,
+                model: format!("{stem}_opt"),
+                accelerator: if on_npu {
+                    Accelerator::Npu
+                } else {
+                    Accelerator::Cpu
+                },
+                ..Default::default()
+            },
+        )?
+        .chain(decoder)?
+        .chain_named(format!("sink_{idx}"), FakeSinkProps::default())?;
     Ok(())
 }
 
-/// Build the NNStreamer pipeline for a case (Fig 2 or a sub-pipeline).
+/// Build the NNStreamer pipeline for a case (Fig 2 or a sub-pipeline)
+/// through the typed builder.
 pub fn build_pipeline(cfg: &E1Config, case: E1Case) -> Result<Graph> {
     assert!(!case.is_control());
-    let mut g = Graph::new();
-    let src = g.add("videotestsrc")?;
-    g.set_property(src, "pattern", "ball")?;
-    g.set_property(src, "width", &cfg.src_w.to_string())?;
-    g.set_property(src, "height", &cfg.src_h.to_string())?;
-    g.set_property(src, "framerate", &cfg.fps.to_string())?;
-    g.set_property(src, "num-buffers", &cfg.num_frames.to_string())?;
-    g.set_property(src, "is-live", if cfg.live { "true" } else { "false" })?;
-    let tee = g.add("tee")?;
-    g.link(src, tee)?;
+    let mut b = PipelineBuilder::new();
+    b.chain_named("src", source_props(cfg))?
+        .chain_named("t", TeeProps)?;
     for (i, (stem, on_npu)) in case.branches().into_iter().enumerate() {
-        add_branch(&mut g, tee, i, stem, on_npu)?;
+        add_branch(&mut b, i, stem, on_npu)?;
     }
-    Ok(g)
+    Ok(b.into_graph())
+}
+
+fn source_props(cfg: &E1Config) -> VideoTestSrcProps {
+    VideoTestSrcProps {
+        pattern: Pattern::Ball,
+        width: cfg.src_w,
+        height: cfg.src_h,
+        framerate: cfg.fps,
+        num_buffers: Some(cfg.num_frames),
+        is_live: cfg.live,
+        ..Default::default()
+    }
+}
+
+/// The same pipeline as a launch description — the parser-compat fixture
+/// asserted against the builder graph in `tests/api_roundtrip.rs`.
+pub fn launch_description(cfg: &E1Config, case: E1Case) -> String {
+    assert!(!case.is_control());
+    let mut desc = format!(
+        "videotestsrc name=src pattern=ball width={w} height={h} framerate={fps} \
+         num-buffers={n} is-live={live} ! tee name=t",
+        w = cfg.src_w,
+        h = cfg.src_h,
+        fps = cfg.fps,
+        n = cfg.num_frames,
+        live = cfg.live,
+    );
+    for (i, (stem, on_npu)) in case.branches().into_iter().enumerate() {
+        let (side, dec) = match stem {
+            "i3" => (64, "tensor_decoder mode=image_labeling".to_string()),
+            _ => (96, "tensor_decoder mode=bounding_boxes option1=yolo".to_string()),
+        };
+        desc.push_str(&format!(
+            " t. ! queue max-size-buffers=2 leaky=downstream ! \
+             videoscale width={side} height={side} ! tensor_converter ! \
+             tensor_transform mode=typecast option=float32 ! \
+             tensor_transform mode=arithmetic option=div:255 ! \
+             tensor_filter name=model_{i} framework=xla model={stem}_opt accelerator={acc} ! \
+             {dec} ! fakesink name=sink_{i}",
+            acc = if on_npu { "npu" } else { "cpu" },
+        ));
+    }
+    desc
 }
 
 /// Run one case (dispatching to Control or NNS) and measure a table row.

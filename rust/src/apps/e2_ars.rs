@@ -22,9 +22,17 @@
 //! description, −48% memory, −43% CPU, +65.5% batch rate vs the
 //! conventional serial implementation ([`crate::baselines::control`]).
 
+use crate::elements::aggregator::TensorAggregatorProps;
+use crate::elements::filter::{Framework, TensorFilterProps};
+use crate::elements::flow::{QueueProps, TeeProps};
+use crate::elements::merge::TensorMergeProps;
+use crate::elements::rate::TensorRateProps;
+use crate::elements::sinks::FakeSinkProps;
+use crate::elements::sources::{SensorKind, SensorSrcProps};
+use crate::elements::transform::TensorTransformProps;
 use crate::error::Result;
 use crate::metrics::MemInfo;
-use crate::pipeline::{Graph, Pipeline};
+use crate::pipeline::{Graph, Pipeline, PipelineBuilder};
 
 #[derive(Debug, Clone)]
 pub struct ArsConfig {
@@ -79,92 +87,77 @@ pub fn launch_description(cfg: &ArsConfig) -> String {
     )
 }
 
-/// Build the Fig 3 graph programmatically (the launch string above is the
-/// paper-facing "dozen lines"; the builder keeps branch wiring explicit).
+/// Build the Fig 3 graph through the typed builder (the launch string
+/// above is the paper-facing "dozen lines"; the builder keeps branch
+/// wiring explicit and compile-time-checked).
 pub fn build_pipeline(cfg: &ArsConfig) -> Result<Graph> {
-    use crate::element::Registry;
-    let mut g = Graph::new();
-    let live = if cfg.live { "true" } else { "false" };
+    let sensor = |kind, window, channels| SensorSrcProps {
+        kind,
+        window,
+        channels,
+        rate: cfg.rate,
+        num_buffers: Some(cfg.num_windows),
+        is_live: cfg.live,
+        ..Default::default()
+    };
+    let xla = |model: &str| TensorFilterProps {
+        framework: Framework::Xla,
+        model: model.to_string(),
+        ..Default::default()
+    };
 
-    // accel source + tee
-    let accel = g.add("sensorsrc")?;
-    g.set_property(accel, "kind", "accel")?;
-    g.set_property(accel, "window", "128")?;
-    g.set_property(accel, "channels", "3")?;
-    g.set_property(accel, "rate", &cfg.rate.to_string())?;
-    g.set_property(accel, "num-buffers", &cfg.num_windows.to_string())?;
-    g.set_property(accel, "is-live", live)?;
-    let ta = g.add("tee")?;
-    g.link(accel, ta)?;
+    let mut b = PipelineBuilder::new();
 
-    // (a) fast path: per-window activity classifier
-    let qa = g.add("queue")?;
-    g.link(ta, qa)?;
-    let fa = g.add("tensor_filter")?;
-    g.set_property(fa, "framework", "xla")?;
-    g.set_property(fa, "model", "ars_a_opt")?;
-    g.link(qa, fa)?;
-    let sink_a = g.add_element("sink_a", Registry::make("fakesink")?)?;
-    g.link(fa, sink_a)?;
+    // accel source + tee, (a) fast path: per-window activity classifier
+    b.chain_named("accel", sensor(SensorKind::Accel, 128, 3))?
+        .chain_named("ta", TeeProps)?
+        .chain(QueueProps::default())?
+        .chain(xla("ars_a_opt"))?
+        .chain_named("sink_a", FakeSinkProps::default())?;
 
     // pressure source + tee
-    let pres = g.add("sensorsrc")?;
-    g.set_property(pres, "kind", "pressure")?;
-    g.set_property(pres, "window", "128")?;
-    g.set_property(pres, "channels", "1")?;
-    g.set_property(pres, "rate", &cfg.rate.to_string())?;
-    g.set_property(pres, "num-buffers", &cfg.num_windows.to_string())?;
-    g.set_property(pres, "is-live", live)?;
-    let tp = g.add("tee")?;
-    g.link(pres, tp)?;
+    b.chain_named("pressure", sensor(SensorKind::Pressure, 128, 1))?
+        .chain_named("tp", TeeProps)?;
 
     // (b) slow path: 8-channel fusion -> 4x aggregation -> long classifier
-    let merge = g.add("tensor_merge")?;
-    g.set_property(merge, "mode", "linear")?;
-    g.set_property(merge, "option", "0")?; // channel axis (minor)
-    g.set_property(merge, "sync-mode", "slowest")?;
-    for (tee, stand) in [(ta, false), (tp, false), (ta, true), (tp, true)] {
-        let q = g.add("queue")?;
-        g.link(tee, q)?;
-        if stand {
-            let t = g.add("tensor_transform")?;
-            g.set_property(t, "mode", "stand")?;
-            g.link(q, t)?;
-            g.link(t, merge)?;
-        } else {
-            g.link(q, merge)?;
-        }
-    }
-    let agg = g.add("tensor_aggregator")?;
-    g.set_property(agg, "frames-in", "4")?;
-    g.set_property(agg, "frames-dim", "1")?; // time axis
-    g.link(merge, agg)?;
-    let fb = g.add("tensor_filter")?;
-    g.set_property(fb, "framework", "xla")?;
-    g.set_property(fb, "model", "ars_b_opt")?;
-    g.link(agg, fb)?;
-    let sink_b = g.add_element("sink_b", Registry::make("fakesink")?)?;
-    g.link(fb, sink_b)?;
+    // (merge input order = pad order: accel raw, pressure raw, accel
+    // standardized, pressure standardized)
+    b.add_named(
+        "m",
+        TensorMergeProps {
+            axis: 0, // channel axis (minor)
+            ..Default::default()
+        },
+    )?;
+    b.from("ta")?.chain(QueueProps::default())?.to("m")?;
+    b.from("tp")?.chain(QueueProps::default())?.to("m")?;
+    b.from("ta")?
+        .chain(QueueProps::default())?
+        .chain(TensorTransformProps::stand())?
+        .to("m")?;
+    b.from("tp")?
+        .chain(QueueProps::default())?
+        .chain(TensorTransformProps::stand())?
+        .to("m")?;
+    b.from("m")?
+        .chain(TensorAggregatorProps {
+            frames_in: 4,
+            frames_dim: 1, // time axis
+            ..Default::default()
+        })?
+        .chain(xla("ars_b_opt"))?
+        .chain_named("sink_b", FakeSinkProps::default())?;
 
     // (c) mic path: rate-decimated audio event classifier
-    let mic = g.add("sensorsrc")?;
-    g.set_property(mic, "kind", "mic")?;
-    g.set_property(mic, "window", "64")?;
-    g.set_property(mic, "channels", "16")?;
-    g.set_property(mic, "rate", &cfg.rate.to_string())?;
-    g.set_property(mic, "num-buffers", &cfg.num_windows.to_string())?;
-    g.set_property(mic, "is-live", live)?;
-    let rate_el = g.add("tensor_rate")?;
-    g.set_property(rate_el, "framerate", &(cfg.rate / 2.0).to_string())?;
-    g.link(mic, rate_el)?;
-    let fc = g.add("tensor_filter")?;
-    g.set_property(fc, "framework", "xla")?;
-    g.set_property(fc, "model", "ars_c_opt")?;
-    g.link(rate_el, fc)?;
-    let sink_c = g.add_element("sink_c", Registry::make("fakesink")?)?;
-    g.link(fc, sink_c)?;
+    b.chain_named("mic", sensor(SensorKind::Mic, 64, 16))?
+        .chain(TensorRateProps {
+            framerate: cfg.rate / 2.0,
+            ..Default::default()
+        })?
+        .chain(xla("ars_c_opt"))?
+        .chain_named("sink_c", FakeSinkProps::default())?;
 
-    Ok(g)
+    Ok(b.into_graph())
 }
 
 /// Run the NNStreamer ARS pipeline and collect Fig 3 measurements.

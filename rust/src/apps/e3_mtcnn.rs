@@ -225,123 +225,166 @@ pub fn register_stages(class: DeviceClass) -> Result<()> {
     Ok(())
 }
 
-/// Build the full MTCNN NNStreamer pipeline graph.
+/// Build the full MTCNN NNStreamer pipeline graph through the typed
+/// builder.
 pub fn build_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
+    use crate::elements::decoder::{DecoderMode, TensorDecoderProps};
+    use crate::elements::filter::{Framework, TensorFilterProps};
+    use crate::elements::flow::{QueueProps, TeeProps};
+    use crate::elements::mux::TensorMuxProps;
+    use crate::elements::sinks::FakeSinkProps;
+    use crate::elements::sources::VideoTestSrcProps;
+    use crate::elements::transform::{ArithOp, TensorTransformProps};
+    use crate::elements::videofilters::VideoScaleProps;
+    use crate::pipeline::PipelineBuilder;
+    use crate::video::Pattern;
+
     register_stages(cfg.class)?;
     let sfx = class_suffix(cfg.class);
     let (bh, bw) = BASE;
-    let mut g = Graph::new();
+    let custom = |model: String| TensorFilterProps {
+        framework: Framework::Custom,
+        model,
+        ..Default::default()
+    };
+    // typecast + the MTCNN normalization (x - 127.5) / 128
+    let cast = || TensorTransformProps::typecast(DType::F32);
+    let norm = || {
+        TensorTransformProps::arithmetic(vec![
+            (ArithOp::Add, -127.5),
+            (ArithOp::Div, 128.0),
+        ])
+    };
 
-    let src = g.add("videotestsrc")?;
-    g.set_property(src, "pattern", "ball")?;
-    g.set_property(src, "width", &cfg.src_w.to_string())?;
-    g.set_property(src, "height", &cfg.src_h.to_string())?;
-    g.set_property(src, "framerate", &cfg.fps.to_string())?;
-    g.set_property(src, "num-buffers", &cfg.num_frames.to_string())?;
-    g.set_property(src, "is-live", if cfg.live { "true" } else { "false" })?;
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "src",
+        VideoTestSrcProps {
+            pattern: Pattern::Ball,
+            width: cfg.src_w,
+            height: cfg.src_h,
+            framerate: cfg.fps,
+            num_buffers: Some(cfg.num_frames),
+            is_live: cfg.live,
+            ..Default::default()
+        },
+    )?
+    .chain_named("t", TeeProps)?;
 
-    let tee = g.add("tee")?;
-    g.link(src, tee)?;
-
-    // P-Net branches
-    let mux = g.add("tensor_mux")?;
-    g.set_property(mux, "sync-mode", "slowest")?;
+    // P-Net branches feed the cross-scale mux in pyramid order
+    b.add_named("pnet_mux", TensorMuxProps::default())?;
     for (i, (h, w)) in PYRAMID.iter().enumerate() {
-        let q = g.add("queue")?;
-        g.link(tee, q)?;
-        let scale = g.add("videoscale")?;
-        g.set_property(scale, "width", &w.to_string())?;
-        g.set_property(scale, "height", &h.to_string())?;
-        g.link(q, scale)?;
-        let conv = g.add("tensor_converter")?;
-        g.link(scale, conv)?;
-        let cast = g.add("tensor_transform")?;
-        g.set_property(cast, "mode", "typecast")?;
-        g.set_property(cast, "option", "float32")?;
-        g.link(conv, cast)?;
-        let norm = g.add("tensor_transform")?;
-        g.set_property(norm, "mode", "arithmetic")?;
-        g.set_property(norm, "option", "add:-127.5,div:128")?;
-        g.link(cast, norm)?;
-        let pnet = g.add_element(
-            format!("pnet_s{i}"),
-            crate::element::Registry::make("tensor_filter")?,
-        )?;
-        g.set_property(pnet, "framework", "xla")?;
-        g.set_property(pnet, "model", &format!("pnet_s{i}_opt"))?;
-        g.set_property(pnet, "device-class", sfx)?;
-        g.link(norm, pnet)?;
-        let post = g.add("tensor_filter")?;
-        g.set_property(post, "framework", "custom")?;
-        g.set_property(post, "model", &format!("mtcnn_pnet_post_s{i}"))?;
-        g.link(pnet, post)?;
-        let q2 = g.add("queue")?;
-        g.link(post, q2)?;
-        g.link(q2, mux)?;
+        b.from("t")?
+            .chain(QueueProps::default())?
+            .chain(VideoScaleProps {
+                width: *w,
+                height: *h,
+            })?
+            .chain(crate::elements::converter::TensorConverterProps)?
+            .chain(cast())?
+            .chain(norm())?
+            .chain_named(
+                format!("pnet_s{i}"),
+                TensorFilterProps {
+                    framework: Framework::Xla,
+                    model: format!("pnet_s{i}_opt"),
+                    device_class: cfg.class,
+                    ..Default::default()
+                },
+            )?
+            .chain(custom(format!("mtcnn_pnet_post_s{i}")))?
+            .chain(QueueProps::default())?
+            .to("pnet_mux")?;
     }
-    let merge = g.add_element("pnet_merge", crate::element::Registry::make("tensor_filter")?)?;
-    g.set_property(merge, "framework", "custom")?;
-    g.set_property(merge, "model", "mtcnn_merge_nms")?;
-    g.link(mux, merge)?;
+    b.from("pnet_mux")?
+        .chain_named("pnet_merge", custom("mtcnn_merge_nms".into()))?;
 
     // base frame branch (f32, normalized)
-    let qf = g.add("queue")?;
-    g.link(tee, qf)?;
-    let scale_f = g.add("videoscale")?;
-    g.set_property(scale_f, "width", &bw.to_string())?;
-    g.set_property(scale_f, "height", &bh.to_string())?;
-    g.link(qf, scale_f)?;
-    let conv_f = g.add("tensor_converter")?;
-    g.link(scale_f, conv_f)?;
-    let cast_f = g.add("tensor_transform")?;
-    g.set_property(cast_f, "mode", "typecast")?;
-    g.set_property(cast_f, "option", "float32")?;
-    g.link(conv_f, cast_f)?;
-    let norm_f = g.add("tensor_transform")?;
-    g.set_property(norm_f, "mode", "arithmetic")?;
-    g.set_property(norm_f, "option", "add:-127.5,div:128")?;
-    g.link(cast_f, norm_f)?;
-    let tee_f = g.add("tee")?;
-    g.link(norm_f, tee_f)?;
+    b.from("t")?
+        .chain(QueueProps::default())?
+        .chain(VideoScaleProps {
+            width: bw,
+            height: bh,
+        })?
+        .chain(crate::elements::converter::TensorConverterProps)?
+        .chain(cast())?
+        .chain(norm())?
+        .chain_named("t_frame", TeeProps)?;
 
-    // R-Net stage
-    let mux_r = g.add("tensor_mux")?;
-    g.set_property(mux_r, "sync-mode", "slowest")?;
-    let qf1 = g.add("queue")?;
-    g.link(tee_f, qf1)?;
-    g.link(qf1, mux_r)?;
-    let qb1 = g.add("queue")?;
-    g.link(merge, qb1)?;
-    g.link(qb1, mux_r)?;
-    let rnet = g.add_element("rnet_stage", crate::element::Registry::make("tensor_filter")?)?;
-    g.set_property(rnet, "framework", "custom")?;
-    g.set_property(rnet, "model", &format!("mtcnn_rnet_stage_{sfx}"))?;
-    g.link(mux_r, rnet)?;
+    // R-Net stage: (frame, pnet boxes) -> refined boxes
+    b.add_named("mux_r", TensorMuxProps::default())?;
+    b.from("t_frame")?.chain(QueueProps::default())?.to("mux_r")?;
+    b.from("pnet_merge")?.chain(QueueProps::default())?.to("mux_r")?;
+    b.from("mux_r")?
+        .chain_named("rnet_stage", custom(format!("mtcnn_rnet_stage_{sfx}")))?;
 
-    // O-Net stage
-    let mux_o = g.add("tensor_mux")?;
-    g.set_property(mux_o, "sync-mode", "slowest")?;
-    let qf2 = g.add("queue")?;
-    g.link(tee_f, qf2)?;
-    g.link(qf2, mux_o)?;
-    let qb2 = g.add("queue")?;
-    g.link(rnet, qb2)?;
-    g.link(qb2, mux_o)?;
-    let onet = g.add_element("onet_stage", crate::element::Registry::make("tensor_filter")?)?;
-    g.set_property(onet, "framework", "custom")?;
-    g.set_property(onet, "model", &format!("mtcnn_onet_stage_{sfx}"))?;
-    g.link(mux_o, onet)?;
+    // O-Net stage: (frame, rnet boxes) -> final boxes
+    b.add_named("mux_o", TensorMuxProps::default())?;
+    b.from("t_frame")?.chain(QueueProps::default())?.to("mux_o")?;
+    b.from("rnet_stage")?.chain(QueueProps::default())?.to("mux_o")?;
+    b.from("mux_o")?
+        .chain_named("onet_stage", custom(format!("mtcnn_onet_stage_{sfx}")))?;
 
     // Video sink: draw boxes on a transparent canvas
-    let dec = g.add("tensor_decoder")?;
-    g.set_property(dec, "mode", "direct_video")?;
-    g.set_property(dec, "width", &bw.to_string())?;
-    g.set_property(dec, "height", &bh.to_string())?;
-    g.link(onet, dec)?;
-    let sink = g.add_element("video_sink", crate::element::Registry::make("fakesink")?)?;
-    g.link(dec, sink)?;
+    b.from("onet_stage")?
+        .chain(TensorDecoderProps {
+            mode: DecoderMode::DirectVideo,
+            width: bw,
+            height: bh,
+            ..Default::default()
+        })?
+        .chain_named("video_sink", FakeSinkProps::default())?;
 
-    Ok(g)
+    Ok(b.into_graph())
+}
+
+/// The same pipeline as a launch description (parser-compat fixture for
+/// `tests/api_roundtrip.rs`). Requires [`register_stages`] to have run
+/// for `cfg.class` so the custom filter stages resolve.
+pub fn launch_description(cfg: &MtcnnConfig) -> String {
+    let sfx = class_suffix(cfg.class);
+    let (bh, bw) = BASE;
+    let mut desc = format!(
+        "videotestsrc name=src pattern=ball width={w} height={h} framerate={fps} \
+         num-buffers={n} is-live={live} ! tee name=t",
+        w = cfg.src_w,
+        h = cfg.src_h,
+        fps = cfg.fps,
+        n = cfg.num_frames,
+        live = cfg.live,
+    );
+    for (i, (h, w)) in PYRAMID.iter().enumerate() {
+        let mux_head = if i == 0 {
+            " ! tensor_mux name=pnet_mux sync-mode=slowest".to_string()
+        } else {
+            " ! pnet_mux.".to_string()
+        };
+        desc.push_str(&format!(
+            " t. ! queue ! videoscale width={w} height={h} ! tensor_converter ! \
+             tensor_transform mode=typecast option=float32 ! \
+             tensor_transform mode=arithmetic option=add:-127.5,div:128 ! \
+             tensor_filter name=pnet_s{i} framework=xla model=pnet_s{i}_opt device-class={sfx} ! \
+             tensor_filter framework=custom model=mtcnn_pnet_post_s{i} ! queue{mux_head}",
+        ));
+    }
+    desc.push_str(
+        " pnet_mux. ! tensor_filter name=pnet_merge framework=custom model=mtcnn_merge_nms",
+    );
+    desc.push_str(&format!(
+        " t. ! queue ! videoscale width={bw} height={bh} ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=add:-127.5,div:128 ! tee name=t_frame",
+    ));
+    desc.push_str(&format!(
+        " t_frame. ! queue ! tensor_mux name=mux_r sync-mode=slowest \
+         pnet_merge. ! queue ! mux_r. \
+         mux_r. ! tensor_filter name=rnet_stage framework=custom model=mtcnn_rnet_stage_{sfx} \
+         t_frame. ! queue ! tensor_mux name=mux_o sync-mode=slowest \
+         rnet_stage. ! queue ! mux_o. \
+         mux_o. ! tensor_filter name=onet_stage framework=custom model=mtcnn_onet_stage_{sfx} ! \
+         tensor_decoder mode=direct_video width={bw} height={bh} ! fakesink name=video_sink",
+    ));
+    desc
 }
 
 /// Per-run measurements shared by the NNS pipeline and the Control loop.

@@ -13,11 +13,19 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::baselines::mediapipe_like::{CalculatorGraph, Packet};
+use crate::elements::converter::TensorConverterProps;
+use crate::elements::decoder::{DecoderMode, TensorDecoderProps};
+use crate::elements::filter::{Framework, TensorFilterProps};
+use crate::elements::sinks::FakeSinkProps;
+use crate::elements::sources::VideoTestSrcProps;
+use crate::elements::transform::{ArithOp, TensorTransformProps};
+use crate::elements::videofilters::{VideoConvertProps, VideoScaleProps};
 use crate::error::Result;
 use crate::metrics::{traffic, CpuTracker, MemInfo};
 use crate::nnfw::register_custom;
-use crate::pipeline::Pipeline;
-use crate::tensor::{Chunk, DType, TensorInfo};
+use crate::pipeline::{Pipeline, PipelineBuilder};
+use crate::tensor::{Chunk, DType, TensorInfo, VideoFormat};
+use crate::video::Pattern;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum E4Case {
@@ -78,7 +86,9 @@ pub struct E4Row {
     pub mem_mib: f64,
 }
 
-fn nns_launch(cfg: &E4Config, variant: &str) -> String {
+/// The NNStreamer detection pipeline as a launch description
+/// (parser-compat fixture for `tests/api_roundtrip.rs`).
+pub fn launch_description(cfg: &E4Config, variant: &str) -> String {
     format!(
         "videotestsrc pattern=ball width={w} height={h} framerate=1000 num-buffers={n} is-live=false ! \
          videoconvert format=RGB ! videoscale width=96 height=96 ! tensor_converter ! \
@@ -93,12 +103,61 @@ fn nns_launch(cfg: &E4Config, variant: &str) -> String {
     )
 }
 
+/// Common pre-processing head: camera -> RGB -> 96x96 -> normalized f32
+/// tensors (the builder-typed equivalent of the launch string above).
+/// `framerate` matches the historical launch fixtures: 1000 for the
+/// detection cases, 100000 for the pre-processor-only comparison.
+fn chain_preprocess<'a>(
+    b: &'a mut PipelineBuilder,
+    cfg: &E4Config,
+    framerate: f64,
+) -> Result<&'a mut PipelineBuilder> {
+    b.chain(VideoTestSrcProps {
+        pattern: Pattern::Ball,
+        width: cfg.src_w,
+        height: cfg.src_h,
+        framerate,
+        num_buffers: Some(cfg.num_frames),
+        ..Default::default()
+    })?
+    .chain(VideoConvertProps {
+        format: VideoFormat::Rgb,
+    })?
+    .chain(VideoScaleProps {
+        width: 96,
+        height: 96,
+    })?
+    .chain(TensorConverterProps)?
+    .chain(TensorTransformProps::typecast(DType::F32))?
+    .chain(TensorTransformProps::arithmetic(vec![(ArithOp::Div, 255.0)]))
+}
+
+/// Build the detection pipeline for one NNFW variant through the typed
+/// builder.
+pub fn build_pipeline(cfg: &E4Config, variant: &str) -> Result<Pipeline> {
+    let mut b = PipelineBuilder::new();
+    chain_preprocess(&mut b, cfg, 1000.0)?
+        .chain(TensorFilterProps {
+            framework: Framework::Xla,
+            model: format!("ssd_{variant}"),
+            ..Default::default()
+        })?
+        .chain(TensorDecoderProps {
+            mode: DecoderMode::BoundingBoxes,
+            head: "ssd".into(),
+            threshold: 0.5,
+            ..Default::default()
+        })?
+        .chain_named("out", FakeSinkProps::default())?;
+    Ok(b.build())
+}
+
 /// Run an NNStreamer case (a or b).
 fn run_nns(cfg: &E4Config, variant: &str, label: &str) -> Result<E4Row> {
     let mem_before = MemInfo::read().vm_rss_kib;
     let tr0 = traffic::snapshot();
     let cpu = CpuTracker::start();
-    let mut p = Pipeline::parse(&nns_launch(cfg, variant))?;
+    let mut p = build_pipeline(cfg, variant)?;
     let report = p.run()?;
     let tr = traffic::since(tr0);
     let mem_after = MemInfo::read().vm_rss_kib;
@@ -193,18 +252,15 @@ fn run_hybrid(cfg: &E4Config) -> Result<E4Row> {
     let mem_before = MemInfo::read().vm_rss_kib;
     let tr0 = traffic::snapshot();
     let cpu = CpuTracker::start();
-    let desc = format!(
-        "videotestsrc pattern=ball width={w} height={h} framerate=1000 num-buffers={n} is-live=false ! \
-         videoconvert format=RGB ! videoscale width=96 height=96 ! tensor_converter ! \
-         tensor_transform mode=typecast option=float32 ! \
-         tensor_transform mode=arithmetic option=div:255 ! \
-         tensor_filter framework=custom model=mediapipe_embedded ! \
-         fakesink name=out",
-        w = cfg.src_w,
-        h = cfg.src_h,
-        n = cfg.num_frames,
-    );
-    let mut p = Pipeline::parse(&desc)?;
+    let mut b = PipelineBuilder::new();
+    chain_preprocess(&mut b, cfg, 1000.0)?
+        .chain(TensorFilterProps {
+            framework: Framework::Custom,
+            model: "mediapipe_embedded".into(),
+            ..Default::default()
+        })?
+        .chain_named("out", FakeSinkProps::default())?;
+    let mut p = b.build();
     let report = p.run()?;
     let tr = traffic::since(tr0);
     let mem_after = MemInfo::read().vm_rss_kib;
@@ -242,19 +298,16 @@ pub fn preprocessor_comparison(
     frames: u64,
 ) -> Result<((f64, f64), (f64, f64))> {
     // NNStreamer path: off-the-shelf videoscale + converter + transform
-    let desc = format!(
-        "videotestsrc pattern=ball width={w} height={h} framerate=100000 num-buffers={n} is-live=false ! \
-         videoconvert format=RGB ! videoscale width=96 height=96 ! tensor_converter ! \
-         tensor_transform mode=typecast option=float32 ! \
-         tensor_transform mode=arithmetic option=div:255 ! \
-         fakesink name=out",
-        w = cfg.src_w,
-        h = cfg.src_h,
-        n = frames,
-    );
+    let pre_cfg = E4Config {
+        num_frames: frames,
+        ..cfg.clone()
+    };
     let cpu = CpuTracker::start();
     let t0 = Instant::now();
-    let mut p = Pipeline::parse(&desc)?;
+    let mut b = PipelineBuilder::new();
+    chain_preprocess(&mut b, &pre_cfg, 100_000.0)?
+        .chain_named("out", FakeSinkProps::default())?;
+    let mut p = b.build();
     p.run()?;
     let nns_real = t0.elapsed().as_secs_f64();
     let nns_cpu = cpu.cpu_percent() / 100.0 * cpu.elapsed_secs();

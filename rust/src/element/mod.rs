@@ -7,6 +7,7 @@
 //! and connects pads with bounded channels — GStreamer's "transparent and
 //! easy-to-apply parallelism" (§III requirement list).
 
+pub mod props;
 pub mod registry;
 
 use std::collections::VecDeque;
@@ -19,6 +20,7 @@ use crate::error::{Error, Result};
 use crate::metrics::stats::{Domain, ElementStats};
 use crate::tensor::{Buffer, Caps};
 
+pub use props::{FromProps, Props};
 pub use registry::Registry;
 
 /// What flows over a link.
@@ -27,6 +29,37 @@ pub enum Item {
     Buffer(Buffer),
     /// End of stream on this pad.
     Eos,
+}
+
+/// A buffer observer attached to a sink element at runtime
+/// ([`ControlMsg::Subscribe`]).
+pub type BufferCallback = Box<dyn FnMut(&Buffer) + Send>;
+
+/// Runtime control message for an element of a *playing* pipeline.
+///
+/// Delivered through a per-element control channel owned by the scheduler
+/// and applied by the element's own thread, strictly **before** the next
+/// buffer (or EOS) it processes — so a message sent before a buffer
+/// enters the pipeline is guaranteed to be in effect when that buffer
+/// reaches the element.
+pub enum ControlMsg {
+    /// Apply a property change, same string form as the parser. Routed
+    /// into the element's typed [`Props`] via
+    /// [`Element::set_property`].
+    SetProperty { key: String, value: String },
+    /// Attach a buffer callback (supported by `tensor_sink`).
+    Subscribe(BufferCallback),
+}
+
+impl std::fmt::Debug for ControlMsg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControlMsg::SetProperty { key, value } => {
+                write!(f, "SetProperty({key}={value})")
+            }
+            ControlMsg::Subscribe(_) => write!(f, "Subscribe(..)"),
+        }
+    }
 }
 
 /// Element processing verdict.
@@ -108,6 +141,9 @@ pub struct Ctx {
     /// [`push_back_input`](Ctx::push_back_input); delivered before the
     /// channel on the next scheduler iteration.
     pub(crate) pending: VecDeque<(usize, Item)>,
+    /// Runtime control mailbox (live property changes, subscriptions);
+    /// drained by the scheduler before each processing step.
+    pub(crate) control: Option<Receiver<ControlMsg>>,
 }
 
 impl Ctx {
@@ -211,6 +247,12 @@ impl Ctx {
         self.pending.push_back((pad, item));
     }
 
+    /// Non-blocking pull of the next pending control message
+    /// (scheduler-internal; applied via [`Element::handle_control`]).
+    pub(crate) fn try_pull_control(&mut self) -> Option<ControlMsg> {
+        self.control.as_ref()?.try_recv().ok()
+    }
+
     /// Send EOS on one src pad.
     pub fn push_eos(&mut self, pad: usize) {
         if let Some(sender) = self.outputs.get(pad).and_then(Option::as_ref) {
@@ -242,13 +284,30 @@ pub trait Element: Send {
     /// Factory name (e.g. `"tensor_converter"`).
     fn type_name(&self) -> &'static str;
 
-    /// Set a property from its string form (parser and builder API).
+    /// Set a property from its string form. The default implementation of
+    /// every built-in element delegates to its typed [`Props`] struct, so
+    /// the parser, `Graph::set_property` and runtime control all share
+    /// one parsing/validation path.
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
         Err(Error::Property {
             key: key.into(),
             value: value.into(),
             reason: format!("{} has no such property", self.type_name()),
         })
+    }
+
+    /// Apply a runtime control message (delivered by the scheduler on the
+    /// element's own thread, before the next item it processes).
+    /// Default: property changes go through
+    /// [`set_property`](Element::set_property); subscription is rejected.
+    fn handle_control(&mut self, msg: ControlMsg) -> Result<()> {
+        match msg {
+            ControlMsg::SetProperty { key, value } => self.set_property(&key, &value),
+            ControlMsg::Subscribe(_) => Err(Error::element(
+                self.type_name(),
+                "does not support buffer subscription",
+            )),
+        }
     }
 
     /// Number of sink pads this element expects given `n` attached links
@@ -376,6 +435,7 @@ pub(crate) mod testutil {
             idle_ns: 0,
             input: None,
             pending: std::collections::VecDeque::new(),
+            control: None,
         };
         (ctx, rxs)
     }

@@ -1,0 +1,84 @@
+//! Typed element properties — the compile-time-checked construction path.
+//!
+//! Every built-in element declares a props struct (`QueueProps`,
+//! `TensorFilterProps`, ...) implementing [`Props`]. All three ways of
+//! configuring an element meet in that one struct:
+//!
+//! * the **launch-string parser** and [`Graph::set_property`] deserialize
+//!   `key=value` text into it through [`Props::set`];
+//! * the **builder API** ([`PipelineBuilder`]) consumes the struct
+//!   directly, so applications get field types (enums, `usize`,
+//!   `Duration`, [`Caps`]) instead of strings;
+//! * **runtime control** ([`ControlMsg::SetProperty`]) re-enters through
+//!   the same [`Props::set`] on a playing element.
+//!
+//! [`Graph::set_property`]: crate::pipeline::Graph::set_property
+//! [`PipelineBuilder`]: crate::pipeline::PipelineBuilder
+//! [`ControlMsg::SetProperty`]: super::ControlMsg::SetProperty
+//! [`Caps`]: crate::tensor::Caps
+
+use crate::element::Element;
+use crate::error::{Error, Result};
+
+/// Typed properties of one element kind.
+///
+/// `Default` carries the element's documented defaults, so builder code
+/// only spells out what it overrides:
+///
+/// ```
+/// use nnstreamer::element::Props;
+/// use nnstreamer::elements::flow::QueueProps;
+///
+/// let q = QueueProps {
+///     max_size_buffers: 2,
+///     ..Default::default()
+/// };
+/// assert_eq!(QueueProps::FACTORY, "queue");
+/// assert!(!q.leaky);
+/// ```
+pub trait Props: Default + Send + 'static {
+    /// Factory name of the element this configures (e.g. `"queue"`).
+    const FACTORY: &'static str;
+
+    /// Property keys understood by the string front-end.
+    const KEYS: &'static [&'static str];
+
+    /// Set one property from its launch-string form.
+    fn set(&mut self, key: &str, value: &str) -> Result<()>;
+
+    /// Instantiate the element, consuming the props.
+    fn into_element(self) -> Result<Box<dyn Element>>;
+}
+
+/// Construction of a concrete element from its typed props — the inverse
+/// direction of [`Props::into_element`] with the element type preserved
+/// (used when the caller needs the concrete type, e.g. to grab an
+/// `AppSrc` push handle before the pipeline starts).
+pub trait FromProps: Element + Sized {
+    type Props: Props;
+
+    /// Build the element. Fallible so props with invariants the type
+    /// system cannot express (e.g. `batch <= MAX_BATCH`) can reject.
+    fn from_props(props: Self::Props) -> Result<Self>;
+}
+
+/// Uniform "unknown property" error, with a nearest-key suggestion when
+/// the key looks like a typo of a real one.
+pub(crate) fn unknown_property(
+    factory: &str,
+    keys: &'static [&'static str],
+    key: &str,
+    value: &str,
+) -> Error {
+    let suggestion = crate::element::registry::did_you_mean(key, keys.iter().copied());
+    Error::Property {
+        key: key.into(),
+        value: value.into(),
+        reason: format!("unknown property of {factory}{suggestion}"),
+    }
+}
+
+/// Shared boolean parsing of the launch-string front-end (`true`/`1`).
+pub(crate) fn parse_bool(value: &str) -> bool {
+    value == "true" || value == "1"
+}

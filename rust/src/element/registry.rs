@@ -24,12 +24,17 @@ static REGISTRY: Lazy<Mutex<HashMap<String, Factory>>> = Lazy::new(|| {
 pub struct Registry;
 
 impl Registry {
-    /// Instantiate an element by factory name.
+    /// Instantiate an element by factory name. Unknown names report the
+    /// nearest registered factory (edit distance <= 2) as a suggestion.
     pub fn make(name: &str) -> Result<Box<dyn Element>> {
         let reg = REGISTRY.lock().unwrap();
-        let factory = reg
-            .get(name)
-            .ok_or_else(|| Error::Parse(format!("no such element factory {name:?}")))?;
+        let factory = reg.get(name).ok_or_else(|| {
+            let names = reg.keys().map(String::as_str);
+            Error::Parse(format!(
+                "no such element factory {name:?}{}",
+                did_you_mean(name, names)
+            ))
+        })?;
         Ok(factory())
     }
 
@@ -54,6 +59,59 @@ impl Registry {
     pub fn exists(name: &str) -> bool {
         REGISTRY.lock().unwrap().contains_key(name)
     }
+}
+
+/// A `" (did you mean ...?)"` suffix naming the closest candidate, or
+/// empty when nothing is within typo distance. The single formatting
+/// point shared by factory lookup, unknown-property errors, and the
+/// live-control surface. Candidates are sorted internally so iteration
+/// order does not affect tie-breaking.
+pub(crate) fn did_you_mean<'a>(
+    target: &str,
+    candidates: impl IntoIterator<Item = &'a str>,
+) -> String {
+    let mut sorted: Vec<&str> = candidates.into_iter().collect();
+    sorted.sort_unstable();
+    match nearest(target, sorted) {
+        Some(s) => format!(" (did you mean {s:?}?)"),
+        None => String::new(),
+    }
+}
+
+/// Nearest candidate by Levenshtein distance, accepting only close typos
+/// (distance <= 2). Ties resolve to the earliest candidate, so pass the
+/// candidates in a deterministic (sorted) order.
+fn nearest<'a>(
+    target: &str,
+    candidates: impl IntoIterator<Item = &'a str>,
+) -> Option<&'a str> {
+    let mut best: Option<(usize, &str)> = None;
+    for cand in candidates {
+        let d = edit_distance(target, cand);
+        if d <= 2 {
+            match best {
+                Some((bd, _)) if bd <= d => {}
+                _ => best = Some((d, cand)),
+            }
+        }
+    }
+    best.map(|(_, name)| name)
+}
+
+/// Classic dynamic-programming Levenshtein distance over bytes.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -81,5 +139,27 @@ mod tests {
     #[test]
     fn unknown_element_errors() {
         assert!(Registry::make("definitely_not_an_element").is_err());
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("queue", "queue"), 0);
+        assert_eq!(edit_distance("qeueu", "queue"), 2);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn unknown_factory_suggests_nearest_name() {
+        let err = Registry::make("qeueu").unwrap_err().to_string();
+        assert!(err.contains("no such element factory"), "{err}");
+        assert!(err.contains("did you mean \"queue\"?"), "{err}");
+
+        let err = Registry::make("tensor_filtr").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"tensor_filter\"?"), "{err}");
+
+        // far-away garbage gets no suggestion
+        let err = Registry::make("zzzzzzzz").unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
     }
 }

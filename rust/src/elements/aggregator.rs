@@ -8,66 +8,113 @@
 
 use std::collections::VecDeque;
 
-use crate::element::{Ctx, Element, Flow, Item};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
 
 use super::sources::parse_usize;
 
+/// Typed properties of [`TensorAggregator`].
+#[derive(Debug, Clone, Copy)]
+pub struct TensorAggregatorProps {
+    /// Frames merged per output (`frames-in`).
+    pub frames_in: usize,
+    /// Frames discarded per output; 0 = no overlap (`frames-flush`).
+    pub frames_flush: usize,
+    /// Concatenation axis, minor-first (`frames-dim`).
+    pub frames_dim: usize,
+}
+
+impl Default for TensorAggregatorProps {
+    fn default() -> Self {
+        Self {
+            frames_in: 2,
+            frames_flush: 0,
+            frames_dim: 0,
+        }
+    }
+}
+
+impl Props for TensorAggregatorProps {
+    const FACTORY: &'static str = "tensor_aggregator";
+    const KEYS: &'static [&'static str] = &["frames-in", "frames-flush", "frames-dim"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "frames-in" => self.frames_in = parse_usize(key, value)?.max(1),
+            "frames-flush" => self.frames_flush = parse_usize(key, value)?,
+            "frames-dim" => self.frames_dim = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorAggregator::from_props(self)?))
+    }
+}
+
 pub struct TensorAggregator {
-    frames_in: usize,
-    frames_flush: usize,
-    frames_dim: usize,
+    props: TensorAggregatorProps,
     window: VecDeque<Buffer>,
     in_info: Option<TensorInfo>,
     out_info: Option<TensorInfo>,
 }
 
-impl TensorAggregator {
-    pub fn new() -> Self {
-        Self {
-            frames_in: 2,
-            frames_flush: 0,
-            frames_dim: 0,
+impl FromProps for TensorAggregator {
+    type Props = TensorAggregatorProps;
+
+    fn from_props(mut props: TensorAggregatorProps) -> Result<Self> {
+        // same clamp as the string front-end: at least one frame per window
+        props.frames_in = props.frames_in.max(1);
+        Ok(Self {
+            props,
             window: VecDeque::new(),
             in_info: None,
             out_info: None,
-        }
+        })
+    }
+}
+
+impl TensorAggregator {
+    pub fn new() -> Self {
+        Self::from_props(TensorAggregatorProps::default()).expect("defaults are valid")
     }
 
     fn flush_count(&self) -> usize {
-        if self.frames_flush == 0 {
-            self.frames_in
+        if self.props.frames_flush == 0 {
+            self.props.frames_in
         } else {
-            self.frames_flush
+            self.props.frames_flush
         }
     }
 
     fn emit(&mut self, ctx: &mut Ctx) -> Result<()> {
         let info = self.in_info.as_ref().unwrap();
         let esz = info.size_bytes();
-        let mut data = Vec::with_capacity(esz * self.frames_in);
+        let mut data = Vec::with_capacity(esz * self.props.frames_in);
         // concat along frames_dim: for dim 0..rank-1 we'd need interleaving;
         // aggregation along the *major* (last) axis is plain concatenation.
         // For minor axes, interleave elementwise rows.
         let rank = info.dims.rank();
-        if self.frames_dim >= rank || self.frames_dim == rank.saturating_sub(1) + 1 {
+        if self.props.frames_dim >= rank || self.props.frames_dim == rank.saturating_sub(1) + 1 {
             // append as a new major axis (or beyond current rank)
-            for b in self.window.iter().take(self.frames_in) {
+            for b in self.window.iter().take(self.props.frames_in) {
                 data.extend_from_slice(b.chunk().as_bytes());
             }
         } else {
             // interleave along an existing axis
             let ebytes = info.dtype.size_bytes();
-            let inner: usize = (0..self.frames_dim)
+            let inner: usize = (0..self.props.frames_dim)
                 .map(|d| info.dims.dim_or_1(d))
                 .product::<usize>()
                 * ebytes;
-            let axis = info.dims.dim_or_1(self.frames_dim);
+            let axis = info.dims.dim_or_1(self.props.frames_dim);
             let row = axis * inner;
             let outer = esz / row;
-            data.resize(esz * self.frames_in, 0);
-            let n = self.frames_in;
+            data.resize(esz * self.props.frames_in, 0);
+            let n = self.props.frames_in;
             for (fi, b) in self.window.iter().take(n).enumerate() {
                 let src = b.chunk().as_bytes();
                 for o in 0..outer {
@@ -77,7 +124,7 @@ impl TensorAggregator {
                 }
             }
         }
-        let last = &self.window[self.frames_in - 1];
+        let last = &self.window[self.props.frames_in - 1];
         let mut out = Buffer::single(last.pts_ns, Chunk::from_vec(data));
         out.seq = last.seq;
         for _ in 0..self.flush_count().min(self.window.len()) {
@@ -99,19 +146,7 @@ impl Element for TensorAggregator {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "frames-in" => self.frames_in = parse_usize(key, value)?.max(1),
-            "frames-flush" => self.frames_flush = parse_usize(key, value)?,
-            "frames-dim" => self.frames_dim = parse_usize(key, value)?,
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of tensor_aggregator".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -123,15 +158,15 @@ impl Element for TensorAggregator {
         };
         self.in_info = Some(info.clone());
         let rank = info.dims.rank();
-        let out_info = if self.frames_dim >= rank {
+        let out_info = if self.props.frames_dim >= rank {
             // new axis appended
-            TensorInfo::new(info.dtype, info.dims.with_dim(rank, self.frames_in))
+            TensorInfo::new(info.dtype, info.dims.with_dim(rank, self.props.frames_in))
         } else {
             TensorInfo::new(
                 info.dtype,
                 info.dims.with_dim(
-                    self.frames_dim,
-                    info.dims.dim_or_1(self.frames_dim) * self.frames_in,
+                    self.props.frames_dim,
+                    info.dims.dim_or_1(self.props.frames_dim) * self.props.frames_in,
                 ),
             )
         };
@@ -152,7 +187,7 @@ impl Element for TensorAggregator {
             return Ok(Flow::Continue);
         };
         self.window.push_back(buf);
-        if self.window.len() >= self.frames_in {
+        if self.window.len() >= self.props.frames_in {
             self.emit(ctx)?;
         }
         Ok(Flow::Continue)

@@ -6,24 +6,47 @@
 //! NNStreamer's converter requires RGB/GRAY8 (we fold the conversion in
 //! for convenience, as real pipelines put `videoconvert` before it).
 
-use crate::element::{Ctx, Element, Flow, Item};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{
     Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
 };
 use crate::video::convert::convert_into;
 
+/// Typed properties of [`TensorConverter`] (none — conversion is fully
+/// driven by the negotiated input caps).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TensorConverterProps;
+
+impl Props for TensorConverterProps {
+    const FACTORY: &'static str = "tensor_converter";
+    const KEYS: &'static [&'static str] = &[];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        Err(unknown_property(Self::FACTORY, Self::KEYS, key, value))
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorConverter::from_props(self)?))
+    }
+}
+
 pub struct TensorConverter {
     in_video: Option<VideoInfo>,
-    in_audio: Option<crate::tensor::AudioInfo>,
 }
 
 impl TensorConverter {
     pub fn new() -> Self {
-        Self {
-            in_video: None,
-            in_audio: None,
-        }
+        Self { in_video: None }
+    }
+}
+
+impl FromProps for TensorConverter {
+    type Props = TensorConverterProps;
+
+    fn from_props(_props: TensorConverterProps) -> Result<Self> {
+        Ok(Self::new())
     }
 }
 
@@ -38,6 +61,10 @@ impl Element for TensorConverter {
         "tensor_converter"
     }
 
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        TensorConverterProps.set(key, value)
+    }
+
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
         let out = match &in_caps[0] {
             Caps::Video(v) => {
@@ -48,16 +75,13 @@ impl Element for TensorConverter {
                     fps_millis: v.fps_millis,
                 }
             }
-            Caps::Audio(a) => {
-                self.in_audio = Some(a.clone());
-                Caps::Tensor {
-                    info: TensorInfo::new(
-                        DType::I16,
-                        Dims::new(&[a.samples_per_buffer, a.channels]),
-                    ),
-                    fps_millis: 0,
-                }
-            }
+            Caps::Audio(a) => Caps::Tensor {
+                info: TensorInfo::new(
+                    DType::I16,
+                    Dims::new(&[a.samples_per_buffer, a.channels]),
+                ),
+                fps_millis: 0,
+            },
             Caps::Text | Caps::FlatBuf => Caps::Tensor {
                 info: TensorInfo::new(DType::U8, Dims::new(&[1])),
                 fps_millis: 0,

@@ -9,28 +9,92 @@
 //! * `flatbuf` — framed binary serialization of the tensors (the paper's
 //!   Flatbuf/Protobuf interconnection for heterogeneous pipelines)
 
-use crate::element::{Ctx, Element, Flow, Item};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo, VideoFormat, VideoInfo};
 
 use super::sources::{parse_f64, parse_usize};
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Mode {
+/// Decoder sub-plugin selection (`mode=`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecoderMode {
+    #[default]
     ImageLabeling,
     BoundingBoxes,
     DirectVideo,
     FlatBuf,
 }
 
+impl DecoderMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "image_labeling" => DecoderMode::ImageLabeling,
+            "bounding_boxes" => DecoderMode::BoundingBoxes,
+            "direct_video" => DecoderMode::DirectVideo,
+            "flatbuf" => DecoderMode::FlatBuf,
+            _ => {
+                return Err(Error::Property {
+                    key: "mode".into(),
+                    value: s.into(),
+                    reason: "image_labeling|bounding_boxes|direct_video|flatbuf".into(),
+                })
+            }
+        })
+    }
+}
+
+/// Typed properties of [`TensorDecoder`].
+#[derive(Debug, Clone)]
+pub struct TensorDecoderProps {
+    /// Sub-plugin (`mode`).
+    pub mode: DecoderMode,
+    /// Head layout for bounding_boxes: "yolo" or "ssd" (`option1`).
+    pub head: String,
+    /// Score threshold for bounding_boxes (`option2` / `threshold`).
+    pub threshold: f32,
+    /// Output canvas width for direct_video (`width`).
+    pub width: usize,
+    /// Output canvas height for direct_video (`height`).
+    pub height: usize,
+}
+
+impl Default for TensorDecoderProps {
+    fn default() -> Self {
+        Self {
+            mode: DecoderMode::ImageLabeling,
+            head: "ssd".to_string(),
+            threshold: 0.5,
+            width: 320,
+            height: 240,
+        }
+    }
+}
+
+impl Props for TensorDecoderProps {
+    const FACTORY: &'static str = "tensor_decoder";
+    const KEYS: &'static [&'static str] =
+        &["mode", "option1", "option2", "threshold", "width", "height"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "mode" => self.mode = DecoderMode::parse(value)?,
+            "option1" => self.head = value.to_string(),
+            "option2" | "threshold" => self.threshold = parse_f64(key, value)? as f32,
+            "width" => self.width = parse_usize(key, value)?,
+            "height" => self.height = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorDecoder::from_props(self)?))
+    }
+}
+
 pub struct TensorDecoder {
-    mode: Mode,
-    /// head layout for bounding_boxes: "yolo" or "ssd"
-    head: String,
-    threshold: f32,
-    /// output canvas for direct_video
-    width: usize,
-    height: usize,
+    props: TensorDecoderProps,
     in_infos: Vec<TensorInfo>,
 }
 
@@ -84,16 +148,20 @@ pub fn decode_boxes(chunk: &Chunk) -> Result<Vec<DetBox>> {
 /// Max number of boxes the decoder emits per frame (fixed-size stream).
 pub const MAX_BOXES: usize = 32;
 
+impl FromProps for TensorDecoder {
+    type Props = TensorDecoderProps;
+
+    fn from_props(props: TensorDecoderProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            in_infos: Vec::new(),
+        })
+    }
+}
+
 impl TensorDecoder {
     pub fn new() -> Self {
-        Self {
-            mode: Mode::ImageLabeling,
-            head: "ssd".to_string(),
-            threshold: 0.5,
-            width: 320,
-            height: 240,
-            in_infos: Vec::new(),
-        }
+        Self::from_props(TensorDecoderProps::default()).expect("defaults are valid")
     }
 
     fn decode_yolo(&self, raw: &[f32], grid: usize, anchors: usize, classes: usize) -> Vec<DetBox> {
@@ -106,7 +174,7 @@ impl TensorDecoder {
                 for a in 0..anchors {
                     let o = a * (5 + classes);
                     let obj = sigmoid(cell[o + 4]);
-                    if obj < self.threshold {
+                    if obj < self.props.threshold {
                         continue;
                     }
                     let (mut best_c, mut best_p) = (0usize, f32::MIN);
@@ -147,7 +215,7 @@ impl TensorDecoder {
                     best_c = ci;
                 }
             }
-            if best_p < self.threshold {
+            if best_p < self.props.threshold {
                 continue;
             }
             let l = &locs[i * 4..(i + 1) * 4];
@@ -187,35 +255,7 @@ impl Element for TensorDecoder {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "mode" => {
-                self.mode = match value {
-                    "image_labeling" => Mode::ImageLabeling,
-                    "bounding_boxes" => Mode::BoundingBoxes,
-                    "direct_video" => Mode::DirectVideo,
-                    "flatbuf" => Mode::FlatBuf,
-                    _ => {
-                        return Err(Error::Property {
-                            key: key.into(),
-                            value: value.into(),
-                            reason: "image_labeling|bounding_boxes|direct_video|flatbuf".into(),
-                        })
-                    }
-                }
-            }
-            "option1" => self.head = value.to_string(),
-            "option2" | "threshold" => self.threshold = parse_f64(key, value)? as f32,
-            "width" => self.width = parse_usize(key, value)?,
-            "height" => self.height = parse_usize(key, value)?,
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of tensor_decoder".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -229,22 +269,22 @@ impl Element for TensorDecoder {
             }
         };
         self.in_infos = infos;
-        let out = match self.mode {
-            Mode::ImageLabeling => Caps::Tensor {
+        let out = match self.props.mode {
+            DecoderMode::ImageLabeling => Caps::Tensor {
                 info: TensorInfo::new(DType::F32, Dims::new(&[2])),
                 fps_millis: fps,
             },
-            Mode::BoundingBoxes => Caps::Tensor {
+            DecoderMode::BoundingBoxes => Caps::Tensor {
                 info: TensorInfo::new(DType::F32, Dims::new(&[1 + MAX_BOXES * 6])),
                 fps_millis: fps,
             },
-            Mode::DirectVideo => Caps::Video(VideoInfo {
+            DecoderMode::DirectVideo => Caps::Video(VideoInfo {
                 format: VideoFormat::Rgb,
-                width: self.width,
-                height: self.height,
+                width: self.props.width,
+                height: self.props.height,
                 fps_millis: fps,
             }),
-            Mode::FlatBuf => Caps::FlatBuf,
+            DecoderMode::FlatBuf => Caps::FlatBuf,
         };
         Ok(vec![out; n_srcs.max(1)])
     }
@@ -253,8 +293,8 @@ impl Element for TensorDecoder {
         let Item::Buffer(buf) = item else {
             return Ok(Flow::Continue);
         };
-        let out_chunk = match self.mode {
-            Mode::ImageLabeling => {
+        let out_chunk = match self.props.mode {
+            DecoderMode::ImageLabeling => {
                 let probs = buf.chunk().to_f32_vec()?;
                 let (mut best, mut best_p) = (0usize, f32::MIN);
                 for (i, &p) in probs.iter().enumerate() {
@@ -265,8 +305,8 @@ impl Element for TensorDecoder {
                 }
                 Chunk::from_f32(&[best as f32, best_p])
             }
-            Mode::BoundingBoxes => {
-                let boxes = match self.head.as_str() {
+            DecoderMode::BoundingBoxes => {
+                let boxes = match self.props.head.as_str() {
                     "yolo" => {
                         let raw = buf.chunk().to_f32_vec()?;
                         // infer grid from input info: dims minor-first
@@ -307,16 +347,16 @@ impl Element for TensorDecoder {
                 }
                 Chunk::from_f32(&data)
             }
-            Mode::DirectVideo => {
+            DecoderMode::DirectVideo => {
                 // render boxes onto a transparent (black) canvas
                 let boxes = decode_boxes(buf.chunk())?;
-                let mut canvas = vec![0u8; self.width * self.height * 3];
+                let mut canvas = vec![0u8; self.props.width * self.props.height * 3];
                 for b in &boxes {
-                    draw_box(&mut canvas, self.width, self.height, b);
+                    draw_box(&mut canvas, self.props.width, self.props.height, b);
                 }
                 Chunk::from_vec(canvas)
             }
-            Mode::FlatBuf => {
+            DecoderMode::FlatBuf => {
                 // framed binary: [n_tensors][len_i...][payload_i...]
                 let mut out: Vec<u8> = Vec::new();
                 out.extend((buf.chunks.len() as u32).to_le_bytes());

@@ -37,7 +37,8 @@
 use std::time::{Duration, Instant};
 
 use crate::devices::DeviceClass;
-use crate::element::{Ctx, Element, Flow, Item};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::metrics::stats::Domain;
 use crate::nnfw::{Accelerator, CustomNnfw, Nnfw, PassthroughNnfw, XlaNnfw};
@@ -47,29 +48,137 @@ use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
 /// would otherwise balloon memory).
 pub const MAX_BATCH: usize = 64;
 
+/// NNFW sub-plugin family executing a [`TensorFilter`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Framework {
+    /// AOT-compiled artifacts through the shared model pool.
+    #[default]
+    Xla,
+    /// A function registered with [`crate::nnfw::register_custom`].
+    Custom,
+    /// Identity (testing).
+    Passthrough,
+}
+
+impl Framework {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "xla" => Framework::Xla,
+            "custom" => Framework::Custom,
+            "passthrough" => Framework::Passthrough,
+            other => {
+                return Err(Error::Property {
+                    key: "framework".into(),
+                    value: other.into(),
+                    reason: "xla|custom|passthrough".into(),
+                })
+            }
+        })
+    }
+}
+
+/// Typed properties of [`TensorFilter`].
+#[derive(Debug, Clone)]
+pub struct TensorFilterProps {
+    /// Sub-plugin family (`framework`).
+    pub framework: Framework,
+    /// Artifact name (xla) or registered function name (custom)
+    /// (`model`).
+    pub model: String,
+    /// Execution device (`accelerator=cpu|npu`).
+    pub accelerator: Accelerator,
+    /// E3 hardware class throttle (`device-class=a|b|c`).
+    pub device_class: DeviceClass,
+    /// Max frames per stacked dispatch (`batch`, 1..=[`MAX_BATCH`]).
+    pub batch: usize,
+    /// Max wait for batch stragglers (`latency-budget`, milliseconds).
+    pub latency_budget: Duration,
+}
+
+impl Default for TensorFilterProps {
+    fn default() -> Self {
+        Self {
+            framework: Framework::Xla,
+            model: String::new(),
+            accelerator: Accelerator::Cpu,
+            device_class: DeviceClass::Pc,
+            batch: 1,
+            latency_budget: Duration::ZERO,
+        }
+    }
+}
+
+impl TensorFilterProps {
+    fn effective_batch(&self) -> usize {
+        self.batch.max(1)
+    }
+}
+
+impl Props for TensorFilterProps {
+    const FACTORY: &'static str = "tensor_filter";
+    const KEYS: &'static [&'static str] = &[
+        "framework",
+        "model",
+        "accelerator",
+        "device-class",
+        "batch",
+        "latency-budget",
+    ];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "framework" => self.framework = Framework::parse(value)?,
+            "model" => self.model = value.to_string(),
+            "accelerator" => self.accelerator = Accelerator::parse(value)?,
+            "device-class" => self.device_class = DeviceClass::parse(value)?,
+            "batch" => {
+                let n: usize = value.parse().map_err(|_| Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "expected integer".into(),
+                })?;
+                if n == 0 || n > MAX_BATCH {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: format!("batch must be in 1..={MAX_BATCH}"),
+                    });
+                }
+                self.batch = n;
+            }
+            "latency-budget" => {
+                let ms: f64 = value.parse().map_err(|_| Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "expected milliseconds".into(),
+                })?;
+                if ms.is_nan() || ms < 0.0 {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: "latency budget must be >= 0".into(),
+                    });
+                }
+                self.latency_budget = Duration::from_secs_f64(ms / 1e3);
+            }
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorFilter::from_props(self)?))
+    }
+}
+
 pub struct TensorFilter {
-    framework: String,
-    model_name: String,
-    accelerator: Accelerator,
-    class: DeviceClass,
-    batch: usize,
-    latency_budget: Duration,
+    props: TensorFilterProps,
     plugin: Option<Box<dyn Nnfw>>,
-    out_fps: u64,
 }
 
 impl TensorFilter {
     pub fn new() -> Self {
-        Self {
-            framework: "xla".to_string(),
-            model_name: String::new(),
-            accelerator: Accelerator::Cpu,
-            class: DeviceClass::Pc,
-            batch: 1,
-            latency_budget: Duration::ZERO,
-            plugin: None,
-            out_fps: 0,
-        }
+        Self::from_props(TensorFilterProps::default()).expect("defaults are valid")
     }
 
     /// Drain up to `batch - 1` additional ready frames from the input
@@ -77,8 +186,8 @@ impl TensorFilter {
     /// is not a pad-0 buffer (EOS in particular) is pushed back for the
     /// scheduler.
     fn gather_batch(&self, frames: &mut Vec<Buffer>, ctx: &mut Ctx) {
-        let deadline = Instant::now() + self.latency_budget;
-        while frames.len() < self.batch {
+        let deadline = Instant::now() + self.props.latency_budget;
+        while frames.len() < self.props.effective_batch() {
             match ctx.try_pull_input() {
                 Some((0, Item::Buffer(b))) => frames.push(b),
                 Some((pad, item)) => {
@@ -104,28 +213,23 @@ impl TensorFilter {
     }
 
     fn load_plugin(&mut self, in_infos: &[TensorInfo]) -> Result<()> {
-        let plugin: Box<dyn Nnfw> = match self.framework.as_str() {
-            "xla" => Box::new(XlaNnfw::load(
-                &self.model_name,
-                self.accelerator,
-                self.class,
+        let plugin: Box<dyn Nnfw> = match self.props.framework {
+            Framework::Xla => Box::new(XlaNnfw::load(
+                &self.props.model,
+                self.props.accelerator,
+                self.props.device_class,
             )?),
-            "custom" => Box::new(CustomNnfw::load(&self.model_name)?),
-            "passthrough" => Box::new(PassthroughNnfw {
+            Framework::Custom => Box::new(CustomNnfw::load(&self.props.model)?),
+            Framework::Passthrough => Box::new(PassthroughNnfw {
                 info: in_infos.to_vec(),
             }),
-            other => {
-                return Err(Error::Negotiation(format!(
-                    "tensor_filter: unknown framework {other:?}"
-                )))
-            }
         };
         // validate input compatibility (element count + dtype per tensor)
         let expect = plugin.inputs();
         if expect.len() != in_infos.len() {
             return Err(Error::Negotiation(format!(
                 "tensor_filter {}: model wants {} input tensors, caps carry {}",
-                self.model_name,
+                self.props.model,
                 expect.len(),
                 in_infos.len()
             )));
@@ -134,13 +238,13 @@ impl TensorFilter {
             if have.dtype != want.dtype {
                 return Err(Error::Negotiation(format!(
                     "tensor_filter {}: input dtype {} != model {}",
-                    self.model_name, have.dtype, want.dtype
+                    self.props.model, have.dtype, want.dtype
                 )));
             }
             if have.dims.num_elements() != want.dims.num_elements() {
                 return Err(Error::Negotiation(format!(
                     "tensor_filter {}: input {} has {} elements, model wants {} ({})",
-                    self.model_name,
+                    self.props.model,
                     have.dims,
                     have.dims.num_elements(),
                     want.dims.num_elements(),
@@ -159,69 +263,46 @@ impl Default for TensorFilter {
     }
 }
 
+impl FromProps for TensorFilter {
+    type Props = TensorFilterProps;
+
+    fn from_props(props: TensorFilterProps) -> Result<Self> {
+        // same invariant as the string front-end: batch in 1..=MAX_BATCH
+        if props.batch == 0 || props.batch > MAX_BATCH {
+            return Err(Error::Property {
+                key: "batch".into(),
+                value: props.batch.to_string(),
+                reason: format!("batch must be in 1..={MAX_BATCH}"),
+            });
+        }
+        Ok(Self {
+            props,
+            plugin: None,
+        })
+    }
+}
+
 impl Element for TensorFilter {
     fn type_name(&self) -> &'static str {
         "tensor_filter"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "framework" => self.framework = value.to_string(),
-            "model" => self.model_name = value.to_string(),
-            "accelerator" => self.accelerator = Accelerator::parse(value)?,
-            "device-class" => self.class = DeviceClass::parse(value)?,
-            "batch" => {
-                let n: usize = value.parse().map_err(|_| Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "expected integer".into(),
-                })?;
-                if n == 0 || n > MAX_BATCH {
-                    return Err(Error::Property {
-                        key: key.into(),
-                        value: value.into(),
-                        reason: format!("batch must be in 1..={MAX_BATCH}"),
-                    });
-                }
-                self.batch = n;
-            }
-            "latency-budget" => {
-                let ms: f64 = value.parse().map_err(|_| Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "expected milliseconds".into(),
-                })?;
-                if !(ms >= 0.0) {
-                    return Err(Error::Property {
-                        key: key.into(),
-                        value: value.into(),
-                        reason: "latency budget must be >= 0".into(),
-                    });
-                }
-                self.latency_budget = Duration::from_secs_f64(ms / 1e3);
-            }
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of tensor_filter".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     /// A batching filter needs channel headroom to aggregate from.
     fn preferred_input_capacity(&self) -> usize {
-        if self.batch > 1 {
-            self.batch * 2
+        let batch = self.props.effective_batch();
+        if batch > 1 {
+            batch * 2
         } else {
             1
         }
     }
 
     fn domain(&self) -> Domain {
-        if self.accelerator == Accelerator::Npu {
+        if self.props.accelerator == Accelerator::Npu {
             Domain::Npu
         } else {
             Domain::Cpu
@@ -239,7 +320,6 @@ impl Element for TensorFilter {
             }
         };
         self.load_plugin(&in_infos)?;
-        self.out_fps = fps;
         let outs = self.plugin.as_ref().unwrap().outputs();
         let caps = if outs.len() == 1 {
             Caps::Tensor {
@@ -259,15 +339,16 @@ impl Element for TensorFilter {
         let Item::Buffer(buf) = item else {
             return Ok(Flow::Continue);
         };
+        let batch = self.props.effective_batch();
+        let mut frames = Vec::with_capacity(batch);
+        frames.push(buf);
+        if batch > 1 {
+            self.gather_batch(&mut frames, ctx);
+        }
         let plugin = self
             .plugin
             .as_ref()
             .ok_or_else(|| Error::element("tensor_filter", "not negotiated"))?;
-        let mut frames = Vec::with_capacity(self.batch);
-        frames.push(buf);
-        if self.batch > 1 {
-            self.gather_batch(&mut frames, ctx);
-        }
         let chunk_refs: Vec<Vec<&Chunk>> = frames
             .iter()
             .map(|b| b.chunks.iter().collect())
@@ -276,13 +357,13 @@ impl Element for TensorFilter {
             chunk_refs.iter().map(|v| v.as_slice()).collect();
         let outs = plugin.invoke_batch(&frame_refs).map_err(|e| {
             Error::element(
-                format!("tensor_filter({})", self.model_name),
+                format!("tensor_filter({})", self.props.model),
                 e.to_string(),
             )
         })?;
         if outs.len() != frames.len() {
             return Err(Error::element(
-                format!("tensor_filter({})", self.model_name),
+                format!("tensor_filter({})", self.props.model),
                 format!("batch of {} produced {} results", frames.len(), outs.len()),
             ));
         }
@@ -321,9 +402,12 @@ mod tests {
 
     #[test]
     fn xla_filter_end_to_end() {
-        let mut f = TensorFilter::new();
-        f.set_property("framework", "xla").unwrap();
-        f.set_property("model", "ars_a_opt").unwrap();
+        let mut f = TensorFilter::from_props(TensorFilterProps {
+            framework: Framework::Xla,
+            model: "ars_a_opt".into(),
+            ..Default::default()
+        })
+        .unwrap();
         // ars_a: (1,128,3) f32 -> minor-first stream dims 3:128:1
         let caps = Caps::tensor(DType::F32, [3, 128, 1], 10.0);
         let out_caps = f.negotiate(&[caps], 1).unwrap();
@@ -355,6 +439,7 @@ mod tests {
             .is_err());
         assert!(f.set_property("batch", "x").is_err());
         assert!(f.set_property("latency-budget", "-1").is_err());
+        assert!(f.set_property("framework", "tensorflow").is_err());
     }
 
     #[test]

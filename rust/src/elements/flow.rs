@@ -3,30 +3,73 @@
 //!
 //! These are the "dynamic flow control" components the paper lists as
 //! product requirements (§III): valves and selectors let application
-//! threads steer flows; `tensor_if` (see [`super::tensor_if`]) steers on
-//! tensor values without application involvement.
+//! threads steer flows — before start through the shared control handles
+//! ([`Valve::control`], [`InputSelector::control`]), and on a playing
+//! pipeline through the scheduler's control channel
+//! ([`Running::set_valve`], [`Running::select_input`],
+//! [`Running::select_output`]); `tensor_if` (see [`super::tensor_if`])
+//! steers on tensor values without application involvement.
+//!
+//! [`Running::set_valve`]: crate::pipeline::Running::set_valve
+//! [`Running::select_input`]: crate::pipeline::Running::select_input
+//! [`Running::select_output`]: crate::pipeline::Running::select_output
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::element::{Ctx, Delivery, Element, Flow, Item, PadSpec};
-use crate::error::{Error, Result};
+use crate::element::props::{parse_bool, unknown_property};
+use crate::element::{Ctx, Delivery, Element, Flow, FromProps, Item, PadSpec, Props};
+use crate::error::Result;
 use crate::tensor::Caps;
 
 use super::sources::parse_usize;
 
+/// Typed properties of [`Queue`].
+#[derive(Debug, Clone)]
+pub struct QueueProps {
+    /// Input-channel capacity (`max-size-buffers`, default 16).
+    pub max_size_buffers: usize,
+    /// Drop new buffers when full instead of blocking the producer
+    /// (`leaky=downstream`).
+    pub leaky: bool,
+}
+
+impl Default for QueueProps {
+    fn default() -> Self {
+        Self {
+            max_size_buffers: 16,
+            leaky: false,
+        }
+    }
+}
+
+impl Props for QueueProps {
+    const FACTORY: &'static str = "queue";
+    const KEYS: &'static [&'static str] = &["max-size-buffers", "leaky"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "max-size-buffers" => self.max_size_buffers = parse_usize(key, value)?.max(1),
+            "leaky" => self.leaky = value == "downstream" || value == "true" || value == "2",
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(Queue::from_props(self)?))
+    }
+}
+
 /// Decouples producer from consumer by raising the input-channel capacity.
-/// Properties: `max-size-buffers` (default 16), `leaky` (drop when full).
 pub struct Queue {
-    capacity: usize,
-    leaky: bool,
+    props: QueueProps,
 }
 
 impl Queue {
     pub fn new() -> Self {
         Self {
-            capacity: 16,
-            leaky: false,
+            props: QueueProps::default(),
         }
     }
 }
@@ -37,32 +80,31 @@ impl Default for Queue {
     }
 }
 
+impl FromProps for Queue {
+    type Props = QueueProps;
+
+    fn from_props(mut props: QueueProps) -> Result<Self> {
+        // same clamp as the string front-end: capacity is at least 1
+        props.max_size_buffers = props.max_size_buffers.max(1);
+        Ok(Self { props })
+    }
+}
+
 impl Element for Queue {
     fn type_name(&self) -> &'static str {
         "queue"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "max-size-buffers" => self.capacity = parse_usize(key, value)?.max(1),
-            "leaky" => self.leaky = value == "downstream" || value == "true" || value == "2",
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of queue".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn preferred_input_capacity(&self) -> usize {
-        self.capacity
+        self.props.max_size_buffers
     }
 
     fn input_delivery(&self) -> Delivery {
-        if self.leaky {
+        if self.props.leaky {
             Delivery::Leaky
         } else {
             Delivery::Blocking
@@ -81,6 +123,23 @@ impl Element for Queue {
     }
 }
 
+/// Typed properties of [`Tee`] (none).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TeeProps;
+
+impl Props for TeeProps {
+    const FACTORY: &'static str = "tee";
+    const KEYS: &'static [&'static str] = &[];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        Err(unknown_property(Self::FACTORY, Self::KEYS, key, value))
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(Tee::from_props(self)?))
+    }
+}
+
 /// Fans one stream out to N branches (buffers are shared, not copied:
 /// chunks are refcounted).
 pub struct Tee;
@@ -94,6 +153,14 @@ impl Tee {
 impl Default for Tee {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for Tee {
+    type Props = TeeProps;
+
+    fn from_props(_props: TeeProps) -> Result<Self> {
+        Ok(Tee)
     }
 }
 
@@ -135,17 +202,41 @@ impl ValveControl {
     }
 }
 
-/// Drops all buffers while closed. Properties: `drop` (initial state,
-/// `true` = dropping). Use [`Valve::control`] for runtime switching.
+/// Typed properties of [`Valve`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ValveProps {
+    /// Start in the dropping state (`drop=true`; default passes).
+    pub drop: bool,
+}
+
+impl Props for ValveProps {
+    const FACTORY: &'static str = "valve";
+    const KEYS: &'static [&'static str] = &["drop"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "drop" => self.drop = parse_bool(value),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(Valve::from_props(self)?))
+    }
+}
+
+/// Drops all buffers while closed. Switch at runtime with
+/// [`Valve::control`] (pre-start handle) or
+/// [`Running::set_valve`](crate::pipeline::Running::set_valve)
+/// (control channel of a playing pipeline).
 pub struct Valve {
     control: ValveControl,
 }
 
 impl Valve {
     pub fn new() -> Self {
-        let control = ValveControl::default();
-        control.set_open(true);
-        Self { control }
+        Self::from_props(ValveProps::default()).expect("defaults are valid")
     }
 
     pub fn control(&self) -> ValveControl {
@@ -159,23 +250,28 @@ impl Default for Valve {
     }
 }
 
+impl FromProps for Valve {
+    type Props = ValveProps;
+
+    fn from_props(props: ValveProps) -> Result<Self> {
+        let control = ValveControl::default();
+        control.set_open(!props.drop);
+        Ok(Self { control })
+    }
+}
+
 impl Element for Valve {
     fn type_name(&self) -> &'static str {
         "valve"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "drop" => {
-                self.control.set_open(!(value == "true" || value == "1"));
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of valve".into(),
-            }),
-        }
+        let mut props = ValveProps {
+            drop: !self.control.is_open(),
+        };
+        props.set(key, value)?;
+        self.control.set_open(!props.drop);
+        Ok(())
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -194,14 +290,46 @@ impl Element for Valve {
     }
 }
 
+/// Typed properties of [`CapsFilter`].
+#[derive(Debug, Clone)]
+pub struct CapsFilterProps {
+    /// The restriction imposed on the link.
+    pub caps: Caps,
+}
+
+impl Default for CapsFilterProps {
+    fn default() -> Self {
+        Self { caps: Caps::Any }
+    }
+}
+
+impl Props for CapsFilterProps {
+    const FACTORY: &'static str = "capsfilter";
+    const KEYS: &'static [&'static str] = &["caps"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "caps" => self.caps = Caps::parse(value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(CapsFilter::from_props(self)?))
+    }
+}
+
 /// Restricts caps on a link (`video/x-raw,format=RGB,...` in launch syntax).
 pub struct CapsFilter {
-    caps: Caps,
+    props: CapsFilterProps,
 }
 
 impl CapsFilter {
     pub fn new() -> Self {
-        Self { caps: Caps::Any }
+        Self {
+            props: CapsFilterProps::default(),
+        }
     }
 }
 
@@ -211,35 +339,33 @@ impl Default for CapsFilter {
     }
 }
 
+impl FromProps for CapsFilter {
+    type Props = CapsFilterProps;
+
+    fn from_props(props: CapsFilterProps) -> Result<Self> {
+        Ok(Self { props })
+    }
+}
+
 impl Element for CapsFilter {
     fn type_name(&self) -> &'static str {
         "capsfilter"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "caps" => {
-                self.caps = Caps::parse(value)?;
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of capsfilter".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
-        let fixed = in_caps[0].intersect(&self.caps)?;
+        let fixed = in_caps[0].intersect(&self.props.caps)?;
         Ok(vec![fixed; n_srcs.max(1)])
     }
 
     fn proposed_caps(&self) -> Option<Caps> {
-        if self.caps == Caps::Any {
+        if self.props.caps == Caps::Any {
             None
         } else {
-            Some(self.caps.clone())
+            Some(self.props.caps.clone())
         }
     }
 
@@ -265,6 +391,54 @@ impl SelectorControl {
     }
 }
 
+/// Typed properties of [`InputSelector`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InputSelectorProps {
+    /// Initially active pad (`active-pad`).
+    pub active_pad: usize,
+}
+
+impl Props for InputSelectorProps {
+    const FACTORY: &'static str = "input-selector";
+    const KEYS: &'static [&'static str] = &["active-pad"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "active-pad" => self.active_pad = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(InputSelector::from_props(self)?))
+    }
+}
+
+/// Typed properties of [`OutputSelector`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OutputSelectorProps {
+    /// Initially active pad (`active-pad`).
+    pub active_pad: usize,
+}
+
+impl Props for OutputSelectorProps {
+    const FACTORY: &'static str = "output-selector";
+    const KEYS: &'static [&'static str] = &["active-pad"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "active-pad" => self.active_pad = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(OutputSelector::from_props(self)?))
+    }
+}
+
 /// N inputs, 1 output: forwards only the active input pad.
 pub struct InputSelector {
     control: SelectorControl,
@@ -272,9 +446,7 @@ pub struct InputSelector {
 
 impl InputSelector {
     pub fn new() -> Self {
-        Self {
-            control: SelectorControl::default(),
-        }
+        Self::from_props(InputSelectorProps::default()).expect("defaults are valid")
     }
 
     pub fn control(&self) -> SelectorControl {
@@ -288,6 +460,16 @@ impl Default for InputSelector {
     }
 }
 
+impl FromProps for InputSelector {
+    type Props = InputSelectorProps;
+
+    fn from_props(props: InputSelectorProps) -> Result<Self> {
+        let control = SelectorControl::default();
+        control.select(props.active_pad);
+        Ok(Self { control })
+    }
+}
+
 impl Element for InputSelector {
     fn type_name(&self) -> &'static str {
         "input-selector"
@@ -298,24 +480,19 @@ impl Element for InputSelector {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "active-pad" => {
-                self.control.select(parse_usize(key, value)?);
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of input-selector".into(),
-            }),
-        }
+        let mut props = InputSelectorProps {
+            active_pad: self.control.selected(),
+        };
+        props.set(key, value)?;
+        self.control.select(props.active_pad);
+        Ok(())
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
         // all inputs must be mutually compatible
         for c in in_caps.iter().skip(1) {
             if !in_caps[0].compatible(c) {
-                return Err(Error::Negotiation(format!(
+                return Err(crate::error::Error::Negotiation(format!(
                     "input-selector inputs disagree: {} vs {}",
                     in_caps[0], c
                 )));
@@ -343,9 +520,7 @@ pub struct OutputSelector {
 
 impl OutputSelector {
     pub fn new() -> Self {
-        Self {
-            control: SelectorControl::default(),
-        }
+        Self::from_props(OutputSelectorProps::default()).expect("defaults are valid")
     }
 
     pub fn control(&self) -> SelectorControl {
@@ -359,6 +534,16 @@ impl Default for OutputSelector {
     }
 }
 
+impl FromProps for OutputSelector {
+    type Props = OutputSelectorProps;
+
+    fn from_props(props: OutputSelectorProps) -> Result<Self> {
+        let control = SelectorControl::default();
+        control.select(props.active_pad);
+        Ok(Self { control })
+    }
+}
+
 impl Element for OutputSelector {
     fn type_name(&self) -> &'static str {
         "output-selector"
@@ -369,17 +554,12 @@ impl Element for OutputSelector {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "active-pad" => {
-                self.control.select(parse_usize(key, value)?);
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of output-selector".into(),
-            }),
-        }
+        let mut props = OutputSelectorProps {
+            active_pad: self.control.selected(),
+        };
+        props.set(key, value)?;
+        self.control.select(props.active_pad);
+        Ok(())
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {

@@ -5,33 +5,83 @@
 //! mux/demux these *do* touch payload bytes (a single contiguous tensor
 //! must be produced).
 
-use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, Chunk, Dims, TensorInfo, MAX_TENSORS};
 
 use super::sources::parse_usize;
 use super::sync::{SyncPolicy, Synchronizer};
 
+/// Typed properties of [`TensorMerge`].
+#[derive(Debug, Clone, Copy)]
+pub struct TensorMergeProps {
+    /// Concatenation axis, minor-first (`option`).
+    pub axis: usize,
+    /// Stream synchronization policy (`sync-mode`).
+    pub sync_mode: SyncPolicy,
+}
+
+impl Default for TensorMergeProps {
+    fn default() -> Self {
+        Self {
+            axis: 0,
+            sync_mode: SyncPolicy::Slowest,
+        }
+    }
+}
+
+impl Props for TensorMergeProps {
+    const FACTORY: &'static str = "tensor_merge";
+    const KEYS: &'static [&'static str] = &["mode", "option", "sync-mode"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "mode" => {
+                if value != "linear" {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: "only mode=linear supported".into(),
+                    });
+                }
+            }
+            "option" => self.axis = parse_usize(key, value)?,
+            "sync-mode" | "sync_mode" => self.sync_mode = SyncPolicy::parse(value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorMerge::from_props(self)?))
+    }
+}
+
 /// N×`other/tensor` → 1×`other/tensor`, concatenated along `option` axis.
-/// Properties: `mode=linear` (only mode, NNStreamer-compatible),
-/// `option=<axis>`, `sync-mode`.
 pub struct TensorMerge {
-    axis: usize,
-    policy: SyncPolicy,
+    props: TensorMergeProps,
     sync: Option<Synchronizer>,
     in_infos: Vec<TensorInfo>,
     out_info: Option<TensorInfo>,
 }
 
-impl TensorMerge {
-    pub fn new() -> Self {
-        Self {
-            axis: 0,
-            policy: SyncPolicy::Slowest,
+impl FromProps for TensorMerge {
+    type Props = TensorMergeProps;
+
+    fn from_props(props: TensorMergeProps) -> Result<Self> {
+        Ok(Self {
+            props,
             sync: None,
             in_infos: Vec::new(),
             out_info: None,
-        }
+        })
+    }
+}
+
+impl TensorMerge {
+    pub fn new() -> Self {
+        Self::from_props(TensorMergeProps::default()).expect("defaults are valid")
     }
 
     /// Compute the merged TensorInfo for concatenation along `axis`.
@@ -144,31 +194,7 @@ impl Element for TensorMerge {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "mode" => {
-                if value != "linear" {
-                    return Err(Error::Property {
-                        key: key.into(),
-                        value: value.into(),
-                        reason: "only mode=linear supported".into(),
-                    });
-                }
-                Ok(())
-            }
-            "option" => {
-                self.axis = parse_usize(key, value)?;
-                Ok(())
-            }
-            "sync-mode" | "sync_mode" => {
-                self.policy = SyncPolicy::parse(value)?;
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of tensor_merge".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -187,10 +213,10 @@ impl Element for TensorMerge {
                 }
             }
         }
-        let out = Self::merged_info(&infos, self.axis)?;
+        let out = Self::merged_info(&infos, self.props.axis)?;
         self.in_infos = infos;
         self.out_info = Some(out.clone());
-        self.sync = Some(Synchronizer::new(self.policy, in_caps.len()));
+        self.sync = Some(Synchronizer::new(self.props.sync_mode, in_caps.len()));
         Ok(vec![
             Caps::Tensor {
                 info: out,
@@ -218,7 +244,7 @@ impl Element for TensorMerge {
                 .zip(&self.in_infos)
                 .map(|(b, i)| (b.chunk().as_bytes(), i))
                 .collect();
-            let merged = concat_axis(&datas, self.axis, out_info);
+            let merged = concat_axis(&datas, self.props.axis, out_info);
             let mut out = Buffer::single(pts, Chunk::from_vec(merged));
             out.seq = seq;
             ctx.push(0, out)?;
@@ -227,24 +253,62 @@ impl Element for TensorMerge {
     }
 }
 
+/// Typed properties of [`TensorSplit`].
+#[derive(Debug, Clone, Default)]
+pub struct TensorSplitProps {
+    /// Split axis, minor-first (`option`).
+    pub axis: usize,
+    /// Per-pad axis sizes (`tensorseg=3:3:2`); empty = equal split.
+    pub tensorseg: Vec<usize>,
+}
+
+impl Props for TensorSplitProps {
+    const FACTORY: &'static str = "tensor_split";
+    const KEYS: &'static [&'static str] = &["option", "tensorseg"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "option" => self.axis = parse_usize(key, value)?,
+            "tensorseg" => {
+                self.tensorseg = value
+                    .split(':')
+                    .map(|v| parse_usize(key, v))
+                    .collect::<Result<_>>()?
+            }
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorSplit::from_props(self)?))
+    }
+}
+
 /// 1×`other/tensor` → N×`other/tensor`, sliced along `option` axis with
 /// per-pad sizes from `tensorseg` (e.g. `tensorseg=3:3:2` splits axis into
 /// 3,3,2). Default: equal split across attached pads.
 pub struct TensorSplit {
-    axis: usize,
-    seg: Vec<usize>,
+    props: TensorSplitProps,
     in_info: Option<TensorInfo>,
     out_sizes: Vec<usize>,
 }
 
-impl TensorSplit {
-    pub fn new() -> Self {
-        Self {
-            axis: 0,
-            seg: Vec::new(),
+impl FromProps for TensorSplit {
+    type Props = TensorSplitProps;
+
+    fn from_props(props: TensorSplitProps) -> Result<Self> {
+        Ok(Self {
+            props,
             in_info: None,
             out_sizes: Vec::new(),
-        }
+        })
+    }
+}
+
+impl TensorSplit {
+    pub fn new() -> Self {
+        Self::from_props(TensorSplitProps::default()).expect("defaults are valid")
     }
 }
 
@@ -264,24 +328,7 @@ impl Element for TensorSplit {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "option" => {
-                self.axis = parse_usize(key, value)?;
-                Ok(())
-            }
-            "tensorseg" => {
-                self.seg = value
-                    .split(':')
-                    .map(|v| parse_usize(key, v))
-                    .collect::<Result<_>>()?;
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of tensor_split".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -291,22 +338,22 @@ impl Element for TensorSplit {
                 in_caps[0]
             )));
         };
-        let axis_dim = info.dims.dim_or_1(self.axis);
-        let sizes: Vec<usize> = if !self.seg.is_empty() {
-            if self.seg.iter().sum::<usize>() != axis_dim {
+        let axis_dim = info.dims.dim_or_1(self.props.axis);
+        let seg = &self.props.tensorseg;
+        let sizes: Vec<usize> = if !seg.is_empty() {
+            if seg.iter().sum::<usize>() != axis_dim {
                 return Err(Error::Negotiation(format!(
-                    "tensorseg {:?} does not sum to axis dim {axis_dim}",
-                    self.seg
+                    "tensorseg {seg:?} does not sum to axis dim {axis_dim}"
                 )));
             }
-            if self.seg.len() != n_srcs {
+            if seg.len() != n_srcs {
                 return Err(Error::Negotiation(format!(
                     "tensorseg has {} parts but {} src pads attached",
-                    self.seg.len(),
+                    seg.len(),
                     n_srcs
                 )));
             }
-            self.seg.clone()
+            seg.clone()
         } else {
             if n_srcs == 0 || axis_dim % n_srcs != 0 {
                 return Err(Error::Negotiation(format!(
@@ -320,7 +367,7 @@ impl Element for TensorSplit {
         Ok(sizes
             .iter()
             .map(|&a| Caps::Tensor {
-                info: TensorInfo::new(info.dtype, info.dims.with_dim(self.axis, a)),
+                info: TensorInfo::new(info.dtype, info.dims.with_dim(self.props.axis, a)),
                 fps_millis: *fps_millis,
             })
             .collect())
@@ -334,7 +381,8 @@ impl Element for TensorSplit {
             .in_info
             .as_ref()
             .ok_or_else(|| Error::element("tensor_split", "not negotiated"))?;
-        let parts = split_axis(buf.chunk().as_bytes(), info, self.axis, &self.out_sizes);
+        let parts =
+            split_axis(buf.chunk().as_bytes(), info, self.props.axis, &self.out_sizes);
         for (i, part) in parts.into_iter().enumerate() {
             let mut out = Buffer::single(buf.pts_ns, Chunk::from_vec(part));
             out.seq = buf.seq;

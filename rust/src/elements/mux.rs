@@ -2,25 +2,62 @@
 //! `other/tensors` stream and back (§III). Zero-copy: chunks move, payloads
 //! don't.
 
-use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, MAX_TENSORS};
 
 use super::sync::{SyncPolicy, Synchronizer};
 
-/// N×`other/tensor` → 1×`other/tensors`. Property: `sync-mode`
-/// (slowest|fastest|base[:k]).
+/// Typed properties of [`TensorMux`].
+#[derive(Debug, Clone, Copy)]
+pub struct TensorMuxProps {
+    /// Stream synchronization policy (`sync-mode=slowest|fastest|base[:k]`).
+    pub sync_mode: SyncPolicy,
+}
+
+impl Default for TensorMuxProps {
+    fn default() -> Self {
+        Self {
+            sync_mode: SyncPolicy::Slowest,
+        }
+    }
+}
+
+impl Props for TensorMuxProps {
+    const FACTORY: &'static str = "tensor_mux";
+    const KEYS: &'static [&'static str] = &["sync-mode"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "sync-mode" | "sync_mode" => self.sync_mode = SyncPolicy::parse(value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorMux::from_props(self)?))
+    }
+}
+
+/// N×`other/tensor` → 1×`other/tensors`.
 pub struct TensorMux {
-    policy: SyncPolicy,
+    props: TensorMuxProps,
     sync: Option<Synchronizer>,
 }
 
 impl TensorMux {
     pub fn new() -> Self {
-        Self {
-            policy: SyncPolicy::Slowest,
-            sync: None,
-        }
+        Self::from_props(TensorMuxProps::default()).expect("defaults are valid")
+    }
+}
+
+impl FromProps for TensorMux {
+    type Props = TensorMuxProps;
+
+    fn from_props(props: TensorMuxProps) -> Result<Self> {
+        Ok(Self { props, sync: None })
     }
 }
 
@@ -40,17 +77,7 @@ impl Element for TensorMux {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "sync-mode" | "sync_mode" => {
-                self.policy = SyncPolicy::parse(value)?;
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of tensor_mux".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -82,9 +109,9 @@ impl Element for TensorMux {
                 infos.len()
             )));
         }
-        self.sync = Some(Synchronizer::new(self.policy, in_caps.len()));
+        self.sync = Some(Synchronizer::new(self.props.sync_mode, in_caps.len()));
         // output rate depends on the policy; expose variable (0) unless base
-        let out_fps = match self.policy {
+        let out_fps = match self.props.sync_mode {
             SyncPolicy::Base(k) => in_caps
                 .get(k)
                 .and_then(|c| c.fps())
@@ -118,12 +145,37 @@ impl Element for TensorMux {
     }
 }
 
+/// Typed properties of [`TensorDemux`] (none).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TensorDemuxProps;
+
+impl Props for TensorDemuxProps {
+    const FACTORY: &'static str = "tensor_demux";
+    const KEYS: &'static [&'static str] = &[];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        Err(unknown_property(Self::FACTORY, Self::KEYS, key, value))
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorDemux::from_props(self)?))
+    }
+}
+
 /// 1×`other/tensors` → N×`other/tensor` (zero-copy unbundle).
 pub struct TensorDemux;
 
 impl TensorDemux {
     pub fn new() -> Self {
         TensorDemux
+    }
+}
+
+impl FromProps for TensorDemux {
+    type Props = TensorDemuxProps;
+
+    fn from_props(_props: TensorDemuxProps) -> Result<Self> {
+        Ok(TensorDemux)
     }
 }
 

@@ -4,33 +4,69 @@
 //! timestamps: excess frames are dropped, gaps are filled by duplicating
 //! the previous frame (when `throttle=false`, only dropping happens).
 
-use crate::element::{Ctx, Element, Flow, Item};
+use crate::element::props::{parse_bool, unknown_property};
+use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps};
 
 use super::sources::parse_f64;
 
+/// Typed properties of [`TensorRate`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TensorRateProps {
+    /// Target rate, frames/s; 0 keeps the input rate (`framerate`).
+    pub framerate: f64,
+    /// Duplicate frames to fill gaps on slow inputs (`throttle`).
+    pub throttle: bool,
+}
+
+impl Props for TensorRateProps {
+    const FACTORY: &'static str = "tensor_rate";
+    const KEYS: &'static [&'static str] = &["framerate", "throttle"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "framerate" => {
+                // accept "15" or "15/1"
+                let v = value.split('/').next().unwrap_or(value);
+                self.framerate = parse_f64(key, v)?;
+            }
+            "throttle" => self.throttle = parse_bool(value),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorRate::from_props(self)?))
+    }
+}
+
 pub struct TensorRate {
-    /// Target rate (frames/s); 0 keeps the input rate (passthrough).
-    framerate: f64,
-    /// Duplicate frames to maintain the target rate on slow inputs.
-    fill_gaps: bool,
+    props: TensorRateProps,
     next_slot: u64,
     last: Option<Buffer>,
 }
 
-impl TensorRate {
-    pub fn new() -> Self {
-        Self {
-            framerate: 0.0,
-            fill_gaps: false,
+impl FromProps for TensorRate {
+    type Props = TensorRateProps;
+
+    fn from_props(props: TensorRateProps) -> Result<Self> {
+        Ok(Self {
+            props,
             next_slot: 0,
             last: None,
-        }
+        })
+    }
+}
+
+impl TensorRate {
+    pub fn new() -> Self {
+        Self::from_props(TensorRateProps::default()).expect("defaults are valid")
     }
 
     fn interval_ns(&self) -> u64 {
-        (1e9 / self.framerate.max(1e-9)) as u64
+        (1e9 / self.props.framerate.max(1e-9)) as u64
     }
 }
 
@@ -46,27 +82,11 @@ impl Element for TensorRate {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "framerate" => {
-                // accept "15" or "15/1"
-                let v = value.split('/').next().unwrap_or(value);
-                self.framerate = parse_f64(key, v)?;
-                Ok(())
-            }
-            "throttle" => {
-                self.fill_gaps = value == "true" || value == "1";
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of tensor_rate".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
-        let out = match (&in_caps[0], self.framerate) {
+        let out = match (&in_caps[0], self.props.framerate) {
             (c, r) if r <= 0.0 => c.clone(),
             (Caps::Tensor { info, .. }, r) => Caps::Tensor {
                 info: info.clone(),
@@ -89,7 +109,7 @@ impl Element for TensorRate {
         let Item::Buffer(buf) = item else {
             return Ok(Flow::Continue);
         };
-        if self.framerate <= 0.0 {
+        if self.props.framerate <= 0.0 {
             ctx.push(0, buf)?;
             return Ok(Flow::Continue);
         }
@@ -100,7 +120,7 @@ impl Element for TensorRate {
             return Ok(Flow::Continue);
         }
         // fill gaps by duplicating the previous frame at slot boundaries
-        if self.fill_gaps {
+        if self.props.throttle {
             if let Some(last) = &self.last {
                 while self.next_slot + interval <= buf.pts_ns {
                     let mut dup = last.clone();

@@ -12,7 +12,8 @@ use std::sync::Mutex;
 
 use once_cell::sync::Lazy;
 
-use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::element::props::{parse_bool, unknown_property};
+use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, Chunk, DType, Dims, TensorInfo};
 
@@ -36,22 +37,52 @@ pub fn repo_clear(slot: &str) {
     REPO.lock().unwrap().remove(slot);
 }
 
+/// Typed properties of [`TensorRepoSink`].
+#[derive(Debug, Clone, Default)]
+pub struct TensorRepoSinkProps {
+    /// Repository slot to publish into (`slot`, required).
+    pub slot: String,
+}
+
+impl Props for TensorRepoSinkProps {
+    const FACTORY: &'static str = "tensor_repo_sink";
+    const KEYS: &'static [&'static str] = &["slot"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "slot" => self.slot = value.to_string(),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorRepoSink::from_props(self)?))
+    }
+}
+
 /// Terminal sink that publishes every frame into its named slot.
 pub struct TensorRepoSink {
-    slot: String,
+    props: TensorRepoSinkProps,
 }
 
 impl TensorRepoSink {
     pub fn new() -> Self {
-        Self {
-            slot: String::new(),
-        }
+        Self::from_props(TensorRepoSinkProps::default()).expect("defaults are valid")
     }
 }
 
 impl Default for TensorRepoSink {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for TensorRepoSink {
+    type Props = TensorRepoSinkProps;
+
+    fn from_props(props: TensorRepoSinkProps) -> Result<Self> {
+        Ok(Self { props })
     }
 }
 
@@ -65,21 +96,11 @@ impl Element for TensorRepoSink {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "slot" => {
-                self.slot = value.to_string();
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of tensor_repo_sink".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
-        if self.slot.is_empty() {
+        if self.props.slot.is_empty() {
             return Err(Error::Negotiation("tensor_repo_sink needs slot=".into()));
         }
         Ok(vec![])
@@ -87,59 +108,50 @@ impl Element for TensorRepoSink {
 
     fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<Flow> {
         if let Item::Buffer(buf) = item {
-            repo_store(&self.slot, buf);
+            repo_store(&self.props.slot, buf);
         }
         Ok(Flow::Continue)
     }
 }
 
-/// Source that emits the latest frame of its slot at a fixed rate.
-/// Properties: `slot`, `rate`, `num-buffers`, `dimension`, `type`
-/// (the dimension/type describe the slot's tensors for negotiation and the
-/// zero-filled initial frame emitted before the slot is first written).
-pub struct TensorRepoSrc {
-    slot: String,
-    rate: f64,
-    num_buffers: Option<u64>,
-    info: Option<TensorInfo>,
-    is_live: bool,
-    n: u64,
+/// Typed properties of [`TensorRepoSrc`]. The `info` describes the slot's
+/// tensors for negotiation and the zero-filled initial frame emitted
+/// before the slot is first written (`dimension=`/`type=` in string form).
+#[derive(Debug, Clone)]
+pub struct TensorRepoSrcProps {
+    /// Repository slot to read (`slot`, required).
+    pub slot: String,
+    /// Emission rate, frames/s (`rate`).
+    pub rate: f64,
+    pub num_buffers: Option<u64>,
+    pub is_live: bool,
+    /// Tensor layout of the slot (`dimension` + `type`).
+    pub info: Option<TensorInfo>,
 }
 
-impl TensorRepoSrc {
-    pub fn new() -> Self {
+impl Default for TensorRepoSrcProps {
+    fn default() -> Self {
         Self {
             slot: String::new(),
             rate: 30.0,
             num_buffers: None,
-            info: None,
             is_live: true,
-            n: 0,
+            info: None,
         }
     }
 }
 
-impl Default for TensorRepoSrc {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+impl Props for TensorRepoSrcProps {
+    const FACTORY: &'static str = "tensor_repo_src";
+    const KEYS: &'static [&'static str] =
+        &["slot", "rate", "num-buffers", "is-live", "dimension", "type"];
 
-impl Element for TensorRepoSrc {
-    fn type_name(&self) -> &'static str {
-        "tensor_repo_src"
-    }
-
-    fn sink_pads(&self) -> PadSpec {
-        PadSpec::Fixed(0)
-    }
-
-    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "slot" => self.slot = value.to_string(),
             "rate" => self.rate = parse_f64(key, value)?,
             "num-buffers" => self.num_buffers = Some(parse_usize(key, value)? as u64),
-            "is-live" => self.is_live = value == "true" || value == "1",
+            "is-live" => self.is_live = parse_bool(value),
             "dimension" => {
                 let dims = Dims::parse(value)?;
                 let dtype = self.info.as_ref().map(|i| i.dtype).unwrap_or(DType::F32);
@@ -154,29 +166,68 @@ impl Element for TensorRepoSrc {
                     .unwrap_or_else(|| Dims::new(&[1]));
                 self.info = Some(TensorInfo::new(dtype, dims));
             }
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of tensor_repo_src".into(),
-                })
-            }
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
         }
         Ok(())
     }
 
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorRepoSrc::from_props(self)?))
+    }
+}
+
+/// Source that emits the latest frame of its slot at a fixed rate.
+pub struct TensorRepoSrc {
+    props: TensorRepoSrcProps,
+    n: u64,
+}
+
+impl TensorRepoSrc {
+    pub fn new() -> Self {
+        Self::from_props(TensorRepoSrcProps::default()).expect("defaults are valid")
+    }
+}
+
+impl Default for TensorRepoSrc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FromProps for TensorRepoSrc {
+    type Props = TensorRepoSrcProps;
+
+    fn from_props(props: TensorRepoSrcProps) -> Result<Self> {
+        Ok(Self { props, n: 0 })
+    }
+}
+
+impl Element for TensorRepoSrc {
+    fn type_name(&self) -> &'static str {
+        "tensor_repo_src"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        self.props.set(key, value)
+    }
+
     fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
-        if self.slot.is_empty() {
+        if self.props.slot.is_empty() {
             return Err(Error::Negotiation("tensor_repo_src needs slot=".into()));
         }
         let info = self
+            .props
             .info
             .clone()
             .ok_or_else(|| Error::Negotiation("tensor_repo_src needs dimension=/type=".into()))?;
         Ok(vec![
             Caps::Tensor {
                 info,
-                fps_millis: (self.rate * 1000.0) as u64
+                fps_millis: (self.props.rate * 1000.0) as u64
             };
             n_srcs.max(1)
         ])
@@ -187,27 +238,27 @@ impl Element for TensorRepoSrc {
     }
 
     fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
-        if let Some(max) = self.num_buffers {
+        if let Some(max) = self.props.num_buffers {
             if self.n >= max {
                 return Ok(Flow::Eos);
             }
         }
-        let dur = (1e9 / self.rate.max(0.001)) as u64;
+        let dur = (1e9 / self.props.rate.max(0.001)) as u64;
         let pts = self.n * dur;
-        if self.is_live {
+        if self.props.is_live {
             ctx.sleep_until_pts(pts);
             if ctx.stopped() {
                 return Ok(Flow::Eos);
             }
         }
-        let mut buf = match repo_fetch(&self.slot) {
+        let mut buf = match repo_fetch(&self.props.slot) {
             Some(mut b) => {
                 b.pts_ns = pts;
                 b
             }
             None => {
                 // initial zero frame
-                let info = self.info.as_ref().unwrap();
+                let info = self.props.info.as_ref().unwrap();
                 Buffer::single(pts, Chunk::from_vec(vec![0u8; info.size_bytes()]))
             }
         };

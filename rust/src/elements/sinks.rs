@@ -3,16 +3,43 @@
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::time::Instant;
 
-use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::element::props::{parse_bool, unknown_property};
+use crate::element::{
+    BufferCallback, ControlMsg, Ctx, Element, Flow, FromProps, Item, PadSpec, Props,
+};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps};
 
 use super::sources::parse_usize;
 
+/// Typed properties of [`FakeSink`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FakeSinkProps {
+    /// Request pipeline stop after this many buffers (`num-buffers`).
+    pub num_buffers: Option<u64>,
+}
+
+impl Props for FakeSinkProps {
+    const FACTORY: &'static str = "fakesink";
+    const KEYS: &'static [&'static str] = &["num-buffers"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "num-buffers" => self.num_buffers = Some(parse_usize(key, value)? as u64),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(FakeSink::from_props(self)?))
+    }
+}
+
 /// Discards everything; optionally records end-to-end latency (pts vs
 /// wall-clock against the pipeline epoch) for live pipelines.
 pub struct FakeSink {
-    num_buffers: Option<u64>,
+    props: FakeSinkProps,
     seen: u64,
     /// Sum/max of (arrival wall time − pts) for live latency reporting.
     lat_sum_ns: u64,
@@ -21,12 +48,7 @@ pub struct FakeSink {
 
 impl FakeSink {
     pub fn new() -> Self {
-        Self {
-            num_buffers: None,
-            seen: 0,
-            lat_sum_ns: 0,
-            lat_max_ns: 0,
-        }
+        Self::from_props(FakeSinkProps::default()).expect("defaults are valid")
     }
 
     /// Mean end-to-end latency (only meaningful for live pipelines).
@@ -53,6 +75,19 @@ impl Default for FakeSink {
     }
 }
 
+impl FromProps for FakeSink {
+    type Props = FakeSinkProps;
+
+    fn from_props(props: FakeSinkProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            seen: 0,
+            lat_sum_ns: 0,
+            lat_max_ns: 0,
+        })
+    }
+}
+
 impl Element for FakeSink {
     fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
@@ -67,17 +102,7 @@ impl Element for FakeSink {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "num-buffers" => {
-                self.num_buffers = Some(parse_usize(key, value)? as u64);
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of fakesink".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
@@ -92,7 +117,7 @@ impl Element for FakeSink {
                 let lat = arrival.saturating_sub(buf.pts_ns);
                 self.lat_sum_ns += lat;
                 self.lat_max_ns = self.lat_max_ns.max(lat);
-                if let Some(max) = self.num_buffers {
+                if let Some(max) = self.props.num_buffers {
                     if self.seen >= max {
                         ctx.request_stop();
                         return Ok(Flow::Eos);
@@ -105,22 +130,42 @@ impl Element for FakeSink {
     }
 }
 
-/// Hands buffers to the application through a bounded channel.
+/// Typed properties of [`AppSink`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AppSinkProps {
+    /// Drop instead of blocking when the application is slow (`drop`).
+    pub drop: bool,
+}
+
+impl Props for AppSinkProps {
+    const FACTORY: &'static str = "appsink";
+    const KEYS: &'static [&'static str] = &["drop"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "drop" => self.drop = parse_bool(value),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(AppSink::from_props(self)?))
+    }
+}
+
+/// Hands buffers to the application through a bounded channel. The channel
+/// closes at end-of-stream, so an application drain loop
+/// (`while let Ok(buf) = rx.recv()`) terminates when the pipeline does.
 pub struct AppSink {
-    tx: SyncSender<Buffer>,
+    tx: Option<SyncSender<Buffer>>,
     rx: Option<Receiver<Buffer>>,
-    /// Drop instead of blocking when the app is slow (`drop=true`).
-    drop_on_full: bool,
+    props: AppSinkProps,
 }
 
 impl AppSink {
     pub fn new() -> Self {
-        let (tx, rx) = std::sync::mpsc::sync_channel(64);
-        Self {
-            tx,
-            rx: Some(rx),
-            drop_on_full: false,
-        }
+        Self::from_props(AppSinkProps::default()).expect("defaults are valid")
     }
 
     /// Take the receiving end (call before `Pipeline::play`).
@@ -132,6 +177,19 @@ impl AppSink {
 impl Default for AppSink {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for AppSink {
+    type Props = AppSinkProps;
+
+    fn from_props(props: AppSinkProps) -> Result<Self> {
+        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        Ok(Self {
+            tx: Some(tx),
+            rx: Some(rx),
+            props,
+        })
     }
 }
 
@@ -149,17 +207,7 @@ impl Element for AppSink {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "drop" => {
-                self.drop_on_full = value == "true" || value == "1";
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of appsink".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
@@ -168,8 +216,11 @@ impl Element for AppSink {
 
     fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
         if let Item::Buffer(buf) = item {
-            let gone = if self.drop_on_full {
-                match self.tx.try_send(buf) {
+            let Some(tx) = &self.tx else {
+                return Ok(Flow::Eos);
+            };
+            let gone = if self.props.drop {
+                match tx.try_send(buf) {
                     Ok(()) => false,
                     Err(TrySendError::Full(_)) => {
                         ctx.stats().record_drop();
@@ -178,41 +229,102 @@ impl Element for AppSink {
                     Err(TrySendError::Disconnected(_)) => true,
                 }
             } else {
-                self.tx.send(buf).is_err()
+                tx.send(buf).is_err()
             };
             if gone {
                 // application dropped the receiver: stop consuming
+                self.tx = None;
                 return Ok(Flow::Eos);
             }
         }
         Ok(Flow::Continue)
     }
+
+    fn flush(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        // close the app channel so application drain loops terminate
+        self.tx = None;
+        Ok(())
+    }
 }
 
-/// Collects buffers in memory for post-run inspection (tests/benches).
+/// Typed properties of [`TensorSink`].
+#[derive(Debug, Clone, Copy)]
+pub struct TensorSinkProps {
+    /// Keep at most this many buffers for post-run inspection
+    /// (`max-kept`).
+    pub max_kept: usize,
+}
+
+impl Default for TensorSinkProps {
+    fn default() -> Self {
+        Self { max_kept: 4096 }
+    }
+}
+
+impl Props for TensorSinkProps {
+    const FACTORY: &'static str = "tensor_sink";
+    const KEYS: &'static [&'static str] = &["max-kept"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "max-kept" => self.max_kept = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorSink::from_props(self)?))
+    }
+}
+
+/// Collects buffers in memory for post-run inspection, and invokes a
+/// subscribed callback per buffer — the paper's Pipeline-API sink
+/// callback. Subscribe on a playing pipeline with
+/// [`Running::subscribe`](crate::pipeline::Running::subscribe); the
+/// callback runs on the sink's thread and sees every buffer the sink
+/// processes, bit-identical to what the pull-based
+/// [`buffers`](TensorSink::buffers) path records (which additionally
+/// caps retention at `max-kept`).
 pub struct TensorSink {
     pub buffers: Vec<Buffer>,
-    max_kept: usize,
+    props: TensorSinkProps,
     seen: u64,
+    callback: Option<BufferCallback>,
 }
 
 impl TensorSink {
     pub fn new() -> Self {
-        Self {
-            buffers: Vec::new(),
-            max_kept: 4096,
-            seen: 0,
-        }
+        Self::from_props(TensorSinkProps::default()).expect("defaults are valid")
     }
 
     pub fn count(&self) -> u64 {
         self.seen
+    }
+
+    /// Attach a per-buffer callback directly (pre-play path; on a playing
+    /// pipeline use `Running::subscribe`).
+    pub fn set_callback(&mut self, callback: BufferCallback) {
+        self.callback = Some(callback);
     }
 }
 
 impl Default for TensorSink {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for TensorSink {
+    type Props = TensorSinkProps;
+
+    fn from_props(props: TensorSinkProps) -> Result<Self> {
+        Ok(Self {
+            buffers: Vec::new(),
+            props,
+            seen: 0,
+            callback: None,
+        })
     }
 }
 
@@ -230,16 +342,16 @@ impl Element for TensorSink {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "max-kept" => {
-                self.max_kept = parse_usize(key, value)?;
+        self.props.set(key, value)
+    }
+
+    fn handle_control(&mut self, msg: ControlMsg) -> Result<()> {
+        match msg {
+            ControlMsg::Subscribe(cb) => {
+                self.callback = Some(cb);
                 Ok(())
             }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of tensor_sink".into(),
-            }),
+            ControlMsg::SetProperty { key, value } => self.set_property(&key, &value),
         }
     }
 
@@ -250,7 +362,10 @@ impl Element for TensorSink {
     fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<Flow> {
         if let Item::Buffer(buf) = item {
             self.seen += 1;
-            if self.buffers.len() < self.max_kept {
+            if let Some(cb) = &mut self.callback {
+                cb(&buf);
+            }
+            if self.buffers.len() < self.props.max_kept {
                 self.buffers.push(buf);
             }
         }
@@ -258,24 +373,53 @@ impl Element for TensorSink {
     }
 }
 
+/// Typed properties of [`FileSink`].
+#[derive(Debug, Clone, Default)]
+pub struct FileSinkProps {
+    /// Path to append payloads to (`location`).
+    pub location: String,
+}
+
+impl Props for FileSinkProps {
+    const FACTORY: &'static str = "filesink";
+    const KEYS: &'static [&'static str] = &["location"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "location" => self.location = value.to_string(),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(FileSink::from_props(self)?))
+    }
+}
+
 /// Appends payloads to a file.
 pub struct FileSink {
-    location: String,
+    props: FileSinkProps,
     file: Option<std::fs::File>,
 }
 
 impl FileSink {
     pub fn new() -> Self {
-        Self {
-            location: String::new(),
-            file: None,
-        }
+        Self::from_props(FileSinkProps::default()).expect("defaults are valid")
     }
 }
 
 impl Default for FileSink {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for FileSink {
+    type Props = FileSinkProps;
+
+    fn from_props(props: FileSinkProps) -> Result<Self> {
+        Ok(Self { props, file: None })
     }
 }
 
@@ -289,21 +433,11 @@ impl Element for FileSink {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "location" => {
-                self.location = value.to_string();
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of filesink".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, _in: &[Caps], _n: usize) -> Result<Vec<Caps>> {
-        if self.location.is_empty() {
+        if self.props.location.is_empty() {
             return Err(Error::Negotiation("filesink needs location=".into()));
         }
         Ok(vec![])
@@ -313,7 +447,7 @@ impl Element for FileSink {
         use std::io::Write;
         if let Item::Buffer(buf) = item {
             if self.file.is_none() {
-                self.file = Some(std::fs::File::create(&self.location)?);
+                self.file = Some(std::fs::File::create(&self.props.location)?);
             }
             let f = self.file.as_mut().unwrap();
             for c in &buf.chunks {

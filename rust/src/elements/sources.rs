@@ -4,7 +4,8 @@
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 
-use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::element::props::{parse_bool, unknown_property};
+use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{
     Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
@@ -12,35 +13,109 @@ use crate::tensor::{
 use crate::video::convert_into;
 use crate::video::pattern::{generate_rgb_into, splitmix64, Pattern};
 
+/// Typed properties of [`VideoTestSrc`].
+#[derive(Debug, Clone)]
+pub struct VideoTestSrcProps {
+    /// Synthetic pattern (`pattern`).
+    pub pattern: Pattern,
+    /// Stop after this many frames (`num-buffers`; `None` = unbounded).
+    pub num_buffers: Option<u64>,
+    /// Pace frame production to the framerate (`is-live`).
+    pub is_live: bool,
+    /// Output pixel format (`format`).
+    pub format: VideoFormat,
+    pub width: usize,
+    pub height: usize,
+    /// Frames per second (`framerate`).
+    pub framerate: f64,
+}
+
+impl Default for VideoTestSrcProps {
+    fn default() -> Self {
+        Self {
+            pattern: Pattern::Smpte,
+            num_buffers: None,
+            is_live: false,
+            format: VideoFormat::Rgb,
+            width: 640,
+            height: 480,
+            framerate: 30.0,
+        }
+    }
+}
+
+impl VideoTestSrcProps {
+    fn video_info(&self) -> VideoInfo {
+        VideoInfo::new(self.format, self.width, self.height, self.framerate)
+    }
+}
+
+impl Props for VideoTestSrcProps {
+    const FACTORY: &'static str = "videotestsrc";
+    const KEYS: &'static [&'static str] = &[
+        "pattern",
+        "num-buffers",
+        "is-live",
+        "format",
+        "width",
+        "height",
+        "framerate",
+    ];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "pattern" => self.pattern = Pattern::parse(value)?,
+            "num-buffers" => {
+                self.num_buffers = Some(value.parse().map_err(|_| Error::Property {
+                    key: key.into(),
+                    value: value.into(),
+                    reason: "expected integer".into(),
+                })?)
+            }
+            "is-live" => self.is_live = parse_bool(value),
+            "format" => self.format = VideoFormat::parse(value)?,
+            "width" => self.width = parse_usize(key, value)?,
+            "height" => self.height = parse_usize(key, value)?,
+            "framerate" => self.framerate = parse_f64(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(VideoTestSrc::from_props(self)?))
+    }
+}
+
 /// Procedural raw-video source with live pacing (like GStreamer's
-/// `videotestsrc is-live=true`).
-///
-/// Properties: `pattern`, `num-buffers`, `is-live`, `format`, `width`,
-/// `height`, `framerate` (the caps can also come from a downstream
-/// capsfilter, which overrides these).
+/// `videotestsrc is-live=true`). The caps can also come from a downstream
+/// capsfilter, which overrides the geometry properties.
 pub struct VideoTestSrc {
-    pattern: Pattern,
-    num_buffers: Option<u64>,
-    is_live: bool,
+    props: VideoTestSrcProps,
+    /// Effective output caps: from the props unless a downstream
+    /// capsfilter proposal overrode them.
     info: VideoInfo,
     n: u64,
 }
 
 impl VideoTestSrc {
     pub fn new() -> Self {
-        Self {
-            pattern: Pattern::Smpte,
-            num_buffers: None,
-            is_live: false,
-            info: VideoInfo::new(VideoFormat::Rgb, 640, 480, 30.0),
-            n: 0,
-        }
+        Self::from_props(VideoTestSrcProps::default()).expect("defaults are valid")
     }
 }
 
 impl Default for VideoTestSrc {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for VideoTestSrc {
+    type Props = VideoTestSrcProps;
+
+    fn from_props(props: VideoTestSrcProps) -> Result<Self> {
+        let info = props.video_info();
+        Ok(Self { props, info, n: 0 })
     }
 }
 
@@ -54,34 +129,17 @@ impl Element for VideoTestSrc {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        self.props.set(key, value)?;
+        // sync only the touched field into the effective caps — a full
+        // rebuild would discard geometry negotiated via propose_caps
         match key {
-            "pattern" => self.pattern = Pattern::parse(value)?,
-            "num-buffers" => {
-                self.num_buffers = Some(value.parse().map_err(|_| Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "expected integer".into(),
-                })?)
-            }
-            "is-live" => self.is_live = value == "true" || value == "1",
-            "format" => self.info.format = VideoFormat::parse(value)?,
-            "width" => self.info.width = parse_usize(key, value)?,
-            "height" => self.info.height = parse_usize(key, value)?,
+            "format" => self.info.format = self.props.format,
+            "width" => self.info.width = self.props.width,
+            "height" => self.info.height = self.props.height,
             "framerate" => {
-                let fps: f64 = value.parse().map_err(|_| Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "expected number".into(),
-                })?;
-                self.info.fps_millis = (fps * 1000.0).round() as u64;
+                self.info.fps_millis = (self.props.framerate * 1000.0).round() as u64
             }
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of videotestsrc".into(),
-                })
-            }
+            _ => {}
         }
         Ok(())
     }
@@ -102,7 +160,7 @@ impl Element for VideoTestSrc {
     }
 
     fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
-        if let Some(max) = self.num_buffers {
+        if let Some(max) = self.props.num_buffers {
             if self.n >= max {
                 return Ok(Flow::Eos);
             }
@@ -110,7 +168,7 @@ impl Element for VideoTestSrc {
         let fps = self.info.fps().max(0.001);
         let frame_dur_ns = (1e9 / fps) as u64;
         let pts = self.n * frame_dur_ns;
-        if self.is_live {
+        if self.props.is_live {
             ctx.sleep_until_pts(pts);
             if ctx.stopped() {
                 return Ok(Flow::Eos);
@@ -122,11 +180,11 @@ impl Element for VideoTestSrc {
         let (w, h) = (self.info.width, self.info.height);
         let data = if self.info.format == VideoFormat::Rgb {
             let mut rgb = pool.take(w * h * 3);
-            generate_rgb_into(self.pattern, w, h, self.n, &mut rgb);
+            generate_rgb_into(self.props.pattern, w, h, self.n, &mut rgb);
             rgb
         } else {
             let mut rgb = pool.take(w * h * 3);
-            generate_rgb_into(self.pattern, w, h, self.n, &mut rgb);
+            generate_rgb_into(self.props.pattern, w, h, self.n, &mut rgb);
             let mut out = pool.take(self.info.frame_size());
             convert_into(VideoFormat::Rgb, self.info.format, w, h, &rgb, &mut out);
             pool.recycle(rgb);
@@ -141,28 +199,81 @@ impl Element for VideoTestSrc {
     }
 }
 
-/// Caps negotiated by a downstream capsfilter also need to reach the src;
-/// our negotiation is one-directional (topological), so the test source
-/// must be configured directly or via properties. The parser maps a
-/// directly-following capsfilter's fields back onto the source as a
-/// convenience — handled in `CapsFilter::negotiate` by accepting Any.
-///
+/// Typed properties of [`AppSrc`].
+#[derive(Debug, Clone)]
+pub struct AppSrcProps {
+    /// Caps this source announces downstream (`caps`).
+    pub caps: Caps,
+}
+
+impl Default for AppSrcProps {
+    fn default() -> Self {
+        Self { caps: Caps::Any }
+    }
+}
+
+impl Props for AppSrcProps {
+    const FACTORY: &'static str = "appsrc";
+    const KEYS: &'static [&'static str] = &["caps"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "caps" => self.caps = Caps::parse(value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(AppSrc::from_props(self)?))
+    }
+}
+
 /// `appsrc`: the application pushes buffers through a channel.
 pub struct AppSrc {
     tx: SyncSender<Option<(Buffer, u64)>>,
     rx: Receiver<Option<(Buffer, u64)>>,
-    caps: Caps,
+    props: AppSrcProps,
     n: u64,
 }
 
-/// Cloneable handle for pushing data into a running pipeline.
+/// Cloneable, thread-safe handle for pushing data into a running pipeline.
+///
+/// Obtain it from [`AppSrc::handle`] or
+/// [`Pipeline::appsrc`](crate::pipeline::Pipeline::appsrc) before the
+/// pipeline starts; pushes from any thread after that.
 #[derive(Clone)]
 pub struct AppSrcHandle {
     tx: SyncSender<Option<(Buffer, u64)>>,
 }
 
 impl AppSrcHandle {
-    /// Push a buffer (blocking if the pipeline is saturated).
+    /// Push a buffer into the playing pipeline (blocking while the
+    /// pipeline is saturated).
+    ///
+    /// ```
+    /// use nnstreamer::elements::sinks::AppSinkProps;
+    /// use nnstreamer::elements::sources::AppSrcProps;
+    /// use nnstreamer::pipeline::PipelineBuilder;
+    /// use nnstreamer::tensor::{Buffer, Caps, DType};
+    ///
+    /// # fn main() -> nnstreamer::Result<()> {
+    /// let mut b = PipelineBuilder::new();
+    /// b.chain_named("in", AppSrcProps { caps: Caps::tensor(DType::F32, [2], 0.0) })?
+    ///     .chain_named("out", AppSinkProps::default())?;
+    /// let mut pipeline = b.build();
+    /// let push = pipeline.appsrc("in")?;
+    /// let frames = pipeline.appsink("out")?;
+    /// let running = pipeline.play()?;
+    ///
+    /// push.push(Buffer::from_f32(0, &[1.0, 2.0]))?;
+    /// assert_eq!(frames.recv().unwrap().chunk().as_f32()?, &[1.0, 2.0]);
+    ///
+    /// push.end();
+    /// running.wait()?;
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn push(&self, buf: Buffer) -> Result<()> {
         self.tx
             .send(Some((buf, 0)))
@@ -177,13 +288,7 @@ impl AppSrcHandle {
 
 impl AppSrc {
     pub fn new() -> Self {
-        let (tx, rx) = std::sync::mpsc::sync_channel(64);
-        Self {
-            tx,
-            rx,
-            caps: Caps::Any,
-            n: 0,
-        }
+        Self::from_props(AppSrcProps::default()).expect("defaults are valid")
     }
 
     /// Get a push handle (call before `Pipeline::play`).
@@ -195,13 +300,27 @@ impl AppSrc {
 
     /// Set the caps this source will announce.
     pub fn set_caps(&mut self, caps: Caps) {
-        self.caps = caps;
+        self.props.caps = caps;
     }
 }
 
 impl Default for AppSrc {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for AppSrc {
+    type Props = AppSrcProps;
+
+    fn from_props(props: AppSrcProps) -> Result<Self> {
+        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        Ok(Self {
+            tx,
+            rx,
+            props,
+            n: 0,
+        })
     }
 }
 
@@ -219,21 +338,11 @@ impl Element for AppSrc {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "caps" => {
-                self.caps = Caps::parse(value)?;
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of appsrc".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
-        Ok(vec![self.caps.clone(); n_srcs.max(1)])
+        Ok(vec![self.props.caps.clone(); n_srcs.max(1)])
     }
 
     fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<Flow> {
@@ -253,32 +362,48 @@ impl Element for AppSrc {
     }
 }
 
-/// Synthetic IIO-style sensor source (`Tensor-Src-IIO` analog): emits
-/// `other/tensor` windows of waveform data with activity segments, standing
-/// in for the accelerometer/pressure sensors of the ARS device (E2).
-///
-/// Properties: `kind` (accel|pressure|mic), `rate` (windows per second),
-/// `num-buffers`, `is-live`, `window` (samples per window), `channels`.
-pub struct SensorSrc {
-    kind: SensorKind,
-    rate: f64,
-    num_buffers: Option<u64>,
-    is_live: bool,
-    window: usize,
-    channels: usize,
-    n: u64,
-    seed: u64,
-}
-
+/// Waveform kind produced by [`SensorSrc`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum SensorKind {
+pub enum SensorKind {
     Accel,
     Pressure,
     Mic,
 }
 
-impl SensorSrc {
-    pub fn new() -> Self {
+impl SensorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "accel" => SensorKind::Accel,
+            "pressure" => SensorKind::Pressure,
+            "mic" => SensorKind::Mic,
+            _ => {
+                return Err(Error::Property {
+                    key: "kind".into(),
+                    value: s.into(),
+                    reason: "accel|pressure|mic".into(),
+                })
+            }
+        })
+    }
+}
+
+/// Typed properties of [`SensorSrc`].
+#[derive(Debug, Clone)]
+pub struct SensorSrcProps {
+    /// Waveform family (`kind`).
+    pub kind: SensorKind,
+    /// Windows per second (`rate`).
+    pub rate: f64,
+    pub num_buffers: Option<u64>,
+    pub is_live: bool,
+    /// Samples per window (`window`).
+    pub window: usize,
+    pub channels: usize,
+    pub seed: u64,
+}
+
+impl Default for SensorSrcProps {
+    fn default() -> Self {
         Self {
             kind: SensorKind::Accel,
             rate: 10.0,
@@ -286,16 +411,60 @@ impl SensorSrc {
             is_live: false,
             window: 128,
             channels: 3,
-            n: 0,
             seed: 17,
         }
+    }
+}
+
+impl Props for SensorSrcProps {
+    const FACTORY: &'static str = "sensorsrc";
+    const KEYS: &'static [&'static str] = &[
+        "kind",
+        "rate",
+        "num-buffers",
+        "is-live",
+        "window",
+        "channels",
+        "seed",
+    ];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "kind" => self.kind = SensorKind::parse(value)?,
+            "rate" => self.rate = parse_f64(key, value)?,
+            "num-buffers" => self.num_buffers = Some(parse_usize(key, value)? as u64),
+            "is-live" => self.is_live = parse_bool(value),
+            "window" => self.window = parse_usize(key, value)?,
+            "channels" => self.channels = parse_usize(key, value)?,
+            "seed" => self.seed = parse_usize(key, value)? as u64,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(SensorSrc::from_props(self)?))
+    }
+}
+
+/// Synthetic IIO-style sensor source (`Tensor-Src-IIO` analog): emits
+/// `other/tensor` windows of waveform data with activity segments, standing
+/// in for the accelerometer/pressure sensors of the ARS device (E2).
+pub struct SensorSrc {
+    props: SensorSrcProps,
+    n: u64,
+}
+
+impl SensorSrc {
+    pub fn new() -> Self {
+        Self::from_props(SensorSrcProps::default()).expect("defaults are valid")
     }
 
     fn sample(&self, t: f64, ch: usize, idx: u64) -> f32 {
         // activity segments switch every ~3 seconds, deterministic
         let segment = (t / 3.0) as u64;
-        let activity = splitmix64(self.seed ^ segment) % 4;
-        let base = match self.kind {
+        let activity = splitmix64(self.props.seed ^ segment) % 4;
+        let base = match self.props.kind {
             SensorKind::Accel => {
                 let f = 0.8 + activity as f64 * 1.7;
                 (2.0 * std::f64::consts::PI * f * t + ch as f64).sin()
@@ -307,8 +476,9 @@ impl SensorSrc {
                 (2.0 * std::f64::consts::PI * f * t).sin() * 0.4
             }
         };
-        let noise =
-            (splitmix64(idx ^ (ch as u64) << 32 ^ self.seed) % 1000) as f64 / 1000.0 - 0.5;
+        let noise = (splitmix64(idx ^ (ch as u64) << 32 ^ self.props.seed) % 1000) as f64
+            / 1000.0
+            - 0.5;
         (base + noise * 0.05) as f32
     }
 }
@@ -316,6 +486,14 @@ impl SensorSrc {
 impl Default for SensorSrc {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for SensorSrc {
+    type Props = SensorSrcProps;
+
+    fn from_props(props: SensorSrcProps) -> Result<Self> {
+        Ok(Self { props, n: 0 })
     }
 }
 
@@ -329,45 +507,19 @@ impl Element for SensorSrc {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "kind" => {
-                self.kind = match value {
-                    "accel" => SensorKind::Accel,
-                    "pressure" => SensorKind::Pressure,
-                    "mic" => SensorKind::Mic,
-                    _ => {
-                        return Err(Error::Property {
-                            key: key.into(),
-                            value: value.into(),
-                            reason: "accel|pressure|mic".into(),
-                        })
-                    }
-                }
-            }
-            "rate" => self.rate = parse_f64(key, value)?,
-            "num-buffers" => self.num_buffers = Some(parse_usize(key, value)? as u64),
-            "is-live" => self.is_live = value == "true" || value == "1",
-            "window" => self.window = parse_usize(key, value)?,
-            "channels" => self.channels = parse_usize(key, value)?,
-            "seed" => self.seed = parse_usize(key, value)? as u64,
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of sensorsrc".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
         // layout is [sample][channel]: channels vary fastest -> minor-first dims
-        let info = TensorInfo::new(DType::F32, Dims::new(&[self.channels, self.window]));
+        let info = TensorInfo::new(
+            DType::F32,
+            Dims::new(&[self.props.channels, self.props.window]),
+        );
         Ok(vec![
             Caps::Tensor {
                 info,
-                fps_millis: (self.rate * 1000.0) as u64,
+                fps_millis: (self.props.rate * 1000.0) as u64,
             };
             n_srcs.max(1)
         ])
@@ -376,10 +528,10 @@ impl Element for SensorSrc {
     fn propose_caps(&mut self, downstream: &Caps) -> Result<()> {
         if let Caps::Tensor { info, fps_millis } = downstream {
             if info.dtype == DType::F32 && info.dims.effective_rank() <= 2 {
-                self.channels = info.dims.dim_or_1(0);
-                self.window = info.dims.dim_or_1(1);
+                self.props.channels = info.dims.dim_or_1(0);
+                self.props.window = info.dims.dim_or_1(1);
                 if *fps_millis > 0 {
-                    self.rate = *fps_millis as f64 / 1000.0;
+                    self.props.rate = *fps_millis as f64 / 1000.0;
                 }
             }
         }
@@ -391,26 +543,27 @@ impl Element for SensorSrc {
     }
 
     fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
-        if let Some(max) = self.num_buffers {
+        if let Some(max) = self.props.num_buffers {
             if self.n >= max {
                 return Ok(Flow::Eos);
             }
         }
-        let dur_ns = (1e9 / self.rate.max(0.001)) as u64;
+        let dur_ns = (1e9 / self.props.rate.max(0.001)) as u64;
         let pts = self.n * dur_ns;
-        if self.is_live {
+        if self.props.is_live {
             ctx.sleep_until_pts(pts);
             if ctx.stopped() {
                 return Ok(Flow::Eos);
             }
         }
-        let t_window = 1.0 / self.rate.max(0.001);
-        let mut data = vec![0f32; self.window * self.channels];
-        for s in 0..self.window {
-            let t = self.n as f64 * t_window + s as f64 * t_window / self.window as f64;
-            for c in 0..self.channels {
-                data[s * self.channels + c] =
-                    self.sample(t, c, self.n * self.window as u64 + s as u64);
+        let (window, channels) = (self.props.window, self.props.channels);
+        let t_window = 1.0 / self.props.rate.max(0.001);
+        let mut data = vec![0f32; window * channels];
+        for s in 0..window {
+            let t = self.n as f64 * t_window + s as f64 * t_window / window as f64;
+            for c in 0..channels {
+                data[s * channels + c] =
+                    self.sample(t, c, self.n * window as u64 + s as u64);
             }
         }
         let mut buf = Buffer::from_f32(pts, &data);
@@ -422,11 +575,37 @@ impl Element for SensorSrc {
     }
 }
 
+/// Typed properties of [`FileSrc`].
+#[derive(Debug, Clone, Default)]
+pub struct FileSrcProps {
+    /// Path to read (`location`).
+    pub location: String,
+    /// Bytes per buffer; 0 emits the whole file as one buffer
+    /// (`blocksize`).
+    pub blocksize: usize,
+}
+
+impl Props for FileSrcProps {
+    const FACTORY: &'static str = "filesrc";
+    const KEYS: &'static [&'static str] = &["location", "blocksize"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "location" => self.location = value.to_string(),
+            "blocksize" => self.blocksize = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(FileSrc::from_props(self)?))
+    }
+}
+
 /// Reads a file and emits it as fixed-size binary frames.
-/// Properties: `location`, `blocksize` (bytes per buffer; 0 = whole file).
 pub struct FileSrc {
-    location: String,
-    blocksize: usize,
+    props: FileSrcProps,
     data: Option<Arc<Vec<u8>>>,
     offset: usize,
     n: u64,
@@ -434,19 +613,26 @@ pub struct FileSrc {
 
 impl FileSrc {
     pub fn new() -> Self {
-        Self {
-            location: String::new(),
-            blocksize: 0,
-            data: None,
-            offset: 0,
-            n: 0,
-        }
+        Self::from_props(FileSrcProps::default()).expect("defaults are valid")
     }
 }
 
 impl Default for FileSrc {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for FileSrc {
+    type Props = FileSrcProps;
+
+    fn from_props(props: FileSrcProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            data: None,
+            offset: 0,
+            n: 0,
+        })
     }
 }
 
@@ -460,22 +646,11 @@ impl Element for FileSrc {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "location" => self.location = value.to_string(),
-            "blocksize" => self.blocksize = parse_usize(key, value)?,
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of filesrc".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
-        if self.location.is_empty() {
+        if self.props.location.is_empty() {
             return Err(Error::Negotiation("filesrc needs location=".into()));
         }
         Ok(vec![Caps::Any; n_srcs.max(1)])
@@ -487,16 +662,16 @@ impl Element for FileSrc {
 
     fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
         if self.data.is_none() {
-            self.data = Some(Arc::new(std::fs::read(&self.location)?));
+            self.data = Some(Arc::new(std::fs::read(&self.props.location)?));
         }
         let data = self.data.as_ref().unwrap().clone();
         if self.offset >= data.len() {
             return Ok(Flow::Eos);
         }
-        let end = if self.blocksize == 0 {
+        let end = if self.props.blocksize == 0 {
             data.len()
         } else {
-            (self.offset + self.blocksize).min(data.len())
+            (self.offset + self.props.blocksize).min(data.len())
         };
         let chunk = Chunk::from_vec(data[self.offset..end].to_vec());
         self.offset = end;

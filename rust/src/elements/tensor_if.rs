@@ -11,21 +11,48 @@
 //! * `action=pass|route` — `pass`: forward on pad 0 when true else drop;
 //!   `route`: pad 0 when true, pad 1 when false.
 
-use crate::element::{Ctx, Element, Flow, Item, PadSpec};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, DType, TensorInfo};
 
 use super::sources::parse_f64;
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum ComparedValue {
+/// What [`TensorIf`] computes from each buffer (`compared-value`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComparedValue {
     Average,
     Max,
     Element(usize),
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Op {
+impl ComparedValue {
+    pub fn parse(value: &str) -> Result<Self> {
+        if value == "average" {
+            Ok(ComparedValue::Average)
+        } else if value == "max" {
+            Ok(ComparedValue::Max)
+        } else if let Some(i) = value.strip_prefix("element:") {
+            Ok(ComparedValue::Element(i.parse().map_err(|_| {
+                Error::Property {
+                    key: "compared-value".into(),
+                    value: value.into(),
+                    reason: "bad element index".into(),
+                }
+            })?))
+        } else {
+            Err(Error::Property {
+                key: "compared-value".into(),
+                value: value.into(),
+                reason: "average|max|element:<idx>".into(),
+            })
+        }
+    }
+}
+
+/// Comparison operator (`operator`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompareOp {
     Gt,
     Ge,
     Lt,
@@ -33,29 +60,112 @@ enum Op {
     Eq,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Action {
+impl CompareOp {
+    pub fn parse(value: &str) -> Result<Self> {
+        Ok(match value {
+            "gt" => CompareOp::Gt,
+            "ge" => CompareOp::Ge,
+            "lt" => CompareOp::Lt,
+            "le" => CompareOp::Le,
+            "eq" => CompareOp::Eq,
+            _ => {
+                return Err(Error::Property {
+                    key: "operator".into(),
+                    value: value.into(),
+                    reason: "gt|ge|lt|le|eq".into(),
+                })
+            }
+        })
+    }
+}
+
+/// What happens on a verdict (`action`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IfAction {
+    /// Forward on pad 0 when true, drop otherwise.
     Pass,
+    /// Pad 0 when true, pad 1 when false.
     Route,
 }
 
+impl IfAction {
+    pub fn parse(value: &str) -> Result<Self> {
+        Ok(match value {
+            "pass" => IfAction::Pass,
+            "route" => IfAction::Route,
+            _ => {
+                return Err(Error::Property {
+                    key: "action".into(),
+                    value: value.into(),
+                    reason: "pass|route".into(),
+                })
+            }
+        })
+    }
+}
+
+/// Typed properties of [`TensorIf`]. The `threshold` is re-read for every
+/// buffer, so it can be retuned on a playing pipeline through
+/// [`Running::set_property`](crate::pipeline::Running::set_property).
+#[derive(Debug, Clone, Copy)]
+pub struct TensorIfProps {
+    pub compared_value: ComparedValue,
+    pub operator: CompareOp,
+    pub threshold: f64,
+    pub action: IfAction,
+}
+
+impl Default for TensorIfProps {
+    fn default() -> Self {
+        Self {
+            compared_value: ComparedValue::Average,
+            operator: CompareOp::Gt,
+            threshold: 0.0,
+            action: IfAction::Pass,
+        }
+    }
+}
+
+impl Props for TensorIfProps {
+    const FACTORY: &'static str = "tensor_if";
+    const KEYS: &'static [&'static str] =
+        &["compared-value", "operator", "threshold", "action"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "compared-value" => self.compared_value = ComparedValue::parse(value)?,
+            "operator" => self.operator = CompareOp::parse(value)?,
+            "threshold" => self.threshold = parse_f64(key, value)?,
+            "action" => self.action = IfAction::parse(value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorIf::from_props(self)?))
+    }
+}
+
 pub struct TensorIf {
-    cv: ComparedValue,
-    op: Op,
-    threshold: f64,
-    action: Action,
+    props: TensorIfProps,
     in_info: Option<TensorInfo>,
+}
+
+impl FromProps for TensorIf {
+    type Props = TensorIfProps;
+
+    fn from_props(props: TensorIfProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            in_info: None,
+        })
+    }
 }
 
 impl TensorIf {
     pub fn new() -> Self {
-        Self {
-            cv: ComparedValue::Average,
-            op: Op::Gt,
-            threshold: 0.0,
-            action: Action::Pass,
-            in_info: None,
-        }
+        Self::from_props(TensorIfProps::default()).expect("defaults are valid")
     }
 
     fn value_of(&self, buf: &Buffer, dtype: DType) -> Result<f64> {
@@ -83,7 +193,7 @@ impl TensorIf {
                 DType::U64 => u64::from_le_bytes(data[o..o + 8].try_into().unwrap()) as f64,
             }
         };
-        Ok(match self.cv {
+        Ok(match self.props.compared_value {
             ComparedValue::Average => (0..n).map(get).sum::<f64>() / n.max(1) as f64,
             ComparedValue::Max => (0..n).map(get).fold(f64::MIN, f64::max),
             ComparedValue::Element(i) => {
@@ -99,12 +209,13 @@ impl TensorIf {
     }
 
     fn test(&self, v: f64) -> bool {
-        match self.op {
-            Op::Gt => v > self.threshold,
-            Op::Ge => v >= self.threshold,
-            Op::Lt => v < self.threshold,
-            Op::Le => v <= self.threshold,
-            Op::Eq => (v - self.threshold).abs() < 1e-9,
+        let threshold = self.props.threshold;
+        match self.props.operator {
+            CompareOp::Gt => v > threshold,
+            CompareOp::Ge => v >= threshold,
+            CompareOp::Lt => v < threshold,
+            CompareOp::Le => v <= threshold,
+            CompareOp::Eq => (v - threshold).abs() < 1e-9,
         }
     }
 }
@@ -125,65 +236,7 @@ impl Element for TensorIf {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "compared-value" => {
-                self.cv = if value == "average" {
-                    ComparedValue::Average
-                } else if value == "max" {
-                    ComparedValue::Max
-                } else if let Some(i) = value.strip_prefix("element:") {
-                    ComparedValue::Element(i.parse().map_err(|_| Error::Property {
-                        key: key.into(),
-                        value: value.into(),
-                        reason: "bad element index".into(),
-                    })?)
-                } else {
-                    return Err(Error::Property {
-                        key: key.into(),
-                        value: value.into(),
-                        reason: "average|max|element:<idx>".into(),
-                    });
-                };
-            }
-            "operator" => {
-                self.op = match value {
-                    "gt" => Op::Gt,
-                    "ge" => Op::Ge,
-                    "lt" => Op::Lt,
-                    "le" => Op::Le,
-                    "eq" => Op::Eq,
-                    _ => {
-                        return Err(Error::Property {
-                            key: key.into(),
-                            value: value.into(),
-                            reason: "gt|ge|lt|le|eq".into(),
-                        })
-                    }
-                }
-            }
-            "threshold" => self.threshold = parse_f64(key, value)?,
-            "action" => {
-                self.action = match value {
-                    "pass" => Action::Pass,
-                    "route" => Action::Route,
-                    _ => {
-                        return Err(Error::Property {
-                            key: key.into(),
-                            value: value.into(),
-                            reason: "pass|route".into(),
-                        })
-                    }
-                }
-            }
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of tensor_if".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -194,7 +247,7 @@ impl Element for TensorIf {
             )));
         };
         self.in_info = Some(info.clone());
-        if self.action == Action::Route && n_srcs != 2 {
+        if self.props.action == IfAction::Route && n_srcs != 2 {
             return Err(Error::Negotiation(
                 "tensor_if action=route needs exactly 2 src pads".into(),
             ));
@@ -209,11 +262,11 @@ impl Element for TensorIf {
         let dtype = self.in_info.as_ref().unwrap().dtype;
         let v = self.value_of(&buf, dtype)?;
         let verdict = self.test(v);
-        match (self.action, verdict) {
-            (Action::Pass, true) => ctx.push(0, buf)?,
-            (Action::Pass, false) => ctx.stats().record_drop(),
-            (Action::Route, true) => ctx.push(0, buf)?,
-            (Action::Route, false) => ctx.push(1, buf)?,
+        match (self.props.action, verdict) {
+            (IfAction::Pass, true) => ctx.push(0, buf)?,
+            (IfAction::Pass, false) => ctx.stats().record_drop(),
+            (IfAction::Route, true) => ctx.push(0, buf)?,
+            (IfAction::Route, false) => ctx.push(1, buf)?,
         }
         Ok(Flow::Continue)
     }

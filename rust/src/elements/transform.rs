@@ -6,60 +6,101 @@
 //! * `mode=normalize` — scale u8 [0,255] to f32 [0,1]
 //! * `mode=transpose option=1:0:2:3` — axis permutation
 //! * `mode=stand` — standardization (zero mean, unit variance per frame)
+//!
+//! The builder path skips the string syntax entirely:
+//! [`TensorTransformProps::arithmetic`] & friends carry the already-typed
+//! [`TransformMode`].
 
-use crate::element::{Ctx, Element, Flow, Item};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo};
 
-#[derive(Debug, Clone)]
-enum Mode {
+/// A typed transform operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransformMode {
     Typecast(DType),
+    /// Chained scalar arithmetic, applied in order.
     Arithmetic(Vec<(ArithOp, f64)>),
     Normalize,
+    /// Axis permutation (minor-first axis indices).
     Transpose(Vec<usize>),
     Stand,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum ArithOp {
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithOp {
     Add,
     Sub,
     Mul,
     Div,
 }
 
-pub struct TensorTransform {
-    mode: Option<Mode>,
+/// Typed properties of [`TensorTransform`].
+///
+/// Builder users construct through the typed helpers
+/// ([`typecast`](TensorTransformProps::typecast),
+/// [`arithmetic`](TensorTransformProps::arithmetic), ...); the string
+/// front-end fills `mode`/`option` text that resolves to the same
+/// [`TransformMode`] at negotiation time (the option may legally arrive
+/// before the mode in a launch string, hence the deferred resolution).
+#[derive(Debug, Clone, Default)]
+pub struct TensorTransformProps {
+    /// Typed mode; `None` means passthrough unless the string fields
+    /// below resolve to something.
+    pub mode: Option<TransformMode>,
     mode_str: String,
     option_str: String,
-    in_info: Option<TensorInfo>,
-    out_info: Option<TensorInfo>,
 }
 
-impl TensorTransform {
-    pub fn new() -> Self {
+impl TensorTransformProps {
+    pub fn typed(mode: TransformMode) -> Self {
         Self {
-            mode: None,
-            mode_str: String::new(),
-            option_str: String::new(),
-            in_info: None,
-            out_info: None,
+            mode: Some(mode),
+            ..Default::default()
         }
     }
 
-    fn resolve_mode(&mut self) -> Result<()> {
+    pub fn typecast(dtype: DType) -> Self {
+        Self::typed(TransformMode::Typecast(dtype))
+    }
+
+    pub fn arithmetic(ops: Vec<(ArithOp, f64)>) -> Self {
+        Self::typed(TransformMode::Arithmetic(ops))
+    }
+
+    pub fn normalize() -> Self {
+        Self::typed(TransformMode::Normalize)
+    }
+
+    pub fn transpose(axes: Vec<usize>) -> Self {
+        Self::typed(TransformMode::Transpose(axes))
+    }
+
+    pub fn stand() -> Self {
+        Self::typed(TransformMode::Stand)
+    }
+
+    /// Resolve to the effective mode: the typed field wins, otherwise the
+    /// string pair is parsed (`None` = passthrough).
+    fn resolve(&self) -> Result<Option<TransformMode>> {
+        if let Some(mode) = &self.mode {
+            return Ok(Some(mode.clone()));
+        }
         let mode = match self.mode_str.as_str() {
             "" | "passthrough" => None,
-            "typecast" => Some(Mode::Typecast(DType::parse(&self.option_str)?)),
+            "typecast" => Some(TransformMode::Typecast(DType::parse(&self.option_str)?)),
             "arithmetic" => {
                 let mut ops = Vec::new();
                 for part in self.option_str.split(',') {
-                    let (op, v) = part.split_once(':').ok_or_else(|| Error::Parse(
-                        format!("arithmetic option must be op:value, got {part:?}"),
-                    ))?;
-                    let value: f64 = v.parse().map_err(|_| {
-                        Error::Parse(format!("bad arithmetic value {v:?}"))
+                    let (op, v) = part.split_once(':').ok_or_else(|| {
+                        Error::Parse(format!(
+                            "arithmetic option must be op:value, got {part:?}"
+                        ))
                     })?;
+                    let value: f64 = v
+                        .parse()
+                        .map_err(|_| Error::Parse(format!("bad arithmetic value {v:?}")))?;
                     let op = match op {
                         "add" => ArithOp::Add,
                         "sub" => ArithOp::Sub,
@@ -69,9 +110,9 @@ impl TensorTransform {
                     };
                     ops.push((op, value));
                 }
-                Some(Mode::Arithmetic(ops))
+                Some(TransformMode::Arithmetic(ops))
             }
-            "normalize" => Some(Mode::Normalize),
+            "normalize" => Some(TransformMode::Normalize),
             "transpose" => {
                 let axes: Vec<usize> = self
                     .option_str
@@ -81,19 +122,94 @@ impl TensorTransform {
                             .map_err(|_| Error::Parse(format!("bad transpose axis {a:?}")))
                     })
                     .collect::<Result<_>>()?;
-                Some(Mode::Transpose(axes))
+                Some(TransformMode::Transpose(axes))
             }
-            "stand" => Some(Mode::Stand),
+            "stand" => Some(TransformMode::Stand),
             other => return Err(Error::Parse(format!("unknown transform mode {other:?}"))),
         };
-        self.mode = mode;
+        Ok(mode)
+    }
+}
+
+impl Props for TensorTransformProps {
+    const FACTORY: &'static str = "tensor_transform";
+    const KEYS: &'static [&'static str] = &["mode", "option"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "mode" => {
+                // validate the mode name eagerly; option parsing happens at
+                // negotiate time (option may not be set yet)
+                if !matches!(
+                    value,
+                    "" | "passthrough"
+                        | "typecast"
+                        | "arithmetic"
+                        | "normalize"
+                        | "transpose"
+                        | "stand"
+                ) {
+                    return Err(Error::Parse(format!("unknown transform mode {value:?}")));
+                }
+                self.mode_str = value.to_string();
+                // a string-mode reconfiguration overrides an earlier
+                // typed mode
+                self.mode = None;
+            }
+            "option" => {
+                // an option alone cannot reconfigure a typed mode — the
+                // string pair resolves through mode_str, which only a
+                // mode= assignment establishes
+                if self.mode.is_some() && self.mode_str.is_empty() {
+                    return Err(Error::Property {
+                        key: key.into(),
+                        value: value.into(),
+                        reason: "transform has a typed mode; set mode= first to \
+                                 reconfigure via string properties"
+                            .into(),
+                    });
+                }
+                self.option_str = value.to_string();
+            }
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
         Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorTransform::from_props(self)?))
+    }
+}
+
+pub struct TensorTransform {
+    props: TensorTransformProps,
+    mode: Option<TransformMode>,
+    in_info: Option<TensorInfo>,
+    out_info: Option<TensorInfo>,
+}
+
+impl TensorTransform {
+    pub fn new() -> Self {
+        Self::from_props(TensorTransformProps::default()).expect("defaults are valid")
     }
 }
 
 impl Default for TensorTransform {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl FromProps for TensorTransform {
+    type Props = TensorTransformProps;
+
+    fn from_props(props: TensorTransformProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            mode: None,
+            in_info: None,
+            out_info: None,
+        })
     }
 }
 
@@ -146,37 +262,11 @@ impl Element for TensorTransform {
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "mode" => {
-                // validate the mode name eagerly; option parsing happens at
-                // negotiate time (option may not be set yet)
-                if !matches!(
-                    value,
-                    "" | "passthrough"
-                        | "typecast"
-                        | "arithmetic"
-                        | "normalize"
-                        | "transpose"
-                        | "stand"
-                ) {
-                    return Err(Error::Parse(format!("unknown transform mode {value:?}")));
-                }
-                self.mode_str = value.to_string();
-            }
-            "option" => self.option_str = value.to_string(),
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of tensor_transform".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
-        self.resolve_mode()?;
+        self.mode = self.props.resolve()?;
         let (info, fps) = match &in_caps[0] {
             Caps::Tensor { info, fps_millis } => (info.clone(), *fps_millis),
             other => {
@@ -187,11 +277,11 @@ impl Element for TensorTransform {
         };
         self.in_info = Some(info.clone());
         let out_info = match &self.mode {
-            Some(Mode::Typecast(t)) => TensorInfo::new(*t, info.dims.clone()),
-            Some(Mode::Normalize) | Some(Mode::Stand) => {
+            Some(TransformMode::Typecast(t)) => TensorInfo::new(*t, info.dims.clone()),
+            Some(TransformMode::Normalize) | Some(TransformMode::Stand) => {
                 TensorInfo::new(DType::F32, info.dims.clone())
             }
-            Some(Mode::Transpose(axes)) => {
+            Some(TransformMode::Transpose(axes)) => {
                 let in_dims = info.dims.as_slice();
                 if axes.len() < in_dims.len() {
                     return Err(Error::Negotiation(format!(
@@ -205,7 +295,7 @@ impl Element for TensorTransform {
                 }
                 TensorInfo::new(info.dtype, Dims::new(&dims[..in_dims.len()]))
             }
-            Some(Mode::Arithmetic(_)) | None => info.clone(),
+            Some(TransformMode::Arithmetic(_)) | None => info.clone(),
         };
         self.out_info = Some(out_info.clone());
         Ok(vec![
@@ -233,11 +323,11 @@ impl Element for TensorTransform {
             None => buf.chunks.swap_remove(0),
             // fast path: u8 -> f32 (the dominant video-pipeline cast),
             // streamed straight into pooled storage
-            Some(Mode::Typecast(DType::F32)) if in_info.dtype == DType::U8 => {
+            Some(TransformMode::Typecast(DType::F32)) if in_info.dtype == DType::U8 => {
                 let src = buf.chunk().as_bytes();
                 Chunk::from_f32_iter(src.len(), src.iter().map(|&v| v as f32))
             }
-            Some(Mode::Typecast(t)) => {
+            Some(TransformMode::Typecast(t)) => {
                 let t = *t;
                 let src = buf.chunk().as_bytes();
                 let esz_in = in_info.dtype.size_bytes();
@@ -251,17 +341,17 @@ impl Element for TensorTransform {
                 }
                 Chunk::from_pooled(out)
             }
-            Some(Mode::Normalize) if in_info.dtype == DType::U8 => {
+            Some(TransformMode::Normalize) if in_info.dtype == DType::U8 => {
                 let src = buf.chunk().as_bytes();
                 Chunk::from_f32_iter(src.len(), src.iter().map(|&v| v as f32 / 255.0))
             }
-            Some(Mode::Normalize) => {
+            Some(TransformMode::Normalize) => {
                 let vals = read_as_f64(buf.chunk().as_bytes(), in_info.dtype);
                 Chunk::from_f32_iter(vals.len(), vals.iter().map(|v| (*v / 255.0) as f32))
             }
             // f32 standardization runs in place (CoW when the chunk is
             // shared, e.g. behind a tee)
-            Some(Mode::Stand) if in_info.dtype == DType::F32 => {
+            Some(TransformMode::Stand) if in_info.dtype == DType::F32 => {
                 let mut chunk = buf.chunks.swap_remove(0);
                 {
                     let vals = chunk.make_mut_f32()?;
@@ -276,7 +366,7 @@ impl Element for TensorTransform {
                 }
                 chunk
             }
-            Some(Mode::Stand) => {
+            Some(TransformMode::Stand) => {
                 let vals = read_as_f64(buf.chunk().as_bytes(), in_info.dtype);
                 let n = vals.len().max(1) as f64;
                 let mean = vals.iter().sum::<f64>() / n;
@@ -288,7 +378,7 @@ impl Element for TensorTransform {
                 )
             }
             // fast path: f32 arithmetic stays in f32 and runs in place
-            Some(Mode::Arithmetic(ops)) if in_info.dtype == DType::F32 => {
+            Some(TransformMode::Arithmetic(ops)) if in_info.dtype == DType::F32 => {
                 let mut chunk = buf.chunks.swap_remove(0);
                 {
                     let vals = chunk.make_mut_f32()?;
@@ -305,7 +395,7 @@ impl Element for TensorTransform {
                 chunk
             }
             // same-dtype element-wise arithmetic: through f64, in place
-            Some(Mode::Arithmetic(ops)) => {
+            Some(TransformMode::Arithmetic(ops)) => {
                 let dtype = in_info.dtype;
                 let mut chunk = buf.chunks.swap_remove(0);
                 {
@@ -325,7 +415,7 @@ impl Element for TensorTransform {
                 }
                 chunk
             }
-            Some(Mode::Transpose(axes)) => {
+            Some(TransformMode::Transpose(axes)) => {
                 let esz = in_info.dtype.size_bytes();
                 let in_dims = in_info.dims.as_slice();
                 let rank = in_dims.len();
@@ -400,6 +490,7 @@ mod tests {
             idle_ns: 0,
             input: None,
             pending: std::collections::VecDeque::new(),
+            control: None,
         };
         el.handle(0, Item::Buffer(buf), &mut ctx).unwrap();
         match rx.try_recv().unwrap() {
@@ -427,6 +518,21 @@ mod tests {
         let caps = Caps::tensor(DType::F32, [2], 0.0);
         let buf = Buffer::from_f32(0, &[0.0, 255.0]);
         let out = run_transform(&mut t, caps, buf);
+        assert_eq!(out.chunk().as_f32().unwrap(), &[-1.0, 1.0]);
+    }
+
+    #[test]
+    fn typed_mode_matches_string_mode() {
+        // builder path: the typed props produce the same bytes as the
+        // string front-end
+        let mut a = TensorTransform::from_props(TensorTransformProps::arithmetic(vec![
+            (ArithOp::Add, -127.5),
+            (ArithOp::Div, 127.5),
+        ]))
+        .unwrap();
+        let caps = Caps::tensor(DType::F32, [2], 0.0);
+        let buf = Buffer::from_f32(0, &[0.0, 255.0]);
+        let out = run_transform(&mut a, caps, buf);
         assert_eq!(out.chunk().as_f32().unwrap(), &[-1.0, 1.0]);
     }
 

@@ -5,25 +5,55 @@
 //! pre-processing inside the AI framework, as MediaPipe does) is one of the
 //! paper's core arguments, quantified in E4's pre-processor comparison.
 
-use crate::element::{Ctx, Element, Flow, Item};
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::tensor::{Buffer, Caps, Chunk, ChunkPool, VideoFormat, VideoInfo};
 use crate::video::{convert_into, crop_into, crop_rect, scale_bilinear_into};
 
 use super::sources::parse_usize;
 
-/// Pixel-format conversion. Property: `format` (target).
+/// Typed properties of [`VideoConvert`].
+#[derive(Debug, Clone, Copy)]
+pub struct VideoConvertProps {
+    /// Target pixel format (`format`).
+    pub format: VideoFormat,
+}
+
+impl Default for VideoConvertProps {
+    fn default() -> Self {
+        Self {
+            format: VideoFormat::Rgb,
+        }
+    }
+}
+
+impl Props for VideoConvertProps {
+    const FACTORY: &'static str = "videoconvert";
+    const KEYS: &'static [&'static str] = &["format"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "format" => self.format = VideoFormat::parse(value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(VideoConvert::from_props(self)?))
+    }
+}
+
+/// Pixel-format conversion.
 pub struct VideoConvert {
-    target: VideoFormat,
+    props: VideoConvertProps,
     in_info: Option<VideoInfo>,
 }
 
 impl VideoConvert {
     pub fn new() -> Self {
-        Self {
-            target: VideoFormat::Rgb,
-            in_info: None,
-        }
+        Self::from_props(VideoConvertProps::default()).expect("defaults are valid")
     }
 }
 
@@ -33,23 +63,24 @@ impl Default for VideoConvert {
     }
 }
 
+impl FromProps for VideoConvert {
+    type Props = VideoConvertProps;
+
+    fn from_props(props: VideoConvertProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            in_info: None,
+        })
+    }
+}
+
 impl Element for VideoConvert {
     fn type_name(&self) -> &'static str {
         "videoconvert"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "format" => {
-                self.target = VideoFormat::parse(value)?;
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of videoconvert".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -61,7 +92,7 @@ impl Element for VideoConvert {
         };
         self.in_info = Some(v.clone());
         let mut out = v.clone();
-        out.format = self.target;
+        out.format = self.props.format;
         Ok(vec![Caps::Video(out); n_srcs.max(1)])
     }
 
@@ -70,14 +101,14 @@ impl Element for VideoConvert {
             return Ok(Flow::Continue);
         };
         let v = self.in_info.as_ref().unwrap();
-        let out_buf = if v.format == self.target {
+        let target = self.props.format;
+        let out_buf = if v.format == target {
             buf // zero-copy passthrough: forward the input chunk untouched
         } else {
-            let mut data =
-                ChunkPool::global().take(self.target.frame_size(v.width, v.height));
+            let mut data = ChunkPool::global().take(target.frame_size(v.width, v.height));
             convert_into(
                 v.format,
-                self.target,
+                target,
                 v.width,
                 v.height,
                 buf.chunk().as_bytes(),
@@ -93,20 +124,42 @@ impl Element for VideoConvert {
     }
 }
 
-/// Bilinear scaling. Properties: `width`, `height`.
+/// Typed properties of [`VideoScale`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VideoScaleProps {
+    /// Target width (`width`, required).
+    pub width: usize,
+    /// Target height (`height`, required).
+    pub height: usize,
+}
+
+impl Props for VideoScaleProps {
+    const FACTORY: &'static str = "videoscale";
+    const KEYS: &'static [&'static str] = &["width", "height"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "width" => self.width = parse_usize(key, value)?,
+            "height" => self.height = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(VideoScale::from_props(self)?))
+    }
+}
+
+/// Bilinear scaling.
 pub struct VideoScale {
-    width: usize,
-    height: usize,
+    props: VideoScaleProps,
     in_info: Option<VideoInfo>,
 }
 
 impl VideoScale {
     pub fn new() -> Self {
-        Self {
-            width: 0,
-            height: 0,
-            in_info: None,
-        }
+        Self::from_props(VideoScaleProps::default()).expect("defaults are valid")
     }
 }
 
@@ -116,24 +169,24 @@ impl Default for VideoScale {
     }
 }
 
+impl FromProps for VideoScale {
+    type Props = VideoScaleProps;
+
+    fn from_props(props: VideoScaleProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            in_info: None,
+        })
+    }
+}
+
 impl Element for VideoScale {
     fn type_name(&self) -> &'static str {
         "videoscale"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "width" => self.width = parse_usize(key, value)?,
-            "height" => self.height = parse_usize(key, value)?,
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of videoscale".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -148,15 +201,15 @@ impl Element for VideoScale {
                 "videoscale: convert NV12 to RGB before scaling".into(),
             ));
         }
-        if self.width == 0 || self.height == 0 {
+        if self.props.width == 0 || self.props.height == 0 {
             return Err(Error::Negotiation(
                 "videoscale needs width= and height=".into(),
             ));
         }
         self.in_info = Some(v.clone());
         let mut out = v.clone();
-        out.width = self.width;
-        out.height = self.height;
+        out.width = self.props.width;
+        out.height = self.props.height;
         Ok(vec![Caps::Video(out); n_srcs.max(1)])
     }
 
@@ -165,17 +218,18 @@ impl Element for VideoScale {
             return Ok(Flow::Continue);
         };
         let v = self.in_info.as_ref().unwrap();
-        let out_buf = if v.width == self.width && v.height == self.height {
+        let (tw, th) = (self.props.width, self.props.height);
+        let out_buf = if v.width == tw && v.height == th {
             buf
         } else {
             let ch = v.format.channels();
-            let mut data = ChunkPool::global().take(self.width * self.height * ch);
+            let mut data = ChunkPool::global().take(tw * th * ch);
             scale_bilinear_into(
                 v.format,
                 v.width,
                 v.height,
-                self.width,
-                self.height,
+                tw,
+                th,
                 buf.chunk().as_bytes(),
                 &mut data,
             );
@@ -189,24 +243,46 @@ impl Element for VideoScale {
     }
 }
 
-/// Rectangle crop. Properties: `left`, `top`, `width`, `height`.
+/// Typed properties of [`VideoCrop`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VideoCropProps {
+    pub left: usize,
+    pub top: usize,
+    /// Crop width (`width`, required).
+    pub width: usize,
+    /// Crop height (`height`, required).
+    pub height: usize,
+}
+
+impl Props for VideoCropProps {
+    const FACTORY: &'static str = "videocrop";
+    const KEYS: &'static [&'static str] = &["left", "top", "width", "height"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "left" => self.left = parse_usize(key, value)?,
+            "top" => self.top = parse_usize(key, value)?,
+            "width" => self.width = parse_usize(key, value)?,
+            "height" => self.height = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(VideoCrop::from_props(self)?))
+    }
+}
+
+/// Rectangle crop.
 pub struct VideoCrop {
-    left: usize,
-    top: usize,
-    width: usize,
-    height: usize,
+    props: VideoCropProps,
     in_info: Option<VideoInfo>,
 }
 
 impl VideoCrop {
     pub fn new() -> Self {
-        Self {
-            left: 0,
-            top: 0,
-            width: 0,
-            height: 0,
-            in_info: None,
-        }
+        Self::from_props(VideoCropProps::default()).expect("defaults are valid")
     }
 }
 
@@ -216,39 +292,40 @@ impl Default for VideoCrop {
     }
 }
 
+impl FromProps for VideoCrop {
+    type Props = VideoCropProps;
+
+    fn from_props(props: VideoCropProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            in_info: None,
+        })
+    }
+}
+
 impl Element for VideoCrop {
     fn type_name(&self) -> &'static str {
         "videocrop"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "left" => self.left = parse_usize(key, value)?,
-            "top" => self.top = parse_usize(key, value)?,
-            "width" => self.width = parse_usize(key, value)?,
-            "height" => self.height = parse_usize(key, value)?,
-            _ => {
-                return Err(Error::Property {
-                    key: key.into(),
-                    value: value.into(),
-                    reason: "unknown property of videocrop".into(),
-                })
-            }
-        }
-        Ok(())
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
         let Caps::Video(v) = &in_caps[0] else {
             return Err(Error::Negotiation("videocrop needs video input".into()));
         };
-        if self.width == 0 || self.height == 0 {
+        if self.props.width == 0 || self.props.height == 0 {
             return Err(Error::Negotiation("videocrop needs width/height".into()));
         }
         self.in_info = Some(v.clone());
         let mut out = v.clone();
-        out.width = self.width.min(v.width - self.left.min(v.width));
-        out.height = self.height.min(v.height - self.top.min(v.height));
+        out.width = self.props.width.min(v.width - self.props.left.min(v.width));
+        out.height = self
+            .props
+            .height
+            .min(v.height - self.props.top.min(v.height));
         Ok(vec![Caps::Video(out); n_srcs.max(1)])
     }
 
@@ -258,8 +335,14 @@ impl Element for VideoCrop {
         };
         let v = self.in_info.as_ref().unwrap();
         let ch = v.format.channels();
-        let (x, y, w, h) =
-            crop_rect(v.width, v.height, self.left, self.top, self.width, self.height);
+        let (x, y, w, h) = crop_rect(
+            v.width,
+            v.height,
+            self.props.left,
+            self.props.top,
+            self.props.width,
+            self.props.height,
+        );
         let mut data = ChunkPool::global().take(w * h * ch);
         crop_into(v.format, v.width, x, y, w, h, buf.chunk().as_bytes(), &mut data);
         let mut out = Buffer::single(buf.pts_ns, Chunk::from_pooled(data));
@@ -269,18 +352,62 @@ impl Element for VideoCrop {
     }
 }
 
-/// Horizontal/vertical flip. Property: `method` (horizontal|vertical).
+/// Flip direction of [`VideoFlip`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlipMethod {
+    Horizontal,
+    Vertical,
+}
+
+/// Typed properties of [`VideoFlip`].
+#[derive(Debug, Clone, Copy)]
+pub struct VideoFlipProps {
+    /// Flip axis (`method=horizontal|vertical`).
+    pub method: FlipMethod,
+}
+
+impl Default for VideoFlipProps {
+    fn default() -> Self {
+        Self {
+            method: FlipMethod::Horizontal,
+        }
+    }
+}
+
+impl Props for VideoFlipProps {
+    const FACTORY: &'static str = "videoflip";
+    const KEYS: &'static [&'static str] = &["method"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            // launch-string compatibility: anything except "horizontal"
+            // selects the vertical flip
+            "method" => {
+                self.method = if value == "horizontal" {
+                    FlipMethod::Horizontal
+                } else {
+                    FlipMethod::Vertical
+                }
+            }
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(VideoFlip::from_props(self)?))
+    }
+}
+
+/// Horizontal/vertical flip.
 pub struct VideoFlip {
-    horizontal: bool,
+    props: VideoFlipProps,
     in_info: Option<VideoInfo>,
 }
 
 impl VideoFlip {
     pub fn new() -> Self {
-        Self {
-            horizontal: true,
-            in_info: None,
-        }
+        Self::from_props(VideoFlipProps::default()).expect("defaults are valid")
     }
 }
 
@@ -290,23 +417,24 @@ impl Default for VideoFlip {
     }
 }
 
+impl FromProps for VideoFlip {
+    type Props = VideoFlipProps;
+
+    fn from_props(props: VideoFlipProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            in_info: None,
+        })
+    }
+}
+
 impl Element for VideoFlip {
     fn type_name(&self) -> &'static str {
         "videoflip"
     }
 
     fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "method" => {
-                self.horizontal = value == "horizontal";
-                Ok(())
-            }
-            _ => Err(Error::Property {
-                key: key.into(),
-                value: value.into(),
-                reason: "unknown property of videoflip".into(),
-            }),
-        }
+        self.props.set(key, value)
     }
 
     fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
@@ -326,7 +454,7 @@ impl Element for VideoFlip {
         let src = buf.chunk().as_bytes();
         let mut out = ChunkPool::global().take(src.len());
         let (w, h) = (v.width, v.height);
-        if self.horizontal {
+        if self.props.method == FlipMethod::Horizontal {
             for y in 0..h {
                 for x in 0..w {
                     let s = (y * w + x) * ch;
@@ -368,9 +496,11 @@ mod tests {
 
     #[test]
     fn scale_halves() {
-        let mut el = VideoScale::new();
-        el.set_property("width", "2").unwrap();
-        el.set_property("height", "2").unwrap();
+        let mut el = VideoScale::from_props(VideoScaleProps {
+            width: 2,
+            height: 2,
+        })
+        .unwrap();
         let caps = Caps::parse("video/x-raw,format=GRAY8,width=4,height=4,framerate=30").unwrap();
         el.negotiate(&[caps], 1).unwrap();
         let buf = Buffer::single(0, Chunk::from_vec((0..16).collect()));
@@ -400,5 +530,12 @@ mod tests {
         let buf = Buffer::single(0, Chunk::from_vec(vec![1, 2, 3]));
         let out = drive(&mut el, 0, buf);
         assert_eq!(out[0].chunk().as_bytes_unaccounted(), &[3, 2, 1]);
+    }
+
+    #[test]
+    fn typed_props_reject_unknown_keys_with_suggestion() {
+        let mut p = VideoScaleProps::default();
+        let err = p.set("widht", "4").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"width\"?"), "{err}");
     }
 }

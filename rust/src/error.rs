@@ -9,6 +9,17 @@ pub enum Error {
     /// Pipeline description could not be parsed.
     Parse(String),
 
+    /// Pipeline description could not be parsed — with the byte span of
+    /// the offending token in the original description and, when the
+    /// parser knows it, the element being configured.
+    ParseAt {
+        message: String,
+        /// Byte range `[start, end)` into the launch description.
+        span: (usize, usize),
+        /// Name of the element the error is attributed to.
+        element: Option<String>,
+    },
+
     /// Caps negotiation between two linked pads failed.
     Negotiation(String),
 
@@ -39,6 +50,17 @@ impl std::fmt::Display for Error {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::ParseAt {
+                message,
+                span,
+                element,
+            } => {
+                write!(f, "parse error at bytes {}..{}", span.0, span.1)?;
+                if let Some(el) = element {
+                    write!(f, " (element {el})")?;
+                }
+                write!(f, ": {message}")
+            }
             Error::Negotiation(msg) => write!(f, "negotiation failed: {msg}"),
             Error::Property { key, value, reason } => {
                 write!(f, "bad property {key}={value}: {reason}")
@@ -77,6 +99,21 @@ impl Error {
             reason: reason.into(),
         }
     }
+
+    /// The message without its variant prefix — used when a lower-level
+    /// error is re-wrapped into a span-carrying [`Error::ParseAt`], so the
+    /// final rendering does not stutter ("parse error ...: parse error:").
+    pub fn bare_message(&self) -> String {
+        match self {
+            Error::Parse(m)
+            | Error::Negotiation(m)
+            | Error::Graph(m)
+            | Error::Runtime(m)
+            | Error::Manifest(m) => m.clone(),
+            Error::ParseAt { message, .. } => message.clone(),
+            other => other.to_string(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +139,27 @@ mod tests {
             Error::element("queue", "boom").to_string(),
             "element queue: boom"
         );
+    }
+
+    #[test]
+    fn parse_at_renders_span_and_element() {
+        let e = Error::ParseAt {
+            message: "bad property num-buffers=nope: expected integer".into(),
+            span: (13, 29),
+            element: Some("videotestsrc0".into()),
+        };
+        assert_eq!(
+            e.to_string(),
+            "parse error at bytes 13..29 (element videotestsrc0): \
+             bad property num-buffers=nope: expected integer"
+        );
+        let anon = Error::ParseAt {
+            message: "dangling '!'".into(),
+            span: (0, 1),
+            element: None,
+        };
+        assert_eq!(anon.to_string(), "parse error at bytes 0..1: dangling '!'");
+        assert_eq!(anon.bare_message(), "dangling '!'");
     }
 
     #[test]

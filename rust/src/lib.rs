@@ -28,6 +28,13 @@
 //!   mutate in place (copy-on-write), so the steady-state hot path runs
 //!   without fresh heap allocations.
 //!
+//! The public API is layered like the paper's (see DESIGN.md "Public
+//! API"): gst-launch strings ([`pipeline::Pipeline::parse`]), a typed
+//! fluent builder ([`pipeline::PipelineBuilder`]) over per-element
+//! props structs ([`element::Props`]), app I/O (`appsrc` push handles,
+//! `tensor_sink` callbacks), and a live-control surface on a playing
+//! pipeline ([`pipeline::Running`]).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -39,6 +46,28 @@
 //!      tensor_converter ! tensor_transform mode=normalize ! \
 //!      tensor_sink name=out",
 //! )?;
+//! pipeline.run()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The same pipeline through the typed builder (properties are struct
+//! fields, checked at compile/construction time):
+//!
+//! ```no_run
+//! use nnstreamer::elements::converter::TensorConverterProps;
+//! use nnstreamer::elements::sinks::TensorSinkProps;
+//! use nnstreamer::elements::sources::VideoTestSrcProps;
+//! use nnstreamer::elements::transform::TensorTransformProps;
+//! use nnstreamer::pipeline::PipelineBuilder;
+//!
+//! # fn main() -> nnstreamer::Result<()> {
+//! let mut b = PipelineBuilder::new();
+//! b.chain(VideoTestSrcProps { num_buffers: Some(32), ..Default::default() })?
+//!     .chain(TensorConverterProps)?
+//!     .chain(TensorTransformProps::normalize())?
+//!     .chain_named("out", TensorSinkProps::default())?;
+//! let mut pipeline = b.build();
 //! pipeline.run()?;
 //! # Ok(())
 //! # }

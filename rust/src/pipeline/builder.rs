@@ -1,0 +1,227 @@
+//! Fluent, typed pipeline construction — the programmatic counterpart of
+//! the launch-string front door.
+//!
+//! [`PipelineBuilder`] keeps a *cursor* on the element most recently
+//! chained, mirroring how a gst-launch line reads: [`chain`] adds an
+//! element (typed props, no strings) and links it after the cursor,
+//! [`from`] moves the cursor to a named element (the `name. !` branch
+//! idiom), and [`to`] terminates a chain into an existing element (the
+//! `! name.` idiom, used to wire mux/merge inputs). Chaining a sink
+//! clears the cursor, exactly like the end of a gst-launch chain.
+//!
+//! [`chain`]: PipelineBuilder::chain
+//! [`from`]: PipelineBuilder::from
+//! [`to`]: PipelineBuilder::to
+
+use crate::element::{PadSpec, Props};
+use crate::error::{Error, Result};
+use crate::pipeline::graph::{Graph, NodeId};
+use crate::pipeline::Pipeline;
+use crate::tensor::Caps;
+
+/// Builds a [`Pipeline`] from typed element props.
+///
+/// ```
+/// use nnstreamer::elements::converter::TensorConverterProps;
+/// use nnstreamer::elements::sinks::TensorSinkProps;
+/// use nnstreamer::elements::sources::VideoTestSrcProps;
+/// use nnstreamer::elements::transform::TensorTransformProps;
+/// use nnstreamer::pipeline::PipelineBuilder;
+///
+/// # fn main() -> nnstreamer::Result<()> {
+/// let mut b = PipelineBuilder::new();
+/// b.chain(VideoTestSrcProps {
+///     num_buffers: Some(4),
+///     width: 16,
+///     height: 16,
+///     framerate: 600.0,
+///     ..Default::default()
+/// })?
+///     .chain(TensorConverterProps)?
+///     .chain(TensorTransformProps::normalize())?
+///     .chain_named("out", TensorSinkProps::default())?;
+///
+/// let mut pipeline = b.build();
+/// let report = pipeline.run()?;
+/// assert_eq!(report.element("out").unwrap().buffers_in(), 4);
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Default)]
+pub struct PipelineBuilder {
+    graph: Graph,
+    cursor: Option<NodeId>,
+}
+
+impl PipelineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Node id of a named element (for mixed typed/Graph-level work).
+    pub fn node(&self, name: &str) -> Option<NodeId> {
+        self.graph.by_name(name)
+    }
+
+    fn attach(&mut self, id: NodeId) -> Result<&mut Self> {
+        if let Some(cur) = self.cursor {
+            self.graph.link(cur, id)?;
+        }
+        let is_sink = matches!(self.graph.node(id).element.src_pads(), PadSpec::Fixed(0));
+        self.cursor = if is_sink { None } else { Some(id) };
+        Ok(self)
+    }
+
+    /// Add an element from typed props (auto-named `factory{N}`), linked
+    /// after the cursor; the new element becomes the cursor.
+    pub fn chain<P: Props>(&mut self, props: P) -> Result<&mut Self> {
+        let id = self.graph.add_props(props)?;
+        self.attach(id)
+    }
+
+    /// Like [`chain`](PipelineBuilder::chain) with an explicit element
+    /// name (referenced later by [`from`](PipelineBuilder::from) /
+    /// [`to`](PipelineBuilder::to), by live control on [`Running`], and
+    /// in reports).
+    ///
+    /// [`Running`]: crate::pipeline::Running
+    pub fn chain_named<P: Props>(
+        &mut self,
+        name: impl Into<String>,
+        props: P,
+    ) -> Result<&mut Self> {
+        let element = props.into_element()?;
+        let id = self.graph.add_element(name, element)?;
+        self.attach(id)
+    }
+
+    /// Insert a capsfilter restricting the current link
+    /// (`! video/x-raw,... !` in launch syntax).
+    pub fn caps(&mut self, caps: Caps) -> Result<&mut Self> {
+        self.chain(crate::elements::flow::CapsFilterProps { caps })
+    }
+
+    /// Add a named element **without** linking it (cursor unchanged) —
+    /// for merge/mux-style elements whose inputs are wired afterwards
+    /// with [`to`](PipelineBuilder::to) in pad order.
+    pub fn add_named<P: Props>(
+        &mut self,
+        name: impl Into<String>,
+        props: P,
+    ) -> Result<&mut Self> {
+        let element = props.into_element()?;
+        self.graph.add_element(name, element)?;
+        Ok(self)
+    }
+
+    /// Move the cursor to a named element — start a branch from it
+    /// (`name. ! ...`).
+    pub fn from(&mut self, name: &str) -> Result<&mut Self> {
+        let id = self
+            .graph
+            .by_name(name)
+            .ok_or_else(|| Error::Graph(format!("no element named {name:?} to branch from")))?;
+        self.cursor = Some(id);
+        Ok(self)
+    }
+
+    /// Link the cursor into a named element and end the chain
+    /// (`... ! name.`) — how additional mux/merge inputs are wired.
+    pub fn to(&mut self, name: &str) -> Result<&mut Self> {
+        let src = self
+            .cursor
+            .ok_or_else(|| Error::Graph("to() without a current chain".into()))?;
+        let dst = self
+            .graph
+            .by_name(name)
+            .ok_or_else(|| Error::Graph(format!("no element named {name:?} to link into")))?;
+        self.graph.link(src, dst)?;
+        self.cursor = None;
+        Ok(self)
+    }
+
+    /// Explicit link between two named elements (next free pads).
+    pub fn link(&mut self, src: &str, dst: &str) -> Result<&mut Self> {
+        let s = self
+            .graph
+            .by_name(src)
+            .ok_or_else(|| Error::Graph(format!("no element named {src:?}")))?;
+        let d = self
+            .graph
+            .by_name(dst)
+            .ok_or_else(|| Error::Graph(format!("no element named {dst:?}")))?;
+        self.graph.link(s, d)?;
+        Ok(self)
+    }
+
+    /// Finish, returning the raw [`Graph`] (apps that post-process the
+    /// graph before running).
+    pub fn into_graph(self) -> Graph {
+        self.graph
+    }
+
+    /// Finish into a [`Pipeline`].
+    pub fn build(self) -> Pipeline {
+        Pipeline::new(self.graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::flow::{QueueProps, TeeProps};
+    use crate::elements::sinks::FakeSinkProps;
+    use crate::elements::sources::VideoTestSrcProps;
+
+    #[test]
+    fn linear_chain_links_in_order() {
+        let mut b = PipelineBuilder::new();
+        b.chain(VideoTestSrcProps {
+            num_buffers: Some(2),
+            ..Default::default()
+        })
+        .unwrap()
+        .chain(QueueProps::default())
+        .unwrap()
+        .chain_named("out", FakeSinkProps::default())
+        .unwrap();
+        let g = b.into_graph();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.links.len(), 2);
+        assert!(g.by_name("out").is_some());
+    }
+
+    #[test]
+    fn sink_clears_cursor_and_branching_works() {
+        let mut b = PipelineBuilder::new();
+        b.chain(VideoTestSrcProps {
+            num_buffers: Some(2),
+            width: 8,
+            height: 8,
+            framerate: 600.0,
+            ..Default::default()
+        })
+        .unwrap()
+        .chain_named("t", TeeProps)
+        .unwrap()
+        .chain_named("s1", FakeSinkProps::default())
+        .unwrap();
+        // cursor cleared by the sink: chaining again without from() is an
+        // orphan chain, so branch explicitly
+        b.from("t")
+            .unwrap()
+            .chain_named("s2", FakeSinkProps::default())
+            .unwrap();
+        let mut p = b.build();
+        let report = p.run().unwrap();
+        assert_eq!(report.element("s1").unwrap().buffers_in(), 2);
+        assert_eq!(report.element("s2").unwrap().buffers_in(), 2);
+    }
+
+    #[test]
+    fn from_unknown_name_errors() {
+        let mut b = PipelineBuilder::new();
+        assert!(b.from("nope").is_err());
+        assert!(b.to("nope").is_err());
+    }
+}

@@ -2,7 +2,7 @@
 
 use std::collections::HashMap;
 
-use crate::element::{Element, PadSpec, Registry};
+use crate::element::{Element, PadSpec, Props, Registry};
 use crate::error::{Error, Result};
 use crate::tensor::Caps;
 
@@ -60,6 +60,12 @@ impl Graph {
     /// Add an element by factory name with an auto-generated unique name.
     pub fn add(&mut self, factory: &str) -> Result<NodeId> {
         let element = Registry::make(factory)?;
+        self.add_boxed(factory, element)
+    }
+
+    /// Add an already-constructed element under an auto-generated unique
+    /// name derived from its factory name (`factory{N}`).
+    pub fn add_boxed(&mut self, factory: &str, element: Box<dyn Element>) -> Result<NodeId> {
         let mut i = self.nodes.len();
         loop {
             let name = format!("{factory}{i}");
@@ -68,6 +74,12 @@ impl Graph {
             }
             i += 1;
         }
+    }
+
+    /// Add an element built from typed props (auto-named).
+    pub fn add_props<P: Props>(&mut self, props: P) -> Result<NodeId> {
+        let element = props.into_element()?;
+        self.add_boxed(P::FACTORY, element)
     }
 
     /// Rename a node (used by the parser when it sees `name=`).

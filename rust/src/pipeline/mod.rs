@@ -1,22 +1,36 @@
 //! Pipeline construction and execution.
 //!
-//! [`Pipeline`] is the user-facing entry point: build from a launch string
-//! ([`Pipeline::parse`]) or programmatically via [`Graph`], then [`run`]
-//! to completion or [`play`] for live interaction.
+//! [`Pipeline`] is the user-facing entry point. Three layers of the
+//! public API meet here (see DESIGN.md "Public API"):
+//!
+//! * **launch strings** — [`Pipeline::parse`] accepts gst-launch syntax
+//!   and deserializes properties into the same typed structs the builder
+//!   uses;
+//! * **typed builder** — [`PipelineBuilder`] constructs graphs
+//!   programmatically from compile-time-checked props;
+//! * **live control** — [`play`] returns a [`Running`] whose control
+//!   channel steers a playing pipeline (`set_property`, valves,
+//!   selectors, `tensor_sink` subscriptions), and `appsrc` handles
+//!   ([`Pipeline::appsrc`]) push application data in.
 //!
 //! [`run`]: Pipeline::run
 //! [`play`]: Pipeline::play
 
+pub mod builder;
 pub mod graph;
 pub mod parser;
 pub mod scheduler;
 
+pub use builder::PipelineBuilder;
 pub use graph::{Graph, Link, Node, NodeId};
-pub use scheduler::Running;
+pub use scheduler::{Controller, Running};
 
 use crate::element::Element;
-use crate::error::Result;
+use crate::elements::sinks::AppSink;
+use crate::elements::sources::{AppSrc, AppSrcHandle};
+use crate::error::{Error, Result};
 use crate::metrics::stats::PipelineReport;
+use crate::tensor::Buffer;
 
 pub struct Pipeline {
     pub graph: Graph,
@@ -47,6 +61,51 @@ impl Pipeline {
     /// ```
     pub fn parse(desc: &str) -> Result<Self> {
         Ok(Self::new(parser::parse(desc)?))
+    }
+
+    /// Start a typed, fluent [`PipelineBuilder`].
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::new()
+    }
+
+    /// Push handle of a named [`AppSrc`] — call before [`play`], push
+    /// from any thread afterwards.
+    ///
+    /// [`play`]: Pipeline::play
+    pub fn appsrc(&mut self, name: &str) -> Result<AppSrcHandle> {
+        let id = self
+            .graph
+            .by_name(name)
+            .ok_or_else(|| Error::Graph(format!("no element named {name:?}")))?;
+        self.graph
+            .node_mut(id)
+            .element
+            .as_any()
+            .and_then(|a| a.downcast_mut::<AppSrc>())
+            .map(|src| src.handle())
+            .ok_or_else(|| Error::Graph(format!("element {name:?} is not an appsrc")))
+    }
+
+    /// Receiving end of a named [`AppSink`] — call before [`play`]; the
+    /// channel closes when the sink reaches end-of-stream.
+    ///
+    /// [`play`]: Pipeline::play
+    pub fn appsink(&mut self, name: &str) -> Result<std::sync::mpsc::Receiver<Buffer>> {
+        let id = self
+            .graph
+            .by_name(name)
+            .ok_or_else(|| Error::Graph(format!("no element named {name:?}")))?;
+        self.graph
+            .node_mut(id)
+            .element
+            .as_any()
+            .and_then(|a| a.downcast_mut::<AppSink>())
+            .and_then(|sink| sink.take_receiver())
+            .ok_or_else(|| {
+                Error::Graph(format!(
+                    "element {name:?} is not an appsink (or its receiver was already taken)"
+                ))
+            })
     }
 
     /// Start all element threads; returns a handle for live control.

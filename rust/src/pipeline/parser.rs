@@ -18,11 +18,36 @@
 //! ```text
 //! videotestsrc ! tee name=t   t. ! queue ! fakesink   t. ! queue ! fakesink
 //! ```
+//!
+//! The parser is a thin front-end over the typed property structs: every
+//! `key=value` token is deserialized into the owning element's
+//! [`Props`](crate::element::Props) through `Graph::set_property`, so the
+//! launch string and the [`PipelineBuilder`](super::PipelineBuilder)
+//! configure elements through one validation path. Errors carry the byte
+//! span of the offending token and the element being configured
+//! ([`Error::ParseAt`]).
 
 use crate::element::Registry;
 use crate::error::{Error, Result};
 use crate::pipeline::graph::{Graph, NodeId};
 use crate::tensor::Caps;
+
+/// A lexed token with its byte span in the description.
+struct Token {
+    text: String,
+    start: usize,
+    end: usize,
+}
+
+impl Token {
+    fn error(&self, element: Option<&str>, message: impl Into<String>) -> Error {
+        Error::ParseAt {
+            message: message.into(),
+            span: (self.start, self.end),
+            element: element.map(str::to_string),
+        }
+    }
+}
 
 /// Parse a launch description into a [`Graph`].
 pub fn parse(desc: &str) -> Result<Graph> {
@@ -36,11 +61,11 @@ pub fn parse(desc: &str) -> Result<Graph> {
     // whether a "!" is pending between current and the next endpoint
     let mut pending_link = false;
 
-    for tok in tokens {
-        match tok.as_str() {
+    for tok in &tokens {
+        match tok.text.as_str() {
             "!" => {
                 if current.is_none() || pending_link {
-                    return Err(Error::Parse("dangling '!'".into()));
+                    return Err(tok.error(None, "dangling '!'"));
                 }
                 pending_link = true;
             }
@@ -48,13 +73,14 @@ pub fn parse(desc: &str) -> Result<Graph> {
                 // branch reference: `name. ! ...` continues from a named
                 // element; `... ! name.` links into it (gst-launch both ways)
                 let name = &t[..t.len() - 1];
-                let id = g
-                    .by_name(name)
-                    .ok_or_else(|| Error::Parse(format!("unknown branch reference {name:?}")))?;
+                let id = g.by_name(name).ok_or_else(|| {
+                    tok.error(None, format!("unknown branch reference {name:?}"))
+                })?;
                 if pending_link {
                     let src = current
-                        .ok_or_else(|| Error::Parse("link without source".into()))?;
-                    g.link(src, id)?;
+                        .ok_or_else(|| tok.error(None, "link without source"))?;
+                    g.link(src, id)
+                        .map_err(|e| tok.error(Some(name), e.bare_message()))?;
                     pending_link = false;
                     // the chain terminates at the reference
                     current = None;
@@ -66,30 +92,37 @@ pub fn parse(desc: &str) -> Result<Graph> {
                 // property on the current element
                 let (k, v) = t.split_once('=').unwrap();
                 let id = current.unwrap();
-                if k == "name" {
-                    g.rename(id, v)?;
+                let result = if k == "name" {
+                    g.rename(id, v)
                 } else {
-                    g.set_property(id, k, unquote(v))?;
-                }
+                    g.set_property(id, k, unquote(v))
+                };
+                result.map_err(|e| {
+                    let element = g.node(id).name.clone();
+                    tok.error(Some(&element), e.bare_message())
+                })?;
             }
             t if t.contains('/') => {
                 // caps filter
-                let caps = Caps::parse(t)?;
-                let id = g.add("capsfilter")?;
-                g.set_property(id, "caps", &caps.to_string())?;
-                attach(&mut g, &mut current, &mut pending_link, id)?;
+                let caps = Caps::parse(t).map_err(|e| tok.error(None, e.bare_message()))?;
+                let id = g
+                    .add("capsfilter")
+                    .map_err(|e| tok.error(None, e.bare_message()))?;
+                g.set_property(id, "caps", &caps.to_string())
+                    .map_err(|e| tok.error(Some("capsfilter"), e.bare_message()))?;
+                attach(&mut g, &mut current, &mut pending_link, id, tok)?;
             }
             t => {
-                if !Registry::exists(t) {
-                    return Err(Error::Parse(format!("no such element {t:?}")));
-                }
-                let id = g.add(t)?;
-                attach(&mut g, &mut current, &mut pending_link, id)?;
+                // element factory: Registry::make reports unknown names
+                // with a nearest-factory suggestion
+                let id = g.add(t).map_err(|e| tok.error(None, e.bare_message()))?;
+                attach(&mut g, &mut current, &mut pending_link, id, tok)?;
             }
         }
     }
     if pending_link {
-        return Err(Error::Parse("pipeline ends with '!'".into()));
+        let last = tokens.last().expect("non-empty");
+        return Err(last.error(None, "pipeline ends with '!'"));
     }
     Ok(g)
 }
@@ -99,10 +132,13 @@ fn attach(
     current: &mut Option<NodeId>,
     pending_link: &mut bool,
     id: NodeId,
+    tok: &Token,
 ) -> Result<()> {
     if *pending_link {
-        let src = current.ok_or_else(|| Error::Parse("link without source".into()))?;
-        g.link(src, id)?;
+        let src = current.ok_or_else(|| tok.error(None, "link without source"))?;
+        let dst_name = g.node(id).name.clone();
+        g.link(src, id)
+            .map_err(|e| tok.error(Some(&dst_name), e.bare_message()))?;
         *pending_link = false;
     }
     *current = Some(id);
@@ -120,12 +156,15 @@ fn unquote(v: &str) -> &str {
     }
 }
 
-/// Split on whitespace, honoring quotes inside property values.
-fn tokenize(desc: &str) -> Result<Vec<String>> {
+/// Split on whitespace, honoring quotes inside property values. Each
+/// token records its byte span in the original description.
+fn tokenize(desc: &str) -> Result<Vec<Token>> {
     let mut tokens = Vec::new();
     let mut cur = String::new();
+    let mut cur_start = 0usize;
     let mut quote: Option<char> = None;
-    for c in desc.chars() {
+    let mut quote_start = 0usize;
+    for (pos, c) in desc.char_indices() {
         match quote {
             Some(q) => {
                 cur.push(c);
@@ -135,23 +174,44 @@ fn tokenize(desc: &str) -> Result<Vec<String>> {
             }
             None => match c {
                 '"' | '\'' => {
+                    if cur.is_empty() {
+                        cur_start = pos;
+                    }
                     cur.push(c);
                     quote = Some(c);
+                    quote_start = pos;
                 }
                 c if c.is_whitespace() => {
                     if !cur.is_empty() {
-                        tokens.push(std::mem::take(&mut cur));
+                        tokens.push(Token {
+                            text: std::mem::take(&mut cur),
+                            start: cur_start,
+                            end: pos,
+                        });
                     }
                 }
-                c => cur.push(c),
+                c => {
+                    if cur.is_empty() {
+                        cur_start = pos;
+                    }
+                    cur.push(c);
+                }
             },
         }
     }
     if quote.is_some() {
-        return Err(Error::Parse("unterminated quote".into()));
+        return Err(Error::ParseAt {
+            message: "unterminated quote".into(),
+            span: (quote_start, desc.len()),
+            element: None,
+        });
     }
     if !cur.is_empty() {
-        tokens.push(cur);
+        tokens.push(Token {
+            text: cur,
+            start: cur_start,
+            end: desc.len(),
+        });
     }
     Ok(tokens)
 }
@@ -235,5 +295,77 @@ mod tests {
         assert!(
             parse("videotestsrc ! tensor_filter latency-budget=-3 ! fakesink").is_err()
         );
+    }
+
+    // -- span-carrying error reporting (satellite) ----------------------
+
+    fn parse_at(desc: &str) -> (String, (usize, usize), Option<String>) {
+        match parse(desc).unwrap_err() {
+            Error::ParseAt {
+                message,
+                span,
+                element,
+            } => (message, span, element),
+            other => panic!("expected ParseAt, got {other}"),
+        }
+    }
+
+    #[test]
+    fn bad_property_value_reports_span_and_element() {
+        let desc = "videotestsrc num-buffers=nope ! fakesink";
+        let (msg, span, element) = parse_at(desc);
+        assert_eq!(&desc[span.0..span.1], "num-buffers=nope");
+        assert_eq!(element.as_deref(), Some("videotestsrc0"));
+        assert!(msg.contains("expected integer"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_property_reports_renamed_element() {
+        let desc = "videotestsrc name=cam frobnicate=1 ! fakesink";
+        let (msg, span, element) = parse_at(desc);
+        assert_eq!(&desc[span.0..span.1], "frobnicate=1");
+        assert_eq!(element.as_deref(), Some("cam"));
+        assert!(msg.contains("unknown property"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_factory_reports_span_and_suggestion() {
+        let desc = "videotestsrc ! qeueu ! fakesink";
+        let (msg, span, element) = parse_at(desc);
+        assert_eq!(&desc[span.0..span.1], "qeueu");
+        assert_eq!(element, None);
+        assert!(msg.contains("did you mean \"queue\"?"), "{msg}");
+    }
+
+    #[test]
+    fn dangling_link_reports_span() {
+        let desc = "! fakesink";
+        let (msg, span, _) = parse_at(desc);
+        assert_eq!(&desc[span.0..span.1], "!");
+        assert!(msg.contains("dangling"), "{msg}");
+    }
+
+    #[test]
+    fn trailing_link_reports_span() {
+        let desc = "videotestsrc !";
+        let (msg, span, _) = parse_at(desc);
+        assert_eq!(&desc[span.0..span.1], "!");
+        assert!(msg.contains("ends with"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_branch_reports_span() {
+        let desc = "videotestsrc ! fakesink nope. ! fakesink";
+        let (msg, span, _) = parse_at(desc);
+        assert_eq!(&desc[span.0..span.1], "nope.");
+        assert!(msg.contains("unknown branch reference"), "{msg}");
+    }
+
+    #[test]
+    fn unterminated_quote_reports_span_to_end() {
+        let desc = "videotestsrc pattern=\"smpte ! fakesink";
+        let (msg, span, _) = parse_at(desc);
+        assert_eq!(span.1, desc.len());
+        assert!(msg.contains("unterminated quote"), "{msg}");
     }
 }

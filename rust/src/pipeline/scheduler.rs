@@ -5,19 +5,104 @@
 //! synchronous push + implicit backpressure). `queue` elements raise the
 //! channel capacity and thereby decouple producer from consumer — exactly
 //! the role queues play in the paper's pipelines.
+//!
+//! ## Runtime control
+//!
+//! Each element additionally owns a bounded **control channel**. The
+//! application steers a playing pipeline through [`Running`] (or a
+//! cloneable [`Controller`]): property changes, valve open/close,
+//! selector switching and sink subscriptions are enqueued as
+//! [`ControlMsg`]s and applied *by the element's own thread*, always
+//! before the next item it processes. That ordering makes control
+//! deterministic with respect to the data stream: a message sent before
+//! a buffer enters the pipeline is in effect when that buffer reaches
+//! the element.
 
+use std::collections::HashMap;
 use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::element::{Ctx, Element, Flow, Item, LinkSender};
+use crate::element::{ControlMsg, Ctx, Element, Flow, Item, LinkSender};
 use crate::error::{Error, Result};
 use crate::metrics::stats::{ElementStats, PipelineReport};
 use crate::metrics::CpuTracker;
 use crate::pipeline::graph::Graph;
+use crate::tensor::Buffer;
 
-/// A running pipeline: join to completion via [`Running::wait`].
+/// Capacity of each element's control mailbox. Control messages are tiny
+/// and drained before every processed item; the bound only matters if an
+/// element is starved of input while the application keeps sending.
+const CONTROL_CAPACITY: usize = 64;
+
+/// Cloneable, thread-safe handle for steering a playing pipeline.
+///
+/// Obtained from [`Running::controller`]; all [`Running`] control methods
+/// delegate here. Sending to an element that already finished (post-EOS)
+/// fails with a runtime error.
+#[derive(Clone)]
+pub struct Controller {
+    channels: Arc<HashMap<String, SyncSender<ControlMsg>>>,
+}
+
+impl Controller {
+    /// Enqueue a raw control message for a named element.
+    pub fn send(&self, element: &str, msg: ControlMsg) -> Result<()> {
+        let tx = self.channels.get(element).ok_or_else(|| {
+            let names = self.channels.keys().map(String::as_str);
+            Error::Runtime(format!(
+                "no element named {element:?} in this pipeline{}",
+                crate::element::registry::did_you_mean(element, names)
+            ))
+        })?;
+        tx.send(msg).map_err(|_| {
+            Error::Runtime(format!("element {element:?} is no longer running"))
+        })
+    }
+
+    /// Change a property of a playing element (applied by the element's
+    /// thread before its next buffer). Invalid keys/values surface as the
+    /// element's failure when the pipeline is joined.
+    pub fn set_property(&self, element: &str, key: &str, value: &str) -> Result<()> {
+        self.send(
+            element,
+            ControlMsg::SetProperty {
+                key: key.to_string(),
+                value: value.to_string(),
+            },
+        )
+    }
+
+    /// Open (`true`) or close (`false`) a named `valve`.
+    pub fn set_valve(&self, element: &str, open: bool) -> Result<()> {
+        self.set_property(element, "drop", if open { "false" } else { "true" })
+    }
+
+    /// Switch the active sink pad of a named `input-selector`.
+    pub fn select_input(&self, element: &str, pad: usize) -> Result<()> {
+        self.set_property(element, "active-pad", &pad.to_string())
+    }
+
+    /// Switch the active src pad of a named `output-selector`.
+    pub fn select_output(&self, element: &str, pad: usize) -> Result<()> {
+        self.set_property(element, "active-pad", &pad.to_string())
+    }
+
+    /// Attach a per-buffer callback to a named `tensor_sink`. The
+    /// callback runs on the sink's thread and observes every buffer the
+    /// sink processes (the pull-based collection additionally caps
+    /// retention at `max-kept`).
+    pub fn subscribe<F>(&self, element: &str, callback: F) -> Result<()>
+    where
+        F: FnMut(&Buffer) + Send + 'static,
+    {
+        self.send(element, ControlMsg::Subscribe(Box::new(callback)))
+    }
+}
+
+/// A running pipeline: join to completion via [`Running::wait`], steer it
+/// live through the control methods (see [`Controller`]).
 pub struct Running {
     threads: Vec<std::thread::JoinHandle<Result<Box<dyn Element>>>>,
     node_names: Vec<String>,
@@ -26,12 +111,55 @@ pub struct Running {
     pub epoch: Instant,
     cpu: CpuTracker,
     traffic0: crate::metrics::traffic::Snapshot,
+    controller: Controller,
 }
 
 impl Running {
     /// Request a stop (live sources exit at the next frame boundary).
     pub fn request_stop(&self) {
         self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// A cloneable control handle usable from any thread, and after this
+    /// `Running` has been consumed by [`wait`](Running::wait).
+    pub fn controller(&self) -> Controller {
+        self.controller.clone()
+    }
+
+    /// See [`Controller::set_property`].
+    pub fn set_property(&self, element: &str, key: &str, value: &str) -> Result<()> {
+        self.controller.set_property(element, key, value)
+    }
+
+    /// See [`Controller::set_valve`].
+    pub fn set_valve(&self, element: &str, open: bool) -> Result<()> {
+        self.controller.set_valve(element, open)
+    }
+
+    /// See [`Controller::select_input`].
+    pub fn select_input(&self, element: &str, pad: usize) -> Result<()> {
+        self.controller.select_input(element, pad)
+    }
+
+    /// See [`Controller::select_output`].
+    pub fn select_output(&self, element: &str, pad: usize) -> Result<()> {
+        self.controller.select_output(element, pad)
+    }
+
+    /// See [`Controller::subscribe`].
+    pub fn subscribe<F>(&self, element: &str, callback: F) -> Result<()>
+    where
+        F: FnMut(&Buffer) + Send + 'static,
+    {
+        self.controller.subscribe(element, callback)
+    }
+
+    /// Per-element stats of the live pipeline, by element name.
+    pub fn element_stats(&self, name: &str) -> Option<&Arc<ElementStats>> {
+        self.node_names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.stats[i])
     }
 
     /// Join all element threads and assemble the run report.
@@ -101,6 +229,17 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
         }
     }
 
+    // Per-node control channels (live property changes, subscriptions).
+    let mut control_txs: HashMap<String, SyncSender<ControlMsg>> =
+        HashMap::with_capacity(n);
+    let mut control_rxs: Vec<Option<std::sync::mpsc::Receiver<ControlMsg>>> =
+        (0..n).map(|_| None).collect();
+    for id in 0..n {
+        let (tx, rx) = sync_channel(CONTROL_CAPACITY);
+        control_txs.insert(graph.nodes[id].name.clone(), tx);
+        control_rxs[id] = Some(rx);
+    }
+
     // Build per-node output sender tables.
     let mut outputs: Vec<Vec<Option<LinkSender>>> = (0..n).map(|_| Vec::new()).collect();
     for id in 0..n {
@@ -146,6 +285,7 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
             // can drain ready items mid-handle (tensor_filter batching)
             input: receivers[id].take(),
             pending: std::collections::VecDeque::new(),
+            control: control_rxs[id].take(),
         };
         let name = node.name.clone();
         node_names.push(name.clone());
@@ -172,7 +312,20 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
         epoch,
         cpu: CpuTracker::start(),
         traffic0: crate::metrics::traffic::snapshot(),
+        controller: Controller {
+            channels: Arc::new(control_txs),
+        },
     })
+}
+
+/// Drain and apply every pending control message — called by element
+/// threads before each processed item, so control is ordered with
+/// respect to the data stream.
+fn apply_control(element: &mut dyn Element, ctx: &mut Ctx) -> Result<()> {
+    while let Some(msg) = ctx.try_pull_control() {
+        element.handle_control(msg)?;
+    }
+    Ok(())
 }
 
 fn run_source(element: &mut dyn Element, ctx: &mut Ctx) -> Result<()> {
@@ -181,6 +334,7 @@ fn run_source(element: &mut dyn Element, ctx: &mut Ctx) -> Result<()> {
             break;
         }
         let t0 = Instant::now();
+        apply_control(element, ctx)?;
         let flow = element.generate(ctx)?;
         let busy = t0.elapsed().saturating_sub(ctx.take_idle());
         ctx.stats.record_busy(ctx.domain, busy);
@@ -208,9 +362,17 @@ fn run_consumer(
         if is_eos {
             eos_seen += 1;
         }
-        if !early_eos {
+        if early_eos {
+            // the element is done but still draining input: keep the
+            // control mailbox drained too, so application Controller
+            // sends never back up against a finished element
+            apply_control(element, ctx)?;
+        } else {
             let t0 = Instant::now();
-            let flow = element.handle(pad, item, ctx);
+            // control first: a message enqueued before this item entered
+            // the pipeline is guaranteed to be in effect for it
+            let flow =
+                apply_control(element, ctx).and_then(|_| element.handle(pad, item, ctx));
             let busy = t0.elapsed().saturating_sub(ctx.take_idle());
             ctx.stats.record_busy(ctx.domain, busy);
             match flow {

@@ -1,40 +1,130 @@
-//! "Single API set" analog (§III): run one model without building a
+//! "Single API set" analog (§III): run one model without writing a
 //! pipeline — the unified Tensor-Filter interface NNStreamer exposes to
 //! Tizen (C/.NET) and Android (Java) applications.
+//!
+//! Since the typed-API redesign, [`SingleShot::open`] is itself expressed
+//! over the [`PipelineBuilder`]: it assembles a three-element
+//! `appsrc ! tensor_filter ! appsink` pipeline (typed props, no strings),
+//! keeps it playing, and [`invoke`](SingleShot::invoke) becomes a
+//! push/recv round trip. The model executes through the same pooled
+//! `tensor_filter` path as any other pipeline, so branches, SingleShot
+//! handles, and benches all share one loaded instance per artifact.
+//! The filter is configured with `batch=MAX_BATCH latency-budget=0`, so
+//! back-to-back [`invoke_batch`](SingleShot::invoke_batch) frames that
+//! queue up are executed as stacked single dispatches — outputs stay
+//! bit-identical to per-frame invocation.
 
-use std::sync::Arc;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
 
-use crate::error::Result;
+use crate::elements::filter::{Framework, TensorFilterProps, MAX_BATCH};
+use crate::elements::sinks::AppSinkProps;
+use crate::elements::sources::{AppSrcHandle, AppSrcProps};
+use crate::error::{Error, Result};
+use crate::pipeline::{PipelineBuilder, Running};
 use crate::runtime::{Model, ModelRegistry};
-use crate::tensor::{Chunk, TensorInfo};
+use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
+
+enum Engine {
+    /// A playing `appsrc ! tensor_filter ! appsink` pipeline.
+    Pipeline {
+        push: AppSrcHandle,
+        frames: Receiver<Buffer>,
+        running: Mutex<Option<Running>>,
+    },
+    /// Direct execution against a caller-supplied registry
+    /// ([`SingleShot::open_in`] — multi-directory setups bypass the
+    /// global pool).
+    Direct { model: Arc<Model> },
+}
 
 /// One-shot model invocation handle.
 pub struct SingleShot {
-    model: Arc<Model>,
+    name: String,
+    engine: Engine,
+    inputs: Vec<TensorInfo>,
+    outputs: Vec<TensorInfo>,
 }
 
 impl SingleShot {
-    /// Open a model by artifact name from the global registry.
+    /// Open a model by artifact name from the global registry, backed by
+    /// a playing builder pipeline.
     pub fn open(name: &str) -> Result<Self> {
         let reg = ModelRegistry::global()?;
+        let spec = reg.load(name)?.spec.clone();
+        let caps = if spec.inputs.len() == 1 {
+            Caps::Tensor {
+                info: spec.inputs[0].clone(),
+                fps_millis: 0,
+            }
+        } else {
+            Caps::Tensors {
+                infos: spec.inputs.clone(),
+                fps_millis: 0,
+            }
+        };
+
+        let mut b = PipelineBuilder::new();
+        b.chain_named("in", AppSrcProps { caps })?
+            .chain_named(
+                "model",
+                TensorFilterProps {
+                    framework: Framework::Xla,
+                    model: name.to_string(),
+                    batch: MAX_BATCH,
+                    ..Default::default()
+                },
+            )?
+            .chain_named("out", AppSinkProps::default())?;
+        let mut pipeline = b.build();
+        let push = pipeline.appsrc("in")?;
+        let frames = pipeline.appsink("out")?;
+        let running = pipeline.play()?;
+
         Ok(Self {
-            model: reg.load(name)?,
+            name: name.to_string(),
+            engine: Engine::Pipeline {
+                push,
+                frames,
+                running: Mutex::new(Some(running)),
+            },
+            inputs: spec.inputs,
+            outputs: spec.outputs,
         })
     }
 
-    /// Open from a specific registry (tests, multi-directory setups).
+    /// Open from a specific registry (tests, multi-directory setups);
+    /// executes the model directly, outside the pipeline/pool path.
     pub fn open_in(reg: &ModelRegistry, name: &str) -> Result<Self> {
+        let model = reg.load(name)?;
         Ok(Self {
-            model: reg.load(name)?,
+            name: name.to_string(),
+            inputs: model.spec.inputs.clone(),
+            outputs: model.spec.outputs.clone(),
+            engine: Engine::Direct { model },
         })
     }
 
     pub fn input_info(&self) -> &[TensorInfo] {
-        &self.model.spec.inputs
+        &self.inputs
     }
 
     pub fn output_info(&self) -> &[TensorInfo] {
-        &self.model.spec.outputs
+        &self.outputs
+    }
+
+    /// The real failure behind a dead pipeline, if it can still be
+    /// collected.
+    fn pipeline_failure(&self) -> Error {
+        if let Engine::Pipeline { running, .. } = &self.engine {
+            let taken = running.lock().unwrap_or_else(|e| e.into_inner()).take();
+            if let Some(r) = taken {
+                if let Err(e) = r.wait() {
+                    return e;
+                }
+            }
+        }
+        Error::Runtime(format!("single-shot pipeline for {:?} terminated", self.name))
     }
 
     /// Invoke the model on raw f32 tensors (one slice per model input).
@@ -52,24 +142,86 @@ impl SingleShot {
     /// ```
     pub fn invoke(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let chunks: Vec<Chunk> = inputs.iter().map(|d| Chunk::from_f32(d)).collect();
-        let refs: Vec<&Chunk> = chunks.iter().collect();
-        let outs = self.model.execute(&refs)?;
-        outs.iter().map(|c| c.to_f32_vec()).collect()
+        match &self.engine {
+            Engine::Pipeline { push, frames, .. } => {
+                push.push(Buffer::new(0, chunks))
+                    .map_err(|_| self.pipeline_failure())?;
+                let out = frames.recv().map_err(|_| self.pipeline_failure())?;
+                out.chunks.iter().map(|c| c.to_f32_vec()).collect()
+            }
+            Engine::Direct { model } => {
+                let refs: Vec<&Chunk> = chunks.iter().collect();
+                let outs = model.execute(&refs)?;
+                outs.iter().map(|c| c.to_f32_vec()).collect()
+            }
+        }
     }
 
-    /// Invoke a **single-input** model on several frames in one dispatch
-    /// (see [`Model::execute_batch`]); returns per-frame output lists.
-    /// De-batched results are bit-identical to per-frame [`invoke`] calls.
+    /// Invoke a **single-input** model on several frames; queued frames
+    /// are stacked into single dispatches by the underlying batching
+    /// filter. Returns per-frame output lists, bit-identical to per-frame
+    /// [`invoke`] calls. Pushes and result reads are interleaved with a
+    /// bounded in-flight window, so any frame count stays within the
+    /// pipeline's buffering.
     ///
     /// [`invoke`]: SingleShot::invoke
     pub fn invoke_batch(&self, frames: &[&[f32]]) -> Result<Vec<Vec<Vec<f32>>>> {
-        let chunks: Vec<Chunk> = frames.iter().map(|d| Chunk::from_f32(d)).collect();
-        let frame_refs: Vec<Vec<&Chunk>> = chunks.iter().map(|c| vec![c]).collect();
-        let slices: Vec<&[&Chunk]> = frame_refs.iter().map(|v| v.as_slice()).collect();
-        let outs = self.model.execute_batch(&slices)?;
-        outs.into_iter()
-            .map(|frame| frame.iter().map(|c| c.to_f32_vec()).collect())
-            .collect()
+        match &self.engine {
+            Engine::Pipeline {
+                push,
+                frames: out_rx,
+                ..
+            } => {
+                // keep at most one filter-batch of frames in flight —
+                // well inside the pipeline's channel buffering, large
+                // enough that the filter can stack full batches
+                const IN_FLIGHT: usize = MAX_BATCH;
+                let mut outs = Vec::with_capacity(frames.len());
+                let mut pushed = 0usize;
+                while outs.len() < frames.len() {
+                    while pushed < frames.len() && pushed - outs.len() < IN_FLIGHT {
+                        let buf = Buffer::new(
+                            pushed as u64,
+                            vec![Chunk::from_f32(frames[pushed])],
+                        );
+                        push.push(buf).map_err(|_| self.pipeline_failure())?;
+                        pushed += 1;
+                    }
+                    let out = out_rx.recv().map_err(|_| self.pipeline_failure())?;
+                    outs.push(
+                        out.chunks
+                            .iter()
+                            .map(|c| c.to_f32_vec())
+                            .collect::<Result<Vec<_>>>()?,
+                    );
+                }
+                Ok(outs)
+            }
+            Engine::Direct { model } => {
+                let chunks: Vec<Chunk> =
+                    frames.iter().map(|d| Chunk::from_f32(d)).collect();
+                let frame_refs: Vec<Vec<&Chunk>> =
+                    chunks.iter().map(|c| vec![c]).collect();
+                let slices: Vec<&[&Chunk]> =
+                    frame_refs.iter().map(|v| v.as_slice()).collect();
+                let outs = model.execute_batch(&slices)?;
+                outs.into_iter()
+                    .map(|frame| frame.iter().map(|c| c.to_f32_vec()).collect())
+                    .collect()
+            }
+        }
+    }
+}
+
+impl Drop for SingleShot {
+    fn drop(&mut self) {
+        if let Engine::Pipeline { push, running, .. } = &self.engine {
+            push.end();
+            let taken = running.lock().unwrap_or_else(|e| e.into_inner()).take();
+            if let Some(r) = taken {
+                let _ = r.wait();
+            }
+        }
     }
 }
 
@@ -100,5 +252,26 @@ mod tests {
             let single = s.invoke(&[frame]).unwrap();
             assert_eq!(batched[i], single);
         }
+    }
+
+    #[test]
+    fn open_in_uses_the_given_registry() {
+        let reg = ModelRegistry::global().expect("artifacts present");
+        let s = SingleShot::open_in(&reg, "ars_a_opt").unwrap();
+        let input = vec![0.1f32; 128 * 3];
+        let out = s.invoke(&[&input]).unwrap();
+        assert_eq!(out[0].len(), 8);
+    }
+
+    #[test]
+    fn pipeline_and_direct_paths_agree_bitwise() {
+        let reg = ModelRegistry::global().expect("artifacts present");
+        let piped = SingleShot::open("ars_a_opt").unwrap();
+        let direct = SingleShot::open_in(&reg, "ars_a_opt").unwrap();
+        let input: Vec<f32> = (0..128 * 3).map(|i| (i % 97) as f32 / 97.0).collect();
+        assert_eq!(
+            piped.invoke(&[&input]).unwrap(),
+            direct.invoke(&[&input]).unwrap()
+        );
     }
 }

@@ -1,0 +1,210 @@
+//! Parser ↔ builder round-trip over the e1–e4 application pipelines.
+//!
+//! Every launch string accepted before the typed-API redesign must still
+//! parse into a graph that is structurally equivalent to the
+//! `PipelineBuilder` construction (same element multiset, same link
+//! count, same negotiated caps), and — where the pipeline is
+//! deterministic — produce bit-identical sink output.
+
+use nnstreamer::apps::{e1, e2_ars, e3_mtcnn, e4};
+use nnstreamer::elements::converter::TensorConverterProps;
+use nnstreamer::elements::decoder::{DecoderMode, TensorDecoderProps};
+use nnstreamer::elements::filter::{Framework, TensorFilterProps};
+use nnstreamer::elements::sinks::{TensorSink, TensorSinkProps};
+use nnstreamer::elements::sources::VideoTestSrcProps;
+use nnstreamer::elements::transform::{ArithOp, TensorTransformProps};
+use nnstreamer::elements::videofilters::{VideoConvertProps, VideoScaleProps};
+use nnstreamer::pipeline::{parser, Graph, Pipeline, PipelineBuilder};
+use nnstreamer::tensor::{DType, VideoFormat};
+use nnstreamer::video::Pattern;
+
+/// Structural fingerprint of a negotiated graph: element type, fan-in,
+/// fan-out, and negotiated out-caps per node (sorted, so auto-generated
+/// names and node order don't matter).
+fn fingerprint(g: &mut Graph) -> Vec<String> {
+    g.negotiate_all().expect("graph negotiates");
+    let mut nodes: Vec<String> = (0..g.nodes.len())
+        .map(|id| {
+            let node = g.node(id);
+            let caps: Vec<String> =
+                node.out_caps.iter().map(|c| c.to_string()).collect();
+            format!(
+                "{} in={} out={} caps={}",
+                node.element.type_name(),
+                g.n_sink_links(id),
+                g.n_src_links(id),
+                caps.join("|")
+            )
+        })
+        .collect();
+    nodes.sort();
+    nodes
+}
+
+fn assert_equivalent(launch: &str, mut built: Graph, label: &str) {
+    let mut parsed = parser::parse(launch)
+        .unwrap_or_else(|e| panic!("{label}: launch string no longer parses: {e}"));
+    assert_eq!(
+        parsed.links.len(),
+        built.links.len(),
+        "{label}: link count differs"
+    );
+    assert_eq!(
+        fingerprint(&mut parsed),
+        fingerprint(&mut built),
+        "{label}: parsed and builder graphs differ"
+    );
+}
+
+#[test]
+fn e1_launch_strings_match_builder_graphs() {
+    let cfg = e1::E1Config {
+        num_frames: 4,
+        live: false,
+        src_w: 160,
+        src_h: 120,
+        ..Default::default()
+    };
+    for case in e1::E1Case::all() {
+        if case.is_control() {
+            continue;
+        }
+        let launch = e1::launch_description(&cfg, case);
+        let built = e1::build_pipeline(&cfg, case).unwrap();
+        assert_equivalent(&launch, built, case.label());
+    }
+}
+
+#[test]
+fn e2_launch_string_matches_builder_graph_and_counts() {
+    let cfg = e2_ars::ArsConfig {
+        num_windows: 24,
+        live: false,
+        ..Default::default()
+    };
+    let launch = e2_ars::launch_description(&cfg);
+    let built = e2_ars::build_pipeline(&cfg).unwrap();
+    assert_equivalent(&launch, built, "e2");
+
+    // both constructions run, and the deterministic fast path (a) sees
+    // every window in both
+    let mut from_launch = Pipeline::parse(&launch).unwrap();
+    let report_l = from_launch.run().unwrap();
+    let mut from_builder = Pipeline::new(e2_ars::build_pipeline(&cfg).unwrap());
+    let report_b = from_builder.run().unwrap();
+    assert_eq!(report_l.element("sink_a").unwrap().buffers_in(), 24);
+    assert_eq!(report_b.element("sink_a").unwrap().buffers_in(), 24);
+}
+
+#[test]
+fn e3_launch_string_matches_builder_graph() {
+    let cfg = e3_mtcnn::MtcnnConfig {
+        num_frames: 2,
+        src_w: 480,
+        src_h: 270,
+        ..Default::default()
+    };
+    // build first: registers the custom filter stages the launch string
+    // references
+    let built = e3_mtcnn::build_pipeline(&cfg).unwrap();
+    let launch = e3_mtcnn::launch_description(&cfg);
+    assert_equivalent(&launch, built, "e3");
+}
+
+#[test]
+fn e4_launch_string_matches_builder_graph() {
+    let cfg = e4::E4Config {
+        src_w: 160,
+        src_h: 120,
+        num_frames: 6,
+    };
+    for variant in ["opt", "ref"] {
+        let launch = e4::launch_description(&cfg, variant);
+        let built = e4::build_pipeline(&cfg, variant).unwrap();
+        assert_equivalent(&launch, built.graph, &format!("e4/{variant}"));
+    }
+}
+
+/// The deterministic E4 chain (linear, non-live, blocking): the launch
+/// string and the typed builder must produce byte-for-byte the same sink
+/// output, frame for frame.
+#[test]
+fn e4_pipeline_bit_identical_between_parser_and_builder() {
+    let cfg = e4::E4Config {
+        src_w: 160,
+        src_h: 120,
+        num_frames: 6,
+    };
+
+    // the e4 launch string verbatim, with the sink swapped for a
+    // collecting tensor_sink
+    let launch = e4::launch_description(&cfg, "opt")
+        .replace("fakesink name=out", "tensor_sink name=out");
+    let mut from_launch = Pipeline::parse(&launch).unwrap();
+    from_launch.run().unwrap();
+    let parsed_frames = collect(&mut from_launch, "out");
+
+    // the same chain through typed props
+    let mut b = PipelineBuilder::new();
+    b.chain(VideoTestSrcProps {
+        pattern: Pattern::Ball,
+        width: cfg.src_w,
+        height: cfg.src_h,
+        framerate: 1000.0,
+        num_buffers: Some(cfg.num_frames),
+        ..Default::default()
+    })
+    .unwrap()
+    .chain(VideoConvertProps {
+        format: VideoFormat::Rgb,
+    })
+    .unwrap()
+    .chain(VideoScaleProps {
+        width: 96,
+        height: 96,
+    })
+    .unwrap()
+    .chain(TensorConverterProps)
+    .unwrap()
+    .chain(TensorTransformProps::typecast(DType::F32))
+    .unwrap()
+    .chain(TensorTransformProps::arithmetic(vec![(ArithOp::Div, 255.0)]))
+    .unwrap()
+    .chain(TensorFilterProps {
+        framework: Framework::Xla,
+        model: "ssd_opt".into(),
+        ..Default::default()
+    })
+    .unwrap()
+    .chain(TensorDecoderProps {
+        mode: DecoderMode::BoundingBoxes,
+        head: "ssd".into(),
+        threshold: 0.5,
+        ..Default::default()
+    })
+    .unwrap()
+    .chain_named("out", TensorSinkProps::default())
+    .unwrap();
+    let mut from_builder = b.build();
+    from_builder.run().unwrap();
+    let built_frames = collect(&mut from_builder, "out");
+
+    assert_eq!(parsed_frames.len(), cfg.num_frames as usize);
+    assert_eq!(
+        parsed_frames, built_frames,
+        "parser and builder pipelines must produce bit-identical frames"
+    );
+}
+
+/// Collect (pts, payload bytes) from a finished tensor_sink.
+fn collect(p: &mut Pipeline, name: &str) -> Vec<(u64, Vec<u8>)> {
+    let el = p.finished_element(name).expect("sink present");
+    let sink = el
+        .as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .expect("tensor_sink");
+    sink.buffers
+        .iter()
+        .map(|b| (b.pts_ns, b.chunk().as_bytes_unaccounted().to_vec()))
+        .collect()
+}

@@ -1,0 +1,351 @@
+//! Live-control integration tests: the paper's Pipeline-API surface —
+//! `appsrc` push, `tensor_sink` callback subscription, and runtime
+//! control (valves, selectors, `set_property`) on a playing pipeline.
+//!
+//! Determinism: control messages are applied by an element's own thread
+//! strictly before the next item it processes, so a control message sent
+//! before a buffer enters the pipeline is guaranteed to be in effect when
+//! that buffer reaches the element. The tests synchronize on observable
+//! effects (sink callbacks, drop counters) between steps.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use nnstreamer::elements::filter::{Framework, TensorFilterProps};
+use nnstreamer::elements::flow::{InputSelectorProps, OutputSelectorProps, ValveProps};
+use nnstreamer::elements::sinks::TensorSinkProps;
+use nnstreamer::elements::sources::AppSrcProps;
+use nnstreamer::elements::tensor_if::TensorIfProps;
+use nnstreamer::elements::transform::{ArithOp, TensorTransformProps};
+use nnstreamer::pipeline::{PipelineBuilder, Running};
+use nnstreamer::tensor::{Buffer, Caps, DType};
+
+/// Spin until `cond` holds (5 s timeout).
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Collects callback payloads as (sink_tag, f32 payload).
+type Log = Arc<Mutex<Vec<(usize, Vec<f32>)>>>;
+
+fn subscribe_into(running: &Running, name: &str, tag: usize, log: &Log) {
+    let log = log.clone();
+    running
+        .subscribe(name, move |buf: &Buffer| {
+            let vals = buf.chunk().to_f32_vec().expect("f32 payload");
+            log.lock().unwrap().push((tag, vals));
+        })
+        .unwrap();
+}
+
+fn dropped(running: &Running, name: &str) -> u64 {
+    running.element_stats(name).expect("element exists").dropped()
+}
+
+/// The acceptance-criteria pipeline: appsrc push -> tensor_filter ->
+/// tensor_sink callback, with a valve and an output-selector steered
+/// mid-stream.
+#[test]
+fn appsrc_filter_valve_selector_end_to_end() {
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "in",
+        AppSrcProps {
+            caps: Caps::tensor(DType::F32, [4], 0.0),
+        },
+    )
+    .unwrap()
+    .chain_named(
+        "f",
+        TensorFilterProps {
+            framework: Framework::Passthrough,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain_named("v", ValveProps::default())
+    .unwrap()
+    .chain_named("os", OutputSelectorProps::default())
+    .unwrap()
+    .chain_named("out0", TensorSinkProps::default())
+    .unwrap();
+    b.from("os")
+        .unwrap()
+        .chain_named("out1", TensorSinkProps::default())
+        .unwrap();
+
+    let mut pipeline = b.build();
+    let push = pipeline.appsrc("in").unwrap();
+    let running = pipeline.play().unwrap();
+
+    let log: Log = Arc::new(Mutex::new(Vec::new()));
+    subscribe_into(&running, "out0", 0, &log);
+    subscribe_into(&running, "out1", 1, &log);
+
+    let frame = |v: f32| Buffer::from_f32(0, &[v, v + 1.0, v + 2.0, v + 3.0]);
+
+    // 1. default state: valve open, selector pad 0
+    push.push(frame(1.0)).unwrap();
+    wait_until("frame 1 at out0", || log.lock().unwrap().len() == 1);
+
+    // 2. switch the selector to pad 1 before the next frame enters
+    running.select_output("os", 1).unwrap();
+    push.push(frame(2.0)).unwrap();
+    wait_until("frame 2 at out1", || log.lock().unwrap().len() == 2);
+
+    // 3. close the valve: the next frame is dropped (observable only
+    //    through the valve's drop counter)
+    running.set_valve("v", false).unwrap();
+    push.push(frame(3.0)).unwrap();
+    wait_until("valve drop", || dropped(&running, "v") == 1);
+
+    // 4. reopen: traffic resumes on the still-selected pad 1
+    running.set_valve("v", true).unwrap();
+    push.push(frame(4.0)).unwrap();
+    wait_until("frame 4 at out1", || log.lock().unwrap().len() == 3);
+
+    push.end();
+    running.wait().unwrap();
+
+    let got = log.lock().unwrap();
+    assert_eq!(
+        *got,
+        vec![
+            (0, vec![1.0, 2.0, 3.0, 4.0]),
+            (1, vec![2.0, 3.0, 4.0, 5.0]),
+            (1, vec![4.0, 5.0, 6.0, 7.0]),
+        ],
+        "buffers must arrive bit-identically on the steered pads"
+    );
+}
+
+/// Valve open/close mid-stream drops and passes frames deterministically.
+#[test]
+fn valve_toggling_is_deterministic() {
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "in",
+        AppSrcProps {
+            caps: Caps::tensor(DType::F32, [1], 0.0),
+        },
+    )
+    .unwrap()
+    .chain_named("v", ValveProps::default())
+    .unwrap()
+    .chain_named("out", TensorSinkProps::default())
+    .unwrap();
+
+    let mut pipeline = b.build();
+    let push = pipeline.appsrc("in").unwrap();
+    let running = pipeline.play().unwrap();
+    let log: Log = Arc::new(Mutex::new(Vec::new()));
+    subscribe_into(&running, "out", 0, &log);
+
+    let mut expect_drops = 0u64;
+    let mut expect_passes = 0usize;
+    for i in 0..10u32 {
+        let open = i % 3 != 2; // frames 2, 5, 8 hit a closed valve
+        running.set_valve("v", open).unwrap();
+        push.push(Buffer::from_f32(0, &[i as f32])).unwrap();
+        if open {
+            expect_passes += 1;
+            wait_until("pass", || log.lock().unwrap().len() == expect_passes);
+        } else {
+            expect_drops += 1;
+            wait_until("drop", || dropped(&running, "v") == expect_drops);
+        }
+    }
+    push.end();
+    running.wait().unwrap();
+
+    let got: Vec<f32> = log.lock().unwrap().iter().map(|(_, v)| v[0]).collect();
+    assert_eq!(got, vec![0.0, 1.0, 3.0, 4.0, 6.0, 7.0, 9.0]);
+}
+
+/// The callback path sees byte-for-byte what the pull-based collection
+/// records — within one run and across two runs of the same pipeline.
+#[test]
+fn tensor_sink_callback_bit_identical_to_pull_based_path() {
+    let frames: Vec<Vec<f32>> = (0..6)
+        .map(|f| (0..8).map(|i| (f * 8 + i) as f32 / 7.0).collect())
+        .collect();
+
+    let run = |subscribe: bool| -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut b = PipelineBuilder::new();
+        b.chain_named(
+            "in",
+            AppSrcProps {
+                caps: Caps::tensor(DType::F32, [8], 0.0),
+            },
+        )
+        .unwrap()
+        .chain(TensorTransformProps::arithmetic(vec![
+            (ArithOp::Mul, 3.0),
+            (ArithOp::Add, -1.0),
+        ]))
+        .unwrap()
+        .chain_named("out", TensorSinkProps::default())
+        .unwrap();
+
+        let mut pipeline = b.build();
+        let push = pipeline.appsrc("in").unwrap();
+        let running = pipeline.play().unwrap();
+        let log: Log = Arc::new(Mutex::new(Vec::new()));
+        if subscribe {
+            subscribe_into(&running, "out", 0, &log);
+        }
+        for f in &frames {
+            push.push(Buffer::from_f32(0, f)).unwrap();
+        }
+        push.end();
+        let (_, elements) = running.wait().unwrap();
+        let collected = elements
+            .into_iter()
+            .find(|(n, _)| n == "out")
+            .map(|(_, mut el)| {
+                let sink = el
+                    .as_any()
+                    .and_then(|a| {
+                        a.downcast_mut::<nnstreamer::elements::sinks::TensorSink>()
+                    })
+                    .unwrap();
+                sink.buffers
+                    .iter()
+                    .map(|b| b.chunk().to_f32_vec().unwrap())
+                    .collect::<Vec<_>>()
+            })
+            .unwrap();
+        let callback = log.lock().unwrap().iter().map(|(_, v)| v.clone()).collect();
+        (callback, collected)
+    };
+
+    let (cb, pull_same_run) = run(true);
+    let (_, pull_other_run) = run(false);
+    assert_eq!(cb, pull_same_run, "callback vs same-run collection");
+    assert_eq!(cb, pull_other_run, "callback vs independent pull-based run");
+    assert_eq!(cb.len(), frames.len());
+}
+
+/// `input-selector` switching on a playing pipeline.
+#[test]
+fn input_selector_switches_live() {
+    let caps = Caps::tensor(DType::F32, [2], 0.0);
+    let mut b = PipelineBuilder::new();
+    b.chain_named("src_a", AppSrcProps { caps: caps.clone() })
+        .unwrap()
+        .chain_named("sel", InputSelectorProps::default())
+        .unwrap()
+        .chain_named("out", TensorSinkProps::default())
+        .unwrap();
+    b.chain_named("src_b", AppSrcProps { caps }).unwrap().to("sel").unwrap();
+
+    let mut pipeline = b.build();
+    let push_a = pipeline.appsrc("src_a").unwrap();
+    let push_b = pipeline.appsrc("src_b").unwrap();
+    let running = pipeline.play().unwrap();
+    let log: Log = Arc::new(Mutex::new(Vec::new()));
+    subscribe_into(&running, "out", 0, &log);
+
+    push_a.push(Buffer::from_f32(0, &[1.0, 1.0])).unwrap();
+    wait_until("frame from a", || log.lock().unwrap().len() == 1);
+
+    running.select_input("sel", 1).unwrap();
+    push_b.push(Buffer::from_f32(0, &[2.0, 2.0])).unwrap();
+    wait_until("frame from b", || log.lock().unwrap().len() == 2);
+
+    // pad 0 is now inactive: its frames are dropped
+    push_a.push(Buffer::from_f32(0, &[3.0, 3.0])).unwrap();
+    wait_until("drop on inactive pad", || dropped(&running, "sel") == 1);
+
+    push_a.end();
+    push_b.end();
+    running.wait().unwrap();
+
+    let got: Vec<f32> = log.lock().unwrap().iter().map(|(_, v)| v[0]).collect();
+    assert_eq!(got, vec![1.0, 2.0]);
+}
+
+/// Runtime `set_property` on a named element of a playing pipeline:
+/// retune a `tensor_if` threshold mid-stream.
+#[test]
+fn set_property_retunes_tensor_if_live() {
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "in",
+        AppSrcProps {
+            caps: Caps::tensor(DType::F32, [4], 0.0),
+        },
+    )
+    .unwrap()
+    .chain_named(
+        "gate",
+        TensorIfProps {
+            threshold: 0.5,
+            ..Default::default() // average > threshold passes
+        },
+    )
+    .unwrap()
+    .chain_named("out", TensorSinkProps::default())
+    .unwrap();
+
+    let mut pipeline = b.build();
+    let push = pipeline.appsrc("in").unwrap();
+    let running = pipeline.play().unwrap();
+    let log: Log = Arc::new(Mutex::new(Vec::new()));
+    subscribe_into(&running, "out", 0, &log);
+
+    // avg 0.1 < 0.5: gated off
+    push.push(Buffer::from_f32(0, &[0.1; 4])).unwrap();
+    wait_until("gated frame dropped", || dropped(&running, "gate") == 1);
+
+    // lower the threshold live; the same payload now passes
+    running.set_property("gate", "threshold", "0.0").unwrap();
+    push.push(Buffer::from_f32(0, &[0.1; 4])).unwrap();
+    wait_until("frame passes", || log.lock().unwrap().len() == 1);
+
+    push.end();
+    running.wait().unwrap();
+}
+
+/// Control-surface error paths: unknown element names fail fast with a
+/// suggestion; subscribing to a non-subscribable element surfaces as the
+/// pipeline's failure.
+#[test]
+fn control_error_paths() {
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "in",
+        AppSrcProps {
+            caps: Caps::tensor(DType::F32, [1], 0.0),
+        },
+    )
+    .unwrap()
+    .chain_named("v", ValveProps::default())
+    .unwrap()
+    .chain_named(
+        "sink",
+        nnstreamer::elements::sinks::FakeSinkProps::default(),
+    )
+    .unwrap();
+
+    let mut pipeline = b.build();
+    let push = pipeline.appsrc("in").unwrap();
+    let running = pipeline.play().unwrap();
+
+    // unknown element: immediate error with a nearest-name suggestion
+    let err = running.set_valve("w", false).unwrap_err().to_string();
+    assert!(err.contains("no element named"), "{err}");
+    assert!(err.contains("did you mean \"v\"?"), "{err}");
+
+    // fakesink does not support subscription: the error surfaces from
+    // the sink's thread when the pipeline is joined
+    running.subscribe("sink", |_buf| {}).unwrap();
+    push.push(Buffer::from_f32(0, &[1.0])).unwrap();
+    push.end();
+    let err = running.wait().unwrap_err().to_string();
+    assert!(err.contains("does not support buffer subscription"), "{err}");
+}
