@@ -1,0 +1,158 @@
+//! **E7 — multi-tenant concurrency on a bounded worker pool.**
+//!
+//! 64 concurrent E1-shaped pipelines (camera → tee → queue → scale →
+//! convert → normalize → I3 on CPU → decode → sink) run on a 4-worker
+//! [`PipelineHub`]. The seed thread-per-element scheduler would have
+//! spawned 64 × 10 = 640 OS threads; the hub must run the same fleet on
+//! **O(workers)** threads, with sink output bit-identical to a
+//! single-worker (serialized ≡ seed) run.
+//!
+//! ```bash
+//! cargo bench --bench e7_concurrency             # quick
+//! cargo bench --bench e7_concurrency -- --full   # paper-scale frames
+//! cargo bench --bench e7_concurrency -- --frames 8
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use nnstreamer::elements::sinks::TensorSink;
+use nnstreamer::pipeline::{Pipeline, PipelineHub};
+
+const PIPELINES: usize = 64;
+const WORKERS: usize = 4;
+
+/// Thread count of this process (`/proc/self/status`), for the bounded-
+/// thread assertion. Returns None off Linux (assertion skipped).
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Deterministic E1 single-branch pipeline (I3 on the CPU envelope —
+/// blocking queue instead of e1's leaky one, so every frame arrives and
+/// outputs are comparable bitwise).
+fn e1_description(frames: u64) -> String {
+    format!(
+        "videotestsrc name=src pattern=ball width=320 height=240 framerate=120 \
+         num-buffers={frames} is-live=false ! tee name=t t. ! queue ! \
+         videoscale width=64 height=64 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255 ! \
+         tensor_filter framework=xla model=i3_opt accelerator=cpu ! \
+         tensor_decoder mode=image_labeling ! tensor_sink name=out"
+    )
+}
+
+/// Collect the sink payloads of a finished pipeline.
+fn sink_bytes(p: &mut Pipeline) -> Vec<Vec<u8>> {
+    let el = p.finished_element("out").expect("sink present");
+    let sink = el
+        .as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .expect("tensor_sink");
+    sink.buffers
+        .iter()
+        .map(|b| b.chunk().as_bytes_unaccounted().to_vec())
+        .collect()
+}
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let frames = args.frames_or(16, 120);
+
+    harness::warm_models(&["i3_opt"]);
+
+    // Reference: the same pipeline serialized on one worker — the
+    // behavioral equivalent of the seed thread-per-element scheduler.
+    let reference = {
+        let hub = PipelineHub::with_workers(1);
+        let p = Pipeline::parse(&e1_description(frames)).unwrap();
+        hub.launch("ref", p).unwrap();
+        let mut joined = hub.join_all();
+        let j = joined.pop().unwrap();
+        j.report.expect("reference run");
+        let mut pipeline = j.pipeline;
+        sink_bytes(&mut pipeline)
+    };
+    assert_eq!(reference.len(), frames as usize);
+
+    let baseline_threads = process_threads();
+
+    let hub = PipelineHub::with_workers(WORKERS);
+    assert_eq!(hub.worker_count(), WORKERS);
+
+    let t0 = Instant::now();
+    for i in 0..PIPELINES {
+        let p = Pipeline::parse(&e1_description(frames)).unwrap();
+        hub.launch(format!("e1-{i}"), p).unwrap();
+    }
+    assert_eq!(hub.len(), PIPELINES);
+
+    // Bounded-thread criterion: launching 64 pipelines (≈640 elements)
+    // must add only the hub's workers, not a thread per element.
+    let during_threads = process_threads();
+    if let (Some(before), Some(during)) = (baseline_threads, during_threads) {
+        let added = during.saturating_sub(before);
+        println!(
+            "threads: {before} before hub, {during} with {PIPELINES} pipelines \
+             running (+{added}; {WORKERS} workers)"
+        );
+        assert!(
+            added <= WORKERS + 2,
+            "expected O(workers) threads, got +{added} for {PIPELINES} pipelines"
+        );
+        assert!(
+            during < PIPELINES,
+            "thread count must stay far below one-per-pipeline"
+        );
+    }
+
+    let mut total_frames = 0u64;
+    let mut agg_steps = 0u64;
+    let mut agg_parks = 0u64;
+    for j in hub.join_all() {
+        let report = j.report.expect("pipeline succeeded");
+        let seen = report.element("out").unwrap().buffers_in();
+        assert_eq!(seen, frames, "{}: every frame must arrive", j.name);
+        agg_steps += report.sched.steps;
+        agg_parks += report.sched.parks_input + report.sched.parks_output;
+        total_frames += seen;
+        let mut pipeline = j.pipeline;
+        assert_eq!(
+            sink_bytes(&mut pipeline),
+            reference,
+            "{}: sink output must be bit-identical to the serialized run",
+            j.name
+        );
+    }
+    let wall = t0.elapsed();
+    assert_eq!(
+        hub.executor().live_tasks(),
+        0,
+        "joined hub must own no live element tasks"
+    );
+
+    println!(
+        "E7: {PIPELINES} pipelines x {frames} frames on {WORKERS} workers \
+         in {:.2} s — {:.1} frames/s aggregate, {agg_steps} steps, \
+         {agg_parks} parks",
+        wall.as_secs_f64(),
+        total_frames as f64 / wall.as_secs_f64(),
+    );
+    println!(
+        "executor totals: {} steps, {} wakeups, run-queue high-water {}",
+        hub.executor().steps_executed(),
+        hub.executor().wakeups(),
+        hub.executor().run_queue_high_water(),
+    );
+    println!("e7_concurrency: OK (bounded threads, bit-identical outputs)");
+}

@@ -3,21 +3,24 @@
 //! Mirrors GStreamer's model at the granularity the paper relies on:
 //! elements expose *sink pads* (inputs) and *src pads* (outputs), declare
 //! caps through negotiation, and process timestamped [`Buffer`]s. The
-//! scheduler (in [`crate::pipeline`]) runs each element on its own thread
-//! and connects pads with bounded channels — GStreamer's "transparent and
-//! easy-to-apply parallelism" (§III requirement list).
+//! executor (in [`crate::pipeline::executor`]) runs each element as a
+//! **step-driven task on a shared worker pool** and connects pads with
+//! bounded inboxes — GStreamer's "transparent and easy-to-apply
+//! parallelism" (§III requirement list) at O(workers) threads instead of
+//! O(elements).
 
 pub mod props;
 pub mod registry;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::stats::{Domain, ElementStats};
+use crate::pipeline::executor::{Inbox, PopResult, PushResult, Waker};
 use crate::tensor::{Buffer, Caps};
 
 pub use props::{FromProps, Props};
@@ -69,6 +72,16 @@ pub enum Flow {
     /// The element is done (it will produce nothing more): the scheduler
     /// sends EOS downstream and drains remaining input.
     Eos,
+    /// The element cannot make progress *right now*: the executor parks
+    /// its task until an external [`Waker`] fires (obtain one via
+    /// [`Ctx::waker`] and hand it to the application side). Sources
+    /// return it when they have nothing to produce (`appsrc` waiting for
+    /// an application push); consumers **must first hand the undelivered
+    /// item back** via [`Ctx::push_back_input`] so it is replayed on the
+    /// next step (`appsink` waiting for the application to drain its
+    /// channel). Outputs pushed before a `Wait` keep their backpressure:
+    /// the executor re-checks saturated links when the wake fires.
+    Wait,
 }
 
 /// How a link delivers when the consumer is saturated.
@@ -81,41 +94,69 @@ pub enum Delivery {
 }
 
 /// Sending half of a link, as seen from the producer's src pad.
+///
+/// Delivers into the consumer's [`Inbox`]. Pushes never block a pool
+/// worker: a blocking-delivery push that fills the inbox to capacity
+/// instead records the inbox as *saturated* so the executor parks the
+/// producing task after the step — backpressure without thread
+/// blocking, same steady-state semantics as the seed's `SyncSender`.
 pub struct LinkSender {
-    tx: SyncSender<(usize, Item)>,
+    inbox: Arc<Inbox>,
     dst_pad: usize,
     delivery: Delivery,
     dst_stats: Arc<ElementStats>,
 }
 
 impl LinkSender {
-    pub fn new(
-        tx: SyncSender<(usize, Item)>,
+    pub(crate) fn new(
+        inbox: Arc<Inbox>,
         dst_pad: usize,
         delivery: Delivery,
         dst_stats: Arc<ElementStats>,
     ) -> Self {
         Self {
-            tx,
+            inbox,
             dst_pad,
             delivery,
             dst_stats,
         }
     }
 
-    /// Deliver an item; returns false if the consumer is gone.
-    fn send(&self, item: Item) -> bool {
+    pub(crate) fn inbox(&self) -> &Arc<Inbox> {
+        &self.inbox
+    }
+
+    /// Deliver an item; returns false if the consumer is gone. Blocking
+    /// links that reach capacity are appended to `saturated` for the
+    /// executor's park-on-output decision.
+    fn send(&self, item: Item, saturated: &mut Vec<Arc<Inbox>>) -> bool {
         match self.delivery {
-            Delivery::Blocking => self.tx.send((self.dst_pad, item)).is_ok(),
-            Delivery::Leaky => match self.tx.try_send((self.dst_pad, item)) {
-                Ok(()) => true,
-                Err(TrySendError::Full(_)) => {
+            Delivery::Blocking => match self.inbox.push(self.dst_pad, item) {
+                PushResult::Delivered { saturated: true } => {
+                    if !saturated.iter().any(|ib| Arc::ptr_eq(ib, &self.inbox)) {
+                        saturated.push(self.inbox.clone());
+                    }
+                    true
+                }
+                PushResult::Delivered { saturated: false } | PushResult::Dropped => true,
+                PushResult::Closed => false,
+            },
+            Delivery::Leaky => match self.inbox.push_leaky(self.dst_pad, item) {
+                PushResult::Delivered { .. } => true,
+                PushResult::Dropped => {
                     self.dst_stats.record_drop();
                     true
                 }
-                Err(TrySendError::Disconnected(_)) => false,
+                PushResult::Closed => false,
             },
         }
+    }
+
+    /// Deliver EOS. End-of-stream markers bypass leaky dropping (losing
+    /// one would stall the consumer's EOS accounting until producer
+    /// teardown) and never park the sender — it is finishing anyway.
+    fn send_eos(&self) {
+        let _ = self.inbox.push(self.dst_pad, Item::Eos);
     }
 }
 
@@ -133,31 +174,35 @@ pub struct Ctx {
     /// Time spent waiting (blocked pushes, live pacing) during the current
     /// handle()/generate() call — subtracted from busy-time accounting.
     pub(crate) idle_ns: u64,
-    /// The element's input channel (None for sources and test harnesses).
+    /// The element's input inbox (None for sources and test harnesses).
     /// Owned by the ctx so elements can drain additional ready items
     /// mid-`handle` (the batching path of `tensor_filter`).
-    pub(crate) input: Option<InputReceiver>,
+    pub(crate) input: Option<Arc<Inbox>>,
     /// Items pulled ahead by an element and returned via
     /// [`push_back_input`](Ctx::push_back_input); delivered before the
-    /// channel on the next scheduler iteration.
+    /// inbox on the next scheduler step.
     pub(crate) pending: VecDeque<(usize, Item)>,
     /// Runtime control mailbox (live property changes, subscriptions);
-    /// drained by the scheduler before each processing step.
+    /// drained by the executor at every step entry.
     pub(crate) control: Option<Receiver<ControlMsg>>,
+    /// This task's waker (for elements that park on external events).
+    pub(crate) waker: Option<Waker>,
+    /// Inboxes this step's blocking pushes filled to capacity; the
+    /// executor parks the task on them after the step.
+    pub(crate) saturated: Vec<Arc<Inbox>>,
 }
 
 impl Ctx {
-    /// Push a buffer out of src pad `pad`. Time spent blocked on a
-    /// saturated downstream is accounted as idle, not busy.
+    /// Push a buffer out of src pad `pad`. Never blocks: filling a
+    /// bounded downstream link to capacity parks this element's task
+    /// after the current step (backpressure without holding a worker).
     pub fn push(&mut self, pad: usize, buf: Buffer) -> Result<()> {
         let bytes = buf.size();
         let Some(sender) = self.outputs.get(pad).and_then(Option::as_ref) else {
             // unlinked src pad: buffer is discarded (like an unlinked tee pad)
             return Ok(());
         };
-        let t0 = Instant::now();
-        let delivered = sender.send(Item::Buffer(buf));
-        self.idle_ns += t0.elapsed().as_nanos() as u64;
+        let delivered = sender.send(Item::Buffer(buf), &mut self.saturated);
         if !delivered {
             // downstream went away: treat as stop request, not an error
             self.stop.store(true, Ordering::Relaxed);
@@ -189,23 +234,30 @@ impl Ctx {
         }
     }
 
-    /// Blocking pull of the next input item: pushed-back items first, then
-    /// the input channel. `None` once the channel is closed and drained.
-    /// Scheduler-internal — elements receive items through
-    /// [`Element::handle`] and drain extras with
+    /// Executor-internal poll of the next input item: pushed-back items
+    /// first, then the inbox. Distinguishes "nothing queued yet" (park
+    /// on input) from "no producer remains" (end of input). Elements
+    /// receive items through [`Element::handle`] and drain extras with
     /// [`try_pull_input`](Ctx::try_pull_input).
-    pub(crate) fn next_input(&mut self) -> Option<(usize, Item)> {
+    pub(crate) fn poll_input(&mut self) -> PopResult {
         if let Some(item) = self.pending.pop_front() {
-            return Some(item);
+            return PopResult::Item(item);
         }
-        let item = self.input.as_ref()?.recv().ok()?;
-        self.record_arrival(&item);
-        Some(item)
+        let Some(inbox) = self.input.as_ref() else {
+            return PopResult::Exhausted;
+        };
+        match inbox.try_pop() {
+            PopResult::Item(item) => {
+                self.record_arrival(&item);
+                PopResult::Item(item)
+            }
+            other => other,
+        }
     }
 
     /// Non-blocking attempt to pull one more queued input item while
     /// processing (the `tensor_filter` batch-aggregation path). Returns
-    /// `None` when nothing is ready or the element has no input channel.
+    /// `None` when nothing is ready or the element has no input inbox.
     ///
     /// An element that pulls an item it cannot consume — in particular
     /// [`Item::Eos`] — **must** hand it back via
@@ -215,21 +267,28 @@ impl Ctx {
         if let Some(item) = self.pending.pop_front() {
             return Some(item);
         }
-        let item = self.input.as_ref()?.try_recv().ok()?;
-        self.record_arrival(&item);
-        Some(item)
+        let inbox = self.input.as_ref()?;
+        match inbox.try_pop() {
+            PopResult::Item(item) => {
+                self.record_arrival(&item);
+                Some(item)
+            }
+            _ => None,
+        }
     }
 
     /// Like [`try_pull_input`](Ctx::try_pull_input), but waits up to
     /// `timeout` for an item. The wait is accounted as idle time, not
-    /// element busy time.
+    /// element busy time. On the pooled executor this holds one worker
+    /// for at most `timeout` (the `tensor_filter` latency budget), so
+    /// budgets should stay in the milliseconds.
     pub fn pull_input_timeout(&mut self, timeout: Duration) -> Option<(usize, Item)> {
         if let Some(item) = self.pending.pop_front() {
             return Some(item);
         }
         let t0 = Instant::now();
         let item = match self.input.as_ref() {
-            Some(rx) => rx.recv_timeout(timeout).ok(),
+            Some(inbox) => inbox.pop_timeout(timeout),
             None => None,
         };
         self.idle_ns += t0.elapsed().as_nanos() as u64;
@@ -256,8 +315,40 @@ impl Ctx {
     /// Send EOS on one src pad.
     pub fn push_eos(&mut self, pad: usize) {
         if let Some(sender) = self.outputs.get(pad).and_then(Option::as_ref) {
-            let _ = sender.send(Item::Eos);
+            sender.send_eos();
         }
+    }
+
+    /// This task's waker: hand it to application-side code that must
+    /// unpark a source which returned [`Flow::Wait`] (see
+    /// [`crate::pipeline::executor::SharedWaker`]). A no-op waker is
+    /// returned for contexts outside the executor (tests).
+    pub fn waker(&self) -> Waker {
+        self.waker.clone().unwrap_or_default()
+    }
+
+    pub(crate) fn set_waker(&mut self, waker: Waker) {
+        self.waker = Some(waker);
+    }
+
+    /// Executor-internal: reset per-step state before an element runs.
+    pub(crate) fn begin_step(&mut self) {
+        self.saturated.clear();
+    }
+
+    /// Executor-internal: the inboxes this step saturated (park targets).
+    pub(crate) fn take_saturated(&mut self) -> Vec<Arc<Inbox>> {
+        std::mem::take(&mut self.saturated)
+    }
+
+    /// Executor-internal teardown on task finish: detach from every
+    /// downstream inbox so consumers observe end-of-input once drained
+    /// (the pooled analog of dropping a channel sender).
+    pub(crate) fn release_outputs(&mut self) {
+        for sender in self.outputs.iter().flatten() {
+            sender.inbox().producer_done();
+        }
+        self.outputs.clear();
     }
 
     pub fn n_src_pads(&self) -> usize {
@@ -399,32 +490,28 @@ impl PadSpec {
     }
 }
 
-/// Receiver side of an element's input (all sink pads share one channel;
-/// items are tagged with the pad index).
-pub type InputReceiver = Receiver<(usize, Item)>;
-
 /// Test-only helper: drive a single element directly, collecting outputs.
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
     use crate::metrics::stats::Domain;
     use crate::tensor::Buffer;
-    use std::sync::mpsc::sync_channel;
 
-    /// Build a ctx with `n_src` outputs and return (ctx, receivers).
-    pub fn ctx_with_outputs(n_src: usize) -> (Ctx, Vec<Receiver<(usize, Item)>>) {
+    /// Build a ctx with `n_src` outputs and return (ctx, capture inboxes).
+    pub fn ctx_with_outputs(n_src: usize) -> (Ctx, Vec<Arc<Inbox>>) {
         let stats = crate::metrics::stats::ElementStats::new("testutil");
         let mut outputs = Vec::new();
-        let mut rxs = Vec::new();
+        let mut pads = Vec::new();
         for _ in 0..n_src {
-            let (tx, rx) = sync_channel(1024);
+            let inbox = Inbox::new(1024, stats.clone());
+            inbox.add_producer();
             outputs.push(Some(LinkSender::new(
-                tx,
+                inbox.clone(),
                 0,
                 Delivery::Blocking,
                 stats.clone(),
             )));
-            rxs.push(rx);
+            pads.push(inbox);
         }
         let ctx = Ctx {
             outputs,
@@ -436,26 +523,22 @@ pub(crate) mod testutil {
             input: None,
             pending: std::collections::VecDeque::new(),
             control: None,
+            waker: None,
+            saturated: Vec::new(),
         };
-        (ctx, rxs)
+        (ctx, pads)
     }
 
     /// Feed one buffer into sink pad `pad`; drain buffers from src pad 0.
     pub fn drive(el: &mut dyn Element, pad: usize, buf: Buffer) -> Vec<Buffer> {
-        let (mut ctx, rxs) = ctx_with_outputs(1);
+        let (mut ctx, pads) = ctx_with_outputs(1);
         el.handle(pad, Item::Buffer(buf), &mut ctx).unwrap();
         drop(ctx);
-        drain(&rxs[0])
+        drain(&pads[0])
     }
 
-    pub fn drain(rx: &Receiver<(usize, Item)>) -> Vec<Buffer> {
-        let mut out = Vec::new();
-        while let Ok((_, item)) = rx.try_recv() {
-            if let Item::Buffer(b) = item {
-                out.push(b);
-            }
-        }
-        out
+    pub fn drain(inbox: &Arc<Inbox>) -> Vec<Buffer> {
+        inbox.drain_buffers()
     }
 }
 

@@ -182,9 +182,13 @@ impl TensorFilter {
     }
 
     /// Drain up to `batch - 1` additional ready frames from the input
-    /// channel into `frames`, honoring the latency budget. Anything that
+    /// inbox into `frames`, honoring the latency budget. Anything that
     /// is not a pad-0 buffer (EOS in particular) is pushed back for the
-    /// scheduler.
+    /// scheduler. On the pooled executor the budget wait holds one
+    /// worker for at most `latency-budget` (bounded by construction);
+    /// upstream tasks fill the inbox from *other* workers, so on a
+    /// fully-busy or single-worker pool the wait gathers only what was
+    /// already queued — batches come out smaller, never incorrect.
     fn gather_batch(&self, frames: &mut Vec<Buffer>, ctx: &mut Ctx) {
         let deadline = Instant::now() + self.props.latency_budget;
         while frames.len() < self.props.effective_batch() {

@@ -61,7 +61,10 @@ impl Props for QueueProps {
     }
 }
 
-/// Decouples producer from consumer by raising the input-channel capacity.
+/// Decouples producer from consumer by raising the capacity of its
+/// bounded input inbox (under the pooled executor a saturated inbox
+/// parks the producer's task instead of blocking a thread — same
+/// backpressure, no thread held).
 pub struct Queue {
     props: QueueProps,
 }

@@ -1,13 +1,15 @@
 //! Sink elements: `fakesink`, `appsink`, `tensor_sink`, `filesink`.
 
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::element::props::{parse_bool, unknown_property};
 use crate::element::{
     BufferCallback, ControlMsg, Ctx, Element, Flow, FromProps, Item, PadSpec, Props,
 };
 use crate::error::{Error, Result};
+use crate::pipeline::executor::SharedWaker;
 use crate::tensor::{Buffer, Caps};
 
 use super::sources::parse_usize;
@@ -157,10 +159,69 @@ impl Props for AppSinkProps {
 /// Hands buffers to the application through a bounded channel. The channel
 /// closes at end-of-stream, so an application drain loop
 /// (`while let Ok(buf) = rx.recv()`) terminates when the pipeline does.
+/// With `drop=false` (default) a full channel makes the sink **park** —
+/// the undelivered frame is handed back to the scheduler and the task
+/// sleeps (costing no pool worker) until the application's
+/// [`AppSinkReceiver`] frees a slot, drops, or a pipeline stop is
+/// requested. Set `drop=true` for fire-and-forget delivery instead.
 pub struct AppSink {
     tx: Option<SyncSender<Buffer>>,
     rx: Option<Receiver<Buffer>>,
+    /// Wakes this sink's parked task when the application drains a slot.
+    wake: Arc<SharedWaker>,
     props: AppSinkProps,
+}
+
+/// Receiving end of an [`AppSink`]: the bounded channel plus the wake
+/// hook that unparks the sink task whenever the application frees a
+/// slot (or drops the receiver). Mirrors the `std::sync::mpsc::Receiver`
+/// surface the seed exposed.
+pub struct AppSinkReceiver {
+    rx: Receiver<Buffer>,
+    wake: Arc<SharedWaker>,
+}
+
+impl AppSinkReceiver {
+    /// Block until the next buffer; errors once the pipeline reached
+    /// end-of-stream and the channel drained.
+    pub fn recv(&self) -> std::result::Result<Buffer, std::sync::mpsc::RecvError> {
+        let r = self.rx.recv();
+        // a slot freed: let a parked sink deliver its pending frame
+        self.wake.wake();
+        r
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<Buffer, std::sync::mpsc::TryRecvError> {
+        let r = self.rx.try_recv();
+        if r.is_ok() {
+            self.wake.wake();
+        }
+        r
+    }
+
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Buffer, std::sync::mpsc::RecvTimeoutError> {
+        let r = self.rx.recv_timeout(timeout);
+        if r.is_ok() {
+            self.wake.wake();
+        }
+        r
+    }
+
+    /// Drain iterator; terminates when the pipeline reaches end-of-stream.
+    pub fn iter(&self) -> impl Iterator<Item = Buffer> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+}
+
+impl Drop for AppSinkReceiver {
+    fn drop(&mut self) {
+        // wake a parked sink so it observes the disconnected channel
+        // and unwinds instead of waiting forever
+        self.wake.wake();
+    }
 }
 
 impl AppSink {
@@ -169,8 +230,12 @@ impl AppSink {
     }
 
     /// Take the receiving end (call before `Pipeline::play`).
-    pub fn take_receiver(&mut self) -> Option<Receiver<Buffer>> {
-        self.rx.take()
+    pub fn take_receiver(&mut self) -> Option<AppSinkReceiver> {
+        let rx = self.rx.take()?;
+        Some(AppSinkReceiver {
+            rx,
+            wake: self.wake.clone(),
+        })
     }
 }
 
@@ -188,6 +253,7 @@ impl FromProps for AppSink {
         Ok(Self {
             tx: Some(tx),
             rx: Some(rx),
+            wake: SharedWaker::new(),
             props,
         })
     }
@@ -214,30 +280,40 @@ impl Element for AppSink {
         Ok(vec![])
     }
 
-    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
-        if let Item::Buffer(buf) = item {
-            let Some(tx) = &self.tx else {
-                return Ok(Flow::Eos);
-            };
-            let gone = if self.props.drop {
-                match tx.try_send(buf) {
-                    Ok(()) => false,
-                    Err(TrySendError::Full(_)) => {
-                        ctx.stats().record_drop();
-                        false
-                    }
-                    Err(TrySendError::Disconnected(_)) => true,
-                }
-            } else {
-                tx.send(buf).is_err()
-            };
-            if gone {
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let Some(tx) = &self.tx else {
+            return Ok(Flow::Eos);
+        };
+        // publish the waker before probing the channel, so a racing
+        // application recv() can never free a slot unobserved
+        self.wake.set(ctx.waker());
+        match tx.try_send(buf) {
+            Ok(()) => Ok(Flow::Continue),
+            Err(TrySendError::Disconnected(_)) => {
                 // application dropped the receiver: stop consuming
                 self.tx = None;
-                return Ok(Flow::Eos);
+                Ok(Flow::Eos)
+            }
+            Err(TrySendError::Full(b)) => {
+                if self.props.drop {
+                    ctx.stats().record_drop();
+                    Ok(Flow::Continue)
+                } else if ctx.stopped() {
+                    // teardown in progress: don't wait on the application
+                    ctx.stats().record_drop();
+                    Ok(Flow::Continue)
+                } else {
+                    // application hasn't drained: hand the frame back and
+                    // park (no pool worker held) until the receiver frees
+                    // a slot, drops, or the pipeline is stopped
+                    ctx.push_back_input(pad, Item::Buffer(b));
+                    Ok(Flow::Wait)
+                }
             }
         }
-        Ok(Flow::Continue)
     }
 
     fn flush(&mut self, _ctx: &mut Ctx) -> Result<()> {

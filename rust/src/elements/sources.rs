@@ -1,12 +1,13 @@
 //! Source elements: `videotestsrc`, `appsrc`, `sensorsrc` (Tensor-Src-IIO
 //! analog), `filesrc`.
 
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
 
 use crate::element::props::{parse_bool, unknown_property};
 use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
+use crate::pipeline::executor::SharedWaker;
 use crate::tensor::{
     Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
 };
@@ -230,9 +231,15 @@ impl Props for AppSrcProps {
 }
 
 /// `appsrc`: the application pushes buffers through a channel.
+///
+/// On the pooled executor the source never blocks a worker waiting for
+/// application data: an empty channel parks its task
+/// ([`Flow::Wait`]) and the push handle wakes it through a
+/// [`SharedWaker`] the element publishes at its first step.
 pub struct AppSrc {
     tx: SyncSender<Option<(Buffer, u64)>>,
     rx: Receiver<Option<(Buffer, u64)>>,
+    wake: Arc<SharedWaker>,
     props: AppSrcProps,
     n: u64,
 }
@@ -245,6 +252,7 @@ pub struct AppSrc {
 #[derive(Clone)]
 pub struct AppSrcHandle {
     tx: SyncSender<Option<(Buffer, u64)>>,
+    wake: Arc<SharedWaker>,
 }
 
 impl AppSrcHandle {
@@ -277,12 +285,16 @@ impl AppSrcHandle {
     pub fn push(&self, buf: Buffer) -> Result<()> {
         self.tx
             .send(Some((buf, 0)))
-            .map_err(|_| Error::Runtime("appsrc: pipeline gone".into()))
+            .map_err(|_| Error::Runtime("appsrc: pipeline gone".into()))?;
+        // unpark the source task if it was waiting for data
+        self.wake.wake();
+        Ok(())
     }
 
     /// Signal end of stream.
     pub fn end(&self) {
         let _ = self.tx.send(None);
+        self.wake.wake();
     }
 }
 
@@ -295,6 +307,7 @@ impl AppSrc {
     pub fn handle(&self) -> AppSrcHandle {
         AppSrcHandle {
             tx: self.tx.clone(),
+            wake: self.wake.clone(),
         }
     }
 
@@ -318,6 +331,7 @@ impl FromProps for AppSrc {
         Ok(Self {
             tx,
             rx,
+            wake: SharedWaker::new(),
             props,
             n: 0,
         })
@@ -350,14 +364,20 @@ impl Element for AppSrc {
     }
 
     fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
-        match self.rx.recv() {
+        // publish the task waker first, so a push racing this step's
+        // empty check still lands a wake (the executor's wake-pending
+        // flag covers the remainder of the window)
+        self.wake.set(ctx.waker());
+        match self.rx.try_recv() {
             Ok(Some((mut buf, _))) => {
                 buf.seq = self.n;
                 self.n += 1;
                 ctx.push(0, buf)?;
                 Ok(Flow::Continue)
             }
-            Ok(None) | Err(_) => Ok(Flow::Eos),
+            Ok(None) | Err(TryRecvError::Disconnected) => Ok(Flow::Eos),
+            // nothing pushed yet: park until the application wakes us
+            Err(TryRecvError::Empty) => Ok(Flow::Wait),
         }
     }
 }

@@ -469,34 +469,13 @@ mod tests {
 
     /// Minimal direct-drive harness for a single element.
     fn harness(el: &mut dyn Element, buf: Buffer) -> Buffer {
-        use crate::element::{Ctx, LinkSender};
-        use crate::metrics::stats::ElementStats;
-        use std::sync::atomic::AtomicBool;
-        use std::sync::mpsc::sync_channel;
-        use std::sync::Arc;
-        let (tx, rx) = sync_channel(8);
-        let stats = ElementStats::new("harness");
-        let mut ctx = Ctx {
-            outputs: vec![Some(LinkSender::new(
-                tx,
-                0,
-                crate::element::Delivery::Blocking,
-                stats.clone(),
-            ))],
-            stats,
-            stop: Arc::new(AtomicBool::new(false)),
-            epoch: std::time::Instant::now(),
-            domain: crate::metrics::stats::Domain::Cpu,
-            idle_ns: 0,
-            input: None,
-            pending: std::collections::VecDeque::new(),
-            control: None,
-        };
+        let (mut ctx, pads) = crate::element::testutil::ctx_with_outputs(1);
         el.handle(0, Item::Buffer(buf), &mut ctx).unwrap();
-        match rx.try_recv().unwrap() {
-            (_, Item::Buffer(b)) => b,
-            _ => panic!("no buffer"),
-        }
+        drop(ctx);
+        crate::element::testutil::drain(&pads[0])
+            .into_iter()
+            .next()
+            .expect("no buffer")
     }
 
     #[test]

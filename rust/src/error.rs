@@ -36,6 +36,16 @@ pub enum Error {
     /// An element failed at runtime while processing a buffer.
     Element { element: String, reason: String },
 
+    /// A control send found the element's mailbox full (the element is
+    /// starved of input while the application keeps sending). Sends
+    /// never block the application thread; retry after the pipeline
+    /// drains, or throttle control traffic.
+    ControlBackpressure {
+        element: String,
+        /// The mailbox capacity that was exhausted.
+        capacity: usize,
+    },
+
     /// NNFW / model runtime failure (artifact load or execute).
     Runtime(String),
 
@@ -67,6 +77,11 @@ impl std::fmt::Display for Error {
             }
             Error::Graph(msg) => write!(f, "graph error: {msg}"),
             Error::Element { element, reason } => write!(f, "element {element}: {reason}"),
+            Error::ControlBackpressure { element, capacity } => write!(
+                f,
+                "control backpressure: mailbox of element {element:?} is full \
+                 ({capacity} pending messages); the element is not consuming input"
+            ),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),

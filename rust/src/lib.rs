@@ -7,14 +7,14 @@
 //! NNStreamer treats neural networks as *filters* of *stream pipelines*
 //! (pipe-and-filter architecture). This crate implements the streaming
 //! framework (Layer 3) in Rust: tensor stream types, caps negotiation,
-//! a pipeline graph with a thread-per-element scheduler over bounded
-//! channels, the full set of `tensor_*` elements from the paper, NNFW
-//! sub-plugins that execute AOT-compiled JAX/Pallas artifacts, and the
-//! baselines ("Control" serial implementations and a MediaPipe-like
-//! framework) needed to regenerate every table and figure of the paper's
-//! evaluation.
+//! a pipeline graph whose elements run as **step-driven tasks on a
+//! bounded worker pool** connected by bounded inboxes, the full set of
+//! `tensor_*` elements from the paper, NNFW sub-plugins that execute
+//! AOT-compiled JAX/Pallas artifacts, and the baselines ("Control"
+//! serial implementations and a MediaPipe-like framework) needed to
+//! regenerate every table and figure of the paper's evaluation.
 //!
-//! Three hot-path subsystems keep steady-state streaming cheap (see
+//! Four hot-path subsystems keep steady-state streaming cheap (see
 //! DESIGN.md):
 //!
 //! * a shared **model-instance pool** ([`runtime::ModelPool`]) — pipeline
@@ -26,7 +26,13 @@
 //!   [`tensor::Chunk::make_mut`]) — per-frame kernels and model-output
 //!   scratch write into recycled buffers, and uniquely-owned chunks
 //!   mutate in place (copy-on-write), so the steady-state hot path runs
-//!   without fresh heap allocations.
+//!   without fresh heap allocations;
+//! * a **worker-pool executor** ([`pipeline::Executor`]) — every element
+//!   is a cooperative task (ready / parked-on-input / parked-on-output /
+//!   parked-external), so N pipelines of E elements run on O(workers)
+//!   threads instead of N×E, and a [`pipeline::PipelineHub`] hosts
+//!   whole fleets of concurrent pipelines with per-pipeline priorities
+//!   over one pool (`NNS_WORKERS` sizes the global pool).
 //!
 //! The public API is layered like the paper's (see DESIGN.md "Public
 //! API"): gst-launch strings ([`pipeline::Pipeline::parse`]), a typed

@@ -32,6 +32,15 @@ pub struct ElementStats {
     lat_sum_ns: AtomicU64,
     lat_max_ns: AtomicU64,
     lat_count: AtomicU64,
+    /// Pooled-executor accounting: steps this element's task executed,
+    /// how often it parked (empty input / saturated output), how often a
+    /// wake made it runnable again, and the high-water mark of its
+    /// bounded input inbox.
+    steps: AtomicU64,
+    parks_input: AtomicU64,
+    parks_output: AtomicU64,
+    wakeups: AtomicU64,
+    queue_hwm: AtomicU64,
 }
 
 impl ElementStats {
@@ -88,6 +97,54 @@ impl ElementStats {
         self.lat_count.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_step(&self) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_park_input(&self) {
+        self.parks_input.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_park_output(&self) {
+        self.parks_output.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_wakeup(&self) {
+        self.wakeups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the queue depth of this element's inbox after a push
+    /// (keeps the link high-water mark).
+    pub fn record_queue_depth(&self, len: u64) {
+        self.queue_hwm.fetch_max(len, Ordering::Relaxed);
+    }
+
+    /// Executor steps this element's task ran.
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Times the task parked waiting for input (empty inbox, or a source
+    /// waiting for externally pushed application data).
+    pub fn parks_input(&self) -> u64 {
+        self.parks_input.load(Ordering::Relaxed)
+    }
+
+    /// Times the task parked on a saturated downstream inbox.
+    pub fn parks_output(&self) -> u64 {
+        self.parks_output.load(Ordering::Relaxed)
+    }
+
+    /// Times a wake made the parked task runnable again.
+    pub fn wakeups(&self) -> u64 {
+        self.wakeups.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of this element's bounded input inbox.
+    pub fn queue_high_water(&self) -> u64 {
+        self.queue_hwm.load(Ordering::Relaxed)
+    }
+
     pub fn buffers_in(&self) -> u64 {
         self.buffers_in.load(Ordering::Relaxed)
     }
@@ -133,6 +190,31 @@ pub struct LatencyStats {
     pub max: Duration,
 }
 
+/// Scheduling counters of one pipeline run on the pooled executor —
+/// the Table-III-style accounting extension for the worker-pool core.
+/// Per-element sums except `workers` and `run_queue_high_water`, which
+/// describe the (possibly shared) executor the pipeline ran on.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SchedSnapshot {
+    /// Worker threads of the executor this pipeline ran on.
+    pub workers: usize,
+    /// Element steps executed (one `generate()`/`handle()` per step).
+    pub steps: u64,
+    /// Parks waiting for input: an empty inbox, or a source waiting for
+    /// externally pushed application data (`appsrc`).
+    pub parks_input: u64,
+    /// Parks on a saturated downstream inbox (backpressure events).
+    pub parks_output: u64,
+    /// Wakes that made a parked task runnable again.
+    pub wakeups: u64,
+    /// Executor run-queue high-water mark (tasks runnable but waiting
+    /// for a worker; shared across concurrent pipelines).
+    pub run_queue_high_water: u64,
+    /// Largest bounded-link (inbox) depth any of this pipeline's
+    /// elements reached.
+    pub link_high_water: u64,
+}
+
 /// Summary of one pipeline run, assembled by the scheduler.
 #[derive(Debug, Default)]
 pub struct PipelineReport {
@@ -143,6 +225,8 @@ pub struct PipelineReport {
     /// Byte-traffic and allocator counters accumulated during the run
     /// (process-global deltas: concurrent pipelines share the counters).
     pub traffic: crate::metrics::traffic::Snapshot,
+    /// Worker-pool scheduling counters for this run.
+    pub sched: SchedSnapshot,
 }
 
 impl PipelineReport {

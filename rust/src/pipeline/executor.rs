@@ -1,0 +1,1176 @@
+//! Step-driven cooperative executor: a fixed-size worker pool running
+//! every element of every pipeline as a small state machine.
+//!
+//! The seed scheduler gave each element its own OS thread, so a device
+//! hosting N pipelines of E elements burned N×E threads — unusable at the
+//! "many pipelines per device" scale the among-device-AI follow-up paper
+//! targets. This module replaces the blocking loops with an **element
+//! task contract**: each element is a [`Task`] that a pool worker *steps*
+//! (one `generate()` or one `handle()` call per step), after which the
+//! task is either
+//!
+//! * **ready** — requeued on the global run queue,
+//! * **parked on input** — its inbox was empty; the next producer push
+//!   wakes it,
+//! * **parked on output** — a downstream inbox it filled past capacity;
+//!   the consumer draining below capacity wakes it,
+//! * **parked externally** — a source with nothing to produce
+//!   ([`Flow::Wait`]); an application-held [`Waker`] unparks it, or
+//! * **finished** — EOS/error; its element is handed back to the
+//!   pipeline's completion slots.
+//!
+//! Links stay bounded and keep the seed semantics: a *blocking* link
+//! applies backpressure by parking the producer until the consumer drains
+//! (instead of blocking a thread), and a *leaky* link drops at capacity
+//! exactly as before. Control mailboxes are drained at step entry, so a
+//! control message sent before a buffer enters the pipeline is still
+//! guaranteed to be in effect when that buffer reaches the element —
+//! the determinism contract of the seed scheduler is preserved, and sink
+//! output is bit-identical for any worker count (asserted in
+//! `tests/determinism.rs`).
+//!
+//! Fairness: one item per step, FIFO within a priority lane, and a
+//! weighted 4:2:1 rotation across the [`Priority`] lanes so low-priority
+//! pipelines never starve.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::time::{Duration, Instant};
+
+use once_cell::sync::Lazy;
+
+use crate::element::{Ctx, Element, Flow, Item};
+use crate::error::Error;
+use crate::metrics::stats::ElementStats;
+
+/// Hard ceiling on the worker count of any executor — the "bounded
+/// thread" guarantee of the hub holds even against misconfiguration
+/// (`NNS_WORKERS=100000`).
+pub const MAX_WORKERS: usize = 64;
+
+/// Lock helper that survives poisoning: a panicking element must not
+/// wedge the whole pool (the seed scheduler isolated panics per thread;
+/// we isolate them per step).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Scheduling priority of a pipeline on a shared executor. Lanes are
+/// drained in a weighted 4:2:1 rotation (strict priority would starve
+/// background pipelines under sustained high-priority load).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+/// Outcome of delivering one item into an [`Inbox`].
+pub(crate) enum PushResult {
+    /// Enqueued; `saturated` is true when the inbox is now at/over
+    /// capacity, i.e. the producer must park before producing more.
+    Delivered { saturated: bool },
+    /// Leaky link at capacity: the item was discarded.
+    Dropped,
+    /// The consumer finished; nothing can be delivered anymore.
+    Closed,
+}
+
+/// Outcome of a consumer-side pop.
+pub(crate) enum PopResult {
+    Item((usize, Item)),
+    /// Nothing queued but producers are still attached — park on input.
+    Pending,
+    /// Nothing queued and no producer remains (the pooled equivalent of
+    /// a disconnected channel): the element will never see input again.
+    Exhausted,
+}
+
+struct InboxInner {
+    queue: VecDeque<(usize, Item)>,
+    /// Attached link count; decremented as producers finish. 0 with an
+    /// empty queue reads as end-of-input (channel-disconnect analog).
+    open_producers: usize,
+    /// Set when the consumer finishes; producers observe [`PushResult::Closed`].
+    closed: bool,
+    /// Producer tasks parked until this inbox drains below capacity.
+    waiters: Vec<Arc<Task>>,
+}
+
+/// Bounded, multi-producer input queue of one element. All sink pads of
+/// an element share one inbox; items carry their pad index (exactly the
+/// seed's shared input channel). Unlike a `SyncSender`, pushes never
+/// block: a blocking-delivery push past capacity instead tells the
+/// producer to park, which keeps pool workers deadlock-free while
+/// preserving backpressure (queues exceed capacity by at most one step's
+/// output).
+pub struct Inbox {
+    cap: usize,
+    /// Consumer's stats handle: link high-water marks are recorded here.
+    stats: Arc<ElementStats>,
+    inner: Mutex<InboxInner>,
+    /// Signals item arrival/closure to an in-step timed wait
+    /// ([`Ctx::pull_input_timeout`], the tensor_filter latency budget).
+    avail: Condvar,
+    /// The task that drains this inbox (set at wiring time).
+    consumer: Mutex<Option<Weak<Task>>>,
+}
+
+impl Inbox {
+    pub(crate) fn new(cap: usize, stats: Arc<ElementStats>) -> Arc<Inbox> {
+        Arc::new(Inbox {
+            cap: cap.max(1),
+            stats,
+            inner: Mutex::new(InboxInner {
+                queue: VecDeque::new(),
+                open_producers: 0,
+                closed: false,
+                waiters: Vec::new(),
+            }),
+            avail: Condvar::new(),
+            consumer: Mutex::new(None),
+        })
+    }
+
+    pub(crate) fn set_consumer(&self, task: &Arc<Task>) {
+        *lock(&self.consumer) = Some(Arc::downgrade(task));
+    }
+
+    /// Register one producing link (called once per link at wiring).
+    pub(crate) fn add_producer(&self) {
+        lock(&self.inner).open_producers += 1;
+    }
+
+    fn consumer_task(&self) -> Option<Arc<Task>> {
+        lock(&self.consumer).as_ref().and_then(Weak::upgrade)
+    }
+
+    /// Blocking-delivery push: always enqueues (capacity overshoot is
+    /// bounded by one step's output); reports saturation so the caller's
+    /// task parks instead of producing more.
+    pub(crate) fn push(&self, pad: usize, item: Item) -> PushResult {
+        let (result, wake) = {
+            let mut g = lock(&self.inner);
+            if g.closed {
+                return PushResult::Closed;
+            }
+            let was_empty = g.queue.is_empty();
+            g.queue.push_back((pad, item));
+            let len = g.queue.len();
+            self.stats.record_queue_depth(len as u64);
+            (
+                PushResult::Delivered {
+                    saturated: len >= self.cap,
+                },
+                // empty -> nonempty is the only transition that can have
+                // a consumer parked on input
+                if was_empty { self.consumer_task() } else { None },
+            )
+        };
+        self.avail.notify_all();
+        if let Some(t) = wake {
+            wake_task(&t);
+        }
+        result
+    }
+
+    /// Leaky-delivery push: drops at capacity (a `leaky=downstream`
+    /// queue), never saturates the producer.
+    pub(crate) fn push_leaky(&self, pad: usize, item: Item) -> PushResult {
+        let wake = {
+            let mut g = lock(&self.inner);
+            if g.closed {
+                return PushResult::Closed;
+            }
+            if g.queue.len() >= self.cap {
+                return PushResult::Dropped;
+            }
+            let was_empty = g.queue.is_empty();
+            g.queue.push_back((pad, item));
+            let len = g.queue.len();
+            self.stats.record_queue_depth(len as u64);
+            if was_empty {
+                self.consumer_task()
+            } else {
+                None
+            }
+        };
+        self.avail.notify_all();
+        if let Some(t) = wake {
+            wake_task(&t);
+        }
+        PushResult::Delivered { saturated: false }
+    }
+
+    /// Locked pop: dequeue one item and collect the producers to wake if
+    /// this drain crossed below capacity. The single home of the
+    /// capacity-wake rule, shared by [`try_pop`](Inbox::try_pop) and
+    /// [`pop_timeout`](Inbox::pop_timeout).
+    fn pop_locked(&self, g: &mut InboxInner) -> Option<((usize, Item), Vec<Arc<Task>>)> {
+        let it = g.queue.pop_front()?;
+        let wakes = if g.queue.len() < self.cap && !g.waiters.is_empty() {
+            std::mem::take(&mut g.waiters)
+        } else {
+            Vec::new()
+        };
+        Some((it, wakes))
+    }
+
+    /// Consumer-side non-blocking pop; draining below capacity wakes
+    /// producers parked on this inbox.
+    pub(crate) fn try_pop(&self) -> PopResult {
+        let (res, wakes) = {
+            let mut g = lock(&self.inner);
+            match self.pop_locked(&mut g) {
+                Some((it, wakes)) => (PopResult::Item(it), wakes),
+                None => {
+                    let res = if g.closed || g.open_producers == 0 {
+                        PopResult::Exhausted
+                    } else {
+                        PopResult::Pending
+                    };
+                    (res, Vec::new())
+                }
+            }
+        };
+        for t in &wakes {
+            wake_task(t);
+        }
+        res
+    }
+
+    /// Consumer-side timed pop: waits (accounted as idle by the caller)
+    /// up to `timeout` for an item. Used by the `tensor_filter` batching
+    /// latency budget; the wait blocks one pool worker for at most the
+    /// budget, never indefinitely.
+    pub(crate) fn pop_timeout(&self, timeout: Duration) -> Option<(usize, Item)> {
+        let deadline = Instant::now() + timeout;
+        let mut g = lock(&self.inner);
+        loop {
+            if let Some((it, wakes)) = self.pop_locked(&mut g) {
+                drop(g);
+                for t in &wakes {
+                    wake_task(t);
+                }
+                return Some(it);
+            }
+            if g.closed || g.open_producers == 0 {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = self
+                .avail
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            g = ng;
+        }
+    }
+
+    /// Park-on-output registration. Returns false when the inbox already
+    /// drained below capacity (or closed) — the caller must not park.
+    /// Registration and the re-check are atomic under the inbox lock, so
+    /// a wake can never be lost between a push and the park decision.
+    /// Idempotent per task (re-parking on a still-full inbox does not
+    /// grow the waiter list).
+    pub(crate) fn register_waiter(&self, task: &Arc<Task>) -> bool {
+        let mut g = lock(&self.inner);
+        if g.closed || g.queue.len() < self.cap {
+            return false;
+        }
+        if !g.waiters.iter().any(|t| Arc::ptr_eq(t, task)) {
+            g.waiters.push(task.clone());
+        }
+        true
+    }
+
+    /// Is the inbox still at/over capacity (the producer step gate)?
+    pub(crate) fn at_capacity(&self) -> bool {
+        let g = lock(&self.inner);
+        !g.closed && g.queue.len() >= self.cap
+    }
+
+    /// Park-on-input re-check: anything a parked consumer would need to
+    /// see (item queued, closed, all producers gone)?
+    pub(crate) fn has_ready(&self) -> bool {
+        let g = lock(&self.inner);
+        !g.queue.is_empty() || g.closed || g.open_producers == 0
+    }
+
+    /// One producing link finished; at zero the consumer observes
+    /// end-of-input once drained (channel-disconnect analog).
+    pub(crate) fn producer_done(&self) {
+        let last = {
+            let mut g = lock(&self.inner);
+            g.open_producers = g.open_producers.saturating_sub(1);
+            g.open_producers == 0
+        };
+        if last {
+            self.avail.notify_all();
+            if let Some(t) = self.consumer_task() {
+                wake_task(&t);
+            }
+        }
+    }
+
+    /// Consumer finished: refuse further deliveries and release parked
+    /// producers (they observe [`PushResult::Closed`], the equivalent of
+    /// a send to a dropped receiver, and request pipeline stop).
+    pub(crate) fn close(&self) {
+        let waiters = {
+            let mut g = lock(&self.inner);
+            g.closed = true;
+            std::mem::take(&mut g.waiters)
+        };
+        self.avail.notify_all();
+        for t in &waiters {
+            wake_task(t);
+        }
+    }
+
+    /// Test support: drain every queued buffer (EOS markers skipped).
+    #[cfg(test)]
+    pub(crate) fn drain_buffers(&self) -> Vec<crate::tensor::Buffer> {
+        let mut g = lock(&self.inner);
+        g.queue
+            .drain(..)
+            .filter_map(|(_, item)| match item {
+                Item::Buffer(b) => Some(b),
+                Item::Eos => None,
+            })
+            .collect()
+    }
+}
+
+/// Handle that unparks one task from outside the pool — the mechanism
+/// behind `appsrc`: the application's push handle wakes the source task
+/// that returned [`Flow::Wait`]. Holding a waker never keeps a finished
+/// pipeline alive (weak reference), and waking a running, queued or
+/// finished task is a cheap no-op. Also used by
+/// [`Running::request_stop`](crate::pipeline::Running::request_stop) to
+/// nudge every parked task of a pipeline so sources re-check the stop
+/// flag instead of sleeping through it.
+#[derive(Clone, Default)]
+pub struct Waker {
+    task: Weak<Task>,
+}
+
+impl Waker {
+    pub(crate) fn for_task(task: &Arc<Task>) -> Waker {
+        Waker {
+            task: Arc::downgrade(task),
+        }
+    }
+
+    /// Unpark the task (no-op once it finished).
+    pub fn wake(&self) {
+        if let Some(t) = self.task.upgrade() {
+            wake_task(&t);
+        }
+    }
+}
+
+/// A late-bound [`Waker`] slot shared between an element and its
+/// application-side handles: the element publishes its waker at the
+/// first step, handles wake through it from any thread.
+#[derive(Default)]
+pub struct SharedWaker {
+    slot: Mutex<Option<Waker>>,
+}
+
+impl SharedWaker {
+    pub fn new() -> Arc<SharedWaker> {
+        Arc::new(SharedWaker::default())
+    }
+
+    pub fn set(&self, w: Waker) {
+        *lock(&self.slot) = Some(w);
+    }
+
+    pub fn wake(&self) {
+        if let Some(w) = lock(&self.slot).as_ref() {
+            w.wake();
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum SchedState {
+    /// On the run queue (or being handed to a worker).
+    Queued,
+    /// A worker is inside this task's step.
+    Running,
+    ParkedInput,
+    ParkedOutput,
+    ParkedExternal,
+    Finished,
+}
+
+struct Sched {
+    state: SchedState,
+    /// A wake arrived while the task was mid-step: requeue instead of
+    /// parking (the lost-wakeup guard of the state machine).
+    wake_pending: bool,
+}
+
+#[derive(Clone, Copy)]
+enum TaskKind {
+    Source,
+    Consumer { n_sink_links: usize },
+}
+
+/// Everything a step needs exclusive access to. Only the worker that
+/// dequeued the task locks it (the scheduling discipline guarantees a
+/// task is never queued twice).
+struct StepCore {
+    element: Option<Box<dyn Element>>,
+    ctx: Option<Ctx>,
+    kind: TaskKind,
+    /// EOS markers seen so far (one per sink link ends the element).
+    eos_seen: usize,
+    /// The element declared EOS early: drain-and-discard mode.
+    early_eos: bool,
+}
+
+/// One schedulable element of one pipeline.
+pub struct Task {
+    name: String,
+    /// Node index within its pipeline (completion slot).
+    index: usize,
+    pri: Priority,
+    stats: Arc<ElementStats>,
+    core: Arc<ExecutorCore>,
+    run: Arc<PipelineRun>,
+    /// This element's own input queue (None for sources).
+    inbox: Option<Arc<Inbox>>,
+    /// Saturated downstream inboxes this task parked on. A wake (any of
+    /// them draining, or an external waker) only leads to a step once
+    /// *all* of them are below capacity again — otherwise a fast branch
+    /// draining repeatedly would let the producer grow a slow sibling
+    /// branch's inbox without bound.
+    blocked_on: Mutex<Vec<Arc<Inbox>>>,
+    step: Mutex<StepCore>,
+    sched: Mutex<Sched>,
+}
+
+/// Wiring description of one task, assembled by the scheduler.
+pub(crate) struct TaskSpec {
+    pub name: String,
+    pub index: usize,
+    pub pri: Priority,
+    pub stats: Arc<ElementStats>,
+    pub inbox: Option<Arc<Inbox>>,
+    pub element: Box<dyn Element>,
+    pub ctx: Ctx,
+    pub is_source: bool,
+    pub n_sink_links: usize,
+}
+
+/// Completion state of one launched pipeline: elements come back through
+/// per-node slots, the first error wins, and `wait_done` blocks the
+/// application (never a pool worker) until every task finished.
+pub(crate) struct PipelineRun {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    slots: Mutex<Vec<Option<Box<dyn Element>>>>,
+    first_err: Mutex<Option<Error>>,
+}
+
+impl PipelineRun {
+    pub(crate) fn new(n: usize) -> Arc<PipelineRun> {
+        Arc::new(PipelineRun {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            slots: Mutex::new((0..n).map(|_| None).collect()),
+            first_err: Mutex::new(None),
+        })
+    }
+
+    /// Block until every task of this pipeline finished.
+    pub(crate) fn wait_done(&self) {
+        let mut rem = lock(&self.remaining);
+        while *rem > 0 {
+            rem = self.done.wait(rem).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    pub(crate) fn is_done(&self) -> bool {
+        *lock(&self.remaining) == 0
+    }
+
+    pub(crate) fn take_error(&self) -> Option<Error> {
+        lock(&self.first_err).take()
+    }
+
+    pub(crate) fn take_elements(&self) -> Vec<Option<Box<dyn Element>>> {
+        std::mem::take(&mut *lock(&self.slots))
+    }
+
+    fn task_finished(
+        &self,
+        index: usize,
+        element: Option<Box<dyn Element>>,
+        err: Option<Error>,
+    ) {
+        if let Some(el) = element {
+            lock(&self.slots)[index] = Some(el);
+        }
+        if let Some(e) = err {
+            let mut g = lock(&self.first_err);
+            if g.is_none() {
+                *g = Some(e);
+            }
+        }
+        let mut rem = lock(&self.remaining);
+        *rem = rem.saturating_sub(1);
+        if *rem == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Priority-laned global run queue (guarded by `ExecutorCore::rq`).
+struct RunQueue {
+    lanes: [VecDeque<Arc<Task>>; 3],
+    len: usize,
+    /// Rotation cursor for the weighted 4:2:1 lane pick.
+    seq: u64,
+}
+
+/// Weighted lane rotation: 4 high, 2 normal, 1 low per 7 picks.
+const LANE_PICKS: [usize; 7] = [0, 1, 0, 1, 0, 2, 0];
+
+impl RunQueue {
+    fn new() -> RunQueue {
+        RunQueue {
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            len: 0,
+            seq: 0,
+        }
+    }
+
+    fn push(&mut self, pri: Priority, task: Arc<Task>) {
+        self.lanes[pri.lane()].push_back(task);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Arc<Task>> {
+        if self.len == 0 {
+            return None;
+        }
+        let preferred = LANE_PICKS[(self.seq % LANE_PICKS.len() as u64) as usize];
+        self.seq += 1;
+        for lane in [preferred, 0, 1, 2] {
+            if let Some(t) = self.lanes[lane].pop_front() {
+                self.len -= 1;
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+pub(crate) struct ExecutorCore {
+    rq: Mutex<RunQueue>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    workers: usize,
+    /// Strong registry of unfinished tasks (parked tasks are not
+    /// necessarily referenced by the run queue or any inbox).
+    live: Mutex<Vec<Arc<Task>>>,
+    steps_total: AtomicU64,
+    wakeups_total: AtomicU64,
+    runq_hwm: AtomicU64,
+}
+
+impl ExecutorCore {
+    fn enqueue(&self, task: Arc<Task>) {
+        let pri = task.pri;
+        {
+            let mut rq = lock(&self.rq);
+            rq.push(pri, task);
+            self.runq_hwm.fetch_max(rq.len as u64, Ordering::Relaxed);
+        }
+        self.available.notify_one();
+    }
+
+    fn remove_live(&self, task: &Arc<Task>) {
+        lock(&self.live).retain(|t| !Arc::ptr_eq(t, task));
+    }
+}
+
+/// Requeue a task that a wake or a ready verdict made runnable.
+fn requeue(task: &Arc<Task>) {
+    {
+        let mut s = lock(&task.sched);
+        s.wake_pending = false;
+        s.state = SchedState::Queued;
+    }
+    task.core.enqueue(task.clone());
+}
+
+/// Transition `Running -> parked` unless a wake arrived mid-step, in
+/// which case the task is requeued and `false` returned.
+fn park(task: &Arc<Task>, state: SchedState) -> bool {
+    let mut s = lock(&task.sched);
+    if s.wake_pending {
+        s.wake_pending = false;
+        s.state = SchedState::Queued;
+        drop(s);
+        task.core.enqueue(task.clone());
+        return false;
+    }
+    s.state = state;
+    true
+}
+
+/// Make a task runnable from any thread. Safe against every state:
+/// running tasks defer the wake to step exit, queued/finished tasks
+/// ignore it, parked tasks are enqueued. Spurious wakes are harmless (a
+/// step with nothing to do re-parks).
+pub(crate) fn wake_task(task: &Arc<Task>) {
+    let mut s = lock(&task.sched);
+    match s.state {
+        SchedState::Running => s.wake_pending = true,
+        SchedState::Queued | SchedState::Finished => {}
+        SchedState::ParkedInput | SchedState::ParkedOutput | SchedState::ParkedExternal => {
+            s.state = SchedState::Queued;
+            drop(s);
+            task.stats.record_wakeup();
+            task.core.wakeups_total.fetch_add(1, Ordering::Relaxed);
+            task.core.enqueue(task.clone());
+        }
+    }
+}
+
+/// What a step decided about the task's future.
+enum Verdict {
+    Ready,
+    ParkInput,
+    ParkOutput(Vec<Arc<Inbox>>),
+    /// Park until an external [`Waker`] fires. Carries any outputs the
+    /// step saturated: the worker-loop gate re-checks them on wake, so
+    /// an element that pushes and then waits cannot bypass backpressure.
+    ParkExternal(Vec<Arc<Inbox>>),
+}
+
+enum Outcome {
+    Park(Verdict),
+    Finish(Option<Error>),
+}
+
+fn drain_control(el: &mut Box<dyn Element>, cx: &mut Ctx) -> crate::error::Result<()> {
+    while let Some(msg) = cx.try_pull_control() {
+        el.handle_control(msg)?;
+    }
+    Ok(())
+}
+
+fn push_all_eos(cx: &mut Ctx) {
+    for pad in 0..cx.n_src_pads() {
+        cx.push_eos(pad);
+    }
+}
+
+/// Execute one step of an element: drain the control mailbox, then one
+/// `generate()` (sources) or one input item through `handle()`
+/// (consumers) — the exact per-iteration body of the seed scheduler's
+/// thread loops, minus the blocking.
+fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
+    let StepCore {
+        element,
+        ctx,
+        kind,
+        eos_seen,
+        early_eos,
+    } = core;
+    let el = element.as_mut().expect("task stepped after finish");
+    let cx = ctx.as_mut().expect("task stepped after finish");
+    cx.begin_step();
+
+    match *kind {
+        TaskKind::Source => {
+            if cx.stopped() {
+                push_all_eos(cx);
+                return Outcome::Finish(None);
+            }
+            let t0 = Instant::now();
+            let flow = drain_control(el, cx).and_then(|_| el.generate(cx));
+            let busy = t0.elapsed().saturating_sub(cx.take_idle());
+            stats.record_busy(cx.domain, busy);
+            match flow {
+                Err(e) => {
+                    push_all_eos(cx);
+                    Outcome::Finish(Some(e))
+                }
+                Ok(Flow::Eos) => {
+                    push_all_eos(cx);
+                    Outcome::Finish(None)
+                }
+                Ok(Flow::Wait) => {
+                    Outcome::Park(Verdict::ParkExternal(cx.take_saturated()))
+                }
+                Ok(Flow::Continue) => {
+                    let sat = cx.take_saturated();
+                    if sat.is_empty() {
+                        Outcome::Park(Verdict::Ready)
+                    } else {
+                        Outcome::Park(Verdict::ParkOutput(sat))
+                    }
+                }
+            }
+        }
+        TaskKind::Consumer { n_sink_links } => match cx.poll_input() {
+            PopResult::Pending => Outcome::Park(Verdict::ParkInput),
+            PopResult::Exhausted => {
+                // All producers gone before full EOS accounting (an
+                // upstream error): flush and unwind, exactly like the
+                // seed's disconnected-channel path.
+                if !*early_eos {
+                    let t0 = Instant::now();
+                    let r = drain_control(el, cx).and_then(|_| el.flush(cx));
+                    let busy = t0.elapsed().saturating_sub(cx.take_idle());
+                    stats.record_busy(cx.domain, busy);
+                    push_all_eos(cx);
+                    if let Err(e) = r {
+                        return Outcome::Finish(Some(e));
+                    }
+                }
+                Outcome::Finish(None)
+            }
+            PopResult::Item((pad, item)) => {
+                if matches!(item, Item::Eos) {
+                    *eos_seen += 1;
+                }
+                if *early_eos {
+                    // done but still draining input: keep the control
+                    // mailbox drained so application sends don't back up
+                    // against a finished element
+                    if let Err(e) = drain_control(el, cx) {
+                        return Outcome::Finish(Some(e));
+                    }
+                } else {
+                    let t0 = Instant::now();
+                    // control first: a message enqueued before this item
+                    // entered the pipeline is in effect for it
+                    let flow =
+                        drain_control(el, cx).and_then(|_| el.handle(pad, item, cx));
+                    let busy = t0.elapsed().saturating_sub(cx.take_idle());
+                    stats.record_busy(cx.domain, busy);
+                    match flow {
+                        Ok(Flow::Continue) => {}
+                        Ok(Flow::Wait) => {
+                            // the element handed the item back via
+                            // push_back_input and waits on an external
+                            // event (appsink waiting for the application
+                            // to drain): park, carrying any saturated
+                            // outputs into the wake gate
+                            return Outcome::Park(Verdict::ParkExternal(
+                                cx.take_saturated(),
+                            ));
+                        }
+                        Ok(Flow::Eos) => {
+                            // element declared end-of-stream: flush,
+                            // notify downstream, keep draining input so
+                            // upstream never parks on a dead consumer
+                            if let Err(e) = el.flush(cx) {
+                                return Outcome::Finish(Some(e));
+                            }
+                            push_all_eos(cx);
+                            *early_eos = true;
+                        }
+                        Err(e) => {
+                            push_all_eos(cx);
+                            return Outcome::Finish(Some(e));
+                        }
+                    }
+                }
+                if *eos_seen >= n_sink_links {
+                    if !*early_eos {
+                        let r = el.flush(cx);
+                        push_all_eos(cx);
+                        if let Err(e) = r {
+                            return Outcome::Finish(Some(e));
+                        }
+                    }
+                    return Outcome::Finish(None);
+                }
+                let sat = cx.take_saturated();
+                if sat.is_empty() {
+                    Outcome::Park(Verdict::Ready)
+                } else {
+                    Outcome::Park(Verdict::ParkOutput(sat))
+                }
+            }
+        },
+    }
+}
+
+/// Tear a finished task down so neighbors observe termination exactly
+/// like a thread exit under the seed scheduler: downstream inboxes lose
+/// a producer (end-of-input once drained), the own inbox closes (pushes
+/// fail, parked producers release), and the element lands in its
+/// pipeline completion slot.
+fn finish_task(task: &Arc<Task>, err: Option<Error>) {
+    let (element, ctx) = {
+        let mut core = lock(&task.step);
+        (core.element.take(), core.ctx.take())
+    };
+    if let Some(mut cx) = ctx {
+        cx.release_outputs();
+    }
+    if let Some(ib) = &task.inbox {
+        ib.close();
+    }
+    {
+        let mut s = lock(&task.sched);
+        s.state = SchedState::Finished;
+        s.wake_pending = false;
+    }
+    task.core.remove_live(task);
+    task.run.task_finished(task.index, element, err);
+}
+
+/// Park a task on a set of saturated downstream inboxes. Publishes the
+/// gate set first (so any wake landing after the park re-checks it at
+/// dequeue), then registers as a waiter on each inbox with an atomic
+/// register-and-recheck under the inbox lock — if any inbox already
+/// drained (or closed), the task self-wakes instead of risking a lost
+/// wakeup. Shared by the step verdict path and the worker-loop gate
+/// re-park.
+fn park_on_output(task: &Arc<Task>, saturated: Vec<Arc<Inbox>>) {
+    task.stats.record_park_output();
+    *lock(&task.blocked_on) = saturated.clone();
+    if park(task, SchedState::ParkedOutput) {
+        let mut already_drained = false;
+        for ib in &saturated {
+            if !ib.register_waiter(task) {
+                already_drained = true;
+            }
+        }
+        if already_drained {
+            wake_task(task);
+        }
+    }
+}
+
+fn apply_verdict(task: &Arc<Task>, verdict: Verdict) {
+    match verdict {
+        Verdict::Ready => requeue(task),
+        Verdict::ParkInput => {
+            task.stats.record_park_input();
+            if park(task, SchedState::ParkedInput) {
+                // lost-wakeup guard: an item may have arrived between the
+                // step's empty poll and the park transition
+                let ready = match task.inbox.as_ref() {
+                    Some(ib) => ib.has_ready(),
+                    None => true,
+                };
+                if ready {
+                    wake_task(task);
+                }
+            }
+        }
+        Verdict::ParkOutput(saturated) => park_on_output(task, saturated),
+        Verdict::ParkExternal(saturated) => {
+            // an external park is an input park (waiting on the
+            // application) for accounting purposes, keeping
+            // wakeups <= parks
+            task.stats.record_park_input();
+            // saturated outputs go into the dequeue gate (not the
+            // waiter lists): the external Waker is the unpark path,
+            // but the task must not step past full links when it fires
+            *lock(&task.blocked_on) = saturated;
+            // the wake_pending check inside park() covers an external
+            // wake that raced the park decision
+            park(task, SchedState::ParkedExternal);
+        }
+    }
+}
+
+fn worker_loop(core: Arc<ExecutorCore>) {
+    loop {
+        let task = {
+            let mut rq = lock(&core.rq);
+            loop {
+                if core.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(t) = rq.pop() {
+                    break t;
+                }
+                rq = core.available.wait(rq).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        lock(&task.sched).state = SchedState::Running;
+        // Output gate: a task woken out of park-on-output only steps
+        // once every link it parked on drained below capacity; partial
+        // wakes re-park on the still-full remainder. This keeps bounded
+        // links bounded when one downstream branch is fast and another
+        // slow.
+        let gate = std::mem::take(&mut *lock(&task.blocked_on));
+        if !gate.is_empty() {
+            let still_full: Vec<Arc<Inbox>> =
+                gate.into_iter().filter(|ib| ib.at_capacity()).collect();
+            if !still_full.is_empty() {
+                park_on_output(&task, still_full);
+                continue;
+            }
+        }
+        task.stats.record_step();
+        core.steps_total.fetch_add(1, Ordering::Relaxed);
+        // isolate element panics to the step, like the seed isolated
+        // them to the element's thread
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut step = lock(&task.step);
+            drive(&mut step, &task.stats)
+        }));
+        match outcome {
+            Ok(Outcome::Park(v)) => apply_verdict(&task, v),
+            Ok(Outcome::Finish(err)) => finish_task(&task, err),
+            Err(_) => finish_task(
+                &task,
+                Some(Error::Runtime(format!("element {} panicked", task.name))),
+            ),
+        }
+    }
+}
+
+fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("NNS_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, MAX_WORKERS);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8)
+}
+
+/// A fixed-size worker pool executing element tasks. Cheap to clone
+/// (shared handle). The process-wide [`Executor::global`] instance sizes
+/// itself from `NNS_WORKERS` (default: the core count, clamped to 2–8)
+/// and backs `Pipeline::play`/`run` and `SingleShot`; dedicated
+/// executors serve tests and [`PipelineHub`](crate::pipeline::PipelineHub)s
+/// that need their own bounded pool.
+#[derive(Clone)]
+pub struct Executor {
+    core: Arc<ExecutorCore>,
+}
+
+impl Executor {
+    /// Spawn a pool of `workers` threads (clamped to 1..=[`MAX_WORKERS`]).
+    pub fn new(workers: usize) -> Executor {
+        let workers = workers.clamp(1, MAX_WORKERS);
+        let core = Arc::new(ExecutorCore {
+            rq: Mutex::new(RunQueue::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            workers,
+            live: Mutex::new(Vec::new()),
+            steps_total: AtomicU64::new(0),
+            wakeups_total: AtomicU64::new(0),
+            runq_hwm: AtomicU64::new(0),
+        });
+        for i in 0..workers {
+            let c = core.clone();
+            std::thread::Builder::new()
+                .name(format!("nns-worker-{i}"))
+                .spawn(move || worker_loop(c))
+                .expect("spawn pool worker");
+        }
+        Executor { core }
+    }
+
+    /// The process-wide default executor (all `Pipeline::play` traffic).
+    pub fn global() -> &'static Executor {
+        static GLOBAL: Lazy<Executor> = Lazy::new(|| Executor::new(default_workers()));
+        &GLOBAL
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.core.workers
+    }
+
+    /// Total element steps executed across all pipelines.
+    pub fn steps_executed(&self) -> u64 {
+        self.core.steps_total.load(Ordering::Relaxed)
+    }
+
+    /// Total parked-task wakeups across all pipelines.
+    pub fn wakeups(&self) -> u64 {
+        self.core.wakeups_total.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of the global run queue (scheduling-pressure
+    /// indicator: how many tasks were runnable but waiting for a worker).
+    pub fn run_queue_high_water(&self) -> u64 {
+        self.core.runq_hwm.load(Ordering::Relaxed)
+    }
+
+    /// Number of unfinished element tasks currently owned by the pool.
+    pub fn live_tasks(&self) -> usize {
+        lock(&self.core.live).len()
+    }
+
+    /// Stop the worker threads once idle. Parked pipelines are stranded —
+    /// only call on dedicated executors after everything joined (the
+    /// dedicated-`PipelineHub` drop path).
+    pub fn shutdown(&self) {
+        self.core.shutdown.store(true, Ordering::Relaxed);
+        self.core.available.notify_all();
+    }
+
+    /// Wire and enqueue every task of one pipeline. The returned wakers
+    /// (one per task, weak) let the pipeline handle nudge parked tasks —
+    /// `request_stop` uses them so a parked source observes the flag.
+    pub(crate) fn spawn_pipeline(
+        &self,
+        specs: Vec<TaskSpec>,
+        run: &Arc<PipelineRun>,
+    ) -> Vec<Waker> {
+        let mut tasks = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let kind = if spec.is_source {
+                TaskKind::Source
+            } else {
+                TaskKind::Consumer {
+                    n_sink_links: spec.n_sink_links,
+                }
+            };
+            let task = Arc::new(Task {
+                name: spec.name,
+                index: spec.index,
+                pri: spec.pri,
+                stats: spec.stats,
+                core: self.core.clone(),
+                run: run.clone(),
+                inbox: spec.inbox,
+                blocked_on: Mutex::new(Vec::new()),
+                step: Mutex::new(StepCore {
+                    element: Some(spec.element),
+                    ctx: Some(spec.ctx),
+                    kind,
+                    eos_seen: 0,
+                    early_eos: false,
+                }),
+                sched: Mutex::new(Sched {
+                    state: SchedState::Queued,
+                    wake_pending: false,
+                }),
+            });
+            // hand the element a waker for external (appsrc-style) wakes
+            if let Some(cx) = lock(&task.step).ctx.as_mut() {
+                cx.set_waker(Waker::for_task(&task));
+            }
+            if let Some(ib) = &task.inbox {
+                ib.set_consumer(&task);
+            }
+            tasks.push(task);
+        }
+        lock(&self.core.live).extend(tasks.iter().cloned());
+        let wakers: Vec<Waker> = tasks.iter().map(Waker::for_task).collect();
+        for t in tasks {
+            self.core.enqueue(t);
+        }
+        wakers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Buffer;
+
+    fn stats() -> Arc<ElementStats> {
+        ElementStats::new("test")
+    }
+
+    #[test]
+    fn run_queue_rotation_never_starves_low() {
+        let mut rq = RunQueue::new();
+        // no tasks needed: empty lanes fall through to priority order
+        assert!(rq.pop().is_none());
+        assert_eq!(LANE_PICKS.iter().filter(|&&l| l == 0).count(), 4);
+        assert_eq!(LANE_PICKS.iter().filter(|&&l| l == 1).count(), 2);
+        assert_eq!(LANE_PICKS.iter().filter(|&&l| l == 2).count(), 1);
+    }
+
+    #[test]
+    fn inbox_blocking_push_saturates_at_capacity() {
+        let ib = Inbox::new(2, stats());
+        ib.add_producer();
+        let b = || Item::Buffer(Buffer::from_f32(0, &[1.0]));
+        assert!(matches!(
+            ib.push(0, b()),
+            PushResult::Delivered { saturated: false }
+        ));
+        assert!(matches!(
+            ib.push(0, b()),
+            PushResult::Delivered { saturated: true }
+        ));
+        // over-capacity pushes still deliver (bounded by one step)
+        assert!(matches!(
+            ib.push(0, b()),
+            PushResult::Delivered { saturated: true }
+        ));
+        assert!(matches!(ib.try_pop(), PopResult::Item(_)));
+    }
+
+    #[test]
+    fn inbox_leaky_push_drops_at_capacity() {
+        let ib = Inbox::new(1, stats());
+        ib.add_producer();
+        let b = || Item::Buffer(Buffer::from_f32(0, &[1.0]));
+        assert!(matches!(ib.push_leaky(0, b()), PushResult::Delivered { .. }));
+        assert!(matches!(ib.push_leaky(0, b()), PushResult::Dropped));
+    }
+
+    #[test]
+    fn inbox_exhausts_when_producers_finish() {
+        let ib = Inbox::new(4, stats());
+        ib.add_producer();
+        assert!(matches!(ib.try_pop(), PopResult::Pending));
+        ib.push(0, Item::Buffer(Buffer::from_f32(0, &[1.0])));
+        ib.producer_done();
+        // queued item still delivered, then end-of-input
+        assert!(matches!(ib.try_pop(), PopResult::Item(_)));
+        assert!(matches!(ib.try_pop(), PopResult::Exhausted));
+    }
+
+    #[test]
+    fn inbox_close_rejects_pushes() {
+        let ib = Inbox::new(4, stats());
+        ib.add_producer();
+        ib.close();
+        assert!(matches!(
+            ib.push(0, Item::Buffer(Buffer::from_f32(0, &[1.0]))),
+            PushResult::Closed
+        ));
+    }
+
+    #[test]
+    fn executor_clamps_workers() {
+        let e = Executor::new(0);
+        assert_eq!(e.worker_count(), 1);
+        e.shutdown();
+        let e = Executor::new(MAX_WORKERS + 100);
+        assert_eq!(e.worker_count(), MAX_WORKERS);
+        e.shutdown();
+    }
+}

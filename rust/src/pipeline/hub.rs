@@ -1,0 +1,297 @@
+//! Multi-tenant pipeline registry over one bounded worker pool.
+//!
+//! The among-device-AI follow-up paper (arXiv:2201.06026) has devices
+//! hosting *many* pipelines at once. A [`PipelineHub`] launches,
+//! enumerates, steers and joins any number of concurrent pipelines over
+//! a single [`Executor`] — so 64 pipelines of 10 elements run on, say, 4
+//! worker threads instead of the 640 the seed scheduler would have
+//! spawned. Per-pipeline [`Priority`] lanes let latency-sensitive
+//! pipelines (a camera feed) outrank background ones (a model warmup)
+//! without starving either, and the worker count is hard-capped at
+//! [`MAX_WORKERS`](crate::pipeline::executor::MAX_WORKERS) regardless of
+//! configuration.
+//!
+//! ```no_run
+//! use nnstreamer::pipeline::{Pipeline, PipelineHub};
+//!
+//! # fn main() -> nnstreamer::Result<()> {
+//! let hub = PipelineHub::with_workers(4);
+//! for i in 0..64 {
+//!     let p = Pipeline::parse(
+//!         "videotestsrc num-buffers=32 ! tensor_converter ! fakesink",
+//!     )?;
+//!     hub.launch(format!("cam-{i}"), p)?;
+//! }
+//! for joined in hub.join_all() {
+//!     let report = joined.report?;
+//!     println!("{}: {:.1} s", joined.name, report.wall.as_secs_f64());
+//! }
+//! # Ok(())
+//! # }
+//! ```
+
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::metrics::stats::PipelineReport;
+use crate::pipeline::executor::{lock, Executor, Priority};
+use crate::pipeline::scheduler::{self, Controller, Running};
+use crate::pipeline::Pipeline;
+
+struct HubEntry {
+    name: String,
+    pri: Priority,
+    pipeline: Pipeline,
+    running: Option<Running>,
+}
+
+/// Result of joining one hub pipeline: its report (or failure) plus the
+/// [`Pipeline`] itself, whose finished elements (collecting sinks, app
+/// handles) remain inspectable via
+/// [`Pipeline::finished_element`].
+pub struct HubJoin {
+    pub name: String,
+    pub priority: Priority,
+    pub report: Result<PipelineReport>,
+    pub pipeline: Pipeline,
+}
+
+/// Registry of concurrently running pipelines sharing one bounded
+/// executor (see the module docs for an example).
+pub struct PipelineHub {
+    exec: Executor,
+    /// True when this hub spawned its own pool (shut down on drop once
+    /// no launched pipeline is still executing); false when it shares
+    /// [`Executor::global`].
+    dedicated: bool,
+    entries: Mutex<Vec<HubEntry>>,
+}
+
+impl PipelineHub {
+    /// A hub over the process-global executor (shared with
+    /// `Pipeline::play` traffic).
+    pub fn new() -> PipelineHub {
+        PipelineHub {
+            exec: Executor::global().clone(),
+            dedicated: false,
+            entries: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// A hub with its own dedicated pool of `workers` threads (clamped
+    /// to the hard cap). The pool is shut down when the hub is dropped
+    /// and no launched pipeline is still executing (joined or not).
+    pub fn with_workers(workers: usize) -> PipelineHub {
+        PipelineHub {
+            exec: Executor::new(workers),
+            dedicated: true,
+            entries: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// A hub over a caller-managed executor.
+    pub fn on(exec: &Executor) -> PipelineHub {
+        PipelineHub {
+            exec: exec.clone(),
+            dedicated: false,
+            entries: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.exec.worker_count()
+    }
+
+    /// Launch a pipeline at [`Priority::Normal`]; returns its control
+    /// handle. Pipeline names must be unique within the hub.
+    pub fn launch(&self, name: impl Into<String>, pipeline: Pipeline) -> Result<Controller> {
+        self.launch_with_priority(name, pipeline, Priority::Normal)
+    }
+
+    /// Launch a pipeline with an explicit scheduling priority.
+    pub fn launch_with_priority(
+        &self,
+        name: impl Into<String>,
+        mut pipeline: Pipeline,
+        pri: Priority,
+    ) -> Result<Controller> {
+        let name = name.into();
+        let mut entries = lock(&self.entries);
+        if entries.iter().any(|e| e.name == name) {
+            return Err(Error::Runtime(format!(
+                "hub already runs a pipeline named {name:?}"
+            )));
+        }
+        let running = scheduler::start_on(&self.exec, &mut pipeline.graph, pri)?;
+        let controller = running.controller();
+        entries.push(HubEntry {
+            name,
+            pri,
+            pipeline,
+            running: Some(running),
+        });
+        Ok(controller)
+    }
+
+    /// Number of launched (not yet joined) pipelines.
+    pub fn len(&self) -> usize {
+        lock(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Names of the launched pipelines, in launch order.
+    pub fn names(&self) -> Vec<String> {
+        lock(&self.entries).iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// How many launched pipelines are still executing.
+    pub fn running_count(&self) -> usize {
+        lock(&self.entries)
+            .iter()
+            .filter(|e| e.running.as_ref().is_some_and(|r| !r.is_done()))
+            .count()
+    }
+
+    /// Control handle of a launched pipeline, by its hub name.
+    pub fn controller(&self, pipeline: &str) -> Option<Controller> {
+        lock(&self.entries)
+            .iter()
+            .find(|e| e.name == pipeline)
+            .and_then(|e| e.running.as_ref().map(Running::controller))
+    }
+
+    /// Request a stop on every launched pipeline (live sources exit at
+    /// their next frame boundary).
+    pub fn request_stop_all(&self) {
+        for e in lock(&self.entries).iter() {
+            if let Some(r) = &e.running {
+                r.request_stop();
+            }
+        }
+    }
+
+    /// Join every launched pipeline (in launch order) and drain the
+    /// registry. Blocks the calling thread only — pool workers keep
+    /// stepping the remaining pipelines while earlier ones are joined.
+    pub fn join_all(&self) -> Vec<HubJoin> {
+        let entries: Vec<HubEntry> = {
+            let mut g = lock(&self.entries);
+            g.drain(..).collect()
+        };
+        entries
+            .into_iter()
+            .map(|mut e| {
+                let report = match e.running.take() {
+                    Some(running) => running.wait().map(|(report, elements)| {
+                        e.pipeline.finished = elements;
+                        report
+                    }),
+                    None => Err(Error::Runtime(format!(
+                        "pipeline {:?} was never started",
+                        e.name
+                    ))),
+                };
+                HubJoin {
+                    name: e.name,
+                    priority: e.pri,
+                    report,
+                    pipeline: e.pipeline,
+                }
+            })
+            .collect()
+    }
+}
+
+impl Default for PipelineHub {
+    fn default() -> Self {
+        PipelineHub::new()
+    }
+}
+
+impl Drop for PipelineHub {
+    fn drop(&mut self) {
+        // A dedicated pool is stopped as soon as nothing can still be
+        // scheduled on it: every launched pipeline finished (joined or
+        // not). Pipelines still executing keep their workers alive —
+        // shutting down under them would strand parked tasks forever,
+        // so that (discouraged) path intentionally leaks the pool.
+        if self.dedicated && self.running_count() == 0 {
+            self.exec.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_runs_many_pipelines_on_few_workers() {
+        let hub = PipelineHub::with_workers(2);
+        assert_eq!(hub.worker_count(), 2);
+        for i in 0..8 {
+            let p = Pipeline::parse(
+                "videotestsrc num-buffers=4 pattern=gradient ! \
+                 video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+                 tensor_converter ! fakesink name=out",
+            )
+            .unwrap();
+            hub.launch(format!("p{i}"), p).unwrap();
+        }
+        assert_eq!(hub.len(), 8);
+        assert_eq!(hub.names().len(), 8);
+        let joined = hub.join_all();
+        assert_eq!(joined.len(), 8);
+        for j in joined {
+            let report = j.report.expect("pipeline succeeded");
+            assert_eq!(report.element("out").unwrap().buffers_in(), 4);
+            assert_eq!(report.sched.workers, 2);
+            assert!(report.sched.steps > 0, "scheduler counted steps");
+        }
+    }
+
+    #[test]
+    fn hub_rejects_duplicate_names() {
+        let hub = PipelineHub::with_workers(1);
+        let mk = || {
+            Pipeline::parse("videotestsrc num-buffers=1 ! fakesink").unwrap()
+        };
+        hub.launch("same", mk()).unwrap();
+        let err = hub.launch("same", mk()).unwrap_err().to_string();
+        assert!(err.contains("already runs"), "{err}");
+        hub.join_all();
+    }
+
+    #[test]
+    fn hub_priorities_all_complete() {
+        let hub = PipelineHub::with_workers(1);
+        for (i, pri) in [Priority::High, Priority::Normal, Priority::Low]
+            .into_iter()
+            .enumerate()
+        {
+            let p = Pipeline::parse(
+                "videotestsrc num-buffers=3 ! \
+                 video/x-raw,format=RGB,width=8,height=8,framerate=240 ! \
+                 tensor_converter ! fakesink name=out",
+            )
+            .unwrap();
+            hub.launch_with_priority(format!("p{i}"), p, pri).unwrap();
+        }
+        for j in hub.join_all() {
+            assert_eq!(
+                j.report.unwrap().element("out").unwrap().buffers_in(),
+                3,
+                "pipeline {} at {:?} completed",
+                j.name,
+                j.priority
+            );
+        }
+    }
+}

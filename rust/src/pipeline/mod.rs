@@ -13,16 +13,26 @@
 //!   selectors, `tensor_sink` subscriptions), and `appsrc` handles
 //!   ([`Pipeline::appsrc`]) push application data in.
 //!
+//! Execution happens on a **bounded worker pool** ([`executor`]): every
+//! element is a step-driven task, so a device can host many pipelines at
+//! O(workers) threads. [`PipelineHub`] is the multi-tenant entry point —
+//! launch/enumerate/join fleets of pipelines with per-pipeline
+//! [`Priority`] over one executor.
+//!
 //! [`run`]: Pipeline::run
 //! [`play`]: Pipeline::play
 
 pub mod builder;
+pub mod executor;
 pub mod graph;
+pub mod hub;
 pub mod parser;
 pub mod scheduler;
 
 pub use builder::PipelineBuilder;
+pub use executor::{Executor, Priority, Waker};
 pub use graph::{Graph, Link, Node, NodeId};
+pub use hub::{HubJoin, PipelineHub};
 pub use scheduler::{Controller, Running};
 
 use crate::element::Element;
@@ -87,10 +97,14 @@ impl Pipeline {
     }
 
     /// Receiving end of a named [`AppSink`] — call before [`play`]; the
-    /// channel closes when the sink reaches end-of-stream.
+    /// channel closes when the sink reaches end-of-stream, and each
+    /// receive unparks the sink task if the bounded channel had filled.
     ///
     /// [`play`]: Pipeline::play
-    pub fn appsink(&mut self, name: &str) -> Result<std::sync::mpsc::Receiver<Buffer>> {
+    pub fn appsink(
+        &mut self,
+        name: &str,
+    ) -> Result<crate::elements::sinks::AppSinkReceiver> {
         let id = self
             .graph
             .by_name(name)
@@ -108,14 +122,38 @@ impl Pipeline {
             })
     }
 
-    /// Start all element threads; returns a handle for live control.
+    /// Start the pipeline's elements as tasks on the process-global
+    /// worker pool; returns a handle for live control.
     pub fn play(&mut self) -> Result<Running> {
         scheduler::start(&mut self.graph)
+    }
+
+    /// Like [`play`](Pipeline::play), but on a specific executor with a
+    /// scheduling priority (tests pin worker counts this way; apps
+    /// hosting many pipelines usually go through [`PipelineHub`]).
+    pub fn play_on(
+        &mut self,
+        exec: &executor::Executor,
+        pri: executor::Priority,
+    ) -> Result<Running> {
+        scheduler::start_on(exec, &mut self.graph, pri)
     }
 
     /// Run to completion (EOS on all sinks) and return the report.
     pub fn run(&mut self) -> Result<PipelineReport> {
         let running = self.play()?;
+        let (report, elements) = running.wait()?;
+        self.finished = elements;
+        Ok(report)
+    }
+
+    /// Run to completion on a specific executor.
+    pub fn run_on(
+        &mut self,
+        exec: &executor::Executor,
+        pri: executor::Priority,
+    ) -> Result<PipelineReport> {
+        let running = self.play_on(exec, pri)?;
         let (report, elements) = running.wait()?;
         self.finished = elements;
         Ok(report)

@@ -1,46 +1,57 @@
-//! Thread-per-element scheduler with bounded-channel links.
+//! Pipeline wiring over the pooled executor, plus the live-control
+//! surface ([`Running`] / [`Controller`]).
 //!
-//! Every element runs on its own OS thread; links are bounded MPSC
-//! channels, so push blocks when a consumer is saturated (GStreamer's
-//! synchronous push + implicit backpressure). `queue` elements raise the
-//! channel capacity and thereby decouple producer from consumer — exactly
-//! the role queues play in the paper's pipelines.
+//! The seed scheduler ran every element on its own OS thread; since the
+//! worker-pool refactor this module only *wires* a negotiated graph —
+//! per-element [`Inbox`]es, output [`LinkSender`] tables, control
+//! mailboxes — and hands the resulting element tasks to an
+//! [`Executor`](crate::pipeline::executor::Executor) (the process-global
+//! one for [`start`], any executor for [`start_on`]). Links stay bounded
+//! MPSC queues with blocking or leaky delivery, and `queue` elements
+//! still raise capacity to decouple producer from consumer — exactly the
+//! role queues play in the paper's pipelines.
 //!
 //! ## Runtime control
 //!
-//! Each element additionally owns a bounded **control channel**. The
-//! application steers a playing pipeline through [`Running`] (or a
-//! cloneable [`Controller`]): property changes, valve open/close,
-//! selector switching and sink subscriptions are enqueued as
-//! [`ControlMsg`]s and applied *by the element's own thread*, always
-//! before the next item it processes. That ordering makes control
-//! deterministic with respect to the data stream: a message sent before
-//! a buffer enters the pipeline is in effect when that buffer reaches
-//! the element.
+//! Each element owns a bounded **control mailbox**. The application
+//! steers a playing pipeline through [`Running`] (or a cloneable
+//! [`Controller`]): property changes, valve open/close, selector
+//! switching and sink subscriptions are enqueued as [`ControlMsg`]s and
+//! applied at the element's next step, always *before* the next item it
+//! processes. That ordering makes control deterministic with respect to
+//! the data stream: a message sent before a buffer enters the pipeline
+//! is in effect when that buffer reaches the element. Control sends
+//! never block the application thread — a full mailbox (an element
+//! starved of input while the application keeps sending) surfaces as
+//! [`Error::ControlBackpressure`] instead.
 
 use std::collections::HashMap;
 use std::sync::atomic::AtomicBool;
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::element::{ControlMsg, Ctx, Element, Flow, Item, LinkSender};
+use crate::element::{ControlMsg, Ctx, Element, LinkSender};
 use crate::error::{Error, Result};
-use crate::metrics::stats::{ElementStats, PipelineReport};
+use crate::metrics::stats::{ElementStats, PipelineReport, SchedSnapshot};
 use crate::metrics::CpuTracker;
+use crate::pipeline::executor::{Executor, Inbox, PipelineRun, Priority, TaskSpec, Waker};
 use crate::pipeline::graph::Graph;
 use crate::tensor::Buffer;
 
 /// Capacity of each element's control mailbox. Control messages are tiny
-/// and drained before every processed item; the bound only matters if an
-/// element is starved of input while the application keeps sending.
+/// and drained at every element step; the bound only matters if an
+/// element is starved of input while the application keeps sending — in
+/// which case [`Controller::send`] reports
+/// [`Error::ControlBackpressure`] instead of blocking.
 const CONTROL_CAPACITY: usize = 64;
 
 /// Cloneable, thread-safe handle for steering a playing pipeline.
 ///
 /// Obtained from [`Running::controller`]; all [`Running`] control methods
 /// delegate here. Sending to an element that already finished (post-EOS)
-/// fails with a runtime error.
+/// fails with a runtime error; a full mailbox fails fast with
+/// [`Error::ControlBackpressure`] instead of blocking the application.
 #[derive(Clone)]
 pub struct Controller {
     channels: Arc<HashMap<String, SyncSender<ControlMsg>>>,
@@ -56,14 +67,21 @@ impl Controller {
                 crate::element::registry::did_you_mean(element, names)
             ))
         })?;
-        tx.send(msg).map_err(|_| {
-            Error::Runtime(format!("element {element:?} is no longer running"))
-        })
+        match tx.try_send(msg) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(Error::ControlBackpressure {
+                element: element.to_string(),
+                capacity: CONTROL_CAPACITY,
+            }),
+            Err(TrySendError::Disconnected(_)) => Err(Error::Runtime(format!(
+                "element {element:?} is no longer running"
+            ))),
+        }
     }
 
-    /// Change a property of a playing element (applied by the element's
-    /// thread before its next buffer). Invalid keys/values surface as the
-    /// element's failure when the pipeline is joined.
+    /// Change a property of a playing element (applied at the element's
+    /// next step, before its next buffer). Invalid keys/values surface as
+    /// the element's failure when the pipeline is joined.
     pub fn set_property(&self, element: &str, key: &str, value: &str) -> Result<()> {
         self.send(
             element,
@@ -90,9 +108,9 @@ impl Controller {
     }
 
     /// Attach a per-buffer callback to a named `tensor_sink`. The
-    /// callback runs on the sink's thread and observes every buffer the
-    /// sink processes (the pull-based collection additionally caps
-    /// retention at `max-kept`).
+    /// callback runs on the pool worker stepping the sink and observes
+    /// every buffer the sink processes (the pull-based collection
+    /// additionally caps retention at `max-kept`).
     pub fn subscribe<F>(&self, element: &str, callback: F) -> Result<()>
     where
         F: FnMut(&Buffer) + Send + 'static,
@@ -102,10 +120,16 @@ impl Controller {
 }
 
 /// A running pipeline: join to completion via [`Running::wait`], steer it
-/// live through the control methods (see [`Controller`]).
+/// live through the control methods (see [`Controller`]). The pipeline's
+/// elements execute as tasks on a shared worker pool; `wait` blocks the
+/// *application* thread only.
 pub struct Running {
-    threads: Vec<std::thread::JoinHandle<Result<Box<dyn Element>>>>,
+    run: Arc<PipelineRun>,
+    exec: Executor,
     node_names: Vec<String>,
+    /// One (weak) waker per element task — `request_stop` nudges parked
+    /// tasks so sources re-check the stop flag.
+    wakers: Vec<Waker>,
     pub stats: Vec<Arc<ElementStats>>,
     pub stop: Arc<AtomicBool>,
     pub epoch: Instant,
@@ -115,9 +139,14 @@ pub struct Running {
 }
 
 impl Running {
-    /// Request a stop (live sources exit at the next frame boundary).
+    /// Request a stop: live sources exit at the next frame boundary, and
+    /// parked sources (an idle `appsrc` waiting for application data)
+    /// are woken so they observe the flag instead of sleeping through it.
     pub fn request_stop(&self) {
         self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for w in &self.wakers {
+            w.wake();
+        }
     }
 
     /// A cloneable control handle usable from any thread, and after this
@@ -162,77 +191,107 @@ impl Running {
             .map(|i| &self.stats[i])
     }
 
-    /// Join all element threads and assemble the run report.
-    /// Elements are returned (in node order) for post-run inspection.
+    /// Has every element of this pipeline finished (EOS or error)?
+    pub fn is_done(&self) -> bool {
+        self.run.is_done()
+    }
+
+    /// Join the pipeline (block until every element task finished) and
+    /// assemble the run report. Elements are returned (in node order)
+    /// for post-run inspection.
     pub fn wait(self) -> Result<(PipelineReport, Vec<(String, Box<dyn Element>)>)> {
-        let mut elements = Vec::new();
-        let mut first_err: Option<Error> = None;
-        for (th, name) in self.threads.into_iter().zip(self.node_names) {
-            match th.join() {
-                Ok(Ok(el)) => elements.push((name, el)),
-                Ok(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(Error::Runtime(format!("element {name} panicked")));
-                    }
-                }
-            }
-        }
-        if let Some(e) = first_err {
+        let Running {
+            run,
+            exec,
+            node_names,
+            stats,
+            epoch,
+            cpu,
+            traffic0,
+            ..
+        } = self;
+        run.wait_done();
+        if let Some(e) = run.take_error() {
             return Err(e);
+        }
+        let mut elements = Vec::new();
+        for (name, slot) in node_names.into_iter().zip(run.take_elements()) {
+            if let Some(el) = slot {
+                elements.push((name, el));
+            }
         }
         let mem = crate::metrics::MemInfo::read();
         let report = PipelineReport {
-            wall: self.epoch.elapsed(),
-            elements: self.stats,
-            cpu_percent: self.cpu.cpu_percent(),
+            wall: epoch.elapsed(),
+            cpu_percent: cpu.cpu_percent(),
             peak_rss_mib: mem.peak_mib(),
-            traffic: crate::metrics::traffic::since(self.traffic0),
+            traffic: crate::metrics::traffic::since(traffic0),
+            sched: snapshot_sched(&stats, &exec),
+            elements: stats,
         };
         Ok((report, elements))
     }
 }
 
-/// Start every element of a negotiated graph. Consumes the graph's
-/// elements; they come back from [`Running::wait`].
+/// Aggregate the executor counters of one pipeline's elements into the
+/// report's scheduling section (Table-III-style accounting stays
+/// comparable across executors and worker counts).
+fn snapshot_sched(stats: &[Arc<ElementStats>], exec: &Executor) -> SchedSnapshot {
+    let mut s = SchedSnapshot {
+        workers: exec.worker_count(),
+        run_queue_high_water: exec.run_queue_high_water(),
+        ..Default::default()
+    };
+    for e in stats {
+        s.steps += e.steps();
+        s.parks_input += e.parks_input();
+        s.parks_output += e.parks_output();
+        s.wakeups += e.wakeups();
+        s.link_high_water = s.link_high_water.max(e.queue_high_water());
+    }
+    s
+}
+
+/// Start every element of a negotiated graph on the process-global
+/// executor. Consumes the graph's elements; they come back from
+/// [`Running::wait`].
 pub fn start(graph: &mut Graph) -> Result<Running> {
+    start_on(Executor::global(), graph, Priority::Normal)
+}
+
+/// Start a negotiated graph's elements as tasks on a specific executor
+/// with a pipeline-wide scheduling priority (the
+/// [`PipelineHub`](crate::pipeline::PipelineHub) entry point).
+pub fn start_on(exec: &Executor, graph: &mut Graph, pri: Priority) -> Result<Running> {
     graph.negotiate_all()?;
 
     let n = graph.nodes.len();
     let stop = Arc::new(AtomicBool::new(false));
     let epoch = Instant::now();
 
-    // Per-node stats + input channels.
     let stats: Vec<Arc<ElementStats>> = graph
         .nodes
         .iter()
         .map(|node| ElementStats::new(&node.name))
         .collect();
 
-    let mut senders: Vec<Option<SyncSender<(usize, Item)>>> = vec![None; n];
-    let mut receivers: Vec<Option<std::sync::mpsc::Receiver<(usize, Item)>>> =
-        (0..n).map(|_| None).collect();
+    // Per-consumer bounded inboxes (all sink pads of an element share
+    // one inbox; items carry their pad index).
+    let mut inboxes: Vec<Option<Arc<Inbox>>> = (0..n).map(|_| None).collect();
     for id in 0..n {
-        let n_sinks = graph.n_sink_links(id);
-        if n_sinks > 0 {
+        if graph.n_sink_links(id) > 0 {
             let cap = graph.nodes[id]
                 .element
                 .preferred_input_capacity()
                 .max(1);
-            let (tx, rx) = sync_channel(cap);
-            senders[id] = Some(tx);
-            receivers[id] = Some(rx);
+            inboxes[id] = Some(Inbox::new(cap, stats[id].clone()));
         }
     }
 
-    // Per-node control channels (live property changes, subscriptions).
+    // Per-node control mailboxes (live property changes, subscriptions).
     let mut control_txs: HashMap<String, SyncSender<ControlMsg>> =
         HashMap::with_capacity(n);
-    let mut control_rxs: Vec<Option<std::sync::mpsc::Receiver<ControlMsg>>> =
+    let mut control_rxs: Vec<Option<Receiver<ControlMsg>>> =
         (0..n).map(|_| None).collect();
     for id in 0..n {
         let (tx, rx) = sync_channel(CONTROL_CAPACITY);
@@ -240,20 +299,21 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
         control_rxs[id] = Some(rx);
     }
 
-    // Build per-node output sender tables.
+    // Build per-node output sender tables into the consumers' inboxes.
     let mut outputs: Vec<Vec<Option<LinkSender>>> = (0..n).map(|_| Vec::new()).collect();
     for id in 0..n {
         let links = graph.links_from(id);
         let n_pads = links.iter().map(|l| l.src_pad + 1).max().unwrap_or(0);
         let mut table: Vec<Option<LinkSender>> = (0..n_pads).map(|_| None).collect();
         for l in links {
-            let tx = senders[l.dst_node]
+            let inbox = inboxes[l.dst_node]
                 .as_ref()
-                .expect("linked dst must have a channel")
+                .expect("linked dst must have an inbox")
                 .clone();
+            inbox.add_producer();
             let delivery = graph.nodes[l.dst_node].element.input_delivery();
             table[l.src_pad] = Some(LinkSender::new(
-                tx,
+                inbox,
                 l.dst_pad,
                 delivery,
                 stats[l.dst_node].clone(),
@@ -261,52 +321,50 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
         }
         outputs[id] = table;
     }
-    // Drop the original senders so channels close when all producers exit.
-    drop(senders);
 
-    let mut threads = Vec::with_capacity(n);
+    let run = PipelineRun::new(n);
     let mut node_names = Vec::with_capacity(n);
-    // Move elements out of the graph into their threads.
+    let mut specs = Vec::with_capacity(n);
+    // Move elements out of the graph into their tasks.
     let nodes = std::mem::take(&mut graph.nodes);
     for (id, node) in nodes.into_iter().enumerate() {
-        let n_sink_links = graph
-            .links
-            .iter()
-            .filter(|l| l.dst_node == id)
-            .count();
-        let mut ctx = Ctx {
+        let n_sink_links = graph.links.iter().filter(|l| l.dst_node == id).count();
+        let ctx = Ctx {
             outputs: std::mem::take(&mut outputs[id]),
             stats: stats[id].clone(),
             stop: stop.clone(),
             epoch,
             domain: node.element.domain(),
             idle_ns: 0,
-            // consumers own their input channel through the ctx so they
-            // can drain ready items mid-handle (tensor_filter batching)
-            input: receivers[id].take(),
+            // consumers own their inbox through the ctx so they can
+            // drain ready items mid-handle (tensor_filter batching)
+            input: inboxes[id].clone(),
             pending: std::collections::VecDeque::new(),
             control: control_rxs[id].take(),
+            waker: None,
+            saturated: Vec::new(),
         };
-        let name = node.name.clone();
-        node_names.push(name.clone());
-        let mut element = node.element;
-        let th = std::thread::Builder::new()
-            .name(name.clone())
-            .spawn(move || -> Result<Box<dyn Element>> {
-                if element.is_source() {
-                    run_source(&mut *element, &mut ctx)?;
-                } else {
-                    run_consumer(&mut *element, n_sink_links, &mut ctx)?;
-                }
-                Ok(element)
-            })
-            .map_err(|e| Error::Runtime(format!("spawn {name}: {e}")))?;
-        threads.push(th);
+        let is_source = node.element.is_source();
+        node_names.push(node.name.clone());
+        specs.push(TaskSpec {
+            name: node.name,
+            index: id,
+            pri,
+            stats: stats[id].clone(),
+            inbox: inboxes[id].clone(),
+            element: node.element,
+            ctx,
+            is_source,
+            n_sink_links,
+        });
     }
+    let wakers = exec.spawn_pipeline(specs, &run);
 
     Ok(Running {
-        threads,
+        run,
+        exec: exec.clone(),
         node_names,
+        wakers,
         stats,
         stop,
         epoch,
@@ -318,100 +376,15 @@ pub fn start(graph: &mut Graph) -> Result<Running> {
     })
 }
 
-/// Drain and apply every pending control message — called by element
-/// threads before each processed item, so control is ordered with
-/// respect to the data stream.
-fn apply_control(element: &mut dyn Element, ctx: &mut Ctx) -> Result<()> {
-    while let Some(msg) = ctx.try_pull_control() {
-        element.handle_control(msg)?;
-    }
-    Ok(())
-}
-
-fn run_source(element: &mut dyn Element, ctx: &mut Ctx) -> Result<()> {
-    loop {
-        if ctx.stopped() {
-            break;
-        }
-        let t0 = Instant::now();
-        apply_control(element, ctx)?;
-        let flow = element.generate(ctx)?;
-        let busy = t0.elapsed().saturating_sub(ctx.take_idle());
-        ctx.stats.record_busy(ctx.domain, busy);
-        if flow == Flow::Eos {
-            break;
-        }
-    }
-    for pad in 0..ctx.n_src_pads() {
-        ctx.push_eos(pad);
-    }
-    Ok(())
-}
-
-fn run_consumer(
-    element: &mut dyn Element,
-    n_sink_links: usize,
-    ctx: &mut Ctx,
-) -> Result<()> {
-    let mut eos_seen = 0usize;
-    let mut early_eos = false;
-    // Arrival accounting happens inside Ctx::next_input (shared with the
-    // mid-handle drain paths), pushed-back items replay first.
-    while let Some((pad, item)) = ctx.next_input() {
-        let is_eos = matches!(item, Item::Eos);
-        if is_eos {
-            eos_seen += 1;
-        }
-        if early_eos {
-            // the element is done but still draining input: keep the
-            // control mailbox drained too, so application Controller
-            // sends never back up against a finished element
-            apply_control(element, ctx)?;
-        } else {
-            let t0 = Instant::now();
-            // control first: a message enqueued before this item entered
-            // the pipeline is guaranteed to be in effect for it
-            let flow =
-                apply_control(element, ctx).and_then(|_| element.handle(pad, item, ctx));
-            let busy = t0.elapsed().saturating_sub(ctx.take_idle());
-            ctx.stats.record_busy(ctx.domain, busy);
-            match flow {
-                Ok(Flow::Continue) => {}
-                Ok(Flow::Eos) => {
-                    // Element declared end-of-stream: flush, notify
-                    // downstream, then keep draining input (discarding) so
-                    // upstream never blocks on a dead consumer.
-                    element.flush(ctx)?;
-                    for p in 0..ctx.n_src_pads() {
-                        ctx.push_eos(p);
-                    }
-                    early_eos = true;
-                }
-                Err(e) => {
-                    // Propagate EOS downstream so the pipeline unwinds,
-                    // then surface the error.
-                    for p in 0..ctx.n_src_pads() {
-                        ctx.push_eos(p);
-                    }
-                    return Err(e);
-                }
-            }
-        }
-        if eos_seen >= n_sink_links {
-            break;
-        }
-    }
-    if !early_eos {
-        element.flush(ctx)?;
-        for p in 0..ctx.n_src_pads() {
-            ctx.push_eos(p);
-        }
-    }
-    Ok(())
-}
-
 /// Convenience: sleep until the pipeline-relative deadline `pts_ns`
-/// (live-source pacing helper).
+/// (live-source pacing helper). On the pooled executor this holds one
+/// worker for the remaining frame interval — bounded, but unlike the
+/// seed's dedicated per-source thread it occupies a *shared* resource,
+/// so many live sources on a small pool serialize behind each other's
+/// pacing sleeps. Timer-based parking (wake at deadline instead of
+/// sleeping in-step) is the planned fix — see ROADMAP "timer-wheel
+/// parking"; until then, size `NNS_WORKERS` to at least the number of
+/// concurrently live sources for live workloads.
 pub fn sleep_until(epoch: Instant, pts_ns: u64) {
     let deadline = epoch + Duration::from_nanos(pts_ns);
     let now = Instant::now();

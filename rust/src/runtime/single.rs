@@ -6,7 +6,9 @@
 //! over the [`PipelineBuilder`]: it assembles a three-element
 //! `appsrc ! tensor_filter ! appsink` pipeline (typed props, no strings),
 //! keeps it playing, and [`invoke`](SingleShot::invoke) becomes a
-//! push/recv round trip. The model executes through the same pooled
+//! push/recv round trip. On the pooled executor an idle handle costs no
+//! thread at all — all three element tasks park between invocations, so
+//! applications can hold hundreds of open handles. The model executes through the same pooled
 //! `tensor_filter` path as any other pipeline, so branches, SingleShot
 //! handles, and benches all share one loaded instance per artifact.
 //! The filter is configured with `batch=MAX_BATCH latency-budget=0`, so
@@ -14,11 +16,10 @@
 //! queue up are executed as stacked single dispatches — outputs stay
 //! bit-identical to per-frame invocation.
 
-use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 
 use crate::elements::filter::{Framework, TensorFilterProps, MAX_BATCH};
-use crate::elements::sinks::AppSinkProps;
+use crate::elements::sinks::{AppSinkProps, AppSinkReceiver};
 use crate::elements::sources::{AppSrcHandle, AppSrcProps};
 use crate::error::{Error, Result};
 use crate::pipeline::{PipelineBuilder, Running};
@@ -29,7 +30,7 @@ enum Engine {
     /// A playing `appsrc ! tensor_filter ! appsink` pipeline.
     Pipeline {
         push: AppSrcHandle,
-        frames: Receiver<Buffer>,
+        frames: AppSinkReceiver,
         running: Mutex<Option<Running>>,
     },
     /// Direct execution against a caller-supplied registry

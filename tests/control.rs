@@ -17,7 +17,7 @@ use nnstreamer::elements::sinks::TensorSinkProps;
 use nnstreamer::elements::sources::AppSrcProps;
 use nnstreamer::elements::tensor_if::TensorIfProps;
 use nnstreamer::elements::transform::{ArithOp, TensorTransformProps};
-use nnstreamer::pipeline::{PipelineBuilder, Running};
+use nnstreamer::pipeline::{Executor, PipelineBuilder, Priority, Running};
 use nnstreamer::tensor::{Buffer, Caps, DType};
 
 /// Spin until `cond` holds (5 s timeout).
@@ -307,6 +307,136 @@ fn set_property_retunes_tensor_if_live() {
     push.push(Buffer::from_f32(0, &[0.1; 4])).unwrap();
     wait_until("frame passes", || log.lock().unwrap().len() == 1);
 
+    push.end();
+    running.wait().unwrap();
+}
+
+/// The valve + output-selector scenario re-run on explicitly sized
+/// pooled executors: 1 worker serializes every element step, 8 workers
+/// maximize interleaving — control stays deterministic with respect to
+/// the data stream in both, and the steered outputs are bit-identical.
+#[test]
+fn valve_selector_deterministic_on_1_and_8_workers() {
+    let run_with_workers = |workers: usize| -> Vec<(usize, Vec<f32>)> {
+        let exec = Executor::new(workers);
+        let mut b = PipelineBuilder::new();
+        b.chain_named(
+            "in",
+            AppSrcProps {
+                caps: Caps::tensor(DType::F32, [2], 0.0),
+            },
+        )
+        .unwrap()
+        .chain_named("v", ValveProps::default())
+        .unwrap()
+        .chain_named("os", OutputSelectorProps::default())
+        .unwrap()
+        .chain_named("out0", TensorSinkProps::default())
+        .unwrap();
+        b.from("os")
+            .unwrap()
+            .chain_named("out1", TensorSinkProps::default())
+            .unwrap();
+
+        let mut pipeline = b.build();
+        let push = pipeline.appsrc("in").unwrap();
+        let running = pipeline.play_on(&exec, Priority::Normal).unwrap();
+        let log: Log = Arc::new(Mutex::new(Vec::new()));
+        subscribe_into(&running, "out0", 0, &log);
+        subscribe_into(&running, "out1", 1, &log);
+
+        let mut expect_seen = 0usize;
+        let mut expect_drops = 0u64;
+        for i in 0..9u32 {
+            // rotate: pad 0, pad 1, closed valve
+            match i % 3 {
+                0 => running.select_output("os", 0).unwrap(),
+                1 => running.select_output("os", 1).unwrap(),
+                _ => running.set_valve("v", false).unwrap(),
+            }
+            push.push(Buffer::from_f32(0, &[i as f32, -(i as f32)])).unwrap();
+            if i % 3 == 2 {
+                expect_drops += 1;
+                wait_until("valve drop", || dropped(&running, "v") == expect_drops);
+                running.set_valve("v", true).unwrap();
+            } else {
+                expect_seen += 1;
+                wait_until("frame delivered", || {
+                    log.lock().unwrap().len() == expect_seen
+                });
+            }
+        }
+        push.end();
+        running.wait().unwrap();
+        exec.shutdown();
+        let got = log.lock().unwrap().clone();
+        drop(push);
+        got
+    };
+
+    let w1 = run_with_workers(1);
+    let w8 = run_with_workers(8);
+    assert_eq!(
+        w1,
+        vec![
+            (0, vec![0.0, -0.0]),
+            (1, vec![1.0, -1.0]),
+            (0, vec![3.0, -3.0]),
+            (1, vec![4.0, -4.0]),
+            (0, vec![6.0, -6.0]),
+            (1, vec![7.0, -7.0]),
+        ],
+        "steered output on a serialized (1-worker) pool"
+    );
+    assert_eq!(w1, w8, "1-worker and 8-worker runs must agree bitwise");
+}
+
+/// A full control mailbox on a starved element surfaces as the typed
+/// `ControlBackpressure` error instead of blocking the application
+/// thread forever (the seed's `SyncSender::send` would deadlock here).
+#[test]
+fn control_backpressure_is_typed_not_blocking() {
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "in",
+        AppSrcProps {
+            caps: Caps::tensor(DType::F32, [1], 0.0),
+        },
+    )
+    .unwrap()
+    .chain_named("v", ValveProps::default())
+    .unwrap()
+    .chain_named("out", TensorSinkProps::default())
+    .unwrap();
+
+    let mut pipeline = b.build();
+    let push = pipeline.appsrc("in").unwrap();
+    let running = pipeline.play().unwrap();
+
+    // no data flows, so the valve's task parks on input and never
+    // drains its mailbox: keep sending until the bound is hit — the
+    // send must return quickly with the typed error, never block
+    let mut hit = None;
+    for i in 0..200 {
+        match running.set_valve("v", i % 2 == 0) {
+            Ok(()) => {}
+            Err(e) => {
+                hit = Some(e);
+                break;
+            }
+        }
+    }
+    let err = hit.expect("mailbox bound must be reached within 200 sends");
+    assert!(
+        matches!(
+            err,
+            nnstreamer::Error::ControlBackpressure { ref element, .. } if element.as_str() == "v"
+        ),
+        "expected typed backpressure error, got: {err}"
+    );
+    assert!(err.to_string().contains("control backpressure"), "{err}");
+
+    // the pipeline is still healthy: EOS drains the mailbox and joins
     push.end();
     running.wait().unwrap();
 }

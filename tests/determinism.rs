@@ -1,0 +1,102 @@
+//! Worker-count determinism: the pooled executor must produce sink
+//! output **bit-identical** to any other worker count (including the
+//! single-worker configuration, which is behaviorally the seed
+//! thread-per-element scheduler serialized) on deterministic pipelines.
+//!
+//! The fixture is the deterministic E4 chain (linear, non-live, blocking
+//! links, AOT model on CPU) — the same chain `tests/api_roundtrip.rs`
+//! uses for parser↔builder bit-identity — run on dedicated hubs with
+//! 1, 2 and 8 workers.
+
+use nnstreamer::apps::e4;
+use nnstreamer::elements::sinks::TensorSink;
+use nnstreamer::pipeline::{Pipeline, PipelineHub, Priority};
+
+/// Collect (pts, payload bytes) from a finished tensor_sink.
+fn collect(p: &mut Pipeline, name: &str) -> Vec<(u64, Vec<u8>)> {
+    let el = p.finished_element(name).expect("sink present");
+    let sink = el
+        .as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .expect("tensor_sink");
+    sink.buffers
+        .iter()
+        .map(|b| (b.pts_ns, b.chunk().as_bytes_unaccounted().to_vec()))
+        .collect()
+}
+
+fn e4_launch() -> String {
+    let cfg = e4::E4Config {
+        src_w: 160,
+        src_h: 120,
+        num_frames: 6,
+    };
+    e4::launch_description(&cfg, "opt").replace("fakesink name=out", "tensor_sink name=out")
+}
+
+/// Run the deterministic chain on a dedicated pool of `workers`.
+fn run_with_workers(workers: usize) -> Vec<(u64, Vec<u8>)> {
+    let hub = PipelineHub::with_workers(workers);
+    let p = Pipeline::parse(&e4_launch()).unwrap();
+    hub.launch("e4", p).unwrap();
+    let mut joined = hub.join_all();
+    assert_eq!(joined.len(), 1);
+    let j = joined.pop().unwrap();
+    j.report.expect("pipeline succeeded");
+    let mut pipeline = j.pipeline;
+    collect(&mut pipeline, "out")
+}
+
+#[test]
+fn e4_sink_output_bit_identical_across_worker_counts() {
+    let w1 = run_with_workers(1);
+    assert_eq!(w1.len(), 6, "all frames reach the sink");
+    for workers in [2, 8] {
+        let wn = run_with_workers(workers);
+        assert_eq!(
+            w1, wn,
+            "sink output must be bit-identical between 1 and {workers} workers"
+        );
+    }
+}
+
+/// The same chain through `Pipeline::run_on` (no hub): executor pinning
+/// at the pipeline API level agrees with the hub path bitwise.
+#[test]
+fn run_on_agrees_with_hub_path() {
+    let via_hub = run_with_workers(2);
+    let exec = nnstreamer::pipeline::Executor::new(2);
+    let mut p = Pipeline::parse(&e4_launch()).unwrap();
+    p.run_on(&exec, Priority::Normal).unwrap();
+    let direct = collect(&mut p, "out");
+    exec.shutdown();
+    assert_eq!(via_hub, direct);
+}
+
+/// Many identical deterministic pipelines racing on a small pool must
+/// each still produce the single-pipeline output bitwise — concurrency
+/// may interleave scheduling, never data.
+#[test]
+fn concurrent_pipelines_stay_bit_identical() {
+    let reference = run_with_workers(1);
+    let hub = PipelineHub::with_workers(4);
+    for i in 0..6 {
+        let p = Pipeline::parse(&e4_launch()).unwrap();
+        let pri = match i % 3 {
+            0 => Priority::High,
+            1 => Priority::Normal,
+            _ => Priority::Low,
+        };
+        hub.launch_with_priority(format!("e4-{i}"), p, pri).unwrap();
+    }
+    for j in hub.join_all() {
+        j.report.expect("pipeline succeeded");
+        let mut pipeline = j.pipeline;
+        assert_eq!(
+            collect(&mut pipeline, "out"),
+            reference,
+            "pipeline {} diverged under concurrency",
+            j.name
+        );
+    }
+}

@@ -14,6 +14,30 @@ fn run(desc: &str) -> nnstreamer::metrics::PipelineReport {
 }
 
 #[test]
+fn scheduler_counters_in_report() {
+    let report = run(
+        "videotestsrc num-buffers=8 pattern=gradient ! \
+         video/x-raw,format=RGB,width=32,height=32,framerate=600 ! \
+         tensor_converter ! fakesink name=out",
+    );
+    // worker-pool accounting: every element step is counted, the pool
+    // size is reported, and the bounded links record a high-water mark
+    assert!(report.sched.workers >= 1);
+    assert!(
+        report.sched.steps >= report.element("out").unwrap().buffers_in(),
+        "at least one step per sink buffer: {:?}",
+        report.sched
+    );
+    assert!(report.sched.link_high_water >= 1, "{:?}", report.sched);
+    // parks and wakeups come in correlated pairs on a drained pipeline
+    assert!(
+        report.sched.wakeups <= report.sched.parks_input + report.sched.parks_output,
+        "{:?}",
+        report.sched
+    );
+}
+
+#[test]
 fn video_to_inference_end_to_end() {
     // the paper's Fig 1 skeleton: camera -> convert -> filter -> decode
     let report = run(
