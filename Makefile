@@ -18,16 +18,20 @@ bench:
 	cargo bench --bench e5_batching
 	cargo bench --bench e6_memory
 	cargo bench --bench e7_concurrency
+	cargo bench --bench e8_query
 
 # Quick perf gate: compiles every bench, runs the E6 memory bench with a
 # short frame budget (records artifacts/BENCH_e6_memory.json; asserts
 # >= 30% allocation reduction and bit-identical output), then the E7
 # concurrency bench (64 pipelines on a 4-worker hub; asserts O(workers)
-# threads and sink output bit-identical to a serialized run).
+# threads and sink output bit-identical to a serialized run), then the
+# E8 stream-endpoint bench (topic-linked split of the E1 chain; asserts
+# bit-identical sink output and bounded threads).
 bench-smoke:
 	cargo bench --no-run
 	cargo bench --bench e6_memory -- --frames 64 --record
 	cargo bench --bench e7_concurrency -- --frames 8
+	cargo bench --bench e8_query -- --frames 24
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts

@@ -24,18 +24,7 @@ use nnstreamer::pipeline::{Pipeline, PipelineHub};
 const PIPELINES: usize = 64;
 const WORKERS: usize = 4;
 
-/// Thread count of this process (`/proc/self/status`), for the bounded-
-/// thread assertion. Returns None off Linux (assertion skipped).
-fn process_threads() -> Option<usize> {
-    let status = std::fs::read_to_string("/proc/self/status").ok()?;
-    status
-        .lines()
-        .find(|l| l.starts_with("Threads:"))?
-        .split_whitespace()
-        .nth(1)?
-        .parse()
-        .ok()
-}
+use harness::process_threads;
 
 /// Deterministic E1 single-branch pipeline (I3 on the CPU envelope —
 /// blocking queue instead of e1's leaky one, so every frame arrives and

@@ -1,0 +1,149 @@
+//! **E8 — stream-endpoint (tensor-query) link overhead.**
+//!
+//! The E1 single-branch chain run two ways on the same 4-worker hub:
+//!
+//! * **direct** — one fused pipeline, every link an in-process inbox;
+//! * **topic** — the chain split at the normalized-tensor link into two
+//!   pipelines joined by a `tensor_query` topic (`serversink` →
+//!   `serversrc`), the among-device composition of the follow-up paper.
+//!
+//! Asserts sink output **bit-identical** between the two, total thread
+//! count O(workers) (the split doubles the pipeline count, not the
+//! thread count), and prints the topic-link overhead.
+//!
+//! ```bash
+//! cargo bench --bench e8_query             # quick
+//! cargo bench --bench e8_query -- --full   # paper-scale frames
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use nnstreamer::elements::sinks::TensorSink;
+use nnstreamer::pipeline::{Pipeline, PipelineHub};
+
+const WORKERS: usize = 4;
+
+/// Head of the chain: camera to normalized f32 tensor.
+fn head(frames: u64) -> String {
+    format!(
+        "videotestsrc name=src pattern=ball width=320 height=240 framerate=2400 \
+         num-buffers={frames} is-live=false ! tee name=t t. ! queue ! \
+         videoscale width=64 height=64 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255"
+    )
+}
+
+/// Tail of the chain: I3 inference to a collecting sink.
+const TAIL: &str = "tensor_filter framework=xla model=i3_opt accelerator=cpu ! \
+                    tensor_decoder mode=image_labeling ! tensor_sink name=out";
+
+/// The caps flowing on the split link (what the head's last transform
+/// produces), announced by the subscriber via a trailing capsfilter.
+const LINK_CAPS: &str = "other/tensor,dimension=3:64:64,type=float32,framerate=2400";
+
+fn sink_bytes(p: &mut Pipeline) -> Vec<Vec<u8>> {
+    let el = p.finished_element("out").expect("sink present");
+    let sink = el
+        .as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .expect("tensor_sink");
+    sink.buffers
+        .iter()
+        .map(|b| b.chunk().as_bytes_unaccounted().to_vec())
+        .collect()
+}
+
+fn run_direct(frames: u64) -> (Vec<Vec<u8>>, f64) {
+    let hub = PipelineHub::with_workers(WORKERS);
+    let p = Pipeline::parse(&format!("{} ! {}", head(frames), TAIL)).unwrap();
+    let t0 = Instant::now();
+    hub.launch("direct", p).unwrap();
+    let mut joined = hub.join_all();
+    let wall = t0.elapsed().as_secs_f64();
+    let j = joined.pop().unwrap();
+    j.report.expect("direct run succeeded");
+    let mut pipeline = j.pipeline;
+    (sink_bytes(&mut pipeline), wall)
+}
+
+fn run_topic(frames: u64, round: usize) -> (Vec<Vec<u8>>, f64) {
+    let topic = format!("e8/link-{round}");
+    let hub = PipelineHub::with_workers(WORKERS);
+    // back (subscriber) first: its subscription exists before the front
+    // produces, so nothing is dropped and output stays bit-identical
+    let back = Pipeline::parse(&format!(
+        "tensor_query_serversrc topic={topic} max-buffers=8 ! {LINK_CAPS} ! {TAIL}"
+    ))
+    .unwrap();
+    let front = Pipeline::parse(&format!(
+        "{} ! tensor_query_serversink topic={topic}",
+        head(frames)
+    ))
+    .unwrap();
+    let t0 = Instant::now();
+    hub.launch("back", back).unwrap();
+    hub.launch("front", front).unwrap();
+    let mut out = Vec::new();
+    for j in hub.join_all() {
+        j.report.expect("topic run succeeded");
+        let mut pipeline = j.pipeline;
+        if j.name == "back" {
+            out = sink_bytes(&mut pipeline);
+        }
+    }
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let frames = args.frames_or(64, 600);
+    let repeats = args.repeats.max(3);
+
+    harness::warm_models(&["i3_opt"]);
+
+    let baseline_threads = harness::process_threads();
+    let (reference, _) = run_direct(frames);
+    assert_eq!(reference.len(), frames as usize, "direct run kept all frames");
+
+    let mut direct_s = Vec::new();
+    let mut topic_s = Vec::new();
+    for round in 0..repeats {
+        let (d, dt) = run_direct(frames);
+        assert_eq!(d, reference, "direct runs are deterministic");
+        direct_s.push(dt);
+        let (q, qt) = run_topic(frames, round);
+        assert_eq!(
+            q, reference,
+            "topic-linked sink output must be bit-identical to the direct link"
+        );
+        topic_s.push(qt);
+    }
+
+    // Bounded-thread criterion: splitting the chain into two pipelines
+    // joined by a topic adds pipelines, not threads. All dedicated pools
+    // are joined and dropped by now; only transient pool teardown may
+    // lag a moment, so allow the current hub's width once.
+    if let (Some(before), Some(after)) = (baseline_threads, harness::process_threads()) {
+        assert!(
+            after <= before + WORKERS,
+            "topic link must not grow threads (before={before}, after={after})"
+        );
+    }
+
+    let (dm, ds) = harness::mean_std(&direct_s);
+    let (tm, ts) = harness::mean_std(&topic_s);
+    println!("E8: {frames} frames x {repeats} runs on {WORKERS} workers");
+    println!("  direct link   {} s", harness::pm(dm, ds, 3));
+    println!("  topic link    {} s", harness::pm(tm, ts, 3));
+    println!(
+        "  topic-link overhead: {:+.1}% wall ({:.1} vs {:.1} frames/s)",
+        (tm / dm - 1.0) * 100.0,
+        frames as f64 / tm,
+        frames as f64 / dm,
+    );
+    println!("e8_query: OK (bit-identical sink output, bounded threads)");
+}

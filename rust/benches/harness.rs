@@ -54,6 +54,19 @@ impl BenchArgs {
     }
 }
 
+/// Thread count of this process (`/proc/self/status`), for bounded-
+/// thread assertions. Returns None off Linux (assertion skipped).
+pub fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
 /// Warm the model registry so per-case RSS deltas reflect steady state,
 /// not first-compile costs.
 pub fn warm_models(names: &[&str]) {

@@ -225,28 +225,48 @@ pub fn register_stages(class: DeviceClass) -> Result<()> {
     Ok(())
 }
 
-/// Build the full MTCNN NNStreamer pipeline graph through the typed
-/// builder.
-pub fn build_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
-    use crate::elements::decoder::{DecoderMode, TensorDecoderProps};
+/// `framework=custom` filter props for a registered post-processing stage.
+fn custom_stage(model: String) -> crate::elements::filter::TensorFilterProps {
+    crate::elements::filter::TensorFilterProps {
+        framework: crate::elements::filter::Framework::Custom,
+        model,
+        ..Default::default()
+    }
+}
+
+/// Caps of the normalized base-frame stream (what flows out of the
+/// `t_frame` tee) — the explicit announcement of the split pipelines'
+/// `<prefix>/frames` topic.
+pub fn frame_caps(cfg: &MtcnnConfig) -> crate::tensor::Caps {
+    let (bh, bw) = BASE;
+    crate::tensor::Caps::Tensor {
+        info: TensorInfo::new(DType::F32, [3, bw, bh, 1]),
+        fps_millis: (cfg.fps * 1000.0).round() as u64,
+    }
+}
+
+/// Caps of the encoded candidate-box stream (`pnet_merge` output) — the
+/// explicit announcement of the `<prefix>/boxes` topic.
+pub fn box_caps(cfg: &MtcnnConfig) -> crate::tensor::Caps {
+    crate::tensor::Caps::Tensor {
+        info: boxes_info(),
+        fps_millis: (cfg.fps * 1000.0).round() as u64,
+    }
+}
+
+/// Front stage shared by the fused and split builds: source, tee, the
+/// 5-scale P-Net pyramid merged into `pnet_merge`, and the normalized
+/// base-frame branch ending in the `t_frame` tee.
+fn build_front(b: &mut crate::pipeline::PipelineBuilder, cfg: &MtcnnConfig) -> Result<()> {
     use crate::elements::filter::{Framework, TensorFilterProps};
     use crate::elements::flow::{QueueProps, TeeProps};
     use crate::elements::mux::TensorMuxProps;
-    use crate::elements::sinks::FakeSinkProps;
     use crate::elements::sources::VideoTestSrcProps;
     use crate::elements::transform::{ArithOp, TensorTransformProps};
     use crate::elements::videofilters::VideoScaleProps;
-    use crate::pipeline::PipelineBuilder;
     use crate::video::Pattern;
 
-    register_stages(cfg.class)?;
-    let sfx = class_suffix(cfg.class);
     let (bh, bw) = BASE;
-    let custom = |model: String| TensorFilterProps {
-        framework: Framework::Custom,
-        model,
-        ..Default::default()
-    };
     // typecast + the MTCNN normalization (x - 127.5) / 128
     let cast = || TensorTransformProps::typecast(DType::F32);
     let norm = || {
@@ -256,7 +276,6 @@ pub fn build_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
         ])
     };
 
-    let mut b = PipelineBuilder::new();
     b.chain_named(
         "src",
         VideoTestSrcProps {
@@ -292,12 +311,12 @@ pub fn build_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
                     ..Default::default()
                 },
             )?
-            .chain(custom(format!("mtcnn_pnet_post_s{i}")))?
+            .chain(custom_stage(format!("mtcnn_pnet_post_s{i}")))?
             .chain(QueueProps::default())?
             .to("pnet_mux")?;
     }
     b.from("pnet_mux")?
-        .chain_named("pnet_merge", custom("mtcnn_merge_nms".into()))?;
+        .chain_named("pnet_merge", custom_stage("mtcnn_merge_nms".into()))?;
 
     // base frame branch (f32, normalized)
     b.from("t")?
@@ -310,32 +329,202 @@ pub fn build_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
         .chain(cast())?
         .chain(norm())?
         .chain_named("t_frame", TeeProps)?;
+    Ok(())
+}
+
+/// Back stage shared by the fused and split builds: the R-Net and O-Net
+/// refinement stages, decoder, and video sink — wired from elements
+/// named `t_frame` (the normalized frame stream) and `pnet_merge` (the
+/// candidate boxes). The fused pipeline provides those as its tee/merge
+/// elements; the split back half provides them as `tensor_query` topic
+/// sources. With `collect` the sink is a `tensor_sink` (for bitwise
+/// output comparison) instead of a `fakesink`.
+fn build_back(
+    b: &mut crate::pipeline::PipelineBuilder,
+    cfg: &MtcnnConfig,
+    collect: bool,
+) -> Result<()> {
+    use crate::elements::decoder::{DecoderMode, TensorDecoderProps};
+    use crate::elements::flow::QueueProps;
+    use crate::elements::mux::TensorMuxProps;
+    use crate::elements::sinks::{FakeSinkProps, TensorSinkProps};
+
+    let sfx = class_suffix(cfg.class);
+    let (bh, bw) = BASE;
 
     // R-Net stage: (frame, pnet boxes) -> refined boxes
     b.add_named("mux_r", TensorMuxProps::default())?;
     b.from("t_frame")?.chain(QueueProps::default())?.to("mux_r")?;
     b.from("pnet_merge")?.chain(QueueProps::default())?.to("mux_r")?;
     b.from("mux_r")?
-        .chain_named("rnet_stage", custom(format!("mtcnn_rnet_stage_{sfx}")))?;
+        .chain_named("rnet_stage", custom_stage(format!("mtcnn_rnet_stage_{sfx}")))?;
 
     // O-Net stage: (frame, rnet boxes) -> final boxes
     b.add_named("mux_o", TensorMuxProps::default())?;
     b.from("t_frame")?.chain(QueueProps::default())?.to("mux_o")?;
     b.from("rnet_stage")?.chain(QueueProps::default())?.to("mux_o")?;
     b.from("mux_o")?
-        .chain_named("onet_stage", custom(format!("mtcnn_onet_stage_{sfx}")))?;
+        .chain_named("onet_stage", custom_stage(format!("mtcnn_onet_stage_{sfx}")))?;
 
     // Video sink: draw boxes on a transparent canvas
-    b.from("onet_stage")?
-        .chain(TensorDecoderProps {
-            mode: DecoderMode::DirectVideo,
-            width: bw,
-            height: bh,
-            ..Default::default()
-        })?
-        .chain_named("video_sink", FakeSinkProps::default())?;
+    b.from("onet_stage")?.chain(TensorDecoderProps {
+        mode: DecoderMode::DirectVideo,
+        width: bw,
+        height: bh,
+        ..Default::default()
+    })?;
+    if collect {
+        b.chain_named("video_sink", TensorSinkProps::default())?;
+    } else {
+        b.chain_named("video_sink", FakeSinkProps::default())?;
+    }
+    Ok(())
+}
 
+/// Build the full MTCNN NNStreamer pipeline graph through the typed
+/// builder.
+pub fn build_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
+    register_stages(cfg.class)?;
+    let mut b = crate::pipeline::PipelineBuilder::new();
+    build_front(&mut b, cfg)?;
+    build_back(&mut b, cfg, false)?;
     Ok(b.into_graph())
+}
+
+/// The fused pipeline with a collecting `tensor_sink` (named
+/// `video_sink`) — reference output for the split-vs-fused bit-identity
+/// assertion.
+pub fn build_collect_pipeline(cfg: &MtcnnConfig) -> Result<Graph> {
+    register_stages(cfg.class)?;
+    let mut b = crate::pipeline::PipelineBuilder::new();
+    build_front(&mut b, cfg)?;
+    build_back(&mut b, cfg, true)?;
+    Ok(b.into_graph())
+}
+
+/// The cascade split into **two hub pipelines joined by stream topics**
+/// (the among-device composition: camera + P-Net stage on one "device",
+/// R/O-Net refinement on another). The front pipeline publishes
+/// `<prefix>/frames` (normalized base frames) and `<prefix>/boxes`
+/// (P-Net candidates); the back pipeline subscribes both and runs the
+/// refinement stages. Launch the **back** pipeline first so its
+/// subscriptions exist before the front produces — then sink output is
+/// bit-identical to the fused run (asserted in `tests/query.rs`).
+pub fn build_split_pipelines(
+    cfg: &MtcnnConfig,
+    prefix: &str,
+    collect: bool,
+) -> Result<(Graph, Graph)> {
+    use crate::elements::flow::TeeProps;
+    use crate::elements::query::{QueryServerSinkProps, QueryServerSrcProps};
+
+    register_stages(cfg.class)?;
+
+    // Front: source + P-Net pyramid, ending in two topic publishers.
+    let mut f = crate::pipeline::PipelineBuilder::new();
+    build_front(&mut f, cfg)?;
+    f.from("pnet_merge")?.chain_named(
+        "boxes_out",
+        QueryServerSinkProps {
+            topic: format!("{prefix}/boxes"),
+            ..Default::default()
+        },
+    )?;
+    f.from("t_frame")?.chain_named(
+        "frames_out",
+        QueryServerSinkProps {
+            topic: format!("{prefix}/frames"),
+            ..Default::default()
+        },
+    )?;
+
+    // Back: two topic subscribers standing in for the front's tee/merge
+    // elements (same node names build_back wires from).
+    let mut k = crate::pipeline::PipelineBuilder::new();
+    k.chain_named(
+        "frames_in",
+        QueryServerSrcProps {
+            topic: format!("{prefix}/frames"),
+            caps: frame_caps(cfg),
+            ..Default::default()
+        },
+    )?
+    .chain_named("t_frame", TeeProps)?;
+    k.add_named(
+        "pnet_merge",
+        QueryServerSrcProps {
+            topic: format!("{prefix}/boxes"),
+            caps: box_caps(cfg),
+            ..Default::default()
+        },
+    )?;
+    build_back(&mut k, cfg, collect)?;
+
+    Ok((f.into_graph(), k.into_graph()))
+}
+
+/// Sink payloads of a finished collect-variant pipeline, in arrival
+/// order: `(pts, bytes)` per frame.
+pub fn collect_sink(pipeline: &mut crate::pipeline::Pipeline) -> Vec<(u64, Vec<u8>)> {
+    use crate::elements::sinks::TensorSink;
+    let Some(el) = pipeline.finished_element("video_sink") else {
+        return Vec::new();
+    };
+    el.as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .map(|sink| {
+            sink.buffers
+                .iter()
+                .map(|b| (b.pts_ns, b.chunk().as_bytes_unaccounted().to_vec()))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Run the fused collect-variant pipeline and return its sink payloads.
+pub fn run_collect(cfg: &MtcnnConfig) -> Result<Vec<(u64, Vec<u8>)>> {
+    let mut g = build_collect_pipeline(cfg)?;
+    let mut pipeline = crate::pipeline::Pipeline::new(g_take(&mut g));
+    pipeline.run()?;
+    Ok(collect_sink(&mut pipeline))
+}
+
+/// Result of one split (two-pipeline) cascade run.
+pub struct SplitRun {
+    /// Report of the front (camera + P-Net) pipeline.
+    pub front: crate::metrics::stats::PipelineReport,
+    /// Report of the back (R/O-Net refinement) pipeline.
+    pub back: crate::metrics::stats::PipelineReport,
+    /// Sink payloads of the back pipeline (collect variant).
+    pub sink: Vec<(u64, Vec<u8>)>,
+}
+
+/// Run the cascade as two hub pipelines joined by topics (back pipeline
+/// launched first so nothing is dropped) on a dedicated `workers`-sized
+/// pool, and collect the back sink's payloads.
+pub fn run_split(cfg: &MtcnnConfig, prefix: &str, workers: usize) -> Result<SplitRun> {
+    let (front, back) = build_split_pipelines(cfg, prefix, true)?;
+    let hub = crate::pipeline::PipelineHub::with_workers(workers);
+    hub.launch("mtcnn-back", crate::pipeline::Pipeline::new(back))?;
+    hub.launch("mtcnn-front", crate::pipeline::Pipeline::new(front))?;
+    let mut front_report = None;
+    let mut back_report = None;
+    let mut sink = Vec::new();
+    for j in hub.join_all() {
+        let report = j.report?;
+        let mut pipeline = j.pipeline;
+        if j.name == "mtcnn-back" {
+            sink = collect_sink(&mut pipeline);
+            back_report = Some(report);
+        } else {
+            front_report = Some(report);
+        }
+    }
+    Ok(SplitRun {
+        front: front_report.ok_or_else(|| Error::Runtime("front pipeline missing".into()))?,
+        back: back_report.ok_or_else(|| Error::Runtime("back pipeline missing".into()))?,
+        sink,
+    })
 }
 
 /// The same pipeline as a launch description (parser-compat fixture for
@@ -589,6 +778,24 @@ mod tests {
         };
         let mut g = build_pipeline(&cfg).unwrap();
         g.negotiate_all().unwrap();
+    }
+
+    #[test]
+    fn split_pipelines_build_and_negotiate() {
+        let cfg = MtcnnConfig {
+            num_frames: 2,
+            src_w: 480,
+            src_h: 270,
+            ..Default::default()
+        };
+        let (mut front, mut back) =
+            build_split_pipelines(&cfg, "unit/e3-negotiate", true).unwrap();
+        // back first: its topic subscriptions must exist before the
+        // front pipeline starts publishing
+        back.negotiate_all().unwrap();
+        front.negotiate_all().unwrap();
+        assert!(back.by_name("pnet_merge").is_some());
+        assert!(front.by_name("frames_out").is_some());
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! central element.
 //!
 //! Properties:
-//! * `framework=` `xla` | `custom` | `passthrough` (the sub-plugin)
+//! * `framework=` `xla` | `custom` | `passthrough`, or any sub-plugin
+//!   name registered at runtime with [`crate::nnfw::register_nnfw`]
+//!   (unknown names fail with a nearest-name suggestion)
 //! * `model=` artifact name (xla) or registered function name (custom)
 //! * `accelerator=` `cpu` (default) | `npu`
 //! * `device-class=` `a` | `b` | `c` (E3's hardware classes; default c)
@@ -49,7 +51,12 @@ use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
 pub const MAX_BATCH: usize = 64;
 
 /// NNFW sub-plugin family executing a [`TensorFilter`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+///
+/// The built-in set is open-ended: any name registered with
+/// [`crate::nnfw::register_nnfw`] resolves to [`Framework::Plugin`], so
+/// `framework=` dispatch extends at runtime exactly like the element
+/// registry — the paper's extensible sub-plugin API.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub enum Framework {
     /// AOT-compiled artifacts through the shared model pool.
     #[default]
@@ -58,6 +65,9 @@ pub enum Framework {
     Custom,
     /// Identity (testing).
     Passthrough,
+    /// A runtime-registered sub-plugin factory
+    /// ([`crate::nnfw::register_nnfw`]).
+    Plugin(String),
 }
 
 impl Framework {
@@ -67,11 +77,24 @@ impl Framework {
             "custom" => Framework::Custom,
             "passthrough" => Framework::Passthrough,
             other => {
+                if crate::nnfw::nnfw_exists(other) {
+                    return Ok(Framework::Plugin(other.to_string()));
+                }
+                // nearest-name suggestion across built-ins and every
+                // registered sub-plugin
+                let registered = crate::nnfw::nnfw_names();
+                let candidates = ["xla", "custom", "passthrough"]
+                    .into_iter()
+                    .chain(registered.iter().map(String::as_str));
                 return Err(Error::Property {
                     key: "framework".into(),
                     value: other.into(),
-                    reason: "xla|custom|passthrough".into(),
-                })
+                    reason: format!(
+                        "not a built-in (xla|custom|passthrough) or registered \
+                         NNFW sub-plugin{}",
+                        crate::element::registry::did_you_mean(other, candidates)
+                    ),
+                });
             }
         })
     }
@@ -217,7 +240,7 @@ impl TensorFilter {
     }
 
     fn load_plugin(&mut self, in_infos: &[TensorInfo]) -> Result<()> {
-        let plugin: Box<dyn Nnfw> = match self.props.framework {
+        let plugin: Box<dyn Nnfw> = match &self.props.framework {
             Framework::Xla => Box::new(XlaNnfw::load(
                 &self.props.model,
                 self.props.accelerator,
@@ -227,6 +250,15 @@ impl TensorFilter {
             Framework::Passthrough => Box::new(PassthroughNnfw {
                 info: in_infos.to_vec(),
             }),
+            Framework::Plugin(name) => crate::nnfw::make_nnfw(
+                name,
+                &crate::nnfw::NnfwRequest {
+                    model: &self.props.model,
+                    accelerator: self.props.accelerator,
+                    device_class: self.props.device_class,
+                    input_infos: in_infos,
+                },
+            )?,
         };
         // validate input compatibility (element count + dtype per tensor)
         let expect = plugin.inputs();
@@ -467,6 +499,69 @@ mod tests {
             assert_eq!(b.pts_ns, i as u64 * 100);
             assert_eq!(b.chunk().as_f32().unwrap()[0], i as f32);
         }
+    }
+
+    #[test]
+    fn registered_nnfw_routes_through_framework_dispatch() {
+        use crate::nnfw::{register_nnfw, Nnfw};
+        use crate::tensor::TensorInfo;
+
+        struct Doubler {
+            info: Vec<TensorInfo>,
+        }
+        impl Nnfw for Doubler {
+            fn inputs(&self) -> Vec<TensorInfo> {
+                self.info.clone()
+            }
+            fn outputs(&self) -> Vec<TensorInfo> {
+                self.info.clone()
+            }
+            fn invoke(&self, inputs: &[&Chunk]) -> crate::error::Result<Vec<Chunk>> {
+                inputs
+                    .iter()
+                    .map(|c| {
+                        let v = c.to_f32_vec()?;
+                        Ok(Chunk::from_f32(
+                            &v.iter().map(|x| x * 2.0).collect::<Vec<_>>(),
+                        ))
+                    })
+                    .collect()
+            }
+        }
+        register_nnfw("unit_doubler", |req| {
+            Ok(Box::new(Doubler {
+                info: req.input_infos.to_vec(),
+            }))
+        });
+
+        let mut f = TensorFilter::new();
+        f.set_property("framework", "unit_doubler").unwrap();
+        assert_eq!(f.props.framework, Framework::Plugin("unit_doubler".into()));
+        let caps = Caps::tensor(DType::F32, [3], 30.0);
+        f.negotiate(&[caps], 1).unwrap();
+        let (mut ctx, rxs) = ctx_with_outputs(1);
+        f.handle(0, Item::Buffer(Buffer::from_f32(0, &[1., 2., 3.])), &mut ctx)
+            .unwrap();
+        drop(ctx);
+        let out = drain(&rxs[0]);
+        assert_eq!(out[0].chunk().as_f32().unwrap(), &[2., 4., 6.]);
+    }
+
+    #[test]
+    fn unknown_framework_suggests_registered_name() {
+        use crate::nnfw::register_nnfw;
+        register_nnfw("mockfw", |_req| {
+            Err(crate::error::Error::Runtime("unused".into()))
+        });
+        // close typo of a registered sub-plugin
+        let err = Framework::parse("mockfv").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"mockfw\"?"), "{err}");
+        // close typo of a built-in
+        let err = Framework::parse("pasthrough").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"passthrough\"?"), "{err}");
+        // far-away garbage: error, no suggestion
+        let err = Framework::parse("tensorflow-lite-gpu").unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
     }
 
     #[test]

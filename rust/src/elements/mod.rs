@@ -17,6 +17,7 @@ pub mod filter;
 pub mod flow;
 pub mod merge;
 pub mod mux;
+pub mod query;
 pub mod rate;
 pub mod repo;
 pub mod sinks;
@@ -79,4 +80,8 @@ pub fn register_builtins(m: &mut HashMap<String, Factory>) {
     reg!(m, "tensor_if", tensor_if::TensorIf::new());
     reg!(m, "tensor_repo_src", repo::TensorRepoSrc::new());
     reg!(m, "tensor_repo_sink", repo::TensorRepoSink::new());
+    // among-device stream endpoints (tensor-query pub/sub)
+    reg!(m, "tensor_query_serversrc", query::TensorQueryServerSrc::new());
+    reg!(m, "tensor_query_serversink", query::TensorQueryServerSink::new());
+    reg!(m, "tensor_query_client", query::TensorQueryClient::new());
 }

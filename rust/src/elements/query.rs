@@ -1,0 +1,625 @@
+//! `tensor_query_serversrc` / `tensor_query_serversink` /
+//! `tensor_query_client`: among-device pipeline composition (the
+//! follow-up paper's tensor-query elements, arXiv:2201.06026).
+//!
+//! A pipeline *serves* a stream by ending a chain in
+//! `tensor_query_serversink topic=faces`; any number of other pipelines
+//! consume it by starting a chain with `tensor_query_serversrc
+//! topic=faces`. Topics resolve through a [`Transport`] (only the
+//! in-process backend exists today — `transport=inproc` — network
+//! backends slot in without element changes), and the link behaves like
+//! an in-pipeline link:
+//!
+//! * **backpressure** — a saturated subscriber queue makes the
+//!   publishing element hand its frame back and park
+//!   ([`Flow::Wait`]); no pool worker is held while a topic is idle or
+//!   saturated;
+//! * **EOS** — when the last publisher of a topic reaches end-of-stream,
+//!   every subscriber observes EOS exactly as if an upstream element had
+//!   finished.
+//!
+//! `tensor_query_client` is the request/response element: it forwards
+//! each input frame to a serving pipeline's request topic and emits the
+//! service's reply downstream — SingleShot over a remote pipeline, in
+//! stream form. Launch-syntax example (two pipelines):
+//!
+//! ```text
+//! videotestsrc ! tensor_converter ! tensor_query_serversink topic=frames
+//! tensor_query_serversrc topic=frames !
+//!     other/tensor,dimension=3:640:480,type=uint8,framerate=30 !
+//!     tensor_filter model=i3_opt ! tensor_sink
+//! ```
+//!
+//! (`tensor_query_serversrc` adopts the caps of a directly-following
+//! capsfilter; with the typed builder, set
+//! [`QueryServerSrcProps::caps`] instead. When the publisher pipeline
+//! launched first, its advertised caps are used automatically.)
+//!
+//! [`Transport`]: crate::pipeline::stream::Transport
+//! [`Flow::Wait`]: crate::element::Flow::Wait
+
+use std::sync::Arc;
+
+use crate::element::props::unknown_property;
+use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
+use crate::error::{Error, Result};
+use crate::pipeline::executor::SharedWaker;
+use crate::pipeline::stream::{
+    transport, PortRecv, PortSend, PublisherPort, SubscriberPort, DEFAULT_ENDPOINT_CAPACITY,
+};
+use crate::tensor::Caps;
+
+use super::sources::parse_usize;
+
+/// Typed properties of [`TensorQueryServerSink`].
+#[derive(Debug, Clone)]
+pub struct QueryServerSinkProps {
+    /// Stream topic to publish (`topic`, required).
+    pub topic: String,
+    /// Delivery backend (`transport`, default `inproc`).
+    pub transport: String,
+    /// Park until at least this many subscribers are attached instead of
+    /// dropping frames while nobody listens (`wait-subscribers`,
+    /// default 0 = pub/sub drop semantics).
+    pub wait_subscribers: usize,
+}
+
+impl Default for QueryServerSinkProps {
+    fn default() -> Self {
+        Self {
+            topic: String::new(),
+            transport: "inproc".to_string(),
+            wait_subscribers: 0,
+        }
+    }
+}
+
+impl Props for QueryServerSinkProps {
+    const FACTORY: &'static str = "tensor_query_serversink";
+    const KEYS: &'static [&'static str] = &["topic", "transport", "wait-subscribers"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "topic" => self.topic = value.to_string(),
+            "transport" => self.transport = value.to_string(),
+            "wait-subscribers" => self.wait_subscribers = parse_usize(key, value)?,
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorQueryServerSink::from_props(self)?))
+    }
+}
+
+/// Terminal sink that publishes every input buffer on its topic. The
+/// producing half of an among-device link: EOS on its sink pad ends the
+/// publisher (the topic ends once every publisher finished), and a
+/// saturated subscriber parks this element's task instead of a thread.
+pub struct TensorQueryServerSink {
+    props: QueryServerSinkProps,
+    port: Option<Box<dyn PublisherPort>>,
+    /// Published task waker; the transport wakes it on space/subscribe.
+    wake: Arc<SharedWaker>,
+}
+
+impl TensorQueryServerSink {
+    pub fn new() -> Self {
+        Self::from_props(QueryServerSinkProps::default()).expect("defaults are valid")
+    }
+}
+
+impl Default for TensorQueryServerSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FromProps for TensorQueryServerSink {
+    type Props = QueryServerSinkProps;
+
+    fn from_props(props: QueryServerSinkProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            port: None,
+            wake: SharedWaker::new(),
+        })
+    }
+}
+
+impl Element for TensorQueryServerSink {
+    fn type_name(&self) -> &'static str {
+        "tensor_query_serversink"
+    }
+
+    fn src_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        self.props.set(key, value)
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], _n: usize) -> Result<Vec<Caps>> {
+        if self.props.topic.is_empty() {
+            return Err(Error::Negotiation(
+                "tensor_query_serversink needs topic=".into(),
+            ));
+        }
+        // idempotent: negotiate may run again on an already-built graph
+        if self.port.is_none() {
+            let mut port = transport(&self.props.transport)?.advertise(&self.props.topic)?;
+            port.add_waker(&self.wake);
+            port.advertise(&in_caps[0]);
+            self.port = Some(port);
+        }
+        Ok(vec![])
+    }
+
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            // EOS markers are accounted by the scheduler; flush detaches
+            return Ok(Flow::Continue);
+        };
+        let Some(port) = self.port.as_mut() else {
+            return Err(Error::element("tensor_query_serversink", "not negotiated"));
+        };
+        // publish the task waker before probing the topic, so a racing
+        // subscriber drain can never free space unobserved
+        self.wake.set(ctx.waker());
+        let bytes = buf.size();
+        if self.props.wait_subscribers > 0
+            && port.subscriber_count() < self.props.wait_subscribers
+        {
+            if ctx.stopped() {
+                port.count_dropped();
+                ctx.stats().record_drop();
+                return Ok(Flow::Continue);
+            }
+            ctx.push_back_input(pad, Item::Buffer(buf));
+            return Ok(Flow::Wait);
+        }
+        match port.try_send(buf) {
+            PortSend::Sent => {
+                ctx.stats().record_out(bytes);
+                Ok(Flow::Continue)
+            }
+            PortSend::NoSubscribers(_) => {
+                // nobody listening: pub/sub semantics discard the frame
+                port.count_dropped();
+                ctx.stats().record_drop();
+                Ok(Flow::Continue)
+            }
+            PortSend::Full(b) => {
+                if ctx.stopped() {
+                    // teardown in progress: don't wait on subscribers
+                    ctx.stats().record_drop();
+                    Ok(Flow::Continue)
+                } else {
+                    // hand the frame back and park until a subscriber
+                    // drains (no pool worker held)
+                    ctx.push_back_input(pad, Item::Buffer(b));
+                    Ok(Flow::Wait)
+                }
+            }
+            PortSend::Closed(_) => Ok(Flow::Eos),
+        }
+    }
+
+    fn flush(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        // end-of-stream on every sink pad: this publisher is done — the
+        // topic ends (and subscribers observe EOS) once all are
+        if let Some(port) = self.port.as_mut() {
+            port.finish();
+        }
+        Ok(())
+    }
+}
+
+/// Typed properties of [`TensorQueryServerSrc`].
+#[derive(Debug, Clone)]
+pub struct QueryServerSrcProps {
+    /// Stream topic to subscribe (`topic`, required).
+    pub topic: String,
+    /// Delivery backend (`transport`, default `inproc`).
+    pub transport: String,
+    /// Caps announced downstream (`caps`; default: whatever the topic's
+    /// publisher advertised, else ANY). A directly-following capsfilter
+    /// also configures this, gst-launch style.
+    pub caps: Caps,
+    /// Bound of this subscriber's queue (`max-buffers`): a slow consumer
+    /// exerts backpressure on the publisher once it fills.
+    pub max_buffers: usize,
+}
+
+impl Default for QueryServerSrcProps {
+    fn default() -> Self {
+        Self {
+            topic: String::new(),
+            transport: "inproc".to_string(),
+            caps: Caps::Any,
+            max_buffers: DEFAULT_ENDPOINT_CAPACITY,
+        }
+    }
+}
+
+impl Props for QueryServerSrcProps {
+    const FACTORY: &'static str = "tensor_query_serversrc";
+    const KEYS: &'static [&'static str] = &["topic", "transport", "caps", "max-buffers"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "topic" => self.topic = value.to_string(),
+            "transport" => self.transport = value.to_string(),
+            "caps" => self.caps = Caps::parse(value)?,
+            "max-buffers" => self.max_buffers = parse_usize(key, value)?.max(1),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorQueryServerSrc::from_props(self)?))
+    }
+}
+
+/// Source that subscribes a topic and re-emits its stream, timestamps
+/// and sequence numbers untouched — the consuming half of an
+/// among-device link. An idle topic parks the task ([`Flow::Wait`]);
+/// topic end-of-stream becomes pipeline EOS.
+///
+/// [`Flow::Wait`]: crate::element::Flow::Wait
+pub struct TensorQueryServerSrc {
+    props: QueryServerSrcProps,
+    port: Option<Box<dyn SubscriberPort>>,
+    wake: Arc<SharedWaker>,
+}
+
+impl TensorQueryServerSrc {
+    pub fn new() -> Self {
+        Self::from_props(QueryServerSrcProps::default()).expect("defaults are valid")
+    }
+}
+
+impl Default for TensorQueryServerSrc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FromProps for TensorQueryServerSrc {
+    type Props = QueryServerSrcProps;
+
+    fn from_props(props: QueryServerSrcProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            port: None,
+            wake: SharedWaker::new(),
+        })
+    }
+}
+
+/// Announced caps: explicit configuration wins, then the topic's
+/// advertisement, then ANY.
+fn announced_caps(explicit: &Caps, topic: Option<Caps>) -> Caps {
+    if !matches!(explicit, Caps::Any) {
+        explicit.clone()
+    } else {
+        topic.unwrap_or(Caps::Any)
+    }
+}
+
+impl Element for TensorQueryServerSrc {
+    fn type_name(&self) -> &'static str {
+        "tensor_query_serversrc"
+    }
+
+    fn sink_pads(&self) -> PadSpec {
+        PadSpec::Fixed(0)
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        self.props.set(key, value)
+    }
+
+    fn propose_caps(&mut self, downstream: &Caps) -> Result<()> {
+        // `tensor_query_serversrc topic=x ! other/tensor,...` configures
+        // the announced caps, like videotestsrc geometry
+        self.props.caps = downstream.clone();
+        Ok(())
+    }
+
+    fn negotiate(&mut self, _in: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        if self.props.topic.is_empty() {
+            return Err(Error::Negotiation(
+                "tensor_query_serversrc needs topic=".into(),
+            ));
+        }
+        // subscribe once; the subscription exists from this point on, so
+        // a publisher launched afterwards drops nothing
+        if self.port.is_none() {
+            let mut port = transport(&self.props.transport)?
+                .attach(&self.props.topic, self.props.max_buffers)?;
+            port.add_waker(&self.wake);
+            self.port = Some(port);
+        }
+        let caps = announced_caps(
+            &self.props.caps,
+            self.port.as_ref().and_then(|p| p.topic_caps()),
+        );
+        Ok(vec![caps; n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<Flow> {
+        unreachable!("source has no sink pads")
+    }
+
+    fn generate(&mut self, ctx: &mut Ctx) -> Result<Flow> {
+        let Some(port) = self.port.as_mut() else {
+            return Err(Error::element("tensor_query_serversrc", "not negotiated"));
+        };
+        // waker first: a publish racing the empty probe still lands
+        self.wake.set(ctx.waker());
+        match port.try_recv() {
+            PortRecv::Item(buf) => {
+                ctx.push(0, buf)?;
+                Ok(Flow::Continue)
+            }
+            PortRecv::Empty => Ok(Flow::Wait),
+            PortRecv::End => {
+                // detach eagerly so a finished consumer never holds a
+                // queue that would saturate the topic's publishers
+                self.port = None;
+                Ok(Flow::Eos)
+            }
+        }
+    }
+}
+
+/// Typed properties of [`TensorQueryClient`].
+#[derive(Debug, Clone)]
+pub struct QueryClientProps {
+    /// Request topic of the serving pipeline (`topic`, required).
+    pub topic: String,
+    /// Reply topic of the serving pipeline (`reply`, required).
+    pub reply: String,
+    /// Delivery backend (`transport`, default `inproc`).
+    pub transport: String,
+    /// Caps of the replies, announced downstream (`caps`; default: the
+    /// reply topic's advertisement, else ANY).
+    pub caps: Caps,
+    /// Reply-subscription queue bound (`max-buffers`).
+    pub max_buffers: usize,
+}
+
+impl Default for QueryClientProps {
+    fn default() -> Self {
+        Self {
+            topic: String::new(),
+            reply: String::new(),
+            transport: "inproc".to_string(),
+            caps: Caps::Any,
+            max_buffers: DEFAULT_ENDPOINT_CAPACITY,
+        }
+    }
+}
+
+impl Props for QueryClientProps {
+    const FACTORY: &'static str = "tensor_query_client";
+    const KEYS: &'static [&'static str] =
+        &["topic", "reply", "transport", "caps", "max-buffers"];
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "topic" => self.topic = value.to_string(),
+            "reply" => self.reply = value.to_string(),
+            "transport" => self.transport = value.to_string(),
+            "caps" => self.caps = Caps::parse(value)?,
+            "max-buffers" => self.max_buffers = parse_usize(key, value)?.max(1),
+            _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
+        }
+        Ok(())
+    }
+
+    fn into_element(self) -> Result<Box<dyn Element>> {
+        Ok(Box::new(TensorQueryClient::from_props(self)?))
+    }
+}
+
+/// In-pipeline request/response filter: each input frame goes out on the
+/// serving pipeline's request topic, and the service's reply is emitted
+/// downstream in its place. The input frame is not consumed until its
+/// reply arrived — while waiting, the task parks with the frame handed
+/// back to the scheduler, so a slow (or not-yet-launched) service costs
+/// no pool worker. EOS on the input finishes the request publisher,
+/// which propagates end-of-stream through the service.
+pub struct TensorQueryClient {
+    props: QueryClientProps,
+    req: Option<Box<dyn PublisherPort>>,
+    rep: Option<Box<dyn SubscriberPort>>,
+    wake: Arc<SharedWaker>,
+    /// The current input frame's request was published; its reply is
+    /// pending. Guards against re-publishing on wait/wake replays.
+    awaiting: bool,
+}
+
+impl TensorQueryClient {
+    pub fn new() -> Self {
+        Self::from_props(QueryClientProps::default()).expect("defaults are valid")
+    }
+}
+
+impl Default for TensorQueryClient {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FromProps for TensorQueryClient {
+    type Props = QueryClientProps;
+
+    fn from_props(props: QueryClientProps) -> Result<Self> {
+        Ok(Self {
+            props,
+            req: None,
+            rep: None,
+            wake: SharedWaker::new(),
+            awaiting: false,
+        })
+    }
+}
+
+impl Element for TensorQueryClient {
+    fn type_name(&self) -> &'static str {
+        "tensor_query_client"
+    }
+
+    fn set_property(&mut self, key: &str, value: &str) -> Result<()> {
+        self.props.set(key, value)
+    }
+
+    fn negotiate(&mut self, in_caps: &[Caps], n_srcs: usize) -> Result<Vec<Caps>> {
+        if self.props.topic.is_empty() || self.props.reply.is_empty() {
+            return Err(Error::Negotiation(
+                "tensor_query_client needs topic= and reply=".into(),
+            ));
+        }
+        if self.rep.is_none() {
+            let t = transport(&self.props.transport)?;
+            // subscribe the reply topic *before* attaching the request
+            // publisher: no reply can be lost to ordering
+            let mut rep = t.attach(&self.props.reply, self.props.max_buffers)?;
+            rep.add_waker(&self.wake);
+            self.rep = Some(rep);
+            let mut req = t.advertise(&self.props.topic)?;
+            req.add_waker(&self.wake);
+            req.advertise(&in_caps[0]);
+            self.req = Some(req);
+        }
+        let caps = announced_caps(
+            &self.props.caps,
+            self.rep.as_ref().and_then(|p| p.topic_caps()),
+        );
+        Ok(vec![caps; n_srcs.max(1)])
+    }
+
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow> {
+        let Item::Buffer(buf) = item else {
+            return Ok(Flow::Continue);
+        };
+        let (Some(req), Some(rep)) = (self.req.as_mut(), self.rep.as_mut()) else {
+            return Err(Error::element("tensor_query_client", "not negotiated"));
+        };
+        self.wake.set(ctx.waker());
+        if !self.awaiting {
+            // the request clone shares chunk storage; the original frame
+            // stays with us until the reply arrives
+            match req.try_send(buf.clone()) {
+                PortSend::Sent => self.awaiting = true,
+                PortSend::NoSubscribers(_) | PortSend::Full(_) => {
+                    if ctx.stopped() {
+                        req.count_dropped();
+                        ctx.stats().record_drop();
+                        return Ok(Flow::Continue);
+                    }
+                    // wait for the service to attach / drain
+                    ctx.push_back_input(pad, Item::Buffer(buf));
+                    return Ok(Flow::Wait);
+                }
+                PortSend::Closed(_) => return Ok(Flow::Eos),
+            }
+        }
+        match rep.try_recv() {
+            PortRecv::Item(reply) => {
+                self.awaiting = false;
+                ctx.push(0, reply)?;
+                Ok(Flow::Continue)
+            }
+            PortRecv::Empty => {
+                if ctx.stopped() {
+                    // teardown: the reply may never come
+                    self.awaiting = false;
+                    ctx.stats().record_drop();
+                    return Ok(Flow::Continue);
+                }
+                // reply pending: keep the frame and park until it lands
+                ctx.push_back_input(pad, Item::Buffer(buf));
+                Ok(Flow::Wait)
+            }
+            PortRecv::End => Ok(Flow::Eos),
+        }
+    }
+
+    fn flush(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        // input EOS: finish the request stream; the service pipeline
+        // EOS-es in turn and its reply topic ends
+        if let Some(req) = self.req.as_mut() {
+            req.finish();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::stream::StreamRegistry;
+    use crate::tensor::DType;
+
+    #[test]
+    fn props_validate_and_suggest() {
+        let mut p = QueryServerSrcProps::default();
+        p.set("topic", "faces").unwrap();
+        p.set("max-buffers", "8").unwrap();
+        let err = p.set("topik", "x").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"topic\"?"), "{err}");
+        let mut s = QueryServerSinkProps::default();
+        s.set("wait-subscribers", "2").unwrap();
+        assert_eq!(s.wait_subscribers, 2);
+    }
+
+    #[test]
+    fn serversink_requires_topic() {
+        let mut e = TensorQueryServerSink::new();
+        assert!(e.negotiate(&[Caps::Any], 0).is_err());
+    }
+
+    #[test]
+    fn serversrc_announces_explicit_caps() {
+        let mut e = TensorQueryServerSrc::from_props(QueryServerSrcProps {
+            topic: "unit/q-caps".into(),
+            caps: Caps::tensor(DType::F32, [4], 30.0),
+            ..Default::default()
+        })
+        .unwrap();
+        let out = e.negotiate(&[], 1).unwrap();
+        assert!(out[0].compatible(&Caps::tensor(DType::F32, [4], 30.0)));
+    }
+
+    #[test]
+    fn serversrc_adopts_advertised_topic_caps() {
+        let reg = StreamRegistry::global();
+        let p = reg.publish("unit/q-adopt");
+        p.advertise(&Caps::tensor(DType::U8, [3, 8, 8], 15.0));
+        let mut e = TensorQueryServerSrc::from_props(QueryServerSrcProps {
+            topic: "unit/q-adopt".into(),
+            ..Default::default()
+        })
+        .unwrap();
+        let out = e.negotiate(&[], 1).unwrap();
+        assert!(out[0].compatible(&Caps::tensor(DType::U8, [3, 8, 8], 15.0)));
+    }
+
+    #[test]
+    fn client_requires_both_topics() {
+        let mut e = TensorQueryClient::new();
+        assert!(e.negotiate(&[Caps::Any], 1).is_err());
+        let mut e = TensorQueryClient::from_props(QueryClientProps {
+            topic: "only-request".into(),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(e.negotiate(&[Caps::Any], 1).is_err());
+    }
+}

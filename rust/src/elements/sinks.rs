@@ -1,6 +1,6 @@
 //! Sink elements: `fakesink`, `appsink`, `tensor_sink`, `filesink`.
 
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{RecvError, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -10,6 +10,7 @@ use crate::element::{
 };
 use crate::error::{Error, Result};
 use crate::pipeline::executor::SharedWaker;
+use crate::pipeline::stream::{Endpoint, EpPop, EpPush, DEFAULT_ENDPOINT_CAPACITY};
 use crate::tensor::{Buffer, Caps};
 
 use super::sources::parse_usize;
@@ -156,58 +157,61 @@ impl Props for AppSinkProps {
     }
 }
 
-/// Hands buffers to the application through a bounded channel. The channel
-/// closes at end-of-stream, so an application drain loop
+/// Hands buffers to the application through a bounded endpoint — since
+/// the stream-endpoint redesign, the same `Endpoint` primitive that
+/// backs topic subscriptions (`pipeline/stream.rs`), here as an
+/// anonymous local topic with the element as its only publisher. The
+/// endpoint closes at end-of-stream, so an application drain loop
 /// (`while let Ok(buf) = rx.recv()`) terminates when the pipeline does.
-/// With `drop=false` (default) a full channel makes the sink **park** —
+/// With `drop=false` (default) a full endpoint makes the sink **park** —
 /// the undelivered frame is handed back to the scheduler and the task
 /// sleeps (costing no pool worker) until the application's
 /// [`AppSinkReceiver`] frees a slot, drops, or a pipeline stop is
 /// requested. Set `drop=true` for fire-and-forget delivery instead.
 pub struct AppSink {
-    tx: Option<SyncSender<Buffer>>,
-    rx: Option<Receiver<Buffer>>,
+    ep: Arc<Endpoint>,
     /// Wakes this sink's parked task when the application drains a slot.
     wake: Arc<SharedWaker>,
+    /// The receiver handle was taken (it can only be taken once).
+    receiver_taken: bool,
+    /// The application dropped the receiver: stop consuming.
+    closed: bool,
     props: AppSinkProps,
 }
 
-/// Receiving end of an [`AppSink`]: the bounded channel plus the wake
-/// hook that unparks the sink task whenever the application frees a
-/// slot (or drops the receiver). Mirrors the `std::sync::mpsc::Receiver`
+/// Receiving end of an [`AppSink`]: the bounded endpoint whose pops
+/// unpark the sink task whenever the application frees a slot (and whose
+/// drop closes the stream). Mirrors the `std::sync::mpsc::Receiver`
 /// surface the seed exposed.
 pub struct AppSinkReceiver {
-    rx: Receiver<Buffer>,
-    wake: Arc<SharedWaker>,
+    ep: Arc<Endpoint>,
 }
 
 impl AppSinkReceiver {
     /// Block until the next buffer; errors once the pipeline reached
-    /// end-of-stream and the channel drained.
-    pub fn recv(&self) -> std::result::Result<Buffer, std::sync::mpsc::RecvError> {
-        let r = self.rx.recv();
-        // a slot freed: let a parked sink deliver its pending frame
-        self.wake.wake();
-        r
+    /// end-of-stream and the endpoint drained.
+    pub fn recv(&self) -> std::result::Result<Buffer, RecvError> {
+        // every pop wakes a parked sink so it can deliver its pending frame
+        self.ep.pop_blocking().ok_or(RecvError)
     }
 
-    pub fn try_recv(&self) -> std::result::Result<Buffer, std::sync::mpsc::TryRecvError> {
-        let r = self.rx.try_recv();
-        if r.is_ok() {
-            self.wake.wake();
+    pub fn try_recv(&self) -> std::result::Result<Buffer, TryRecvError> {
+        match self.ep.try_pop() {
+            EpPop::Item(b) => Ok(b),
+            EpPop::Empty => Err(TryRecvError::Empty),
+            EpPop::End => Err(TryRecvError::Disconnected),
         }
-        r
     }
 
     pub fn recv_timeout(
         &self,
         timeout: Duration,
-    ) -> std::result::Result<Buffer, std::sync::mpsc::RecvTimeoutError> {
-        let r = self.rx.recv_timeout(timeout);
-        if r.is_ok() {
-            self.wake.wake();
+    ) -> std::result::Result<Buffer, RecvTimeoutError> {
+        match self.ep.pop_timeout(timeout) {
+            EpPop::Item(b) => Ok(b),
+            EpPop::Empty => Err(RecvTimeoutError::Timeout),
+            EpPop::End => Err(RecvTimeoutError::Disconnected),
         }
-        r
     }
 
     /// Drain iterator; terminates when the pipeline reaches end-of-stream.
@@ -218,9 +222,9 @@ impl AppSinkReceiver {
 
 impl Drop for AppSinkReceiver {
     fn drop(&mut self) {
-        // wake a parked sink so it observes the disconnected channel
-        // and unwinds instead of waiting forever
-        self.wake.wake();
+        // closing the endpoint wakes a parked sink so it observes the
+        // gone receiver and unwinds instead of waiting forever
+        self.ep.close();
     }
 }
 
@@ -231,10 +235,12 @@ impl AppSink {
 
     /// Take the receiving end (call before `Pipeline::play`).
     pub fn take_receiver(&mut self) -> Option<AppSinkReceiver> {
-        let rx = self.rx.take()?;
+        if self.receiver_taken {
+            return None;
+        }
+        self.receiver_taken = true;
         Some(AppSinkReceiver {
-            rx,
-            wake: self.wake.clone(),
+            ep: self.ep.clone(),
         })
     }
 }
@@ -245,15 +251,29 @@ impl Default for AppSink {
     }
 }
 
+impl Drop for AppSink {
+    fn drop(&mut self) {
+        // the producer is gone: let the receiver drain queued buffers,
+        // then observe end-of-stream instead of blocking forever (the
+        // endpoint analog of dropping the old mpsc sender — covers
+        // pipelines that are torn down without ever reaching flush())
+        self.ep.set_eos();
+    }
+}
+
 impl FromProps for AppSink {
     type Props = AppSinkProps;
 
     fn from_props(props: AppSinkProps) -> Result<Self> {
-        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        let ep = Endpoint::standalone(DEFAULT_ENDPOINT_CAPACITY);
+        let wake = SharedWaker::new();
+        // the element task is the endpoint's producer; pops wake it
+        ep.add_producer_waker(&wake);
         Ok(Self {
-            tx: Some(tx),
-            rx: Some(rx),
-            wake: SharedWaker::new(),
+            ep,
+            wake,
+            receiver_taken: false,
+            closed: false,
             props,
         })
     }
@@ -284,20 +304,20 @@ impl Element for AppSink {
         let Item::Buffer(buf) = item else {
             return Ok(Flow::Continue);
         };
-        let Some(tx) = &self.tx else {
+        if self.closed {
             return Ok(Flow::Eos);
-        };
-        // publish the waker before probing the channel, so a racing
+        }
+        // publish the waker before probing the endpoint, so a racing
         // application recv() can never free a slot unobserved
         self.wake.set(ctx.waker());
-        match tx.try_send(buf) {
-            Ok(()) => Ok(Flow::Continue),
-            Err(TrySendError::Disconnected(_)) => {
+        match self.ep.try_push(buf) {
+            EpPush::Ok => Ok(Flow::Continue),
+            EpPush::Closed(_) => {
                 // application dropped the receiver: stop consuming
-                self.tx = None;
+                self.closed = true;
                 Ok(Flow::Eos)
             }
-            Err(TrySendError::Full(b)) => {
+            EpPush::Full(b) => {
                 if self.props.drop {
                     ctx.stats().record_drop();
                     Ok(Flow::Continue)
@@ -317,8 +337,9 @@ impl Element for AppSink {
     }
 
     fn flush(&mut self, _ctx: &mut Ctx) -> Result<()> {
-        // close the app channel so application drain loops terminate
-        self.tx = None;
+        // end the app endpoint so application drain loops terminate
+        // (queued buffers still drain before recv() errors)
+        self.ep.set_eos();
         Ok(())
     }
 }

@@ -1,13 +1,13 @@
 //! Source elements: `videotestsrc`, `appsrc`, `sensorsrc` (Tensor-Src-IIO
 //! analog), `filesrc`.
 
-use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
 
 use crate::element::props::{parse_bool, unknown_property};
 use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
 use crate::pipeline::executor::SharedWaker;
+use crate::pipeline::stream::{Endpoint, EpPop, DEFAULT_ENDPOINT_CAPACITY};
 use crate::tensor::{
     Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
 };
@@ -230,15 +230,17 @@ impl Props for AppSrcProps {
     }
 }
 
-/// `appsrc`: the application pushes buffers through a channel.
+/// `appsrc`: the application pushes buffers into the pipeline.
 ///
-/// On the pooled executor the source never blocks a worker waiting for
-/// application data: an empty channel parks its task
+/// Since the stream-endpoint redesign this is a thin wrapper over the
+/// same bounded `Endpoint` primitive that backs topic subscriptions
+/// (`pipeline/stream.rs`) — an anonymous local topic with the element as
+/// its only consumer. On the pooled executor the source never blocks a
+/// worker waiting for application data: an empty endpoint parks its task
 /// ([`Flow::Wait`]) and the push handle wakes it through a
 /// [`SharedWaker`] the element publishes at its first step.
 pub struct AppSrc {
-    tx: SyncSender<Option<(Buffer, u64)>>,
-    rx: Receiver<Option<(Buffer, u64)>>,
+    ep: Arc<Endpoint>,
     wake: Arc<SharedWaker>,
     props: AppSrcProps,
     n: u64,
@@ -251,7 +253,7 @@ pub struct AppSrc {
 /// pipeline starts; pushes from any thread after that.
 #[derive(Clone)]
 pub struct AppSrcHandle {
-    tx: SyncSender<Option<(Buffer, u64)>>,
+    ep: Arc<Endpoint>,
     wake: Arc<SharedWaker>,
 }
 
@@ -283,17 +285,17 @@ impl AppSrcHandle {
     /// # }
     /// ```
     pub fn push(&self, buf: Buffer) -> Result<()> {
-        self.tx
-            .send(Some((buf, 0)))
+        self.ep
+            .push_blocking(buf)
             .map_err(|_| Error::Runtime("appsrc: pipeline gone".into()))?;
         // unpark the source task if it was waiting for data
         self.wake.wake();
         Ok(())
     }
 
-    /// Signal end of stream.
+    /// Signal end of stream (already-queued buffers still drain first).
     pub fn end(&self) {
-        let _ = self.tx.send(None);
+        self.ep.set_eos();
         self.wake.wake();
     }
 }
@@ -306,7 +308,7 @@ impl AppSrc {
     /// Get a push handle (call before `Pipeline::play`).
     pub fn handle(&self) -> AppSrcHandle {
         AppSrcHandle {
-            tx: self.tx.clone(),
+            ep: self.ep.clone(),
             wake: self.wake.clone(),
         }
     }
@@ -323,15 +325,26 @@ impl Default for AppSrc {
     }
 }
 
+impl Drop for AppSrc {
+    fn drop(&mut self) {
+        // the consumer is gone: pending and future pushes must fail with
+        // "pipeline gone" instead of blocking the application forever
+        // (the endpoint analog of dropping the old mpsc receiver)
+        self.ep.close();
+    }
+}
+
 impl FromProps for AppSrc {
     type Props = AppSrcProps;
 
     fn from_props(props: AppSrcProps) -> Result<Self> {
-        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        let ep = Endpoint::standalone(DEFAULT_ENDPOINT_CAPACITY);
+        let wake = SharedWaker::new();
+        // the element task is the endpoint's consumer; pushes wake it
+        ep.add_consumer_waker(&wake);
         Ok(Self {
-            tx,
-            rx,
-            wake: SharedWaker::new(),
+            ep,
+            wake,
             props,
             n: 0,
         })
@@ -368,16 +381,16 @@ impl Element for AppSrc {
         // empty check still lands a wake (the executor's wake-pending
         // flag covers the remainder of the window)
         self.wake.set(ctx.waker());
-        match self.rx.try_recv() {
-            Ok(Some((mut buf, _))) => {
+        match self.ep.try_pop() {
+            EpPop::Item(mut buf) => {
                 buf.seq = self.n;
                 self.n += 1;
                 ctx.push(0, buf)?;
                 Ok(Flow::Continue)
             }
-            Ok(None) | Err(TryRecvError::Disconnected) => Ok(Flow::Eos),
+            EpPop::End => Ok(Flow::Eos),
             // nothing pushed yet: park until the application wakes us
-            Err(TryRecvError::Empty) => Ok(Flow::Wait),
+            EpPop::Empty => Ok(Flow::Wait),
         }
     }
 }

@@ -12,4 +12,4 @@ pub mod stats;
 pub mod traffic;
 
 pub use process::{CpuTracker, MemInfo};
-pub use stats::{ElementStats, LatencyStats, PipelineReport, SchedSnapshot};
+pub use stats::{ElementStats, LatencyStats, PipelineReport, SchedSnapshot, TopicSnapshot};

@@ -215,6 +215,26 @@ pub struct SchedSnapshot {
     pub link_high_water: u64,
 }
 
+/// Counters of one named stream topic (the tensor-query pub/sub layer;
+/// see `pipeline/stream.rs`). Cumulative since topic creation and
+/// process-global, like the traffic counters.
+#[derive(Debug, Default, Clone)]
+pub struct TopicSnapshot {
+    pub name: String,
+    /// Publishers currently attached.
+    pub publishers: usize,
+    /// Subscriber queues currently attached.
+    pub subscribers: usize,
+    /// Every publisher finished: the stream ended.
+    pub eos: bool,
+    /// Buffers accepted from publishers.
+    pub published: u64,
+    /// Buffer deliveries into subscriber queues (`published` × fan-out).
+    pub delivered: u64,
+    /// Buffers discarded because no subscriber was attached.
+    pub dropped: u64,
+}
+
 /// Summary of one pipeline run, assembled by the scheduler.
 #[derive(Debug, Default)]
 pub struct PipelineReport {
@@ -227,11 +247,20 @@ pub struct PipelineReport {
     pub traffic: crate::metrics::traffic::Snapshot,
     /// Worker-pool scheduling counters for this run.
     pub sched: SchedSnapshot,
+    /// Per-topic stream-endpoint counters at join time (cumulative and
+    /// process-global, like `traffic`: concurrent pipelines publishing
+    /// to the same registry share them).
+    pub topics: Vec<TopicSnapshot>,
 }
 
 impl PipelineReport {
     pub fn element(&self, name: &str) -> Option<&Arc<ElementStats>> {
         self.elements.iter().find(|e| e.name == name)
+    }
+
+    /// Counters of one stream topic, by name.
+    pub fn topic(&self, name: &str) -> Option<&TopicSnapshot> {
+        self.topics.iter().find(|t| t.name == name)
     }
 
     /// Frame rate at element `name`, measured over the element's own

@@ -207,6 +207,67 @@ impl Nnfw for XlaNnfw {
     }
 }
 
+/// Everything an NNFW factory learns about the `tensor_filter` it is
+/// instantiating for: the configured model/artifact name, placement, and
+/// the negotiated input tensor layout.
+pub struct NnfwRequest<'a> {
+    /// `model=` property of the filter (artifact or function name).
+    pub model: &'a str,
+    /// `accelerator=` property.
+    pub accelerator: Accelerator,
+    /// `device-class=` property (E3 hardware-class throttle).
+    pub device_class: DeviceClass,
+    /// Negotiated input tensor specs, stream (minor-first) order.
+    pub input_infos: &'a [TensorInfo],
+}
+
+type NnfwFactory = Arc<dyn Fn(&NnfwRequest) -> Result<Box<dyn Nnfw>> + Send + Sync>;
+
+static NNFW_REGISTRY: Lazy<Mutex<HashMap<String, NnfwFactory>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Register an NNFW sub-plugin factory under a `framework=` name —
+/// the runtime extension point of the paper's sub-plugin API, mirroring
+/// [`Registry::register`](crate::element::Registry::register) for
+/// elements. `tensor_filter framework=<name>` then routes through the
+/// factory instead of the built-in set.
+pub fn register_nnfw(
+    name: &str,
+    factory: impl Fn(&NnfwRequest) -> Result<Box<dyn Nnfw>> + Send + Sync + 'static,
+) {
+    NNFW_REGISTRY
+        .lock()
+        .unwrap()
+        .insert(name.to_string(), Arc::new(factory));
+}
+
+/// Is a sub-plugin factory registered under `name`?
+pub fn nnfw_exists(name: &str) -> bool {
+    NNFW_REGISTRY.lock().unwrap().contains_key(name)
+}
+
+/// Names of every registered sub-plugin factory (sorted).
+pub fn nnfw_names() -> Vec<String> {
+    let mut v: Vec<String> = NNFW_REGISTRY.lock().unwrap().keys().cloned().collect();
+    v.sort();
+    v
+}
+
+/// Instantiate a registered sub-plugin (the `Framework::Plugin` path of
+/// `tensor_filter`).
+pub(crate) fn make_nnfw(name: &str, req: &NnfwRequest) -> Result<Box<dyn Nnfw>> {
+    let factory = {
+        let g = NNFW_REGISTRY.lock().unwrap();
+        g.get(name).cloned()
+    };
+    match factory {
+        Some(f) => f(req),
+        None => Err(Error::Runtime(format!(
+            "NNFW sub-plugin {name:?} is not registered (register_nnfw)"
+        ))),
+    }
+}
+
 /// A registered custom-filter function: chunks in, chunks out.
 pub type CustomFn =
     Arc<dyn Fn(&[&Chunk]) -> Result<Vec<Chunk>> + Send + Sync + 'static>;

@@ -36,6 +36,9 @@ use crate::error::{Error, Result};
 use crate::metrics::stats::PipelineReport;
 use crate::pipeline::executor::{lock, Executor, Priority};
 use crate::pipeline::scheduler::{self, Controller, Running};
+use crate::pipeline::stream::{
+    QueryClient, StreamRegistry, SubscriberClose, TopicPublisher, TopicSubscriber,
+};
 use crate::pipeline::Pipeline;
 
 struct HubEntry {
@@ -65,41 +68,94 @@ pub struct PipelineHub {
     /// [`Executor::global`].
     dedicated: bool,
     entries: Mutex<Vec<HubEntry>>,
+    /// Stream-endpoint registry this hub resolves topics in (the
+    /// process-global one, so pipelines compose across hubs).
+    streams: StreamRegistry,
+    /// Weak closers of every subscriber handle this hub issued:
+    /// [`request_stop_all`](PipelineHub::request_stop_all) closes them so
+    /// application drain loops over [`subscribe`](PipelineHub::subscribe)
+    /// terminate.
+    subs: Mutex<Vec<SubscriberClose>>,
 }
 
 impl PipelineHub {
+    fn over(exec: Executor, dedicated: bool) -> PipelineHub {
+        PipelineHub {
+            exec,
+            dedicated,
+            entries: Mutex::new(Vec::new()),
+            streams: StreamRegistry::global().clone(),
+            subs: Mutex::new(Vec::new()),
+        }
+    }
+
     /// A hub over the process-global executor (shared with
     /// `Pipeline::play` traffic).
     pub fn new() -> PipelineHub {
-        PipelineHub {
-            exec: Executor::global().clone(),
-            dedicated: false,
-            entries: Mutex::new(Vec::new()),
-        }
+        PipelineHub::over(Executor::global().clone(), false)
     }
 
     /// A hub with its own dedicated pool of `workers` threads (clamped
     /// to the hard cap). The pool is shut down when the hub is dropped
     /// and no launched pipeline is still executing (joined or not).
     pub fn with_workers(workers: usize) -> PipelineHub {
-        PipelineHub {
-            exec: Executor::new(workers),
-            dedicated: true,
-            entries: Mutex::new(Vec::new()),
-        }
+        PipelineHub::over(Executor::new(workers), true)
     }
 
     /// A hub over a caller-managed executor.
     pub fn on(exec: &Executor) -> PipelineHub {
-        PipelineHub {
-            exec: exec.clone(),
-            dedicated: false,
-            entries: Mutex::new(Vec::new()),
-        }
+        PipelineHub::over(exec.clone(), false)
     }
 
     pub fn executor(&self) -> &Executor {
         &self.exec
+    }
+
+    /// The stream-endpoint registry this hub resolves topics in.
+    pub fn streams(&self) -> &StreamRegistry {
+        &self.streams
+    }
+
+    /// Publish a named topic from application code: the returned handle
+    /// pushes buffers to every subscriber — `tensor_query_serversrc`
+    /// elements of launched pipelines, or other application
+    /// [`subscribe`](PipelineHub::subscribe) handles. The app-side
+    /// counterpart of ending a pipeline in `tensor_query_serversink`.
+    pub fn publish(&self, topic: &str) -> TopicPublisher {
+        self.streams.publish(topic)
+    }
+
+    /// Subscribe a named topic from application code. The handle's
+    /// `recv` loop terminates at topic end-of-stream **and** when
+    /// [`request_stop_all`](PipelineHub::request_stop_all) runs — the
+    /// hub closes every subscriber handle it issued.
+    pub fn subscribe(&self, topic: &str) -> TopicSubscriber {
+        let s = self.streams.subscribe(topic);
+        self.track_subscription(s.close_handle());
+        s
+    }
+
+    /// [`subscribe`](PipelineHub::subscribe) with an explicit queue
+    /// bound (small bounds apply backpressure to publishers sooner).
+    pub fn subscribe_with_capacity(&self, topic: &str, capacity: usize) -> TopicSubscriber {
+        let s = self.streams.subscribe_with_capacity(topic, capacity);
+        self.track_subscription(s.close_handle());
+        s
+    }
+
+    /// Remember a closer for `request_stop_all`, pruning closers whose
+    /// handles were already dropped so long-lived hubs serving many
+    /// short-lived subscriptions don't accumulate dead entries.
+    fn track_subscription(&self, closer: SubscriberClose) {
+        let mut subs = lock(&self.subs);
+        subs.retain(|s| !s.is_dead());
+        subs.push(closer);
+    }
+
+    /// A request/response handle over a serving pipeline's topic pair
+    /// (see [`QueryClient`]).
+    pub fn query_client(&self, request: &str, reply: &str) -> QueryClient {
+        self.streams.query_client(request, reply)
     }
 
     pub fn worker_count(&self) -> usize {
@@ -168,12 +224,18 @@ impl PipelineHub {
     }
 
     /// Request a stop on every launched pipeline (live sources exit at
-    /// their next frame boundary).
+    /// their next frame boundary), and close every topic subscriber
+    /// handle this hub issued — application drain loops over
+    /// [`subscribe`](PipelineHub::subscribe) terminate even if the
+    /// topic's publisher never reaches end-of-stream on its own.
     pub fn request_stop_all(&self) {
         for e in lock(&self.entries).iter() {
             if let Some(r) = &e.running {
                 r.request_stop();
             }
+        }
+        for s in lock(&self.subs).drain(..) {
+            s.close();
         }
     }
 

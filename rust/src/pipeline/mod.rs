@@ -17,7 +17,11 @@
 //! element is a step-driven task, so a device can host many pipelines at
 //! O(workers) threads. [`PipelineHub`] is the multi-tenant entry point —
 //! launch/enumerate/join fleets of pipelines with per-pipeline
-//! [`Priority`] over one executor.
+//! [`Priority`] over one executor — and its [`stream`] registry names
+//! the **stream endpoints** (tensor-query pub/sub topics) through which
+//! pipelines compose as services: publish with
+//! `tensor_query_serversink topic=x` (or `hub.publish`), subscribe with
+//! `tensor_query_serversrc topic=x` (or `hub.subscribe`).
 //!
 //! [`run`]: Pipeline::run
 //! [`play`]: Pipeline::play
@@ -28,12 +32,14 @@ pub mod graph;
 pub mod hub;
 pub mod parser;
 pub mod scheduler;
+pub mod stream;
 
 pub use builder::PipelineBuilder;
 pub use executor::{Executor, Priority, Waker};
 pub use graph::{Graph, Link, Node, NodeId};
 pub use hub::{HubJoin, PipelineHub};
 pub use scheduler::{Controller, Running};
+pub use stream::{QueryClient, StreamRegistry, TopicPublisher, TopicSubscriber, Transport};
 
 use crate::element::Element;
 use crate::elements::sinks::AppSink;

@@ -88,7 +88,7 @@ pub fn parse(desc: &str) -> Result<Graph> {
                     current = Some(id);
                 }
             }
-            t if t.contains('=') && !t.contains('/') && current.is_some() && !pending_link => {
+            t if is_property_token(t) && current.is_some() && !pending_link => {
                 // property on the current element
                 let (k, v) = t.split_once('=').unwrap();
                 let id = current.unwrap();
@@ -143,6 +143,17 @@ fn attach(
     }
     *current = Some(id);
     Ok(())
+}
+
+/// A `key=value` token is a property when its first `=` comes before any
+/// `/` — so `topic=ns/stream` and `location=/tmp/frames.bin` configure
+/// the current element, while caps like `video/x-raw,format=RGB` keep
+/// their media-type prefix and stay caps filters.
+fn is_property_token(t: &str) -> bool {
+    match t.find('=') {
+        Some(eq) => t.find('/').is_none_or(|slash| eq < slash),
+        None => false,
+    }
 }
 
 fn unquote(v: &str) -> &str {
@@ -295,6 +306,36 @@ mod tests {
         assert!(
             parse("videotestsrc ! tensor_filter latency-budget=-3 ! fakesink").is_err()
         );
+    }
+
+    #[test]
+    fn property_values_may_contain_slashes() {
+        // topic namespaces (`ns/stream`) and filesystem paths are
+        // properties, not caps filters
+        let g = parse(
+            "videotestsrc num-buffers=2 ! tensor_converter ! \
+             tensor_query_serversink name=q topic=ns/stream",
+        )
+        .unwrap();
+        assert_eq!(
+            g.node(g.by_name("q").unwrap()).element.type_name(),
+            "tensor_query_serversink"
+        );
+        let g = parse("filesrc location=/tmp/frames.bin ! fakesink").unwrap();
+        assert_eq!(g.nodes.len(), 2);
+    }
+
+    #[test]
+    fn query_elements_parse_with_trailing_capsfilter() {
+        let g = parse(
+            "tensor_query_serversrc topic=q/parse max-buffers=8 ! \
+             other/tensor,dimension=3:16:16,type=uint8,framerate=240 ! \
+             tensor_converter name=conv ! fakesink",
+        );
+        // tensor_converter rejects tensor input, so the *graph* may not
+        // negotiate — but the description must parse into 4 nodes
+        let g = g.unwrap();
+        assert_eq!(g.nodes.len(), 4);
     }
 
     // -- span-carrying error reporting (satellite) ----------------------

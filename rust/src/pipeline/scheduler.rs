@@ -227,6 +227,8 @@ impl Running {
             peak_rss_mib: mem.peak_mib(),
             traffic: crate::metrics::traffic::since(traffic0),
             sched: snapshot_sched(&stats, &exec),
+            // per-topic endpoint counters (process-global, like traffic)
+            topics: crate::pipeline::stream::StreamRegistry::global().snapshot(),
             elements: stats,
         };
         Ok((report, elements))

@@ -1,0 +1,1209 @@
+//! Named stream endpoints: tensor-query pub/sub over the hub registry.
+//!
+//! The among-device-AI follow-up paper (arXiv:2201.06026) composes AI
+//! services *across* pipelines and devices through `tensor_query`
+//! client/server elements. This module is the in-process core of that
+//! surface: a [`StreamRegistry`] of named **topics**, each fanning one
+//! ordered buffer stream out to any number of bounded per-subscriber
+//! queues. Pipelines attach through the `tensor_query_serversrc` /
+//! `tensor_query_serversink` / `tensor_query_client` elements
+//! ([`crate::elements::query`]); applications attach through
+//! [`PipelineHub::publish`]/[`PipelineHub::subscribe`] handles — both
+//! sides speak the **same** publish/subscribe contract, and since the
+//! endpoint redesign `appsrc`/`appsink` are thin wrappers over the same
+//! `Endpoint` primitive (anonymous, single-consumer local topics).
+//!
+//! ## The endpoint contract
+//!
+//! An `Endpoint` is one bounded buffer queue with wake hooks on both
+//! sides:
+//!
+//! * **element tasks** never block a pool worker — a producer that finds
+//!   the queue full returns [`Flow::Wait`](crate::element::Flow::Wait)
+//!   and parks; a consumer that finds it empty does the same. Every pop
+//!   (and every push) unconditionally wakes the registered
+//!   [`SharedWaker`]s of the other side, the exact protocol `appsrc` /
+//!   `appsink` proved under the worker-pool executor (spurious wakes are
+//!   cheap re-checks, lost wakes are impossible because the waker is
+//!   published before the queue is probed);
+//! * **application threads** block on condvars (`recv`, blocking
+//!   `push`), never inside the executor.
+//!
+//! EOS propagates across a topic exactly like an in-pipeline link: the
+//! topic counts attached publishers; when the last one finishes, every
+//! subscriber queue is marked end-of-stream and drains to a terminal
+//! `End`, which a `tensor_query_serversrc` forwards downstream as
+//! pipeline EOS and an application handle surfaces as a closed channel.
+//!
+//! ## Transports
+//!
+//! Delivery is abstracted behind the [`Transport`] trait (publisher and
+//! subscriber **ports**). Only the in-process transport exists today;
+//! socket/network backends can be registered with
+//! [`register_transport`] later without changing the element or
+//! application API — `tensor_query_serversrc topic=faces
+//! transport=tcp` is a property change, not a new element.
+//!
+//! [`PipelineHub::publish`]: crate::pipeline::PipelineHub::publish
+//! [`PipelineHub::subscribe`]: crate::pipeline::PipelineHub::subscribe
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{RecvError, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use once_cell::sync::Lazy;
+
+use crate::error::{Error, Result};
+use crate::metrics::stats::TopicSnapshot;
+use crate::pipeline::executor::{lock, SharedWaker};
+use crate::tensor::{Buffer, Caps};
+
+/// Default bound of one subscriber queue (matches the `appsrc`/`appsink`
+/// channel capacity the endpoint layer replaced).
+pub const DEFAULT_ENDPOINT_CAPACITY: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Endpoint: one bounded queue with wake hooks on both sides
+// ---------------------------------------------------------------------------
+
+/// Outcome of a non-blocking endpoint push (element producers).
+pub(crate) enum EpPush {
+    /// Enqueued; the consumer side has been woken.
+    Ok,
+    /// At capacity — the buffer comes back so the element can
+    /// `push_back_input` it and park ([`Flow::Wait`](crate::element::Flow::Wait)).
+    Full(Buffer),
+    /// The consumer is gone (or the stream ended): nothing can be
+    /// delivered anymore.
+    Closed(Buffer),
+}
+
+/// Outcome of a non-blocking endpoint pop (element consumers).
+pub(crate) enum EpPop {
+    Item(Buffer),
+    /// Nothing queued yet but the stream is still open — park.
+    Empty,
+    /// Stream over: every producer finished (queue drained) or the
+    /// endpoint was closed.
+    End,
+}
+
+struct EpState {
+    queue: VecDeque<Buffer>,
+    /// No more data will ever be pushed; queued buffers still drain.
+    eos: bool,
+    /// Consumer cancelled (receiver dropped, hub stop): pushes are
+    /// rejected and pops end immediately, queued buffers discarded.
+    closed: bool,
+    /// Wakers of element tasks producing into this endpoint.
+    producer_wakers: Vec<Arc<SharedWaker>>,
+    /// Wakers of the element task consuming this endpoint.
+    consumer_wakers: Vec<Arc<SharedWaker>>,
+}
+
+/// One bounded buffer queue shared by a producer side and a consumer
+/// side, either of which may be an element task (woken through
+/// [`SharedWaker`]s) or an application thread (blocking on condvars).
+/// The common primitive under `appsrc`, `appsink` and every topic
+/// subscription.
+pub(crate) struct Endpoint {
+    cap: usize,
+    inner: Mutex<EpState>,
+    /// Consumer-side blocking waits.
+    not_empty: Condvar,
+    /// Producer-side blocking waits.
+    not_full: Condvar,
+    /// Owning topic (None for anonymous appsrc/appsink endpoints):
+    /// pops additionally release publishers parked at topic level.
+    owner: Option<Weak<TopicInner>>,
+}
+
+impl Endpoint {
+    pub(crate) fn new(cap: usize, owner: Option<Weak<TopicInner>>) -> Arc<Endpoint> {
+        Arc::new(Endpoint {
+            cap: cap.max(1),
+            inner: Mutex::new(EpState {
+                queue: VecDeque::new(),
+                eos: false,
+                closed: false,
+                producer_wakers: Vec::new(),
+                consumer_wakers: Vec::new(),
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            owner,
+        })
+    }
+
+    /// Anonymous single-consumer endpoint (the appsrc/appsink channel).
+    pub(crate) fn standalone(cap: usize) -> Arc<Endpoint> {
+        Endpoint::new(cap, None)
+    }
+
+    /// Register the waker of an element task producing into this
+    /// endpoint (woken on every pop/close — spurious wakes are cheap).
+    pub(crate) fn add_producer_waker(&self, w: &Arc<SharedWaker>) {
+        let mut g = lock(&self.inner);
+        if !g.producer_wakers.iter().any(|x| Arc::ptr_eq(x, w)) {
+            g.producer_wakers.push(w.clone());
+        }
+    }
+
+    /// Register the waker of the element task consuming this endpoint.
+    pub(crate) fn add_consumer_waker(&self, w: &Arc<SharedWaker>) {
+        let mut g = lock(&self.inner);
+        if !g.consumer_wakers.iter().any(|x| Arc::ptr_eq(x, w)) {
+            g.consumer_wakers.push(w.clone());
+        }
+    }
+
+    /// Queue length at/over capacity? (publisher-side space probe; only
+    /// meaningful under the owning topic's lock for fan-out atomicity.)
+    pub(crate) fn is_full(&self) -> bool {
+        let g = lock(&self.inner);
+        !g.closed && g.queue.len() >= self.cap
+    }
+
+    fn wake_consumers(&self, wakers: Vec<Arc<SharedWaker>>) {
+        self.not_empty.notify_all();
+        for w in &wakers {
+            w.wake();
+        }
+    }
+
+    fn wake_producers(&self, wakers: Vec<Arc<SharedWaker>>) {
+        self.not_full.notify_all();
+        for w in &wakers {
+            w.wake();
+        }
+        if let Some(t) = self.owner.as_ref().and_then(Weak::upgrade) {
+            t.notify_space();
+        }
+    }
+
+    /// Non-blocking push (element producers — never holds a worker).
+    pub(crate) fn try_push(&self, buf: Buffer) -> EpPush {
+        let wakers = {
+            let mut g = lock(&self.inner);
+            if g.closed || g.eos {
+                return EpPush::Closed(buf);
+            }
+            if g.queue.len() >= self.cap {
+                return EpPush::Full(buf);
+            }
+            g.queue.push_back(buf);
+            g.consumer_wakers.clone()
+        };
+        self.wake_consumers(wakers);
+        EpPush::Ok
+    }
+
+    /// Blocking push (application producers — `AppSrcHandle::push`).
+    /// Errors once the stream ended or the consumer is gone.
+    pub(crate) fn push_blocking(&self, buf: Buffer) -> std::result::Result<(), Buffer> {
+        let mut g = lock(&self.inner);
+        loop {
+            if g.closed || g.eos {
+                return Err(buf);
+            }
+            if g.queue.len() < self.cap {
+                g.queue.push_back(buf);
+                let wakers = g.consumer_wakers.clone();
+                drop(g);
+                self.wake_consumers(wakers);
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking pop (element consumers).
+    pub(crate) fn try_pop(&self) -> EpPop {
+        let (buf, wakers) = {
+            let mut g = lock(&self.inner);
+            if g.closed {
+                return EpPop::End;
+            }
+            match g.queue.pop_front() {
+                Some(b) => (b, g.producer_wakers.clone()),
+                None => {
+                    return if g.eos { EpPop::End } else { EpPop::Empty };
+                }
+            }
+        };
+        self.wake_producers(wakers);
+        EpPop::Item(buf)
+    }
+
+    /// Blocking pop (application consumers). `None` = stream over.
+    pub(crate) fn pop_blocking(&self) -> Option<Buffer> {
+        let mut g = lock(&self.inner);
+        loop {
+            if g.closed {
+                return None;
+            }
+            if let Some(b) = g.queue.pop_front() {
+                let wakers = g.producer_wakers.clone();
+                drop(g);
+                self.wake_producers(wakers);
+                return Some(b);
+            }
+            if g.eos {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Timed pop (application consumers). `Empty` = timed out.
+    pub(crate) fn pop_timeout(&self, timeout: Duration) -> EpPop {
+        let deadline = Instant::now() + timeout;
+        let mut g = lock(&self.inner);
+        loop {
+            if g.closed {
+                return EpPop::End;
+            }
+            if let Some(b) = g.queue.pop_front() {
+                let wakers = g.producer_wakers.clone();
+                drop(g);
+                self.wake_producers(wakers);
+                return EpPop::Item(b);
+            }
+            if g.eos {
+                return EpPop::End;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return EpPop::Empty;
+            }
+            let (ng, _) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            g = ng;
+        }
+    }
+
+    /// No more data will arrive; queued buffers still drain, then the
+    /// consumer observes `End`. Both sides are woken.
+    pub(crate) fn set_eos(&self) {
+        let (producers, consumers) = {
+            let mut g = lock(&self.inner);
+            g.eos = true;
+            (g.producer_wakers.clone(), g.consumer_wakers.clone())
+        };
+        self.wake_consumers(consumers);
+        self.wake_producers(producers);
+    }
+
+    /// Consumer cancelled: discard queued buffers, reject future pushes,
+    /// wake everything (parked producers observe `Closed` and unwind).
+    pub(crate) fn close(&self) {
+        let (producers, consumers) = {
+            let mut g = lock(&self.inner);
+            g.closed = true;
+            g.queue.clear();
+            (g.producer_wakers.clone(), g.consumer_wakers.clone())
+        };
+        self.wake_consumers(consumers);
+        self.wake_producers(producers);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Topic: named fan-out over per-subscriber endpoints
+// ---------------------------------------------------------------------------
+
+/// Outcome of a non-blocking topic publish.
+pub(crate) enum TopicPush {
+    /// Delivered to every subscriber queue.
+    Ok,
+    /// Nobody is listening — the caller decides between dropping
+    /// (pub/sub default) and parking (`wait-subscribers=`).
+    NoSubscribers(Buffer),
+    /// Some subscriber queue is at capacity — park until it drains.
+    Full(Buffer),
+    /// The stream already ended on this topic.
+    Closed(Buffer),
+}
+
+struct TopicState {
+    subs: Vec<Arc<Endpoint>>,
+    open_publishers: usize,
+    /// The last publisher finished: new subscribers observe `End`
+    /// immediately; a new publisher attachment reopens the topic.
+    eos: bool,
+    /// Caps advertised by the first publisher (subscriber elements
+    /// announce these downstream when no explicit caps were configured).
+    caps: Option<Caps>,
+    /// Wakers of element publishers parked on a saturated (or
+    /// subscriber-less, with `wait-subscribers=`) topic.
+    publisher_wakers: Vec<Arc<SharedWaker>>,
+}
+
+/// One named stream shared by any number of publishers and subscribers.
+pub(crate) struct TopicInner {
+    name: String,
+    /// Default capacity of newly created subscriber queues.
+    default_cap: usize,
+    state: Mutex<TopicState>,
+    /// Application publishers blocking for space / topic events.
+    space: Condvar,
+    published: AtomicU64,
+    delivered: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TopicInner {
+    fn new(name: &str, default_cap: usize) -> Arc<TopicInner> {
+        Arc::new(TopicInner {
+            name: name.to_string(),
+            default_cap,
+            state: Mutex::new(TopicState {
+                subs: Vec::new(),
+                open_publishers: 0,
+                eos: false,
+                caps: None,
+                publisher_wakers: Vec::new(),
+            }),
+            space: Condvar::new(),
+            published: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    pub(crate) fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Register one publisher. Re-attaching to an ended topic reopens it
+    /// for future subscribers (already-ended subscriptions stay ended).
+    pub(crate) fn attach_publisher(&self) {
+        let mut g = lock(&self.state);
+        g.open_publishers += 1;
+        g.eos = false;
+    }
+
+    /// Record the caps flowing on this topic (first publisher wins).
+    pub(crate) fn advertise_caps(&self, caps: &Caps) {
+        let mut g = lock(&self.state);
+        if g.caps.is_none() && !matches!(caps, Caps::Any) {
+            g.caps = Some(caps.clone());
+        }
+    }
+
+    pub(crate) fn caps(&self) -> Option<Caps> {
+        lock(&self.state).caps.clone()
+    }
+
+    pub(crate) fn subscriber_count(&self) -> usize {
+        lock(&self.state).subs.len()
+    }
+
+    /// Register the waker of an element publisher (woken when space or a
+    /// subscriber appears, or the topic ends).
+    pub(crate) fn add_publisher_waker(&self, w: &Arc<SharedWaker>) {
+        let mut g = lock(&self.state);
+        if !g.publisher_wakers.iter().any(|x| Arc::ptr_eq(x, w)) {
+            g.publisher_wakers.push(w.clone());
+        }
+    }
+
+    /// One publisher finished; the last one ends the stream for every
+    /// subscriber (their queues drain, then report `End`).
+    pub(crate) fn publisher_done(&self) {
+        let (ended, wakers) = {
+            let mut g = lock(&self.state);
+            g.open_publishers = g.open_publishers.saturating_sub(1);
+            if g.open_publishers == 0 {
+                g.eos = true;
+                (g.subs.clone(), g.publisher_wakers.clone())
+            } else {
+                (Vec::new(), Vec::new())
+            }
+        };
+        for ep in &ended {
+            ep.set_eos();
+        }
+        self.space.notify_all();
+        for w in &wakers {
+            w.wake();
+        }
+    }
+
+    /// Wake every publisher-side waiter (called by subscriber queues
+    /// after a pop frees space, and on subscribe/unsubscribe).
+    pub(crate) fn notify_space(&self) {
+        let wakers = lock(&self.state).publisher_wakers.clone();
+        self.space.notify_all();
+        for w in &wakers {
+            w.wake();
+        }
+    }
+
+    /// Deliver one buffer to every subscriber queue, atomically with
+    /// respect to other publishers and (un)subscriptions: either every
+    /// queue takes it, or none does and the caller parks/drops. Space is
+    /// re-checked under the topic lock, so a replayed buffer is never
+    /// double-delivered to the subscribers that had room the first time.
+    pub(crate) fn try_publish(self: &Arc<Self>, buf: Buffer) -> TopicPush {
+        let g = lock(&self.state);
+        if g.eos {
+            return TopicPush::Closed(buf);
+        }
+        if g.subs.is_empty() {
+            // not counted as dropped here: the caller may park and replay
+            // this frame (wait-subscribers, a query client waiting for its
+            // service) — it records the drop only when it truly discards
+            return TopicPush::NoSubscribers(buf);
+        }
+        if g.subs.iter().any(|s| s.is_full()) {
+            return TopicPush::Full(buf);
+        }
+        self.deliver_locked(&g, buf);
+        TopicPush::Ok
+    }
+
+    /// Fan the buffer out while the topic lock is held (all queues were
+    /// verified non-full; concurrent pops only create more space). The
+    /// last subscriber takes the original buffer, the others clones —
+    /// chunks are Arc-backed, so clones share payload storage.
+    fn deliver_locked(&self, g: &std::sync::MutexGuard<'_, TopicState>, buf: Buffer) {
+        let n = g.subs.len();
+        let mut buf = Some(buf);
+        for (i, ep) in g.subs.iter().enumerate() {
+            let item = if i + 1 == n {
+                buf.take().expect("buffer consumed once")
+            } else {
+                buf.as_ref().expect("buffer present").clone()
+            };
+            let _ = ep.try_push(item);
+        }
+        self.published.fetch_add(1, Ordering::Relaxed);
+        self.delivered.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Blocking publish (application publishers): waits for space;
+    /// drops (returning `Ok(false)`) when nobody subscribes, errors once
+    /// the stream ended.
+    pub(crate) fn publish_blocking(self: &Arc<Self>, buf: Buffer) -> Result<bool> {
+        let mut g = lock(&self.state);
+        loop {
+            if g.eos {
+                return Err(Error::Runtime(format!(
+                    "topic {:?}: stream already ended",
+                    self.name
+                )));
+            }
+            if g.subs.is_empty() {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return Ok(false);
+            }
+            if !g.subs.iter().any(|s| s.is_full()) {
+                self.deliver_locked(&g, buf);
+                return Ok(true);
+            }
+            g = self.space.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Record one publisher-side discard (a frame published while nobody
+    /// subscribed and not replayed).
+    pub(crate) fn count_dropped(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Attach a bounded subscriber queue. Subscribing to an ended topic
+    /// yields an immediately-ended queue.
+    pub(crate) fn subscribe(self: &Arc<Self>, cap: Option<usize>) -> Arc<Endpoint> {
+        let ep = Endpoint::new(
+            cap.unwrap_or(self.default_cap),
+            Some(Arc::downgrade(self)),
+        );
+        let ended = {
+            let mut g = lock(&self.state);
+            g.subs.push(ep.clone());
+            g.eos
+        };
+        if ended {
+            // outside the topic lock: set_eos wakes through notify_space
+            ep.set_eos();
+        }
+        // publishers parked on wait-subscribers= (or full siblings that
+        // no longer matter) re-check
+        self.notify_space();
+        ep
+    }
+
+    /// Detach (and close) one subscriber queue; parked publishers are
+    /// released — a leaving subscriber must not wedge the stream.
+    pub(crate) fn unsubscribe(&self, ep: &Arc<Endpoint>) {
+        {
+            let mut g = lock(&self.state);
+            g.subs.retain(|s| !Arc::ptr_eq(s, ep));
+        }
+        ep.close();
+        self.notify_space();
+    }
+
+    pub(crate) fn snapshot(&self) -> TopicSnapshot {
+        let g = lock(&self.state);
+        TopicSnapshot {
+            name: self.name.clone(),
+            publishers: g.open_publishers,
+            subscribers: g.subs.len(),
+            eos: g.eos,
+            published: self.published.load(Ordering::Relaxed),
+            delivered: self.delivered.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamRegistry
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct RegistryInner {
+    topics: Mutex<HashMap<String, Arc<TopicInner>>>,
+}
+
+/// Registry of named stream topics — the hub-owned name service of the
+/// among-device composition surface. Cheap to clone (shared handle);
+/// [`StreamRegistry::global`] is the process-wide instance every
+/// `tensor_query_*` element and [`PipelineHub`] resolves topics in.
+///
+/// [`PipelineHub`]: crate::pipeline::PipelineHub
+#[derive(Clone, Default)]
+pub struct StreamRegistry {
+    inner: Arc<RegistryInner>,
+}
+
+impl StreamRegistry {
+    /// An isolated registry (tests; multi-tenant setups that must not
+    /// share topic names).
+    pub fn new() -> StreamRegistry {
+        StreamRegistry::default()
+    }
+
+    /// The process-wide registry (like the model pool: pipelines compose
+    /// across hubs and executors through one namespace).
+    pub fn global() -> &'static StreamRegistry {
+        static GLOBAL: Lazy<StreamRegistry> = Lazy::new(StreamRegistry::new);
+        &GLOBAL
+    }
+
+    /// Get-or-create a topic.
+    pub(crate) fn topic(&self, name: &str) -> Arc<TopicInner> {
+        let mut g = lock(&self.inner.topics);
+        g.entry(name.to_string())
+            .or_insert_with(|| TopicInner::new(name, DEFAULT_ENDPOINT_CAPACITY))
+            .clone()
+    }
+
+    /// Names of every topic ever referenced, sorted.
+    pub fn topic_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = lock(&self.inner.topics).keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Per-topic counters (sorted by topic name).
+    pub fn snapshot(&self) -> Vec<TopicSnapshot> {
+        let topics: Vec<Arc<TopicInner>> =
+            lock(&self.inner.topics).values().cloned().collect();
+        let mut v: Vec<TopicSnapshot> = topics.iter().map(|t| t.snapshot()).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// A publisher handle on `topic`: [`TopicPublisher::push`] blocks
+    /// while any subscriber queue is saturated and drops (reporting it)
+    /// while nobody subscribes.
+    pub fn publish(&self, topic: &str) -> TopicPublisher {
+        let t = self.topic(topic);
+        t.attach_publisher();
+        TopicPublisher {
+            topic: t,
+            done: false,
+        }
+    }
+
+    /// A subscriber handle on `topic` with the default queue bound.
+    pub fn subscribe(&self, topic: &str) -> TopicSubscriber {
+        self.subscribe_with_capacity(topic, DEFAULT_ENDPOINT_CAPACITY)
+    }
+
+    /// A subscriber handle with an explicit queue bound (small bounds
+    /// make a slow consumer exert backpressure sooner).
+    pub fn subscribe_with_capacity(&self, topic: &str, capacity: usize) -> TopicSubscriber {
+        let t = self.topic(topic);
+        let ep = t.subscribe(Some(capacity));
+        TopicSubscriber { topic: t, ep }
+    }
+
+    /// A request/response handle over a pair of topics: requests go out
+    /// on `request`, responses come back on `reply` (see
+    /// [`QueryClient`]). The reply subscription attaches first, so no
+    /// response can be lost to ordering.
+    pub fn query_client(&self, request: &str, reply: &str) -> QueryClient {
+        let rep = self.subscribe(reply);
+        let req = self.publish(request);
+        QueryClient {
+            inner: Mutex::new(QueryClientInner { req, rep }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Application-side handles
+// ---------------------------------------------------------------------------
+
+/// Application-side publisher on a named topic (from
+/// [`PipelineHub::publish`](crate::pipeline::PipelineHub::publish) or
+/// [`StreamRegistry::publish`]). The producing counterpart of an
+/// `appsrc` handle, minus the pipeline: anything subscribed to the topic
+/// — `tensor_query_serversrc` elements, application
+/// [`TopicSubscriber`]s — receives every pushed buffer, in order.
+pub struct TopicPublisher {
+    topic: Arc<TopicInner>,
+    done: bool,
+}
+
+impl TopicPublisher {
+    /// Publish one buffer. Blocks while any subscriber queue is
+    /// saturated (backpressure); returns `Ok(false)` when nobody is
+    /// subscribed (the buffer is dropped and counted, pub/sub style).
+    pub fn push(&self, buf: Buffer) -> Result<bool> {
+        if self.done {
+            return Err(Error::Runtime(format!(
+                "topic {:?}: publisher already ended",
+                self.topic.name()
+            )));
+        }
+        self.topic.publish_blocking(buf)
+    }
+
+    /// Subscribers currently attached.
+    pub fn subscriber_count(&self) -> usize {
+        self.topic.subscriber_count()
+    }
+
+    /// Announce caps for late subscriber elements with no explicit
+    /// `caps=` configuration.
+    pub fn advertise(&self, caps: &Caps) {
+        self.topic.advertise_caps(caps);
+    }
+
+    /// End this publisher's stream; the topic reaches end-of-stream once
+    /// every publisher ended (also implied by dropping the handle).
+    pub fn end(&mut self) {
+        if !self.done {
+            self.done = true;
+            self.topic.publisher_done();
+        }
+    }
+}
+
+impl Drop for TopicPublisher {
+    fn drop(&mut self) {
+        self.end();
+    }
+}
+
+/// Application-side subscriber on a named topic (from
+/// [`PipelineHub::subscribe`](crate::pipeline::PipelineHub::subscribe)).
+/// Mirrors the `AppSinkReceiver` surface: `recv` blocks until the next
+/// buffer and errors once the topic reached end-of-stream (or the hub
+/// closed the handle via `request_stop_all`), so drain loops terminate.
+pub struct TopicSubscriber {
+    topic: Arc<TopicInner>,
+    ep: Arc<Endpoint>,
+}
+
+impl TopicSubscriber {
+    /// Block until the next buffer; errors once the stream ended and the
+    /// queue drained.
+    pub fn recv(&self) -> std::result::Result<Buffer, RecvError> {
+        self.ep.pop_blocking().ok_or(RecvError)
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<Buffer, TryRecvError> {
+        match self.ep.try_pop() {
+            EpPop::Item(b) => Ok(b),
+            EpPop::Empty => Err(TryRecvError::Empty),
+            EpPop::End => Err(TryRecvError::Disconnected),
+        }
+    }
+
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Buffer, RecvTimeoutError> {
+        match self.ep.pop_timeout(timeout) {
+            EpPop::Item(b) => Ok(b),
+            EpPop::Empty => Err(RecvTimeoutError::Timeout),
+            EpPop::End => Err(RecvTimeoutError::Disconnected),
+        }
+    }
+
+    /// Drain iterator; terminates at topic end-of-stream.
+    pub fn iter(&self) -> impl Iterator<Item = Buffer> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+
+    /// Name of the subscribed topic.
+    pub fn topic(&self) -> &str {
+        self.topic.name()
+    }
+
+    /// A weak closer the hub keeps so `request_stop_all` can terminate
+    /// application drain loops over this handle.
+    pub(crate) fn close_handle(&self) -> SubscriberClose {
+        SubscriberClose {
+            topic: self.topic.clone(),
+            ep: Arc::downgrade(&self.ep),
+        }
+    }
+}
+
+impl Drop for TopicSubscriber {
+    fn drop(&mut self) {
+        self.topic.unsubscribe(&self.ep);
+    }
+}
+
+/// Weak handle that closes one hub-issued topic subscription (kept by
+/// [`PipelineHub`](crate::pipeline::PipelineHub) for `request_stop_all`).
+pub(crate) struct SubscriberClose {
+    topic: Arc<TopicInner>,
+    ep: Weak<Endpoint>,
+}
+
+impl SubscriberClose {
+    pub(crate) fn close(&self) {
+        if let Some(ep) = self.ep.upgrade() {
+            self.topic.unsubscribe(&ep);
+        }
+    }
+
+    /// The subscriber handle this closer targets was already dropped.
+    pub(crate) fn is_dead(&self) -> bool {
+        self.ep.upgrade().is_none()
+    }
+}
+
+struct QueryClientInner {
+    req: TopicPublisher,
+    rep: TopicSubscriber,
+}
+
+/// Request/response handle over a pair of topics — SingleShot over a
+/// *remote* pipeline: push one buffer to the service's request topic,
+/// block for the next buffer on its reply topic. One request is in
+/// flight at a time (requests from multiple threads serialize), and
+/// responses correlate by order, so run exactly one `QueryClient` per
+/// reply topic.
+///
+/// Obtain one from
+/// [`PipelineHub::query_client`](crate::pipeline::PipelineHub::query_client),
+/// [`StreamRegistry::query_client`], or — paired with a
+/// [`QueryService`](crate::runtime::QueryService) — via
+/// [`QueryClient::connect`].
+pub struct QueryClient {
+    inner: Mutex<QueryClientInner>,
+}
+
+impl QueryClient {
+    /// Connect to a [`QueryService`](crate::runtime::QueryService)-style
+    /// topic pair `<topic>/in` → `<topic>/out` in the global registry.
+    pub fn connect(service_topic: &str) -> QueryClient {
+        StreamRegistry::global().query_client(
+            &format!("{service_topic}/in"),
+            &format!("{service_topic}/out"),
+        )
+    }
+
+    /// One request/response round trip. Fails fast when no pipeline is
+    /// serving the request topic, and errors if the service ends before
+    /// replying.
+    pub fn invoke(&self, request: Buffer) -> Result<Buffer> {
+        let g = lock(&self.inner);
+        if g.req.subscriber_count() == 0 {
+            return Err(Error::Runtime(format!(
+                "query: no pipeline is serving topic {:?}",
+                g.req.topic.name()
+            )));
+        }
+        if !g.req.push(request)? {
+            return Err(Error::Runtime(format!(
+                "query: service left topic {:?} before the request was taken",
+                g.req.topic.name()
+            )));
+        }
+        g.rep.recv().map_err(|_| {
+            Error::Runtime(format!(
+                "query: service on topic {:?} ended before replying",
+                g.req.topic.name()
+            ))
+        })
+    }
+
+    /// [`invoke`](QueryClient::invoke) on raw f32 tensors, mirroring
+    /// [`SingleShot::invoke`](crate::runtime::SingleShot::invoke).
+    pub fn invoke_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let chunks: Vec<crate::tensor::Chunk> = inputs
+            .iter()
+            .map(|d| crate::tensor::Chunk::from_f32(d))
+            .collect();
+        let out = self.invoke(Buffer::new(0, chunks))?;
+        out.chunks.iter().map(|c| c.to_f32_vec()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transport: pluggable delivery behind the endpoint contract
+// ---------------------------------------------------------------------------
+
+/// Outcome of a publisher-port send.
+pub enum PortSend {
+    Sent,
+    /// Nobody subscribed — caller drops (default) or parks
+    /// (`wait-subscribers=`).
+    NoSubscribers(Buffer),
+    /// A subscriber queue is saturated — park until space.
+    Full(Buffer),
+    /// The stream ended.
+    Closed(Buffer),
+}
+
+/// Outcome of a subscriber-port receive.
+pub enum PortRecv {
+    Item(Buffer),
+    Empty,
+    End,
+}
+
+/// Producing side of one topic attachment, as used by
+/// `tensor_query_serversink` and `tensor_query_client`. Dropping the
+/// port without [`finish`](PublisherPort::finish) still detaches
+/// (error-path safety).
+pub trait PublisherPort: Send {
+    /// Announce the caps flowing on the topic.
+    fn advertise(&mut self, caps: &Caps);
+    /// Non-blocking delivery; see [`PortSend`].
+    fn try_send(&mut self, buf: Buffer) -> PortSend;
+    fn subscriber_count(&self) -> usize;
+    /// Register the element task's waker (woken on space/subscribe/EOS).
+    fn add_waker(&mut self, w: &Arc<SharedWaker>);
+    /// Record that the caller discarded a frame
+    /// [`try_send`](PublisherPort::try_send) could not deliver (surfaces
+    /// in the topic's `dropped` counter).
+    fn count_dropped(&mut self);
+    /// This publisher reached end-of-stream (idempotent).
+    fn finish(&mut self);
+}
+
+/// Consuming side of one topic attachment, as used by
+/// `tensor_query_serversrc` and `tensor_query_client`. Dropping the
+/// port detaches the subscription.
+pub trait SubscriberPort: Send {
+    /// Caps advertised by the topic's publisher, if any yet.
+    fn topic_caps(&self) -> Option<Caps>;
+    /// Non-blocking receive; see [`PortRecv`].
+    fn try_recv(&mut self) -> PortRecv;
+    /// Register the element task's waker (woken on data/EOS).
+    fn add_waker(&mut self, w: &Arc<SharedWaker>);
+    /// Detach the subscription (idempotent; implied by drop).
+    fn detach(&mut self);
+}
+
+/// A tensor-query delivery backend. The in-process transport is the
+/// only one today; socket/network backends register under a new name
+/// ([`register_transport`]) and the element API — `transport=` — stays
+/// unchanged.
+pub trait Transport: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Attach a publisher to `topic`.
+    fn advertise(&self, topic: &str) -> Result<Box<dyn PublisherPort>>;
+    /// Attach a bounded subscriber to `topic`.
+    fn attach(&self, topic: &str, capacity: usize) -> Result<Box<dyn SubscriberPort>>;
+}
+
+/// The in-process transport: topics resolve in a [`StreamRegistry`].
+pub struct InProcTransport {
+    registry: StreamRegistry,
+}
+
+impl InProcTransport {
+    pub fn new(registry: StreamRegistry) -> InProcTransport {
+        InProcTransport { registry }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn advertise(&self, topic: &str) -> Result<Box<dyn PublisherPort>> {
+        let t = self.registry.topic(topic);
+        t.attach_publisher();
+        Ok(Box::new(InProcPublisherPort {
+            topic: t,
+            finished: false,
+        }))
+    }
+
+    fn attach(&self, topic: &str, capacity: usize) -> Result<Box<dyn SubscriberPort>> {
+        let t = self.registry.topic(topic);
+        let ep = t.subscribe(Some(capacity));
+        Ok(Box::new(InProcSubscriberPort {
+            topic: t,
+            ep,
+            detached: false,
+        }))
+    }
+}
+
+struct InProcPublisherPort {
+    topic: Arc<TopicInner>,
+    finished: bool,
+}
+
+impl PublisherPort for InProcPublisherPort {
+    fn advertise(&mut self, caps: &Caps) {
+        self.topic.advertise_caps(caps);
+    }
+
+    fn try_send(&mut self, buf: Buffer) -> PortSend {
+        if self.finished {
+            return PortSend::Closed(buf);
+        }
+        match self.topic.try_publish(buf) {
+            TopicPush::Ok => PortSend::Sent,
+            TopicPush::NoSubscribers(b) => PortSend::NoSubscribers(b),
+            TopicPush::Full(b) => PortSend::Full(b),
+            TopicPush::Closed(b) => PortSend::Closed(b),
+        }
+    }
+
+    fn subscriber_count(&self) -> usize {
+        self.topic.subscriber_count()
+    }
+
+    fn add_waker(&mut self, w: &Arc<SharedWaker>) {
+        self.topic.add_publisher_waker(w);
+    }
+
+    fn count_dropped(&mut self) {
+        self.topic.count_dropped();
+    }
+
+    fn finish(&mut self) {
+        if !self.finished {
+            self.finished = true;
+            self.topic.publisher_done();
+        }
+    }
+}
+
+impl Drop for InProcPublisherPort {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+struct InProcSubscriberPort {
+    topic: Arc<TopicInner>,
+    ep: Arc<Endpoint>,
+    detached: bool,
+}
+
+impl SubscriberPort for InProcSubscriberPort {
+    fn topic_caps(&self) -> Option<Caps> {
+        self.topic.caps()
+    }
+
+    fn try_recv(&mut self) -> PortRecv {
+        if self.detached {
+            return PortRecv::End;
+        }
+        match self.ep.try_pop() {
+            EpPop::Item(b) => PortRecv::Item(b),
+            EpPop::Empty => PortRecv::Empty,
+            EpPop::End => PortRecv::End,
+        }
+    }
+
+    fn add_waker(&mut self, w: &Arc<SharedWaker>) {
+        self.ep.add_consumer_waker(w);
+    }
+
+    fn detach(&mut self) {
+        if !self.detached {
+            self.detached = true;
+            self.topic.unsubscribe(&self.ep);
+        }
+    }
+}
+
+impl Drop for InProcSubscriberPort {
+    fn drop(&mut self) {
+        self.detach();
+    }
+}
+
+static TRANSPORTS: Lazy<Mutex<HashMap<String, Arc<dyn Transport>>>> = Lazy::new(|| {
+    let mut m: HashMap<String, Arc<dyn Transport>> = HashMap::new();
+    m.insert(
+        "inproc".to_string(),
+        Arc::new(InProcTransport::new(StreamRegistry::global().clone())),
+    );
+    Mutex::new(m)
+});
+
+/// Register a tensor-query transport backend (plug-in style, mirroring
+/// [`Registry::register`](crate::element::Registry::register)).
+pub fn register_transport(name: &str, transport: Arc<dyn Transport>) {
+    lock(&TRANSPORTS).insert(name.to_string(), transport);
+}
+
+/// Resolve a transport by name; unknown names suggest the nearest
+/// registered one.
+pub fn transport(name: &str) -> Result<Arc<dyn Transport>> {
+    let g = lock(&TRANSPORTS);
+    g.get(name).cloned().ok_or_else(|| {
+        let names = g.keys().map(String::as_str);
+        Error::Runtime(format!(
+            "no such tensor-query transport {name:?}{}",
+            crate::element::registry::did_you_mean(name, names)
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(v: f32) -> Buffer {
+        Buffer::from_f32(0, &[v])
+    }
+
+    #[test]
+    fn endpoint_fifo_and_eos() {
+        let ep = Endpoint::standalone(4);
+        assert!(matches!(ep.try_push(buf(1.0)), EpPush::Ok));
+        assert!(matches!(ep.try_push(buf(2.0)), EpPush::Ok));
+        ep.set_eos();
+        // queued items drain before End
+        match ep.try_pop() {
+            EpPop::Item(b) => assert_eq!(b.chunk().as_f32().unwrap(), &[1.0]),
+            _ => panic!("expected item"),
+        }
+        assert!(matches!(ep.try_pop(), EpPop::Item(_)));
+        assert!(matches!(ep.try_pop(), EpPop::End));
+        // pushes after eos are rejected
+        assert!(matches!(ep.try_push(buf(3.0)), EpPush::Closed(_)));
+    }
+
+    #[test]
+    fn endpoint_full_and_close() {
+        let ep = Endpoint::standalone(1);
+        assert!(matches!(ep.try_push(buf(1.0)), EpPush::Ok));
+        assert!(matches!(ep.try_push(buf(2.0)), EpPush::Full(_)));
+        ep.close();
+        assert!(matches!(ep.try_pop(), EpPop::End));
+        assert!(matches!(ep.try_push(buf(3.0)), EpPush::Closed(_)));
+    }
+
+    #[test]
+    fn topic_fans_out_to_every_subscriber() {
+        let reg = StreamRegistry::new();
+        let s1 = reg.subscribe("t");
+        let s2 = reg.subscribe("t");
+        let mut p = reg.publish("t");
+        assert!(p.push(buf(5.0)).unwrap());
+        assert_eq!(s1.recv().unwrap().chunk().as_f32().unwrap(), &[5.0]);
+        assert_eq!(s2.recv().unwrap().chunk().as_f32().unwrap(), &[5.0]);
+        p.end();
+        assert!(s1.recv().is_err(), "eos closes subscriber 1");
+        assert!(s2.recv().is_err(), "eos closes subscriber 2");
+    }
+
+    #[test]
+    fn publish_without_subscribers_drops() {
+        let reg = StreamRegistry::new();
+        let p = reg.publish("lonely");
+        assert!(!p.push(buf(1.0)).unwrap(), "no subscriber: dropped");
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].dropped, 1);
+        assert_eq!(snap[0].published, 0);
+    }
+
+    #[test]
+    fn late_subscriber_to_ended_topic_sees_end() {
+        let reg = StreamRegistry::new();
+        let mut p = reg.publish("t");
+        p.end();
+        let s = reg.subscribe("t");
+        assert!(s.try_recv().is_err());
+    }
+
+    #[test]
+    fn subscriber_drop_releases_publisher() {
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe_with_capacity("t", 1);
+        let p = reg.publish("t");
+        assert!(p.push(buf(1.0)).unwrap());
+        // queue full now; dropping the subscriber must unblock pushes
+        drop(s);
+        // with no subscribers remaining, pushes drop instead of blocking
+        assert!(!p.push(buf(2.0)).unwrap());
+    }
+
+    #[test]
+    fn app_push_blocks_until_consumer_drains() {
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe_with_capacity("t", 2);
+        let p = reg.publish("t");
+        let producer = std::thread::spawn(move || {
+            for i in 0..8 {
+                assert!(p.push(buf(i as f32)).unwrap());
+            }
+        });
+        let mut got = Vec::new();
+        for b in s.iter().take(8) {
+            got.push(b.chunk().as_f32().unwrap()[0]);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..8).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn transport_lookup_suggests_nearest() {
+        assert!(transport("inproc").is_ok());
+        let err = transport("inprc").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"inproc\"?"), "{err}");
+    }
+
+    #[test]
+    fn registry_snapshot_counts() {
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe("a");
+        let p = reg.publish("a");
+        assert!(p.push(buf(1.0)).unwrap());
+        assert!(p.push(buf(2.0)).unwrap());
+        drop(s);
+        let snap = reg.snapshot();
+        assert_eq!(snap[0].published, 2);
+        assert_eq!(snap[0].delivered, 2);
+        assert_eq!(snap[0].subscribers, 0);
+        assert_eq!(snap[0].publishers, 1);
+    }
+}

@@ -24,7 +24,7 @@ pub mod single;
 
 pub use manifest::{Act, Manifest, ModelSpec};
 pub use pool::{ModelPool, PoolLease, PoolStatsSnapshot};
-pub use single::SingleShot;
+pub use single::{QueryService, SingleShot};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

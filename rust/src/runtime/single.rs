@@ -19,12 +19,28 @@
 use std::sync::{Arc, Mutex};
 
 use crate::elements::filter::{Framework, TensorFilterProps, MAX_BATCH};
+use crate::elements::query::{QueryServerSinkProps, QueryServerSrcProps};
 use crate::elements::sinks::{AppSinkProps, AppSinkReceiver};
 use crate::elements::sources::{AppSrcHandle, AppSrcProps};
 use crate::error::{Error, Result};
 use crate::pipeline::{PipelineBuilder, Running};
 use crate::runtime::{Model, ModelRegistry};
 use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
+
+/// Caps matching a model's input spec (single tensor or tensor list).
+fn input_caps(inputs: &[TensorInfo]) -> Caps {
+    if inputs.len() == 1 {
+        Caps::Tensor {
+            info: inputs[0].clone(),
+            fps_millis: 0,
+        }
+    } else {
+        Caps::Tensors {
+            infos: inputs.to_vec(),
+            fps_millis: 0,
+        }
+    }
+}
 
 enum Engine {
     /// A playing `appsrc ! tensor_filter ! appsink` pipeline.
@@ -53,17 +69,7 @@ impl SingleShot {
     pub fn open(name: &str) -> Result<Self> {
         let reg = ModelRegistry::global()?;
         let spec = reg.load(name)?.spec.clone();
-        let caps = if spec.inputs.len() == 1 {
-            Caps::Tensor {
-                info: spec.inputs[0].clone(),
-                fps_millis: 0,
-            }
-        } else {
-            Caps::Tensors {
-                infos: spec.inputs.clone(),
-                fps_millis: 0,
-            }
-        };
+        let caps = input_caps(&spec.inputs);
 
         let mut b = PipelineBuilder::new();
         b.chain_named("in", AppSrcProps { caps })?
@@ -226,6 +232,119 @@ impl Drop for SingleShot {
     }
 }
 
+/// A model served as a stream-query service — the "SingleShot over a
+/// remote pipeline" side of the among-device API. [`QueryService::serve`]
+/// keeps a `tensor_query_serversrc ! tensor_filter ! tensor_query_serversink`
+/// pipeline playing on topics `<topic>/in` → `<topic>/out`; any number
+/// of *other* pipelines (via the `tensor_query_client` element) or
+/// applications (via
+/// [`QueryClient::connect`](crate::pipeline::QueryClient::connect)) can
+/// then invoke the model
+/// without loading it themselves — on another "device", they only need
+/// the topic name. Like an idle [`SingleShot`], an idle service costs no
+/// thread: all three element tasks park between requests.
+///
+/// ```no_run
+/// use nnstreamer::pipeline::QueryClient;
+/// use nnstreamer::runtime::QueryService;
+///
+/// # fn main() -> nnstreamer::Result<()> {
+/// let service = QueryService::serve("ars_a_opt", "svc/ars")?;
+/// let client = QueryClient::connect("svc/ars");
+/// let window = vec![0.25f32; 128 * 3];
+/// let out = client.invoke_f32(&[&window])?;
+/// println!("activity probabilities: {:?}", out[0]);
+/// service.stop()?;
+/// # Ok(())
+/// # }
+/// ```
+pub struct QueryService {
+    topic: String,
+    running: Mutex<Option<Running>>,
+}
+
+impl QueryService {
+    /// Build and play the serving pipeline for `model` on topics
+    /// `<topic>/in` → `<topic>/out`. The filter is configured exactly
+    /// like [`SingleShot::open`]'s (`batch=MAX_BATCH latency-budget=0`),
+    /// so queued concurrent requests stack into single dispatches with
+    /// bit-identical per-frame results.
+    pub fn serve(model: &str, topic: &str) -> Result<QueryService> {
+        let reg = ModelRegistry::global()?;
+        let spec = reg.load(model)?.spec.clone();
+        let mut b = PipelineBuilder::new();
+        b.chain_named(
+            "in",
+            QueryServerSrcProps {
+                topic: format!("{topic}/in"),
+                caps: input_caps(&spec.inputs),
+                ..Default::default()
+            },
+        )?
+        .chain_named(
+            "model",
+            TensorFilterProps {
+                framework: Framework::Xla,
+                model: model.to_string(),
+                batch: MAX_BATCH,
+                ..Default::default()
+            },
+        )?
+        .chain_named(
+            "out",
+            QueryServerSinkProps {
+                topic: format!("{topic}/out"),
+                ..Default::default()
+            },
+        )?;
+        let mut pipeline = b.build();
+        let running = pipeline.play()?;
+        Ok(QueryService {
+            topic: topic.to_string(),
+            running: Mutex::new(Some(running)),
+        })
+    }
+
+    /// The topic prefix this service answers on.
+    pub fn topic(&self) -> &str {
+        &self.topic
+    }
+
+    /// Is the serving pipeline still running?
+    pub fn is_running(&self) -> bool {
+        self.running
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .is_some_and(|r| !r.is_done())
+    }
+
+    /// Stop the service and join its pipeline (outstanding requests on
+    /// the reply topic observe end-of-stream).
+    pub fn stop(self) -> Result<()> {
+        self.shutdown()
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        let taken = self
+            .running
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Some(r) = taken {
+            r.request_stop();
+            r.wait()?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for QueryService {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +381,31 @@ mod tests {
         let input = vec![0.1f32; 128 * 3];
         let out = s.invoke(&[&input]).unwrap();
         assert_eq!(out[0].len(), 8);
+    }
+
+    #[test]
+    fn query_service_agrees_with_single_shot_bitwise() {
+        use crate::pipeline::QueryClient;
+
+        let service =
+            QueryService::serve("ars_a_opt", "unit/single-qs").expect("artifacts present");
+        assert!(service.is_running());
+        let client = QueryClient::connect("unit/single-qs");
+        let local = SingleShot::open("ars_a_opt").unwrap();
+        let input: Vec<f32> = (0..128 * 3).map(|i| (i % 31) as f32 / 31.0).collect();
+        let remote_out = client.invoke_f32(&[&input]).unwrap();
+        let local_out = local.invoke(&[&input]).unwrap();
+        assert_eq!(remote_out, local_out, "remote pipeline path is bit-identical");
+        service.stop().unwrap();
+    }
+
+    #[test]
+    fn query_client_without_service_fails_fast() {
+        use crate::pipeline::QueryClient;
+
+        let client = QueryClient::connect("unit/single-no-service");
+        let err = client.invoke_f32(&[&[0.0f32; 4]]).unwrap_err().to_string();
+        assert!(err.contains("no pipeline is serving"), "{err}");
     }
 
     #[test]

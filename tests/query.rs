@@ -1,0 +1,447 @@
+//! Cross-topic (among-device) semantics of the stream-endpoint API:
+//! EOS propagation across a topic link, backpressure without thread
+//! growth, bit-identity of the two-pipeline MTCNN cascade vs. the fused
+//! run, stop/join ordering of chained pipelines, and the query
+//! request/response paths.
+//!
+//! Topic names are prefixed per test: the stream registry is
+//! process-global and tests run concurrently.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use nnstreamer::apps::e3_mtcnn::{self, MtcnnConfig};
+use nnstreamer::elements::query::{QueryClientProps, QueryServerSrcProps};
+use nnstreamer::elements::sinks::TensorSink;
+use nnstreamer::elements::sources::AppSrcProps;
+use nnstreamer::pipeline::{Pipeline, PipelineBuilder, PipelineHub};
+use nnstreamer::tensor::{Buffer, Caps, DType};
+
+/// Thread count of this process (`/proc/self/status`); None off Linux.
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Collect (pts, payload) from a finished tensor_sink.
+fn collect(p: &mut Pipeline, name: &str) -> Vec<(u64, Vec<u8>)> {
+    let el = p.finished_element(name).expect("sink present");
+    let sink = el
+        .as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .expect("tensor_sink");
+    sink.buffers
+        .iter()
+        .map(|b| (b.pts_ns, b.chunk().as_bytes_unaccounted().to_vec()))
+        .collect()
+}
+
+fn u8_frame_caps(w: usize, h: usize, fps: f64) -> Caps {
+    Caps::tensor(DType::U8, [3, w, h, 1], fps)
+}
+
+// -- EOS propagation across a topic link ------------------------------------
+
+#[test]
+fn eos_propagates_across_topic_link() {
+    let hub = PipelineHub::with_workers(2);
+
+    // subscriber first: its subscription exists once launch() returns,
+    // so the publisher drops nothing
+    let mut back = PipelineBuilder::new();
+    back.chain_named(
+        "in",
+        QueryServerSrcProps {
+            topic: "q/eos".into(),
+            caps: u8_frame_caps(16, 16, 240.0),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain_named("out", nnstreamer::elements::sinks::TensorSinkProps::default())
+    .unwrap();
+    hub.launch("back", back.build()).unwrap();
+
+    let front = Pipeline::parse(
+        "videotestsrc num-buffers=5 pattern=gradient ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+         tensor_converter ! tensor_query_serversink topic=q/eos",
+    )
+    .unwrap();
+    hub.launch("front", front).unwrap();
+
+    // join_all returning proves EOS crossed the topic: the back pipeline
+    // can only finish when its serversrc observed end-of-stream
+    let mut frames = 0;
+    for j in hub.join_all() {
+        let report = j.report.expect("pipeline succeeded");
+        if j.name == "back" {
+            frames = report.element("out").unwrap().buffers_in();
+            let topic = report.topic("q/eos").expect("topic counters in report");
+            assert_eq!(topic.published, 5);
+            assert_eq!(topic.dropped, 0);
+            assert!(topic.eos, "topic reached end-of-stream");
+        }
+    }
+    assert_eq!(frames, 5, "every frame crossed the topic before EOS");
+}
+
+// -- backpressure: slow subscriber parks the publisher, no thread growth ----
+
+#[test]
+fn slow_subscriber_backpressures_publisher_without_thread_growth() {
+    let hub = PipelineHub::with_workers(2);
+    let baseline = process_threads();
+
+    // tiny subscriber queue: the publisher saturates after 3 frames
+    let sub = hub.subscribe_with_capacity("q/bp", 3);
+    let front = Pipeline::parse(
+        "videotestsrc num-buffers=24 pattern=gradient ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=2400 ! \
+         tensor_converter ! tensor_query_serversink name=pub topic=q/bp",
+    )
+    .unwrap();
+    hub.launch("front", front).unwrap();
+
+    // drain slowly; the publisher must park (not spin, not grow threads)
+    let mut got = 0u64;
+    let mut during = None;
+    for _ in sub.iter() {
+        got += 1;
+        if got == 8 {
+            during = process_threads();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(got, 24, "backpressure delivered every frame");
+
+    let joined = hub.join_all();
+    let report = joined[0].report.as_ref().expect("front succeeded");
+    assert_eq!(report.element("pub").unwrap().buffers_in(), 24);
+    // the serversink parked at least once on the saturated topic
+    assert!(
+        report.element("pub").unwrap().parks_input() > 0,
+        "publisher parked while the subscriber lagged"
+    );
+    // +8 slack: sibling tests in this binary run concurrently and spawn
+    // their own bounded pools; the strict single-process assertion lives
+    // in benches/e8_query.rs. What matters here: nothing per-frame.
+    if let (Some(before), Some(mid)) = (baseline, during) {
+        assert!(
+            mid <= before + 8,
+            "a saturated topic must not grow threads (before={before}, during={mid})"
+        );
+    }
+}
+
+// -- two-pipeline MTCNN cascade vs. fused run -------------------------------
+
+#[test]
+fn mtcnn_split_is_bit_identical_to_fused() {
+    let cfg = MtcnnConfig {
+        num_frames: 3,
+        src_w: 480,
+        src_h: 270,
+        fps: 1000.0,
+        ..Default::default()
+    };
+    let fused = e3_mtcnn::run_collect(&cfg).unwrap();
+    assert_eq!(fused.len(), 3);
+
+    let baseline = process_threads();
+    let split = e3_mtcnn::run_split(&cfg, "q/mtcnn", 4).unwrap();
+    assert_eq!(
+        split.sink, fused,
+        "two hub pipelines joined by topics must reproduce the fused output bitwise"
+    );
+    // total thread count stays O(workers), not O(elements): the split
+    // cascade has ~40 element tasks but only its 4-worker pool ran them
+    // (+8 slack for concurrently-running sibling tests' pools; the
+    // strict single-process assertion lives in benches/e8_query.rs)
+    if let (Some(before), Some(after)) = (baseline, process_threads()) {
+        assert!(
+            after <= before + 4 + 8,
+            "split run grew threads beyond its pool (before={before}, after={after})"
+        );
+    }
+    // topic accounting: one frames buffer and one boxes buffer per frame
+    let frames_topic = split.back.topic("q/mtcnn/frames").unwrap();
+    assert_eq!(frames_topic.published, 3);
+    assert_eq!(frames_topic.dropped, 0);
+    let boxes_topic = split.back.topic("q/mtcnn/boxes").unwrap();
+    assert_eq!(boxes_topic.published, 3);
+    assert_eq!(boxes_topic.dropped, 0);
+}
+
+// -- stop/join ordering of chained pipelines --------------------------------
+
+#[test]
+fn stop_all_unwinds_chained_pipelines_and_app_drain_loops() {
+    let hub = PipelineHub::with_workers(2);
+
+    // chain: A --(q/chain1)--> B --(q/chain2)--> app subscriber.
+    // Launch downstream-first so every subscription exists before data.
+    let tap = hub.subscribe("q/chain2");
+    let mut mid = PipelineBuilder::new();
+    mid.chain_named(
+        "in",
+        QueryServerSrcProps {
+            topic: "q/chain1".into(),
+            caps: u8_frame_caps(8, 8, 2400.0),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain_named(
+        "out",
+        nnstreamer::elements::query::QueryServerSinkProps {
+            topic: "q/chain2".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    hub.launch("mid", mid.build()).unwrap();
+
+    // unbounded source: only request_stop_all ends this pipeline
+    let front = Pipeline::parse(
+        "videotestsrc pattern=gradient ! \
+         video/x-raw,format=RGB,width=8,height=8,framerate=2400 ! \
+         tensor_converter ! tensor_query_serversink topic=q/chain1",
+    )
+    .unwrap();
+    hub.launch("front", front).unwrap();
+
+    // app drain loop on the chain's end, in a thread
+    let seen = Arc::new(AtomicU64::new(0));
+    let seen2 = seen.clone();
+    let drain = std::thread::spawn(move || {
+        for _ in tap.iter() {
+            seen2.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+
+    // let some frames flow through the whole chain first
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    while seen.load(Ordering::Relaxed) < 16 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "chain never delivered frames"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    hub.request_stop_all();
+    // both pipelines unwind: front's source observes the stop, EOS
+    // crosses q/chain1, mid finishes, EOS crosses q/chain2
+    for j in hub.join_all() {
+        j.report.unwrap_or_else(|e| panic!("{} failed: {e}", j.name));
+    }
+    // and the app drain loop terminates (stop_all closed the handle
+    // even if EOS had been lost)
+    drain.join().expect("drain loop terminated");
+    assert!(seen.load(Ordering::Relaxed) >= 16);
+}
+
+// -- hub.publish → pipeline (app as producer) -------------------------------
+
+#[test]
+fn hub_publish_feeds_a_subscribed_pipeline() {
+    let hub = PipelineHub::with_workers(2);
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "in",
+        QueryServerSrcProps {
+            topic: "q/apppub".into(),
+            caps: Caps::tensor(DType::F32, [3], 0.0),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain_named("out", nnstreamer::elements::sinks::TensorSinkProps::default())
+    .unwrap();
+    hub.launch("p", b.build()).unwrap();
+
+    let mut publisher = hub.publish("q/apppub");
+    assert_eq!(publisher.subscriber_count(), 1);
+    for i in 0..4 {
+        let delivered = publisher
+            .push(Buffer::from_f32(i, &[i as f32, 1.0, 2.0]))
+            .unwrap();
+        assert!(delivered, "pipeline subscriber attached: nothing drops");
+    }
+    publisher.end();
+
+    let mut joined = hub.join_all();
+    let j = joined.pop().unwrap();
+    j.report.expect("pipeline succeeded");
+    let mut pipeline = j.pipeline;
+    let got = collect(&mut pipeline, "out");
+    assert_eq!(got.len(), 4);
+    for (i, (pts, _)) in got.iter().enumerate() {
+        assert_eq!(*pts, i as u64);
+    }
+}
+
+// -- wait-subscribers: publisher parks until the consumer pipeline exists ---
+
+#[test]
+fn wait_subscribers_holds_frames_for_a_late_subscriber() {
+    let hub = PipelineHub::with_workers(2);
+    // publisher first, with wait-subscribers=1: frames park, not drop
+    let front = Pipeline::parse(
+        "videotestsrc num-buffers=6 pattern=gradient ! \
+         video/x-raw,format=RGB,width=8,height=8,framerate=2400 ! \
+         tensor_converter ! \
+         tensor_query_serversink topic=q/wait wait-subscribers=1",
+    )
+    .unwrap();
+    hub.launch("front", front).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+
+    let mut back = PipelineBuilder::new();
+    back.chain_named(
+        "in",
+        QueryServerSrcProps {
+            topic: "q/wait".into(),
+            caps: u8_frame_caps(8, 8, 2400.0),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain_named("out", nnstreamer::elements::sinks::TensorSinkProps::default())
+    .unwrap();
+    hub.launch("back", back.build()).unwrap();
+
+    for j in hub.join_all() {
+        let report = j.report.expect("pipeline succeeded");
+        if j.name == "back" {
+            assert_eq!(
+                report.element("out").unwrap().buffers_in(),
+                6,
+                "no frame was dropped while the subscriber was missing"
+            );
+        }
+    }
+}
+
+// -- tensor_query_client element: request/response through a service --------
+
+#[test]
+fn query_client_element_round_trips_through_a_service() {
+    use nnstreamer::elements::transform::{ArithOp, TensorTransformProps};
+
+    let hub = PipelineHub::with_workers(2);
+
+    // service: +1 on every sample
+    let mut svc = PipelineBuilder::new();
+    svc.chain_named(
+        "in",
+        QueryServerSrcProps {
+            topic: "q/svc/in".into(),
+            caps: Caps::tensor(DType::F32, [4], 0.0),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain(TensorTransformProps::arithmetic(vec![(ArithOp::Add, 1.0)]))
+    .unwrap()
+    .chain_named(
+        "out",
+        nnstreamer::elements::query::QueryServerSinkProps {
+            topic: "q/svc/out".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    hub.launch("service", svc.build()).unwrap();
+
+    // client pipeline: appsrc ! tensor_query_client ! tensor_sink
+    let mut cli = PipelineBuilder::new();
+    cli.chain_named(
+        "in",
+        AppSrcProps {
+            caps: Caps::tensor(DType::F32, [4], 0.0),
+        },
+    )
+    .unwrap()
+    .chain_named(
+        "bridge",
+        QueryClientProps {
+            topic: "q/svc/in".into(),
+            reply: "q/svc/out".into(),
+            caps: Caps::tensor(DType::F32, [4], 0.0),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain_named("out", nnstreamer::elements::sinks::TensorSinkProps::default())
+    .unwrap();
+    let mut client = cli.build();
+    let push = client.appsrc("in").unwrap();
+    hub.launch("client", client).unwrap();
+
+    for i in 0..3 {
+        push.push(Buffer::from_f32(i, &[i as f32, 0.0, 0.0, 0.0]))
+            .unwrap();
+    }
+    push.end();
+
+    let mut outputs = Vec::new();
+    for j in hub.join_all() {
+        j.report.unwrap_or_else(|e| panic!("{} failed: {e}", j.name));
+        let mut pipeline = j.pipeline;
+        if j.name == "client" {
+            outputs = collect(&mut pipeline, "out");
+        }
+    }
+    assert_eq!(outputs.len(), 3, "one reply per request");
+    for (i, (_, bytes)) in outputs.iter().enumerate() {
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(vals, vec![i as f32 + 1.0, 1.0, 1.0, 1.0]);
+    }
+}
+
+// -- appsrc/appsink keep their behavior atop the endpoint layer -------------
+
+#[test]
+fn appsrc_appsink_roundtrip_still_works_over_endpoints() {
+    let mut b = PipelineBuilder::new();
+    b.chain_named(
+        "in",
+        AppSrcProps {
+            caps: Caps::tensor(DType::F32, [2], 0.0),
+        },
+    )
+    .unwrap()
+    .chain_named(
+        "out",
+        nnstreamer::elements::sinks::AppSinkProps::default(),
+    )
+    .unwrap();
+    let mut pipeline = b.build();
+    let push = pipeline.appsrc("in").unwrap();
+    let frames = pipeline.appsink("out").unwrap();
+    let running = pipeline.play().unwrap();
+
+    push.push(Buffer::from_f32(7, &[1.0, 2.0])).unwrap();
+    let got = frames.recv().unwrap();
+    assert_eq!(got.pts_ns, 7);
+    assert_eq!(got.chunk().as_f32().unwrap(), &[1.0, 2.0]);
+
+    push.end();
+    running.wait().unwrap();
+    // channel closed at EOS: the drain loop terminates
+    assert!(frames.recv().is_err());
+    // pushes after end fail instead of silently queueing
+    assert!(push.push(Buffer::from_f32(8, &[3.0, 4.0])).is_err());
+}
