@@ -19,6 +19,7 @@ bench:
 	cargo bench --bench e6_memory
 	cargo bench --bench e7_concurrency
 	cargo bench --bench e8_query
+	cargo bench --bench e9_serving
 
 # Quick perf gate: compiles every bench, runs the E6 memory bench with a
 # short frame budget (records artifacts/BENCH_e6_memory.json; asserts
@@ -26,12 +27,15 @@ bench:
 # concurrency bench (64 pipelines on a 4-worker hub; asserts O(workers)
 # threads and sink output bit-identical to a serialized run), then the
 # E8 stream-endpoint bench (topic-linked split of the E1 chain; asserts
-# bit-identical sink output and bounded threads).
+# bit-identical sink output and bounded threads), then the E9 serving
+# bench (QoS isolation: a leaky-tenant flood plus a SingleShot storm
+# must not move a blocking victim's p99 latency).
 bench-smoke:
 	cargo bench --no-run
 	cargo bench --bench e6_memory -- --frames 64 --record
 	cargo bench --bench e7_concurrency -- --frames 8
 	cargo bench --bench e8_query -- --frames 24
+	cargo bench --bench e9_serving -- --frames 48
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts

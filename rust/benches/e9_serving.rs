@@ -1,0 +1,277 @@
+//! **E9 — multi-tenant serving: QoS isolation under flood.**
+//!
+//! One 4-worker [`PipelineHub`] serves latency-sensitive *victim*
+//! pipelines (live sources publishing through `qos=blocking` topics,
+//! [`Priority::High`]) while a hostile tenant floods it: a non-live
+//! source publishing as fast as the pool allows into a tiny **leaky**
+//! subscriber that is never drained ([`Priority::Low`]), plus a storm of
+//! short-lived SingleShot tenants admitted through hub invoke tickets.
+//!
+//! Asserts that
+//! * the flooded leaky tenant's drops are charged to its own typed
+//!   counters (`drops.qos_leaky`) and never gate the victims,
+//! * victim p99 end-to-end latency moves by **< 20%** (plus a small
+//!   absolute slack absorbing µs-scale bucket jitter) between the
+//!   unloaded and flooded phases,
+//! * total threads stay **O(workers)**, never O(tenants),
+//! * every pipeline and topic report carries latency percentiles.
+//!
+//! ```bash
+//! cargo bench --bench e9_serving             # quick
+//! cargo bench --bench e9_serving -- --full   # longer phases, more tenants
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use nnstreamer::pipeline::{Pipeline, PipelineHub, Priority, Qos, TenantQuota};
+use nnstreamer::runtime::SingleShot;
+
+const WORKERS: usize = 4;
+const VICTIMS: usize = 2;
+const SHOT_THREADS: usize = 4;
+
+/// Latency-sensitive serving pipeline: live camera at 60 fps publishing
+/// tensors through a blocking topic (every frame must arrive).
+fn victim_desc(tag: &str, i: usize, frames: u64) -> String {
+    format!(
+        "videotestsrc pattern=gradient num-buffers={frames} is-live=true ! \
+         video/x-raw,format=RGB,width=32,height=32,framerate=60 ! \
+         tensor_converter ! tensor_query_serversink topic=e9/{tag}/v{i} qos=blocking"
+    )
+}
+
+/// Hostile tenant: non-live source producing as fast as the pool allows
+/// into a leaky topic (its subscriber is tiny and never drained).
+fn flood_desc(tag: &str) -> String {
+    format!(
+        "videotestsrc pattern=ball is-live=false ! \
+         video/x-raw,format=RGB,width=64,height=64,framerate=2400 ! \
+         tensor_converter ! tensor_query_serversink topic=e9/{tag}/flood qos=leaky"
+    )
+}
+
+struct PhaseOut {
+    victim_p99: Vec<Duration>,
+    victim_p50: Vec<Duration>,
+    flood_leaky_drops: u64,
+    shots_done: u64,
+    shots_denied: u64,
+}
+
+fn run_phase(tag: &str, frames: u64, flood: bool, shots: bool) -> PhaseOut {
+    let start_threads = harness::process_threads();
+    let hub = Arc::new(PipelineHub::with_workers(WORKERS));
+
+    // victim consumers drain promptly (the app side of the service)
+    let mut drains = Vec::new();
+    for i in 0..VICTIMS {
+        let sub = hub.subscribe_with_capacity(&format!("e9/{tag}/v{i}"), 32);
+        drains.push(std::thread::spawn(move || {
+            let mut n = 0u64;
+            while sub.recv().is_ok() {
+                n += 1;
+            }
+            n
+        }));
+    }
+    for i in 0..VICTIMS {
+        let p = Pipeline::parse(&victim_desc(tag, i, frames)).unwrap();
+        hub.launch_as_with_priority(
+            format!("victim-{i}"),
+            format!("v{i}"),
+            p,
+            Priority::High,
+        )
+        .unwrap();
+    }
+
+    // the flood tenant: budgeted tiny leaky subscription, never drained
+    let flood_topic = format!("e9/{tag}/flood");
+    let _flood_sub = if flood {
+        hub.set_quota(
+            "flood",
+            TenantQuota {
+                max_topic_buffers: 4,
+                ..Default::default()
+            },
+        );
+        let sub = hub
+            .subscribe_as("flood", &flood_topic, 4, Qos::Leaky)
+            .expect("within budget");
+        let p = Pipeline::parse(&flood_desc(tag)).unwrap();
+        hub.launch_as_with_priority("flood", "flooder", p, Priority::Low)
+            .unwrap();
+        Some(sub)
+    } else {
+        None
+    };
+
+    // short-lived SingleShot tenants, admitted through invoke tickets
+    let stop = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicU64::new(0));
+    let denied = Arc::new(AtomicU64::new(0));
+    let mut shooters = Vec::new();
+    if shots {
+        hub.set_quota(
+            "shots",
+            TenantQuota {
+                max_queued_invokes: 64,
+                ..Default::default()
+            },
+        );
+        for t in 0..SHOT_THREADS {
+            let (hub, stop, done, denied) =
+                (hub.clone(), stop.clone(), done.clone(), denied.clone());
+            shooters.push(std::thread::spawn(move || {
+                let input: Vec<f32> =
+                    (0..128 * 3).map(|i| ((i + t) % 23) as f32 / 23.0).collect();
+                while !stop.load(Ordering::Relaxed) {
+                    match hub.try_admit_invoke("shots") {
+                        Ok(_ticket) => {
+                            let s = SingleShot::open("ars_a_opt").unwrap();
+                            s.invoke(&[&input]).unwrap();
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            denied.fetch_add(1, Ordering::Relaxed);
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }));
+        }
+    }
+
+    // mid-phase bounded-thread check: hub workers plus our own app
+    // threads (drains + shooters), never a thread per tenant or per
+    // pipeline element
+    if let (Some(start), Some(during)) = (start_threads, harness::process_threads()) {
+        let added = during.saturating_sub(start);
+        assert!(
+            added <= WORKERS + VICTIMS + SHOT_THREADS + 4,
+            "threads must stay O(workers) mid-phase, got +{added}"
+        );
+    }
+
+    // victims end on their own frame budget; their drains follow
+    let mut delivered = 0u64;
+    for d in drains {
+        delivered += d.join().unwrap();
+    }
+    assert_eq!(
+        delivered,
+        frames * VICTIMS as u64,
+        "blocking qos delivered every victim frame"
+    );
+    stop.store(true, Ordering::Relaxed);
+    for s in shooters {
+        s.join().unwrap();
+    }
+    // the flooder never ends on its own: stop under full load and join
+    hub.request_stop_all();
+
+    let mut out = PhaseOut {
+        victim_p99: vec![Duration::ZERO; VICTIMS],
+        victim_p50: vec![Duration::ZERO; VICTIMS],
+        flood_leaky_drops: 0,
+        shots_done: done.load(Ordering::Relaxed),
+        shots_denied: denied.load(Ordering::Relaxed),
+    };
+    for j in hub.join_all() {
+        let report = j.report.expect("pipeline succeeded");
+        if let Some(i) = j.name.strip_prefix('v').and_then(|s| s.parse::<usize>().ok())
+        {
+            assert_eq!(
+                report.latency.count, frames,
+                "{}: one e2e latency sample per frame",
+                j.name
+            );
+            out.victim_p50[i] = report.latency.p50;
+            out.victim_p99[i] = report.latency.p99;
+            // every victim topic carries queue-wait percentiles too
+            let t = report
+                .topics
+                .iter()
+                .find(|t| t.name == format!("e9/{tag}/v{i}"))
+                .expect("victim topic snapshot");
+            assert_eq!(t.latency.count, frames);
+            assert_eq!(t.delivered, frames);
+        }
+        if j.name == "flooder" {
+            let t = report
+                .topics
+                .iter()
+                .find(|t| t.name == flood_topic)
+                .expect("flood topic snapshot");
+            out.flood_leaky_drops = t.drops.qos_leaky;
+            // conservation holds even for the abused tenant
+            assert_eq!(t.pushed, t.delivered + t.dropped + t.in_flight);
+        }
+    }
+    out
+}
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    // frames per victim at 60 fps — quick ≈ 0.8 s per phase
+    let frames = args.frames_or(48, 300);
+
+    harness::warm_models(&["ars_a_opt"]);
+    // warm the global executor so the thread baseline is steady
+    {
+        let s = SingleShot::open("ars_a_opt").expect("artifacts present");
+        s.invoke(&[&vec![0.1f32; 128 * 3]]).unwrap();
+    }
+    let baseline_threads = harness::process_threads();
+
+    println!("E9: {VICTIMS} victims x {frames} live frames @60fps on {WORKERS} workers");
+    let a = run_phase("base", frames, false, false);
+    let b = run_phase("flood", frames, true, true);
+
+    // bounded threads across both phases (hub pools are joined/dropped;
+    // allow one hub width plus our app threads for teardown lag)
+    if let (Some(before), Some(after)) = (baseline_threads, harness::process_threads())
+    {
+        let added = after.saturating_sub(before);
+        assert!(
+            added <= WORKERS + VICTIMS + SHOT_THREADS + 2,
+            "expected O(workers) threads, got +{added}"
+        );
+    }
+
+    assert!(
+        b.flood_leaky_drops > 0,
+        "the flooded leaky tenant must have shed frames"
+    );
+    assert!(b.shots_done > 0, "SingleShot tenants ran during the flood");
+
+    for i in 0..VICTIMS {
+        let (pa, pb) = (a.victim_p99[i], b.victim_p99[i]);
+        // isolation criterion: < 20% p99 movement; the absolute 2 ms
+        // slack absorbs µs-scale histogram-bucket jitter when the
+        // unloaded p99 is itself only microseconds
+        let bound = pa.mul_f64(1.2).max(pa + Duration::from_millis(2));
+        println!(
+            "  victim-{i}: p50 {:?} -> {:?}, p99 {:?} -> {:?} (bound {:?})",
+            a.victim_p50[i], b.victim_p50[i], pa, pb, bound
+        );
+        assert!(
+            pb <= bound,
+            "victim-{i} p99 moved {pa:?} -> {pb:?} under flood (bound {bound:?})"
+        );
+    }
+    println!(
+        "  flood tenant: {} leaky drops (charged to the flooder, not the victims)",
+        b.flood_leaky_drops
+    );
+    println!(
+        "  singleshot tenants: {} served, {} admission-denied (quota 64 in flight)",
+        b.shots_done, b.shots_denied
+    );
+    println!("e9_serving: OK (isolated p99, typed drops, bounded threads)");
+}

@@ -190,13 +190,39 @@ pub struct Ctx {
     /// Inboxes this step's blocking pushes filled to capacity; the
     /// executor parks the task on them after the step.
     pub(crate) saturated: Vec<Arc<Inbox>>,
+    /// Deadline budget of this pipeline in ns (0 = disabled). A buffer
+    /// whose pts lies more than this budget in the past is *late*: it
+    /// is shed at the next link crossing or step gate instead of
+    /// consuming further compute (see [`Ctx::past_deadline`]).
+    pub(crate) deadline_ns: u64,
 }
 
 impl Ctx {
+    /// Is `buf` past this pipeline's deadline budget? Always false when
+    /// no deadline is configured (`deadline_ns == 0`), so
+    /// correctness-mode pipelines take the exact pre-QoS path. Lateness
+    /// is pts-relative: elements preserve `pts_ns` when deriving
+    /// buffers, so the budget covers the whole chain from source stamp
+    /// to sink without any per-hop re-stamping.
+    pub(crate) fn past_deadline(&self, buf: &Buffer) -> bool {
+        if self.deadline_ns == 0 {
+            return false;
+        }
+        let now = Instant::now().duration_since(self.epoch).as_nanos() as u64;
+        now > buf.pts_ns.saturating_add(self.deadline_ns)
+    }
+
     /// Push a buffer out of src pad `pad`. Never blocks: filling a
     /// bounded downstream link to capacity parks this element's task
     /// after the current step (backpressure without holding a worker).
+    /// With a deadline budget configured, a late buffer is shed here —
+    /// at the link crossing — and charged to this element's `shed`
+    /// counter instead of filling downstream queues with dead frames.
     pub fn push(&mut self, pad: usize, buf: Buffer) -> Result<()> {
+        if self.past_deadline(&buf) {
+            self.stats.record_shed();
+            return Ok(());
+        }
         let bytes = buf.size();
         let Some(sender) = self.outputs.get(pad).and_then(Option::as_ref) else {
             // unlinked src pad: buffer is discarded (like an unlinked tee pad)
@@ -226,11 +252,16 @@ impl Ctx {
 
     /// Record an arrival pulled from the input channel. Items replayed
     /// from the push-back queue are *not* re-recorded, so every buffer is
-    /// counted exactly once however it reaches the element.
+    /// counted exactly once however it reaches the element. Terminal
+    /// elements (no src pads) additionally record the end-to-end frame
+    /// latency (arrival − pts) into the pipeline's percentile histogram.
     fn record_arrival(&self, item: &(usize, Item)) {
-        if matches!(item.1, Item::Buffer(_)) {
+        if let Item::Buffer(buf) = &item.1 {
             let at = Instant::now().duration_since(self.epoch).as_nanos() as u64;
             self.stats.record_in_at(at);
+            if self.outputs.is_empty() {
+                self.stats.record_e2e_latency_ns(at.saturating_sub(buf.pts_ns));
+            }
         }
     }
 
@@ -525,6 +556,7 @@ pub(crate) mod testutil {
             control: None,
             waker: None,
             saturated: Vec::new(),
+            deadline_ns: 0,
         };
         (ctx, pads)
     }

@@ -45,7 +45,8 @@ use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
 use crate::error::{Error, Result};
 use crate::pipeline::executor::SharedWaker;
 use crate::pipeline::stream::{
-    transport, PortRecv, PortSend, PublisherPort, SubscriberPort, DEFAULT_ENDPOINT_CAPACITY,
+    transport, PortRecv, PortSend, PublisherPort, Qos, SubscriberPort,
+    DEFAULT_ENDPOINT_CAPACITY,
 };
 use crate::tensor::Caps;
 
@@ -62,6 +63,12 @@ pub struct QueryServerSinkProps {
     /// dropping frames while nobody listens (`wait-subscribers`,
     /// default 0 = pub/sub drop semantics).
     pub wait_subscribers: usize,
+    /// Publisher-side QoS (`qos`, default `blocking`): `leaky` or
+    /// `latest-only` makes this element shed on saturated subscriber
+    /// queues instead of parking — one slow subscriber can no longer
+    /// stall the serving pipeline. Drops are typed and counted on the
+    /// topic (`drops.qos_leaky` / `drops.qos_latest`).
+    pub qos: Qos,
 }
 
 impl Default for QueryServerSinkProps {
@@ -70,19 +77,21 @@ impl Default for QueryServerSinkProps {
             topic: String::new(),
             transport: "inproc".to_string(),
             wait_subscribers: 0,
+            qos: Qos::Blocking,
         }
     }
 }
 
 impl Props for QueryServerSinkProps {
     const FACTORY: &'static str = "tensor_query_serversink";
-    const KEYS: &'static [&'static str] = &["topic", "transport", "wait-subscribers"];
+    const KEYS: &'static [&'static str] = &["topic", "transport", "wait-subscribers", "qos"];
 
     fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "topic" => self.topic = value.to_string(),
             "transport" => self.transport = value.to_string(),
             "wait-subscribers" => self.wait_subscribers = parse_usize(key, value)?,
+            "qos" => self.qos = Qos::parse(value)?,
             _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
         }
         Ok(())
@@ -149,7 +158,8 @@ impl Element for TensorQueryServerSink {
         }
         // idempotent: negotiate may run again on an already-built graph
         if self.port.is_none() {
-            let mut port = transport(&self.props.transport)?.advertise(&self.props.topic)?;
+            let mut port =
+                transport(&self.props.transport)?.advertise(&self.props.topic, self.props.qos)?;
             port.add_waker(&self.wake);
             port.advertise(&in_caps[0]);
             self.port = Some(port);
@@ -231,6 +241,10 @@ pub struct QueryServerSrcProps {
     /// Bound of this subscriber's queue (`max-buffers`): a slow consumer
     /// exerts backpressure on the publisher once it fills.
     pub max_buffers: usize,
+    /// Subscription QoS (`qos`, default `blocking`): with `leaky` or
+    /// `latest-only`, this consumer sheds instead of backpressuring the
+    /// topic's publishers when its queue fills.
+    pub qos: Qos,
 }
 
 impl Default for QueryServerSrcProps {
@@ -240,13 +254,14 @@ impl Default for QueryServerSrcProps {
             transport: "inproc".to_string(),
             caps: Caps::Any,
             max_buffers: DEFAULT_ENDPOINT_CAPACITY,
+            qos: Qos::Blocking,
         }
     }
 }
 
 impl Props for QueryServerSrcProps {
     const FACTORY: &'static str = "tensor_query_serversrc";
-    const KEYS: &'static [&'static str] = &["topic", "transport", "caps", "max-buffers"];
+    const KEYS: &'static [&'static str] = &["topic", "transport", "caps", "max-buffers", "qos"];
 
     fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
@@ -254,6 +269,7 @@ impl Props for QueryServerSrcProps {
             "transport" => self.transport = value.to_string(),
             "caps" => self.caps = Caps::parse(value)?,
             "max-buffers" => self.max_buffers = parse_usize(key, value)?.max(1),
+            "qos" => self.qos = Qos::parse(value)?,
             _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
         }
         Ok(())
@@ -339,8 +355,11 @@ impl Element for TensorQueryServerSrc {
         // subscribe once; the subscription exists from this point on, so
         // a publisher launched afterwards drops nothing
         if self.port.is_none() {
-            let mut port = transport(&self.props.transport)?
-                .attach(&self.props.topic, self.props.max_buffers)?;
+            let mut port = transport(&self.props.transport)?.attach(
+                &self.props.topic,
+                self.props.max_buffers,
+                self.props.qos,
+            )?;
             port.add_waker(&self.wake);
             self.port = Some(port);
         }
@@ -489,10 +508,10 @@ impl Element for TensorQueryClient {
             let t = transport(&self.props.transport)?;
             // subscribe the reply topic *before* attaching the request
             // publisher: no reply can be lost to ordering
-            let mut rep = t.attach(&self.props.reply, self.props.max_buffers)?;
+            let mut rep = t.attach(&self.props.reply, self.props.max_buffers, Qos::Blocking)?;
             rep.add_waker(&self.wake);
             self.rep = Some(rep);
-            let mut req = t.advertise(&self.props.topic)?;
+            let mut req = t.advertise(&self.props.topic, Qos::Blocking)?;
             req.add_waker(&self.wake);
             req.advertise(&in_caps[0]);
             self.req = Some(req);
@@ -577,6 +596,18 @@ mod tests {
         let mut s = QueryServerSinkProps::default();
         s.set("wait-subscribers", "2").unwrap();
         assert_eq!(s.wait_subscribers, 2);
+    }
+
+    #[test]
+    fn qos_property_parses_on_both_server_elements() {
+        let mut s = QueryServerSinkProps::default();
+        s.set("qos", "leaky").unwrap();
+        assert_eq!(s.qos, Qos::Leaky);
+        let mut r = QueryServerSrcProps::default();
+        r.set("qos", "latest-only").unwrap();
+        assert_eq!(r.qos, Qos::LatestOnly);
+        let err = s.set("qos", "bogus").unwrap_err().to_string();
+        assert!(err.contains("blocking | leaky | latest-only"), "{err}");
     }
 
     #[test]

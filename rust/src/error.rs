@@ -46,6 +46,19 @@ pub enum Error {
         capacity: usize,
     },
 
+    /// A tenant request was rejected by the hub's admission control
+    /// (quota exhausted). Admission failures are always typed and
+    /// immediate — a denied tenant gets this error, never a hang.
+    AdmissionDenied {
+        /// Tenant whose quota rejected the request.
+        tenant: String,
+        /// Which quota dimension was exhausted ("live pipelines",
+        /// "queued invokes", "topic buffers").
+        resource: &'static str,
+        /// The configured limit that was reached.
+        limit: usize,
+    },
+
     /// NNFW / model runtime failure (artifact load or execute).
     Runtime(String),
 
@@ -81,6 +94,15 @@ impl std::fmt::Display for Error {
                 f,
                 "control backpressure: mailbox of element {element:?} is full \
                  ({capacity} pending messages); the element is not consuming input"
+            ),
+            Error::AdmissionDenied {
+                tenant,
+                resource,
+                limit,
+            } => write!(
+                f,
+                "admission denied for tenant {tenant:?}: {resource} quota \
+                 exhausted (limit {limit})"
             ),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
@@ -153,6 +175,16 @@ mod tests {
         assert_eq!(
             Error::element("queue", "boom").to_string(),
             "element queue: boom"
+        );
+        assert_eq!(
+            Error::AdmissionDenied {
+                tenant: "acme".into(),
+                resource: "live pipelines",
+                limit: 2,
+            }
+            .to_string(),
+            "admission denied for tenant \"acme\": live pipelines quota \
+             exhausted (limit 2)"
         );
     }
 

@@ -16,6 +16,111 @@ pub enum Domain {
     Npu,
 }
 
+/// Number of buckets in the fixed-bucket latency histograms.
+///
+/// Bucket `i` counts samples with `ns < 1 << (10 + i)`: bucket 0 is
+/// everything under ~1 µs, bucket 21 under ~2.1 s, and the last bucket
+/// absorbs the tail. Power-of-two bounds keep recording a couple of
+/// integer ops — cheap enough for the per-buffer hot path.
+pub const LATENCY_BUCKETS: usize = 32;
+
+/// Bucket index for a latency sample of `ns` nanoseconds.
+#[inline]
+pub fn latency_bucket(ns: u64) -> usize {
+    let bits = 64 - ns.leading_zeros() as usize;
+    bits.saturating_sub(10).min(LATENCY_BUCKETS - 1)
+}
+
+/// Upper bound (exclusive) of bucket `i`, in nanoseconds — the value a
+/// percentile query reports for samples that landed in the bucket.
+#[inline]
+fn bucket_bound_ns(i: usize) -> u64 {
+    1u64 << (10 + i as u32)
+}
+
+/// Summarize plain bucket counts (as produced by [`LatencyHistogram`] or
+/// kept under a lock) into `p50/p90/p99` percentiles. Percentiles are
+/// conservative upper estimates: each reports the bound of the bucket
+/// holding the requested rank.
+pub fn summarize_latency(counts: &[u64; LATENCY_BUCKETS]) -> LatencySummary {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return LatencySummary::default();
+    }
+    let pick = |q: f64| -> Duration {
+        let rank = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Duration::from_nanos(bucket_bound_ns(i));
+            }
+        }
+        Duration::from_nanos(bucket_bound_ns(LATENCY_BUCKETS - 1))
+    };
+    LatencySummary {
+        count: total,
+        p50: pick(0.50),
+        p90: pick(0.90),
+        p99: pick(0.99),
+    }
+}
+
+/// Merge `src` bucket counts into `dst` (for aggregating per-element or
+/// per-endpoint histograms into a pipeline/topic summary).
+pub fn merge_latency(dst: &mut [u64; LATENCY_BUCKETS], src: &[u64; LATENCY_BUCKETS]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Lock-free fixed-bucket latency histogram (see [`LATENCY_BUCKETS`]).
+/// Recording is a single relaxed `fetch_add`; reads are approximate
+/// under concurrency, exact once the writers have quiesced.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        LatencyHistogram {
+            buckets: [ZERO; LATENCY_BUCKETS],
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[latency_bucket(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Plain snapshot of the bucket counts.
+    pub fn counts(&self) -> [u64; LATENCY_BUCKETS] {
+        let mut out = [0u64; LATENCY_BUCKETS];
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        summarize_latency(&self.counts())
+    }
+}
+
+/// Percentile summary of a fixed-bucket latency histogram. `count` is
+/// the number of samples; with zero samples the percentiles are zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
+}
+
 #[derive(Debug, Default)]
 pub struct ElementStats {
     pub name: String,
@@ -41,6 +146,15 @@ pub struct ElementStats {
     parks_output: AtomicU64,
     wakeups: AtomicU64,
     queue_hwm: AtomicU64,
+    /// Buffers discarded by deadline-aware load shedding (stamped past
+    /// their pipeline's deadline budget when crossing a link or arriving
+    /// at the step gate). Kept separate from `dropped` so Table-III
+    /// accounting stays comparable: `dropped` is element policy (leaky
+    /// queues, no subscribers), `shed` is the serving layer.
+    shed: AtomicU64,
+    /// End-to-end frame latency (arrival at a terminal element minus the
+    /// buffer's pts), recorded only by sink-side tasks.
+    e2e: LatencyHistogram,
 }
 
 impl ElementStats {
@@ -84,6 +198,21 @@ impl ElementStats {
 
     pub fn record_drop(&self) {
         self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one end-to-end frame latency sample (ns) into the
+    /// fixed-bucket histogram.
+    pub fn record_e2e_latency_ns(&self, ns: u64) {
+        self.e2e.record_ns(ns);
+    }
+
+    /// Bucket counts of the end-to-end latency histogram.
+    pub fn e2e_latency_counts(&self) -> [u64; LATENCY_BUCKETS] {
+        self.e2e.counts()
     }
 
     pub fn record_busy(&self, domain: Domain, dur: Duration) {
@@ -161,6 +290,11 @@ impl ElementStats {
         self.dropped.load(Ordering::Relaxed)
     }
 
+    /// Buffers discarded by deadline-aware load shedding.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
     pub fn busy_cpu(&self) -> Duration {
         Duration::from_nanos(self.busy_ns_cpu.load(Ordering::Relaxed))
     }
@@ -213,6 +347,41 @@ pub struct SchedSnapshot {
     /// Largest bounded-link (inbox) depth any of this pipeline's
     /// elements reached.
     pub link_high_water: u64,
+    /// Buffers shed by the deadline gate across this pipeline's elements
+    /// (zero unless the pipeline set a deadline budget).
+    pub shed: u64,
+}
+
+/// Typed drop accounting of one stream topic. Conservation invariant
+/// (per subscriber and in aggregate):
+/// `pushed == delivered + qos_leaky + qos_latest + closed + in_flight`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TopicDrops {
+    /// Publisher-side: buffer published while no subscriber was attached.
+    pub no_subscriber: u64,
+    /// Leaky QoS: the arriving buffer was discarded because the
+    /// subscriber's queue was full.
+    pub qos_leaky: u64,
+    /// Latest-only QoS: the oldest queued buffer was evicted to make
+    /// room for the newest.
+    pub qos_latest: u64,
+    /// Buffers still queued when the subscriber detached (or the topic
+    /// closed) — delivered to nobody.
+    pub closed: u64,
+}
+
+impl TopicDrops {
+    /// Sum over all drop reasons (excluding `no_subscriber`, which never
+    /// entered any subscriber queue and is accounted at the topic, not
+    /// per subscriber).
+    pub fn subscriber_total(&self) -> u64 {
+        self.qos_leaky + self.qos_latest + self.closed
+    }
+
+    /// Sum over every drop reason.
+    pub fn total(&self) -> u64 {
+        self.no_subscriber + self.subscriber_total()
+    }
 }
 
 /// Counters of one named stream topic (the tensor-query pub/sub layer;
@@ -229,10 +398,22 @@ pub struct TopicSnapshot {
     pub eos: bool,
     /// Buffers accepted from publishers.
     pub published: u64,
-    /// Buffer deliveries into subscriber queues (`published` × fan-out).
+    /// Buffer copies pushed into subscriber queues (`published` ×
+    /// fan-out at delivery time), plus publisher-side no-subscriber
+    /// drops so that `pushed == delivered + dropped + in_flight` holds.
+    pub pushed: u64,
+    /// Buffers consumers actually popped from subscriber queues.
     pub delivered: u64,
-    /// Buffers discarded because no subscriber was attached.
+    /// Buffers discarded, summed over every reason (see `drops`).
     pub dropped: u64,
+    /// Per-reason drop breakdown; `dropped == drops.total()`.
+    pub drops: TopicDrops,
+    /// Buffers currently sitting in subscriber queues.
+    pub in_flight: u64,
+    /// Queue-wait latency percentiles (push into a subscriber queue →
+    /// pop by its consumer), aggregated over this topic's subscribers
+    /// including already-detached ones.
+    pub latency: LatencySummary,
 }
 
 /// Summary of one pipeline run, assembled by the scheduler.
@@ -251,6 +432,9 @@ pub struct PipelineReport {
     /// process-global, like `traffic`: concurrent pipelines publishing
     /// to the same registry share them).
     pub topics: Vec<TopicSnapshot>,
+    /// End-to-end frame latency percentiles (sink arrival − pts),
+    /// aggregated over this pipeline's terminal elements.
+    pub latency: LatencySummary,
 }
 
 impl PipelineReport {
@@ -324,5 +508,71 @@ mod tests {
         let l = s.latency();
         assert_eq!(l.count, 2);
         assert_eq!(l.max, Duration::from_millis(7));
+    }
+
+    #[test]
+    fn latency_buckets_are_monotone_and_bounded() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1023), 0);
+        assert_eq!(latency_bucket(1024), 1);
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+        let mut prev = 0;
+        for ns in [1u64, 1_000, 1_000_000, 1_000_000_000, u64::MAX] {
+            let b = latency_bucket(ns);
+            assert!(b >= prev && b < LATENCY_BUCKETS);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_rank_correctly() {
+        let h = LatencyHistogram::default();
+        // 98 fast samples (~2 µs), 1 medium (~2 ms), 1 slow (~2 s).
+        for _ in 0..98 {
+            h.record_ns(2_000);
+        }
+        h.record_ns(2_000_000);
+        h.record_ns(2_000_000_000);
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        // p50/p90 land in the fast bucket, p99 in the medium one, and
+        // every percentile is a bucket upper bound ≥ the sample.
+        assert!(s.p50 >= Duration::from_nanos(2_000));
+        assert!(s.p50 < Duration::from_micros(10));
+        assert_eq!(s.p50, s.p90);
+        assert!(s.p99 >= Duration::from_millis(2));
+        assert!(s.p99 < Duration::from_millis(10));
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+    }
+
+    #[test]
+    fn empty_histogram_summarizes_to_zero() {
+        let s = summarize_latency(&[0u64; LATENCY_BUCKETS]);
+        assert_eq!(s, LatencySummary::default());
+    }
+
+    #[test]
+    fn merge_adds_bucket_counts() {
+        let a = LatencyHistogram::default();
+        a.record_ns(500);
+        let b = LatencyHistogram::default();
+        b.record_ns(500);
+        b.record_ns(5_000_000);
+        let mut m = a.counts();
+        merge_latency(&mut m, &b.counts());
+        assert_eq!(m.iter().sum::<u64>(), 3);
+        assert_eq!(summarize_latency(&m).count, 3);
+    }
+
+    #[test]
+    fn topic_drops_totals() {
+        let d = TopicDrops {
+            no_subscriber: 1,
+            qos_leaky: 2,
+            qos_latest: 3,
+            closed: 4,
+        };
+        assert_eq!(d.subscriber_total(), 9);
+        assert_eq!(d.total(), 10);
     }
 }

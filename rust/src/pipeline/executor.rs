@@ -756,6 +756,21 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                 if matches!(item, Item::Eos) {
                     *eos_seen += 1;
                 }
+                // Deadline step gate: a buffer that is already past the
+                // pipeline's deadline budget is shed here, before the
+                // element spends compute on it. EOS and control traffic
+                // are exempt so teardown and steering stay exact.
+                if !*early_eos {
+                    if let Item::Buffer(b) = &item {
+                        if cx.past_deadline(b) {
+                            stats.record_shed();
+                            if let Err(e) = drain_control(el, cx) {
+                                return Outcome::Finish(Some(e));
+                            }
+                            return Outcome::Park(Verdict::Ready);
+                        }
+                    }
+                }
                 if *early_eos {
                     // done but still draining input: keep the control
                     // mailbox drained so application sends don't back up

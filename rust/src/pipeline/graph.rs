@@ -29,6 +29,13 @@ pub struct Link {
 pub struct Graph {
     pub nodes: Vec<Node>,
     pub links: Vec<Link>,
+    /// Deadline budget for load shedding, in ns since the pipeline
+    /// epoch relative to each buffer's pts (0 = disabled). When set, a
+    /// buffer older than `pts + deadline_ns` is shed at the next link
+    /// crossing or step gate and charged to the shedding element's
+    /// `shed` counter — late frames stop consuming compute instead of
+    /// growing queues. See `Pipeline::set_deadline`.
+    pub deadline_ns: u64,
     names: HashMap<String, NodeId>,
 }
 

@@ -30,22 +30,81 @@
 //! # }
 //! ```
 
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::metrics::stats::PipelineReport;
 use crate::pipeline::executor::{lock, Executor, Priority};
 use crate::pipeline::scheduler::{self, Controller, Running};
 use crate::pipeline::stream::{
-    QueryClient, StreamRegistry, SubscriberClose, TopicPublisher, TopicSubscriber,
+    Qos, QueryClient, StreamRegistry, SubscriberClose, TopicPublisher, TopicSubscriber,
 };
 use crate::pipeline::Pipeline;
 
 struct HubEntry {
     name: String,
+    /// Tenant this pipeline was admitted under (None: unquota'd
+    /// [`launch`](PipelineHub::launch)).
+    tenant: Option<String>,
     pri: Priority,
     pipeline: Pipeline,
     running: Option<Running>,
+}
+
+/// Per-tenant admission quotas (each dimension: 0 = unlimited).
+///
+/// Set with [`PipelineHub::set_quota`]; enforced by
+/// [`launch_as`](PipelineHub::launch_as),
+/// [`try_admit_invoke`](PipelineHub::try_admit_invoke) and
+/// [`subscribe_as`](PipelineHub::subscribe_as). A denied tenant always
+/// gets a typed [`Error::AdmissionDenied`] immediately — admission never
+/// blocks or hangs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Max pipelines of this tenant live (launched and still executing)
+    /// on the hub at once.
+    pub max_live_pipelines: usize,
+    /// Max concurrently outstanding [`InvokeTicket`]s (one per queued
+    /// or in-flight SingleShot-style invoke).
+    pub max_queued_invokes: usize,
+    /// Max summed queue capacity of this tenant's live topic
+    /// subscriptions (its topic-buffer budget).
+    pub max_topic_buffers: usize,
+}
+
+struct TenantState {
+    quota: TenantQuota,
+    /// Outstanding invoke tickets (shared with [`InvokeTicket`] drops,
+    /// which decrement without taking the hub lock).
+    invokes: Arc<AtomicUsize>,
+    /// (queue capacity, weak closer) of every subscription admitted for
+    /// this tenant; dead closers are pruned at the next admission check.
+    topic_caps: Vec<(usize, SubscriberClose)>,
+}
+
+impl TenantState {
+    fn new(quota: TenantQuota) -> Self {
+        TenantState {
+            quota,
+            invokes: Arc::new(AtomicUsize::new(0)),
+            topic_caps: Vec::new(),
+        }
+    }
+}
+
+/// RAII admission slot for one queued invoke. Hold it for the lifetime
+/// of the request (queue wait + execution); dropping it releases the
+/// slot. Obtained from [`PipelineHub::try_admit_invoke`].
+pub struct InvokeTicket {
+    slots: Arc<AtomicUsize>,
+}
+
+impl Drop for InvokeTicket {
+    fn drop(&mut self) {
+        self.slots.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 /// Result of joining one hub pipeline: its report (or failure) plus the
@@ -54,6 +113,10 @@ struct HubEntry {
 /// [`Pipeline::finished_element`].
 pub struct HubJoin {
     pub name: String,
+    /// Tenant the pipeline was admitted under (None for unquota'd
+    /// launches) — lets multi-tenant callers route each report back to
+    /// its owner.
+    pub tenant: Option<String>,
     pub priority: Priority,
     pub report: Result<PipelineReport>,
     pub pipeline: Pipeline,
@@ -76,6 +139,10 @@ pub struct PipelineHub {
     /// application drain loops over [`subscribe`](PipelineHub::subscribe)
     /// terminate.
     subs: Mutex<Vec<SubscriberClose>>,
+    /// Admission state per tenant (quota + live usage). Tenants without
+    /// an entry are unlimited; plain [`launch`](PipelineHub::launch) /
+    /// [`subscribe`](PipelineHub::subscribe) bypass admission entirely.
+    tenants: Mutex<HashMap<String, TenantState>>,
 }
 
 impl PipelineHub {
@@ -86,6 +153,7 @@ impl PipelineHub {
             entries: Mutex::new(Vec::new()),
             streams: StreamRegistry::global().clone(),
             subs: Mutex::new(Vec::new()),
+            tenants: Mutex::new(HashMap::new()),
         }
     }
 
@@ -143,6 +211,17 @@ impl PipelineHub {
         s
     }
 
+    /// [`subscribe`](PipelineHub::subscribe) with an explicit delivery
+    /// [`Qos`]: a `Leaky` or `LatestOnly` subscriber never gates
+    /// publishers — when its queue is full the arriving (leaky) or
+    /// oldest (latest-only) buffer is dropped and counted in the
+    /// topic's drop breakdown instead.
+    pub fn subscribe_with_qos(&self, topic: &str, qos: Qos) -> TopicSubscriber {
+        let s = self.streams.subscribe_with_qos(topic, qos);
+        self.track_subscription(s.close_handle());
+        s
+    }
+
     /// Remember a closer for `request_stop_all`, pruning closers whose
     /// handles were already dropped so long-lived hubs serving many
     /// short-lived subscriptions don't accumulate dead entries.
@@ -172,25 +251,166 @@ impl PipelineHub {
     pub fn launch_with_priority(
         &self,
         name: impl Into<String>,
+        pipeline: Pipeline,
+        pri: Priority,
+    ) -> Result<Controller> {
+        self.launch_inner(None, name.into(), pipeline, pri)
+    }
+
+    /// Install (or replace) a tenant's admission quota. Existing usage
+    /// is kept — a lowered quota only affects future admissions.
+    pub fn set_quota(&self, tenant: impl Into<String>, quota: TenantQuota) {
+        let mut tenants = lock(&self.tenants);
+        tenants
+            .entry(tenant.into())
+            .and_modify(|t| t.quota = quota)
+            .or_insert_with(|| TenantState::new(quota));
+    }
+
+    /// A tenant's installed quota, if any.
+    pub fn quota(&self, tenant: &str) -> Option<TenantQuota> {
+        lock(&self.tenants).get(tenant).map(|t| t.quota)
+    }
+
+    /// Launch a pipeline on behalf of `tenant` at [`Priority::Normal`],
+    /// subject to its `max_live_pipelines` quota. Denial is immediate
+    /// and typed ([`Error::AdmissionDenied`]); tenants without a quota
+    /// are unlimited.
+    pub fn launch_as(
+        &self,
+        tenant: impl Into<String>,
+        name: impl Into<String>,
+        pipeline: Pipeline,
+    ) -> Result<Controller> {
+        self.launch_as_with_priority(tenant, name, pipeline, Priority::Normal)
+    }
+
+    /// [`launch_as`](PipelineHub::launch_as) with an explicit priority.
+    pub fn launch_as_with_priority(
+        &self,
+        tenant: impl Into<String>,
+        name: impl Into<String>,
+        pipeline: Pipeline,
+        pri: Priority,
+    ) -> Result<Controller> {
+        self.launch_inner(Some(tenant.into()), name.into(), pipeline, pri)
+    }
+
+    fn launch_inner(
+        &self,
+        tenant: Option<String>,
+        name: String,
         mut pipeline: Pipeline,
         pri: Priority,
     ) -> Result<Controller> {
-        let name = name.into();
+        // Quota lookup before the entries lock (tenants and entries are
+        // never held together; each is a leaf lock).
+        let live_limit = tenant
+            .as_deref()
+            .and_then(|t| lock(&self.tenants).get(t).map(|s| s.quota.max_live_pipelines))
+            .unwrap_or(0);
         let mut entries = lock(&self.entries);
         if entries.iter().any(|e| e.name == name) {
             return Err(Error::Runtime(format!(
                 "hub already runs a pipeline named {name:?}"
             )));
         }
+        // Admission: count this tenant's *live* pipelines (launched and
+        // still executing) under the entries lock, so concurrent
+        // launches can't both slip under the limit.
+        if live_limit > 0 {
+            let t = tenant.as_deref().unwrap();
+            let live = entries
+                .iter()
+                .filter(|e| e.tenant.as_deref() == Some(t))
+                .filter(|e| e.running.as_ref().is_some_and(|r| !r.is_done()))
+                .count();
+            if live >= live_limit {
+                return Err(Error::AdmissionDenied {
+                    tenant: t.to_string(),
+                    resource: "live pipelines",
+                    limit: live_limit,
+                });
+            }
+        }
         let running = scheduler::start_on(&self.exec, &mut pipeline.graph, pri)?;
         let controller = running.controller();
         entries.push(HubEntry {
             name,
+            tenant,
             pri,
             pipeline,
             running: Some(running),
         });
         Ok(controller)
+    }
+
+    /// Reserve an invoke slot for `tenant` (SingleShot-style request
+    /// admission). Returns an RAII [`InvokeTicket`] holding the slot
+    /// until dropped, or a typed [`Error::AdmissionDenied`] when the
+    /// tenant's `max_queued_invokes` slots are all outstanding — never a
+    /// hang. Tenants without a quota are unlimited.
+    pub fn try_admit_invoke(&self, tenant: &str) -> Result<InvokeTicket> {
+        let (limit, slots) = {
+            let mut tenants = lock(&self.tenants);
+            // No quota installed: unlimited, but still slot-accounted so
+            // usage is visible if a quota is installed later.
+            let state = tenants
+                .entry(tenant.to_string())
+                .or_insert_with(|| TenantState::new(TenantQuota::default()));
+            (state.quota.max_queued_invokes, state.invokes.clone())
+        };
+        // Reserve-then-check: tickets release via fetch_sub without the
+        // hub lock, so admission must be a single atomic reservation.
+        if slots.fetch_add(1, Ordering::AcqRel) >= limit && limit > 0 {
+            slots.fetch_sub(1, Ordering::AcqRel);
+            return Err(Error::AdmissionDenied {
+                tenant: tenant.to_string(),
+                resource: "queued invokes",
+                limit,
+            });
+        }
+        Ok(InvokeTicket { slots })
+    }
+
+    /// Subscribe to a topic on behalf of `tenant`, charging `capacity`
+    /// buffers against its `max_topic_buffers` budget. The budget counts
+    /// summed queue capacity of the tenant's *live* subscriptions
+    /// (dropped handles are pruned at the next admission check). Denial
+    /// is immediate and typed; tenants without a quota are unlimited.
+    pub fn subscribe_as(
+        &self,
+        tenant: &str,
+        topic: &str,
+        capacity: usize,
+        qos: Qos,
+    ) -> Result<TopicSubscriber> {
+        // Check and charge under one tenants-lock hold so concurrent
+        // subscriptions can't both slip under the budget. The stream
+        // registry's locks nest inside (leaf locks, never lock tenants).
+        let s = {
+            let mut tenants = lock(&self.tenants);
+            let state = tenants
+                .entry(tenant.to_string())
+                .or_insert_with(|| TenantState::new(TenantQuota::default()));
+            let limit = state.quota.max_topic_buffers;
+            if limit > 0 {
+                state.topic_caps.retain(|(_, c)| !c.is_dead());
+                let used: usize = state.topic_caps.iter().map(|(cap, _)| cap).sum();
+                if used + capacity > limit {
+                    return Err(Error::AdmissionDenied {
+                        tenant: tenant.to_string(),
+                        resource: "topic buffers",
+                        limit,
+                    });
+                }
+            }
+            let s = self.streams.subscribe_with(topic, capacity, qos);
+            state.topic_caps.push((capacity, s.close_handle()));
+            s
+        };
+        self.track_subscription(s.close_handle());
+        Ok(s)
     }
 
     /// Number of launched (not yet joined) pipelines.
@@ -262,6 +482,7 @@ impl PipelineHub {
                 };
                 HubJoin {
                     name: e.name,
+                    tenant: e.tenant,
                     priority: e.pri,
                     report,
                     pipeline: e.pipeline,
@@ -329,6 +550,93 @@ mod tests {
         let err = hub.launch("same", mk()).unwrap_err().to_string();
         assert!(err.contains("already runs"), "{err}");
         hub.join_all();
+    }
+
+    #[test]
+    fn admission_denies_over_quota_launch_then_recovers() {
+        let hub = PipelineHub::with_workers(1);
+        hub.set_quota(
+            "acme",
+            TenantQuota {
+                max_live_pipelines: 1,
+                ..Default::default()
+            },
+        );
+        // appsrc with no producer: stays live (parked) until stopped
+        let mk = || Pipeline::parse("appsrc name=in ! appsink name=out").unwrap();
+        hub.launch_as("acme", "a1", mk()).unwrap();
+        let err = hub.launch_as("acme", "a2", mk()).unwrap_err();
+        match err {
+            Error::AdmissionDenied {
+                tenant,
+                resource,
+                limit,
+            } => {
+                assert_eq!(tenant, "acme");
+                assert_eq!(resource, "live pipelines");
+                assert_eq!(limit, 1);
+            }
+            other => panic!("expected AdmissionDenied, got {other}"),
+        }
+        // other tenants (and unquota'd launches) are unaffected
+        hub.launch_as("beta", "b1", mk()).unwrap();
+        hub.launch("plain", mk()).unwrap();
+        hub.request_stop_all();
+        for j in hub.join_all() {
+            j.report.unwrap();
+        }
+    }
+
+    #[test]
+    fn invoke_tickets_enforce_and_release_slots() {
+        let hub = PipelineHub::new();
+        hub.set_quota(
+            "t",
+            TenantQuota {
+                max_queued_invokes: 2,
+                ..Default::default()
+            },
+        );
+        let t1 = hub.try_admit_invoke("t").unwrap();
+        let _t2 = hub.try_admit_invoke("t").unwrap();
+        assert!(matches!(
+            hub.try_admit_invoke("t"),
+            Err(Error::AdmissionDenied {
+                resource: "queued invokes",
+                limit: 2,
+                ..
+            })
+        ));
+        drop(t1); // RAII release frees a slot
+        hub.try_admit_invoke("t").unwrap();
+        // unknown tenants are unlimited
+        hub.try_admit_invoke("unmetered").unwrap();
+    }
+
+    #[test]
+    fn topic_buffer_budget_counts_live_subscriptions() {
+        use crate::pipeline::stream::Qos;
+        let hub = PipelineHub::new();
+        hub.set_quota(
+            "t",
+            TenantQuota {
+                max_topic_buffers: 8,
+                ..Default::default()
+            },
+        );
+        let s1 = hub.subscribe_as("t", "adm/a", 6, Qos::Blocking).unwrap();
+        assert!(matches!(
+            hub.subscribe_as("t", "adm/b", 4, Qos::Leaky),
+            Err(Error::AdmissionDenied {
+                resource: "topic buffers",
+                ..
+            })
+        ));
+        let s2 = hub.subscribe_as("t", "adm/b", 2, Qos::Leaky).unwrap();
+        drop(s1);
+        drop(s2);
+        // dropped handles are pruned: the full budget is available again
+        hub.subscribe_as("t", "adm/c", 8, Qos::LatestOnly).unwrap();
     }
 
     #[test]

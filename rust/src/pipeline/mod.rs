@@ -37,9 +37,12 @@ pub mod stream;
 pub use builder::PipelineBuilder;
 pub use executor::{Executor, Priority, Waker};
 pub use graph::{Graph, Link, Node, NodeId};
-pub use hub::{HubJoin, PipelineHub};
+pub use hub::{HubJoin, InvokeTicket, PipelineHub, TenantQuota};
 pub use scheduler::{Controller, Running};
-pub use stream::{QueryClient, StreamRegistry, TopicPublisher, TopicSubscriber, Transport};
+pub use stream::{
+    PushOutcome, Qos, QueryClient, StreamRegistry, SubscriberCounters, TopicPublisher,
+    TopicSubscriber, Transport,
+};
 
 use crate::element::Element;
 use crate::elements::sinks::AppSink;
@@ -82,6 +85,19 @@ impl Pipeline {
     /// Start a typed, fluent [`PipelineBuilder`].
     pub fn builder() -> PipelineBuilder {
         PipelineBuilder::new()
+    }
+
+    /// Set a deadline budget for load shedding (deadline-aware QoS). A
+    /// buffer whose pts lies more than `budget` in the past — measured
+    /// against the pipeline's epoch clock — is *shed* at its next link
+    /// crossing or executor step gate instead of consuming further
+    /// compute, and charged to the shedding element's `shed` counter
+    /// (surfaced in `PipelineReport.sched.shed`). `Duration::ZERO`
+    /// disables shedding (the default): correctness-mode pipelines
+    /// deliver every buffer exactly as before.
+    pub fn set_deadline(&mut self, budget: std::time::Duration) -> &mut Self {
+        self.graph.deadline_ns = budget.as_nanos() as u64;
+        self
     }
 
     /// Push handle of a named [`AppSrc`] — call before [`play`], push
@@ -197,6 +213,30 @@ mod tests {
         // the run report carries traffic/allocator counters
         assert!(report.traffic.writes > 0);
         assert!(report.traffic.alloc + report.traffic.pool_reuse > 0);
+        // the terminal sink recorded one e2e latency sample per frame
+        assert_eq!(report.latency.count, 6);
+        // no deadline configured: nothing shed
+        assert_eq!(report.sched.shed, 0);
+    }
+
+    #[test]
+    fn deadline_sheds_late_buffers() {
+        let mut p = Pipeline::parse("appsrc name=in ! fakesink name=out").unwrap();
+        // 1 ns budget: a pts-0 buffer is always late by the time any
+        // element sees it, so every push sheds at the first link crossing
+        p.set_deadline(std::time::Duration::from_nanos(1));
+        let h = p.appsrc("in").unwrap();
+        let feeder = std::thread::spawn(move || {
+            for i in 0..4 {
+                h.push(Buffer::from_f32(0, &[i as f32])).unwrap();
+            }
+            h.end();
+        });
+        let report = p.run().unwrap();
+        feeder.join().unwrap();
+        assert_eq!(report.element("out").unwrap().buffers_in(), 0);
+        assert_eq!(report.sched.shed, 4);
+        assert_eq!(report.latency.count, 0);
     }
 
     #[test]

@@ -221,12 +221,20 @@ impl Running {
             }
         }
         let mem = crate::metrics::MemInfo::read();
+        // End-to-end frame latency: terminal elements record
+        // (arrival − pts) per buffer; merge their histograms into one
+        // per-pipeline percentile summary.
+        let mut e2e = [0u64; crate::metrics::stats::LATENCY_BUCKETS];
+        for e in &stats {
+            crate::metrics::stats::merge_latency(&mut e2e, &e.e2e_latency_counts());
+        }
         let report = PipelineReport {
             wall: epoch.elapsed(),
             cpu_percent: cpu.cpu_percent(),
             peak_rss_mib: mem.peak_mib(),
             traffic: crate::metrics::traffic::since(traffic0),
             sched: snapshot_sched(&stats, &exec),
+            latency: crate::metrics::stats::summarize_latency(&e2e),
             // per-topic endpoint counters (process-global, like traffic)
             topics: crate::pipeline::stream::StreamRegistry::global().snapshot(),
             elements: stats,
@@ -249,6 +257,7 @@ fn snapshot_sched(stats: &[Arc<ElementStats>], exec: &Executor) -> SchedSnapshot
         s.parks_input += e.parks_input();
         s.parks_output += e.parks_output();
         s.wakeups += e.wakeups();
+        s.shed += e.shed();
         s.link_high_water = s.link_high_water.max(e.queue_high_water());
     }
     s
@@ -345,6 +354,7 @@ pub fn start_on(exec: &Executor, graph: &mut Graph, pri: Priority) -> Result<Run
             control: control_rxs[id].take(),
             waker: None,
             saturated: Vec::new(),
+            deadline_ns: graph.deadline_ns,
         };
         let is_source = node.element.is_source();
         node_names.push(node.name.clone());

@@ -48,7 +48,6 @@
 //! [`PipelineHub::subscribe`]: crate::pipeline::PipelineHub::subscribe
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{RecvError, RecvTimeoutError, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
@@ -56,13 +55,96 @@ use std::time::{Duration, Instant};
 use once_cell::sync::Lazy;
 
 use crate::error::{Error, Result};
-use crate::metrics::stats::TopicSnapshot;
+use crate::metrics::stats::{
+    latency_bucket, merge_latency, summarize_latency, TopicDrops, TopicSnapshot,
+    LATENCY_BUCKETS,
+};
 use crate::pipeline::executor::{lock, SharedWaker};
 use crate::tensor::{Buffer, Caps};
 
 /// Default bound of one subscriber queue (matches the `appsrc`/`appsink`
 /// channel capacity the endpoint layer replaced).
 pub const DEFAULT_ENDPOINT_CAPACITY: usize = 64;
+
+/// Per-subscriber delivery mode of a topic queue — the serving-layer
+/// QoS knob. The mode decides what happens when the subscriber's
+/// bounded queue is full at delivery time:
+///
+/// * `Blocking` — the publisher parks (elements) or blocks (app
+///   threads) until the queue drains: lossless, correctness-mode
+///   pipelines; the default everywhere.
+/// * `Leaky` — the **arriving** buffer is discarded and counted
+///   (`drops.qos_leaky`): a flooded tenant loses its own newest frames
+///   and never backpressures the publisher.
+/// * `LatestOnly` — the **oldest** queued buffer is evicted
+///   (`drops.qos_latest`) and the newest enqueued: consumers that only
+///   care about the freshest frame (monitoring, UI previews).
+///
+/// Every drop is typed and counted, so
+/// `pushed == delivered + dropped + in_flight` holds exactly for every
+/// subscriber queue (see [`SubscriberCounters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Qos {
+    #[default]
+    Blocking,
+    Leaky,
+    LatestOnly,
+}
+
+impl Qos {
+    /// Parse the element-property spelling (`qos=` on
+    /// `tensor_query_serversink`/`serversrc`).
+    pub fn parse(s: &str) -> Result<Qos> {
+        match s {
+            "blocking" => Ok(Qos::Blocking),
+            "leaky" => Ok(Qos::Leaky),
+            "latest-only" | "latest_only" | "latest" => Ok(Qos::LatestOnly),
+            other => Err(Error::Property {
+                key: "qos".into(),
+                value: other.into(),
+                reason: "expected blocking | leaky | latest-only".into(),
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for Qos {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Qos::Blocking => "blocking",
+            Qos::Leaky => "leaky",
+            Qos::LatestOnly => "latest-only",
+        })
+    }
+}
+
+/// Exact counter snapshot of one subscriber queue, taken under the
+/// endpoint lock. Invariant (checked by the property suite):
+/// `pushed == delivered + dropped.subscriber_total() + in_flight`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SubscriberCounters {
+    /// Buffers the topic pushed toward this queue (accepted, dropped by
+    /// QoS, or evicting an older one).
+    pub pushed: u64,
+    /// Buffers the consumer popped.
+    pub delivered: u64,
+    /// Typed drops (`no_subscriber` is always zero here — that reason
+    /// is accounted at the topic, not per subscriber).
+    pub dropped: TopicDrops,
+    /// Buffers currently queued.
+    pub in_flight: u64,
+}
+
+impl SubscriberCounters {
+    fn fold(&mut self, other: &SubscriberCounters) {
+        self.pushed += other.pushed;
+        self.delivered += other.delivered;
+        self.dropped.qos_leaky += other.dropped.qos_leaky;
+        self.dropped.qos_latest += other.dropped.qos_latest;
+        self.dropped.closed += other.dropped.closed;
+        self.in_flight += other.in_flight;
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Endpoint: one bounded queue with wake hooks on both sides
@@ -91,7 +173,9 @@ pub(crate) enum EpPop {
 }
 
 struct EpState {
-    queue: VecDeque<Buffer>,
+    /// Queued buffers with their enqueue instant (feeds the queue-wait
+    /// latency histogram at pop time).
+    queue: VecDeque<(Buffer, Instant)>,
     /// No more data will ever be pushed; queued buffers still drain.
     eos: bool,
     /// Consumer cancelled (receiver dropped, hub stop): pushes are
@@ -101,6 +185,20 @@ struct EpState {
     producer_wakers: Vec<Arc<SharedWaker>>,
     /// Wakers of the element task consuming this endpoint.
     consumer_wakers: Vec<Arc<SharedWaker>>,
+    /// Plain counters, exact under this mutex: conservation
+    /// (`pushed == delivered + drops + queue.len()`) holds at every
+    /// instant a lock holder can observe.
+    counters: SubscriberCounters,
+    /// Queue-wait latency histogram (enqueue → pop), fixed buckets.
+    hist: [u64; LATENCY_BUCKETS],
+}
+
+impl EpState {
+    fn record_pop(&mut self, at: Instant) {
+        self.counters.delivered += 1;
+        let ns = at.elapsed().as_nanos() as u64;
+        self.hist[latency_bucket(ns)] += 1;
+    }
 }
 
 /// One bounded buffer queue shared by a producer side and a consumer
@@ -110,6 +208,8 @@ struct EpState {
 /// subscription.
 pub(crate) struct Endpoint {
     cap: usize,
+    /// Delivery mode when this queue is full (see [`Qos`]).
+    qos: Qos,
     inner: Mutex<EpState>,
     /// Consumer-side blocking waits.
     not_empty: Condvar,
@@ -121,15 +221,18 @@ pub(crate) struct Endpoint {
 }
 
 impl Endpoint {
-    pub(crate) fn new(cap: usize, owner: Option<Weak<TopicInner>>) -> Arc<Endpoint> {
+    pub(crate) fn new(cap: usize, qos: Qos, owner: Option<Weak<TopicInner>>) -> Arc<Endpoint> {
         Arc::new(Endpoint {
             cap: cap.max(1),
+            qos,
             inner: Mutex::new(EpState {
                 queue: VecDeque::new(),
                 eos: false,
                 closed: false,
                 producer_wakers: Vec::new(),
                 consumer_wakers: Vec::new(),
+                counters: SubscriberCounters::default(),
+                hist: [0; LATENCY_BUCKETS],
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
@@ -139,7 +242,24 @@ impl Endpoint {
 
     /// Anonymous single-consumer endpoint (the appsrc/appsink channel).
     pub(crate) fn standalone(cap: usize) -> Arc<Endpoint> {
-        Endpoint::new(cap, None)
+        Endpoint::new(cap, Qos::Blocking, None)
+    }
+
+    pub(crate) fn qos(&self) -> Qos {
+        self.qos
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Exact counter snapshot plus latency buckets, under the endpoint
+    /// lock.
+    pub(crate) fn counters_and_hist(&self) -> (SubscriberCounters, [u64; LATENCY_BUCKETS]) {
+        let g = lock(&self.inner);
+        let mut c = g.counters;
+        c.in_flight = g.queue.len() as u64;
+        (c, g.hist)
     }
 
     /// Register the waker of an element task producing into this
@@ -164,6 +284,13 @@ impl Endpoint {
     pub(crate) fn is_full(&self) -> bool {
         let g = lock(&self.inner);
         !g.closed && g.queue.len() >= self.cap
+    }
+
+    /// Does this subscriber hold publishers back right now? Only
+    /// `Blocking`-mode queues ever gate a publisher: leaky and
+    /// latest-only queues absorb overload by dropping.
+    pub(crate) fn gates_publisher(&self) -> bool {
+        self.qos == Qos::Blocking && self.is_full()
     }
 
     fn wake_consumers(&self, wakers: Vec<Arc<SharedWaker>>) {
@@ -193,11 +320,49 @@ impl Endpoint {
             if g.queue.len() >= self.cap {
                 return EpPush::Full(buf);
             }
-            g.queue.push_back(buf);
+            g.counters.pushed += 1;
+            g.queue.push_back((buf, Instant::now()));
             g.consumer_wakers.clone()
         };
         self.wake_consumers(wakers);
         EpPush::Ok
+    }
+
+    /// QoS-aware delivery from the owning topic (called under the topic
+    /// lock; see [`TopicInner::deliver_locked`]). `qos` is the effective
+    /// mode for this delivery — the subscriber's own unless a
+    /// non-blocking publisher overrode it. Blocking queues are gated
+    /// non-full by the publisher before delivery, so `Blocking` never
+    /// observes a full queue here; a full leaky queue discards the
+    /// arriving buffer, a full latest-only queue evicts its oldest.
+    pub(crate) fn offer(&self, buf: Buffer, qos: Qos) {
+        let wakers = {
+            let mut g = lock(&self.inner);
+            if g.closed || g.eos {
+                // nothing can ever be delivered: not part of this
+                // subscriber's accounting (the queue is already retired)
+                return;
+            }
+            g.counters.pushed += 1;
+            if g.queue.len() >= self.cap {
+                match qos {
+                    Qos::Blocking | Qos::Leaky => {
+                        // Blocking is gated by the publisher under the
+                        // topic lock and cannot be full here; counting a
+                        // defensive overflow as leaky keeps conservation.
+                        g.counters.dropped.qos_leaky += 1;
+                        return;
+                    }
+                    Qos::LatestOnly => {
+                        g.queue.pop_front();
+                        g.counters.dropped.qos_latest += 1;
+                    }
+                }
+            }
+            g.queue.push_back((buf, Instant::now()));
+            g.consumer_wakers.clone()
+        };
+        self.wake_consumers(wakers);
     }
 
     /// Blocking push (application producers — `AppSrcHandle::push`).
@@ -209,7 +374,8 @@ impl Endpoint {
                 return Err(buf);
             }
             if g.queue.len() < self.cap {
-                g.queue.push_back(buf);
+                g.counters.pushed += 1;
+                g.queue.push_back((buf, Instant::now()));
                 let wakers = g.consumer_wakers.clone();
                 drop(g);
                 self.wake_consumers(wakers);
@@ -227,7 +393,10 @@ impl Endpoint {
                 return EpPop::End;
             }
             match g.queue.pop_front() {
-                Some(b) => (b, g.producer_wakers.clone()),
+                Some((b, at)) => {
+                    g.record_pop(at);
+                    (b, g.producer_wakers.clone())
+                }
                 None => {
                     return if g.eos { EpPop::End } else { EpPop::Empty };
                 }
@@ -244,7 +413,8 @@ impl Endpoint {
             if g.closed {
                 return None;
             }
-            if let Some(b) = g.queue.pop_front() {
+            if let Some((b, at)) = g.queue.pop_front() {
+                g.record_pop(at);
                 let wakers = g.producer_wakers.clone();
                 drop(g);
                 self.wake_producers(wakers);
@@ -265,7 +435,8 @@ impl Endpoint {
             if g.closed {
                 return EpPop::End;
             }
-            if let Some(b) = g.queue.pop_front() {
+            if let Some((b, at)) = g.queue.pop_front() {
+                g.record_pop(at);
                 let wakers = g.producer_wakers.clone();
                 drop(g);
                 self.wake_producers(wakers);
@@ -298,15 +469,49 @@ impl Endpoint {
         self.wake_producers(producers);
     }
 
-    /// Consumer cancelled: discard queued buffers, reject future pushes,
-    /// wake everything (parked producers observe `Closed` and unwind).
+    /// Consumer cancelled: discard queued buffers (counted as `closed`
+    /// drops), reject future pushes, wake everything (parked producers
+    /// observe `Closed` and unwind).
     pub(crate) fn close(&self) {
-        let (producers, consumers) = {
-            let mut g = lock(&self.inner);
+        let (producers, consumers) = self.close_quiet().1;
+        self.wake_consumers(consumers);
+        self.wake_producers(producers);
+    }
+
+    /// Close without firing any wakes: marks closed, charges queued
+    /// buffers to `dropped.closed`, and returns the final counters plus
+    /// the waker lists for the caller to fire **after** releasing
+    /// whatever lock it holds. Used by [`TopicInner::unsubscribe`],
+    /// which folds the counters into the topic's retired totals under
+    /// the topic lock — waking from there would re-enter the topic
+    /// mutex through `notify_space`.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn close_quiet(
+        &self,
+    ) -> (
+        (SubscriberCounters, [u64; LATENCY_BUCKETS]),
+        (Vec<Arc<SharedWaker>>, Vec<Arc<SharedWaker>>),
+    ) {
+        let mut g = lock(&self.inner);
+        if !g.closed {
             g.closed = true;
+            g.counters.dropped.closed += g.queue.len() as u64;
             g.queue.clear();
-            (g.producer_wakers.clone(), g.consumer_wakers.clone())
-        };
+        }
+        let counters = g.counters;
+        let hist = g.hist;
+        let wakers = (g.producer_wakers.clone(), g.consumer_wakers.clone());
+        drop(g);
+        ((counters, hist), wakers)
+    }
+
+    /// Fire producer/consumer wakes collected by
+    /// [`close_quiet`](Endpoint::close_quiet) once the caller's locks
+    /// are released.
+    pub(crate) fn wake_both(
+        &self,
+        (producers, consumers): (Vec<Arc<SharedWaker>>, Vec<Arc<SharedWaker>>),
+    ) {
         self.wake_consumers(consumers);
         self.wake_producers(producers);
     }
@@ -341,9 +546,21 @@ struct TopicState {
     /// Wakers of element publishers parked on a saturated (or
     /// subscriber-less, with `wait-subscribers=`) topic.
     publisher_wakers: Vec<Arc<SharedWaker>>,
+    /// Buffers accepted from publishers (fanned out to ≥1 subscriber).
+    published: u64,
+    /// Publisher-side discards: published while nobody subscribed.
+    no_sub_drops: u64,
+    /// Counters folded in from already-detached subscriber queues, so a
+    /// subscriber leaving never loses its share of the accounting.
+    retired: SubscriberCounters,
+    retired_hist: [u64; LATENCY_BUCKETS],
 }
 
 /// One named stream shared by any number of publishers and subscribers.
+/// All counters are plain integers inside `state` — every read and
+/// write happens under the topic (or a subscriber endpoint's) mutex, so
+/// a [`snapshot`](TopicInner::snapshot) taken mid-stream is a consistent
+/// cut, never a racy read of independently updated atomics.
 pub(crate) struct TopicInner {
     name: String,
     /// Default capacity of newly created subscriber queues.
@@ -351,9 +568,6 @@ pub(crate) struct TopicInner {
     state: Mutex<TopicState>,
     /// Application publishers blocking for space / topic events.
     space: Condvar,
-    published: AtomicU64,
-    delivered: AtomicU64,
-    dropped: AtomicU64,
 }
 
 impl TopicInner {
@@ -367,11 +581,12 @@ impl TopicInner {
                 eos: false,
                 caps: None,
                 publisher_wakers: Vec::new(),
+                published: 0,
+                no_sub_drops: 0,
+                retired: SubscriberCounters::default(),
+                retired_hist: [0; LATENCY_BUCKETS],
             }),
             space: Condvar::new(),
-            published: AtomicU64::new(0),
-            delivered: AtomicU64::new(0),
-            dropped: AtomicU64::new(0),
         })
     }
 
@@ -445,12 +660,16 @@ impl TopicInner {
     }
 
     /// Deliver one buffer to every subscriber queue, atomically with
-    /// respect to other publishers and (un)subscriptions: either every
-    /// queue takes it, or none does and the caller parks/drops. Space is
-    /// re-checked under the topic lock, so a replayed buffer is never
-    /// double-delivered to the subscribers that had room the first time.
-    pub(crate) fn try_publish(self: &Arc<Self>, buf: Buffer) -> TopicPush {
-        let g = lock(&self.state);
+    /// respect to other publishers and (un)subscriptions. With a
+    /// `Blocking` publisher, either every blocking-mode queue takes it,
+    /// or none does and the caller parks/drops; space is re-checked
+    /// under the topic lock, so a replayed buffer is never
+    /// double-delivered to the subscribers that had room the first
+    /// time. A non-blocking publisher QoS (`leaky`/`latest-only` on
+    /// `tensor_query_serversink`) never observes `Full`: full queues
+    /// shed per the publisher's mode instead of gating it.
+    pub(crate) fn try_publish(self: &Arc<Self>, buf: Buffer, qos: Qos) -> TopicPush {
+        let mut g = lock(&self.state);
         if g.eos {
             return TopicPush::Closed(buf);
         }
@@ -460,18 +679,20 @@ impl TopicInner {
             // service) — it records the drop only when it truly discards
             return TopicPush::NoSubscribers(buf);
         }
-        if g.subs.iter().any(|s| s.is_full()) {
+        if qos == Qos::Blocking && g.subs.iter().any(|s| s.gates_publisher()) {
             return TopicPush::Full(buf);
         }
-        self.deliver_locked(&g, buf);
+        Self::deliver_locked(&mut g, buf, qos);
         TopicPush::Ok
     }
 
-    /// Fan the buffer out while the topic lock is held (all queues were
-    /// verified non-full; concurrent pops only create more space). The
+    /// Fan the buffer out while the topic lock is held. Each queue is
+    /// offered the buffer under its **effective** QoS: the publisher's
+    /// mode when the publisher is non-blocking (it refuses to be gated,
+    /// so full queues shed), the subscriber's own mode otherwise. The
     /// last subscriber takes the original buffer, the others clones —
     /// chunks are Arc-backed, so clones share payload storage.
-    fn deliver_locked(&self, g: &std::sync::MutexGuard<'_, TopicState>, buf: Buffer) {
+    fn deliver_locked(g: &mut std::sync::MutexGuard<'_, TopicState>, buf: Buffer, qos: Qos) {
         let n = g.subs.len();
         let mut buf = Some(buf);
         for (i, ep) in g.subs.iter().enumerate() {
@@ -480,15 +701,16 @@ impl TopicInner {
             } else {
                 buf.as_ref().expect("buffer present").clone()
             };
-            let _ = ep.try_push(item);
+            let effective = if qos == Qos::Blocking { ep.qos() } else { qos };
+            ep.offer(item, effective);
         }
-        self.published.fetch_add(1, Ordering::Relaxed);
-        self.delivered.fetch_add(n as u64, Ordering::Relaxed);
+        g.published += 1;
     }
 
     /// Blocking publish (application publishers): waits for space;
     /// drops (returning `Ok(false)`) when nobody subscribes, errors once
-    /// the stream ended.
+    /// the stream ended. Only blocking-mode subscriber queues gate the
+    /// wait — leaky/latest-only subscribers shed instead.
     pub(crate) fn publish_blocking(self: &Arc<Self>, buf: Buffer) -> Result<bool> {
         let mut g = lock(&self.state);
         loop {
@@ -499,11 +721,11 @@ impl TopicInner {
                 )));
             }
             if g.subs.is_empty() {
-                self.dropped.fetch_add(1, Ordering::Relaxed);
+                g.no_sub_drops += 1;
                 return Ok(false);
             }
-            if !g.subs.iter().any(|s| s.is_full()) {
-                self.deliver_locked(&g, buf);
+            if !g.subs.iter().any(|s| s.gates_publisher()) {
+                Self::deliver_locked(&mut g, buf, Qos::Blocking);
                 return Ok(true);
             }
             g = self.space.wait(g).unwrap_or_else(|e| e.into_inner());
@@ -513,14 +735,15 @@ impl TopicInner {
     /// Record one publisher-side discard (a frame published while nobody
     /// subscribed and not replayed).
     pub(crate) fn count_dropped(&self) {
-        self.dropped.fetch_add(1, Ordering::Relaxed);
+        lock(&self.state).no_sub_drops += 1;
     }
 
-    /// Attach a bounded subscriber queue. Subscribing to an ended topic
-    /// yields an immediately-ended queue.
-    pub(crate) fn subscribe(self: &Arc<Self>, cap: Option<usize>) -> Arc<Endpoint> {
+    /// Attach a bounded subscriber queue with a delivery mode.
+    /// Subscribing to an ended topic yields an immediately-ended queue.
+    pub(crate) fn subscribe(self: &Arc<Self>, cap: Option<usize>, qos: Qos) -> Arc<Endpoint> {
         let ep = Endpoint::new(
             cap.unwrap_or(self.default_cap),
+            qos,
             Some(Arc::downgrade(self)),
         );
         let ended = {
@@ -539,26 +762,58 @@ impl TopicInner {
     }
 
     /// Detach (and close) one subscriber queue; parked publishers are
-    /// released — a leaving subscriber must not wedge the stream.
+    /// released — a leaving subscriber must not wedge the stream. The
+    /// queue's counters are folded into the topic's retired totals
+    /// under the topic lock, so the detach is atomic with respect to
+    /// [`snapshot`](TopicInner::snapshot) and no accounting is lost.
     pub(crate) fn unsubscribe(&self, ep: &Arc<Endpoint>) {
-        {
+        let wakers = {
             let mut g = lock(&self.state);
+            let attached = g.subs.iter().any(|s| Arc::ptr_eq(s, ep));
             g.subs.retain(|s| !Arc::ptr_eq(s, ep));
-        }
-        ep.close();
+            // Close quietly: waking from under the topic lock would
+            // re-enter this mutex through `notify_space`.
+            let ((counters, hist), wakers) = ep.close_quiet();
+            if attached {
+                g.retired.fold(&counters);
+                merge_latency(&mut g.retired_hist, &hist);
+            }
+            wakers
+        };
+        ep.wake_both(wakers);
         self.notify_space();
     }
 
+    /// Consistent counter cut of this topic: taken entirely under the
+    /// topic lock (and each live queue's own lock), so mid-stream
+    /// reports obey the conservation and ordering invariants — e.g.
+    /// `delivered` never exceeds `pushed`, and
+    /// `pushed == delivered + dropped + in_flight` exactly.
     pub(crate) fn snapshot(&self) -> TopicSnapshot {
         let g = lock(&self.state);
+        let mut agg = g.retired;
+        let mut hist = g.retired_hist;
+        for ep in &g.subs {
+            let (c, h) = ep.counters_and_hist();
+            agg.fold(&c);
+            merge_latency(&mut hist, &h);
+        }
+        let drops = TopicDrops {
+            no_subscriber: g.no_sub_drops,
+            ..agg.dropped
+        };
         TopicSnapshot {
             name: self.name.clone(),
             publishers: g.open_publishers,
             subscribers: g.subs.len(),
             eos: g.eos,
-            published: self.published.load(Ordering::Relaxed),
-            delivered: self.delivered.load(Ordering::Relaxed),
-            dropped: self.dropped.load(Ordering::Relaxed),
+            published: g.published,
+            pushed: agg.pushed + g.no_sub_drops,
+            delivered: agg.delivered,
+            dropped: drops.total(),
+            drops,
+            in_flight: agg.in_flight,
+            latency: summarize_latency(&hist),
         }
     }
 }
@@ -633,16 +888,30 @@ impl StreamRegistry {
         }
     }
 
-    /// A subscriber handle on `topic` with the default queue bound.
+    /// A subscriber handle on `topic` with the default queue bound and
+    /// lossless (`blocking`) delivery.
     pub fn subscribe(&self, topic: &str) -> TopicSubscriber {
-        self.subscribe_with_capacity(topic, DEFAULT_ENDPOINT_CAPACITY)
+        self.subscribe_with(topic, DEFAULT_ENDPOINT_CAPACITY, Qos::Blocking)
     }
 
     /// A subscriber handle with an explicit queue bound (small bounds
     /// make a slow consumer exert backpressure sooner).
     pub fn subscribe_with_capacity(&self, topic: &str, capacity: usize) -> TopicSubscriber {
+        self.subscribe_with(topic, capacity, Qos::Blocking)
+    }
+
+    /// A subscriber handle with an explicit delivery mode: `leaky` and
+    /// `latest-only` subscribers absorb overload by dropping (typed and
+    /// counted) instead of backpressuring the publisher — one flooded
+    /// tenant cannot stall the stream for everyone else.
+    pub fn subscribe_with_qos(&self, topic: &str, qos: Qos) -> TopicSubscriber {
+        self.subscribe_with(topic, DEFAULT_ENDPOINT_CAPACITY, qos)
+    }
+
+    /// The general subscription form: explicit queue bound and QoS.
+    pub fn subscribe_with(&self, topic: &str, capacity: usize, qos: Qos) -> TopicSubscriber {
         let t = self.topic(topic);
-        let ep = t.subscribe(Some(capacity));
+        let ep = t.subscribe(Some(capacity), qos);
         TopicSubscriber { topic: t, ep }
     }
 
@@ -688,6 +957,25 @@ impl TopicPublisher {
         self.topic.publish_blocking(buf)
     }
 
+    /// Non-blocking publish: reports what happened instead of waiting
+    /// for space. Useful for load generators and the QoS property
+    /// suite; pipelines use the element ports, applications normally
+    /// the blocking [`push`](TopicPublisher::push).
+    pub fn try_push(&self, buf: Buffer) -> PushOutcome {
+        if self.done {
+            return PushOutcome::Closed;
+        }
+        match self.topic.try_publish(buf, Qos::Blocking) {
+            TopicPush::Ok => PushOutcome::Delivered,
+            TopicPush::NoSubscribers(_) => {
+                self.topic.count_dropped();
+                PushOutcome::NoSubscribers
+            }
+            TopicPush::Full(_) => PushOutcome::Full,
+            TopicPush::Closed(_) => PushOutcome::Closed,
+        }
+    }
+
     /// Subscribers currently attached.
     pub fn subscriber_count(&self) -> usize {
         self.topic.subscriber_count()
@@ -713,6 +1001,22 @@ impl Drop for TopicPublisher {
     fn drop(&mut self) {
         self.end();
     }
+}
+
+/// Outcome of a non-blocking [`TopicPublisher::try_push`]. Unlike the
+/// crate-internal [`TopicPush`], the undelivered buffer is discarded
+/// (and a `NoSubscribers` outcome counted as a drop) — callers that
+/// need replay semantics use the element ports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Offered to every subscriber queue (each per its effective QoS).
+    Delivered,
+    /// Nobody subscribed; counted as a `no_subscriber` drop.
+    NoSubscribers,
+    /// A blocking-mode subscriber queue is at capacity.
+    Full,
+    /// The stream (or this publisher) already ended.
+    Closed,
 }
 
 /// Application-side subscriber on a named topic (from
@@ -759,6 +1063,17 @@ impl TopicSubscriber {
     /// Name of the subscribed topic.
     pub fn topic(&self) -> &str {
         self.topic.name()
+    }
+
+    /// This subscription's delivery mode.
+    pub fn qos(&self) -> Qos {
+        self.ep.qos()
+    }
+
+    /// Exact counter snapshot of this subscription's queue (taken under
+    /// the queue lock): `pushed`, `delivered`, typed drops, `in_flight`.
+    pub fn counters(&self) -> SubscriberCounters {
+        self.ep.counters_and_hist().0
     }
 
     /// A weak closer the hub keeps so `request_stop_all` can terminate
@@ -928,10 +1243,12 @@ pub trait SubscriberPort: Send {
 /// unchanged.
 pub trait Transport: Send + Sync {
     fn name(&self) -> &'static str;
-    /// Attach a publisher to `topic`.
-    fn advertise(&self, topic: &str) -> Result<Box<dyn PublisherPort>>;
-    /// Attach a bounded subscriber to `topic`.
-    fn attach(&self, topic: &str, capacity: usize) -> Result<Box<dyn SubscriberPort>>;
+    /// Attach a publisher to `topic`. A non-blocking `qos`
+    /// (`leaky`/`latest-only`) makes the publisher shed on full
+    /// subscriber queues instead of observing `Full` and parking.
+    fn advertise(&self, topic: &str, qos: Qos) -> Result<Box<dyn PublisherPort>>;
+    /// Attach a bounded subscriber to `topic` with a delivery mode.
+    fn attach(&self, topic: &str, capacity: usize, qos: Qos) -> Result<Box<dyn SubscriberPort>>;
 }
 
 /// The in-process transport: topics resolve in a [`StreamRegistry`].
@@ -950,18 +1267,19 @@ impl Transport for InProcTransport {
         "inproc"
     }
 
-    fn advertise(&self, topic: &str) -> Result<Box<dyn PublisherPort>> {
+    fn advertise(&self, topic: &str, qos: Qos) -> Result<Box<dyn PublisherPort>> {
         let t = self.registry.topic(topic);
         t.attach_publisher();
         Ok(Box::new(InProcPublisherPort {
             topic: t,
+            qos,
             finished: false,
         }))
     }
 
-    fn attach(&self, topic: &str, capacity: usize) -> Result<Box<dyn SubscriberPort>> {
+    fn attach(&self, topic: &str, capacity: usize, qos: Qos) -> Result<Box<dyn SubscriberPort>> {
         let t = self.registry.topic(topic);
-        let ep = t.subscribe(Some(capacity));
+        let ep = t.subscribe(Some(capacity), qos);
         Ok(Box::new(InProcSubscriberPort {
             topic: t,
             ep,
@@ -972,6 +1290,7 @@ impl Transport for InProcTransport {
 
 struct InProcPublisherPort {
     topic: Arc<TopicInner>,
+    qos: Qos,
     finished: bool,
 }
 
@@ -984,7 +1303,7 @@ impl PublisherPort for InProcPublisherPort {
         if self.finished {
             return PortSend::Closed(buf);
         }
-        match self.topic.try_publish(buf) {
+        match self.topic.try_publish(buf, self.qos) {
             TopicPush::Ok => PortSend::Sent,
             TopicPush::NoSubscribers(b) => PortSend::NoSubscribers(b),
             TopicPush::Full(b) => PortSend::Full(b),
@@ -1199,11 +1518,130 @@ mod tests {
         let p = reg.publish("a");
         assert!(p.push(buf(1.0)).unwrap());
         assert!(p.push(buf(2.0)).unwrap());
+        let mid = reg.snapshot();
+        assert_eq!(mid[0].published, 2);
+        assert_eq!(mid[0].pushed, 2);
+        assert_eq!(mid[0].delivered, 0, "delivered counts consumer pops");
+        assert_eq!(mid[0].in_flight, 2);
+        // dropping the subscriber retires its queue: the two undelivered
+        // buffers become typed `closed` drops, conservation holds
         drop(s);
         let snap = reg.snapshot();
         assert_eq!(snap[0].published, 2);
-        assert_eq!(snap[0].delivered, 2);
+        assert_eq!(snap[0].pushed, 2);
+        assert_eq!(snap[0].delivered, 0);
+        assert_eq!(snap[0].drops.closed, 2);
+        assert_eq!(snap[0].in_flight, 0);
+        assert_eq!(
+            snap[0].pushed,
+            snap[0].delivered + snap[0].dropped + snap[0].in_flight
+        );
         assert_eq!(snap[0].subscribers, 0);
         assert_eq!(snap[0].publishers, 1);
+    }
+
+    #[test]
+    fn snapshot_never_shows_delivered_over_pushed_or_published() {
+        // single subscriber: every popped buffer was pushed and every
+        // pushed buffer was published first, so any consistent cut obeys
+        // delivered <= pushed <= published
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe("a");
+        let p = reg.publish("a");
+        for i in 0..5 {
+            assert!(p.push(buf(i as f32)).unwrap());
+        }
+        for _ in 0..3 {
+            s.recv().unwrap();
+        }
+        let snap = reg.snapshot();
+        assert!(snap[0].delivered <= snap[0].pushed);
+        assert!(snap[0].delivered <= snap[0].published);
+        assert_eq!(snap[0].delivered, 3);
+        assert_eq!(snap[0].in_flight, 2);
+        assert!(snap[0].latency.count == 3, "3 pops recorded latency");
+    }
+
+    #[test]
+    fn leaky_subscriber_sheds_newest_without_gating_publisher() {
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe_with("t", 2, Qos::Leaky);
+        let p = reg.publish("t");
+        // capacity 2: pushes 3.. are shed, but none of them blocks
+        for i in 0..5 {
+            assert!(p.push(buf(i as f32)).unwrap());
+        }
+        let c = s.counters();
+        assert_eq!(c.pushed, 5);
+        assert_eq!(c.in_flight, 2);
+        assert_eq!(c.dropped.qos_leaky, 3);
+        assert_eq!(c.pushed, c.delivered + c.dropped.subscriber_total() + c.in_flight);
+        // the two oldest survive (leaky drops the arriving frame)
+        assert_eq!(s.recv().unwrap().chunk().as_f32().unwrap(), &[0.0]);
+        assert_eq!(s.recv().unwrap().chunk().as_f32().unwrap(), &[1.0]);
+    }
+
+    #[test]
+    fn latest_only_subscriber_keeps_freshest() {
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe_with("t", 2, Qos::LatestOnly);
+        let p = reg.publish("t");
+        for i in 0..5 {
+            assert!(p.push(buf(i as f32)).unwrap());
+        }
+        let c = s.counters();
+        assert_eq!(c.pushed, 5);
+        assert_eq!(c.dropped.qos_latest, 3);
+        assert_eq!(c.in_flight, 2);
+        // the two newest survive (oldest evicted on overflow)
+        assert_eq!(s.recv().unwrap().chunk().as_f32().unwrap(), &[3.0]);
+        assert_eq!(s.recv().unwrap().chunk().as_f32().unwrap(), &[4.0]);
+    }
+
+    #[test]
+    fn mixed_qos_fanout_gates_only_on_blocking() {
+        let reg = StreamRegistry::new();
+        let fast = reg.subscribe_with("t", 8, Qos::Blocking);
+        let slow = reg.subscribe_with("t", 1, Qos::Leaky);
+        let p = reg.publish("t");
+        // the leaky queue fills after 1 buffer but must not block pushes
+        for i in 0..4 {
+            assert!(p.try_push(buf(i as f32)) == PushOutcome::Delivered);
+        }
+        assert_eq!(fast.counters().in_flight, 4);
+        let sc = slow.counters();
+        assert_eq!(sc.in_flight, 1);
+        assert_eq!(sc.dropped.qos_leaky, 3);
+        // a full *blocking* queue does gate
+        for i in 4..8 {
+            assert!(p.try_push(buf(i as f32)) == PushOutcome::Delivered);
+        }
+        assert_eq!(p.try_push(buf(9.0)), PushOutcome::Full);
+    }
+
+    #[test]
+    fn leaky_publisher_qos_overrides_blocking_subscriber() {
+        // tensor_query_serversink qos=leaky: a saturated blocking
+        // subscriber no longer parks the pipeline — the frame sheds
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe_with_capacity("t", 1);
+        let tr = InProcTransport::new(reg.clone());
+        let mut port = tr.advertise("t", Qos::Leaky).unwrap();
+        assert!(matches!(port.try_send(buf(1.0)), PortSend::Sent));
+        // queue full; a leaky publisher sheds instead of Full
+        assert!(matches!(port.try_send(buf(2.0)), PortSend::Sent));
+        let c = s.counters();
+        assert_eq!(c.pushed, 2);
+        assert_eq!(c.dropped.qos_leaky, 1);
+        assert_eq!(s.recv().unwrap().chunk().as_f32().unwrap(), &[1.0]);
+    }
+
+    #[test]
+    fn qos_parse_and_display_roundtrip() {
+        for q in [Qos::Blocking, Qos::Leaky, Qos::LatestOnly] {
+            assert_eq!(Qos::parse(&q.to_string()).unwrap(), q);
+        }
+        assert_eq!(Qos::parse("latest").unwrap(), Qos::LatestOnly);
+        assert!(Qos::parse("lossy").is_err());
     }
 }

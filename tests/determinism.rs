@@ -10,7 +10,7 @@
 
 use nnstreamer::apps::e4;
 use nnstreamer::elements::sinks::TensorSink;
-use nnstreamer::pipeline::{Pipeline, PipelineHub, Priority};
+use nnstreamer::pipeline::{Pipeline, PipelineHub, Priority, Qos};
 
 /// Collect (pts, payload bytes) from a finished tensor_sink.
 fn collect(p: &mut Pipeline, name: &str) -> Vec<(u64, Vec<u8>)> {
@@ -71,6 +71,49 @@ fn run_on_agrees_with_hub_path() {
     let direct = collect(&mut p, "out");
     exec.shutdown();
     assert_eq!(via_hub, direct);
+}
+
+/// The deterministic chain ending in a `qos=blocking` topic publish
+/// instead of a local sink, collected through a hub subscriber.
+fn run_topic_with_workers(workers: usize) -> Vec<(u64, Vec<u8>)> {
+    let topic = format!("det/e4-w{workers}");
+    let hub = PipelineHub::with_workers(workers);
+    // subscribe before launch so nothing is published unobserved
+    let sub = hub.subscribe_with_qos(&topic, Qos::Blocking);
+    let desc = e4_launch().replace(
+        "tensor_sink name=out",
+        &format!("tensor_query_serversink topic={topic} qos=blocking"),
+    );
+    let mut p = Pipeline::parse(&desc).unwrap();
+    // deadlines disabled (the default, asserted explicitly): blocking
+    // QoS with no shedding must stay on the exact pre-QoS path
+    p.set_deadline(std::time::Duration::ZERO);
+    hub.launch("e4-topic", p).unwrap();
+    let mut out = Vec::new();
+    while let Ok(b) = sub.recv() {
+        out.push((b.pts_ns, b.chunk().as_bytes_unaccounted().to_vec()));
+    }
+    for j in hub.join_all() {
+        j.report.expect("pipeline succeeded");
+    }
+    out
+}
+
+/// QoS hardening must not cost determinism: the e4 bit-identity matrix
+/// also holds when the chain publishes through a `qos=blocking` topic
+/// (with deadlines disabled), at every worker count, against the
+/// local-sink reference.
+#[test]
+fn e4_topic_route_bit_identical_across_worker_counts_under_blocking_qos() {
+    let reference = run_with_workers(1);
+    for workers in [1, 2, 8] {
+        let via_topic = run_topic_with_workers(workers);
+        assert_eq!(via_topic.len(), 6, "blocking qos delivers every frame");
+        assert_eq!(
+            via_topic, reference,
+            "topic route must be bit-identical to the local sink at {workers} workers"
+        );
+    }
 }
 
 /// Many identical deterministic pipelines racing on a small pool must

@@ -6,6 +6,7 @@
 
 use nnstreamer::elements::decoder::{decode_boxes, encode_boxes, DetBox};
 use nnstreamer::elements::sync::{SyncPolicy, Synchronizer};
+use nnstreamer::pipeline::{PushOutcome, Qos, StreamRegistry};
 use nnstreamer::tensor::{Buffer, Caps, DType, Dims};
 use nnstreamer::video::pattern::splitmix64;
 
@@ -225,6 +226,203 @@ fn prop_transform_arithmetic_invertible() {
         for (a, b) in vals.iter().zip(&t) {
             assert!((a - b).abs() < 1e-3);
         }
+    });
+}
+
+/// Reference model of one subscriber endpoint under a QoS mode.
+struct SubModel {
+    qos: Qos,
+    cap: usize,
+    queue: std::collections::VecDeque<u64>,
+    dropped_handle: bool,
+    pushed: u64,
+    delivered: u64,
+    leaky: u64,
+    latest: u64,
+    max_evicted: u64,
+}
+
+impl SubModel {
+    fn new(qos: Qos, cap: usize) -> Self {
+        SubModel {
+            qos,
+            cap,
+            queue: std::collections::VecDeque::new(),
+            dropped_handle: false,
+            pushed: 0,
+            delivered: 0,
+            leaky: 0,
+            latest: 0,
+            max_evicted: 0,
+        }
+    }
+
+    /// Model one topic delivery (publisher qos = Blocking, so the
+    /// subscriber's own mode decides).
+    fn offer(&mut self, pts: u64) {
+        self.pushed += 1;
+        match self.qos {
+            Qos::Blocking => {
+                assert!(
+                    self.queue.len() < self.cap,
+                    "a full blocking subscriber must have gated the publisher"
+                );
+                self.queue.push_back(pts);
+            }
+            Qos::Leaky => {
+                if self.queue.len() < self.cap {
+                    self.queue.push_back(pts);
+                } else {
+                    self.leaky += 1; // arriving frame shed
+                }
+            }
+            Qos::LatestOnly => {
+                if self.queue.len() == self.cap {
+                    let ev = self.queue.pop_front().unwrap();
+                    self.max_evicted = self.max_evicted.max(ev);
+                    self.latest += 1; // oldest frame evicted
+                }
+                self.queue.push_back(pts);
+            }
+        }
+    }
+}
+
+/// Satellite 2 — conservation under random push/pull/drop schedules
+/// across all three QoS modes: every buffer a subscriber was offered is
+/// delivered, typed-dropped, or still in flight; nothing is lost or
+/// double-counted, per subscriber and in the topic aggregate.
+#[test]
+fn prop_topic_qos_conservation_all_modes() {
+    cases(120, |g| {
+        let reg = StreamRegistry::new();
+        let topic = "prop/qos";
+        let n_subs = g.range(1, 4) as usize;
+        let mut subs = Vec::new();
+        let mut models: Vec<SubModel> = Vec::new();
+        for _ in 0..n_subs {
+            let qos = [Qos::Blocking, Qos::Leaky, Qos::LatestOnly]
+                [g.range(0, 3) as usize];
+            let cap = g.range(1, 6) as usize;
+            subs.push(Some(reg.subscribe_with(topic, cap, qos)));
+            models.push(SubModel::new(qos, cap));
+        }
+        let publisher = reg.publish(topic);
+        let mut next_pts = 1u64;
+        for _ in 0..g.range(30, 120) {
+            match g.range(0, 10) {
+                0..=4 => match publisher.try_push(Buffer::from_f32(next_pts, &[0.5])) {
+                    PushOutcome::Delivered => {
+                        for m in models.iter_mut().filter(|m| !m.dropped_handle) {
+                            m.offer(next_pts);
+                        }
+                        next_pts += 1;
+                    }
+                    PushOutcome::Full => {
+                        assert!(
+                            models.iter().any(|m| !m.dropped_handle
+                                && m.qos == Qos::Blocking
+                                && m.queue.len() == m.cap),
+                            "Full only when a blocking subscriber is full"
+                        );
+                    }
+                    PushOutcome::NoSubscribers => {
+                        assert!(models.iter().all(|m| m.dropped_handle));
+                    }
+                    PushOutcome::Closed => unreachable!("publisher still open"),
+                },
+                5..=8 => {
+                    let i = g.range(0, n_subs as u64) as usize;
+                    if let Some(s) = &subs[i] {
+                        let m = &mut models[i];
+                        match s.try_recv() {
+                            Ok(b) => {
+                                let want =
+                                    m.queue.pop_front().expect("model had an item");
+                                assert_eq!(b.pts_ns, want, "in-order delivery");
+                                m.delivered += 1;
+                                if m.qos == Qos::LatestOnly {
+                                    assert!(
+                                        b.pts_ns > m.max_evicted,
+                                        "latest-only delivered {} although {} was \
+                                         already evicted as stale",
+                                        b.pts_ns,
+                                        m.max_evicted
+                                    );
+                                }
+                            }
+                            Err(_) => assert!(m.queue.is_empty()),
+                        }
+                    }
+                }
+                _ => {
+                    // drop a subscriber handle: queued buffers become
+                    // typed `closed` drops, counters fold into retired
+                    let i = g.range(0, n_subs as u64) as usize;
+                    subs[i] = None;
+                    models[i].dropped_handle = true;
+                }
+            }
+        }
+        // per-subscriber counters match the model exactly (live handles)
+        for (s, m) in subs.iter().zip(&models) {
+            if let Some(s) = s {
+                let c = s.counters();
+                assert_eq!(c.pushed, m.pushed);
+                assert_eq!(c.delivered, m.delivered);
+                assert_eq!(c.dropped.qos_leaky, m.leaky);
+                assert_eq!(c.dropped.qos_latest, m.latest);
+                assert_eq!(c.in_flight, m.queue.len() as u64);
+                // conservation per subscriber
+                assert_eq!(
+                    c.pushed,
+                    c.delivered + c.dropped.subscriber_total() + c.in_flight
+                );
+            }
+        }
+        // topic-level conservation, including retired subscribers and
+        // no-subscriber drops
+        let t = reg
+            .snapshot()
+            .into_iter()
+            .find(|t| t.name == topic)
+            .unwrap();
+        assert_eq!(t.pushed, t.delivered + t.dropped + t.in_flight);
+        assert_eq!(t.dropped, t.drops.total());
+        assert!(t.delivered <= t.pushed);
+    });
+}
+
+/// Satellite 2 — latest-only freshness: a latest-only subscriber never
+/// receives a buffer older than one that was already evicted for it
+/// (staleness monotonicity), under arbitrary push/pull interleavings.
+#[test]
+fn prop_latest_only_never_delivers_stale() {
+    cases(150, |g| {
+        let reg = StreamRegistry::new();
+        let cap = g.range(1, 5) as usize;
+        let sub = reg.subscribe_with("prop/latest", cap, Qos::LatestOnly);
+        let publisher = reg.publish("prop/latest");
+        let mut m = SubModel::new(Qos::LatestOnly, cap);
+        let mut pts = 1u64;
+        for _ in 0..g.range(20, 100) {
+            if g.range(0, 3) < 2 {
+                assert_eq!(
+                    publisher.try_push(Buffer::from_f32(pts, &[1.0])),
+                    PushOutcome::Delivered,
+                    "latest-only never gates the publisher"
+                );
+                m.offer(pts);
+                pts += 1;
+            } else if let Ok(b) = sub.try_recv() {
+                let want = m.queue.pop_front().unwrap();
+                assert_eq!(b.pts_ns, want);
+                assert!(b.pts_ns > m.max_evicted);
+            }
+        }
+        let c = sub.counters();
+        assert_eq!(c.dropped.qos_latest, m.latest);
+        assert_eq!(c.pushed, c.delivered + c.dropped.subscriber_total() + c.in_flight);
     });
 }
 

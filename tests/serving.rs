@@ -1,0 +1,366 @@
+//! Multi-tenant serving hardening: a stress/isolation harness over the
+//! [`PipelineHub`] — thousands of short-lived SingleShot tenants riding
+//! the global executor while streaming pipelines run on a small
+//! dedicated hub, with bounded threads, per-tenant report isolation,
+//! typed admission denials, a consistent mid-stream topic snapshot, and
+//! a clean `request_stop_all` under full load.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use nnstreamer::error::Error;
+use nnstreamer::pipeline::{Pipeline, PipelineHub, Qos, TenantQuota};
+use nnstreamer::runtime::SingleShot;
+
+const WORKERS: usize = 4;
+const TENANTS: usize = 1000;
+const INVOKE_THREADS: usize = 8;
+
+/// Thread count of this process (`/proc/self/status`); None off Linux.
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+fn streaming_desc(frames: u64) -> String {
+    format!(
+        "videotestsrc num-buffers={frames} pattern=gradient ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+         tensor_converter ! fakesink name=out"
+    )
+}
+
+/// Satellite 1: 1000 short-lived SingleShot tenants (each opening,
+/// invoking and dropping its own serving pipeline) run concurrently with
+/// 4 streaming pipelines on a 4-worker hub. Threads stay O(workers +
+/// invoking threads), never O(tenants); each tenant's report is its own.
+#[test]
+fn serving_fleet_keeps_threads_bounded_and_reports_isolated() {
+    // Warm the global executor and the model registry so the thread
+    // baseline excludes one-time pool spawn and model compile.
+    {
+        let s = SingleShot::open("ars_a_opt").expect("artifacts present");
+        s.invoke(&[&vec![0.1f32; 128 * 3]]).unwrap();
+    }
+    let baseline = process_threads();
+
+    let hub = PipelineHub::with_workers(WORKERS);
+    // 4 streaming pipelines, one per tenant, with distinct frame counts
+    // so cross-tenant report mixing would be visible.
+    let frames_of = |i: usize| (16 + 4 * i) as u64;
+    for i in 0..4 {
+        let p = Pipeline::parse(&streaming_desc(frames_of(i))).unwrap();
+        hub.launch_as(format!("tenant-{i}"), format!("stream-{i}"), p)
+            .unwrap();
+    }
+
+    // 1000 short-lived SingleShot tenants across a few app threads.
+    let mut invokers = Vec::new();
+    for t in 0..INVOKE_THREADS {
+        invokers.push(std::thread::spawn(move || {
+            let input: Vec<f32> =
+                (0..128 * 3).map(|i| ((i + t) % 17) as f32 / 17.0).collect();
+            let mut first: Option<Vec<Vec<f32>>> = None;
+            for _ in 0..(TENANTS / INVOKE_THREADS) {
+                let s = SingleShot::open("ars_a_opt").unwrap();
+                let out = s.invoke(&[&input]).unwrap();
+                assert_eq!(out[0].len(), 8);
+                // tenant isolation: identical input, identical output,
+                // whatever else the process is running
+                match &first {
+                    None => first = Some(out),
+                    Some(f) => assert_eq!(f, &out, "tenant output diverged"),
+                }
+            }
+        }));
+    }
+
+    // Bounded-thread criterion while everything is in flight: the hub's
+    // workers plus our own invoker threads, never a thread per tenant.
+    if let (Some(before), Some(during)) = (baseline, process_threads()) {
+        let added = during.saturating_sub(before);
+        assert!(
+            added <= WORKERS + INVOKE_THREADS + 2,
+            "expected O(workers) threads, got +{added} \
+             (before={before}, during={during})"
+        );
+        assert!(
+            during < TENANTS / 4,
+            "thread count must stay far below one-per-tenant ({during})"
+        );
+    }
+    for h in invokers {
+        h.join().unwrap();
+    }
+
+    // Per-tenant report isolation: every join carries its tenant tag and
+    // exactly its own pipeline's counters.
+    let mut joined = hub.join_all();
+    assert_eq!(joined.len(), 4);
+    joined.sort_by(|a, b| a.name.cmp(&b.name));
+    for (i, j) in joined.iter().enumerate() {
+        assert_eq!(j.name, format!("stream-{i}"));
+        assert_eq!(j.tenant.as_deref(), Some(format!("tenant-{i}").as_str()));
+        let report = j.report.as_ref().expect("streaming pipeline succeeded");
+        assert_eq!(
+            report.element("out").unwrap().buffers_in(),
+            frames_of(i),
+            "tenant {i} report must count its own frames only"
+        );
+        // every pipeline report carries latency percentiles
+        assert_eq!(report.latency.count, frames_of(i));
+        assert!(report.latency.p50 <= report.latency.p90);
+        assert!(report.latency.p90 <= report.latency.p99);
+    }
+}
+
+/// Satellite 1 (stop path): `request_stop_all` while unbounded live
+/// pipelines are mid-flight and app threads keep invoking must join
+/// every pipeline — no hang, no error.
+#[test]
+fn request_stop_all_under_full_load_joins_every_pipeline() {
+    let hub = Arc::new(PipelineHub::with_workers(WORKERS));
+    for i in 0..4 {
+        // no num-buffers: runs until stopped
+        let p = Pipeline::parse(
+            "videotestsrc pattern=ball ! \
+             video/x-raw,format=RGB,width=16,height=16,framerate=2400 ! \
+             tensor_converter ! fakesink name=out",
+        )
+        .unwrap();
+        hub.launch(format!("live-{i}"), p).unwrap();
+    }
+    // one topic consumer that the stop must also release
+    let sub = hub.subscribe("serving/never-published");
+    let stop = Arc::new(AtomicBool::new(false));
+    let invoker = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let input = vec![0.3f32; 128 * 3];
+            let mut n = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let s = SingleShot::open("ars_a_opt").unwrap();
+                s.invoke(&[&input]).unwrap();
+                n += 1;
+            }
+            n
+        })
+    };
+    // let the fleet actually saturate the pool
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(hub.running_count(), 4, "live pipelines still running");
+
+    hub.request_stop_all();
+    let joined = hub.join_all();
+    assert_eq!(joined.len(), 4);
+    for j in joined {
+        let report = j.report.expect("stopped pipeline joins cleanly");
+        assert!(
+            report.element("out").unwrap().buffers_in() > 0,
+            "{}: pipeline was mid-stream when stopped",
+            j.name
+        );
+    }
+    // the hub closed the subscriber it issued: recv terminates
+    assert!(sub.recv().is_err(), "stop_all closes issued subscribers");
+    stop.store(true, Ordering::Relaxed);
+    assert!(invoker.join().unwrap() > 0);
+}
+
+/// Tentpole 2: every quota dimension denies with a typed error —
+/// immediately, never a hang — and releases when usage drops.
+#[test]
+fn admission_control_denies_typed_on_every_dimension() {
+    let hub = PipelineHub::with_workers(1);
+    hub.set_quota(
+        "metered",
+        TenantQuota {
+            max_live_pipelines: 2,
+            max_queued_invokes: 3,
+            max_topic_buffers: 16,
+        },
+    );
+
+    // live pipelines: appsrc-fed pipelines stay live until stopped
+    let mk = || Pipeline::parse("appsrc name=in ! appsink name=out").unwrap();
+    hub.launch_as("metered", "p0", mk()).unwrap();
+    hub.launch_as("metered", "p1", mk()).unwrap();
+    match hub.launch_as("metered", "p2", mk()) {
+        Err(Error::AdmissionDenied {
+            tenant,
+            resource,
+            limit,
+        }) => {
+            assert_eq!(tenant, "metered");
+            assert_eq!(resource, "live pipelines");
+            assert_eq!(limit, 2);
+        }
+        Err(other) => panic!("expected typed denial, got {other}"),
+        Ok(_) => panic!("expected typed denial, launch was admitted"),
+    }
+
+    // queued invokes: RAII tickets bound concurrency, denial is typed
+    let tickets: Vec<_> = (0..3)
+        .map(|_| hub.try_admit_invoke("metered").unwrap())
+        .collect();
+    assert!(matches!(
+        hub.try_admit_invoke("metered"),
+        Err(Error::AdmissionDenied {
+            resource: "queued invokes",
+            limit: 3,
+            ..
+        })
+    ));
+    drop(tickets);
+    hub.try_admit_invoke("metered").unwrap();
+
+    // topic buffers: summed live capacity is budgeted
+    let _s = hub
+        .subscribe_as("metered", "serving/adm-a", 12, Qos::Leaky)
+        .unwrap();
+    assert!(matches!(
+        hub.subscribe_as("metered", "serving/adm-b", 8, Qos::Blocking),
+        Err(Error::AdmissionDenied {
+            resource: "topic buffers",
+            limit: 16,
+            ..
+        })
+    ));
+    let small = hub
+        .subscribe_as("metered", "serving/adm-b", 4, Qos::LatestOnly)
+        .unwrap();
+    drop(small);
+
+    // unmetered tenants and plain launches are unaffected
+    hub.launch_as("open", "q0", mk()).unwrap();
+    hub.launch("plain", mk()).unwrap();
+    hub.try_admit_invoke("open").unwrap();
+
+    hub.request_stop_all();
+    for j in hub.join_all() {
+        j.report.unwrap();
+    }
+}
+
+/// Satellite 4: a topic snapshot taken mid-stream is internally
+/// consistent — delivered never exceeds pushed or published, and the
+/// conservation identity `pushed == delivered + dropped + in_flight`
+/// holds exactly at every sample because the snapshot is taken under
+/// the topic lock (publishes can't interleave the read).
+#[test]
+fn midstream_topic_snapshot_never_shows_delivered_over_published() {
+    let topic = "serving/mid";
+    let hub = Arc::new(PipelineHub::with_workers(2));
+    let sub = hub.subscribe_with_capacity(topic, 4);
+    let p = Pipeline::parse(&format!(
+        "videotestsrc num-buffers=400 pattern=gradient ! \
+         video/x-raw,format=RGB,width=8,height=8,framerate=2400 ! \
+         tensor_converter ! tensor_query_serversink topic={topic} qos=blocking"
+    ))
+    .unwrap();
+
+    let done = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let hub = hub.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut samples = 0u64;
+            while !done.load(Ordering::Relaxed) {
+                for t in hub.streams().snapshot() {
+                    if t.name != topic {
+                        continue;
+                    }
+                    samples += 1;
+                    assert!(
+                        t.delivered <= t.pushed,
+                        "delivered {} > pushed {}",
+                        t.delivered,
+                        t.pushed
+                    );
+                    assert!(
+                        t.delivered <= t.published,
+                        "delivered {} > published {}",
+                        t.delivered,
+                        t.published
+                    );
+                    assert_eq!(
+                        t.pushed,
+                        t.delivered + t.dropped + t.in_flight,
+                        "conservation must hold at every mid-stream sample"
+                    );
+                    assert_eq!(t.dropped, t.drops.total());
+                }
+                std::thread::yield_now();
+            }
+            samples
+        })
+    };
+
+    hub.launch("publisher", p).unwrap();
+    let mut received = 0u64;
+    while sub.recv().is_ok() {
+        received += 1;
+    }
+    for j in hub.join_all() {
+        j.report.expect("publisher succeeded");
+    }
+    done.store(true, Ordering::Relaxed);
+    let samples = sampler.join().unwrap();
+    assert_eq!(received, 400, "blocking qos delivers every frame");
+    assert!(samples > 0, "sampler observed the topic mid-stream");
+
+    // final state: settled and conserved
+    let t = hub
+        .streams()
+        .snapshot()
+        .into_iter()
+        .find(|t| t.name == topic)
+        .unwrap();
+    assert_eq!(t.delivered, 400);
+    assert_eq!(t.in_flight, 0);
+    assert_eq!(t.pushed, t.delivered + t.dropped);
+    assert_eq!(t.latency.count, 400, "topic queue-wait histogram filled");
+}
+
+/// Topic QoS end to end through hub subscriptions: a leaky subscriber
+/// under flood loses frames (typed drop accounting) without gating the
+/// publisher, while a blocking subscriber on the same topic gets all.
+#[test]
+fn leaky_subscriber_sheds_while_blocking_peer_gets_everything() {
+    let topic = "serving/mixed";
+    let hub = PipelineHub::with_workers(2);
+    let lossless = hub.subscribe_with_capacity(topic, 8);
+    let lossy = hub.subscribe_as("lossy", topic, 2, Qos::Leaky).unwrap();
+
+    let p = Pipeline::parse(&format!(
+        "videotestsrc num-buffers=64 pattern=ball ! \
+         video/x-raw,format=RGB,width=8,height=8,framerate=2400 ! \
+         tensor_converter ! tensor_query_serversink topic={topic} qos=blocking"
+    ))
+    .unwrap();
+    hub.launch("src", p).unwrap();
+
+    let mut lossless_n = 0u64;
+    while lossless.recv().is_ok() {
+        lossless_n += 1;
+    }
+    for j in hub.join_all() {
+        j.report.unwrap();
+    }
+    assert_eq!(lossless_n, 64, "blocking subscriber got every frame");
+
+    // the lossy peer was never drained: at most its capacity in flight,
+    // the rest counted as leaky drops
+    let c = lossy.counters();
+    assert_eq!(c.pushed, 64);
+    assert!(c.in_flight <= 2);
+    assert_eq!(c.dropped.qos_leaky, c.pushed - c.delivered - c.in_flight);
+    assert!(c.dropped.qos_leaky >= 62);
+}
