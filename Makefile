@@ -20,6 +20,7 @@ bench:
 	cargo bench --bench e7_concurrency
 	cargo bench --bench e8_query
 	cargo bench --bench e9_serving
+	cargo bench --bench e10_faults
 
 # Quick perf gate: compiles every bench, runs the E6 memory bench with a
 # short frame budget (records artifacts/BENCH_e6_memory.json; asserts
@@ -29,13 +30,16 @@ bench:
 # E8 stream-endpoint bench (topic-linked split of the E1 chain; asserts
 # bit-identical sink output and bounded threads), then the E9 serving
 # bench (QoS isolation: a leaky-tenant flood plus a SingleShot storm
-# must not move a blocking victim's p99 latency).
+# must not move a blocking victim's p99 latency), then the E10 fault
+# bench (a chaos co-tenant panics twice and is restarted under backoff;
+# asserts bit-exact victim output and < 20% p99 movement).
 bench-smoke:
 	cargo bench --no-run
 	cargo bench --bench e6_memory -- --frames 64 --record
 	cargo bench --bench e7_concurrency -- --frames 8
 	cargo bench --bench e8_query -- --frames 24
 	cargo bench --bench e9_serving -- --frames 48
+	cargo bench --bench e10_faults -- --frames 48
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts

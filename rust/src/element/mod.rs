@@ -18,9 +18,10 @@ use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::error::{Error, Result};
+use crate::error::{Error, Fault, Result};
 use crate::metrics::stats::{Domain, ElementStats};
 use crate::pipeline::executor::{Inbox, PopResult, PushResult, Waker};
+use crate::pipeline::fault::{FaultInjector, FaultKind};
 use crate::tensor::{Buffer, Caps};
 
 pub use props::{FromProps, Props};
@@ -195,6 +196,10 @@ pub struct Ctx {
     /// is shed at the next link crossing or step gate instead of
     /// consuming further compute (see [`Ctx::past_deadline`]).
     pub(crate) deadline_ns: u64,
+    /// Deterministic fault injector for this element (chaos testing);
+    /// None in production. The executor consults it in the step path —
+    /// see [`Ctx::check_injected_fault`] for the step-index contract.
+    pub(crate) injector: Option<FaultInjector>,
 }
 
 impl Ctx {
@@ -376,10 +381,56 @@ impl Ctx {
     /// downstream inbox so consumers observe end-of-input once drained
     /// (the pooled analog of dropping a channel sender).
     pub(crate) fn release_outputs(&mut self) {
+        self.release_outputs_fault(None);
+    }
+
+    /// Like [`release_outputs`](Ctx::release_outputs), but first stamps a
+    /// fault close-reason on every downstream inbox. Consumers drain
+    /// whatever was already queued, then observe end-of-input *with* the
+    /// fault attached — partial output is flagged instead of passing for
+    /// a clean EOS, and the fault record keeps its origin across hops.
+    pub(crate) fn release_outputs_fault(&mut self, fault: Option<&Fault>) {
         for sender in self.outputs.iter().flatten() {
+            if let Some(f) = fault {
+                sender.inbox().producer_fault(f);
+            }
             sender.inbox().producer_done();
         }
         self.outputs.clear();
+    }
+
+    /// The fault (if any) recorded on this element's own input inbox by
+    /// a dead upstream producer. Checked by the executor when input is
+    /// exhausted, before deciding between the clean-EOS flush path and
+    /// fault propagation.
+    pub(crate) fn input_fault(&self) -> Option<Fault> {
+        self.input.as_ref().and_then(|ib| ib.fault())
+    }
+
+    /// Consult the fault injector for a fault armed at the *current*
+    /// step index, without consuming it (`Drop` faults and retried steps
+    /// need the spec to stay armed until the step really happens).
+    ///
+    /// Step-index contract (what "step N" means, per task kind):
+    /// * **sources** — the number of *productive* `generate()` calls so
+    ///   far, i.e. calls that returned `Ok(Flow::Continue)`; `Wait`
+    ///   retries do not advance the index, so index N is deterministic
+    ///   for a given pipeline regardless of scheduling.
+    /// * **consumers** — the number of `Item::Buffer` arrivals consumed
+    ///   so far (EOS markers and control drains do not count). The index
+    ///   advances via [`advance_injected_fault`](Ctx::advance_injected_fault)
+    ///   exactly once per buffer, before the element's `handle` runs.
+    pub(crate) fn check_injected_fault(&mut self) -> Option<FaultKind> {
+        self.injector.as_mut().and_then(|inj| inj.check())
+    }
+
+    /// Advance the injector's step index (see
+    /// [`check_injected_fault`](Ctx::check_injected_fault) for when the
+    /// executor calls this).
+    pub(crate) fn advance_injected_fault(&mut self) {
+        if let Some(inj) = self.injector.as_mut() {
+            inj.advance();
+        }
     }
 
     pub fn n_src_pads(&self) -> usize {
@@ -471,6 +522,16 @@ pub trait Element: Send {
         Ok(())
     }
 
+    /// Called instead of [`flush`](Element::flush) when the element's
+    /// stream was truncated by an upstream fault, or on the faulting
+    /// element itself as it is torn down. Elements that hand data to
+    /// application-side consumers (appsink, tensor_sink, query server
+    /// ports) override this to forward the fault as the close-reason of
+    /// their app-facing channel — **never** reporting a clean EOS for a
+    /// fault-truncated stream. Buffered partial state must not be
+    /// emitted as if the stream completed. Default: do nothing.
+    fn on_fault(&mut self, _fault: &Fault) {}
+
     /// Sources produce data instead of consuming it. Return `Flow::Eos`
     /// when exhausted.
     fn generate(&mut self, _ctx: &mut Ctx) -> Result<Flow> {
@@ -557,6 +618,7 @@ pub(crate) mod testutil {
             waker: None,
             saturated: Vec::new(),
             deadline_ns: 0,
+            injector: None,
         };
         (ctx, pads)
     }

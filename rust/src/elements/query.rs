@@ -42,10 +42,10 @@ use std::sync::Arc;
 
 use crate::element::props::unknown_property;
 use crate::element::{Ctx, Element, Flow, FromProps, Item, PadSpec, Props};
-use crate::error::{Error, Result};
+use crate::error::{Error, Fault, Result};
 use crate::pipeline::executor::SharedWaker;
 use crate::pipeline::stream::{
-    transport, PortRecv, PortSend, PublisherPort, Qos, SubscriberPort,
+    transport, PortRecv, PortSend, PublisherPort, Qos, StreamEnd, SubscriberPort,
     DEFAULT_ENDPOINT_CAPACITY,
 };
 use crate::tensor::Caps;
@@ -225,6 +225,15 @@ impl Element for TensorQueryServerSink {
         }
         Ok(())
     }
+
+    fn on_fault(&mut self, fault: &Fault) {
+        // the serving pipeline died: end the topic with the fault as its
+        // close-reason so remote consumers (serversrc in another
+        // pipeline, query clients) see a truncated stream, not clean EOS
+        if let Some(port) = self.port.as_mut() {
+            port.fail(fault);
+        }
+    }
 }
 
 /// Typed properties of [`TensorQueryServerSrc`].
@@ -387,10 +396,16 @@ impl Element for TensorQueryServerSrc {
             }
             PortRecv::Empty => Ok(Flow::Wait),
             PortRecv::End => {
+                let reason = port.close_reason();
                 // detach eagerly so a finished consumer never holds a
                 // queue that would saturate the topic's publishers
                 self.port = None;
-                Ok(Flow::Eos)
+                match reason {
+                    // the publisher pipeline died: re-raise the fault in
+                    // *this* pipeline so the truncation keeps propagating
+                    Some(StreamEnd::Fault(f)) => Err(Error::Fault(f)),
+                    _ => Ok(Flow::Eos),
+                }
             }
         }
     }
@@ -566,7 +581,12 @@ impl Element for TensorQueryClient {
                 ctx.push_back_input(pad, Item::Buffer(buf));
                 Ok(Flow::Wait)
             }
-            PortRecv::End => Ok(Flow::Eos),
+            PortRecv::End => match rep.close_reason() {
+                // the service died mid-stream: surface it as a typed
+                // fault instead of silently ending this pipeline
+                Some(StreamEnd::Fault(f)) => Err(Error::Fault(f)),
+                _ => Ok(Flow::Eos),
+            },
         }
     }
 

@@ -1,6 +1,6 @@
 //! Sink elements: `fakesink`, `appsink`, `tensor_sink`, `filesink`.
 
-use std::sync::mpsc::{RecvError, RecvTimeoutError, TryRecvError};
+use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -8,9 +8,9 @@ use crate::element::props::{parse_bool, unknown_property};
 use crate::element::{
     BufferCallback, ControlMsg, Ctx, Element, Flow, FromProps, Item, PadSpec, Props,
 };
-use crate::error::{Error, Result};
+use crate::error::{Error, Fault, Result};
 use crate::pipeline::executor::SharedWaker;
-use crate::pipeline::stream::{Endpoint, EpPop, EpPush, DEFAULT_ENDPOINT_CAPACITY};
+use crate::pipeline::stream::{Endpoint, EpPop, EpPush, StreamEnd, DEFAULT_ENDPOINT_CAPACITY};
 use crate::tensor::{Buffer, Caps};
 
 use super::sources::parse_usize;
@@ -188,11 +188,16 @@ pub struct AppSinkReceiver {
 }
 
 impl AppSinkReceiver {
-    /// Block until the next buffer; errors once the pipeline reached
-    /// end-of-stream and the endpoint drained.
-    pub fn recv(&self) -> std::result::Result<Buffer, RecvError> {
+    /// Block until the next buffer; errors once the stream ended and the
+    /// endpoint drained. The error is the typed close-reason: a clean
+    /// pipeline end yields [`StreamEnd::Eos`], an upstream element dying
+    /// mid-stream yields [`StreamEnd::Fault`] — so an application can
+    /// never mistake a fault-truncated stream for a complete one.
+    pub fn recv(&self) -> std::result::Result<Buffer, StreamEnd> {
         // every pop wakes a parked sink so it can deliver its pending frame
-        self.ep.pop_blocking().ok_or(RecvError)
+        self.ep
+            .pop_blocking()
+            .ok_or_else(|| self.ep.close_reason().unwrap_or(StreamEnd::Eos))
     }
 
     pub fn try_recv(&self) -> std::result::Result<Buffer, TryRecvError> {
@@ -217,6 +222,16 @@ impl AppSinkReceiver {
     /// Drain iterator; terminates when the pipeline reaches end-of-stream.
     pub fn iter(&self) -> impl Iterator<Item = Buffer> + '_ {
         std::iter::from_fn(move || self.recv().ok())
+    }
+
+    /// Why the stream ended — `None` while it is still flowing. Useful
+    /// after [`try_recv`](AppSinkReceiver::try_recv) /
+    /// [`recv_timeout`](AppSinkReceiver::recv_timeout) reported
+    /// `Disconnected` (those keep their std error types), or after an
+    /// [`iter`](AppSinkReceiver::iter) drain, to check whether the
+    /// collected output is complete or fault-truncated.
+    pub fn close_reason(&self) -> Option<StreamEnd> {
+        self.ep.close_reason()
     }
 }
 
@@ -341,6 +356,13 @@ impl Element for AppSink {
         // (queued buffers still drain before recv() errors)
         self.ep.set_eos();
         Ok(())
+    }
+
+    fn on_fault(&mut self, fault: &Fault) {
+        // the stream died upstream (or this task itself is dying): end
+        // the app endpoint with the fault as its close-reason so the
+        // application's recv() reports the truncation, never a clean EOS
+        self.ep.fail(fault);
     }
 }
 

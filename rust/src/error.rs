@@ -3,6 +3,60 @@
 //! `Display`/`Error` are implemented by hand: the crate is dependency-free
 //! apart from `once_cell`, so there is no `thiserror` to derive them.
 
+use std::time::Duration;
+
+/// A typed stream fault: what broke, where, and how. Faults flow
+/// *downstream* — when an element dies, every link, endpoint, and topic
+/// it fed carries this record as its close-reason, so consumers (other
+/// elements, `AppSink` receivers, topic subscribers in other pipelines)
+/// can distinguish a fault-truncated stream from a clean end-of-stream.
+///
+/// The `element` names the *origin* of the fault, even after the fault
+/// crossed several links or a topic boundary: propagation preserves the
+/// original record instead of re-wrapping it per hop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fault {
+    /// Name of the element where the fault originated.
+    pub element: String,
+    /// Human-readable cause (panic payload or error message).
+    pub message: String,
+    /// The origin was a caught panic (vs. a typed `Err` return).
+    pub panicked: bool,
+}
+
+impl Fault {
+    /// Derive the fault record to propagate downstream from the error a
+    /// task died with. A fault that merely *arrived* at this element
+    /// ([`Error::Fault`]) keeps its original origin; a caught panic
+    /// ([`Error::Panicked`]) keeps its payload and panic flag; anything
+    /// else becomes a non-panic fault attributed to `element`.
+    pub fn from_error(element: &str, err: &Error) -> Fault {
+        match err {
+            Error::Fault(f) => f.clone(),
+            Error::Panicked { element, message } => Fault {
+                element: element.clone(),
+                message: message.clone(),
+                panicked: true,
+            },
+            other => Fault {
+                element: element.to_string(),
+                message: other.to_string(),
+                panicked: false,
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.panicked {
+            write!(f, "element {} panicked: {}", self.element, self.message)
+        } else {
+            write!(f, "element {} failed: {}", self.element, self.message)
+        }
+    }
+}
+
 /// Errors produced by the streaming framework and its elements.
 #[derive(Debug)]
 pub enum Error {
@@ -59,6 +113,37 @@ pub enum Error {
         limit: usize,
     },
 
+    /// An element panicked while processing a step. The panic payload
+    /// string is preserved (`&str`/`String` payloads; anything else is
+    /// reported as an opaque payload) so the cause survives into logs
+    /// and reports instead of being flattened to "element X panicked".
+    Panicked { element: String, message: String },
+
+    /// The stream this consumer was reading was truncated by a fault in
+    /// an upstream element — possibly in another pipeline, across a
+    /// topic. Carries the originating [`Fault`] record.
+    Fault(Fault),
+
+    /// A pipeline made no scheduler progress while runnable for longer
+    /// than the hub watchdog's configured `stall_timeout`.
+    Stalled {
+        pipeline: String,
+        /// How long the pipeline sat runnable without progress before
+        /// the watchdog fired.
+        stalled_for: Duration,
+    },
+
+    /// A supervised pipeline exhausted its restart budget and was
+    /// quarantined by the hub; it will not be restarted again.
+    Quarantined {
+        pipeline: String,
+        /// Restarts consumed before quarantine (== the policy's
+        /// `max_restarts`).
+        restarts: u32,
+        /// Rendered cause of the final fault.
+        reason: String,
+    },
+
     /// NNFW / model runtime failure (artifact load or execute).
     Runtime(String),
 
@@ -103,6 +188,27 @@ impl std::fmt::Display for Error {
                 f,
                 "admission denied for tenant {tenant:?}: {resource} quota \
                  exhausted (limit {limit})"
+            ),
+            Error::Panicked { element, message } => {
+                write!(f, "element {element} panicked: {message}")
+            }
+            Error::Fault(fault) => write!(f, "stream truncated by a fault: {fault}"),
+            Error::Stalled {
+                pipeline,
+                stalled_for,
+            } => write!(
+                f,
+                "pipeline {pipeline:?} stalled: no progress while runnable for \
+                 {:.3}s",
+                stalled_for.as_secs_f64()
+            ),
+            Error::Quarantined {
+                pipeline,
+                restarts,
+                reason,
+            } => write!(
+                f,
+                "pipeline {pipeline:?} quarantined after {restarts} restarts: {reason}"
             ),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
@@ -186,6 +292,73 @@ mod tests {
             "admission denied for tenant \"acme\": live pipelines quota \
              exhausted (limit 2)"
         );
+    }
+
+    #[test]
+    fn fault_variants_render_origin_and_cause() {
+        assert_eq!(
+            Error::Panicked {
+                element: "tensor_filter0".into(),
+                message: "index out of bounds".into(),
+            }
+            .to_string(),
+            "element tensor_filter0 panicked: index out of bounds"
+        );
+        let fault = Fault {
+            element: "videoscale0".into(),
+            message: "boom".into(),
+            panicked: false,
+        };
+        assert_eq!(
+            Error::Fault(fault.clone()).to_string(),
+            "stream truncated by a fault: element videoscale0 failed: boom"
+        );
+        let panicked = Fault {
+            panicked: true,
+            ..fault
+        };
+        assert_eq!(
+            Error::Fault(panicked).to_string(),
+            "stream truncated by a fault: element videoscale0 panicked: boom"
+        );
+        assert_eq!(
+            Error::Stalled {
+                pipeline: "cam".into(),
+                stalled_for: Duration::from_millis(1500),
+            }
+            .to_string(),
+            "pipeline \"cam\" stalled: no progress while runnable for 1.500s"
+        );
+        assert_eq!(
+            Error::Quarantined {
+                pipeline: "cam".into(),
+                restarts: 3,
+                reason: "element f panicked: boom".into(),
+            }
+            .to_string(),
+            "pipeline \"cam\" quarantined after 3 restarts: element f panicked: boom"
+        );
+    }
+
+    #[test]
+    fn fault_from_error_preserves_origin_across_hops() {
+        // a panic becomes a panicked fault at its own element
+        let panic_err = Error::Panicked {
+            element: "filter0".into(),
+            message: "overflow".into(),
+        };
+        let f = Fault::from_error("filter0", &panic_err);
+        assert!(f.panicked);
+        assert_eq!(f.element, "filter0");
+        assert_eq!(f.message, "overflow");
+        // a fault arriving at a downstream element keeps the origin
+        let downstream = Fault::from_error("sink0", &Error::Fault(f.clone()));
+        assert_eq!(downstream, f, "propagation must not re-attribute");
+        // a typed element error becomes a non-panic fault
+        let e = Fault::from_error("decoder0", &Error::element("decoder0", "bad header"));
+        assert!(!e.panicked);
+        assert_eq!(e.element, "decoder0");
+        assert!(e.message.contains("bad header"));
     }
 
     #[test]

@@ -91,4 +91,4 @@ pub mod runtime;
 pub mod tensor;
 pub mod video;
 
-pub use error::{Error, Result};
+pub use error::{Error, Fault, Result};

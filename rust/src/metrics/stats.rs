@@ -435,6 +435,13 @@ pub struct PipelineReport {
     /// End-to-end frame latency percentiles (sink arrival − pts),
     /// aggregated over this pipeline's terminal elements.
     pub latency: LatencySummary,
+    /// Supervised restarts consumed before this (successful) run —
+    /// stamped by the hub supervisor; zero for unsupervised pipelines.
+    pub restarts: u32,
+    /// Faults absorbed across the supervised incarnations that preceded
+    /// this run (== `restarts` for a pipeline that eventually
+    /// succeeded); zero for unsupervised pipelines.
+    pub faults: u32,
 }
 
 impl PipelineReport {

@@ -41,8 +41,9 @@ use std::time::{Duration, Instant};
 use once_cell::sync::Lazy;
 
 use crate::element::{Ctx, Element, Flow, Item};
-use crate::error::Error;
+use crate::error::{Error, Fault};
 use crate::metrics::stats::ElementStats;
+use crate::pipeline::fault::FaultKind;
 
 /// Hard ceiling on the worker count of any executor — the "bounded
 /// thread" guarantee of the hub holds even against misconfiguration
@@ -105,6 +106,12 @@ struct InboxInner {
     open_producers: usize,
     /// Set when the consumer finishes; producers observe [`PushResult::Closed`].
     closed: bool,
+    /// A producer died: the stream feeding this inbox is truncated, not
+    /// complete. Queued items still drain first (in-order truncation);
+    /// once the consumer observes [`PopResult::Exhausted`] it checks
+    /// this record to distinguish fault from clean EOS. First fault
+    /// wins and the record is sticky.
+    fault: Option<Fault>,
     /// Producer tasks parked until this inbox drains below capacity.
     waiters: Vec<Arc<Task>>,
 }
@@ -137,6 +144,7 @@ impl Inbox {
                 queue: VecDeque::new(),
                 open_producers: 0,
                 closed: false,
+                fault: None,
                 waiters: Vec::new(),
             }),
             avail: Condvar::new(),
@@ -311,6 +319,23 @@ impl Inbox {
         !g.queue.is_empty() || g.closed || g.open_producers == 0
     }
 
+    /// A producing link died with a fault: record it (first fault wins,
+    /// sticky) so the consumer can tell truncation from clean EOS when
+    /// it reaches end-of-input. Always paired with
+    /// [`producer_done`](Inbox::producer_done), which does the
+    /// accounting and the wake.
+    pub(crate) fn producer_fault(&self, fault: &Fault) {
+        let mut g = lock(&self.inner);
+        if g.fault.is_none() {
+            g.fault = Some(fault.clone());
+        }
+    }
+
+    /// The fault a dead producer left on this inbox, if any.
+    pub(crate) fn fault(&self) -> Option<Fault> {
+        lock(&self.inner).fault.clone()
+    }
+
     /// One producing link finished; at zero the consumer observes
     /// end-of-input once drained (channel-disconnect analog).
     pub(crate) fn producer_done(&self) {
@@ -380,6 +405,21 @@ impl Waker {
     pub fn wake(&self) {
         if let Some(t) = self.task.upgrade() {
             wake_task(&t);
+        }
+    }
+
+    /// True while the task is queued or mid-step — i.e. the scheduler
+    /// considers it *runnable* rather than parked or finished. The hub
+    /// watchdog uses this: a pipeline is only "stalled" when some task
+    /// is runnable yet the progress counters stop moving; a fully
+    /// parked pipeline is merely idle, not stalled.
+    pub(crate) fn is_runnable(&self) -> bool {
+        match self.task.upgrade() {
+            Some(t) => matches!(
+                lock(&t.sched).state,
+                SchedState::Queued | SchedState::Running
+            ),
+            None => false,
         }
     }
 }
@@ -514,6 +554,17 @@ impl PipelineRun {
 
     pub(crate) fn take_error(&self) -> Option<Error> {
         lock(&self.first_err).take()
+    }
+
+    /// Record a pipeline-level error from outside the task path (the hub
+    /// watchdog killing a stalled pipeline). First error wins, same as
+    /// task errors, so a watchdog kill never masks the element fault
+    /// that caused the stall.
+    pub(crate) fn fail(&self, err: Error) {
+        let mut g = lock(&self.first_err);
+        if g.is_none() {
+            *g = Some(err);
+        }
     }
 
     pub(crate) fn take_elements(&self) -> Vec<Option<Box<dyn Element>>> {
@@ -708,15 +759,35 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                 push_all_eos(cx);
                 return Outcome::Finish(None);
             }
+            // Deterministic fault injection: the source's step index is
+            // the number of *productive* generate() calls so far (Wait
+            // retries don't count), so an injected fault lands at the
+            // same produced-buffer boundary for any worker count.
+            if let Some(kind) = cx.check_injected_fault() {
+                match kind {
+                    FaultKind::Panic => panic!("injected fault: panic before source step"),
+                    FaultKind::Error => {
+                        return Outcome::Finish(Some(Error::element(
+                            el.type_name(),
+                            "injected fault",
+                        )));
+                    }
+                    FaultKind::DelayMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
+                    FaultKind::Drop => return Outcome::Park(Verdict::Ready),
+                }
+            }
             let t0 = Instant::now();
             let flow = drain_control(el, cx).and_then(|_| el.generate(cx));
             let busy = t0.elapsed().saturating_sub(cx.take_idle());
             stats.record_busy(cx.domain, busy);
+            if matches!(flow, Ok(Flow::Continue)) {
+                cx.advance_injected_fault();
+            }
             match flow {
-                Err(e) => {
-                    push_all_eos(cx);
-                    Outcome::Finish(Some(e))
-                }
+                // No EOS downstream on error: the stream is truncated,
+                // not complete — finish_task forwards the typed fault to
+                // every downstream inbox instead.
+                Err(e) => Outcome::Finish(Some(e)),
                 Ok(Flow::Eos) => {
                     push_all_eos(cx);
                     Outcome::Finish(None)
@@ -737,10 +808,23 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
         TaskKind::Consumer { n_sink_links } => match cx.poll_input() {
             PopResult::Pending => Outcome::Park(Verdict::ParkInput),
             PopResult::Exhausted => {
-                // All producers gone before full EOS accounting (an
-                // upstream error): flush and unwind, exactly like the
-                // seed's disconnected-channel path.
                 if !*early_eos {
+                    if let Some(fault) = cx.input_fault() {
+                        // A producer died: the stream is truncated, not
+                        // complete. No flush (partial state must not be
+                        // emitted as if the stream finished) and no EOS
+                        // downstream — the element is told via on_fault
+                        // (sinks forward it to application endpoints)
+                        // and finish_task propagates the typed fault.
+                        let _ = drain_control(el, cx);
+                        el.on_fault(&fault);
+                        return Outcome::Finish(None);
+                    }
+                    // All producers gone with full EOS accounting still
+                    // pending but no fault recorded (e.g. an upstream
+                    // element finished early on request): flush and
+                    // unwind, exactly like the seed's
+                    // disconnected-channel path.
                     let t0 = Instant::now();
                     let r = drain_control(el, cx).and_then(|_| el.flush(cx));
                     let busy = t0.elapsed().saturating_sub(cx.take_idle());
@@ -755,6 +839,37 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
             PopResult::Item((pad, item)) => {
                 if matches!(item, Item::Eos) {
                     *eos_seen += 1;
+                }
+                // Deterministic fault injection: a consumer's step index
+                // counts the buffers that arrived at the element, so an
+                // injected fault lands before the same input frame for
+                // any worker count. Drop discards the frame (it still
+                // advances the index).
+                if !*early_eos && matches!(item, Item::Buffer(_)) {
+                    if let Some(kind) = cx.check_injected_fault() {
+                        match kind {
+                            FaultKind::Panic => {
+                                panic!("injected fault: panic before consuming buffer")
+                            }
+                            FaultKind::Error => {
+                                return Outcome::Finish(Some(Error::element(
+                                    el.type_name(),
+                                    "injected fault",
+                                )));
+                            }
+                            FaultKind::DelayMs(ms) => {
+                                std::thread::sleep(Duration::from_millis(ms));
+                            }
+                            FaultKind::Drop => {
+                                cx.advance_injected_fault();
+                                if let Err(e) = drain_control(el, cx) {
+                                    return Outcome::Finish(Some(e));
+                                }
+                                return Outcome::Park(Verdict::Ready);
+                            }
+                        }
+                    }
+                    cx.advance_injected_fault();
                 }
                 // Deadline step gate: a buffer that is already past the
                 // pipeline's deadline budget is shed here, before the
@@ -809,7 +924,8 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                             *early_eos = true;
                         }
                         Err(e) => {
-                            push_all_eos(cx);
+                            // no EOS downstream: finish_task forwards
+                            // the typed fault instead
                             return Outcome::Finish(Some(e));
                         }
                     }
@@ -838,15 +954,34 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
 /// Tear a finished task down so neighbors observe termination exactly
 /// like a thread exit under the seed scheduler: downstream inboxes lose
 /// a producer (end-of-input once drained), the own inbox closes (pushes
-/// fail, parked producers release), and the element lands in its
-/// pipeline completion slot.
+/// fail, parked producers release — upstream unwinds instead of
+/// leaking), and the element lands in its pipeline completion slot.
+///
+/// Fault flow: a task that dies with an error — or whose own input
+/// carried a fault from further upstream — stamps that fault on every
+/// downstream inbox before detaching, so the truncation reason travels
+/// the whole chain (and across topics, via the element `on_fault`
+/// hooks) instead of decaying into a clean-looking EOS.
 fn finish_task(task: &Arc<Task>, err: Option<Error>) {
-    let (element, ctx) = {
+    let (mut element, ctx) = {
         let mut core = lock(&task.step);
         (core.element.take(), core.ctx.take())
     };
+    let fault = match &err {
+        Some(e) => Some(Fault::from_error(&task.name, e)),
+        None => task.inbox.as_ref().and_then(|ib| ib.fault()),
+    };
+    if let (Some(e), Some(el)) = (&err, element.as_mut()) {
+        // The dying element gets the fault too (an appsink that
+        // panicked must still fail its application endpoint, or the
+        // receiver would mistake the truncation for clean EOS). The
+        // element may be mid-panic-unwind state, so a second panic in
+        // the hook is contained here.
+        let f = Fault::from_error(&task.name, e);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| el.on_fault(&f)));
+    }
     if let Some(mut cx) = ctx {
-        cx.release_outputs();
+        cx.release_outputs_fault(fault.as_ref());
     }
     if let Some(ib) = &task.inbox {
         ib.close();
@@ -957,41 +1092,77 @@ fn worker_loop(core: Arc<ExecutorCore>) {
         match outcome {
             Ok(Outcome::Park(v)) => apply_verdict(&task, v),
             Ok(Outcome::Finish(err)) => finish_task(&task, err),
-            Err(_) => finish_task(
-                &task,
-                Some(Error::Runtime(format!("element {} panicked", task.name))),
-            ),
+            Err(payload) => {
+                // preserve the panic payload: `panic!("...")` carries a
+                // &str or String; anything else stays opaque
+                let message = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "panic payload of unknown type".to_string());
+                finish_task(
+                    &task,
+                    Some(Error::Panicked {
+                        element: task.name.clone(),
+                        message,
+                    }),
+                );
+            }
         }
     }
+}
+
+/// Lower bound of the *auto-detected* worker count (explicit requests
+/// may go below it — see [`clamp_explicit_workers`]).
+pub const AUTO_WORKERS_MIN: usize = 2;
+/// Upper bound of the *auto-detected* worker count.
+pub const AUTO_WORKERS_MAX: usize = 8;
+
+/// The single home of the worker-count envelope. Two regimes exist on
+/// purpose and must not be conflated:
+///
+/// * **explicit** — `Executor::new(n)` or `NNS_WORKERS=n`: the caller
+///   decides; we only enforce `1..=`[`MAX_WORKERS`]. One worker is
+///   valid and fully supported (every pipeline still completes, just
+///   serialized — the CI matrix runs the whole suite under
+///   `NNS_WORKERS=1` and `NNS_WORKERS=8`).
+/// * **auto-detected** — no configuration: the core count clamped to
+///   [`AUTO_WORKERS_MIN`]`..=`[`AUTO_WORKERS_MAX`], so the default
+///   neither grabs a big machine's every core uninvited nor drops to a
+///   single worker on a 1-core box.
+fn clamp_explicit_workers(n: usize) -> usize {
+    n.clamp(1, MAX_WORKERS)
 }
 
 fn default_workers() -> usize {
     if let Ok(v) = std::env::var("NNS_WORKERS") {
         if let Ok(n) = v.trim().parse::<usize>() {
-            return n.clamp(1, MAX_WORKERS);
+            return clamp_explicit_workers(n);
         }
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
-        .clamp(2, 8)
+        .clamp(AUTO_WORKERS_MIN, AUTO_WORKERS_MAX)
 }
 
 /// A fixed-size worker pool executing element tasks. Cheap to clone
 /// (shared handle). The process-wide [`Executor::global`] instance sizes
-/// itself from `NNS_WORKERS` (default: the core count, clamped to 2–8)
-/// and backs `Pipeline::play`/`run` and `SingleShot`; dedicated
-/// executors serve tests and [`PipelineHub`](crate::pipeline::PipelineHub)s
-/// that need their own bounded pool.
+/// itself from `NNS_WORKERS` (default: the core count, clamped to
+/// [`AUTO_WORKERS_MIN`]..=[`AUTO_WORKERS_MAX`]) and backs
+/// `Pipeline::play`/`run` and `SingleShot`; dedicated executors serve
+/// tests and [`PipelineHub`](crate::pipeline::PipelineHub)s that need
+/// their own bounded pool.
 #[derive(Clone)]
 pub struct Executor {
     core: Arc<ExecutorCore>,
 }
 
 impl Executor {
-    /// Spawn a pool of `workers` threads (clamped to 1..=[`MAX_WORKERS`]).
+    /// Spawn a pool of `workers` threads (clamped to 1..=[`MAX_WORKERS`];
+    /// see [`clamp_explicit_workers`] for the full envelope).
     pub fn new(workers: usize) -> Executor {
-        let workers = workers.clamp(1, MAX_WORKERS);
+        let workers = clamp_explicit_workers(workers);
         let core = Arc::new(ExecutorCore {
             rq: Mutex::new(RunQueue::new()),
             available: Condvar::new(),
@@ -1187,5 +1358,42 @@ mod tests {
         let e = Executor::new(MAX_WORKERS + 100);
         assert_eq!(e.worker_count(), MAX_WORKERS);
         e.shutdown();
+    }
+
+    #[test]
+    fn worker_clamp_envelope() {
+        // Explicit requests honor the full 1..=MAX_WORKERS envelope; the
+        // auto-detected default never leaves AUTO_WORKERS_MIN..=MAX.
+        assert_eq!(clamp_explicit_workers(0), 1);
+        assert_eq!(clamp_explicit_workers(1), 1);
+        assert_eq!(clamp_explicit_workers(8), 8);
+        assert_eq!(clamp_explicit_workers(MAX_WORKERS), MAX_WORKERS);
+        assert_eq!(clamp_explicit_workers(MAX_WORKERS + 1), MAX_WORKERS);
+        assert!(AUTO_WORKERS_MIN >= 1);
+        assert!(AUTO_WORKERS_MAX <= MAX_WORKERS);
+        // a single explicit worker still runs a pipeline to completion
+        let e = Executor::new(1);
+        assert_eq!(e.worker_count(), 1);
+        e.shutdown();
+    }
+
+    #[test]
+    fn inbox_records_first_fault_only() {
+        let ib = Inbox::new(4, stats());
+        ib.add_producer();
+        assert!(ib.fault().is_none());
+        let f1 = Fault {
+            element: "a".into(),
+            message: "first".into(),
+            panicked: true,
+        };
+        let f2 = Fault {
+            element: "b".into(),
+            message: "second".into(),
+            panicked: false,
+        };
+        ib.producer_fault(&f1);
+        ib.producer_fault(&f2);
+        assert_eq!(ib.fault(), Some(f1));
     }
 }

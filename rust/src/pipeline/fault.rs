@@ -1,0 +1,284 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] arms faults at exact *step indices* of named
+//! elements; [`Pipeline::set_fault_plan`](crate::Pipeline::set_fault_plan)
+//! threads it into the executor, which consults a per-element
+//! [`FaultInjector`] in the step path. Because the step index is defined
+//! in stream terms — the Nth produced buffer for a source, the Nth
+//! arriving buffer for a consumer (see
+//! `Ctx::check_injected_fault`) — an armed fault fires at the same
+//! point in the data stream for any worker count or schedule, which is
+//! what makes chaos runs reproducible and their assertions exact.
+//!
+//! This is test/bench infrastructure compiled into the crate (it's the
+//! foundation of `tests/chaos.rs` and the `e10_faults` bench), but it's
+//! inert unless a plan is installed: production pipelines carry no
+//! injector and pay only an `Option` check that is `None`.
+
+use crate::error::{Error, Result};
+
+/// What an armed fault does when its step arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the element's step (exercises the catch-unwind +
+    /// typed [`Error::Panicked`](crate::Error::Panicked) path).
+    Panic,
+    /// Return a typed element error from the step.
+    Error,
+    /// Sleep this many milliseconds inside the step while *runnable* —
+    /// the signature a stall watchdog must detect (progress counters
+    /// frozen, task not parked).
+    DelayMs(u64),
+    /// Discard one buffer. On a consumer the arriving buffer is
+    /// consumed and dropped (the step index still advances); on a
+    /// source there is no buffer to discard yet, so it degrades to a
+    /// skipped scheduling step.
+    Drop,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "error" => Ok(FaultKind::Error),
+            "drop" => Ok(FaultKind::Drop),
+            _ => {
+                if let Some(ms) = s.strip_prefix("delay:") {
+                    let ms = ms.parse::<u64>().map_err(|_| {
+                        Error::Parse(format!("bad fault delay {ms:?}: expected milliseconds"))
+                    })?;
+                    Ok(FaultKind::DelayMs(ms))
+                } else {
+                    Err(Error::Parse(format!(
+                        "unknown fault kind {s:?}: expected panic|error|delay:MS|drop"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// One armed fault: element name + step index + kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Name of the element (graph node name, e.g. `"tensor_filter0"`).
+    pub element: String,
+    /// Step index at which to fire (0 = before the first buffer).
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// A set of armed faults for one pipeline run. Build programmatically
+/// ([`at`](FaultPlan::at)) or parse the compact string form
+/// `"element:step:kind"` (comma-separated; kinds:
+/// `panic | error | delay:MS | drop`):
+///
+/// ```
+/// use nnstreamer::pipeline::fault::{FaultKind, FaultPlan};
+/// let plan = FaultPlan::parse("filter0:3:panic,sink0:10:delay:250").unwrap();
+/// assert_eq!(plan.specs().len(), 2);
+/// assert_eq!(plan.specs()[1].kind, FaultKind::DelayMs(250));
+/// let same = FaultPlan::new()
+///     .at("filter0", 3, FaultKind::Panic)
+///     .at("sink0", 10, FaultKind::DelayMs(250));
+/// assert_eq!(plan, same);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Arm `kind` at step `step` of element `element` (builder-style).
+    pub fn at(mut self, element: impl Into<String>, step: u64, kind: FaultKind) -> FaultPlan {
+        self.specs.push(FaultSpec {
+            element: element.into(),
+            step,
+            kind,
+        });
+        self
+    }
+
+    /// Parse the compact `"element:step:kind,..."` form.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            // kind may itself contain ':' (delay:MS) — split off the
+            // first two fields only.
+            let mut it = part.splitn(3, ':');
+            let (el, step, kind) = (it.next(), it.next(), it.next());
+            let (Some(el), Some(step), Some(kind)) = (el, step, kind) else {
+                return Err(Error::Parse(format!(
+                    "bad fault spec {part:?}: expected element:step:kind"
+                )));
+            };
+            let step = step.parse::<u64>().map_err(|_| {
+                Error::Parse(format!("bad fault step {step:?}: expected integer"))
+            })?;
+            plan.specs.push(FaultSpec {
+                element: el.to_string(),
+                step,
+                kind: FaultKind::parse(kind)?,
+            });
+        }
+        Ok(plan)
+    }
+
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// The injector for one element, or `None` when the plan arms
+    /// nothing there (the executor then skips injection entirely).
+    pub(crate) fn injector_for(&self, element: &str) -> Option<FaultInjector> {
+        let specs: Vec<InjSpec> = self
+            .specs
+            .iter()
+            .filter(|s| s.element == element)
+            .map(|s| InjSpec {
+                step: s.step,
+                kind: s.kind,
+                fired: false,
+            })
+            .collect();
+        if specs.is_empty() {
+            None
+        } else {
+            Some(FaultInjector { specs, seen: 0 })
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct InjSpec {
+    step: u64,
+    kind: FaultKind,
+    fired: bool,
+}
+
+/// Per-element runtime state of a [`FaultPlan`]: a step counter plus
+/// the armed specs. `check()` fires a spec at most once (sticky `fired`
+/// flag), so a `DelayMs` consulted again on a retried step does not
+/// sleep twice; `advance()` moves the stream-position counter per the
+/// contract documented on `Ctx::check_injected_fault`.
+#[derive(Debug, Clone)]
+pub(crate) struct FaultInjector {
+    specs: Vec<InjSpec>,
+    /// Current step index (buffers produced / arrived so far).
+    seen: u64,
+}
+
+impl FaultInjector {
+    /// Fault armed at the current step index, if any (fires once).
+    pub(crate) fn check(&mut self) -> Option<FaultKind> {
+        let seen = self.seen;
+        for spec in self.specs.iter_mut() {
+            if !spec.fired && spec.step == seen {
+                spec.fired = true;
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+
+    /// Advance the step index by one.
+    pub(crate) fn advance(&mut self) {
+        self.seen += 1;
+    }
+}
+
+/// Tiny deterministic PRNG (splitmix64) for seeded chaos schedules —
+/// shared by `tests/chaos.rs` and the `e10_faults` bench so "randomized"
+/// step indices are reproducible from a printed seed.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_all_kinds() {
+        let plan = FaultPlan::parse("a:0:panic, b:7:error, c:3:delay:40, d:2:drop").unwrap();
+        assert_eq!(
+            plan.specs(),
+            &[
+                FaultSpec {
+                    element: "a".into(),
+                    step: 0,
+                    kind: FaultKind::Panic
+                },
+                FaultSpec {
+                    element: "b".into(),
+                    step: 7,
+                    kind: FaultKind::Error
+                },
+                FaultSpec {
+                    element: "c".into(),
+                    step: 3,
+                    kind: FaultKind::DelayMs(40)
+                },
+                FaultSpec {
+                    element: "d".into(),
+                    step: 2,
+                    kind: FaultKind::Drop
+                },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("a:1").is_err());
+        assert!(FaultPlan::parse("a:x:panic").is_err());
+        assert!(FaultPlan::parse("a:1:explode").is_err());
+        assert!(FaultPlan::parse("a:1:delay:soon").is_err());
+    }
+
+    #[test]
+    fn injector_fires_at_exact_step_once() {
+        let plan = FaultPlan::new()
+            .at("f", 2, FaultKind::Panic)
+            .at("f", 4, FaultKind::Drop)
+            .at("other", 0, FaultKind::Error);
+        assert!(plan.injector_for("missing").is_none());
+        let mut inj = plan.injector_for("f").unwrap();
+        // step 0, 1: nothing armed
+        assert_eq!(inj.check(), None);
+        inj.advance();
+        assert_eq!(inj.check(), None);
+        inj.advance();
+        // step 2: fires exactly once even if the step retries
+        assert_eq!(inj.check(), Some(FaultKind::Panic));
+        assert_eq!(inj.check(), None);
+        inj.advance();
+        inj.advance(); // skip to step 4 — 3 was never checked; harmless
+        assert_eq!(inj.check(), Some(FaultKind::Drop));
+        inj.advance();
+        assert_eq!(inj.check(), None);
+    }
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = 42u64;
+        let mut b = 42u64;
+        let xs: Vec<u64> = (0..4).map(|_| splitmix64(&mut a)).collect();
+        let ys: Vec<u64> = (0..4).map(|_| splitmix64(&mut b)).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs[0], xs[1]);
+    }
+}

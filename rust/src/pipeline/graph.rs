@@ -36,6 +36,10 @@ pub struct Graph {
     /// `shed` counter — late frames stop consuming compute instead of
     /// growing queues. See `Pipeline::set_deadline`.
     pub deadline_ns: u64,
+    /// Deterministic fault-injection plan for chaos testing (None in
+    /// production). See `Pipeline::set_fault_plan` and
+    /// [`crate::pipeline::fault`].
+    pub fault_plan: Option<crate::pipeline::fault::FaultPlan>,
     names: HashMap<String, NodeId>,
 }
 

@@ -32,12 +32,13 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::stats::PipelineReport;
 use crate::pipeline::executor::{lock, Executor, Priority};
-use crate::pipeline::scheduler::{self, Controller, Running};
+use crate::pipeline::scheduler::{self, Controller, Running, WatchdogProbe};
 use crate::pipeline::stream::{
     Qos, QueryClient, StreamRegistry, SubscriberClose, TopicPublisher, TopicSubscriber,
 };
@@ -107,6 +108,248 @@ impl Drop for InvokeTicket {
     }
 }
 
+/// What the hub does when a supervised pipeline dies on a fault
+/// (element panic, typed element error, watchdog kill). Set per pipeline
+/// at [`PipelineHub::launch_supervised`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestartPolicy {
+    /// Faults are terminal: the first failure is the pipeline's final
+    /// result (same behavior as an unsupervised launch).
+    Never,
+    /// Rebuild and relaunch the pipeline after each fault, up to
+    /// `max_restarts` times, with deterministic exponential backoff:
+    /// restart *k* (1-indexed) is delayed `backoff * 2^(k-1)`. A fault
+    /// arriving with the budget exhausted quarantines the pipeline —
+    /// its final result is a typed [`Error::Quarantined`].
+    OnFault {
+        max_restarts: u32,
+        backoff: Duration,
+    },
+}
+
+/// Supervisor poll cadence: how often restarts-due, finished runs and
+/// watchdog progress are re-examined. Backoff delays and stall timeouts
+/// are quantized to this.
+const SUPERVISOR_TICK: Duration = Duration::from_millis(1);
+
+/// One pipeline under supervision: a factory that can rebuild it from
+/// scratch, its restart budget, and the state of the current run.
+struct SupEntry {
+    name: String,
+    factory: Box<dyn Fn() -> Result<Pipeline> + Send>,
+    policy: RestartPolicy,
+    pri: Priority,
+    /// The current run (None between a fault and the backoff-delayed
+    /// restart, and after the terminal result is in).
+    running: Option<Running>,
+    /// The Pipeline object of the current run (its finished elements are
+    /// restored at terminal join, like unsupervised entries).
+    pipeline: Option<Pipeline>,
+    /// Completed restarts so far.
+    restarts: u32,
+    /// Faults observed so far (each fault either consumes a restart or
+    /// terminates the pipeline).
+    faults: u32,
+    /// Deadline of the pending backoff-delayed restart.
+    restart_at: Option<Instant>,
+    /// Terminal result; set exactly once, then `join_supervised` returns.
+    done: Option<Result<PipelineReport>>,
+}
+
+/// Tracks one pipeline's progress counter for the stall watchdog.
+struct StallTrack {
+    progress: u64,
+    since: Instant,
+}
+
+/// State shared between the hub and its supervisor thread (spawned
+/// lazily by the first `launch_supervised` / `set_watchdog`). Leaf lock:
+/// nothing is called with it held that locks hub entries/tenants/subs,
+/// and the scheduler never calls back into it.
+struct SupState {
+    /// Stall timeout; None disables the watchdog.
+    watchdog: Option<Duration>,
+    /// Progress probes of *unsupervised* hub launches (pruned once
+    /// done); supervised probes are regenerated from `entries` per tick.
+    probes: Vec<WatchdogProbe>,
+    stall: HashMap<String, StallTrack>,
+    entries: Vec<SupEntry>,
+    /// `request_stop_all` ran: stop current runs and suppress restarts.
+    stopping: bool,
+    /// Hub dropped: the thread exits once every supervised entry is
+    /// terminal.
+    shutdown: bool,
+    thread_running: bool,
+}
+
+struct Supervisor {
+    exec: Executor,
+    state: Mutex<SupState>,
+    cv: Condvar,
+}
+
+impl Supervisor {
+    /// Deterministic exponential backoff: restart `k` (1-indexed) waits
+    /// `backoff * 2^(k-1)`. The shift is capped so pathological restart
+    /// budgets cannot overflow the multiplier.
+    fn backoff_delay(backoff: Duration, restart_index: u32) -> Duration {
+        let exp = restart_index.saturating_sub(1).min(20);
+        backoff.saturating_mul(1u32 << exp)
+    }
+
+    /// Supervisor thread body: collect finished supervised runs, decide
+    /// restart / quarantine, perform due restarts, and run the stall
+    /// watchdog — every [`SUPERVISOR_TICK`], until the hub shuts down
+    /// and every supervised entry is terminal.
+    fn run(&self) {
+        let mut g = lock(&self.state);
+        loop {
+            let now = Instant::now();
+            {
+                let SupState {
+                    entries,
+                    stall,
+                    stopping,
+                    ..
+                } = &mut *g;
+                let stopping = *stopping;
+                for e in entries.iter_mut() {
+                    if e.done.is_some() {
+                        continue;
+                    }
+                    // collect a finished run and decide its fate
+                    if e.running.as_ref().is_some_and(|r| r.is_done()) {
+                        let running = e.running.take().expect("checked is_some above");
+                        match running.wait() {
+                            Ok((mut report, elements)) => {
+                                report.restarts = e.restarts;
+                                report.faults = e.faults;
+                                if let Some(p) = e.pipeline.as_mut() {
+                                    p.finished = elements;
+                                }
+                                e.done = Some(Ok(report));
+                                self.cv.notify_all();
+                            }
+                            Err(err) => {
+                                e.faults += 1;
+                                stall.remove(&e.name);
+                                match e.policy {
+                                    RestartPolicy::Never => {
+                                        e.done = Some(Err(err));
+                                        self.cv.notify_all();
+                                    }
+                                    RestartPolicy::OnFault {
+                                        max_restarts,
+                                        backoff,
+                                    } => {
+                                        if stopping {
+                                            // stop requested: the fault is final
+                                            e.done = Some(Err(err));
+                                            self.cv.notify_all();
+                                        } else if e.restarts >= max_restarts {
+                                            e.done = Some(Err(Error::Quarantined {
+                                                pipeline: e.name.clone(),
+                                                restarts: e.restarts,
+                                                reason: err.to_string(),
+                                            }));
+                                            self.cv.notify_all();
+                                        } else {
+                                            e.restarts += 1;
+                                            e.restart_at = Some(
+                                                now + Self::backoff_delay(backoff, e.restarts),
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // a restart is pending: abandon it on stop, perform
+                    // it once its backoff deadline passes
+                    if e.running.is_none() && e.done.is_none() {
+                        if stopping {
+                            e.restart_at = None;
+                            e.done = Some(Err(Error::Runtime(format!(
+                                "pipeline {:?}: stopped before its supervised restart",
+                                e.name
+                            ))));
+                            self.cv.notify_all();
+                        } else if e.restart_at.is_some_and(|at| at <= now) {
+                            e.restart_at = None;
+                            let started = (e.factory)().and_then(|mut p| {
+                                scheduler::start_on(&self.exec, &mut p.graph, e.pri)
+                                    .map(|r| (p, r))
+                            });
+                            match started {
+                                Ok((p, r)) => {
+                                    e.pipeline = Some(p);
+                                    e.running = Some(r);
+                                }
+                                Err(err) => {
+                                    // the rebuild itself failed: terminal
+                                    e.done = Some(Err(err));
+                                    self.cv.notify_all();
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // stall watchdog: flag a pipeline that is runnable (some task
+            // queued or mid-step) yet whose progress counters froze
+            if let Some(timeout) = g.watchdog {
+                let SupState {
+                    entries,
+                    probes,
+                    stall,
+                    ..
+                } = &mut *g;
+                probes.retain(|p| !p.is_done());
+                let sup_probes: Vec<WatchdogProbe> = entries
+                    .iter()
+                    .filter_map(|e| e.running.as_ref().map(|r| r.watchdog_probe(&e.name)))
+                    .collect();
+                for probe in probes.iter().chain(sup_probes.iter()) {
+                    let progress = probe.progress();
+                    let runnable = probe.is_runnable();
+                    let track = stall.entry(probe.name.clone()).or_insert(StallTrack {
+                        progress,
+                        since: now,
+                    });
+                    if !runnable || progress != track.progress {
+                        // moving, or fully parked (an idle appsrc feed is
+                        // not a stall): reset the clock
+                        track.progress = progress;
+                        track.since = now;
+                    } else if now.duration_since(track.since) >= timeout {
+                        probe.kill(Error::Stalled {
+                            pipeline: probe.name.clone(),
+                            stalled_for: now.duration_since(track.since),
+                        });
+                        stall.remove(&probe.name);
+                    }
+                }
+                // drop tracks of pipelines that finished or were killed
+                stall.retain(|name, _| {
+                    probes
+                        .iter()
+                        .chain(sup_probes.iter())
+                        .any(|p| p.name == *name)
+                });
+            }
+            if g.shutdown && g.entries.iter().all(|e| e.done.is_some()) {
+                g.thread_running = false;
+                return;
+            }
+            let (ng, _) = self
+                .cv
+                .wait_timeout(g, SUPERVISOR_TICK)
+                .unwrap_or_else(|e| e.into_inner());
+            g = ng;
+        }
+    }
+}
+
 /// Result of joining one hub pipeline: its report (or failure) plus the
 /// [`Pipeline`] itself, whose finished elements (collecting sinks, app
 /// handles) remain inspectable via
@@ -143,11 +386,30 @@ pub struct PipelineHub {
     /// an entry are unlimited; plain [`launch`](PipelineHub::launch) /
     /// [`subscribe`](PipelineHub::subscribe) bypass admission entirely.
     tenants: Mutex<HashMap<String, TenantState>>,
+    /// Supervision + watchdog state, shared with the lazily spawned
+    /// supervisor thread.
+    sup: Arc<Supervisor>,
+    /// The supervisor thread handle (joined on hub drop).
+    sup_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl PipelineHub {
     fn over(exec: Executor, dedicated: bool) -> PipelineHub {
         PipelineHub {
+            sup: Arc::new(Supervisor {
+                exec: exec.clone(),
+                state: Mutex::new(SupState {
+                    watchdog: None,
+                    probes: Vec::new(),
+                    stall: HashMap::new(),
+                    entries: Vec::new(),
+                    stopping: false,
+                    shutdown: false,
+                    thread_running: false,
+                }),
+                cv: Condvar::new(),
+            }),
+            sup_thread: Mutex::new(None),
             exec,
             dedicated,
             entries: Mutex::new(Vec::new()),
@@ -335,6 +597,15 @@ impl PipelineHub {
         }
         let running = scheduler::start_on(&self.exec, &mut pipeline.graph, pri)?;
         let controller = running.controller();
+        // register a watchdog probe when stall detection is on (sup.state
+        // is a leaf lock: taking it under the entries lock is safe)
+        {
+            let mut sg = lock(&self.sup.state);
+            if sg.watchdog.is_some() {
+                sg.probes.retain(|p| !p.is_done());
+                sg.probes.push(running.watchdog_probe(&name));
+            }
+        }
         entries.push(HubEntry {
             name,
             tenant,
@@ -343,6 +614,147 @@ impl PipelineHub {
             running: Some(running),
         });
         Ok(controller)
+    }
+
+    /// Launch a pipeline under supervision: when a run dies on a fault
+    /// (element panic, typed element error, watchdog kill), `policy`
+    /// decides whether the hub rebuilds it from `factory` and relaunches
+    /// — with deterministic exponential backoff — or lets the fault
+    /// stand. After `max_restarts` are consumed, the next fault
+    /// quarantines the pipeline: its terminal result (from
+    /// [`join_supervised`](PipelineHub::join_supervised)) is a typed
+    /// [`Error::Quarantined`]. A run that ends cleanly is terminal too,
+    /// with its restart/fault history stamped into the
+    /// [`PipelineReport`] (`restarts` / `faults`).
+    ///
+    /// Supervised pipelines live in their own namespace, joined by
+    /// [`join_supervised`](PipelineHub::join_supervised) — not by
+    /// [`join_all`](PipelineHub::join_all).
+    pub fn launch_supervised<F>(
+        &self,
+        name: impl Into<String>,
+        factory: F,
+        policy: RestartPolicy,
+    ) -> Result<()>
+    where
+        F: Fn() -> Result<Pipeline> + Send + 'static,
+    {
+        self.launch_supervised_with_priority(name, factory, policy, Priority::Normal)
+    }
+
+    /// [`launch_supervised`](PipelineHub::launch_supervised) with an
+    /// explicit scheduling priority (applied to every restart too).
+    pub fn launch_supervised_with_priority<F>(
+        &self,
+        name: impl Into<String>,
+        factory: F,
+        policy: RestartPolicy,
+        pri: Priority,
+    ) -> Result<()>
+    where
+        F: Fn() -> Result<Pipeline> + Send + 'static,
+    {
+        let name = name.into();
+        let mut pipeline = factory()?;
+        {
+            let mut g = lock(&self.sup.state);
+            if g.entries.iter().any(|e| e.name == name) {
+                return Err(Error::Runtime(format!(
+                    "hub already supervises a pipeline named {name:?}"
+                )));
+            }
+            let running = scheduler::start_on(&self.exec, &mut pipeline.graph, pri)?;
+            g.entries.push(SupEntry {
+                name,
+                factory: Box::new(factory),
+                policy,
+                pri,
+                running: Some(running),
+                pipeline: Some(pipeline),
+                restarts: 0,
+                faults: 0,
+                restart_at: None,
+                done: None,
+            });
+        }
+        self.ensure_supervisor();
+        self.sup.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until the named supervised pipeline reaches its terminal
+    /// result — a clean completion (report carries `restarts`/`faults`),
+    /// a terminal fault, or quarantine — and return it, removing the
+    /// entry from the hub.
+    pub fn join_supervised(&self, name: &str) -> Result<HubJoin> {
+        let mut g = lock(&self.sup.state);
+        loop {
+            let Some(idx) = g.entries.iter().position(|e| e.name == name) else {
+                return Err(Error::Runtime(format!(
+                    "hub supervises no pipeline named {name:?}"
+                )));
+            };
+            if g.entries[idx].done.is_some() {
+                let e = g.entries.remove(idx);
+                return Ok(HubJoin {
+                    name: e.name,
+                    tenant: None,
+                    priority: e.pri,
+                    report: e.done.expect("checked above"),
+                    pipeline: e
+                        .pipeline
+                        .expect("supervised entry always holds a pipeline"),
+                });
+            }
+            g = self.sup.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Live restart/fault counters of a supervised pipeline (restarts
+    /// performed, faults observed), or `None` if the hub does not
+    /// supervise `name` (or it was already joined).
+    pub fn supervised_counters(&self, name: &str) -> Option<(u32, u32)> {
+        lock(&self.sup.state)
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| (e.restarts, e.faults))
+    }
+
+    /// Enable the stall watchdog: a pipeline that is *runnable* (some
+    /// task queued or executing — a fully parked pipeline waiting on an
+    /// idle `appsrc` is not a stall) yet makes no scheduler progress
+    /// (steps + wakeups frozen) for `stall_timeout` is killed with a
+    /// typed [`Error::Stalled`]. Supervised pipelines are then subject
+    /// to their [`RestartPolicy`]; unsupervised pipelines launched
+    /// *after* this call are watched too and report the error at join.
+    /// Best-effort by construction: a worker thread wedged *inside* an
+    /// element step cannot be reclaimed — the error is delivered as soon
+    /// as that step returns.
+    pub fn set_watchdog(&self, stall_timeout: Duration) {
+        {
+            let mut g = lock(&self.sup.state);
+            g.watchdog = Some(stall_timeout.max(SUPERVISOR_TICK));
+        }
+        self.ensure_supervisor();
+        self.sup.cv.notify_all();
+    }
+
+    /// Spawn the supervisor thread if it is not already running.
+    fn ensure_supervisor(&self) {
+        {
+            let mut g = lock(&self.sup.state);
+            if g.thread_running {
+                return;
+            }
+            g.thread_running = true;
+        }
+        let sup = self.sup.clone();
+        let handle = std::thread::Builder::new()
+            .name("nns-supervisor".into())
+            .spawn(move || sup.run())
+            .expect("spawn supervisor thread");
+        *lock(&self.sup_thread) = Some(handle);
     }
 
     /// Reserve an invoke slot for `tenant` (SingleShot-style request
@@ -454,6 +866,19 @@ impl PipelineHub {
                 r.request_stop();
             }
         }
+        // supervised pipelines: stop current runs and suppress further
+        // restarts — a pending backoff restart is abandoned with a
+        // terminal error instead of resurrecting a stopped pipeline
+        {
+            let mut g = lock(&self.sup.state);
+            g.stopping = true;
+            for e in g.entries.iter() {
+                if let Some(r) = &e.running {
+                    r.request_stop();
+                }
+            }
+        }
+        self.sup.cv.notify_all();
         for s in lock(&self.subs).drain(..) {
             s.close();
         }
@@ -500,6 +925,24 @@ impl Default for PipelineHub {
 
 impl Drop for PipelineHub {
     fn drop(&mut self) {
+        // Wind down supervision first: stop supervised runs, suppress
+        // restarts, and join the supervisor thread (it exits once every
+        // supervised entry is terminal). Only then is it safe to decide
+        // whether the dedicated pool still hosts live tasks.
+        {
+            let mut g = lock(&self.sup.state);
+            g.stopping = true;
+            g.shutdown = true;
+            for e in g.entries.iter() {
+                if let Some(r) = &e.running {
+                    r.request_stop();
+                }
+            }
+        }
+        self.sup.cv.notify_all();
+        if let Some(h) = lock(&self.sup_thread).take() {
+            let _ = h.join();
+        }
         // A dedicated pool is stopped as soon as nothing can still be
         // scheduled on it: every launched pipeline finished (joined or
         // not). Pipelines still executing keep their workers alive —
@@ -637,6 +1080,161 @@ mod tests {
         drop(s2);
         // dropped handles are pruned: the full budget is available again
         hub.subscribe_as("t", "adm/c", 8, Qos::LatestOnly).unwrap();
+    }
+
+    #[test]
+    fn supervised_restart_recovers_after_fault() {
+        use crate::pipeline::fault::{FaultKind, FaultPlan};
+        let hub = PipelineHub::with_workers(2);
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a = attempts.clone();
+        hub.launch_supervised(
+            "flaky",
+            move || {
+                let mut p = Pipeline::parse(
+                    "videotestsrc num-buffers=4 ! \
+                     video/x-raw,format=RGB,width=8,height=8,framerate=240 ! \
+                     tensor_converter ! fakesink name=out",
+                )?;
+                if a.fetch_add(1, Ordering::SeqCst) == 0 {
+                    // first attempt panics mid-stream; restarts run clean
+                    p.set_fault_plan(FaultPlan::new().at(
+                        "videotestsrc0",
+                        1,
+                        FaultKind::Panic,
+                    ));
+                }
+                Ok(p)
+            },
+            RestartPolicy::OnFault {
+                max_restarts: 3,
+                backoff: Duration::from_millis(1),
+            },
+        )
+        .unwrap();
+        let j = hub.join_supervised("flaky").unwrap();
+        let report = j.report.expect("restarted attempt completes");
+        assert_eq!(report.restarts, 1, "one restart consumed");
+        assert_eq!(report.faults, 1, "one fault observed");
+        assert_eq!(report.element("out").unwrap().buffers_in(), 4);
+        assert_eq!(attempts.load(Ordering::SeqCst), 2, "factory ran twice");
+        // the terminal entry is gone from the hub
+        assert!(hub.supervised_counters("flaky").is_none());
+        assert!(hub.join_supervised("flaky").is_err());
+    }
+
+    #[test]
+    fn supervision_quarantines_after_budget_exhausted() {
+        use crate::pipeline::fault::{FaultKind, FaultPlan};
+        let hub = PipelineHub::with_workers(1);
+        hub.launch_supervised(
+            "doomed",
+            || {
+                let mut p = Pipeline::parse("videotestsrc num-buffers=2 ! fakesink")?;
+                p.set_fault_plan(FaultPlan::new().at(
+                    "videotestsrc0",
+                    0,
+                    FaultKind::Error,
+                ));
+                Ok(p)
+            },
+            RestartPolicy::OnFault {
+                max_restarts: 2,
+                backoff: Duration::from_millis(1),
+            },
+        )
+        .unwrap();
+        let j = hub.join_supervised("doomed").unwrap();
+        match j.report {
+            Err(Error::Quarantined {
+                pipeline,
+                restarts,
+                reason,
+            }) => {
+                assert_eq!(pipeline, "doomed");
+                assert_eq!(restarts, 2, "budget fully consumed before quarantine");
+                assert!(reason.contains("injected"), "{reason}");
+            }
+            Ok(_) => panic!("expected quarantine, pipeline completed"),
+            Err(other) => panic!("expected Quarantined, got {other}"),
+        }
+    }
+
+    #[test]
+    fn supervision_never_policy_fault_is_terminal() {
+        use crate::pipeline::fault::{FaultKind, FaultPlan};
+        let hub = PipelineHub::with_workers(1);
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a = attempts.clone();
+        hub.launch_supervised(
+            "fragile",
+            move || {
+                a.fetch_add(1, Ordering::SeqCst);
+                let mut p = Pipeline::parse("videotestsrc num-buffers=2 ! fakesink")?;
+                p.set_fault_plan(FaultPlan::new().at(
+                    "videotestsrc0",
+                    0,
+                    FaultKind::Panic,
+                ));
+                Ok(p)
+            },
+            RestartPolicy::Never,
+        )
+        .unwrap();
+        let j = hub.join_supervised("fragile").unwrap();
+        match j.report {
+            Err(Error::Panicked { message, .. }) => {
+                assert!(message.contains("injected"), "{message}")
+            }
+            Ok(_) => panic!("expected terminal fault, pipeline completed"),
+            Err(other) => panic!("expected Panicked, got {other}"),
+        }
+        assert_eq!(attempts.load(Ordering::SeqCst), 1, "never restarted");
+    }
+
+    #[test]
+    fn watchdog_kills_stalled_pipeline() {
+        use crate::pipeline::fault::{FaultKind, FaultPlan};
+        let hub = PipelineHub::with_workers(2);
+        hub.set_watchdog(Duration::from_millis(40));
+        let mut p = Pipeline::parse("videotestsrc num-buffers=64 ! fakesink").unwrap();
+        // the source wedges inside one step for far longer than the
+        // stall timeout — runnable, yet no progress
+        p.set_fault_plan(FaultPlan::new().at(
+            "videotestsrc0",
+            2,
+            FaultKind::DelayMs(400),
+        ));
+        hub.launch("wedged", p).unwrap();
+        let mut joined = hub.join_all();
+        assert_eq!(joined.len(), 1);
+        match joined.remove(0).report {
+            Err(Error::Stalled {
+                pipeline,
+                stalled_for,
+            }) => {
+                assert_eq!(pipeline, "wedged");
+                assert!(stalled_for >= Duration::from_millis(40));
+            }
+            Ok(_) => panic!("expected stall kill, pipeline completed"),
+            Err(other) => panic!("expected Stalled, got {other}"),
+        }
+    }
+
+    #[test]
+    fn watchdog_ignores_fully_parked_pipeline() {
+        let hub = PipelineHub::with_workers(1);
+        hub.set_watchdog(Duration::from_millis(20));
+        // an appsrc nobody pushes into: every task parks — idle, not
+        // stalled — so the watchdog must not fire
+        let p = Pipeline::parse("appsrc name=in ! appsink name=out").unwrap();
+        hub.launch("idle", p).unwrap();
+        std::thread::sleep(Duration::from_millis(120));
+        assert_eq!(hub.running_count(), 1, "idle pipeline still alive");
+        hub.request_stop_all();
+        for j in hub.join_all() {
+            j.report.unwrap();
+        }
     }
 
     #[test]

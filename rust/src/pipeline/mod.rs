@@ -28,6 +28,7 @@
 
 pub mod builder;
 pub mod executor;
+pub mod fault;
 pub mod graph;
 pub mod hub;
 pub mod parser;
@@ -36,11 +37,12 @@ pub mod stream;
 
 pub use builder::PipelineBuilder;
 pub use executor::{Executor, Priority, Waker};
+pub use fault::{FaultKind, FaultPlan, FaultSpec};
 pub use graph::{Graph, Link, Node, NodeId};
-pub use hub::{HubJoin, InvokeTicket, PipelineHub, TenantQuota};
+pub use hub::{HubJoin, InvokeTicket, PipelineHub, RestartPolicy, TenantQuota};
 pub use scheduler::{Controller, Running};
 pub use stream::{
-    PushOutcome, Qos, QueryClient, StreamRegistry, SubscriberCounters, TopicPublisher,
+    PushOutcome, Qos, QueryClient, StreamEnd, StreamRegistry, SubscriberCounters, TopicPublisher,
     TopicSubscriber, Transport,
 };
 
@@ -97,6 +99,15 @@ impl Pipeline {
     /// deliver every buffer exactly as before.
     pub fn set_deadline(&mut self, budget: std::time::Duration) -> &mut Self {
         self.graph.deadline_ns = budget.as_nanos() as u64;
+        self
+    }
+
+    /// Install a deterministic [`FaultPlan`] for chaos testing: armed
+    /// faults fire at exact stream positions of named elements (see
+    /// [`fault`] for the step-index contract). Without a plan — the
+    /// default — the step path carries no injector.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> &mut Self {
+        self.graph.fault_plan = if plan.is_empty() { None } else { Some(plan) };
         self
     }
 

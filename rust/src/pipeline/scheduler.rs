@@ -26,9 +26,9 @@
 //! [`Error::ControlBackpressure`] instead.
 
 use std::collections::HashMap;
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use crate::element::{ControlMsg, Ctx, Element, LinkSender};
@@ -196,6 +196,19 @@ impl Running {
         self.run.is_done()
     }
 
+    /// A detached health probe for the hub's stall watchdog: samples
+    /// scheduler progress without keeping the pipeline alive (weak run
+    /// reference) and can kill a stalled pipeline with a typed error.
+    pub(crate) fn watchdog_probe(&self, name: impl Into<String>) -> WatchdogProbe {
+        WatchdogProbe {
+            name: name.into(),
+            run: Arc::downgrade(&self.run),
+            wakers: self.wakers.clone(),
+            stats: self.stats.clone(),
+            stop: self.stop.clone(),
+        }
+    }
+
     /// Join the pipeline (block until every element task finished) and
     /// assemble the run report. Elements are returned (in node order)
     /// for post-run inspection.
@@ -238,8 +251,63 @@ impl Running {
             // per-topic endpoint counters (process-global, like traffic)
             topics: crate::pipeline::stream::StreamRegistry::global().snapshot(),
             elements: stats,
+            // supervision counters are stamped by the hub supervisor
+            restarts: 0,
+            faults: 0,
         };
         Ok((report, elements))
+    }
+}
+
+/// Health probe over one running pipeline, held by the hub's stall
+/// watchdog (see `PipelineHub::set_watchdog`). The probe observes
+/// without owning: a weak run reference (a joined pipeline reads as
+/// done), the per-element counters, and the task wakers.
+///
+/// The stall signature is *runnable but not progressing*: some task is
+/// queued or mid-step ([`is_runnable`](WatchdogProbe::is_runnable))
+/// while the progress sum ([`progress`](WatchdogProbe::progress)) stays
+/// frozen — e.g. an element wedged inside its step. A fully parked
+/// pipeline (idle appsrc) is *not* runnable and never flags.
+pub(crate) struct WatchdogProbe {
+    pub(crate) name: String,
+    run: Weak<PipelineRun>,
+    wakers: Vec<Waker>,
+    stats: Vec<Arc<ElementStats>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl WatchdogProbe {
+    /// Finished (or already joined and dropped)?
+    pub(crate) fn is_done(&self) -> bool {
+        self.run.upgrade().map_or(true, |r| r.is_done())
+    }
+
+    /// Monotone progress sum: element steps + wakeups. Any scheduling
+    /// activity moves it; a frozen value means no task stepped and no
+    /// park/wake transition happened since the last sample.
+    pub(crate) fn progress(&self) -> u64 {
+        self.stats.iter().map(|e| e.steps() + e.wakeups()).sum()
+    }
+
+    /// Is any task of this pipeline queued or mid-step right now?
+    pub(crate) fn is_runnable(&self) -> bool {
+        self.wakers.iter().any(|w| w.is_runnable())
+    }
+
+    /// Kill the pipeline with a typed error: records `err` as the run's
+    /// failure (first error wins), raises the stop flag and wakes every
+    /// parked task so the pipeline unwinds. Best-effort against a truly
+    /// wedged step — a worker stuck *inside* an element cannot be
+    /// reclaimed; it delivers the error as soon as that step returns.
+    pub(crate) fn kill(&self, err: Error) {
+        if let Some(run) = self.run.upgrade() {
+            run.fail(err);
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        for w in &self.wakers {
+            w.wake();
+        }
     }
 }
 
@@ -355,6 +423,13 @@ pub fn start_on(exec: &Executor, graph: &mut Graph, pri: Priority) -> Result<Run
             waker: None,
             saturated: Vec::new(),
             deadline_ns: graph.deadline_ns,
+            // chaos testing: arm this element's injector if the
+            // pipeline carries a fault plan naming it (None otherwise —
+            // production pipelines pay one Option check per step)
+            injector: graph
+                .fault_plan
+                .as_ref()
+                .and_then(|p| p.injector_for(&node.name)),
         };
         let is_source = node.element.is_source();
         node_names.push(node.name.clone());

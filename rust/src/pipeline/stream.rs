@@ -54,7 +54,7 @@ use std::time::{Duration, Instant};
 
 use once_cell::sync::Lazy;
 
-use crate::error::{Error, Result};
+use crate::error::{Error, Fault, Result};
 use crate::metrics::stats::{
     latency_bucket, merge_latency, summarize_latency, TopicDrops, TopicSnapshot,
     LATENCY_BUCKETS,
@@ -118,6 +118,41 @@ impl std::fmt::Display for Qos {
     }
 }
 
+/// Why a stream endpoint stopped delivering — the close-reason every
+/// consumer can ask for once `recv` reports the end. This is what makes
+/// a fault-truncated stream distinguishable from a clean end-of-stream
+/// *at every consumer*: element links carry it on their inboxes, app
+/// channels ([`AppSinkReceiver`]) and topic subscriptions
+/// ([`TopicSubscriber::close_reason`]) carry it here.
+///
+/// Precedence: a recorded fault outranks everything (a consumer that
+/// cancelled *after* a fault arrived still reports the fault), `Closed`
+/// outranks plain EOS.
+///
+/// [`AppSinkReceiver`]: crate::elements::sinks::AppSinkReceiver
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEnd {
+    /// Clean end-of-stream: every producer finished normally.
+    Eos,
+    /// The stream was truncated by an upstream fault — possibly in
+    /// another pipeline, across a topic. Carries the originating record.
+    Fault(Fault),
+    /// The consumer side cancelled (receiver dropped, hub stop).
+    Closed,
+}
+
+impl std::fmt::Display for StreamEnd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamEnd::Eos => f.write_str("end of stream"),
+            StreamEnd::Fault(fault) => write!(f, "stream truncated by a fault: {fault}"),
+            StreamEnd::Closed => f.write_str("stream closed by the consumer"),
+        }
+    }
+}
+
+impl std::error::Error for StreamEnd {}
+
 /// Exact counter snapshot of one subscriber queue, taken under the
 /// endpoint lock. Invariant (checked by the property suite):
 /// `pushed == delivered + dropped.subscriber_total() + in_flight`.
@@ -178,6 +213,10 @@ struct EpState {
     queue: VecDeque<(Buffer, Instant)>,
     /// No more data will ever be pushed; queued buffers still drain.
     eos: bool,
+    /// First fault recorded by a producer side: the stream is truncated,
+    /// not cleanly ended. Implies `eos` (set together by `fail`). Sticky
+    /// — later faults and later clean EOS never overwrite it.
+    fault: Option<Fault>,
     /// Consumer cancelled (receiver dropped, hub stop): pushes are
     /// rejected and pops end immediately, queued buffers discarded.
     closed: bool,
@@ -228,6 +267,7 @@ impl Endpoint {
             inner: Mutex::new(EpState {
                 queue: VecDeque::new(),
                 eos: false,
+                fault: None,
                 closed: false,
                 producer_wakers: Vec::new(),
                 consumer_wakers: Vec::new(),
@@ -469,6 +509,40 @@ impl Endpoint {
         self.wake_producers(producers);
     }
 
+    /// The producer side died on a fault: ends the stream like
+    /// [`set_eos`](Endpoint::set_eos) (queued buffers still drain) but
+    /// records the fault so the consumer's close-reason reads
+    /// [`StreamEnd::Fault`] instead of a clean EOS. First fault wins.
+    pub(crate) fn fail(&self, fault: &Fault) {
+        let (producers, consumers) = {
+            let mut g = lock(&self.inner);
+            if g.fault.is_none() {
+                g.fault = Some(fault.clone());
+            }
+            g.eos = true;
+            (g.producer_wakers.clone(), g.consumer_wakers.clone())
+        };
+        self.wake_consumers(consumers);
+        self.wake_producers(producers);
+    }
+
+    /// Why this stream ended — `None` while it is still open. Precedence
+    /// fault > closed > eos: a consumer that cancelled after a fault
+    /// arrived still learns about the fault.
+    pub(crate) fn close_reason(&self) -> Option<StreamEnd> {
+        let g = lock(&self.inner);
+        if let Some(f) = &g.fault {
+            return Some(StreamEnd::Fault(f.clone()));
+        }
+        if g.closed {
+            return Some(StreamEnd::Closed);
+        }
+        if g.eos {
+            return Some(StreamEnd::Eos);
+        }
+        None
+    }
+
     /// Consumer cancelled: discard queued buffers (counted as `closed`
     /// drops), reject future pushes, wake everything (parked producers
     /// observe `Closed` and unwind).
@@ -540,6 +614,11 @@ struct TopicState {
     /// The last publisher finished: new subscribers observe `End`
     /// immediately; a new publisher attachment reopens the topic.
     eos: bool,
+    /// First fault reported by a publisher this stream generation. When
+    /// the last publisher detaches with a fault on record, subscriber
+    /// queues end with [`StreamEnd::Fault`] instead of clean EOS.
+    /// Cleared when a new publisher reopens an ended topic.
+    fault: Option<Fault>,
     /// Caps advertised by the first publisher (subscriber elements
     /// announce these downstream when no explicit caps were configured).
     caps: Option<Caps>,
@@ -579,6 +658,7 @@ impl TopicInner {
                 subs: Vec::new(),
                 open_publishers: 0,
                 eos: false,
+                fault: None,
                 caps: None,
                 publisher_wakers: Vec::new(),
                 published: 0,
@@ -598,8 +678,25 @@ impl TopicInner {
     /// for future subscribers (already-ended subscriptions stay ended).
     pub(crate) fn attach_publisher(&self) {
         let mut g = lock(&self.state);
+        if g.eos {
+            // new stream generation: the previous generation's fault (if
+            // any) already reached its subscribers and must not taint
+            // this one
+            g.fault = None;
+        }
         g.open_publishers += 1;
         g.eos = false;
+    }
+
+    /// A publisher is detaching because its pipeline faulted: record the
+    /// fault (first wins) so that when the *last* publisher detaches the
+    /// subscribers end with [`StreamEnd::Fault`]. Callers pair this with
+    /// [`publisher_done`](TopicInner::publisher_done).
+    pub(crate) fn publisher_fault(&self, fault: &Fault) {
+        let mut g = lock(&self.state);
+        if g.fault.is_none() {
+            g.fault = Some(fault.clone());
+        }
     }
 
     /// Record the caps flowing on this topic (first publisher wins).
@@ -630,18 +727,22 @@ impl TopicInner {
     /// One publisher finished; the last one ends the stream for every
     /// subscriber (their queues drain, then report `End`).
     pub(crate) fn publisher_done(&self) {
-        let (ended, wakers) = {
+        let (ended, wakers, fault) = {
             let mut g = lock(&self.state);
             g.open_publishers = g.open_publishers.saturating_sub(1);
             if g.open_publishers == 0 {
                 g.eos = true;
-                (g.subs.clone(), g.publisher_wakers.clone())
+                (g.subs.clone(), g.publisher_wakers.clone(), g.fault.clone())
             } else {
-                (Vec::new(), Vec::new())
+                (Vec::new(), Vec::new(), None)
             }
         };
         for ep in &ended {
-            ep.set_eos();
+            // outside the topic lock: waking re-enters it via notify_space
+            match &fault {
+                Some(f) => ep.fail(f),
+                None => ep.set_eos(),
+            }
         }
         self.space.notify_all();
         for w in &wakers {
@@ -746,14 +847,17 @@ impl TopicInner {
             qos,
             Some(Arc::downgrade(self)),
         );
-        let ended = {
+        let (ended, fault) = {
             let mut g = lock(&self.state);
             g.subs.push(ep.clone());
-            g.eos
+            (g.eos, g.fault.clone())
         };
         if ended {
-            // outside the topic lock: set_eos wakes through notify_space
-            ep.set_eos();
+            // outside the topic lock: ending wakes through notify_space
+            match &fault {
+                Some(f) => ep.fail(f),
+                None => ep.set_eos(),
+            }
         }
         // publishers parked on wait-subscribers= (or full siblings that
         // no longer matter) re-check
@@ -1060,6 +1164,16 @@ impl TopicSubscriber {
         std::iter::from_fn(move || self.recv().ok())
     }
 
+    /// Why this subscription's stream ended — `None` while it is still
+    /// open. After [`recv`](TopicSubscriber::recv) errors, this
+    /// distinguishes a clean end of stream ([`StreamEnd::Eos`]) from a
+    /// publisher pipeline dying mid-stream ([`StreamEnd::Fault`],
+    /// carrying the originating element and cause across the topic) and
+    /// from a hub-initiated cancellation ([`StreamEnd::Closed`]).
+    pub fn close_reason(&self) -> Option<StreamEnd> {
+        self.ep.close_reason()
+    }
+
     /// Name of the subscribed topic.
     pub fn topic(&self) -> &str {
         self.topic.name()
@@ -1160,11 +1274,12 @@ impl QueryClient {
                 g.req.topic.name()
             )));
         }
-        g.rep.recv().map_err(|_| {
-            Error::Runtime(format!(
+        g.rep.recv().map_err(|_| match g.rep.close_reason() {
+            Some(StreamEnd::Fault(f)) => Error::Fault(f),
+            _ => Error::Runtime(format!(
                 "query: service on topic {:?} ended before replying",
                 g.req.topic.name()
-            ))
+            )),
         })
     }
 
@@ -1221,6 +1336,14 @@ pub trait PublisherPort: Send {
     fn count_dropped(&mut self);
     /// This publisher reached end-of-stream (idempotent).
     fn finish(&mut self);
+    /// This publisher's pipeline died on `fault`: end the stream like
+    /// [`finish`](PublisherPort::finish), but deliver the fault as the
+    /// subscribers' close-reason so remote consumers see a truncated
+    /// stream, never a clean EOS. Transports without fault support fall
+    /// back to a plain finish.
+    fn fail(&mut self, _fault: &Fault) {
+        self.finish();
+    }
 }
 
 /// Consuming side of one topic attachment, as used by
@@ -1235,6 +1358,13 @@ pub trait SubscriberPort: Send {
     fn add_waker(&mut self, w: &Arc<SharedWaker>);
     /// Detach the subscription (idempotent; implied by drop).
     fn detach(&mut self);
+    /// Why the stream ended (`None` while open). Lets the consuming
+    /// element turn [`PortRecv::End`] into a typed fault instead of a
+    /// clean EOS when the publisher pipeline died. Transports without
+    /// fault support report `None` and the consumer treats `End` as EOS.
+    fn close_reason(&self) -> Option<StreamEnd> {
+        None
+    }
 }
 
 /// A tensor-query delivery backend. The in-process transport is the
@@ -1329,6 +1459,14 @@ impl PublisherPort for InProcPublisherPort {
             self.topic.publisher_done();
         }
     }
+
+    fn fail(&mut self, fault: &Fault) {
+        if !self.finished {
+            self.finished = true;
+            self.topic.publisher_fault(fault);
+            self.topic.publisher_done();
+        }
+    }
 }
 
 impl Drop for InProcPublisherPort {
@@ -1368,6 +1506,10 @@ impl SubscriberPort for InProcSubscriberPort {
             self.detached = true;
             self.topic.unsubscribe(&self.ep);
         }
+    }
+
+    fn close_reason(&self) -> Option<StreamEnd> {
+        self.ep.close_reason()
     }
 }
 
@@ -1643,5 +1785,97 @@ mod tests {
         }
         assert_eq!(Qos::parse("latest").unwrap(), Qos::LatestOnly);
         assert!(Qos::parse("lossy").is_err());
+    }
+
+    fn fault(msg: &str) -> Fault {
+        Fault {
+            element: "boom".into(),
+            message: msg.into(),
+            panicked: true,
+        }
+    }
+
+    #[test]
+    fn endpoint_fail_drains_then_reports_fault() {
+        let ep = Endpoint::standalone(4);
+        assert!(ep.close_reason().is_none());
+        assert!(matches!(ep.try_push(buf(1.0)), EpPush::Ok));
+        let f = fault("index out of range");
+        ep.fail(&f);
+        // queued data still drains, like EOS...
+        assert!(matches!(ep.try_pop(), EpPop::Item(_)));
+        assert!(matches!(ep.try_pop(), EpPop::End));
+        // ...but the close-reason is the fault, never a clean EOS, and
+        // a first fault is sticky against later ones
+        ep.fail(&fault("second"));
+        match ep.close_reason() {
+            Some(StreamEnd::Fault(got)) => assert_eq!(got, f),
+            other => panic!("expected fault close-reason, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn endpoint_close_reason_precedence() {
+        // clean EOS
+        let ep = Endpoint::standalone(2);
+        ep.set_eos();
+        assert_eq!(ep.close_reason(), Some(StreamEnd::Eos));
+        // consumer cancel outranks EOS
+        ep.close();
+        assert_eq!(ep.close_reason(), Some(StreamEnd::Closed));
+        // fault outranks a close that happened after it
+        let ep = Endpoint::standalone(2);
+        ep.fail(&fault("died"));
+        ep.close();
+        assert!(matches!(ep.close_reason(), Some(StreamEnd::Fault(_))));
+    }
+
+    #[test]
+    fn topic_fault_reaches_subscribers_and_late_joiners() {
+        let reg = StreamRegistry::new();
+        let s = reg.subscribe("t");
+        let tr = InProcTransport::new(reg.clone());
+        let mut port = tr.advertise("t", Qos::Blocking).unwrap();
+        assert!(matches!(port.try_send(buf(1.0)), PortSend::Sent));
+        port.fail(&fault("publisher pipeline died"));
+        // queued frame drains, then the subscription ends with the fault
+        assert!(s.recv().is_ok());
+        assert!(s.recv().is_err());
+        match s.close_reason() {
+            Some(StreamEnd::Fault(f)) => assert_eq!(f.element, "boom"),
+            other => panic!("expected fault close-reason, got {other:?}"),
+        }
+        // a subscriber joining after the fault sees it too
+        let late = reg.subscribe("t");
+        assert!(late.recv().is_err());
+        assert!(matches!(late.close_reason(), Some(StreamEnd::Fault(_))));
+    }
+
+    #[test]
+    fn topic_reopen_clears_previous_generation_fault() {
+        let reg = StreamRegistry::new();
+        let tr = InProcTransport::new(reg.clone());
+        let mut port = tr.advertise("t", Qos::Blocking).unwrap();
+        port.fail(&fault("gen-1 died"));
+        // a new publisher generation reopens the topic cleanly
+        let mut port2 = tr.advertise("t", Qos::Blocking).unwrap();
+        let s = reg.subscribe("t");
+        assert!(matches!(port2.try_send(buf(2.0)), PortSend::Sent));
+        port2.finish();
+        assert!(s.recv().is_ok());
+        assert!(s.recv().is_err());
+        assert_eq!(s.close_reason(), Some(StreamEnd::Eos));
+    }
+
+    #[test]
+    fn stream_end_display() {
+        assert_eq!(StreamEnd::Eos.to_string(), "end of stream");
+        assert_eq!(
+            StreamEnd::Closed.to_string(),
+            "stream closed by the consumer"
+        );
+        let msg = StreamEnd::Fault(fault("oops")).to_string();
+        assert!(msg.contains("truncated"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
     }
 }

@@ -1,0 +1,323 @@
+//! Deterministic chaos harness for the fault-tolerant serving layer.
+//!
+//! Every test here injects faults through the seeded [`FaultPlan`]
+//! machinery — panics, typed errors, stalls, and silent drops at exact
+//! step indices — and asserts the error-flow contract end to end:
+//! consumers always learn *why* a stream ended (clean EOS vs. typed
+//! fault), `join` never reports clean success for a faulted run, the
+//! supervisor restarts within its backoff budget, the watchdog kills
+//! wedged pipelines, and the scheduler comes back reusable (no parked
+//! tasks, no leaked threads) after an arbitrary fault sweep.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nnstreamer::apps::e4::{self, E4Config};
+use nnstreamer::pipeline::fault::splitmix64;
+use nnstreamer::pipeline::{
+    Executor, FaultKind, FaultPlan, Pipeline, PipelineHub, Priority, RestartPolicy, StreamEnd,
+};
+use nnstreamer::Error;
+
+/// Thread count of this process, from /proc/self/status (Linux).
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+fn quick_e4() -> E4Config {
+    E4Config {
+        src_w: 160,
+        src_h: 120,
+        num_frames: 6,
+    }
+}
+
+/// Satellite (a): a mid-stream fault must never masquerade as a clean
+/// EOS. The app-side receiver drains the frames that made it through,
+/// then gets the typed fault as the close reason, and `wait()` on the
+/// running handle reports the panic — not success.
+#[test]
+fn appsink_reports_fault_not_clean_eos() {
+    let mut p = Pipeline::parse(
+        "videotestsrc num-buffers=8 ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+         tensor_converter name=conv ! appsink name=out",
+    )
+    .unwrap();
+    p.set_fault_plan(FaultPlan::new().at("conv", 3, FaultKind::Panic));
+    let rx = p.appsink("out").unwrap();
+    let running = p.play().unwrap();
+
+    let mut got = 0u64;
+    let end = loop {
+        match rx.recv() {
+            Ok(_) => got += 1,
+            Err(end) => break end,
+        }
+    };
+    assert!(
+        got < 8,
+        "the fault fired mid-stream, yet all {got} frames arrived"
+    );
+    match &end {
+        StreamEnd::Fault(f) => {
+            assert_eq!(f.element, "conv");
+            assert!(f.panicked, "panic injection must be flagged as a panic");
+        }
+        other => panic!("partial output ended with {other:?}, expected a typed fault"),
+    }
+    match running.wait() {
+        Err(Error::Panicked { element, .. }) => assert_eq!(element, "conv"),
+        Err(other) => panic!("expected Error::Panicked from join, got: {other}"),
+        Ok(_) => panic!("join reported clean success for a faulted run"),
+    }
+}
+
+/// Satellite (d): property sweep — inject a panic and a typed error into
+/// *every* element position of the e4 chain at seeded step indices.
+/// Each faulted run must join with a typed error (never clean success),
+/// and afterwards the shared scheduler must still run a clean pipeline
+/// to completion with the process thread count back at baseline (no
+/// parked tasks pinning workers, no leaked threads).
+#[test]
+fn e4_chain_fault_at_every_position_yields_typed_error() {
+    let cfg = quick_e4();
+    let names: Vec<String> = e4::build_pipeline(&cfg, "opt")
+        .unwrap()
+        .graph
+        .nodes
+        .iter()
+        .map(|n| n.name.clone())
+        .collect();
+    assert!(
+        names.len() >= 8,
+        "e4 chain should expose the full element set, got {names:?}"
+    );
+
+    // Warm the global pool and the model cache so the thread baseline
+    // is stable before the sweep.
+    e4::build_pipeline(&cfg, "opt").unwrap().run().unwrap();
+    let baseline = process_threads();
+
+    let mut seed = 0x9e37_79b9_7f4a_7c15u64;
+    for (pos, name) in names.iter().enumerate() {
+        for kind in [FaultKind::Panic, FaultKind::Error] {
+            // Seeded, reproducible step index; every element sees at
+            // least num_frames scheduling steps, so the fault always
+            // has a chance to fire.
+            let step = splitmix64(&mut seed) % (cfg.num_frames - 1);
+            let mut p = e4::build_pipeline(&cfg, "opt").unwrap();
+            p.set_fault_plan(FaultPlan::new().at(name.clone(), step, kind));
+            let err = p.run().err().unwrap_or_else(|| {
+                panic!("position {pos} ({name}) step {step} {kind:?}: faulted run joined cleanly")
+            });
+            match err {
+                Error::Panicked { .. } | Error::Element { .. } | Error::Fault(_) => {}
+                other => panic!("position {pos} ({name}): untyped join error: {other}"),
+            }
+        }
+    }
+
+    // The scheduler is not wedged: a clean run still completes...
+    let report = e4::build_pipeline(&cfg, "opt").unwrap().run().unwrap();
+    assert_eq!(
+        report.element("out").unwrap().buffers_in(),
+        cfg.num_frames,
+        "clean run after the sweep must deliver every frame"
+    );
+    // ...and the sweep leaked no thread per faulted run (the small
+    // slack absorbs hubs other tests in this binary spin up
+    // concurrently, never the ~16 threads a per-run leak would add).
+    if let (Some(before), Some(after)) = (baseline, process_threads()) {
+        let added = after.saturating_sub(before);
+        assert!(
+            added <= 8,
+            "thread count grew across the fault sweep: {before} -> {after}"
+        );
+    }
+}
+
+/// A dropped buffer is flow degradation, not a fault: the run completes
+/// cleanly, just with fewer frames at the sink.
+#[test]
+fn injected_drop_shrinks_output_without_faulting() {
+    let mut p = Pipeline::parse(
+        "videotestsrc num-buffers=6 ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+         tensor_converter name=conv ! fakesink name=out",
+    )
+    .unwrap();
+    p.set_fault_plan(FaultPlan::new().at("conv", 1, FaultKind::Drop));
+    let report = p.run().unwrap();
+    assert_eq!(
+        report.element("out").unwrap().buffers_in(),
+        5,
+        "exactly the dropped frame is missing"
+    );
+}
+
+/// Fault propagation crosses pipeline boundaries: a subscriber in
+/// another pipeline (or plain app code) sees the frames that made it
+/// through, then a typed fault close-reason — not a silent EOS.
+#[test]
+fn topic_subscriber_sees_fault_from_publishing_pipeline() {
+    let hub = PipelineHub::with_workers(2);
+    let sub = hub.subscribe("chaos/feed");
+    let mut p = Pipeline::parse(
+        "videotestsrc num-buffers=32 ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+         tensor_converter name=conv ! tensor_query_serversink topic=chaos/feed",
+    )
+    .unwrap();
+    p.set_fault_plan(FaultPlan::new().at("conv", 2, FaultKind::Panic));
+    hub.launch("svc", p).unwrap();
+
+    let mut got = 0u64;
+    while sub.recv().is_ok() {
+        got += 1;
+    }
+    assert!(got <= 2, "at most the pre-fault frames arrived, got {got}");
+    match sub.close_reason() {
+        Some(StreamEnd::Fault(f)) => {
+            assert_eq!(f.element, "conv");
+            assert!(f.panicked);
+        }
+        other => panic!("expected a cross-pipeline fault close-reason, got {other:?}"),
+    }
+    let join = hub.join_all().pop().expect("one launched pipeline");
+    assert!(join.report.is_err(), "publisher pipeline joined cleanly");
+}
+
+/// Tentpole: a supervised pipeline that faults twice restarts under its
+/// deterministic backoff schedule and completes on the third attempt;
+/// the report carries the restart and fault counters.
+#[test]
+fn supervised_pipeline_restarts_within_backoff_budget() {
+    let hub = PipelineHub::with_workers(2);
+    let attempts = Arc::new(AtomicUsize::new(0));
+    let seen = attempts.clone();
+    let t0 = Instant::now();
+    hub.launch_supervised(
+        "svc",
+        move || {
+            let mut p = Pipeline::parse(
+                "videotestsrc num-buffers=16 ! \
+                 video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+                 tensor_converter name=conv ! fakesink name=out",
+            )?;
+            if seen.fetch_add(1, Ordering::SeqCst) < 2 {
+                p.set_fault_plan(FaultPlan::new().at("conv", 4, FaultKind::Panic));
+            }
+            Ok(p)
+        },
+        RestartPolicy::OnFault {
+            max_restarts: 3,
+            backoff: Duration::from_millis(5),
+        },
+    )
+    .unwrap();
+
+    let join = hub.join_supervised("svc").unwrap();
+    let report = join.report.expect("third attempt completes cleanly");
+    assert_eq!(report.restarts, 2);
+    assert_eq!(report.faults, 2);
+    assert_eq!(report.element("out").unwrap().buffers_in(), 16);
+    assert_eq!(attempts.load(Ordering::SeqCst), 3);
+    // Exponential backoff: restart 1 waited 5ms, restart 2 waited 10ms.
+    assert!(
+        t0.elapsed() >= Duration::from_millis(15),
+        "restarts ran ahead of the deterministic backoff schedule"
+    );
+}
+
+/// Exhausting the restart budget quarantines the pipeline with a typed
+/// terminal error instead of restarting forever.
+#[test]
+fn restart_budget_exhaustion_quarantines() {
+    let hub = PipelineHub::with_workers(2);
+    hub.launch_supervised(
+        "doomed",
+        || {
+            let mut p = Pipeline::parse("videotestsrc num-buffers=8 ! fakesink")?;
+            p.set_fault_plan(FaultPlan::new().at("videotestsrc0", 0, FaultKind::Error));
+            Ok(p)
+        },
+        RestartPolicy::OnFault {
+            max_restarts: 1,
+            backoff: Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    match hub.join_supervised("doomed").unwrap().report {
+        Err(Error::Quarantined {
+            pipeline, restarts, ..
+        }) => {
+            assert_eq!(pipeline, "doomed");
+            assert_eq!(restarts, 1);
+        }
+        Err(other) => panic!("expected Error::Quarantined, got: {other}"),
+        Ok(_) => panic!("always-faulting pipeline joined cleanly"),
+    }
+}
+
+/// Tentpole: the stall watchdog kills a pipeline that is runnable but
+/// making no progress, reporting `Error::Stalled` — even on a single
+/// shared worker where the stall would otherwise also starve neighbors.
+#[test]
+fn watchdog_kills_stalled_pipeline_on_single_worker() {
+    let hub = PipelineHub::with_workers(1);
+    hub.set_watchdog(Duration::from_millis(40));
+    let mut p = Pipeline::parse("videotestsrc num-buffers=32 ! fakesink").unwrap();
+    p.set_fault_plan(FaultPlan::new().at("videotestsrc0", 1, FaultKind::DelayMs(400)));
+    hub.launch("wedge", p).unwrap();
+    let join = hub.join_all().pop().expect("one launched pipeline");
+    match join.report {
+        Err(Error::Stalled { pipeline, .. }) => assert_eq!(pipeline, "wedge"),
+        Err(other) => panic!("expected Error::Stalled, got: {other}"),
+        Ok(_) => panic!("stalled pipeline joined cleanly"),
+    }
+}
+
+/// Satellite (c): the single-worker floor of the worker-count envelope
+/// (`NNS_WORKERS=1`) runs a full chain end-to-end, and fault
+/// propagation behaves identically with no spare worker to lean on.
+#[test]
+fn single_worker_envelope_runs_and_propagates_faults() {
+    let exec = Executor::new(1);
+    assert_eq!(exec.worker_count(), 1);
+
+    let mut p = Pipeline::parse(
+        "videotestsrc num-buffers=8 ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+         tensor_converter ! fakesink name=out",
+    )
+    .unwrap();
+    let report = p.run_on(&exec, Priority::Normal).unwrap();
+    assert_eq!(report.element("out").unwrap().buffers_in(), 8);
+    assert_eq!(report.sched.workers, 1);
+
+    let mut p = Pipeline::parse(
+        "videotestsrc num-buffers=8 ! tensor_converter name=conv ! fakesink",
+    )
+    .unwrap();
+    p.set_fault_plan(FaultPlan::new().at("conv", 1, FaultKind::Panic));
+    match p.run_on(&exec, Priority::Normal) {
+        Err(Error::Panicked { element, .. }) => assert_eq!(element, "conv"),
+        Err(other) => panic!("expected Error::Panicked, got: {other}"),
+        Ok(_) => panic!("faulted run joined cleanly on one worker"),
+    }
+
+    // The worker survived the panic: a clean run still completes.
+    let mut p = Pipeline::parse("videotestsrc num-buffers=4 ! fakesink name=out").unwrap();
+    let report = p.run_on(&exec, Priority::Normal).unwrap();
+    assert_eq!(report.element("out").unwrap().buffers_in(), 4);
+    exec.shutdown();
+}
