@@ -21,6 +21,7 @@ bench:
 	cargo bench --bench e8_query
 	cargo bench --bench e9_serving
 	cargo bench --bench e10_faults
+	cargo bench --bench e11_wire
 
 # Quick perf gate: compiles every bench, runs the E6 memory bench with a
 # short frame budget (records artifacts/BENCH_e6_memory.json; asserts
@@ -32,7 +33,10 @@ bench:
 # bench (QoS isolation: a leaky-tenant flood plus a SingleShot storm
 # must not move a blocking victim's p99 latency), then the E10 fault
 # bench (a chaos co-tenant panics twice and is restarted under backoff;
-# asserts bit-exact victim output and < 20% p99 movement).
+# asserts bit-exact victim output and < 20% p99 movement), and finally
+# the E11 wire bench (the same split over a loopback TCP transport;
+# records artifacts/BENCH_e11_wire.json; asserts sink output
+# bit-identical across the wire).
 bench-smoke:
 	cargo bench --no-run
 	cargo bench --bench e6_memory -- --frames 64 --record
@@ -40,6 +44,7 @@ bench-smoke:
 	cargo bench --bench e8_query -- --frames 24
 	cargo bench --bench e9_serving -- --frames 48
 	cargo bench --bench e10_faults -- --frames 48
+	cargo bench --bench e11_wire -- --frames 24 --record
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts

@@ -1,17 +1,20 @@
-//! The MTCNN face-detection cascade (E3, Fig 4) — fused, and split into
-//! two hub pipelines joined by `tensor_query` stream topics.
+//! The MTCNN face-detection cascade (E3, Fig 4) — fused, split into two
+//! hub pipelines joined by `tensor_query` stream topics, and split into
+//! **two OS processes** joined by the TCP transport.
 //!
 //! The most topologically complex pipeline of the paper: a 5-scale image
 //! pyramid of fully-convolutional P-Nets running in parallel branches,
 //! merged with NMS, refined by R-Net and O-Net stages with image-patch
 //! extraction and bounding-box regression between them.
 //!
-//! The split run demonstrates the among-device composition of the
+//! The split runs demonstrate the among-device composition of the
 //! follow-up paper (arXiv:2201.06026): the camera + P-Net stage runs as
 //! one pipeline publishing `mtcnn/frames` and `mtcnn/boxes`, and the
 //! R/O-Net refinement runs as a *second* pipeline subscribing both —
-//! sink output is bit-identical to the fused single-pipeline run, on the
-//! same bounded worker pool.
+//! first in-process on a shared worker pool, then as a child process
+//! publishing over `transport=tcp` while this process consumes. Sink
+//! output is bit-identical to the fused single-pipeline run in both
+//! compositions.
 //!
 //! ```bash
 //! cargo run --release --example mtcnn_cascade [frames] [device-class: a|b|c]
@@ -19,8 +22,13 @@
 
 use nnstreamer::apps::e3_mtcnn::{self, MtcnnConfig};
 use nnstreamer::devices::DeviceClass;
+use nnstreamer::net::{register_tcp, NetRegistry, TcpConfig};
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// Set in the child process: the discovery-registry address to publish
+/// the front half's topics through.
+const FRONT_ENV: &str = "MTCNN_FRONT_REGISTRY";
+
+fn parse_cfg() -> Result<MtcnnConfig, Box<dyn std::error::Error>> {
     let frames: u64 = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
@@ -30,14 +38,50 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .map(|v| DeviceClass::parse(&v))
         .transpose()?
         .unwrap_or(DeviceClass::Pc);
-
-    let cfg = MtcnnConfig {
+    Ok(MtcnnConfig {
         num_frames: frames,
         class,
         fps: 10_000.0, // batch: as fast as the cascade can go
         live: false,
         ..Default::default()
-    };
+    })
+}
+
+/// Child-process body: the camera + P-Net half, publishing both topics
+/// over TCP to whoever the registry resolves.
+fn run_front_process(registry: &str) -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = parse_cfg()?;
+    let transport = register_tcp(TcpConfig::new(registry));
+    let report = e3_mtcnn::run_split_front(&cfg, "mtcnn-net", "tcp")?;
+    // don't exit until the final EOS frames actually hit the sockets
+    transport.quiesce(std::time::Duration::from_secs(10));
+    for t in report.topics.iter().filter(|t| t.name.starts_with("tcp-pub:")) {
+        assert_eq!(
+            t.pushed,
+            t.delivered + t.dropped + t.in_flight,
+            "publisher-side conservation violated on {}",
+            t.name
+        );
+        eprintln!(
+            "  [front pid {}] {}: {} pushed = {} delivered + {} dropped + {} in flight",
+            std::process::id(),
+            t.name,
+            t.pushed,
+            t.delivered,
+            t.dropped,
+            t.in_flight
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    if let Ok(registry) = std::env::var(FRONT_ENV) {
+        return run_front_process(&registry);
+    }
+    let cfg = parse_cfg()?;
+    let frames = cfg.num_frames;
+    let class = cfg.class;
 
     println!(
         "running MTCNN on device class {} ({} Full-HD frames)...",
@@ -56,6 +100,42 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "split sink output must be bit-identical to the fused run"
     );
     let split_fps = split.sink.len() as f64 / split_wall;
+
+    println!("running the two-PROCESS split over transport=tcp...");
+    // this process consumes: host the discovery registry, register the
+    // TCP transport, and hand the child the registry address
+    let registry = NetRegistry::serve("127.0.0.1:0")?;
+    let addr = registry.addr().to_string();
+    register_tcp(TcpConfig::new(&addr));
+    let class_token = match class {
+        DeviceClass::MidEmbedded => "a",
+        DeviceClass::HighEmbedded => "b",
+        DeviceClass::Pc => "c",
+    };
+    let mut child = std::process::Command::new(std::env::current_exe()?)
+        .arg(frames.to_string())
+        .arg(class_token)
+        .env(FRONT_ENV, &addr)
+        .spawn()?;
+    let (net_report, net_sink) = e3_mtcnn::run_split_back(&cfg, "mtcnn-net", "tcp")?;
+    let status = child.wait()?;
+    assert!(status.success(), "front process failed: {status}");
+    assert_eq!(
+        net_sink, fused_sink,
+        "two-process sink output must be bit-identical to the fused run"
+    );
+    for t in net_report
+        .topics
+        .iter()
+        .filter(|t| t.name.starts_with("tcp-sub:"))
+    {
+        assert_eq!(
+            t.pushed,
+            t.delivered + t.dropped + t.in_flight,
+            "subscriber-side conservation violated on {}",
+            t.name
+        );
+    }
 
     println!("running serial Control (the ROS team's implementation)...");
     let ctl = e3_mtcnn::run_control(&cfg)?;
@@ -88,6 +168,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             t.published, t.delivered, t.dropped
         );
     }
-    println!("  split sink bit-identical to fused: OK ({} frames)", split.sink.len());
+    if let Some(t) = net_report
+        .topics
+        .iter()
+        .find(|t| t.name == "tcp-sub:mtcnn-net/frames")
+    {
+        println!(
+            "  wire topic mtcnn-net/frames: {} pushed / {} delivered / {} in flight",
+            t.pushed, t.delivered, t.in_flight
+        );
+    }
+    println!(
+        "  split sink bit-identical to fused: OK ({} frames, in-process and over TCP)",
+        split.sink.len()
+    );
     Ok(())
 }

@@ -1,0 +1,196 @@
+//! **E11 — TCP wire transport vs in-process topic link.**
+//!
+//! The E8 chain (camera → normalize | I3 inference) split at the
+//! normalized-tensor link into two pipelines joined by a tensor-query
+//! topic, run two ways on the same hub:
+//!
+//! * **inproc** — the PR 5 stream-endpoint link (shared memory);
+//! * **tcp** — the same element graph with `transport=tcp`: frames
+//!   cross a loopback socket through the framed wire codec with
+//!   credit-based flow control, discovery via a [`NetRegistry`].
+//!
+//! Asserts sink output **bit-identical** across the wire and prints
+//! throughput plus the subscriber-queue latency percentiles of both
+//! links — the cost of leaving the process.
+//!
+//! ```bash
+//! cargo bench --bench e11_wire [-- --full] [-- --record]
+//! ```
+//!
+//! `--record` writes `../artifacts/BENCH_e11_wire.json`
+//! (the `make bench-smoke` target).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use nnstreamer::elements::sinks::TensorSink;
+use nnstreamer::net::{register_tcp, NetRegistry, TcpConfig};
+use nnstreamer::pipeline::{Pipeline, PipelineHub};
+
+const WORKERS: usize = 4;
+
+fn head(frames: u64) -> String {
+    format!(
+        "videotestsrc name=src pattern=ball width=320 height=240 framerate=2400 \
+         num-buffers={frames} is-live=false ! tee name=t t. ! queue ! \
+         videoscale width=64 height=64 ! tensor_converter ! \
+         tensor_transform mode=typecast option=float32 ! \
+         tensor_transform mode=arithmetic option=div:255"
+    )
+}
+
+const TAIL: &str = "tensor_filter framework=xla model=i3_opt accelerator=cpu ! \
+                    tensor_decoder mode=image_labeling ! tensor_sink name=out";
+
+const LINK_CAPS: &str = "other/tensor,dimension=3:64:64,type=float32,framerate=2400";
+
+fn sink_bytes(p: &mut Pipeline) -> Vec<Vec<u8>> {
+    let el = p.finished_element("out").expect("sink present");
+    let sink = el
+        .as_any()
+        .and_then(|a| a.downcast_mut::<TensorSink>())
+        .expect("tensor_sink");
+    sink.buffers
+        .iter()
+        .map(|b| b.chunk().as_bytes_unaccounted().to_vec())
+        .collect()
+}
+
+fn run_direct(frames: u64) -> Vec<Vec<u8>> {
+    let hub = PipelineHub::with_workers(WORKERS);
+    let p = Pipeline::parse(&format!("{} ! {}", head(frames), TAIL)).unwrap();
+    hub.launch("direct", p).unwrap();
+    let mut joined = hub.join_all();
+    let j = joined.pop().unwrap();
+    j.report.expect("direct run succeeded");
+    let mut pipeline = j.pipeline;
+    sink_bytes(&mut pipeline)
+}
+
+/// One split run over `transport`; returns the sink payloads, the wall
+/// time, and the subscriber-queue latency percentiles (p50, p99) in µs.
+fn run_split(frames: u64, topic: &str, transport: &str) -> (Vec<Vec<u8>>, f64, (f64, f64)) {
+    let hub = PipelineHub::with_workers(WORKERS);
+    let back = Pipeline::parse(&format!(
+        "tensor_query_serversrc topic={topic} transport={transport} max-buffers=8 ! \
+         {LINK_CAPS} ! {TAIL}"
+    ))
+    .unwrap();
+    // wait-subscribers=1: the TCP subscriber connects asynchronously,
+    // so the publisher parks instead of dropping pre-connection frames
+    let front = Pipeline::parse(&format!(
+        "{} ! tensor_query_serversink topic={topic} transport={transport} wait-subscribers=1",
+        head(frames)
+    ))
+    .unwrap();
+    let t0 = Instant::now();
+    hub.launch("back", back).unwrap();
+    hub.launch("front", front).unwrap();
+    let mut out = Vec::new();
+    let mut lat = (0.0, 0.0);
+    // the subscriber-side queue entry: plain topic name for inproc,
+    // `tcp-sub:` prefixed for the wire transport
+    let sub_entry = if transport == "tcp" {
+        format!("tcp-sub:{topic}")
+    } else {
+        topic.to_string()
+    };
+    for j in hub.join_all() {
+        let report = j.report.expect("split run succeeded");
+        let mut pipeline = j.pipeline;
+        if j.name == "back" {
+            out = sink_bytes(&mut pipeline);
+            let t = report
+                .topic(&sub_entry)
+                .unwrap_or_else(|| panic!("{sub_entry} missing from report"));
+            assert_eq!(
+                t.pushed,
+                t.delivered + t.dropped + t.in_flight,
+                "conservation violated on {sub_entry}"
+            );
+            lat = (
+                t.latency.p50.as_secs_f64() * 1e6,
+                t.latency.p99.as_secs_f64() * 1e6,
+            );
+        }
+    }
+    (out, t0.elapsed().as_secs_f64(), lat)
+}
+
+fn main() {
+    let args = harness::BenchArgs::parse();
+    let frames = args.frames_or(64, 600);
+    let repeats = args.repeats.max(3);
+    let record = std::env::args().any(|a| a == "--record");
+
+    harness::warm_models(&["i3_opt"]);
+
+    // one registry + transport instance for every round
+    let registry = NetRegistry::serve("127.0.0.1:0").expect("discovery registry");
+    register_tcp(TcpConfig::new(registry.addr().to_string()));
+
+    let reference = run_direct(frames);
+    assert_eq!(reference.len(), frames as usize, "direct run kept all frames");
+
+    let (mut inproc_s, mut tcp_s) = (Vec::new(), Vec::new());
+    let (mut inproc_lat, mut tcp_lat) = ((0.0, 0.0), (0.0, 0.0));
+    for round in 0..repeats {
+        let (q, qt, ql) = run_split(frames, &format!("e11/inproc-{round}"), "inproc");
+        assert_eq!(q, reference, "inproc topic link must be bit-identical");
+        inproc_s.push(qt);
+        inproc_lat = ql;
+        let (w, wt, wl) = run_split(frames, &format!("e11/wire-{round}"), "tcp");
+        assert_eq!(
+            w, reference,
+            "sink output must be bit-identical across the TCP wire"
+        );
+        tcp_s.push(wt);
+        tcp_lat = wl;
+    }
+
+    let (im, is) = harness::mean_std(&inproc_s);
+    let (tm, ts) = harness::mean_std(&tcp_s);
+    let (ifps, tfps) = (frames as f64 / im, frames as f64 / tm);
+    println!("E11: {frames} frames x {repeats} runs on {WORKERS} workers");
+    println!(
+        "  inproc link   {} s   ({ifps:.1} frames/s)   queue p50/p99 {:.0}/{:.0} us",
+        harness::pm(im, is, 3),
+        inproc_lat.0,
+        inproc_lat.1
+    );
+    println!(
+        "  tcp link      {} s   ({tfps:.1} frames/s)   queue p50/p99 {:.0}/{:.0} us",
+        harness::pm(tm, ts, 3),
+        tcp_lat.0,
+        tcp_lat.1
+    );
+    println!(
+        "  wire overhead: {:+.1}% wall vs the in-process link",
+        (tm / im - 1.0) * 100.0
+    );
+
+    if record {
+        let json = format!(
+            "{{\n  \"bench\": \"e11_wire\",\n  \"pipeline\": \"E8 chain split at the tensor link (i3_opt, cpu)\",\n  \"frames_per_run\": {frames},\n  \"fps_inproc\": {ifps:.2},\n  \"fps_tcp\": {tfps:.2},\n  \"wire_overhead\": {:.4},\n  \"queue_p50_us_inproc\": {:.1},\n  \"queue_p99_us_inproc\": {:.1},\n  \"queue_p50_us_tcp\": {:.1},\n  \"queue_p99_us_tcp\": {:.1},\n  \"bit_identical_output\": true\n}}\n",
+            tm / im - 1.0,
+            inproc_lat.0,
+            inproc_lat.1,
+            tcp_lat.0,
+            tcp_lat.1,
+        );
+        // same ./artifacts vs ../artifacts resolution as ModelRegistry
+        let path = if std::path::Path::new("../artifacts/manifest.txt").exists()
+            && !std::path::Path::new("artifacts/manifest.txt").exists()
+        {
+            "../artifacts/BENCH_e11_wire.json"
+        } else {
+            "artifacts/BENCH_e11_wire.json"
+        };
+        std::fs::write(path, json).expect("write snapshot");
+        println!("recorded {path}");
+    }
+
+    println!("e11_wire: OK (bit-identical sink output across the wire)");
+}

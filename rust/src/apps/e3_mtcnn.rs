@@ -415,18 +415,34 @@ pub fn build_split_pipelines(
     prefix: &str,
     collect: bool,
 ) -> Result<(Graph, Graph)> {
-    use crate::elements::flow::TeeProps;
-    use crate::elements::query::{QueryServerSinkProps, QueryServerSrcProps};
+    Ok((
+        build_split_front(cfg, prefix, "inproc", 0)?,
+        build_split_back(cfg, prefix, collect, "inproc")?,
+    ))
+}
+
+/// The front (camera + P-Net) half of the split cascade alone, publishing
+/// its two topics over `transport`. With a network transport and
+/// `wait_subscribers = 1` the serversinks park until the remote back half
+/// attaches, so no frame is lost to connection racing — the body of the
+/// publisher OS process in the two-process cascade.
+pub fn build_split_front(
+    cfg: &MtcnnConfig,
+    prefix: &str,
+    transport: &str,
+    wait_subscribers: usize,
+) -> Result<Graph> {
+    use crate::elements::query::QueryServerSinkProps;
 
     register_stages(cfg.class)?;
-
-    // Front: source + P-Net pyramid, ending in two topic publishers.
     let mut f = crate::pipeline::PipelineBuilder::new();
     build_front(&mut f, cfg)?;
     f.from("pnet_merge")?.chain_named(
         "boxes_out",
         QueryServerSinkProps {
             topic: format!("{prefix}/boxes"),
+            transport: transport.to_string(),
+            wait_subscribers,
             ..Default::default()
         },
     )?;
@@ -434,18 +450,35 @@ pub fn build_split_pipelines(
         "frames_out",
         QueryServerSinkProps {
             topic: format!("{prefix}/frames"),
+            transport: transport.to_string(),
+            wait_subscribers,
             ..Default::default()
         },
     )?;
+    Ok(f.into_graph())
+}
 
-    // Back: two topic subscribers standing in for the front's tee/merge
-    // elements (same node names build_back wires from).
+/// The back (R/O-Net refinement) half of the split cascade alone: two
+/// topic subscribers standing in for the front's tee/merge elements
+/// (same node names `build_back` wires from), resolving over
+/// `transport` — the consumer OS process of the two-process cascade.
+pub fn build_split_back(
+    cfg: &MtcnnConfig,
+    prefix: &str,
+    collect: bool,
+    transport: &str,
+) -> Result<Graph> {
+    use crate::elements::flow::TeeProps;
+    use crate::elements::query::QueryServerSrcProps;
+
+    register_stages(cfg.class)?;
     let mut k = crate::pipeline::PipelineBuilder::new();
     k.chain_named(
         "frames_in",
         QueryServerSrcProps {
             topic: format!("{prefix}/frames"),
             caps: frame_caps(cfg),
+            transport: transport.to_string(),
             ..Default::default()
         },
     )?
@@ -455,12 +488,40 @@ pub fn build_split_pipelines(
         QueryServerSrcProps {
             topic: format!("{prefix}/boxes"),
             caps: box_caps(cfg),
+            transport: transport.to_string(),
             ..Default::default()
         },
     )?;
     build_back(&mut k, cfg, collect)?;
+    Ok(k.into_graph())
+}
 
-    Ok((f.into_graph(), k.into_graph()))
+/// Run only the front half over `transport` (blocking): the publisher OS
+/// process of the two-process cascade. Serversinks wait for one remote
+/// subscriber each before producing.
+pub fn run_split_front(
+    cfg: &MtcnnConfig,
+    prefix: &str,
+    transport: &str,
+) -> Result<crate::metrics::stats::PipelineReport> {
+    let g = build_split_front(cfg, prefix, transport, 1)?;
+    let mut pipeline = crate::pipeline::Pipeline::new(g);
+    pipeline.run()
+}
+
+/// Run only the back half over `transport` (blocking, collect variant):
+/// the consumer OS process of the two-process cascade. Returns the
+/// pipeline report and the sink payloads for bit-identity comparison.
+pub fn run_split_back(
+    cfg: &MtcnnConfig,
+    prefix: &str,
+    transport: &str,
+) -> Result<(crate::metrics::stats::PipelineReport, Vec<(u64, Vec<u8>)>)> {
+    let g = build_split_back(cfg, prefix, true, transport)?;
+    let mut pipeline = crate::pipeline::Pipeline::new(g);
+    let report = pipeline.run()?;
+    let sink = collect_sink(&mut pipeline);
+    Ok((report, sink))
 }
 
 /// Sink payloads of a finished collect-variant pipeline, in arrival

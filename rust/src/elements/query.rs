@@ -89,7 +89,9 @@ impl Props for QueryServerSinkProps {
     fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "topic" => self.topic = value.to_string(),
-            "transport" => self.transport = value.to_string(),
+            // resolve eagerly: an unknown backend (with its nearest-name
+            // suggestion) fails at construction, not at first play
+            "transport" => self.transport = transport(value).map(|_| value.to_string())?,
             "wait-subscribers" => self.wait_subscribers = parse_usize(key, value)?,
             "qos" => self.qos = Qos::parse(value)?,
             _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
@@ -129,6 +131,9 @@ impl FromProps for TensorQueryServerSink {
     type Props = QueryServerSinkProps;
 
     fn from_props(props: QueryServerSinkProps) -> Result<Self> {
+        // typed-builder users set the field directly: validate here too,
+        // so a bad backend still fails at construction
+        transport(&props.transport)?;
         Ok(Self {
             props,
             port: None,
@@ -275,7 +280,7 @@ impl Props for QueryServerSrcProps {
     fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "topic" => self.topic = value.to_string(),
-            "transport" => self.transport = value.to_string(),
+            "transport" => self.transport = transport(value).map(|_| value.to_string())?,
             "caps" => self.caps = Caps::parse(value)?,
             "max-buffers" => self.max_buffers = parse_usize(key, value)?.max(1),
             "qos" => self.qos = Qos::parse(value)?,
@@ -317,6 +322,7 @@ impl FromProps for TensorQueryServerSrc {
     type Props = QueryServerSrcProps;
 
     fn from_props(props: QueryServerSrcProps) -> Result<Self> {
+        transport(&props.transport)?;
         Ok(Self {
             props,
             port: None,
@@ -448,7 +454,7 @@ impl Props for QueryClientProps {
         match key {
             "topic" => self.topic = value.to_string(),
             "reply" => self.reply = value.to_string(),
-            "transport" => self.transport = value.to_string(),
+            "transport" => self.transport = transport(value).map(|_| value.to_string())?,
             "caps" => self.caps = Caps::parse(value)?,
             "max-buffers" => self.max_buffers = parse_usize(key, value)?.max(1),
             _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
@@ -494,6 +500,7 @@ impl FromProps for TensorQueryClient {
     type Props = QueryClientProps;
 
     fn from_props(props: QueryClientProps) -> Result<Self> {
+        transport(&props.transport)?;
         Ok(Self {
             props,
             req: None,
@@ -616,6 +623,48 @@ mod tests {
         let mut s = QueryServerSinkProps::default();
         s.set("wait-subscribers", "2").unwrap();
         assert_eq!(s.wait_subscribers, 2);
+    }
+
+    #[test]
+    fn transport_validates_at_construction_with_suggestion() {
+        // launch-syntax path: a bad backend name fails in `set`, before
+        // the pipeline ever plays, and suggests the nearest registered one
+        let mut p = QueryServerSrcProps::default();
+        p.set("transport", "inproc").unwrap();
+        let err = p.set("transport", "inprc").unwrap_err().to_string();
+        assert!(err.contains("no such tensor-query transport"), "{err}");
+        assert!(err.contains("did you mean \"inproc\"?"), "{err}");
+        // the rejected value was not stored
+        assert_eq!(p.transport, "inproc");
+        let mut s = QueryServerSinkProps::default();
+        let err = s.set("transport", "bogus-backend").unwrap_err().to_string();
+        assert!(err.contains("no such tensor-query transport"), "{err}");
+        let mut c = QueryClientProps::default();
+        assert!(c.set("transport", "inprc").is_err());
+
+        // typed-builder path: fields set directly still validate in
+        // `from_props`
+        let err = TensorQueryServerSink::from_props(QueryServerSinkProps {
+            topic: "unit/q-validate".into(),
+            transport: "inprc".into(),
+            ..Default::default()
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("did you mean \"inproc\"?"), "{err}");
+        assert!(TensorQueryServerSrc::from_props(QueryServerSrcProps {
+            topic: "unit/q-validate".into(),
+            transport: "nope".into(),
+            ..Default::default()
+        })
+        .is_err());
+        assert!(TensorQueryClient::from_props(QueryClientProps {
+            topic: "unit/q-validate".into(),
+            reply: "unit/q-validate-r".into(),
+            transport: "nope".into(),
+            ..Default::default()
+        })
+        .is_err());
     }
 
     #[test]

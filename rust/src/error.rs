@@ -144,6 +144,29 @@ pub enum Error {
         reason: String,
     },
 
+    /// A network transport could not reach a peer: topic resolution
+    /// against the registry failed, or the TCP connect/handshake to the
+    /// resolved address failed (after any configured retries).
+    Connect {
+        /// Topic (or registry endpoint) being reached.
+        topic: String,
+        /// Address attempted, or the registry address when resolution
+        /// itself failed.
+        addr: String,
+        reason: String,
+    },
+
+    /// A wire frame was malformed: bad magic, unsupported version,
+    /// unknown frame type, length/checksum mismatch, or a truncated or
+    /// internally inconsistent payload. Decoders return this instead of
+    /// panicking, whatever the input bytes.
+    Frame(String),
+
+    /// The credit-based flow-control protocol was violated on a
+    /// connection (e.g. a peer granted credits past the advertised
+    /// window, or sent a buffer with no credit outstanding).
+    Credit { topic: String, reason: String },
+
     /// NNFW / model runtime failure (artifact load or execute).
     Runtime(String),
 
@@ -209,6 +232,15 @@ impl std::fmt::Display for Error {
             } => write!(
                 f,
                 "pipeline {pipeline:?} quarantined after {restarts} restarts: {reason}"
+            ),
+            Error::Connect { topic, addr, reason } => write!(
+                f,
+                "connect failed for topic {topic:?} at {addr}: {reason}"
+            ),
+            Error::Frame(msg) => write!(f, "bad wire frame: {msg}"),
+            Error::Credit { topic, reason } => write!(
+                f,
+                "credit protocol violation on topic {topic:?}: {reason}"
             ),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
@@ -380,6 +412,33 @@ mod tests {
         };
         assert_eq!(anon.to_string(), "parse error at bytes 0..1: dangling '!'");
         assert_eq!(anon.bare_message(), "dangling '!'");
+    }
+
+    #[test]
+    fn net_variants_render_topic_and_cause() {
+        assert_eq!(
+            Error::Connect {
+                topic: "ns/frames".into(),
+                addr: "127.0.0.1:9000".into(),
+                reason: "connection refused".into(),
+            }
+            .to_string(),
+            "connect failed for topic \"ns/frames\" at 127.0.0.1:9000: \
+             connection refused"
+        );
+        assert_eq!(
+            Error::Frame("checksum mismatch".into()).to_string(),
+            "bad wire frame: checksum mismatch"
+        );
+        assert_eq!(
+            Error::Credit {
+                topic: "ns/frames".into(),
+                reason: "grant of 5 exceeds window 4".into(),
+            }
+            .to_string(),
+            "credit protocol violation on topic \"ns/frames\": \
+             grant of 5 exceeds window 4"
+        );
     }
 
     #[test]

@@ -85,6 +85,7 @@ pub mod element;
 pub mod elements;
 pub mod error;
 pub mod metrics;
+pub mod net;
 pub mod nnfw;
 pub mod pipeline;
 pub mod runtime;

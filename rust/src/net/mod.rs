@@ -1,0 +1,71 @@
+//! Network transport subsystem: tensor-query over real sockets.
+//!
+//! The among-device follow-on paper (arXiv:2201.06026) composes one
+//! logical AI pipeline across devices; PR 5's stream-endpoint layer
+//! built the topic pub/sub surface but stopped at the process
+//! boundary. This module crosses it:
+//!
+//! * [`wire`] — the versioned framed codec (magic + version + type +
+//!   length + checksum) carrying caps, tensor buffers, EOS, typed
+//!   faults, credit grants, and registry operations;
+//! * [`transport`] — [`TcpTransport`], a [`Transport`] backend with
+//!   per-subscriber **credit-based flow control** (a full remote queue
+//!   parks the publisher like an in-pipeline link; non-blocking QoS
+//!   sheds with typed drops) and reconnects that preserve
+//!   EOS-vs-fault close reasons;
+//! * [`registry`] — the [`NetRegistry`] discovery service resolving
+//!   `topic → host:port` across OS processes.
+//!
+//! Register with [`register_tcp`] and the element API is unchanged:
+//! `tensor_query_serversink topic=ns/frames transport=tcp` serves a
+//! topic; a `tensor_query_serversrc` with the same properties in
+//! another process consumes it.
+//!
+//! [`Transport`]: crate::pipeline::stream::Transport
+
+pub mod registry;
+pub mod transport;
+pub mod wire;
+
+use std::sync::{Arc, Mutex, Weak};
+
+use once_cell::sync::Lazy;
+
+use crate::metrics::stats::TopicSnapshot;
+use crate::pipeline::executor::lock;
+
+pub use registry::{NetRegistry, RegistryClient, RegistryServer};
+pub use transport::{TcpConfig, TcpTransport};
+
+/// Every live [`TcpTransport`] created through [`register_tcp`] /
+/// [`register_tcp_as`], so pipeline reports can fold network topic
+/// counters in next to in-process ones.
+static INSTANCES: Lazy<Mutex<Vec<Weak<TcpTransport>>>> = Lazy::new(Mutex::default);
+
+/// Create a [`TcpTransport`] and register it under the standard
+/// `transport=tcp` name.
+pub fn register_tcp(cfg: TcpConfig) -> Arc<TcpTransport> {
+    register_tcp_as("tcp", cfg)
+}
+
+/// Create a [`TcpTransport`] under a caller-chosen transport name
+/// (parallel tests register isolated instances as `tcp-<case>`).
+pub fn register_tcp_as(name: &str, cfg: TcpConfig) -> Arc<TcpTransport> {
+    let t = Arc::new(TcpTransport::new(cfg));
+    lock(&INSTANCES).push(Arc::downgrade(&t));
+    crate::pipeline::stream::register_transport(name, t.clone());
+    t
+}
+
+/// Counter snapshots of every live TCP transport (served topics as
+/// `tcp-pub:<topic>`, subscriptions as `tcp-sub:<topic>`); appended to
+/// [`PipelineReport::topics`](crate::metrics::stats::PipelineReport)
+/// so the conservation identity is reportable on both sides of a wire.
+pub fn topics_snapshot() -> Vec<TopicSnapshot> {
+    let mut g = lock(&INSTANCES);
+    g.retain(|w| w.strong_count() > 0);
+    g.iter()
+        .filter_map(Weak::upgrade)
+        .flat_map(|t| t.snapshot())
+        .collect()
+}

@@ -1,0 +1,263 @@
+//! Cross-process topic discovery for the TCP transport.
+//!
+//! One process (typically the one hosting the [`PipelineHub`]) runs a
+//! [`NetRegistry`]; every publisher registers `topic → host:port` there
+//! as it binds its data-plane listener, and every subscriber resolves
+//! topics by name before connecting. The registry speaks the same
+//! framed codec as the data plane ([`super::wire`]): `RegPut` /
+//! `RegGet` requests, `RegAddr` responses (`None` = unknown topic).
+//!
+//! Registration is last-writer-wins on purpose: a publisher process
+//! that died and was restarted (new ephemeral port) overwrites its
+//! stale entry, which is what lets a reconnecting subscriber find the
+//! new generation.
+//!
+//! [`PipelineHub`]: crate::pipeline::PipelineHub
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::net::wire::{read_msg, write_msg, Msg};
+use crate::pipeline::executor::lock;
+
+/// Per-operation I/O timeout on registry connections (both planes are
+/// loopback/LAN; a stuck peer should fail typed, not hang a pipeline).
+const REGISTRY_IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+#[derive(Default)]
+struct RegistryState {
+    topics: Mutex<HashMap<String, String>>,
+    peers: Mutex<Vec<TcpStream>>,
+    stopped: AtomicBool,
+}
+
+/// The discovery service. [`NetRegistry::serve`] returns a handle that
+/// owns the listener; dropping the handle stops it.
+pub struct NetRegistry;
+
+impl NetRegistry {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve registry requests until the returned handle is dropped.
+    pub fn serve(addr: &str) -> Result<RegistryServer> {
+        let listener = TcpListener::bind(addr).map_err(|e| Error::Connect {
+            topic: "<registry>".into(),
+            addr: addr.to_string(),
+            reason: e.to_string(),
+        })?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(RegistryState::default());
+        let accept_state = Arc::clone(&state);
+        let accept = std::thread::Builder::new()
+            .name("nns-net-registry".into())
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                for stream in listener.incoming() {
+                    let Ok(stream) = stream else { break };
+                    // `RegistryServer::drop` sets the flag, then makes a
+                    // throwaway connection to pop this accept exactly once.
+                    if accept_state.stopped.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let conn_state = Arc::clone(&accept_state);
+                    if let Ok(peer) = stream.try_clone() {
+                        lock(&conn_state.peers).push(peer);
+                    }
+                    conns.push(std::thread::spawn(move || serve_conn(stream, conn_state)));
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })
+            .expect("spawn registry accept thread");
+        Ok(RegistryServer {
+            addr: local,
+            state,
+            accept: Some(accept),
+        })
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, state: Arc<RegistryState>) {
+    let _ = stream.set_read_timeout(Some(REGISTRY_IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(REGISTRY_IO_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let msg = match read_msg(&mut stream) {
+            Ok(Some(m)) => m,
+            // clean close, corrupt frame, or shutdown: drop the peer
+            Ok(None) | Err(_) => break,
+        };
+        let reply = match msg {
+            Msg::RegPut { topic, addr } => {
+                lock(&state.topics).insert(topic, addr.clone());
+                Msg::RegAddr { addr: Some(addr) }
+            }
+            Msg::RegGet { topic } => Msg::RegAddr {
+                addr: lock(&state.topics).get(&topic).cloned(),
+            },
+            // data-plane messages on the registry port are a peer bug
+            _ => break,
+        };
+        if write_msg(&mut stream, &reply).is_err() || stream.flush().is_err() {
+            break;
+        }
+    }
+}
+
+/// Handle owning a running registry; dropping it stops the service.
+pub struct RegistryServer {
+    addr: SocketAddr,
+    state: Arc<RegistryState>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl RegistryServer {
+    /// The bound address (resolves the ephemeral port of a `:0` bind).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Topics currently registered (diagnostics).
+    pub fn topics(&self) -> Vec<(String, String)> {
+        lock(&self.state.topics)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+}
+
+impl Drop for RegistryServer {
+    fn drop(&mut self) {
+        // Mark stopped, unblock the accept loop with a throwaway
+        // connection, and sever live peers so their threads exit.
+        self.state.stopped.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+        for peer in lock(&self.state.peers).drain(..) {
+            let _ = peer.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Client side of the discovery protocol. Stateless: each operation is
+/// one short-lived connection, so a restarted registry (or publisher)
+/// never wedges a cached socket.
+#[derive(Debug, Clone)]
+pub struct RegistryClient {
+    addr: String,
+}
+
+impl RegistryClient {
+    pub fn new(addr: impl Into<String>) -> RegistryClient {
+        RegistryClient { addr: addr.into() }
+    }
+
+    /// The registry address this client talks to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn request(&self, topic: &str, req: &Msg) -> Result<Option<String>> {
+        let connect_err = |reason: String| Error::Connect {
+            topic: topic.to_string(),
+            addr: self.addr.clone(),
+            reason,
+        };
+        let mut stream =
+            TcpStream::connect(&self.addr).map_err(|e| connect_err(e.to_string()))?;
+        let _ = stream.set_read_timeout(Some(REGISTRY_IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(REGISTRY_IO_TIMEOUT));
+        let _ = stream.set_nodelay(true);
+        write_msg(&mut stream, req)?;
+        stream.flush()?;
+        match read_msg(&mut stream)? {
+            Some(Msg::RegAddr { addr }) => Ok(addr),
+            Some(other) => Err(connect_err(format!(
+                "unexpected registry reply {other:?}"
+            ))),
+            None => Err(connect_err("registry closed without replying".into())),
+        }
+    }
+
+    /// Register (or overwrite) `topic → addr`.
+    pub fn put(&self, topic: &str, addr: &str) -> Result<()> {
+        self.request(
+            topic,
+            &Msg::RegPut {
+                topic: topic.to_string(),
+                addr: addr.to_string(),
+            },
+        )?;
+        Ok(())
+    }
+
+    /// Resolve `topic`; `Ok(None)` means the registry is reachable but
+    /// the topic is not (yet) registered.
+    pub fn get(&self, topic: &str) -> Result<Option<String>> {
+        self.request(
+            topic,
+            &Msg::RegGet {
+                topic: topic.to_string(),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_and_overwrite_roundtrip() {
+        let server = NetRegistry::serve("127.0.0.1:0").expect("serve");
+        let client = RegistryClient::new(server.addr().to_string());
+        assert_eq!(client.get("ns/frames").unwrap(), None);
+        client.put("ns/frames", "127.0.0.1:4000").unwrap();
+        assert_eq!(
+            client.get("ns/frames").unwrap().as_deref(),
+            Some("127.0.0.1:4000")
+        );
+        // last-writer-wins: a restarted publisher overwrites its entry
+        client.put("ns/frames", "127.0.0.1:4001").unwrap();
+        assert_eq!(
+            client.get("ns/frames").unwrap().as_deref(),
+            Some("127.0.0.1:4001")
+        );
+        assert_eq!(server.topics().len(), 1);
+    }
+
+    #[test]
+    fn unreachable_registry_is_a_typed_connect_error() {
+        // bind-then-drop to learn a port that is certainly closed
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let client = RegistryClient::new(format!("127.0.0.1:{port}"));
+        match client.get("ns/frames") {
+            Err(Error::Connect { topic, .. }) => assert_eq!(topic, "ns/frames"),
+            other => panic!("expected Connect error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn server_stops_on_drop_and_port_closes() {
+        let addr = {
+            let server = NetRegistry::serve("127.0.0.1:0").expect("serve");
+            let client = RegistryClient::new(server.addr().to_string());
+            client.put("t", "a").unwrap();
+            server.addr().to_string()
+        };
+        // after drop the port no longer accepts registry requests
+        let client = RegistryClient::new(addr);
+        assert!(client.get("t").is_err());
+    }
+}

@@ -1,0 +1,836 @@
+//! `TcpTransport`: the [`Transport`] trait over TCP sockets with
+//! per-subscriber credit-based flow control.
+//!
+//! ## Serve side (publisher process)
+//!
+//! A publisher port attaches to a topic in the transport's **private**
+//! [`StreamRegistry`] — not the global one, so a loopback process that
+//! both serves and subscribes never short-circuits the wire. The
+//! transport lazily binds one data-plane listener; each accepted
+//! connection handshakes with a `Hello` frame naming the topic, then
+//! gets its own subscriber queue (`TopicInner::subscribe`) plus a
+//! writer thread that sends one `Buffer` frame per **credit** and a
+//! reader thread that banks incoming `Credit` grants. A full remote
+//! queue therefore parks the publisher exactly like an in-pipeline
+//! link (Blocking) or sheds with typed drops (Leaky/LatestOnly) —
+//! the QoS machinery is the same `TopicInner` fan-out the in-process
+//! transport uses.
+//!
+//! ## Subscriber side (consumer process)
+//!
+//! A subscriber port owns a **standalone** bounded [`Endpoint`] fed by
+//! a background connector thread: resolve the topic in the
+//! [`NetRegistry`](super::registry::NetRegistry), connect, `Hello`
+//! with `capacity` and an initial credit grant of
+//! `capacity - in_flight` (reconnects must not over-grant into a
+//! queue that still holds undelivered frames), then loop reading
+//! frames. Each element-side pop returns one `Credit`, so
+//! `sent - credited <= capacity` bounds subscriber memory. A
+//! connection that dies **without** `Eos`/`Fault` is retried
+//! (re-resolving the registry, so a restarted publisher on a new port
+//! is found); exhausted retries surface as a typed
+//! [`StreamEnd::Fault`], never a clean EOS.
+//!
+//! Delivery is at-most-once across a reconnect: frames queued on the
+//! dead connection's server-side endpoint are accounted as `closed`
+//! drops, keeping `pushed == delivered + dropped + in_flight` exact on
+//! both sides of the wire.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Fault, Result};
+use crate::metrics::stats::{
+    merge_latency, summarize_latency, TopicDrops, TopicSnapshot, LATENCY_BUCKETS,
+};
+use crate::net::registry::RegistryClient;
+use crate::net::wire::{read_msg, write_msg, Msg};
+use crate::pipeline::executor::{lock, SharedWaker};
+use crate::pipeline::stream::{
+    topic_publisher_port, Endpoint, EpPop, EpPush, PortRecv, PublisherPort, StreamRegistry,
+    SubscriberPort, TopicInner, Transport,
+};
+use crate::pipeline::{Qos, StreamEnd};
+use crate::tensor::Caps;
+
+/// Configuration of one [`TcpTransport`] instance.
+#[derive(Debug, Clone)]
+pub struct TcpConfig {
+    /// Address of the [`NetRegistry`](super::registry::NetRegistry)
+    /// used for topic discovery (`"host:port"`).
+    pub registry: String,
+    /// Data-plane bind address for served topics. `"127.0.0.1:0"`
+    /// (default) binds an ephemeral loopback port.
+    pub bind: String,
+    /// Host name published to the registry; defaults to the bound
+    /// listener's IP (override when peers reach this process through
+    /// a different interface/NAT name).
+    pub advertise_host: Option<String>,
+    /// Total budget for a subscriber's *initial* resolve + connect
+    /// (publishers may register after subscribers start).
+    pub connect_timeout: Duration,
+    /// Reconnect attempts after a connection died mid-stream without
+    /// `Eos`/`Fault`; exhausting them fails the subscription.
+    pub reconnect_attempts: u32,
+    /// Pause between resolution/reconnect attempts.
+    pub reconnect_backoff: Duration,
+}
+
+impl TcpConfig {
+    pub fn new(registry: impl Into<String>) -> TcpConfig {
+        TcpConfig {
+            registry: registry.into(),
+            bind: "127.0.0.1:0".into(),
+            advertise_host: None,
+            connect_timeout: Duration::from_secs(10),
+            reconnect_attempts: 8,
+            reconnect_backoff: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Live-connection tally on the serve side; [`TcpTransport::quiesce`]
+/// waits for it to drain so a publisher process can exit knowing every
+/// final `Eos`/`Fault` frame reached the socket.
+#[derive(Default)]
+struct ConnTracker {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl ConnTracker {
+    fn inc(&self) {
+        *lock(&self.n) += 1;
+    }
+
+    fn dec(&self) {
+        let mut g = lock(&self.n);
+        *g = g.saturating_sub(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    fn wait_zero(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = lock(&self.n);
+        while *g > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g2, _) = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            g = g2;
+        }
+        true
+    }
+}
+
+/// State shared between the transport handle and its serve-side threads.
+struct ServeShared {
+    /// Private topic registry: served topics live here, isolated from
+    /// the process-global in-proc registry.
+    topics: StreamRegistry,
+    conns: ConnTracker,
+    stopped: AtomicBool,
+    /// Accepted sockets, severed on transport drop so their threads exit.
+    peers: Mutex<Vec<TcpStream>>,
+}
+
+/// Per-connection credit window on the serve side.
+struct ServerConn {
+    credits: Mutex<u64>,
+    cv: Condvar,
+    closed: AtomicBool,
+    /// The subscriber's advertised queue capacity: a credit balance
+    /// above this is a protocol violation and severs the connection.
+    cap: u64,
+}
+
+impl ServerConn {
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    /// Block until one credit is available (consuming it) or the
+    /// connection closed. `false` = closed.
+    fn take_credit(&self) -> bool {
+        let mut g = lock(&self.credits);
+        loop {
+            if self.closed.load(Ordering::Acquire) {
+                return false;
+            }
+            if *g > 0 {
+                *g -= 1;
+                return true;
+            }
+            let (g2, _) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(100))
+                .unwrap_or_else(|e| e.into_inner());
+            g = g2;
+        }
+    }
+}
+
+struct ListenerState {
+    advertised: String,
+    local: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+/// Final counters of subscriptions whose port has been released,
+/// accumulated per topic. A `PipelineReport` is snapshotted after its
+/// elements dropped their ports; without this fold the subscriber side
+/// of the wire would vanish from the report and the conservation
+/// identity could not be audited post-run.
+#[derive(Default)]
+struct RetiredSubs {
+    by_topic: Mutex<HashMap<String, RetiredSub>>,
+}
+
+struct RetiredSub {
+    pushed: u64,
+    delivered: u64,
+    drops: TopicDrops,
+    in_flight: u64,
+    eos: bool,
+    hist: [u64; LATENCY_BUCKETS],
+}
+
+impl Default for RetiredSub {
+    fn default() -> RetiredSub {
+        RetiredSub {
+            pushed: 0,
+            delivered: 0,
+            drops: TopicDrops::default(),
+            in_flight: 0,
+            eos: true,
+            hist: [0; LATENCY_BUCKETS],
+        }
+    }
+}
+
+/// State shared between a subscriber port and its connector thread.
+struct SubShared {
+    topic: String,
+    qos: Qos,
+    ep: Arc<Endpoint>,
+    caps: Mutex<Option<Caps>>,
+    /// Write half of the live connection (credit grants, detach).
+    writer: Mutex<Option<TcpStream>>,
+    detached: AtomicBool,
+    connected: AtomicBool,
+    retired: Arc<RetiredSubs>,
+}
+
+impl SubShared {
+    fn fail(&self, message: String) {
+        self.ep.fail(&Fault {
+            element: format!("tcp:{}", self.topic),
+            message,
+            panicked: false,
+        });
+    }
+}
+
+impl Drop for SubShared {
+    // Runs once the port *and* the connector thread released their
+    // handles, so a weak upgrade in `snapshot` can never double-count
+    // a subscription that also folded itself here.
+    fn drop(&mut self) {
+        let (c, hist) = self.ep.counters_and_hist();
+        let mut g = lock(&self.retired.by_topic);
+        let r = g.entry(self.topic.clone()).or_default();
+        r.pushed += c.pushed;
+        r.delivered += c.delivered;
+        r.drops.qos_leaky += c.dropped.qos_leaky;
+        r.drops.qos_latest += c.dropped.qos_latest;
+        r.drops.closed += c.dropped.closed;
+        r.in_flight += c.in_flight;
+        r.eos &= self.ep.close_reason().is_some();
+        merge_latency(&mut r.hist, &hist);
+    }
+}
+
+/// The TCP tensor-query transport. Register with
+/// [`register_tcp`](super::register_tcp); elements select it with
+/// `transport=tcp` and an unchanged topic API.
+pub struct TcpTransport {
+    cfg: TcpConfig,
+    registry: RegistryClient,
+    serve: Arc<ServeShared>,
+    listener: Mutex<Option<ListenerState>>,
+    subs: Mutex<Vec<Weak<SubShared>>>,
+    retired: Arc<RetiredSubs>,
+}
+
+impl TcpTransport {
+    pub fn new(cfg: TcpConfig) -> TcpTransport {
+        TcpTransport {
+            registry: RegistryClient::new(cfg.registry.clone()),
+            cfg,
+            serve: Arc::new(ServeShared {
+                topics: StreamRegistry::new(),
+                conns: ConnTracker::default(),
+                stopped: AtomicBool::new(false),
+                peers: Mutex::new(Vec::new()),
+            }),
+            listener: Mutex::new(None),
+            subs: Mutex::new(Vec::new()),
+            retired: Arc::new(RetiredSubs::default()),
+        }
+    }
+
+    /// The configuration this transport was built with.
+    pub fn config(&self) -> &TcpConfig {
+        &self.cfg
+    }
+
+    /// Bind the data-plane listener on first use; returns the address
+    /// advertised to the registry.
+    fn ensure_listener(&self) -> Result<String> {
+        let mut g = lock(&self.listener);
+        if let Some(l) = g.as_ref() {
+            return Ok(l.advertised.clone());
+        }
+        let listener = TcpListener::bind(&self.cfg.bind).map_err(|e| Error::Connect {
+            topic: "<data-plane>".into(),
+            addr: self.cfg.bind.clone(),
+            reason: e.to_string(),
+        })?;
+        let local = listener.local_addr()?;
+        let host = self
+            .cfg
+            .advertise_host
+            .clone()
+            .unwrap_or_else(|| local.ip().to_string());
+        let advertised = format!("{host}:{}", local.port());
+        let shared = Arc::clone(&self.serve);
+        let accept = std::thread::Builder::new()
+            .name("nns-tcp-accept".into())
+            .spawn(move || accept_loop(listener, shared))
+            .expect("spawn tcp accept thread");
+        *g = Some(ListenerState {
+            advertised: advertised.clone(),
+            local,
+            accept: Some(accept),
+        });
+        Ok(advertised)
+    }
+
+    /// Wait until every serve-side connection finished writing its
+    /// final frame (`Eos`/`Fault`). A publisher process calls this
+    /// before exiting so an abrupt process end is never mistaken for a
+    /// clean stream end by remote subscribers. `false` = timed out.
+    pub fn quiesce(&self, timeout: Duration) -> bool {
+        self.serve.conns.wait_zero(timeout)
+    }
+
+    /// Counter snapshots of everything this transport carries:
+    /// served topics as `tcp-pub:<topic>`, subscriptions as
+    /// `tcp-sub:<topic>`. Both obey the conservation identity
+    /// `pushed == delivered + dropped + in_flight` (serve side under
+    /// the topic lock; subscriber side under its endpoint lock).
+    pub fn snapshot(&self) -> Vec<TopicSnapshot> {
+        #[derive(Default)]
+        struct SubAgg {
+            live: usize,
+            connected: bool,
+            c: RetiredSub,
+        }
+        fn slot<'a>(agg: &'a mut Vec<(String, SubAgg)>, topic: &str) -> &'a mut SubAgg {
+            if let Some(i) = agg.iter().position(|(t, _)| t == topic) {
+                return &mut agg[i].1;
+            }
+            agg.push((topic.to_string(), SubAgg::default()));
+            let i = agg.len() - 1;
+            &mut agg[i].1
+        }
+        let mut out = Vec::new();
+        for mut s in self.serve.topics.snapshot() {
+            s.name = format!("tcp-pub:{}", s.name);
+            out.push(s);
+        }
+        // One `tcp-sub:` entry per topic, folding live subscriptions
+        // with already-retired generations so the conservation identity
+        // survives port drops and reconnects.
+        let mut agg: Vec<(String, SubAgg)> = Vec::new();
+        let mut subs = lock(&self.subs);
+        subs.retain(|w| w.strong_count() > 0);
+        for shared in subs.iter().filter_map(Weak::upgrade) {
+            let (c, hist) = shared.ep.counters_and_hist();
+            let s = slot(&mut agg, &shared.topic);
+            s.live += 1;
+            s.connected |= shared.connected.load(Ordering::Acquire);
+            s.c.eos &= shared.ep.close_reason().is_some();
+            s.c.pushed += c.pushed;
+            s.c.delivered += c.delivered;
+            s.c.drops.qos_leaky += c.dropped.qos_leaky;
+            s.c.drops.qos_latest += c.dropped.qos_latest;
+            s.c.drops.closed += c.dropped.closed;
+            s.c.in_flight += c.in_flight;
+            merge_latency(&mut s.c.hist, &hist);
+        }
+        drop(subs);
+        for (topic, r) in lock(&self.retired.by_topic).iter() {
+            let s = slot(&mut agg, topic);
+            s.c.eos &= r.eos;
+            s.c.pushed += r.pushed;
+            s.c.delivered += r.delivered;
+            s.c.drops.qos_leaky += r.drops.qos_leaky;
+            s.c.drops.qos_latest += r.drops.qos_latest;
+            s.c.drops.closed += r.drops.closed;
+            s.c.in_flight += r.in_flight;
+            merge_latency(&mut s.c.hist, &r.hist);
+        }
+        for (topic, s) in agg {
+            let drops = s.c.drops;
+            out.push(TopicSnapshot {
+                name: format!("tcp-sub:{topic}"),
+                publishers: usize::from(s.connected),
+                subscribers: s.live,
+                eos: s.c.eos,
+                published: s.c.pushed,
+                pushed: s.c.pushed,
+                delivered: s.c.delivered,
+                dropped: drops.total(),
+                drops,
+                in_flight: s.c.in_flight,
+                latency: summarize_latency(&s.c.hist),
+            });
+        }
+        out
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn advertise(&self, topic: &str, qos: Qos) -> Result<Box<dyn PublisherPort>> {
+        let addr = self.ensure_listener()?;
+        self.registry.put(topic, &addr)?;
+        // The port itself is the same topic-backed port the in-process
+        // transport uses — against this transport's private registry,
+        // where remote connections materialize as subscriber queues.
+        Ok(topic_publisher_port(self.serve.topics.topic(topic), qos))
+    }
+
+    fn attach(&self, topic: &str, capacity: usize, qos: Qos) -> Result<Box<dyn SubscriberPort>> {
+        let shared = Arc::new(SubShared {
+            topic: topic.to_string(),
+            qos,
+            ep: Endpoint::new(capacity.max(1), qos, None),
+            caps: Mutex::new(None),
+            writer: Mutex::new(None),
+            detached: AtomicBool::new(false),
+            connected: AtomicBool::new(false),
+            retired: Arc::clone(&self.retired),
+        });
+        lock(&self.subs).push(Arc::downgrade(&shared));
+        let thread_shared = Arc::clone(&shared);
+        let cfg = self.cfg.clone();
+        std::thread::Builder::new()
+            .name(format!("nns-tcp-sub-{topic}"))
+            .spawn(move || run_client(thread_shared, cfg))
+            .expect("spawn tcp subscriber thread");
+        Ok(Box::new(TcpSubscriberPort { shared }))
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.serve.stopped.store(true, Ordering::Release);
+        if let Some(mut l) = lock(&self.listener).take() {
+            // pop the accept loop, sever live peers, join the acceptor
+            let _ = TcpStream::connect(l.local);
+            for p in lock(&self.serve.peers).drain(..) {
+                let _ = p.shutdown(Shutdown::Both);
+            }
+            if let Some(h) = l.accept.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serve side
+// ---------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, shared: Arc<ServeShared>) {
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { break };
+        if shared.stopped.load(Ordering::Acquire) {
+            break;
+        }
+        if let Ok(peer) = stream.try_clone() {
+            lock(&shared.peers).push(peer);
+        }
+        let conn_shared = Arc::clone(&shared);
+        let _ = std::thread::Builder::new()
+            .name("nns-tcp-conn".into())
+            .spawn(move || serve_conn(conn_shared, stream));
+    }
+}
+
+/// One accepted data-plane connection: handshake, subscribe the topic,
+/// run the credit-gated writer inline with a reader thread for grants.
+fn serve_conn(shared: Arc<ServeShared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let hello = match read_msg(&mut stream) {
+        Ok(Some(Msg::Hello {
+            topic,
+            capacity,
+            credits,
+            qos,
+        })) => (topic, capacity, credits, qos),
+        // anything else (including clean close) is a failed handshake
+        _ => return,
+    };
+    let (topic_name, capacity, credits, qos) = hello;
+    let cap = capacity.max(1) as u64;
+    if u64::from(credits) > cap {
+        // typed for the logs we don't have: sever the handshake instead
+        // of honoring an over-window grant (Error::Credit territory)
+        return;
+    }
+    let Ok(reader_stream) = stream.try_clone() else {
+        return;
+    };
+    let topic = shared.topics.topic(&topic_name);
+    let ep = topic.subscribe(Some(cap as usize), qos);
+    let conn = Arc::new(ServerConn {
+        credits: Mutex::new(u64::from(credits)),
+        cv: Condvar::new(),
+        closed: AtomicBool::new(false),
+        cap,
+    });
+    shared.conns.inc();
+    let reader_conn = Arc::clone(&conn);
+    let reader_topic = Arc::clone(&topic);
+    let reader_ep = Arc::clone(&ep);
+    let reader = std::thread::Builder::new()
+        .name("nns-tcp-credits".into())
+        .spawn(move || server_reader(reader_conn, reader_topic, reader_ep, reader_stream))
+        .ok();
+    server_writer(&conn, &topic, &ep, stream);
+    shared.conns.dec();
+    if let Some(h) = reader {
+        let _ = h.join();
+    }
+}
+
+/// Credit-gated sender: one `Buffer` frame per credit, `Caps` as soon
+/// as known, and a terminal `Eos`/`Fault` chosen by the endpoint's
+/// close-reason (a `Closed` reason means the subscriber detached — no
+/// terminal frame owed).
+fn server_writer(
+    conn: &ServerConn,
+    topic: &Arc<TopicInner>,
+    ep: &Arc<Endpoint>,
+    stream: TcpStream,
+) {
+    let shutdown_handle = stream.try_clone().ok();
+    let mut w = std::io::BufWriter::new(stream);
+    let mut caps_sent = false;
+    let send_caps = |w: &mut std::io::BufWriter<TcpStream>, caps_sent: &mut bool| -> bool {
+        if !*caps_sent {
+            if let Some(c) = topic.caps() {
+                if write_msg(w, &Msg::Caps(c)).is_err() {
+                    return false;
+                }
+                *caps_sent = true;
+            }
+        }
+        true
+    };
+    loop {
+        match ep.pop_blocking() {
+            Some(buf) => {
+                if !conn.take_credit() {
+                    break;
+                }
+                if !send_caps(&mut w, &mut caps_sent)
+                    || write_msg(&mut w, &Msg::Buffer(buf)).is_err()
+                    || w.flush().is_err()
+                {
+                    break;
+                }
+            }
+            None => {
+                let _ = send_caps(&mut w, &mut caps_sent);
+                match ep.close_reason() {
+                    Some(StreamEnd::Fault(f)) => {
+                        let _ = write_msg(&mut w, &Msg::Fault(f));
+                    }
+                    Some(StreamEnd::Closed) => {}
+                    _ => {
+                        let _ = write_msg(&mut w, &Msg::Eos);
+                    }
+                }
+                let _ = w.flush();
+                break;
+            }
+        }
+    }
+    topic.unsubscribe(ep);
+    conn.close();
+    if let Some(s) = shutdown_handle {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+/// Banks `Credit` grants; a `Detach`, a close, or any protocol breach
+/// unsubscribes the queue so a dead subscriber never wedges the
+/// publisher.
+fn server_reader(
+    conn: Arc<ServerConn>,
+    topic: Arc<TopicInner>,
+    ep: Arc<Endpoint>,
+    mut stream: TcpStream,
+) {
+    loop {
+        match read_msg(&mut stream) {
+            Ok(Some(Msg::Credit(n))) => {
+                let mut g = lock(&conn.credits);
+                let balance = g.saturating_add(u64::from(n));
+                if balance > conn.cap {
+                    // over-window grant: protocol violation, sever
+                    break;
+                }
+                *g = balance;
+                drop(g);
+                conn.cv.notify_all();
+            }
+            // Detach, clean close, corrupt frame, unexpected type: the
+            // subscriber is gone (or broken) either way
+            _ => break,
+        }
+    }
+    topic.unsubscribe(&ep);
+    conn.close();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+// ---------------------------------------------------------------------
+// Subscriber side
+// ---------------------------------------------------------------------
+
+fn try_connect(reg: &RegistryClient, topic: &str) -> Option<TcpStream> {
+    let addr = reg.get(topic).ok().flatten()?;
+    let s = TcpStream::connect(addr).ok()?;
+    let _ = s.set_nodelay(true);
+    Some(s)
+}
+
+/// Sleep `total` in small slices, aborting early on detach.
+fn sleep_detachable(shared: &SubShared, total: Duration) {
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline {
+        if shared.detached.load(Ordering::Acquire) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Connector/reader thread of one subscription: resolve → connect →
+/// handshake → read loop, with registry-re-resolving reconnects.
+fn run_client(shared: Arc<SubShared>, cfg: TcpConfig) {
+    let reg = RegistryClient::new(cfg.registry.clone());
+    let initial_deadline = Instant::now() + cfg.connect_timeout;
+    let mut connected_once = false;
+    let mut attempts_left = cfg.reconnect_attempts;
+    loop {
+        if shared.detached.load(Ordering::Acquire) {
+            return;
+        }
+        let Some(mut stream) = try_connect(&reg, &shared.topic) else {
+            if !connected_once {
+                if Instant::now() >= initial_deadline {
+                    shared.fail(
+                        Error::Connect {
+                            topic: shared.topic.clone(),
+                            addr: cfg.registry.clone(),
+                            reason: format!(
+                                "topic did not resolve within {:?}",
+                                cfg.connect_timeout
+                            ),
+                        }
+                        .to_string(),
+                    );
+                    return;
+                }
+            } else if attempts_left == 0 {
+                shared.fail(
+                    Error::Connect {
+                        topic: shared.topic.clone(),
+                        addr: cfg.registry.clone(),
+                        reason: format!(
+                            "connection lost; {} reconnect attempts exhausted",
+                            cfg.reconnect_attempts
+                        ),
+                    }
+                    .to_string(),
+                );
+                return;
+            } else {
+                attempts_left -= 1;
+            }
+            sleep_detachable(&shared, cfg.reconnect_backoff);
+            continue;
+        };
+        // Handshake: advertise capacity, grant what the queue can take
+        // right now (reconnects must not over-grant into a queue still
+        // holding frames from the previous connection generation).
+        let in_flight = shared.ep.counters_and_hist().0.in_flight;
+        let credits = (shared.ep.capacity() as u64).saturating_sub(in_flight) as u32;
+        let hello = Msg::Hello {
+            topic: shared.topic.clone(),
+            capacity: shared.ep.capacity() as u32,
+            credits,
+            qos: shared.qos,
+        };
+        if write_msg(&mut stream, &hello).is_err() || stream.flush().is_err() {
+            sleep_detachable(&shared, cfg.reconnect_backoff);
+            continue;
+        }
+        match stream.try_clone() {
+            Ok(w) => *lock(&shared.writer) = Some(w),
+            Err(_) => continue,
+        }
+        connected_once = true;
+        attempts_left = cfg.reconnect_attempts;
+        shared.connected.store(true, Ordering::Release);
+        let outcome = client_read_loop(&shared, &mut stream);
+        shared.connected.store(false, Ordering::Release);
+        *lock(&shared.writer) = None;
+        match outcome {
+            ReadOutcome::Terminal => return,
+            ReadOutcome::Lost => sleep_detachable(&shared, cfg.reconnect_backoff),
+        }
+    }
+}
+
+enum ReadOutcome {
+    /// The stream ended definitively (Eos, Fault, detach, violation).
+    Terminal,
+    /// The connection died without a terminal frame — reconnect.
+    Lost,
+}
+
+fn client_read_loop(shared: &SubShared, stream: &mut TcpStream) -> ReadOutcome {
+    loop {
+        match read_msg(stream) {
+            Ok(Some(Msg::Caps(c))) => {
+                *lock(&shared.caps) = Some(c);
+            }
+            Ok(Some(Msg::Buffer(buf))) => match shared.ep.try_push(buf) {
+                EpPush::Ok => {}
+                EpPush::Full(_) => {
+                    // more frames than credits granted: protocol breach
+                    shared.fail(
+                        Error::Credit {
+                            topic: shared.topic.clone(),
+                            reason: "publisher sent a frame with no credit outstanding".into(),
+                        }
+                        .to_string(),
+                    );
+                    return ReadOutcome::Terminal;
+                }
+                // consumer closed/ended locally: nothing more to deliver
+                EpPush::Closed(_) => return ReadOutcome::Terminal,
+            },
+            Ok(Some(Msg::Eos)) => {
+                shared.ep.set_eos();
+                return ReadOutcome::Terminal;
+            }
+            Ok(Some(Msg::Fault(f))) => {
+                shared.ep.fail(&f);
+                return ReadOutcome::Terminal;
+            }
+            Ok(Some(_)) => {
+                shared.fail("unexpected frame type on subscriber connection".into());
+                return ReadOutcome::Terminal;
+            }
+            Ok(None) | Err(_) => {
+                if shared.detached.load(Ordering::Acquire) {
+                    return ReadOutcome::Terminal;
+                }
+                return ReadOutcome::Lost;
+            }
+        }
+    }
+}
+
+struct TcpSubscriberPort {
+    shared: Arc<SubShared>,
+}
+
+impl TcpSubscriberPort {
+    /// Return one credit for a popped frame (best-effort: a dead
+    /// connection re-syncs credits in its reconnect `Hello`).
+    fn grant_credit(&self) {
+        let mut g = lock(&self.shared.writer);
+        if let Some(w) = g.as_mut() {
+            if write_msg(w, &Msg::Credit(1)).is_err() || w.flush().is_err() {
+                *g = None;
+            }
+        }
+    }
+}
+
+impl SubscriberPort for TcpSubscriberPort {
+    fn topic_caps(&self) -> Option<Caps> {
+        lock(&self.shared.caps).clone()
+    }
+
+    fn try_recv(&mut self) -> PortRecv {
+        match self.shared.ep.try_pop() {
+            EpPop::Item(b) => {
+                self.grant_credit();
+                PortRecv::Item(b)
+            }
+            EpPop::Empty => PortRecv::Empty,
+            EpPop::End => PortRecv::End,
+        }
+    }
+
+    fn add_waker(&mut self, w: &Arc<SharedWaker>) {
+        self.shared.ep.add_consumer_waker(w);
+    }
+
+    fn detach(&mut self) {
+        if !self.shared.detached.swap(true, Ordering::AcqRel) {
+            if let Some(mut w) = lock(&self.shared.writer).take() {
+                let _ = write_msg(&mut w, &Msg::Detach);
+                let _ = w.flush();
+                // the connector thread's blocking read shares this
+                // socket: shutting it down unblocks the thread
+                let _ = w.shutdown(Shutdown::Both);
+            }
+            self.shared.ep.close();
+        }
+    }
+
+    fn close_reason(&self) -> Option<StreamEnd> {
+        self.shared.ep.close_reason()
+    }
+}
+
+impl Drop for TcpSubscriberPort {
+    fn drop(&mut self) {
+        self.detach();
+    }
+}

@@ -1,0 +1,907 @@
+//! Versioned framed wire codec for the TCP tensor-query transport.
+//!
+//! Every message on a connection (and on a registry connection) is one
+//! **frame**:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic      0x4E4E5354 ("NNST", little-endian u32)
+//!      4     1  version    1
+//!      5     1  type       frame type code (Hello, Caps, Buffer, ...)
+//!      6     2  flags      reserved, must be 0
+//!      8     4  length     payload length in bytes
+//!     12     4  checksum   FNV-1a (32-bit) over the payload bytes
+//! ```
+//!
+//! All integers are little-endian. Decoders never panic on wire input:
+//! truncated, corrupted, or inconsistent frames yield a typed
+//! [`Error::Frame`]. Caps and tensor metadata are encoded **binary**
+//! (tag bytes + fixed-width integers), not via the text `Caps` syntax —
+//! the launch-line `Display`/`parse` pair is intentionally lossy
+//! (`ANY`, audio sample counts) and must not constrain the wire.
+//!
+//! Buffer payloads are read **zero-copy into pool storage**: each
+//! chunk's bytes go straight from the socket into a
+//! [`ChunkPool`]-recycled allocation wrapped by [`Chunk::from_pooled`],
+//! so a tensor crossing the wire costs one read syscall per chunk and
+//! no intermediate copies.
+
+use std::io::Read;
+
+use crate::error::{Error, Fault, Result};
+use crate::pipeline::Qos;
+use crate::tensor::{
+    AudioInfo, Buffer, Caps, Chunk, ChunkPool, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
+    MAX_TENSORS,
+};
+
+/// Frame magic: "NNST" read as a little-endian u32.
+pub const MAGIC: u32 = 0x4E4E_5354;
+/// Current protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Upper bound on a frame payload; larger advertised lengths are
+/// treated as corruption instead of attempted as allocations.
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+// Frame type codes.
+const T_HELLO: u8 = 1;
+const T_CAPS: u8 = 2;
+const T_BUFFER: u8 = 3;
+const T_EOS: u8 = 4;
+const T_FAULT: u8 = 5;
+const T_CREDIT: u8 = 6;
+const T_DETACH: u8 = 7;
+const T_REG_PUT: u8 = 8;
+const T_REG_GET: u8 = 9;
+const T_REG_ADDR: u8 = 10;
+
+/// One wire message, either direction, data plane or registry plane.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Subscriber → publisher handshake: which topic, the subscriber's
+    /// bounded queue capacity, the initial credit grant (capacity minus
+    /// frames still queued from a previous connection generation), and
+    /// the delivery QoS the publisher should apply on overflow.
+    Hello {
+        topic: String,
+        capacity: u32,
+        credits: u32,
+        qos: Qos,
+    },
+    /// Publisher → subscriber: caps advertised on the topic.
+    Caps(Caps),
+    /// Publisher → subscriber: one tensor/media frame.
+    Buffer(Buffer),
+    /// Publisher → subscriber: clean end-of-stream.
+    Eos,
+    /// Publisher → subscriber: the stream was truncated by this fault.
+    Fault(Fault),
+    /// Subscriber → publisher: grant `n` more frame credits.
+    Credit(u32),
+    /// Subscriber → publisher: detaching; stop sending.
+    Detach,
+    /// Publisher → registry: `topic` is served at `addr`.
+    RegPut { topic: String, addr: String },
+    /// Subscriber → registry: where is `topic` served?
+    RegGet { topic: String },
+    /// Registry → subscriber: resolution result (`None` = unknown topic).
+    RegAddr { addr: Option<String> },
+}
+
+impl Msg {
+    fn type_code(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => T_HELLO,
+            Msg::Caps(_) => T_CAPS,
+            Msg::Buffer(_) => T_BUFFER,
+            Msg::Eos => T_EOS,
+            Msg::Fault(_) => T_FAULT,
+            Msg::Credit(_) => T_CREDIT,
+            Msg::Detach => T_DETACH,
+            Msg::RegPut { .. } => T_REG_PUT,
+            Msg::RegGet { .. } => T_REG_GET,
+            Msg::RegAddr { .. } => T_REG_ADDR,
+        }
+    }
+}
+
+/// Incremental 32-bit FNV-1a.
+struct Fnv(u32);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0x811c_9dc5)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= u32::from(b);
+            h = h.wrapping_mul(0x0100_0193);
+        }
+        self.0 = h;
+    }
+
+    fn digest(&self) -> u32 {
+        self.0
+    }
+}
+
+fn frame_err(msg: impl Into<String>) -> Error {
+    Error::Frame(msg.into())
+}
+
+// ---------------------------------------------------------------------
+// Payload encoding
+// ---------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    let bytes = s.as_bytes();
+    if bytes.len() > u16::MAX as usize {
+        return Err(frame_err(format!(
+            "string of {} bytes exceeds the u16 wire limit",
+            bytes.len()
+        )));
+    }
+    put_u16(out, bytes.len() as u16);
+    out.extend_from_slice(bytes);
+    Ok(())
+}
+
+fn qos_code(q: Qos) -> u8 {
+    match q {
+        Qos::Blocking => 0,
+        Qos::Leaky => 1,
+        Qos::LatestOnly => 2,
+    }
+}
+
+fn qos_from_code(c: u8) -> Result<Qos> {
+    Ok(match c {
+        0 => Qos::Blocking,
+        1 => Qos::Leaky,
+        2 => Qos::LatestOnly,
+        other => return Err(frame_err(format!("unknown qos code {other}"))),
+    })
+}
+
+fn dtype_code(t: DType) -> u8 {
+    match t {
+        DType::U8 => 0,
+        DType::I8 => 1,
+        DType::U16 => 2,
+        DType::I16 => 3,
+        DType::U32 => 4,
+        DType::I32 => 5,
+        DType::U64 => 6,
+        DType::I64 => 7,
+        DType::F32 => 8,
+        DType::F64 => 9,
+    }
+}
+
+fn dtype_from_code(c: u8) -> Result<DType> {
+    Ok(match c {
+        0 => DType::U8,
+        1 => DType::I8,
+        2 => DType::U16,
+        3 => DType::I16,
+        4 => DType::U32,
+        5 => DType::I32,
+        6 => DType::U64,
+        7 => DType::I64,
+        8 => DType::F32,
+        9 => DType::F64,
+        other => return Err(frame_err(format!("unknown dtype code {other}"))),
+    })
+}
+
+fn video_format_code(f: VideoFormat) -> u8 {
+    match f {
+        VideoFormat::Rgb => 0,
+        VideoFormat::Bgr => 1,
+        VideoFormat::Gray8 => 2,
+        VideoFormat::Nv12 => 3,
+    }
+}
+
+fn video_format_from_code(c: u8) -> Result<VideoFormat> {
+    Ok(match c {
+        0 => VideoFormat::Rgb,
+        1 => VideoFormat::Bgr,
+        2 => VideoFormat::Gray8,
+        3 => VideoFormat::Nv12,
+        other => return Err(frame_err(format!("unknown video format code {other}"))),
+    })
+}
+
+fn put_tensor_info(out: &mut Vec<u8>, info: &TensorInfo) {
+    out.push(dtype_code(info.dtype));
+    let dims = info.dims.as_slice();
+    out.push(dims.len() as u8);
+    for &d in dims {
+        put_u32(out, d as u32);
+    }
+}
+
+fn put_caps(out: &mut Vec<u8>, caps: &Caps) -> Result<()> {
+    match caps {
+        Caps::Any => out.push(0),
+        Caps::Video(v) => {
+            out.push(1);
+            out.push(video_format_code(v.format));
+            put_u32(out, v.width as u32);
+            put_u32(out, v.height as u32);
+            put_u64(out, v.fps_millis);
+        }
+        Caps::Audio(a) => {
+            out.push(2);
+            put_u32(out, a.rate as u32);
+            put_u32(out, a.channels as u32);
+            put_u32(out, a.samples_per_buffer as u32);
+        }
+        Caps::Text => out.push(3),
+        Caps::Tensor { info, fps_millis } => {
+            out.push(4);
+            put_tensor_info(out, info);
+            put_u64(out, *fps_millis);
+        }
+        Caps::Tensors { infos, fps_millis } => {
+            if infos.len() > MAX_TENSORS {
+                return Err(frame_err(format!(
+                    "caps with {} tensors exceed MAX_TENSORS {MAX_TENSORS}",
+                    infos.len()
+                )));
+            }
+            out.push(5);
+            out.push(infos.len() as u8);
+            for info in infos {
+                put_tensor_info(out, info);
+            }
+            put_u64(out, *fps_millis);
+        }
+        Caps::FlatBuf => out.push(6),
+    }
+    Ok(())
+}
+
+/// Encode the payload of a **non-buffer** message. Buffer frames are
+/// streamed by [`write_msg`] without materializing the payload.
+fn encode_payload(msg: &Msg) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    match msg {
+        Msg::Hello {
+            topic,
+            capacity,
+            credits,
+            qos,
+        } => {
+            put_str(&mut out, topic)?;
+            put_u32(&mut out, *capacity);
+            put_u32(&mut out, *credits);
+            out.push(qos_code(*qos));
+        }
+        Msg::Caps(caps) => put_caps(&mut out, caps)?,
+        Msg::Buffer(_) => unreachable!("buffer payloads are streamed"),
+        Msg::Eos | Msg::Detach => {}
+        Msg::Fault(fault) => {
+            put_str(&mut out, &fault.element)?;
+            put_str(&mut out, &fault.message)?;
+            out.push(u8::from(fault.panicked));
+        }
+        Msg::Credit(n) => put_u32(&mut out, *n),
+        Msg::RegPut { topic, addr } => {
+            put_str(&mut out, topic)?;
+            put_str(&mut out, addr)?;
+        }
+        Msg::RegGet { topic } => put_str(&mut out, topic)?,
+        Msg::RegAddr { addr } => match addr {
+            Some(a) => {
+                out.push(1);
+                put_str(&mut out, a)?;
+            }
+            None => out.push(0),
+        },
+    }
+    Ok(out)
+}
+
+fn header(ty: u8, length: u32, checksum: u32) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    h[4] = VERSION;
+    h[5] = ty;
+    // flags (h[6..8]) reserved as 0
+    h[8..12].copy_from_slice(&length.to_le_bytes());
+    h[12..16].copy_from_slice(&checksum.to_le_bytes());
+    h
+}
+
+/// Encode a full frame (header + payload) into one byte vector.
+/// Buffer frames copy their payload here — use [`write_msg`] on the
+/// send path; `encode` exists for tests and the registry plane.
+pub fn encode(msg: &Msg) -> Result<Vec<u8>> {
+    if let Msg::Buffer(buf) = msg {
+        let meta = buffer_meta(buf)?;
+        let mut len = meta.len();
+        for c in &buf.chunks {
+            len += 4 + c.len();
+        }
+        if len > MAX_PAYLOAD as usize {
+            return Err(frame_err(format!(
+                "buffer frame of {len} bytes exceeds MAX_PAYLOAD"
+            )));
+        }
+        let mut fnv = Fnv::new();
+        fnv.update(&meta);
+        let mut body = Vec::with_capacity(HEADER_LEN + len);
+        body.extend_from_slice(&[0u8; HEADER_LEN]); // patched below
+        body.extend_from_slice(&meta);
+        for c in &buf.chunks {
+            let bytes = c.as_bytes();
+            let chunk_len = (bytes.len() as u32).to_le_bytes();
+            fnv.update(&chunk_len);
+            fnv.update(bytes);
+            body.extend_from_slice(&chunk_len);
+            body.extend_from_slice(bytes);
+        }
+        let h = header(T_BUFFER, len as u32, fnv.digest());
+        body[..HEADER_LEN].copy_from_slice(&h);
+        return Ok(body);
+    }
+    let payload = encode_payload(msg)?;
+    let mut fnv = Fnv::new();
+    fnv.update(&payload);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&header(msg.type_code(), payload.len() as u32, fnv.digest()));
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Write one frame. Buffer payloads are streamed chunk-by-chunk (no
+/// payload-sized intermediate allocation).
+pub fn write_msg(w: &mut impl std::io::Write, msg: &Msg) -> Result<()> {
+    if let Msg::Buffer(buf) = msg {
+        let meta = buffer_meta(buf)?;
+        let mut len = meta.len();
+        // Borrow every chunk's bytes once: the same slices feed the
+        // checksum pass and the write pass (one traffic-accounted read).
+        let chunks: Vec<&[u8]> = buf.chunks.iter().map(|c| c.as_bytes()).collect();
+        let mut fnv = Fnv::new();
+        fnv.update(&meta);
+        for bytes in &chunks {
+            len += 4 + bytes.len();
+            fnv.update(&(bytes.len() as u32).to_le_bytes());
+            fnv.update(bytes);
+        }
+        if len > MAX_PAYLOAD as usize {
+            return Err(frame_err(format!("buffer frame of {len} bytes exceeds MAX_PAYLOAD")));
+        }
+        w.write_all(&header(T_BUFFER, len as u32, fnv.digest()))?;
+        w.write_all(&meta)?;
+        for bytes in &chunks {
+            w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+            w.write_all(bytes)?;
+        }
+        return Ok(());
+    }
+    let frame = encode(msg)?;
+    w.write_all(&frame)?;
+    Ok(())
+}
+
+fn buffer_meta(buf: &Buffer) -> Result<Vec<u8>> {
+    if buf.chunks.len() > MAX_TENSORS {
+        return Err(frame_err(format!(
+            "buffer with {} chunks exceeds MAX_TENSORS {MAX_TENSORS}",
+            buf.chunks.len()
+        )));
+    }
+    let mut meta = Vec::with_capacity(25);
+    put_u64(&mut meta, buf.pts_ns);
+    put_u64(&mut meta, buf.duration_ns);
+    put_u64(&mut meta, buf.seq);
+    meta.push(buf.chunks.len() as u8);
+    Ok(meta)
+}
+
+// ---------------------------------------------------------------------
+// Payload decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| frame_err("truncated payload"))?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| frame_err("string payload is not valid UTF-8"))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            return Err(frame_err(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn get_tensor_info(d: &mut Dec<'_>) -> Result<TensorInfo> {
+    let dtype = dtype_from_code(d.u8()?)?;
+    let rank = d.u8()? as usize;
+    if rank == 0 || rank > crate::tensor::MAX_RANK {
+        return Err(frame_err(format!("bad tensor rank {rank}")));
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let v = d.u32()? as usize;
+        if v == 0 {
+            return Err(frame_err("zero tensor dimension"));
+        }
+        dims.push(v);
+    }
+    Ok(TensorInfo::new(dtype, Dims::new(&dims)))
+}
+
+fn get_caps(d: &mut Dec<'_>) -> Result<Caps> {
+    Ok(match d.u8()? {
+        0 => Caps::Any,
+        1 => Caps::Video(VideoInfo {
+            format: video_format_from_code(d.u8()?)?,
+            width: d.u32()? as usize,
+            height: d.u32()? as usize,
+            fps_millis: d.u64()?,
+        }),
+        2 => Caps::Audio(AudioInfo {
+            rate: d.u32()? as usize,
+            channels: d.u32()? as usize,
+            samples_per_buffer: d.u32()? as usize,
+        }),
+        3 => Caps::Text,
+        4 => {
+            let info = get_tensor_info(d)?;
+            Caps::Tensor {
+                info,
+                fps_millis: d.u64()?,
+            }
+        }
+        5 => {
+            let n = d.u8()? as usize;
+            if n > MAX_TENSORS {
+                return Err(frame_err(format!(
+                    "caps with {n} tensors exceed MAX_TENSORS {MAX_TENSORS}"
+                )));
+            }
+            let mut infos = Vec::with_capacity(n);
+            for _ in 0..n {
+                infos.push(get_tensor_info(d)?);
+            }
+            Caps::Tensors {
+                infos,
+                fps_millis: d.u64()?,
+            }
+        }
+        6 => Caps::FlatBuf,
+        other => return Err(frame_err(format!("unknown caps tag {other}"))),
+    })
+}
+
+fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
+    let mut d = Dec::new(payload);
+    let msg = match ty {
+        T_HELLO => Msg::Hello {
+            topic: d.string()?,
+            capacity: d.u32()?,
+            credits: d.u32()?,
+            qos: qos_from_code(d.u8()?)?,
+        },
+        T_CAPS => Msg::Caps(get_caps(&mut d)?),
+        T_EOS => Msg::Eos,
+        T_FAULT => Msg::Fault(Fault {
+            element: d.string()?,
+            message: d.string()?,
+            panicked: d.u8()? != 0,
+        }),
+        T_CREDIT => Msg::Credit(d.u32()?),
+        T_DETACH => Msg::Detach,
+        T_REG_PUT => Msg::RegPut {
+            topic: d.string()?,
+            addr: d.string()?,
+        },
+        T_REG_GET => Msg::RegGet { topic: d.string()? },
+        T_REG_ADDR => Msg::RegAddr {
+            addr: match d.u8()? {
+                0 => None,
+                1 => Some(d.string()?),
+                other => return Err(frame_err(format!("bad option tag {other}"))),
+            },
+        },
+        other => return Err(frame_err(format!("unknown frame type {other}"))),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+/// Decode one full frame from a byte slice (tests, registry plane).
+/// The slice must contain exactly one frame.
+pub fn decode(frame: &[u8]) -> Result<Msg> {
+    let mut cursor = frame;
+    let msg = read_msg(&mut cursor)?.ok_or_else(|| frame_err("empty input"))?;
+    if !cursor.is_empty() {
+        return Err(frame_err(format!(
+            "{} trailing bytes after frame",
+            cursor.len()
+        )));
+    }
+    Ok(msg)
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection
+/// cleanly **at a frame boundary**; EOF anywhere inside a frame is a
+/// typed [`Error::Frame`]. I/O failures surface as [`Error::Io`].
+pub fn read_msg(r: &mut impl Read) -> Result<Option<Msg>> {
+    let mut head = [0u8; HEADER_LEN];
+    // Distinguish boundary-EOF (no header byte at all) from truncation.
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut head[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => return Err(frame_err(format!("truncated header ({got} of {HEADER_LEN} bytes)"))),
+            n => got += n,
+        }
+    }
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(frame_err(format!("bad magic {magic:#010x}")));
+    }
+    if head[4] != VERSION {
+        return Err(frame_err(format!(
+            "unsupported protocol version {} (this build speaks {VERSION})",
+            head[4]
+        )));
+    }
+    let ty = head[5];
+    let flags = u16::from_le_bytes(head[6..8].try_into().unwrap());
+    if flags != 0 {
+        return Err(frame_err(format!("unknown flags {flags:#06x}")));
+    }
+    let length = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    if length > MAX_PAYLOAD {
+        return Err(frame_err(format!(
+            "payload length {length} exceeds MAX_PAYLOAD {MAX_PAYLOAD}"
+        )));
+    }
+    let checksum = u32::from_le_bytes(head[12..16].try_into().unwrap());
+    if ty == T_BUFFER {
+        // Buffer payloads stream straight from the socket into pooled
+        // chunk storage — no payload-sized intermediate allocation.
+        return read_buffer_payload(r, length, checksum).map(Some);
+    }
+    let mut payload = ChunkPool::global().take(length as usize);
+    read_payload_exact(r, &mut payload)?;
+    let mut fnv = Fnv::new();
+    fnv.update(&payload);
+    if fnv.digest() != checksum {
+        return Err(frame_err(format!(
+            "checksum mismatch (header {checksum:#010x}, payload {:#010x})",
+            fnv.digest()
+        )));
+    }
+    let msg = decode_payload(ty, &payload);
+    ChunkPool::global().recycle(payload);
+    msg.map(Some)
+}
+
+/// `read_exact` that maps mid-frame EOF to a typed frame error.
+fn read_payload_exact(r: &mut impl Read, dst: &mut [u8]) -> Result<()> {
+    r.read_exact(dst).map_err(|e| match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => frame_err("truncated payload"),
+        _ => Error::Io(e),
+    })
+}
+
+/// Streaming decoder for buffer frames: the fixed metadata and each
+/// chunk are read (and checksummed) in place, with chunk bytes landing
+/// directly in [`ChunkPool`] storage.
+fn take_part(
+    r: &mut impl Read,
+    dst: &mut [u8],
+    fnv: &mut Fnv,
+    remaining: &mut usize,
+) -> Result<()> {
+    if dst.len() > *remaining {
+        return Err(frame_err("buffer payload shorter than its contents"));
+    }
+    read_payload_exact(r, dst)?;
+    fnv.update(dst);
+    *remaining -= dst.len();
+    Ok(())
+}
+
+fn read_buffer_payload(r: &mut impl Read, length: u32, checksum: u32) -> Result<Msg> {
+    let mut remaining = length as usize;
+    let mut fnv = Fnv::new();
+    let mut meta = [0u8; 25];
+    take_part(r, &mut meta, &mut fnv, &mut remaining)?;
+    let mut d = Dec::new(&meta);
+    let pts_ns = d.u64()?;
+    let duration_ns = d.u64()?;
+    let seq = d.u64()?;
+    let n = d.u8()? as usize;
+    if n > MAX_TENSORS {
+        return Err(frame_err(format!(
+            "buffer with {n} chunks exceeds MAX_TENSORS {MAX_TENSORS}"
+        )));
+    }
+    let mut chunks = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut len_bytes = [0u8; 4];
+        take_part(r, &mut len_bytes, &mut fnv, &mut remaining)?;
+        let clen = u32::from_le_bytes(len_bytes) as usize;
+        if clen > remaining {
+            return Err(frame_err("chunk length overruns buffer payload"));
+        }
+        let mut storage = ChunkPool::global().take(clen);
+        take_part(r, &mut storage, &mut fnv, &mut remaining)?;
+        chunks.push(Chunk::from_pooled(storage));
+    }
+    if remaining != 0 {
+        return Err(frame_err(format!(
+            "{remaining} trailing bytes after buffer payload"
+        )));
+    }
+    if fnv.digest() != checksum {
+        return Err(frame_err(format!(
+            "checksum mismatch (header {checksum:#010x}, payload {:#010x})",
+            fnv.digest()
+        )));
+    }
+    let mut buf = Buffer::new(pts_ns, chunks);
+    buf.duration_ns = duration_ns;
+    buf.seq = seq;
+    Ok(Msg::Buffer(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let bytes = encode(&msg).expect("encode");
+        assert_eq!(decode(&bytes).expect("decode"), msg);
+        // the streaming writer must produce the identical frame
+        let mut streamed = Vec::new();
+        write_msg(&mut streamed, &msg).expect("write_msg");
+        assert_eq!(streamed, bytes);
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        roundtrip(Msg::Hello {
+            topic: "ns/frames".into(),
+            capacity: 64,
+            credits: 61,
+            qos: Qos::LatestOnly,
+        });
+        roundtrip(Msg::Eos);
+        roundtrip(Msg::Detach);
+        roundtrip(Msg::Credit(17));
+        roundtrip(Msg::Fault(Fault {
+            element: "tensor_filter0".into(),
+            message: "index out of bounds".into(),
+            panicked: true,
+        }));
+        roundtrip(Msg::RegPut {
+            topic: "mtcnn/boxes".into(),
+            addr: "127.0.0.1:41234".into(),
+        });
+        roundtrip(Msg::RegGet {
+            topic: "mtcnn/boxes".into(),
+        });
+        roundtrip(Msg::RegAddr {
+            addr: Some("127.0.0.1:41234".into()),
+        });
+        roundtrip(Msg::RegAddr { addr: None });
+    }
+
+    #[test]
+    fn caps_roundtrip_including_display_lossy_variants() {
+        // Caps::Any and audio sample counts do not survive the text
+        // Display/parse pair — the binary codec must carry them.
+        roundtrip(Msg::Caps(Caps::Any));
+        roundtrip(Msg::Caps(Caps::Text));
+        roundtrip(Msg::Caps(Caps::FlatBuf));
+        roundtrip(Msg::Caps(Caps::Video(VideoInfo {
+            format: VideoFormat::Nv12,
+            width: 640,
+            height: 480,
+            fps_millis: 30_000,
+        })));
+        roundtrip(Msg::Caps(Caps::Audio(AudioInfo {
+            rate: 16_000,
+            channels: 2,
+            samples_per_buffer: 1600,
+        })));
+        roundtrip(Msg::Caps(Caps::Tensor {
+            info: TensorInfo::new(DType::F32, Dims::new(&[3, 64, 64])),
+            fps_millis: 2_400_000,
+        }));
+        roundtrip(Msg::Caps(Caps::Tensors {
+            infos: vec![
+                TensorInfo::new(DType::U8, Dims::new(&[3, 224, 224, 1])),
+                TensorInfo::new(DType::I64, Dims::new(&[1])),
+            ],
+            fps_millis: 0,
+        }));
+    }
+
+    #[test]
+    fn buffers_roundtrip_with_metadata_and_chunks() {
+        let mut buf = Buffer::new(
+            123_456_789,
+            vec![
+                Chunk::from_vec(vec![1, 2, 3, 4, 5]),
+                Chunk::from_vec(Vec::new()),
+                Chunk::from_vec((0..=255).collect()),
+            ],
+        );
+        buf.duration_ns = 33_333_333;
+        buf.seq = 42;
+        let bytes = encode(&Msg::Buffer(buf.clone())).unwrap();
+        let decoded = match decode(&bytes).unwrap() {
+            Msg::Buffer(b) => b,
+            other => panic!("expected buffer, got {other:?}"),
+        };
+        assert_eq!(decoded.pts_ns, buf.pts_ns);
+        assert_eq!(decoded.duration_ns, buf.duration_ns);
+        assert_eq!(decoded.seq, buf.seq);
+        assert_eq!(decoded.chunks.len(), buf.chunks.len());
+        for (a, b) in decoded.chunks.iter().zip(&buf.chunks) {
+            assert_eq!(a.as_bytes_unaccounted(), b.as_bytes_unaccounted());
+        }
+    }
+
+    #[test]
+    fn corrupted_frames_yield_typed_errors() {
+        let good = encode(&Msg::Credit(5)).unwrap();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(decode(&bad), Err(Error::Frame(_))));
+
+        // unsupported version
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(matches!(decode(&bad), Err(Error::Frame(_))));
+
+        // unknown frame type (header checksum still valid)
+        let mut bad = good.clone();
+        bad[5] = 200;
+        assert!(matches!(decode(&bad), Err(Error::Frame(_))));
+
+        // nonzero reserved flags
+        let mut bad = good.clone();
+        bad[6] = 1;
+        assert!(matches!(decode(&bad), Err(Error::Frame(_))));
+
+        // flipped payload bit -> checksum mismatch
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0x01;
+        assert!(matches!(decode(&bad), Err(Error::Frame(_))));
+
+        // truncation at every prefix length never panics
+        for cut in 0..good.len() {
+            match decode(&good[..cut]) {
+                Err(Error::Frame(_)) => {}
+                Ok(_) => panic!("decoded a truncated frame (cut {cut})"),
+                Err(e) => panic!("wrong error for cut {cut}: {e}"),
+            }
+        }
+
+        // absurd advertised length is corruption, not an allocation
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(decode(&bad), Err(Error::Frame(_))));
+    }
+
+    #[test]
+    fn inconsistent_payloads_yield_typed_errors() {
+        // a Hello whose inner string length overruns the payload
+        let mut payload = Vec::new();
+        put_u16(&mut payload, 1000); // claims 1000 bytes, none follow
+        let mut fnv = Fnv::new();
+        fnv.update(&payload);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&header(T_HELLO, payload.len() as u32, fnv.digest()));
+        frame.extend_from_slice(&payload);
+        assert!(matches!(decode(&frame), Err(Error::Frame(_))));
+
+        // trailing garbage after a complete Eos payload
+        let mut payload = vec![0u8; 3];
+        payload[0] = 7;
+        let mut fnv = Fnv::new();
+        fnv.update(&payload);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&header(T_EOS, payload.len() as u32, fnv.digest()));
+        frame.extend_from_slice(&payload);
+        assert!(matches!(decode(&frame), Err(Error::Frame(_))));
+
+        // invalid UTF-8 in a string field
+        let mut payload = Vec::new();
+        put_u16(&mut payload, 2);
+        payload.extend_from_slice(&[0xff, 0xfe]);
+        let mut fnv = Fnv::new();
+        fnv.update(&payload);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&header(T_REG_GET, payload.len() as u32, fnv.digest()));
+        frame.extend_from_slice(&payload);
+        assert!(matches!(decode(&frame), Err(Error::Frame(_))));
+    }
+
+    #[test]
+    fn boundary_eof_is_none_not_error() {
+        let mut empty: &[u8] = &[];
+        assert!(read_msg(&mut empty).unwrap().is_none());
+        // two back-to-back frames then boundary EOF
+        let mut stream = encode(&Msg::Eos).unwrap();
+        stream.extend_from_slice(&encode(&Msg::Credit(1)).unwrap());
+        let mut cursor: &[u8] = &stream;
+        assert_eq!(read_msg(&mut cursor).unwrap(), Some(Msg::Eos));
+        assert_eq!(read_msg(&mut cursor).unwrap(), Some(Msg::Credit(1)));
+        assert!(read_msg(&mut cursor).unwrap().is_none());
+    }
+}

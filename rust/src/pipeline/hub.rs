@@ -391,6 +391,10 @@ pub struct PipelineHub {
     sup: Arc<Supervisor>,
     /// The supervisor thread handle (joined on hub drop).
     sup_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Discovery registry served by [`serve_registry`]
+    /// (PipelineHub::serve_registry); held so it lives (and its port
+    /// stays bound) as long as the hub.
+    net_registry: Mutex<Option<crate::net::RegistryServer>>,
 }
 
 impl PipelineHub {
@@ -416,6 +420,7 @@ impl PipelineHub {
             streams: StreamRegistry::global().clone(),
             subs: Mutex::new(Vec::new()),
             tenants: Mutex::new(HashMap::new()),
+            net_registry: Mutex::new(None),
         }
     }
 
@@ -497,6 +502,36 @@ impl PipelineHub {
     /// (see [`QueryClient`]).
     pub fn query_client(&self, request: &str, reply: &str) -> QueryClient {
         self.streams.query_client(request, reply)
+    }
+
+    /// Host the cross-process discovery registry on `addr`
+    /// (`"127.0.0.1:0"` picks a free port) and register a TCP transport
+    /// resolving through it under `transport=tcp`. Returns the bound
+    /// address — hand it to consumer processes, whose hubs call
+    /// [`connect_registry`](PipelineHub::connect_registry) with it.
+    /// After this, `tensor_query_serversink topic=x transport=tcp` in
+    /// this process serves topic `x` to any process on the network.
+    ///
+    /// The registry server lives as long as the hub; serving twice
+    /// replaces the previous instance.
+    pub fn serve_registry(&self, addr: &str) -> Result<String> {
+        let server = crate::net::NetRegistry::serve(addr)?;
+        let bound = server.addr().to_string();
+        crate::net::register_tcp(crate::net::TcpConfig::new(&bound));
+        *lock(&self.net_registry) = Some(server);
+        Ok(bound)
+    }
+
+    /// Join a discovery registry served elsewhere (the address returned
+    /// by another process's
+    /// [`serve_registry`](PipelineHub::serve_registry)): registers a TCP
+    /// transport under `transport=tcp` resolving topics through it, so
+    /// `tensor_query_serversrc topic=x transport=tcp` pipelines on this
+    /// hub consume streams served by that process. Returns the transport
+    /// (e.g. to [`quiesce`](crate::net::TcpTransport::quiesce) before a
+    /// publisher process exits).
+    pub fn connect_registry(&self, addr: &str) -> Arc<crate::net::TcpTransport> {
+        crate::net::register_tcp(crate::net::TcpConfig::new(addr))
     }
 
     pub fn worker_count(&self) -> usize {
@@ -1235,6 +1270,19 @@ mod tests {
         for j in hub.join_all() {
             j.report.unwrap();
         }
+    }
+
+    #[test]
+    fn serve_registry_binds_and_registers_tcp_transport() {
+        let hub = PipelineHub::new();
+        let addr = hub.serve_registry("127.0.0.1:0").unwrap();
+        let port: u16 = addr.rsplit(':').next().unwrap().parse().unwrap();
+        assert_ne!(port, 0, "a real port was bound");
+        // `transport=tcp` now resolves for query elements on this hub
+        assert!(crate::pipeline::stream::transport("tcp").is_ok());
+        // a consumer-side hub joins by address
+        let t = hub.connect_registry(&addr);
+        assert_eq!(t.config().registry, addr);
     }
 
     #[test]

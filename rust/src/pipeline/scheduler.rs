@@ -248,8 +248,14 @@ impl Running {
             traffic: crate::metrics::traffic::since(traffic0),
             sched: snapshot_sched(&stats, &exec),
             latency: crate::metrics::stats::summarize_latency(&e2e),
-            // per-topic endpoint counters (process-global, like traffic)
-            topics: crate::pipeline::stream::StreamRegistry::global().snapshot(),
+            // per-topic endpoint counters (process-global, like
+            // traffic), with network-transport topics folded in as
+            // `tcp-pub:`/`tcp-sub:` entries
+            topics: {
+                let mut t = crate::pipeline::stream::StreamRegistry::global().snapshot();
+                t.extend(crate::net::topics_snapshot());
+                t
+            },
             elements: stats,
             // supervision counters are stamped by the hub supervisor
             restarts: 0,

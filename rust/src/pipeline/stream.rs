@@ -1398,13 +1398,7 @@ impl Transport for InProcTransport {
     }
 
     fn advertise(&self, topic: &str, qos: Qos) -> Result<Box<dyn PublisherPort>> {
-        let t = self.registry.topic(topic);
-        t.attach_publisher();
-        Ok(Box::new(InProcPublisherPort {
-            topic: t,
-            qos,
-            finished: false,
-        }))
+        Ok(topic_publisher_port(self.registry.topic(topic), qos))
     }
 
     fn attach(&self, topic: &str, capacity: usize, qos: Qos) -> Result<Box<dyn SubscriberPort>> {
@@ -1416,6 +1410,21 @@ impl Transport for InProcTransport {
             detached: false,
         }))
     }
+}
+
+/// Build a publisher port bound directly to `topic`, registering one
+/// publisher on it. Shared by the in-process transport and the serve
+/// side of network transports — a served topic's per-subscriber queues
+/// are remote connections, but the publisher-facing mechanics (QoS
+/// fan-out, wait-subscribers parking, fault-vs-EOS close) are
+/// identical, so both speak through the same port.
+pub(crate) fn topic_publisher_port(topic: Arc<TopicInner>, qos: Qos) -> Box<dyn PublisherPort> {
+    topic.attach_publisher();
+    Box::new(InProcPublisherPort {
+        topic,
+        qos,
+        finished: false,
+    })
 }
 
 struct InProcPublisherPort {

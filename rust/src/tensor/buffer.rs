@@ -83,6 +83,17 @@ impl Drop for PooledStorage {
 #[derive(Debug, Clone)]
 pub struct Chunk(Arc<PooledStorage>);
 
+/// Byte-wise equality: pooling provenance and storage representation
+/// (bytes vs f32) are not identity — two chunks are equal iff their
+/// payload bytes are. Comparison reads are not traffic-accounted.
+impl PartialEq for Chunk {
+    fn eq(&self, other: &Chunk) -> bool {
+        self.as_bytes_unaccounted() == other.as_bytes_unaccounted()
+    }
+}
+
+impl Eq for Chunk {}
+
 impl Chunk {
     /// Allocate a chunk from a caller-allocated byte vector (counted as
     /// written + freshly allocated traffic). Prefer [`ChunkPool::take`] +
@@ -256,6 +267,19 @@ pub struct Buffer {
     /// Payload chunks (1 for `other/tensor`/media, N for `other/tensors`).
     pub chunks: Vec<Chunk>,
 }
+
+/// Metadata + payload-byte equality (the wire codec's roundtrip
+/// contract: a decoded frame equals the encoded one bit for bit).
+impl PartialEq for Buffer {
+    fn eq(&self, other: &Buffer) -> bool {
+        self.pts_ns == other.pts_ns
+            && self.duration_ns == other.duration_ns
+            && self.seq == other.seq
+            && self.chunks == other.chunks
+    }
+}
+
+impl Eq for Buffer {}
 
 impl Buffer {
     pub fn new(pts_ns: u64, chunks: Vec<Chunk>) -> Self {

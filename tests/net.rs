@@ -1,0 +1,421 @@
+//! End-to-end tests of the TCP tensor-query transport: the wire really
+//! crosses an OS-process boundary here.
+//!
+//! Publisher halves run as **child processes** by re-invoking this test
+//! binary with `--exact <child_test>` and an environment variable
+//! carrying the discovery-registry address; the child test functions
+//! no-op when that variable is absent, so a plain `cargo test` run
+//! treats them as trivially passing.
+
+use std::time::{Duration, Instant};
+
+use nnstreamer::net::{register_tcp_as, NetRegistry, TcpConfig, TcpTransport};
+use nnstreamer::pipeline::stream::{PortRecv, PortSend, PublisherPort, SubscriberPort};
+use nnstreamer::pipeline::{Pipeline, PipelineBuilder, PipelineHub, Qos, StreamEnd, Transport};
+use nnstreamer::tensor::{Buffer, Caps, DType};
+
+const EOS_ENV: &str = "NNS_TEST_EOS_REGISTRY";
+const KILL_ENV: &str = "NNS_TEST_KILL_REGISTRY";
+const GEN1_ENV: &str = "NNS_TEST_GEN1_REGISTRY";
+const GEN2_ENV: &str = "NNS_TEST_GEN2_REGISTRY";
+
+fn frame_caps() -> Caps {
+    Caps::tensor(DType::F32, [3], 0.0)
+}
+
+/// Deterministic frame `i`: both sides of a wire test regenerate it to
+/// check bit-identity.
+fn frame(i: u64) -> Buffer {
+    Buffer::from_f32(i, &[i as f32, (i * 2) as f32, 0.5])
+}
+
+fn payload(b: &Buffer) -> Vec<u8> {
+    b.chunk().as_bytes_unaccounted().to_vec()
+}
+
+fn wait_for(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let end = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < end, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Blocking-send one buffer through a publisher port, parking politely
+/// on `Full`/`NoSubscribers`.
+fn send(port: &mut dyn PublisherPort, mut buf: Buffer) {
+    let end = Instant::now() + Duration::from_secs(30);
+    loop {
+        match port.try_send(buf) {
+            PortSend::Sent => return,
+            PortSend::Full(b) | PortSend::NoSubscribers(b) => buf = b,
+            PortSend::Closed(_) => panic!("stream closed under the publisher"),
+        }
+        assert!(Instant::now() < end, "publisher wedged");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Pop exactly `n` items (EOS before that is a failure).
+fn drain_n(port: &mut dyn SubscriberPort, n: usize) -> Vec<Buffer> {
+    let end = Instant::now() + Duration::from_secs(30);
+    let mut out = Vec::new();
+    while out.len() < n {
+        match port.try_recv() {
+            PortRecv::Item(b) => out.push(b),
+            PortRecv::Empty => {
+                assert!(Instant::now() < end, "timed out draining {n} frames");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            PortRecv::End => panic!("stream ended after {} of {n} frames", out.len()),
+        }
+    }
+    out
+}
+
+/// Pop until the stream ends; returns the items and the close reason.
+fn drain_until_end(port: &mut dyn SubscriberPort) -> (Vec<Buffer>, Option<StreamEnd>) {
+    let end = Instant::now() + Duration::from_secs(30);
+    let mut out = Vec::new();
+    loop {
+        match port.try_recv() {
+            PortRecv::Item(b) => out.push(b),
+            PortRecv::Empty => {
+                assert!(Instant::now() < end, "timed out waiting for stream end");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            PortRecv::End => return (out, port.close_reason()),
+        }
+    }
+}
+
+/// Re-invoke this test binary as a publisher child process.
+fn spawn_child(child_test: &str, env_key: &str, registry: &str) -> std::process::Child {
+    std::process::Command::new(std::env::current_exe().expect("test binary path"))
+        .args([child_test, "--exact", "--nocapture"])
+        .env(env_key, registry)
+        .spawn()
+        .expect("spawn child test process")
+}
+
+/// Serve-side delivered count of `topic` on `t` (frames handed to the
+/// wire writer) — the child's cue that its frames left the queue.
+fn served_delivered(t: &TcpTransport, topic: &str) -> u64 {
+    let name = format!("tcp-pub:{topic}");
+    t.snapshot()
+        .iter()
+        .find(|s| s.name == name)
+        .map(|s| s.delivered)
+        .unwrap_or(0)
+}
+
+// -- EOS crosses the wire bit-identically -----------------------------------
+
+#[test]
+fn child_eos_publisher() {
+    let Ok(registry) = std::env::var(EOS_ENV) else {
+        return;
+    };
+    let t = TcpTransport::new(TcpConfig::new(registry));
+    let mut port = t.advertise("net/eos", Qos::Blocking).unwrap();
+    port.advertise(&frame_caps());
+    wait_for("a subscriber", Duration::from_secs(10), || {
+        port.subscriber_count() >= 1
+    });
+    for i in 0..5 {
+        send(port.as_mut(), frame(i));
+    }
+    port.finish();
+    assert!(
+        t.quiesce(Duration::from_secs(10)),
+        "final EOS frame flushed before exit"
+    );
+}
+
+#[test]
+fn eos_across_wire() {
+    let registry = NetRegistry::serve("127.0.0.1:0").unwrap();
+    let addr = registry.addr().to_string();
+    let t = TcpTransport::new(TcpConfig::new(&addr));
+    let mut sub = t.attach("net/eos", 8, Qos::Blocking).unwrap();
+    let mut child = spawn_child("child_eos_publisher", EOS_ENV, &addr);
+
+    let (got, reason) = drain_until_end(sub.as_mut());
+    assert!(child.wait().unwrap().success(), "publisher process failed");
+
+    assert_eq!(got.len(), 5, "every frame crossed the wire before EOS");
+    for (i, b) in got.iter().enumerate() {
+        let want = frame(i as u64);
+        assert_eq!(b.pts_ns, want.pts_ns, "pts preserved");
+        assert_eq!(payload(b), payload(&want), "payload bit-identical");
+    }
+    assert_eq!(
+        sub.topic_caps().map(|c| c.to_string()),
+        Some(frame_caps().to_string()),
+        "caps announced across the wire"
+    );
+    assert!(
+        matches!(reason, Some(StreamEnd::Eos)),
+        "clean EOS, got {reason:?}"
+    );
+}
+
+// -- a publisher process dying mid-stream is a typed fault ------------------
+
+#[test]
+fn child_abrupt_publisher() {
+    let Ok(registry) = std::env::var(KILL_ENV) else {
+        return;
+    };
+    let t = TcpTransport::new(TcpConfig::new(registry));
+    let mut port = t.advertise("net/kill", Qos::Blocking).unwrap();
+    port.advertise(&frame_caps());
+    wait_for("a subscriber", Duration::from_secs(10), || {
+        port.subscriber_count() >= 1
+    });
+    for i in 0..3 {
+        send(port.as_mut(), frame(i));
+    }
+    wait_for("frames on the wire", Duration::from_secs(10), || {
+        served_delivered(&t, "net/kill") >= 3
+    });
+    // flush margin, then die without finish(): no EOS ever sent
+    std::thread::sleep(Duration::from_millis(300));
+    std::process::exit(0);
+}
+
+#[test]
+fn killed_publisher_surfaces_as_fault() {
+    let registry = NetRegistry::serve("127.0.0.1:0").unwrap();
+    let addr = registry.addr().to_string();
+    let mut cfg = TcpConfig::new(&addr);
+    cfg.reconnect_attempts = 2;
+    cfg.reconnect_backoff = Duration::from_millis(50);
+    let t = TcpTransport::new(cfg);
+    let mut sub = t.attach("net/kill", 8, Qos::Blocking).unwrap();
+    let mut child = spawn_child("child_abrupt_publisher", KILL_ENV, &addr);
+
+    let (got, reason) = drain_until_end(sub.as_mut());
+    let _ = child.wait();
+
+    assert_eq!(got.len(), 3, "frames sent before the crash were delivered");
+    match reason {
+        Some(StreamEnd::Fault(f)) => {
+            assert_eq!(f.element, "tcp:net/kill");
+            assert!(
+                f.message.contains("reconnect"),
+                "fault names exhausted reconnects: {}",
+                f.message
+            );
+        }
+        other => panic!("abrupt publisher death must be a fault, got {other:?}"),
+    }
+}
+
+// -- reconnect bridges a publisher restart ----------------------------------
+
+#[test]
+fn child_gen1_publisher() {
+    let Ok(registry) = std::env::var(GEN1_ENV) else {
+        return;
+    };
+    let t = TcpTransport::new(TcpConfig::new(registry));
+    let mut port = t.advertise("net/reconnect", Qos::Blocking).unwrap();
+    port.advertise(&frame_caps());
+    wait_for("a subscriber", Duration::from_secs(10), || {
+        port.subscriber_count() >= 1
+    });
+    for i in 0..3 {
+        send(port.as_mut(), frame(i));
+    }
+    wait_for("frames on the wire", Duration::from_secs(10), || {
+        served_delivered(&t, "net/reconnect") >= 3
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    std::process::exit(0); // die mid-stream; gen2 takes over
+}
+
+#[test]
+fn child_gen2_publisher() {
+    let Ok(registry) = std::env::var(GEN2_ENV) else {
+        return;
+    };
+    let t = TcpTransport::new(TcpConfig::new(registry));
+    let mut port = t.advertise("net/reconnect", Qos::Blocking).unwrap();
+    port.advertise(&frame_caps());
+    wait_for("a subscriber", Duration::from_secs(10), || {
+        port.subscriber_count() >= 1
+    });
+    for i in 3..6 {
+        send(port.as_mut(), frame(i));
+    }
+    port.finish();
+    assert!(t.quiesce(Duration::from_secs(10)), "EOS flushed before exit");
+}
+
+#[test]
+fn reconnect_resumes_from_a_restarted_publisher() {
+    let registry = NetRegistry::serve("127.0.0.1:0").unwrap();
+    let addr = registry.addr().to_string();
+    let mut cfg = TcpConfig::new(&addr);
+    // generous budget: must outlive the gen2 process startup
+    cfg.reconnect_attempts = 400;
+    cfg.reconnect_backoff = Duration::from_millis(25);
+    let t = TcpTransport::new(cfg);
+    let mut sub = t.attach("net/reconnect", 8, Qos::Blocking).unwrap();
+
+    let mut gen1 = spawn_child("child_gen1_publisher", GEN1_ENV, &addr);
+    let first = drain_n(sub.as_mut(), 3);
+    let _ = gen1.wait();
+
+    // a restarted publisher registers a new port under the same topic;
+    // the subscription re-resolves and resumes
+    let mut gen2 = spawn_child("child_gen2_publisher", GEN2_ENV, &addr);
+    let (rest, reason) = drain_until_end(sub.as_mut());
+    assert!(gen2.wait().unwrap().success(), "gen2 publisher failed");
+
+    let pts: Vec<u64> = first.iter().chain(rest.iter()).map(|b| b.pts_ns).collect();
+    assert_eq!(pts, vec![0, 1, 2, 3, 4, 5], "both generations, in order");
+    assert!(
+        matches!(reason, Some(StreamEnd::Eos)),
+        "gen2's clean EOS ends the stream, got {reason:?}"
+    );
+}
+
+// -- credit flow control bounds subscriber memory ---------------------------
+
+#[test]
+fn credit_backpressure_bounds_subscriber_memory() {
+    const CAP: usize = 4;
+    const TOTAL: u64 = 30;
+    let registry = NetRegistry::serve("127.0.0.1:0").unwrap();
+    let t = TcpTransport::new(TcpConfig::new(registry.addr().to_string()));
+    // loopback: serve and subscribe on the same transport instance —
+    // the frames still cross real sockets
+    let mut publ = t.advertise("net/credit", Qos::Blocking).unwrap();
+    publ.advertise(&frame_caps());
+    let mut sub = t.attach("net/credit", CAP, Qos::Blocking).unwrap();
+    wait_for("the subscriber connection", Duration::from_secs(10), || {
+        publ.subscriber_count() >= 1
+    });
+
+    // without pops the window closes: at most CAP frames on the remote
+    // queue + 1 held by the writer + CAP on the serve queue may be
+    // accepted before the publisher observes Full
+    let mut pending: Option<Buffer> = None;
+    let mut sent = 0u64;
+    let mut saw_full_at = None;
+    let mut got = Vec::new();
+    let end = Instant::now() + Duration::from_secs(30);
+    while sent < TOTAL || pending.is_some() {
+        assert!(Instant::now() < end, "saturation loop wedged");
+        let buf = pending.take().unwrap_or_else(|| frame(sent));
+        match publ.try_send(buf) {
+            PortSend::Sent => sent += 1,
+            PortSend::Full(b) => {
+                if saw_full_at.is_none() {
+                    saw_full_at = Some(sent);
+                }
+                let in_flight = t
+                    .snapshot()
+                    .iter()
+                    .find(|s| s.name == "tcp-sub:net/credit")
+                    .map(|s| s.in_flight)
+                    .unwrap_or(0);
+                assert!(
+                    in_flight <= CAP as u64,
+                    "subscriber held {in_flight} frames, window is {CAP}"
+                );
+                pending = Some(b);
+                // popping one frame returns one credit and reopens the window
+                if let PortRecv::Item(item) = sub.try_recv() {
+                    got.push(item);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            PortSend::NoSubscribers(b) => {
+                pending = Some(b);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            PortSend::Closed(_) => panic!("stream closed under the publisher"),
+        }
+    }
+    let full_at = saw_full_at.expect("a closed credit window parked the publisher");
+    assert!(
+        full_at <= (2 * CAP + 1) as u64,
+        "publisher ran {full_at} frames ahead of an unread subscriber"
+    );
+    publ.finish();
+    let (rest, reason) = drain_until_end(sub.as_mut());
+    got.extend(rest);
+    assert_eq!(got.len() as u64, TOTAL, "blocking QoS delivered everything");
+    for (i, b) in got.iter().enumerate() {
+        assert_eq!(b.pts_ns, i as u64, "in order, exactly once");
+    }
+    assert!(matches!(reason, Some(StreamEnd::Eos)));
+
+    // conservation identity on both sides of the wire
+    for s in t.snapshot() {
+        assert_eq!(
+            s.pushed,
+            s.delivered + s.dropped + s.in_flight,
+            "conservation violated on {}",
+            s.name
+        );
+        assert_eq!(s.delivered, TOTAL, "{} delivered everything", s.name);
+    }
+}
+
+// -- the conservation identity is reportable from PipelineReport ------------
+
+#[test]
+fn conservation_identity_in_pipeline_reports() {
+    let registry = NetRegistry::serve("127.0.0.1:0").unwrap();
+    // a named transport instance keeps this test isolated from siblings
+    register_tcp_as("tcp-report", TcpConfig::new(registry.addr().to_string()));
+
+    let hub = PipelineHub::with_workers(2);
+    let mut back = PipelineBuilder::new();
+    back.chain_named(
+        "in",
+        nnstreamer::elements::query::QueryServerSrcProps {
+            topic: "net/report".into(),
+            transport: "tcp-report".into(),
+            caps: Caps::tensor(DType::U8, [3, 16, 16, 1], 240.0),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .chain_named("out", nnstreamer::elements::sinks::TensorSinkProps::default())
+    .unwrap();
+    hub.launch("back", back.build()).unwrap();
+
+    let front = Pipeline::parse(
+        "videotestsrc num-buffers=6 pattern=gradient ! \
+         video/x-raw,format=RGB,width=16,height=16,framerate=240 ! \
+         tensor_converter ! \
+         tensor_query_serversink topic=net/report transport=tcp-report wait-subscribers=1",
+    )
+    .unwrap();
+    hub.launch("front", front).unwrap();
+
+    for j in hub.join_all() {
+        let report = j.report.expect("pipeline succeeded");
+        if j.name == "back" {
+            assert_eq!(report.element("out").unwrap().buffers_in(), 6);
+            for side in ["tcp-pub:net/report", "tcp-sub:net/report"] {
+                let s = report
+                    .topic(side)
+                    .unwrap_or_else(|| panic!("{side} missing from PipelineReport::topics"));
+                assert_eq!(
+                    s.pushed,
+                    s.delivered + s.dropped + s.in_flight,
+                    "conservation violated on {side}"
+                );
+                assert_eq!(s.delivered, 6, "{side} carried every frame");
+                assert_eq!(s.dropped, 0, "{side} dropped nothing");
+                assert!(s.eos, "{side} observed end-of-stream");
+            }
+        }
+    }
+}

@@ -6,8 +6,12 @@
 
 use nnstreamer::elements::decoder::{decode_boxes, encode_boxes, DetBox};
 use nnstreamer::elements::sync::{SyncPolicy, Synchronizer};
+use nnstreamer::error::{Error, Fault};
+use nnstreamer::net::wire::{decode, encode, write_msg, Msg};
 use nnstreamer::pipeline::{PushOutcome, Qos, StreamRegistry};
-use nnstreamer::tensor::{Buffer, Caps, DType, Dims};
+use nnstreamer::tensor::{
+    AudioInfo, Buffer, Caps, Chunk, DType, Dims, TensorInfo, VideoFormat, VideoInfo,
+};
 use nnstreamer::video::pattern::splitmix64;
 
 /// Deterministic pseudo-random case driver.
@@ -446,6 +450,147 @@ fn prop_buffer_bundle_unbundle_preserves_payloads() {
         let back = bundled.unbundle();
         for (b, p) in back.iter().zip(&payloads) {
             assert_eq!(&b.chunk().to_f32_vec().unwrap(), p);
+        }
+    });
+}
+
+// -- wire codec (net/wire.rs): roundtrip + corruption safety ----------------
+
+fn rand_str(g: &mut Gen, max: u64) -> String {
+    (0..g.range(0, max))
+        .map(|_| (b'a' + (g.next() % 26) as u8) as char)
+        .collect()
+}
+
+fn rand_caps(g: &mut Gen) -> Caps {
+    let dtypes = [DType::U8, DType::I16, DType::I32, DType::F32, DType::F64];
+    let mut info = |g: &mut Gen| {
+        let rank = g.range(1, 5) as usize;
+        let dims: Vec<usize> = (0..rank).map(|_| g.range(1, 256) as usize).collect();
+        TensorInfo::new(dtypes[g.range(0, 5) as usize], Dims::new(&dims))
+    };
+    match g.range(0, 7) {
+        0 => Caps::Any,
+        1 => Caps::Text,
+        2 => Caps::FlatBuf,
+        3 => Caps::Video(VideoInfo {
+            format: [
+                VideoFormat::Rgb,
+                VideoFormat::Bgr,
+                VideoFormat::Gray8,
+                VideoFormat::Nv12,
+            ][g.range(0, 4) as usize],
+            width: g.range(1, 4096) as usize,
+            height: g.range(1, 4096) as usize,
+            fps_millis: g.range(0, 240_000),
+        }),
+        4 => Caps::Audio(AudioInfo {
+            rate: g.range(1, 192_000) as usize,
+            channels: g.range(1, 9) as usize,
+            samples_per_buffer: g.range(1, 4096) as usize,
+        }),
+        5 => Caps::Tensor {
+            info: info(g),
+            fps_millis: g.range(0, 240_000),
+        },
+        _ => Caps::Tensors {
+            infos: (0..g.range(1, 5)).map(|_| info(g)).collect(),
+            fps_millis: g.range(0, 240_000),
+        },
+    }
+}
+
+fn rand_buffer(g: &mut Gen) -> Buffer {
+    let n = g.range(1, 4) as usize;
+    let chunks = (0..n)
+        .map(|_| {
+            let len = g.range(0, 2048) as usize;
+            Chunk::from_vec((0..len).map(|_| g.next() as u8).collect())
+        })
+        .collect();
+    let mut b = Buffer::new(g.next(), chunks);
+    b.duration_ns = g.next();
+    b.seq = g.next();
+    b
+}
+
+fn rand_msg(g: &mut Gen) -> Msg {
+    match g.range(0, 10) {
+        0 => Msg::Hello {
+            topic: rand_str(g, 40),
+            capacity: g.range(1, 1 << 16) as u32,
+            credits: g.range(0, 1 << 16) as u32,
+            qos: [Qos::Blocking, Qos::Leaky, Qos::LatestOnly][g.range(0, 3) as usize],
+        },
+        1 => Msg::Caps(rand_caps(g)),
+        2 => Msg::Buffer(rand_buffer(g)),
+        3 => Msg::Eos,
+        4 => Msg::Fault(Fault {
+            element: rand_str(g, 30),
+            message: rand_str(g, 120),
+            panicked: g.range(0, 2) == 1,
+        }),
+        5 => Msg::Credit(g.next() as u32),
+        6 => Msg::Detach,
+        7 => Msg::RegPut {
+            topic: rand_str(g, 40),
+            addr: rand_str(g, 40),
+        },
+        8 => Msg::RegGet {
+            topic: rand_str(g, 40),
+        },
+        _ => Msg::RegAddr {
+            addr: (g.range(0, 2) == 1).then(|| rand_str(g, 40)),
+        },
+    }
+}
+
+/// Satellite 2 — every frame type roundtrips bit-identically, and the
+/// streaming writer emits byte-for-byte what the buffered encoder does.
+#[test]
+fn prop_wire_roundtrip_bit_identical() {
+    cases(300, |g| {
+        let msg = rand_msg(g);
+        let bytes = encode(&msg).unwrap();
+        let mut streamed = Vec::new();
+        write_msg(&mut streamed, &msg).unwrap();
+        assert_eq!(streamed, bytes, "write_msg and encode agree");
+        assert_eq!(decode(&bytes).unwrap(), msg, "decode inverts encode");
+    });
+}
+
+/// Satellite 2 — a frame cut at any prefix is a typed [`Error::Frame`],
+/// never a panic and never a successful decode.
+#[test]
+fn prop_wire_truncation_is_typed_error() {
+    cases(150, |g| {
+        let msg = rand_msg(g);
+        let bytes = encode(&msg).unwrap();
+        let cut = g.range(0, bytes.len() as u64) as usize;
+        match decode(&bytes[..cut]) {
+            Err(Error::Frame(_)) => {}
+            Ok(m) => panic!("decoded a frame truncated at {cut}: {m:?}"),
+            Err(e) => panic!("truncation at {cut} must be Error::Frame, got {e}"),
+        }
+    });
+}
+
+/// Satellite 2 — single-bit corruption anywhere in a frame is detected
+/// as a typed error. The lone exception is the header's type byte,
+/// where a flip can rename one self-consistent frame into another;
+/// payload corruption is always caught because a one-byte change always
+/// changes the FNV-1a digest (each absorption step is a bijection).
+#[test]
+fn prop_wire_corruption_is_typed_error() {
+    cases(300, |g| {
+        let msg = rand_msg(g);
+        let mut bytes = encode(&msg).unwrap();
+        let i = g.range(0, bytes.len() as u64) as usize;
+        bytes[i] ^= 1u8 << (g.next() % 8);
+        match decode(&bytes) {
+            Err(Error::Frame(_)) => {}
+            Ok(_) => assert_eq!(i, 5, "only a type-byte flip may still decode"),
+            Err(e) => panic!("corruption at byte {i} must be Error::Frame, got {e}"),
         }
     });
 }
