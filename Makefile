@@ -22,6 +22,7 @@ bench:
 	cargo bench --bench e9_serving
 	cargo bench --bench e10_faults
 	cargo bench --bench e11_wire
+	cargo bench --bench e12_device_lane
 
 # Quick perf gate: compiles every bench, runs the E6 memory bench with a
 # short frame budget (records artifacts/BENCH_e6_memory.json; asserts
@@ -36,7 +37,11 @@ bench:
 # asserts bit-exact victim output and < 20% p99 movement), and finally
 # the E11 wire bench (the same split over a loopback TCP transport;
 # records artifacts/BENCH_e11_wire.json; asserts sink output
-# bit-identical across the wire).
+# bit-identical across the wire), and the E12 device-lane bench (64
+# live pipelines with a multi-ms NPU filter on a 4-worker hub; records
+# artifacts/BENCH_e12_device_lane.json; asserts the async device lane
+# reaches >= 4x the blocking throughput with O(workers) threads and
+# bit-identical sink output).
 bench-smoke:
 	cargo bench --no-run
 	cargo bench --bench e6_memory -- --frames 64 --record
@@ -45,6 +50,7 @@ bench-smoke:
 	cargo bench --bench e9_serving -- --frames 48
 	cargo bench --bench e10_faults -- --frames 48
 	cargo bench --bench e11_wire -- --frames 24 --record
+	cargo bench --bench e12_device_lane -- --frames 12 --record
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts

@@ -8,7 +8,7 @@
 
 pub mod npu;
 
-pub use npu::{NpuSim, NpuStats};
+pub use npu::{Completed, Completion, NpuSim, NpuStats};
 
 use crate::error::{Error, Result};
 

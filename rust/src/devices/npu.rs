@@ -6,38 +6,128 @@
 //! contention structure:
 //!
 //! * all submissions funnel through a single FIFO queue;
-//! * one dedicated service thread executes them in order;
-//! * callers block on a completion signal (like a driver ioctl);
+//! * one dedicated service thread accepts them in order;
 //! * **service time is modeled**: the real PJRT execution produces the
-//!   output values, and the service thread then pads the job to
-//!   `max(real_time, flops / npu_rate)`. The pad is a *sleep*, so host CPU
-//!   stays free — which is exactly the property that makes an NPU an NPU
-//!   (and what lets pipeline parallelism show up even on a 1-core host:
-//!   while the simulated NPU "computes", CPU elements keep streaming).
+//!   output values immediately, and the job's *completion* is delayed to
+//!   the end of its modeled service window
+//!   `max(real_time, dispatch + flops·n / npu_rate)` on a virtual device
+//!   clock. The window occupies no host CPU — which is exactly the
+//!   property that makes an NPU an NPU (while the simulated NPU
+//!   "computes", CPU elements keep streaming);
+//! * completion is **push-based**: [`NpuSim::submit_batch_async`] returns
+//!   a [`Completion`] handle and fires a
+//!   [`SharedWaker`](crate::pipeline::executor::SharedWaker) when the
+//!   window elapses, so an executor task parks at zero worker cost while
+//!   its job is in flight. The blocking [`NpuSim::submit`] /
+//!   [`NpuSim::submit_batch`] wrappers are the same path plus a wait.
+//!
+//! Device parallelism is modeled as virtual lanes
+//! ([`NpuSim::set_parallelism`], default 1 = the serial A311D queue):
+//! each accepted job occupies the earliest-free lane for its service
+//! window, so with `k` lanes up to `k` windows overlap — the knob the
+//! e12 bench turns to show throughput scaling with device parallelism
+//! instead of worker count.
 //!
 //! Queue time vs service time are tracked separately; service time is
 //! charged to the NPU domain, not the submitting element's CPU.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use once_cell::sync::Lazy;
 
 use crate::error::{Error, Result};
+use crate::pipeline::executor::SharedWaker;
 use crate::runtime::Model;
 use crate::tensor::Chunk;
 
 /// One queued submission: a batch of frames for one model. A single-frame
 /// invocation is a batch of one.
-type Job = (
-    Arc<Model>,
-    Vec<Vec<Chunk>>,
-    Sender<Result<Vec<Vec<Chunk>>>>,
-    Instant,
-);
+struct Job {
+    model: Arc<Model>,
+    frames: Vec<Vec<Chunk>>,
+    state: Arc<CompletionState>,
+    waker: Option<Arc<SharedWaker>>,
+    submitted: Instant,
+}
+
+/// The drained outcome of one completed job.
+pub struct Completed {
+    pub result: Result<Vec<Vec<Chunk>>>,
+    /// Modeled submit-to-completion occupancy (queue wait + service
+    /// window): what the blocking path would have charged as busy time.
+    pub occupancy: Duration,
+}
+
+struct CompletionState {
+    slot: Mutex<Option<Completed>>,
+    ready: Condvar,
+}
+
+/// Handle to an in-flight NPU job. The service thread stores the result
+/// and fires the registered waker when the modeled service window
+/// elapses; the submitter drains it with [`try_take`](Completion::try_take)
+/// (executor tasks, after their wake) or blocks in
+/// [`wait`](Completion::wait) (the classic dispatch path).
+pub struct Completion {
+    state: Arc<CompletionState>,
+}
+
+impl Completion {
+    /// Non-blocking drain. `None` while the job is still in flight
+    /// (spurious wake); each completed job yields its result exactly once.
+    pub fn try_take(&self) -> Option<Completed> {
+        self.state.slot.lock().unwrap().take()
+    }
+
+    /// Block until the job completes (the classic driver-ioctl shape).
+    pub fn wait(self) -> Result<Vec<Vec<Chunk>>> {
+        let mut g = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(c) = g.take() {
+                return c.result;
+            }
+            g = self.state.ready.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Heap entry for a job whose service window is running: fires (stores
+/// the result, wakes the submitter) at `due`. Min-ordered by
+/// `(due, seq)` — `seq` keeps FIFO order among jobs sharing a deadline.
+struct Firing {
+    due: Instant,
+    seq: u64,
+    n_frames: u64,
+    service_ns: u64,
+    completed: Completed,
+    state: Arc<CompletionState>,
+    waker: Option<Arc<SharedWaker>>,
+}
+
+impl PartialEq for Firing {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for Firing {}
+impl PartialOrd for Firing {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Firing {
+    // reversed: BinaryHeap is a max-heap, we want the soonest due first
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .due
+            .cmp(&self.due)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
 
 /// Aggregate NPU counters.
 #[derive(Debug, Default)]
@@ -47,6 +137,9 @@ pub struct NpuStats {
     queue_ns: AtomicU64,
     service_ns: AtomicU64,
     real_compute_ns: AtomicU64,
+    /// Jobs submitted but not yet completed (device queue depth).
+    in_flight: AtomicU64,
+    in_flight_hwm: AtomicU64,
 }
 
 impl NpuStats {
@@ -58,6 +151,18 @@ impl NpuStats {
     /// Completed frames across all submissions.
     pub fn frames(&self) -> u64 {
         self.frames.load(Ordering::Relaxed)
+    }
+
+    /// Jobs currently in flight (submitted, not yet completed).
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of the in-flight job count — how deep the device
+    /// queue got. Under the async lane this can exceed the executor's
+    /// worker count by design; under blocking dispatch it cannot.
+    pub fn in_flight_high_water(&self) -> u64 {
+        self.in_flight_hwm.load(Ordering::Relaxed)
     }
 
     pub fn mean_queue(&self) -> Duration {
@@ -96,6 +201,11 @@ impl NpuStats {
             self.total_real_compute(),
         )
     }
+
+    fn record_submit(&self) {
+        let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.in_flight_hwm.fetch_max(now, Ordering::Relaxed);
+    }
 }
 
 /// The simulated NPU device.
@@ -113,6 +223,9 @@ struct SharedTiming {
     /// Fixed per-submission dispatch cost in ns (driver ioctl + DMA
     /// setup). Paid once per job, so batched submissions amortize it.
     dispatch_ns: AtomicU64,
+    /// Virtual device lanes: how many service windows may overlap
+    /// (1 = the serial hardware queue).
+    parallelism: AtomicUsize,
     /// Per-model service-time overrides (ns per frame), keyed by artifact
     /// name.
     overrides: Mutex<HashMap<String, u64>>,
@@ -126,6 +239,22 @@ pub const DEFAULT_NPU_FLOPS: u64 = 400_000_000;
 
 /// Default per-submission dispatch cost (driver round-trip).
 pub const DEFAULT_NPU_DISPATCH: Duration = Duration::from_micros(500);
+
+/// Store the result and wake the submitter (the completion interrupt).
+fn fire(f: Firing, stats: &NpuStats) {
+    stats.service_ns.fetch_add(f.service_ns, Ordering::Relaxed);
+    stats.jobs.fetch_add(1, Ordering::Relaxed);
+    stats.frames.fetch_add(f.n_frames, Ordering::Relaxed);
+    stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+    {
+        let mut slot = f.state.slot.lock().unwrap();
+        *slot = Some(f.completed);
+    }
+    f.state.ready.notify_all();
+    if let Some(w) = f.waker {
+        w.wake();
+    }
+}
 
 impl NpuSim {
     /// The process-wide NPU instance (one accelerator per device, as on
@@ -144,40 +273,12 @@ impl NpuSim {
         shared
             .dispatch_ns
             .store(DEFAULT_NPU_DISPATCH.as_nanos() as u64, Ordering::Relaxed);
+        shared.parallelism.store(1, Ordering::Relaxed);
         let thread_stats = stats.clone();
         let thread_shared = shared.clone();
         std::thread::Builder::new()
             .name("npu-sim".into())
-            .spawn(move || {
-                while let Ok((model, frames, done, submitted)) = rx.recv() {
-                    let start = Instant::now();
-                    thread_stats.queue_ns.fetch_add(
-                        start.duration_since(submitted).as_nanos() as u64,
-                        Ordering::Relaxed,
-                    );
-                    let n = frames.len() as u64;
-                    let refs: Vec<Vec<&Chunk>> =
-                        frames.iter().map(|f| f.iter().collect()).collect();
-                    let slices: Vec<&[&Chunk]> =
-                        refs.iter().map(|v| v.as_slice()).collect();
-                    let result = model.execute_batch(&slices);
-                    let real = start.elapsed();
-                    thread_stats
-                        .real_compute_ns
-                        .fetch_add(real.as_nanos() as u64, Ordering::Relaxed);
-                    // modeled service envelope: one dispatch + n frames
-                    let target = thread_shared.service_time(&model, n);
-                    if target > real {
-                        std::thread::sleep(target - real);
-                    }
-                    thread_stats
-                        .service_ns
-                        .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    thread_stats.jobs.fetch_add(1, Ordering::Relaxed);
-                    thread_stats.frames.fetch_add(n, Ordering::Relaxed);
-                    let _ = done.send(result);
-                }
-            })
+            .spawn(move || service_loop(rx, thread_stats, thread_shared))
             .expect("spawn npu-sim");
         NpuSim {
             tx: Mutex::new(tx),
@@ -196,6 +297,14 @@ impl NpuSim {
         self.shared
             .dispatch_ns
             .store(dispatch.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Set the modeled device parallelism: how many service windows may
+    /// run concurrently (virtual lanes). 1 models the serial hardware
+    /// queue; benches raise it to show pipeline throughput scaling with
+    /// device parallelism rather than worker count.
+    pub fn set_parallelism(&self, lanes: usize) {
+        self.shared.parallelism.store(lanes.max(1), Ordering::Relaxed);
     }
 
     /// Override the modeled service time for one artifact.
@@ -226,15 +335,131 @@ impl NpuSim {
         model: Arc<Model>,
         frames: Vec<Vec<Chunk>>,
     ) -> Result<Vec<Vec<Chunk>>> {
-        let (done_tx, done_rx) = std::sync::mpsc::channel();
-        self.tx
-            .lock()
-            .unwrap()
-            .send((model, frames, done_tx, Instant::now()))
-            .map_err(|_| Error::Runtime("NPU service thread gone".into()))?;
-        done_rx
-            .recv()
-            .map_err(|_| Error::Runtime("NPU dropped job".into()))?
+        self.submit_batch_async(model, frames, None)?.wait()
+    }
+
+    /// Submit one frame without blocking; see
+    /// [`submit_batch_async`](NpuSim::submit_batch_async).
+    pub fn submit_async(
+        &self,
+        model: Arc<Model>,
+        inputs: Vec<Chunk>,
+        waker: Option<Arc<SharedWaker>>,
+    ) -> Result<Completion> {
+        self.submit_batch_async(model, vec![inputs], waker)
+    }
+
+    /// Submit a batch as one hardware job **without blocking**: returns a
+    /// [`Completion`] handle immediately. When the modeled service window
+    /// elapses, the service thread stores the result and fires `waker` —
+    /// the executor's device lane parks the submitting task until then,
+    /// so an in-flight job costs zero pool workers.
+    pub fn submit_batch_async(
+        &self,
+        model: Arc<Model>,
+        frames: Vec<Vec<Chunk>>,
+        waker: Option<Arc<SharedWaker>>,
+    ) -> Result<Completion> {
+        let state = Arc::new(CompletionState {
+            slot: Mutex::new(None),
+            ready: Condvar::new(),
+        });
+        self.stats.record_submit();
+        let sent = self.tx.lock().unwrap().send(Job {
+            model,
+            frames,
+            state: state.clone(),
+            waker,
+            submitted: Instant::now(),
+        });
+        if sent.is_err() {
+            self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+            return Err(Error::Runtime("NPU service thread gone".into()));
+        }
+        Ok(Completion { state })
+    }
+}
+
+/// The device service loop: accept jobs in FIFO order, execute the real
+/// compute immediately, assign each job a service window on the earliest
+/// free virtual lane, and fire its completion when the window ends. The
+/// `recv_timeout` bound by the soonest pending firing replaces the old
+/// in-line sleep — the thread stays responsive to new submissions while
+/// windows run, which is what lets windows overlap across lanes.
+fn service_loop(rx: Receiver<Job>, stats: Arc<NpuStats>, shared: Arc<SharedTiming>) {
+    let mut heap: BinaryHeap<Firing> = BinaryHeap::new();
+    let mut free_at: Vec<Instant> = Vec::new();
+    let mut seq: u64 = 0;
+    loop {
+        let now = Instant::now();
+        while heap.peek().map_or(false, |f| f.due <= now) {
+            fire(heap.pop().unwrap(), &stats);
+        }
+        let job = match heap.peek() {
+            Some(f) => match rx.recv_timeout(f.due.saturating_duration_since(Instant::now())) {
+                Ok(j) => Some(j),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(j) => Some(j),
+                Err(_) => break,
+            },
+        };
+        let Some(job) = job else { continue };
+        let now = Instant::now();
+        let lanes = shared.parallelism.load(Ordering::Relaxed).max(1);
+        if free_at.len() != lanes {
+            free_at.resize(lanes, now);
+        }
+        let lane = free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, t)| **t)
+            .map(|(i, _)| i)
+            .expect("at least one lane");
+        let window_start = free_at[lane].max(now);
+        stats.queue_ns.fetch_add(
+            window_start.duration_since(job.submitted).as_nanos() as u64,
+            Ordering::Relaxed,
+        );
+        let n = job.frames.len() as u64;
+        let refs: Vec<Vec<&Chunk>> = job.frames.iter().map(|f| f.iter().collect()).collect();
+        let slices: Vec<&[&Chunk]> = refs.iter().map(|v| v.as_slice()).collect();
+        let t0 = Instant::now();
+        let result = job.model.execute_batch(&slices);
+        let real = t0.elapsed();
+        stats
+            .real_compute_ns
+            .fetch_add(real.as_nanos() as u64, Ordering::Relaxed);
+        // modeled service envelope: one dispatch + n frames, floored by
+        // the real compute the window must contain
+        let target = shared.service_time(&job.model, n).max(real);
+        let window_end = window_start + target;
+        free_at[lane] = window_end;
+        // errors surface immediately; results honor the window
+        let due = if result.is_err() { Instant::now() } else { window_end };
+        seq += 1;
+        heap.push(Firing {
+            due,
+            seq,
+            n_frames: n,
+            service_ns: target.as_nanos() as u64,
+            completed: Completed {
+                result,
+                occupancy: window_end.duration_since(job.submitted),
+            },
+            state: job.state,
+            waker: job.waker,
+        });
+    }
+    // channel gone: honor the remaining windows, then exit
+    while let Some(f) = heap.pop() {
+        let now = Instant::now();
+        if f.due > now {
+            std::thread::sleep(f.due - now);
+        }
+        fire(f, &stats);
     }
 }
 
@@ -262,6 +487,11 @@ mod tests {
     use super::*;
     use crate::runtime::ModelRegistry;
 
+    /// Service-time overrides and parallelism are global device state, so
+    /// the tests that mutate them take this gate to avoid clobbering each
+    /// other's timing model under the parallel test runner.
+    static TIMING_GATE: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
     #[test]
     fn npu_computes_and_counts() {
         let reg = ModelRegistry::global().expect("artifacts built");
@@ -278,6 +508,7 @@ mod tests {
 
     #[test]
     fn service_override_paces_jobs() {
+        let _gate = TIMING_GATE.lock().unwrap_or_else(|e| e.into_inner());
         let reg = ModelRegistry::global().expect("artifacts built");
         let model = reg.load("ars_c_opt").unwrap();
         let npu = NpuSim::global();
@@ -287,6 +518,66 @@ mod tests {
         let input = Chunk::from_f32(&vec![0.1f32; n]);
         npu.submit(model.clone(), vec![input]).unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(29));
+        npu.clear_service_overrides();
+    }
+
+    #[test]
+    fn async_submit_completes_without_blocking() {
+        let _gate = TIMING_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let reg = ModelRegistry::global().expect("artifacts built");
+        let model = reg.load("ars_b_opt").unwrap();
+        let npu = NpuSim::global();
+        npu.set_service_override("ars_b_opt", Duration::from_millis(20));
+        let n = model.spec.inputs[0].dims.num_elements();
+        let waker = SharedWaker::new();
+        let t0 = Instant::now();
+        let c = npu
+            .submit_async(
+                model.clone(),
+                vec![Chunk::from_f32(&vec![0.1f32; n])],
+                Some(waker),
+            )
+            .unwrap();
+        // submit itself returns immediately, well inside the window
+        assert!(t0.elapsed() < Duration::from_millis(15), "submit blocked");
+        // the completion honors the modeled window
+        let out = c.wait().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+        assert_eq!(out.len(), 1);
+        npu.clear_service_overrides();
+    }
+
+    #[test]
+    fn parallel_lanes_overlap_service_windows() {
+        let _gate = TIMING_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let reg = ModelRegistry::global().expect("artifacts built");
+        let model = reg.load("ars_b_opt").unwrap();
+        let npu = NpuSim::global();
+        npu.set_service_override("ars_b_opt", Duration::from_millis(25));
+        npu.set_parallelism(4);
+        let n = model.spec.inputs[0].dims.num_elements();
+        let t0 = Instant::now();
+        let completions: Vec<Completion> = (0..4)
+            .map(|_| {
+                npu.submit_async(
+                    model.clone(),
+                    vec![Chunk::from_f32(&vec![0.1f32; n])],
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        assert!(npu.stats.in_flight_high_water() >= 4);
+        for c in completions {
+            c.wait().unwrap();
+        }
+        // 4 jobs of 25 ms on 4 lanes: ~1 window, not 4 serialized ones
+        assert!(
+            t0.elapsed() < Duration::from_millis(80),
+            "windows did not overlap: {:?}",
+            t0.elapsed()
+        );
+        npu.set_parallelism(1);
         npu.clear_service_overrides();
     }
 

@@ -200,6 +200,10 @@ pub struct Ctx {
     /// None in production. The executor consults it in the step path —
     /// see [`Ctx::check_injected_fault`] for the step-index contract.
     pub(crate) injector: Option<FaultInjector>,
+    /// Deadline set by [`Ctx::park_until`] during the current step: the
+    /// executor drains it after a [`Flow::Wait`] and parks the task on
+    /// the timer wheel instead of the external-waker path.
+    pub(crate) timer_deadline: Option<Instant>,
 }
 
 impl Ctx {
@@ -243,11 +247,83 @@ impl Ctx {
     }
 
     /// Sleep until the pipeline-relative deadline `pts_ns`, accounted as
-    /// idle time (live-source pacing).
+    /// idle time (live-source pacing). **Blocks the calling worker** —
+    /// executor-run elements should use
+    /// [`park_until_pts`](Ctx::park_until_pts) instead, which parks the
+    /// task on the timer wheel at zero worker cost.
     pub fn sleep_until_pts(&mut self, pts_ns: u64) {
         let t0 = Instant::now();
         crate::pipeline::scheduler::sleep_until(self.epoch, pts_ns);
         self.idle_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Timed park primitive. Returns `true` when a deadline park was
+    /// armed: the element must return [`Flow::Wait`] without producing,
+    /// and its step re-runs once the executor's timer wheel fires (never
+    /// early, so re-checking the deadline on re-entry yields `false`).
+    /// Returns `false` when the deadline already passed — proceed now —
+    /// or when the ctx runs outside the executor (no waker), in which
+    /// case the wait already happened as a blocking, idle-accounted
+    /// sleep, preserving the pre-timer-wheel behavior for direct drives.
+    pub fn park_until(&mut self, deadline: Instant) -> bool {
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        if self.waker.is_some() {
+            self.timer_deadline = Some(deadline);
+            true
+        } else {
+            std::thread::sleep(deadline - now);
+            self.idle_ns += (deadline - now).as_nanos() as u64;
+            false
+        }
+    }
+
+    /// [`park_until`](Ctx::park_until) against a pipeline-relative pts
+    /// deadline — the live-source pacing path (`is-live=true` sources
+    /// call this instead of [`sleep_until_pts`](Ctx::sleep_until_pts)).
+    pub fn park_until_pts(&mut self, pts_ns: u64) -> bool {
+        self.park_until(self.epoch + Duration::from_nanos(pts_ns))
+    }
+
+    /// Executor-internal: drain the deadline a step set via
+    /// [`park_until`](Ctx::park_until).
+    pub(crate) fn take_timer_deadline(&mut self) -> Option<Instant> {
+        self.timer_deadline.take()
+    }
+
+    /// Executor-internal: replay an item at the *front* of the pending
+    /// queue (exact redelivery order), for steps interrupted before
+    /// consuming it.
+    pub(crate) fn replay_input(&mut self, pad: usize, item: Item) {
+        self.pending.push_front((pad, item));
+    }
+
+    /// Does this ctx belong to an executor task (i.e. can a parked step
+    /// be woken)? Elements fall back to blocking dispatch when not.
+    pub fn has_waker(&self) -> bool {
+        self.waker.is_some()
+    }
+
+    /// Charge modeled device/envelope occupancy to this element's busy
+    /// time. The async device lane completes jobs while the element is
+    /// parked, so the worker-measured step time no longer contains the
+    /// service window; draining elements charge it here to keep
+    /// busy-time (Table III / E3) accounting identical to the blocking
+    /// dispatch path.
+    pub fn charge_busy(&self, d: Duration) {
+        self.stats.record_busy(self.domain, d);
+    }
+
+    /// Device-lane observability: one async submit entered a device queue.
+    pub fn record_device_submit(&self) {
+        self.stats.record_device_submit();
+    }
+
+    /// Device-lane observability: one completion wakeup drained a result.
+    pub fn record_device_completion(&self) {
+        self.stats.record_device_completion();
     }
 
     /// Take and reset the idle counter (scheduler-internal).
@@ -517,6 +593,21 @@ pub trait Element: Send {
     /// Process one input item arriving on sink pad `pad`.
     fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Flow>;
 
+    /// Re-entry point after [`handle`](Element::handle) returned
+    /// [`Flow::Wait`]: the executor calls this — instead of polling new
+    /// input — on every wake until it stops returning `Flow::Wait`.
+    /// Elements that stash work across the wait (a `tensor_filter` with
+    /// an in-flight device job) drain it here and return
+    /// `Flow::Continue`; `Flow::Wait` parks again (spurious wake or the
+    /// completion has not fired). The default covers elements whose
+    /// `Wait` handed the item back via
+    /// [`Ctx::push_back_input`](Ctx::push_back_input) (appsink): resume
+    /// immediately, and the replayed item reaches `handle` on the next
+    /// step.
+    fn resume(&mut self, _ctx: &mut Ctx) -> Result<Flow> {
+        Ok(Flow::Continue)
+    }
+
     /// Called when every sink pad has seen EOS: flush buffered state.
     fn flush(&mut self, _ctx: &mut Ctx) -> Result<()> {
         Ok(())
@@ -619,6 +710,7 @@ pub(crate) mod testutil {
             saturated: Vec::new(),
             deadline_ns: 0,
             injector: None,
+            timer_deadline: None,
         };
         (ctx, pads)
     }

@@ -11,6 +11,12 @@
 //! * `batch=` max frames executed as one stacked invocation (default 1)
 //! * `latency-budget=` max milliseconds to wait for more frames while
 //!   assembling a batch (default 0: drain only already-queued frames)
+//! * `dispatch=` `async` (default) | `block` — whether modeled device
+//!   time parks the filter on the executor's device lane (submit, stash,
+//!   `Flow::Wait`, resume on completion — zero workers held) or blocks
+//!   in-step like a synchronous driver call. `async` needs a pooled
+//!   executor waker and silently degrades to blocking without one
+//!   (testutil contexts, bare threads).
 //!
 //! ## Batched execution
 //!
@@ -36,14 +42,18 @@
 //! pipelines do); dims are checked element-count-wise with rank-agnostic
 //! semantics.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::devices::DeviceClass;
+use crate::devices::{Completion, DeviceClass};
 use crate::element::props::unknown_property;
 use crate::element::{Ctx, Element, Flow, FromProps, Item, Props};
 use crate::error::{Error, Result};
 use crate::metrics::stats::Domain;
-use crate::nnfw::{Accelerator, CustomNnfw, Nnfw, PassthroughNnfw, XlaNnfw};
+use crate::nnfw::{
+    Accelerator, AsyncInvoke, CustomNnfw, Nnfw, PassthroughNnfw, XlaNnfw,
+};
+use crate::pipeline::executor::SharedWaker;
 use crate::tensor::{Buffer, Caps, Chunk, TensorInfo};
 
 /// Upper bound on `batch=` (a saturated channel of huge stacked frames
@@ -100,6 +110,34 @@ impl Framework {
     }
 }
 
+/// How modeled device/envelope time is waited out (`dispatch=`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Submit and park on the executor's device lane: in-flight jobs hold
+    /// zero pool workers.
+    #[default]
+    Async,
+    /// Block inside the step for the full modeled service time (the
+    /// synchronous driver-call shape; baseline for the e12 bench).
+    Block,
+}
+
+impl DispatchMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "async" => DispatchMode::Async,
+            "block" => DispatchMode::Block,
+            other => {
+                return Err(Error::Property {
+                    key: "dispatch".into(),
+                    value: other.into(),
+                    reason: "expected async|block".into(),
+                })
+            }
+        })
+    }
+}
+
 /// Typed properties of [`TensorFilter`].
 #[derive(Debug, Clone)]
 pub struct TensorFilterProps {
@@ -116,6 +154,8 @@ pub struct TensorFilterProps {
     pub batch: usize,
     /// Max wait for batch stragglers (`latency-budget`, milliseconds).
     pub latency_budget: Duration,
+    /// Device-lane vs blocking dispatch (`dispatch=async|block`).
+    pub dispatch: DispatchMode,
 }
 
 impl Default for TensorFilterProps {
@@ -127,6 +167,7 @@ impl Default for TensorFilterProps {
             device_class: DeviceClass::Pc,
             batch: 1,
             latency_budget: Duration::ZERO,
+            dispatch: DispatchMode::Async,
         }
     }
 }
@@ -146,6 +187,7 @@ impl Props for TensorFilterProps {
         "device-class",
         "batch",
         "latency-budget",
+        "dispatch",
     ];
 
     fn set(&mut self, key: &str, value: &str) -> Result<()> {
@@ -184,6 +226,7 @@ impl Props for TensorFilterProps {
                 }
                 self.latency_budget = Duration::from_secs_f64(ms / 1e3);
             }
+            "dispatch" => self.dispatch = DispatchMode::parse(value)?,
             _ => return Err(unknown_property(Self::FACTORY, Self::KEYS, key, value)),
         }
         Ok(())
@@ -194,9 +237,34 @@ impl Props for TensorFilterProps {
     }
 }
 
+/// One stashed in-flight dispatch: the input frames whose outputs are not
+/// emitted yet, plus where those outputs come from. At most one job is in
+/// flight per filter — the task parks until it drains.
+enum PendingJob {
+    /// In flight on a device queue; the completion wakes the task.
+    Device {
+        completion: Completion,
+        frames: Vec<Buffer>,
+    },
+    /// Outputs already computed, held until the modeled envelope deadline
+    /// (the task parks on the timer wheel instead of sleeping). `pad` is
+    /// the busy time to charge on emit so utilization accounting matches
+    /// the blocking path.
+    Envelope {
+        deadline: Instant,
+        pad: Duration,
+        outputs: Vec<Vec<Chunk>>,
+        frames: Vec<Buffer>,
+    },
+}
+
 pub struct TensorFilter {
     props: TensorFilterProps,
     plugin: Option<Box<dyn Nnfw>>,
+    /// Waker handed to the device on async submits; the completion fires
+    /// it to un-park this filter's task.
+    wake: Option<Arc<SharedWaker>>,
+    pending: Option<PendingJob>,
 }
 
 impl TensorFilter {
@@ -291,6 +359,37 @@ impl TensorFilter {
         self.plugin = Some(plugin);
         Ok(())
     }
+
+    fn element_err(&self, e: impl std::fmt::Display) -> Error {
+        Error::element(
+            format!("tensor_filter({})", self.props.model),
+            e.to_string(),
+        )
+    }
+
+    /// De-batch `outs` onto the src pad: each result keeps its frame's
+    /// timestamp, sequence number and duration.
+    fn emit_outputs(
+        &self,
+        frames: &[Buffer],
+        outs: Vec<Vec<Chunk>>,
+        ctx: &mut Ctx,
+    ) -> Result<Flow> {
+        if outs.len() != frames.len() {
+            return Err(self.element_err(format!(
+                "batch of {} produced {} results",
+                frames.len(),
+                outs.len()
+            )));
+        }
+        for (frame, chunks) in frames.iter().zip(outs) {
+            let mut out = Buffer::new(frame.pts_ns, chunks);
+            out.seq = frame.seq;
+            out.duration_ns = frame.duration_ns;
+            ctx.push(0, out)?;
+        }
+        Ok(Flow::Continue)
+    }
 }
 
 impl Default for TensorFilter {
@@ -314,6 +413,8 @@ impl FromProps for TensorFilter {
         Ok(Self {
             props,
             plugin: None,
+            wake: None,
+            pending: None,
         })
     }
 }
@@ -375,42 +476,123 @@ impl Element for TensorFilter {
         let Item::Buffer(buf) = item else {
             return Ok(Flow::Continue);
         };
+        debug_assert!(
+            self.pending.is_none(),
+            "tensor_filter got new input with a job in flight"
+        );
         let batch = self.props.effective_batch();
         let mut frames = Vec::with_capacity(batch);
         frames.push(buf);
         if batch > 1 {
             self.gather_batch(&mut frames, ctx);
         }
-        let plugin = self
-            .plugin
-            .as_ref()
-            .ok_or_else(|| Error::element("tensor_filter", "not negotiated"))?;
-        let chunk_refs: Vec<Vec<&Chunk>> = frames
-            .iter()
-            .map(|b| b.chunks.iter().collect())
-            .collect();
-        let frame_refs: Vec<&[&Chunk]> =
-            chunk_refs.iter().map(|v| v.as_slice()).collect();
-        let outs = plugin.invoke_batch(&frame_refs).map_err(|e| {
-            Error::element(
-                format!("tensor_filter({})", self.props.model),
-                e.to_string(),
-            )
-        })?;
-        if outs.len() != frames.len() {
-            return Err(Error::element(
-                format!("tensor_filter({})", self.props.model),
-                format!("batch of {} produced {} results", frames.len(), outs.len()),
-            ));
+        // the device lane needs a task waker to resume on; without one
+        // (bare contexts, dispatch=block) fall back to the blocking path
+        let lane = self.props.dispatch == DispatchMode::Async && ctx.has_waker();
+        let waker = if lane {
+            let w = self.wake.get_or_insert_with(SharedWaker::new).clone();
+            w.set(ctx.waker());
+            Some(w)
+        } else {
+            None
+        };
+        let invoked = {
+            let plugin = self
+                .plugin
+                .as_ref()
+                .ok_or_else(|| Error::element("tensor_filter", "not negotiated"))?;
+            let chunk_refs: Vec<Vec<&Chunk>> = frames
+                .iter()
+                .map(|b| b.chunks.iter().collect())
+                .collect();
+            let frame_refs: Vec<&[&Chunk]> =
+                chunk_refs.iter().map(|v| v.as_slice()).collect();
+            let r = if lane {
+                plugin.invoke_batch_async(&frame_refs, waker)
+            } else {
+                plugin.invoke_batch(&frame_refs).map(AsyncInvoke::Ready)
+            };
+            r.map_err(|e| self.element_err(e))?
+        };
+        match invoked {
+            AsyncInvoke::Ready(outs) => self.emit_outputs(&frames, outs, ctx),
+            AsyncInvoke::After {
+                deadline,
+                pad,
+                outputs,
+            } => {
+                if ctx.park_until(deadline) {
+                    ctx.record_device_submit();
+                    self.pending = Some(PendingJob::Envelope {
+                        deadline,
+                        pad,
+                        outputs,
+                        frames,
+                    });
+                    Ok(Flow::Wait)
+                } else {
+                    // deadline already passed (or no waker — the call
+                    // slept in place): the envelope is paid, emit now
+                    ctx.charge_busy(pad);
+                    self.emit_outputs(&frames, outputs, ctx)
+                }
+            }
+            AsyncInvoke::Pending(completion) => {
+                ctx.record_device_submit();
+                self.pending = Some(PendingJob::Device { completion, frames });
+                Ok(Flow::Wait)
+            }
         }
-        // De-batch: each result keeps its frame's timestamp and ordering.
-        for (frame, chunks) in frames.iter().zip(outs) {
-            let mut out = Buffer::new(frame.pts_ns, chunks);
-            out.seq = frame.seq;
-            out.duration_ns = frame.duration_ns;
-            ctx.push(0, out)?;
+    }
+
+    /// Re-entered (instead of `handle`) after a `Flow::Wait`: drain the
+    /// in-flight job if its completion fired, or keep parking on a
+    /// spurious wake. The wheel entry / device completion that is still
+    /// outstanding will wake the task again, so a spurious pass never
+    /// needs to re-arm.
+    fn resume(&mut self, ctx: &mut Ctx) -> Result<Flow> {
+        let Some(job) = self.pending.take() else {
+            return Ok(Flow::Continue);
+        };
+        match job {
+            PendingJob::Device { completion, frames } => {
+                match completion.try_take() {
+                    Some(done) => {
+                        ctx.record_device_completion();
+                        // modeled queue+service occupancy: what the
+                        // blocking dispatch would have burned in-step
+                        ctx.charge_busy(done.occupancy);
+                        let outs =
+                            done.result.map_err(|e| self.element_err(e))?;
+                        self.emit_outputs(&frames, outs, ctx)
+                    }
+                    None => {
+                        self.pending =
+                            Some(PendingJob::Device { completion, frames });
+                        Ok(Flow::Wait)
+                    }
+                }
+            }
+            PendingJob::Envelope {
+                deadline,
+                pad,
+                outputs,
+                frames,
+            } => {
+                if Instant::now() < deadline {
+                    self.pending = Some(PendingJob::Envelope {
+                        deadline,
+                        pad,
+                        outputs,
+                        frames,
+                    });
+                    return Ok(Flow::Wait);
+                }
+                ctx.record_device_completion();
+                ctx.charge_busy(pad);
+                self.emit_outputs(&frames, outputs, ctx)
+            }
         }
-        Ok(Flow::Continue)
     }
 }
 

@@ -246,9 +246,11 @@ impl Element for TensorRepoSrc {
         let dur = (1e9 / self.props.rate.max(0.001)) as u64;
         let pts = self.n * dur;
         if self.props.is_live {
-            ctx.sleep_until_pts(pts);
             if ctx.stopped() {
                 return Ok(Flow::Eos);
+            }
+            if ctx.park_until_pts(pts) {
+                return Ok(Flow::Wait);
             }
         }
         let mut buf = match repo_fetch(&self.props.slot) {

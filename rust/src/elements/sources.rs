@@ -170,9 +170,13 @@ impl Element for VideoTestSrc {
         let frame_dur_ns = (1e9 / fps) as u64;
         let pts = self.n * frame_dur_ns;
         if self.props.is_live {
-            ctx.sleep_until_pts(pts);
             if ctx.stopped() {
                 return Ok(Flow::Eos);
+            }
+            // pace on the timer wheel: the task parks until the frame's
+            // wall-clock due time and this step re-runs (n unchanged)
+            if ctx.park_until_pts(pts) {
+                return Ok(Flow::Wait);
             }
         }
         // generate into pooled storage: steady-state frame production
@@ -584,9 +588,11 @@ impl Element for SensorSrc {
         let dur_ns = (1e9 / self.props.rate.max(0.001)) as u64;
         let pts = self.n * dur_ns;
         if self.props.is_live {
-            ctx.sleep_until_pts(pts);
             if ctx.stopped() {
                 return Ok(Flow::Eos);
+            }
+            if ctx.park_until_pts(pts) {
+                return Ok(Flow::Wait);
             }
         }
         let (window, channels) = (self.props.window, self.props.channels);

@@ -146,6 +146,13 @@ pub struct ElementStats {
     parks_output: AtomicU64,
     wakeups: AtomicU64,
     queue_hwm: AtomicU64,
+    /// Device-lane accounting: timer-wheel parks/fires (live pacing,
+    /// envelope holds, injected delays) and async device dispatches
+    /// (submit → completion wake) this element's task performed.
+    parks_timer: AtomicU64,
+    timer_fires: AtomicU64,
+    device_submits: AtomicU64,
+    device_completions: AtomicU64,
     /// Buffers discarded by deadline-aware load shedding (stamped past
     /// their pipeline's deadline budget when crossing a link or arriving
     /// at the step gate). Kept separate from `dropped` so Table-III
@@ -242,6 +249,22 @@ impl ElementStats {
         self.wakeups.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_timer_park(&self) {
+        self.parks_timer.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_timer_fire(&self) {
+        self.timer_fires.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_device_submit(&self) {
+        self.device_submits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_device_completion(&self) {
+        self.device_completions.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record the queue depth of this element's inbox after a push
     /// (keeps the link high-water mark).
     pub fn record_queue_depth(&self, len: u64) {
@@ -272,6 +295,27 @@ impl ElementStats {
     /// High-water mark of this element's bounded input inbox.
     pub fn queue_high_water(&self) -> u64 {
         self.queue_hwm.load(Ordering::Relaxed)
+    }
+
+    /// Times the task parked on the executor timer wheel (live pacing,
+    /// envelope holds, injected delays) — waits that held no worker.
+    pub fn parks_timer(&self) -> u64 {
+        self.parks_timer.load(Ordering::Relaxed)
+    }
+
+    /// Times a timer-wheel deadline fired and re-queued the task.
+    pub fn timer_fires(&self) -> u64 {
+        self.timer_fires.load(Ordering::Relaxed)
+    }
+
+    /// Async device-lane submissions (jobs dispatched without blocking).
+    pub fn device_submits(&self) -> u64 {
+        self.device_submits.load(Ordering::Relaxed)
+    }
+
+    /// Device-lane completions drained after a wake.
+    pub fn device_completions(&self) -> u64 {
+        self.device_completions.load(Ordering::Relaxed)
     }
 
     pub fn buffers_in(&self) -> u64 {
@@ -350,6 +394,18 @@ pub struct SchedSnapshot {
     /// Buffers shed by the deadline gate across this pipeline's elements
     /// (zero unless the pipeline set a deadline budget).
     pub shed: u64,
+    /// Timer-wheel parks across this pipeline's elements: timed waits
+    /// (live pacing, envelope holds, injected delays) that held no
+    /// worker thread while pending.
+    pub parks_timer: u64,
+    /// Timer-wheel deadlines that fired and re-queued one of this
+    /// pipeline's tasks.
+    pub timer_fires: u64,
+    /// Async device-lane submissions (filter jobs dispatched without
+    /// blocking a worker).
+    pub device_submits: u64,
+    /// Device-lane completions drained after their wake.
+    pub device_completions: u64,
 }
 
 /// Typed drop accounting of one stream topic. Conservation invariant

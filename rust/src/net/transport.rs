@@ -228,6 +228,10 @@ struct SubShared {
     /// Write half of the live connection (credit grants, detach).
     writer: Mutex<Option<TcpStream>>,
     detached: AtomicBool,
+    /// Pairs with `detach_cv`: reconnect backoff waits here instead of
+    /// busy-polling `detached`, and `detach()` notifies to end the wait.
+    detach_mu: Mutex<()>,
+    detach_cv: Condvar,
     connected: AtomicBool,
     retired: Arc<RetiredSubs>,
 }
@@ -434,6 +438,8 @@ impl Transport for TcpTransport {
             caps: Mutex::new(None),
             writer: Mutex::new(None),
             detached: AtomicBool::new(false),
+            detach_mu: Mutex::new(()),
+            detach_cv: Condvar::new(),
             connected: AtomicBool::new(false),
             retired: Arc::clone(&self.retired),
         });
@@ -634,14 +640,26 @@ fn try_connect(reg: &RegistryClient, topic: &str) -> Option<TcpStream> {
     Some(s)
 }
 
-/// Sleep `total` in small slices, aborting early on detach.
+/// Sleep up to `total`, returning promptly when `detach()` fires. A
+/// condvar wait (not a slice-and-poll loop): backoff burns no CPU and
+/// detach latency is bounded by the notify, not a poll interval.
 fn sleep_detachable(shared: &SubShared, total: Duration) {
     let deadline = Instant::now() + total;
-    while Instant::now() < deadline {
+    let mut g = lock(&shared.detach_mu);
+    loop {
         if shared.detached.load(Ordering::Acquire) {
             return;
         }
-        std::thread::sleep(Duration::from_millis(10));
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        // Timed-out or spurious wakes just re-check the flag/deadline.
+        let (ng, _) = shared
+            .detach_cv
+            .wait_timeout(g, deadline - now)
+            .unwrap_or_else(|e| e.into_inner());
+        g = ng;
     }
 }
 
@@ -821,6 +839,9 @@ impl SubscriberPort for TcpSubscriberPort {
                 let _ = w.shutdown(Shutdown::Both);
             }
             self.shared.ep.close();
+            // Pop the connector thread out of any reconnect backoff.
+            let _g = lock(&self.shared.detach_mu);
+            self.shared.detach_cv.notify_all();
         }
     }
 

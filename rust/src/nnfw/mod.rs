@@ -18,10 +18,33 @@ use std::time::{Duration, Instant};
 
 use once_cell::sync::Lazy;
 
-use crate::devices::{DeviceClass, NpuSim};
+use crate::devices::{Completion, DeviceClass, NpuSim};
 use crate::error::{Error, Result};
+use crate::pipeline::executor::SharedWaker;
 use crate::runtime::{Model, ModelPool, PoolLease};
 use crate::tensor::{Chunk, TensorInfo};
+
+/// Outcome of one non-blocking batched dispatch
+/// ([`Nnfw::invoke_batch_async`]).
+pub enum AsyncInvoke {
+    /// Outputs are ready now — no modeled wait remains (CPU with no
+    /// envelope, custom functions, passthrough).
+    Ready(Vec<Vec<Chunk>>),
+    /// Outputs are computed but the modeled service envelope has not
+    /// elapsed: the caller should hold them until `deadline` (parking on
+    /// the executor timer wheel rather than sleeping). `pad` is the
+    /// remaining envelope — the busy time a blocking dispatch would have
+    /// burned sleeping, which the caller charges on completion to keep
+    /// utilization accounting identical.
+    After {
+        deadline: std::time::Instant,
+        pad: Duration,
+        outputs: Vec<Vec<Chunk>>,
+    },
+    /// In flight on a device queue: the [`Completion`] fires the waker
+    /// passed to `invoke_batch_async` when the device finishes.
+    Pending(Completion),
+}
 
 /// Which accelerator executes an [`XlaNnfw`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +129,19 @@ pub trait Nnfw: Send {
     fn invoke_batch(&self, frames: &[&[&Chunk]]) -> Result<Vec<Vec<Chunk>>> {
         frames.iter().map(|inputs| self.invoke(inputs)).collect()
     }
+    /// Run inference on several frames **without blocking on modeled
+    /// device time**. Backends with a real device queue return
+    /// [`AsyncInvoke::Pending`] and fire `waker` on completion; backends
+    /// with a modeled envelope return [`AsyncInvoke::After`]. The default
+    /// wraps the blocking [`invoke_batch`](Nnfw::invoke_batch) — correct
+    /// for sub-plugins whose compute is real host CPU work.
+    fn invoke_batch_async(
+        &self,
+        frames: &[&[&Chunk]],
+        _waker: Option<Arc<SharedWaker>>,
+    ) -> Result<AsyncInvoke> {
+        Ok(AsyncInvoke::Ready(self.invoke_batch(frames)?))
+    }
     /// Whether invoke() blocks on the NPU queue (busy time charged to NPU).
     fn is_npu(&self) -> bool {
         false
@@ -142,20 +178,30 @@ impl XlaNnfw {
         self.lease.model()
     }
 
-    /// Pad a CPU execution to the modeled envelope (embedded-CPU rate x
-    /// device class) for `n` frames of work.
-    fn cpu_envelope(&self, real: Duration, n: u64) {
+    /// Remaining pad to stretch a CPU execution that took `real` to the
+    /// modeled envelope (embedded-CPU rate x device class) for `n` frames
+    /// of work. Zero when the real execution already filled the envelope.
+    fn cpu_envelope_pad(&self, real: Duration, n: u64) -> Duration {
         let rate = cpu_rate_flops();
-        let mut target = if rate > 0 {
+        let target = if rate > 0 {
             Duration::from_secs_f64(
                 self.model().spec.flops.saturating_mul(n) as f64 / rate as f64,
             )
         } else {
             real
         };
-        target = target.max(real).mul_f64(self.class.throttle_factor());
-        if target > real {
-            std::thread::sleep(target - real);
+        target
+            .max(real)
+            .mul_f64(self.class.throttle_factor())
+            .saturating_sub(real)
+    }
+
+    /// Pad a CPU execution to the modeled envelope by sleeping in place
+    /// (the blocking dispatch path).
+    fn cpu_envelope(&self, real: Duration, n: u64) {
+        let pad = self.cpu_envelope_pad(real, n);
+        if !pad.is_zero() {
+            std::thread::sleep(pad);
         }
     }
 }
@@ -198,6 +244,41 @@ impl Nnfw for XlaNnfw {
                 let out = self.model().execute_batch(frames)?;
                 self.cpu_envelope(t0.elapsed(), frames.len() as u64);
                 Ok(out)
+            }
+        }
+    }
+
+    fn invoke_batch_async(
+        &self,
+        frames: &[&[&Chunk]],
+        waker: Option<Arc<SharedWaker>>,
+    ) -> Result<AsyncInvoke> {
+        match self.accel {
+            Accelerator::Npu => {
+                let owned: Vec<Vec<Chunk>> = frames
+                    .iter()
+                    .map(|inputs| inputs.iter().map(|&c| c.clone()).collect())
+                    .collect();
+                let completion = NpuSim::global().submit_batch_async(
+                    self.model().clone(),
+                    owned,
+                    waker,
+                )?;
+                Ok(AsyncInvoke::Pending(completion))
+            }
+            Accelerator::Cpu => {
+                let t0 = Instant::now();
+                let outputs = self.model().execute_batch(frames)?;
+                let pad = self.cpu_envelope_pad(t0.elapsed(), frames.len() as u64);
+                if pad.is_zero() {
+                    Ok(AsyncInvoke::Ready(outputs))
+                } else {
+                    Ok(AsyncInvoke::After {
+                        deadline: Instant::now() + pad,
+                        pad,
+                        outputs,
+                    })
+                }
             }
         }
     }

@@ -484,6 +484,11 @@ struct StepCore {
     eos_seen: usize,
     /// The element declared EOS early: drain-and-discard mode.
     early_eos: bool,
+    /// A consumer's `handle()` returned [`Flow::Wait`] (in-flight device
+    /// job, timed output pad): the next step re-enters through
+    /// [`Element::resume`] instead of polling input, so a stashed job
+    /// drains before any new input is consumed.
+    waiting_external: bool,
 }
 
 /// One schedulable element of one pipeline.
@@ -635,6 +640,81 @@ impl RunQueue {
     }
 }
 
+/// Slot count of the hashed timer wheel. Entries hash to
+/// `deadline_tick % WHEEL_SLOTS`; a slot may hold deadlines from later
+/// wheel rounds, so each entry's own deadline is re-checked at fire time
+/// — timers never fire early, only (bounded by scheduling latency) late.
+const WHEEL_SLOTS: usize = 256;
+/// Wheel tick granularity. Pacing and device envelopes are multi-hundred
+/// µs to multi-ms; 1 ms buckets keep slots short without a timer thread.
+const WHEEL_TICK_NS: u64 = 1_000_000;
+
+/// Hashed timer wheel behind [`Ctx::park_until`]: deadline-parked tasks
+/// cost zero workers. There is no dedicated timer thread — idle workers
+/// bound their run-queue condvar wait by the soonest armed deadline and
+/// fire due entries themselves (see [`worker_loop`]).
+struct TimerWheel {
+    origin: Instant,
+    slots: Vec<Vec<(Instant, Weak<Task>)>>,
+    len: usize,
+    /// Cached soonest armed deadline (the condvar wait bound).
+    soonest: Option<Instant>,
+}
+
+impl TimerWheel {
+    fn new() -> TimerWheel {
+        TimerWheel {
+            origin: Instant::now(),
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            len: 0,
+            soonest: None,
+        }
+    }
+
+    fn slot_of(&self, t: Instant) -> usize {
+        let tick = t.saturating_duration_since(self.origin).as_nanos() as u64 / WHEEL_TICK_NS;
+        (tick % WHEEL_SLOTS as u64) as usize
+    }
+
+    fn arm(&mut self, deadline: Instant, task: Weak<Task>) {
+        let slot = self.slot_of(deadline);
+        self.slots[slot].push((deadline, task));
+        self.len += 1;
+        if self.soonest.map_or(true, |s| deadline < s) {
+            self.soonest = Some(deadline);
+        }
+    }
+
+    /// Remove and return every entry due at `now`. Nothing due is a cheap
+    /// cached-`soonest` check; firing scans the (mostly empty) slots so
+    /// entries armed in the past or left behind by coarse ticks are never
+    /// missed.
+    fn take_due(&mut self, now: Instant) -> Vec<Weak<Task>> {
+        match self.soonest {
+            Some(s) if s <= now => {}
+            _ => return Vec::new(),
+        }
+        let mut due = Vec::new();
+        let mut soonest = None;
+        for slot in &mut self.slots {
+            slot.retain(|(deadline, task)| {
+                if *deadline <= now {
+                    due.push(task.clone());
+                    false
+                } else {
+                    if soonest.map_or(true, |s| *deadline < s) {
+                        soonest = Some(*deadline);
+                    }
+                    true
+                }
+            });
+        }
+        self.len -= due.len();
+        self.soonest = soonest;
+        due
+    }
+}
+
 pub(crate) struct ExecutorCore {
     rq: Mutex<RunQueue>,
     available: Condvar,
@@ -643,8 +723,11 @@ pub(crate) struct ExecutorCore {
     /// Strong registry of unfinished tasks (parked tasks are not
     /// necessarily referenced by the run queue or any inbox).
     live: Mutex<Vec<Arc<Task>>>,
+    timers: Mutex<TimerWheel>,
     steps_total: AtomicU64,
     wakeups_total: AtomicU64,
+    timer_parks_total: AtomicU64,
+    timer_fires_total: AtomicU64,
     runq_hwm: AtomicU64,
 }
 
@@ -661,6 +744,38 @@ impl ExecutorCore {
 
     fn remove_live(&self, task: &Arc<Task>) {
         lock(&self.live).retain(|t| !Arc::ptr_eq(t, task));
+    }
+
+    /// Arm a wheel entry for a deadline-parked task. The notify is
+    /// essential: an idle worker may be in an unbounded condvar wait (no
+    /// timers armed) or one bounded by a *later* deadline — it must wake
+    /// and re-read the soonest deadline.
+    fn arm_timer(&self, deadline: Instant, task: &Arc<Task>) {
+        lock(&self.timers).arm(deadline, Arc::downgrade(task));
+        self.timer_parks_total.fetch_add(1, Ordering::Relaxed);
+        self.available.notify_all();
+    }
+
+    fn next_timer_due(&self) -> Option<Instant> {
+        lock(&self.timers).soonest
+    }
+
+    /// Fire every due timer entry (idle-worker timer service). Wakes run
+    /// through the ordinary [`wake_task`] path, so a task that was woken
+    /// early for another reason absorbs the late fire as a no-op.
+    fn fire_due_timers(&self) {
+        let due = lock(&self.timers).take_due(Instant::now());
+        if due.is_empty() {
+            return;
+        }
+        self.timer_fires_total
+            .fetch_add(due.len() as u64, Ordering::Relaxed);
+        for weak in due {
+            if let Some(t) = weak.upgrade() {
+                t.stats.record_timer_fire();
+                wake_task(&t);
+            }
+        }
     }
 }
 
@@ -717,6 +832,27 @@ enum Verdict {
     /// step saturated: the worker-loop gate re-checks them on wake, so
     /// an element that pushes and then waits cannot bypass backpressure.
     ParkExternal(Vec<Arc<Inbox>>),
+    /// Park until `deadline` on the executor timer wheel (live-source
+    /// pacing, CPU-envelope pads, injected delays). The park itself is
+    /// an external park; the wheel entry is the wake source.
+    ParkTimer {
+        deadline: Instant,
+        saturated: Vec<Arc<Inbox>>,
+    },
+}
+
+/// Build the park verdict for a step that returned [`Flow::Wait`]: a
+/// deadline the element set via [`Ctx::park_until`] rides the timer
+/// wheel; otherwise the wake must come from an external [`Waker`].
+fn wait_verdict(cx: &mut Ctx) -> Verdict {
+    let saturated = cx.take_saturated();
+    match cx.take_timer_deadline() {
+        Some(deadline) => Verdict::ParkTimer {
+            deadline,
+            saturated,
+        },
+        None => Verdict::ParkExternal(saturated),
+    }
 }
 
 enum Outcome {
@@ -748,6 +884,7 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
         kind,
         eos_seen,
         early_eos,
+        waiting_external,
     } = core;
     let el = element.as_mut().expect("task stepped after finish");
     let cx = ctx.as_mut().expect("task stepped after finish");
@@ -772,7 +909,17 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                             "injected fault",
                         )));
                     }
-                    FaultKind::DelayMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
+                    FaultKind::DelayMs(ms) => {
+                        // the injected delay rides the timer wheel like
+                        // any timed wait; the sticky fired flag means the
+                        // post-wake re-entry proceeds into generate()
+                        if cx.park_until(Instant::now() + Duration::from_millis(ms)) {
+                            return Outcome::Park(wait_verdict(cx));
+                        }
+                    }
+                    // an in-step stall (the watchdog's runnable-but-
+                    // frozen signature) must actually wedge the worker
+                    FaultKind::StallMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
                     FaultKind::Drop => return Outcome::Park(Verdict::Ready),
                 }
             }
@@ -792,9 +939,7 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                     push_all_eos(cx);
                     Outcome::Finish(None)
                 }
-                Ok(Flow::Wait) => {
-                    Outcome::Park(Verdict::ParkExternal(cx.take_saturated()))
-                }
+                Ok(Flow::Wait) => Outcome::Park(wait_verdict(cx)),
                 Ok(Flow::Continue) => {
                     let sat = cx.take_saturated();
                     if sat.is_empty() {
@@ -805,7 +950,44 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                 }
             }
         }
-        TaskKind::Consumer { n_sink_links } => match cx.poll_input() {
+        TaskKind::Consumer { n_sink_links } => {
+            // Re-entry after a Flow::Wait from handle(): the element has
+            // a stashed job (an in-flight device submit, a timed
+            // envelope pad). resume() — not poll_input — so the pending
+            // work drains, in order, before any new input is consumed.
+            if *waiting_external {
+                let t0 = Instant::now();
+                let flow = drain_control(el, cx).and_then(|_| el.resume(cx));
+                let busy = t0.elapsed().saturating_sub(cx.take_idle());
+                stats.record_busy(cx.domain, busy);
+                match flow {
+                    Err(e) => return Outcome::Finish(Some(e)),
+                    // still pending (spurious wake, or the completion
+                    // has not fired yet): park again
+                    Ok(Flow::Wait) => return Outcome::Park(wait_verdict(cx)),
+                    Ok(Flow::Eos) => {
+                        *waiting_external = false;
+                        if let Err(e) = el.flush(cx) {
+                            return Outcome::Finish(Some(e));
+                        }
+                        push_all_eos(cx);
+                        *early_eos = true;
+                    }
+                    Ok(Flow::Continue) => {
+                        *waiting_external = false;
+                    }
+                }
+                // outputs emitted by the resumed work go through the
+                // ordinary saturation gate; input polling restarts on
+                // the next step
+                let sat = cx.take_saturated();
+                return Outcome::Park(if sat.is_empty() {
+                    Verdict::Ready
+                } else {
+                    Verdict::ParkOutput(sat)
+                });
+            }
+            match cx.poll_input() {
             PopResult::Pending => Outcome::Park(Verdict::ParkInput),
             PopResult::Exhausted => {
                 if !*early_eos {
@@ -858,6 +1040,17 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                                 )));
                             }
                             FaultKind::DelayMs(ms) => {
+                                // timer-wheel park: hand the item back
+                                // first; the sticky fired flag makes the
+                                // replayed check a no-op, so the index
+                                // still advances exactly once
+                                if cx.park_until(Instant::now() + Duration::from_millis(ms))
+                                {
+                                    cx.replay_input(pad, item);
+                                    return Outcome::Park(wait_verdict(cx));
+                                }
+                            }
+                            FaultKind::StallMs(ms) => {
                                 std::thread::sleep(Duration::from_millis(ms));
                             }
                             FaultKind::Drop => {
@@ -904,14 +1097,15 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                     match flow {
                         Ok(Flow::Continue) => {}
                         Ok(Flow::Wait) => {
-                            // the element handed the item back via
-                            // push_back_input and waits on an external
-                            // event (appsink waiting for the application
-                            // to drain): park, carrying any saturated
-                            // outputs into the wake gate
-                            return Outcome::Park(Verdict::ParkExternal(
-                                cx.take_saturated(),
-                            ));
+                            // the element either handed the item back via
+                            // push_back_input (appsink waiting for the
+                            // application to drain) or stashed a pending
+                            // job (tensor_filter with a device submit in
+                            // flight): park, carrying any saturated
+                            // outputs into the wake gate; the next step
+                            // re-enters through resume()
+                            *waiting_external = true;
+                            return Outcome::Park(wait_verdict(cx));
                         }
                         Ok(Flow::Eos) => {
                             // element declared end-of-stream: flush,
@@ -947,7 +1141,8 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                     Outcome::Park(Verdict::ParkOutput(sat))
                 }
             }
-        },
+            }
+        }
     }
 }
 
@@ -1049,11 +1244,29 @@ fn apply_verdict(task: &Arc<Task>, verdict: Verdict) {
             // wake that raced the park decision
             park(task, SchedState::ParkedExternal);
         }
+        Verdict::ParkTimer {
+            deadline,
+            saturated,
+        } => {
+            // a timer park is an external park whose waker is the wheel
+            task.stats.record_park_input();
+            task.stats.record_timer_park();
+            *lock(&task.blocked_on) = saturated;
+            if park(task, SchedState::ParkedExternal) {
+                // arm *after* the park transition so the fire cannot
+                // precede it; a fire racing a concurrent external wake
+                // is absorbed by wake_task as a no-op
+                task.core.arm_timer(deadline, task);
+            }
+        }
     }
 }
 
 fn worker_loop(core: Arc<ExecutorCore>) {
-    loop {
+    'outer: loop {
+        // Timer service: no dedicated thread — whichever worker passes
+        // here fires the due wheel entries (outside the run-queue lock).
+        core.fire_due_timers();
         let task = {
             let mut rq = lock(&core.rq);
             loop {
@@ -1063,7 +1276,29 @@ fn worker_loop(core: Arc<ExecutorCore>) {
                 if let Some(t) = rq.pop() {
                     break t;
                 }
-                rq = core.available.wait(rq).unwrap_or_else(|e| e.into_inner());
+                // idle: bound the wait by the soonest armed deadline so
+                // a fully parked pool still fires its timers on time
+                match core.next_timer_due() {
+                    Some(due) => {
+                        let now = Instant::now();
+                        if due <= now {
+                            drop(rq);
+                            continue 'outer;
+                        }
+                        let (g, _) = core
+                            .available
+                            .wait_timeout(rq, due - now)
+                            .unwrap_or_else(|e| e.into_inner());
+                        rq = g;
+                        if core.next_timer_due().map_or(false, |d| d <= Instant::now()) {
+                            drop(rq);
+                            continue 'outer;
+                        }
+                    }
+                    None => {
+                        rq = core.available.wait(rq).unwrap_or_else(|e| e.into_inner());
+                    }
+                }
             }
         };
         lock(&task.sched).state = SchedState::Running;
@@ -1169,8 +1404,11 @@ impl Executor {
             shutdown: AtomicBool::new(false),
             workers,
             live: Mutex::new(Vec::new()),
+            timers: Mutex::new(TimerWheel::new()),
             steps_total: AtomicU64::new(0),
             wakeups_total: AtomicU64::new(0),
+            timer_parks_total: AtomicU64::new(0),
+            timer_fires_total: AtomicU64::new(0),
             runq_hwm: AtomicU64::new(0),
         });
         for i in 0..workers {
@@ -1201,6 +1439,17 @@ impl Executor {
     /// Total parked-task wakeups across all pipelines.
     pub fn wakeups(&self) -> u64 {
         self.core.wakeups_total.load(Ordering::Relaxed)
+    }
+
+    /// Total deadline parks armed on the timer wheel (live-source
+    /// pacing, envelope pads, injected delays).
+    pub fn timer_parks(&self) -> u64 {
+        self.core.timer_parks_total.load(Ordering::Relaxed)
+    }
+
+    /// Total timer-wheel entries fired by idle workers.
+    pub fn timer_fires(&self) -> u64 {
+        self.core.timer_fires_total.load(Ordering::Relaxed)
     }
 
     /// High-water mark of the global run queue (scheduling-pressure
@@ -1254,6 +1503,7 @@ impl Executor {
                     kind,
                     eos_seen: 0,
                     early_eos: false,
+                    waiting_external: false,
                 }),
                 sched: Mutex::new(Sched {
                     state: SchedState::Queued,
@@ -1375,6 +1625,36 @@ mod tests {
         let e = Executor::new(1);
         assert_eq!(e.worker_count(), 1);
         e.shutdown();
+    }
+
+    #[test]
+    fn timer_wheel_fires_only_due_entries() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        // entries on both sides of `now`, including one already past and
+        // one a full wheel round away (same slot, later deadline)
+        w.arm(now - Duration::from_millis(5), Weak::new());
+        w.arm(now + Duration::from_millis(2), Weak::new());
+        w.arm(
+            now + Duration::from_millis(2)
+                + Duration::from_nanos(WHEEL_SLOTS as u64 * WHEEL_TICK_NS),
+            Weak::new(),
+        );
+        assert_eq!(w.len, 3);
+        assert_eq!(w.take_due(now).len(), 1, "only the past entry fires");
+        assert_eq!(w.len, 2);
+        let soon = w.soonest.expect("future entries keep a soonest");
+        assert!(soon > now);
+        assert_eq!(w.take_due(now).len(), 0, "nothing due fires nothing");
+        assert_eq!(
+            w.take_due(now + Duration::from_millis(3)).len(),
+            1,
+            "hashed collision from a later round must not fire early"
+        );
+        assert_eq!(w.len, 1);
+        assert_eq!(w.take_due(now + Duration::from_secs(2)).len(), 1);
+        assert_eq!(w.len, 0);
+        assert!(w.soonest.is_none());
     }
 
     #[test]

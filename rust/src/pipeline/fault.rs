@@ -25,10 +25,15 @@ pub enum FaultKind {
     Panic,
     /// Return a typed element error from the step.
     Error,
-    /// Sleep this many milliseconds inside the step while *runnable* —
-    /// the signature a stall watchdog must detect (progress counters
-    /// frozen, task not parked).
+    /// Delay the element's step by this many milliseconds. Under the
+    /// pooled executor the task parks on the timer wheel (no worker
+    /// held, invisible to the stall watchdog — like a slow device, not a
+    /// wedged one); the step's buffer is replayed after the deadline.
     DelayMs(u64),
+    /// Sleep this many milliseconds *inside* the step while runnable —
+    /// the signature a stall watchdog must detect (progress counters
+    /// frozen, task not parked, worker held).
+    StallMs(u64),
     /// Discard one buffer. On a consumer the arriving buffer is
     /// consumed and dropped (the step index still advances); on a
     /// source there is no buffer to discard yet, so it degrades to a
@@ -48,9 +53,14 @@ impl FaultKind {
                         Error::Parse(format!("bad fault delay {ms:?}: expected milliseconds"))
                     })?;
                     Ok(FaultKind::DelayMs(ms))
+                } else if let Some(ms) = s.strip_prefix("stall:") {
+                    let ms = ms.parse::<u64>().map_err(|_| {
+                        Error::Parse(format!("bad fault stall {ms:?}: expected milliseconds"))
+                    })?;
+                    Ok(FaultKind::StallMs(ms))
                 } else {
                     Err(Error::Parse(format!(
-                        "unknown fault kind {s:?}: expected panic|error|delay:MS|drop"
+                        "unknown fault kind {s:?}: expected panic|error|delay:MS|stall:MS|drop"
                     )))
                 }
             }
@@ -71,7 +81,7 @@ pub struct FaultSpec {
 /// A set of armed faults for one pipeline run. Build programmatically
 /// ([`at`](FaultPlan::at)) or parse the compact string form
 /// `"element:step:kind"` (comma-separated; kinds:
-/// `panic | error | delay:MS | drop`):
+/// `panic | error | delay:MS | stall:MS | drop`):
 ///
 /// ```
 /// use nnstreamer::pipeline::fault::{FaultKind, FaultPlan};
@@ -216,7 +226,9 @@ mod tests {
 
     #[test]
     fn parse_roundtrips_all_kinds() {
-        let plan = FaultPlan::parse("a:0:panic, b:7:error, c:3:delay:40, d:2:drop").unwrap();
+        let plan =
+            FaultPlan::parse("a:0:panic, b:7:error, c:3:delay:40, d:2:drop, e:5:stall:15")
+                .unwrap();
         assert_eq!(
             plan.specs(),
             &[
@@ -240,6 +252,11 @@ mod tests {
                     step: 2,
                     kind: FaultKind::Drop
                 },
+                FaultSpec {
+                    element: "e".into(),
+                    step: 5,
+                    kind: FaultKind::StallMs(15)
+                },
             ]
         );
         assert!(FaultPlan::parse("").unwrap().is_empty());
@@ -247,6 +264,7 @@ mod tests {
         assert!(FaultPlan::parse("a:x:panic").is_err());
         assert!(FaultPlan::parse("a:1:explode").is_err());
         assert!(FaultPlan::parse("a:1:delay:soon").is_err());
+        assert!(FaultPlan::parse("a:1:stall:soon").is_err());
     }
 
     #[test]

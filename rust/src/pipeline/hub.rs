@@ -1238,7 +1238,7 @@ mod tests {
         p.set_fault_plan(FaultPlan::new().at(
             "videotestsrc0",
             2,
-            FaultKind::DelayMs(400),
+            FaultKind::StallMs(400),
         ));
         hub.launch("wedged", p).unwrap();
         let mut joined = hub.join_all();

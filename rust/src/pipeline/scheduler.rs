@@ -332,6 +332,10 @@ fn snapshot_sched(stats: &[Arc<ElementStats>], exec: &Executor) -> SchedSnapshot
         s.parks_output += e.parks_output();
         s.wakeups += e.wakeups();
         s.shed += e.shed();
+        s.parks_timer += e.parks_timer();
+        s.timer_fires += e.timer_fires();
+        s.device_submits += e.device_submits();
+        s.device_completions += e.device_completions();
         s.link_high_water = s.link_high_water.max(e.queue_high_water());
     }
     s
@@ -429,6 +433,7 @@ pub fn start_on(exec: &Executor, graph: &mut Graph, pri: Priority) -> Result<Run
             waker: None,
             saturated: Vec::new(),
             deadline_ns: graph.deadline_ns,
+            timer_deadline: None,
             // chaos testing: arm this element's injector if the
             // pipeline carries a fault plan naming it (None otherwise —
             // production pipelines pay one Option check per step)
@@ -469,15 +474,11 @@ pub fn start_on(exec: &Executor, graph: &mut Graph, pri: Priority) -> Result<Run
     })
 }
 
-/// Convenience: sleep until the pipeline-relative deadline `pts_ns`
-/// (live-source pacing helper). On the pooled executor this holds one
-/// worker for the remaining frame interval — bounded, but unlike the
-/// seed's dedicated per-source thread it occupies a *shared* resource,
-/// so many live sources on a small pool serialize behind each other's
-/// pacing sleeps. Timer-based parking (wake at deadline instead of
-/// sleeping in-step) is the planned fix — see ROADMAP "timer-wheel
-/// parking"; until then, size `NNS_WORKERS` to at least the number of
-/// concurrently live sources for live workloads.
+/// Convenience: sleep until the pipeline-relative deadline `pts_ns`.
+/// This is the *blocking* fallback used by contexts without an executor
+/// waker (bare threads, testutil); scheduled tasks pace through
+/// `Ctx::park_until_pts`, which parks on the executor timer wheel and
+/// holds no worker while waiting.
 pub fn sleep_until(epoch: Instant, pts_ns: u64) {
     let deadline = epoch + Duration::from_nanos(pts_ns);
     let now = Instant::now();

@@ -276,13 +276,70 @@ fn watchdog_kills_stalled_pipeline_on_single_worker() {
     let hub = PipelineHub::with_workers(1);
     hub.set_watchdog(Duration::from_millis(40));
     let mut p = Pipeline::parse("videotestsrc num-buffers=32 ! fakesink").unwrap();
-    p.set_fault_plan(FaultPlan::new().at("videotestsrc0", 1, FaultKind::DelayMs(400)));
+    p.set_fault_plan(FaultPlan::new().at("videotestsrc0", 1, FaultKind::StallMs(400)));
     hub.launch("wedge", p).unwrap();
     let join = hub.join_all().pop().expect("one launched pipeline");
     match join.report {
         Err(Error::Stalled { pipeline, .. }) => assert_eq!(pipeline, "wedge"),
         Err(other) => panic!("expected Error::Stalled, got: {other}"),
         Ok(_) => panic!("stalled pipeline joined cleanly"),
+    }
+}
+
+/// Device-lane chaos: an upstream fault lands while the filter is
+/// parked on an in-flight NPU job (async dispatch, multi-ms service
+/// window). The join error stays typed, the orphaned completion is not
+/// leaked — the NPU's in-flight gauge drains back to zero once the
+/// service window elapses — and the teardown leaks no threads.
+#[test]
+fn fault_while_parked_on_device_job() {
+    use nnstreamer::devices::NpuSim;
+
+    let npu = NpuSim::global();
+    // Long enough that the filter is certainly parked on the device
+    // when the upstream panic fires. i3_opt is not used by any other
+    // test in this binary, so the override races nothing.
+    npu.set_service_override("i3_opt", Duration::from_millis(60));
+
+    let hub = PipelineHub::with_workers(2);
+    let baseline = process_threads();
+    let mut p = Pipeline::parse(
+        "videotestsrc pattern=gradient num-buffers=8 ! \
+         video/x-raw,format=RGB,width=64,height=64,framerate=600 ! \
+         tensor_converter name=conv ! tensor_transform mode=normalize ! \
+         tensor_filter framework=xla model=i3_opt accelerator=npu ! fakesink",
+    )
+    .unwrap();
+    // Frames 0..3 pass the converter and pile into the slow filter;
+    // the panic at step 4 fires while a device job is in flight.
+    p.set_fault_plan(FaultPlan::new().at("conv", 4, FaultKind::Panic));
+    hub.launch("devlane", p).unwrap();
+
+    let join = hub.join_all().pop().expect("one launched pipeline");
+    match join.report {
+        Err(Error::Panicked { element, .. }) => assert_eq!(element, "conv"),
+        Err(other) => panic!("expected Error::Panicked, got: {other}"),
+        Ok(_) => panic!("faulted run joined cleanly"),
+    }
+
+    // The abandoned job still completes inside the NPU service thread;
+    // nothing may leak the in-flight slot. Poll past the service window.
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while npu.stats.in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        npu.stats.in_flight(),
+        0,
+        "device job leaked after fault-while-parked teardown"
+    );
+    npu.clear_service_overrides();
+
+    if let (Some(before), Some(after)) = (baseline, process_threads()) {
+        assert!(
+            after.saturating_sub(before) <= 4,
+            "threads grew across device-lane fault: {before} -> {after}"
+        );
     }
 }
 

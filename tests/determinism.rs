@@ -116,6 +116,58 @@ fn e4_topic_route_bit_identical_across_worker_counts_under_blocking_qos() {
     }
 }
 
+/// Run the e4 chain live-paced (`is-live=true`, source parks on the
+/// timer wheel between frames) with an explicit filter dispatch mode.
+fn run_live(workers: usize, dispatch: &str) -> Vec<(u64, Vec<u8>)> {
+    let desc = e4_launch()
+        .replace("is-live=false", "is-live=true")
+        .replace(
+            "accelerator=cpu",
+            &format!("accelerator=cpu dispatch={dispatch}"),
+        );
+    let hub = PipelineHub::with_workers(workers);
+    let p = Pipeline::parse(&desc).unwrap();
+    hub.launch("e4-live", p).unwrap();
+    let mut joined = hub.join_all();
+    let j = joined.pop().unwrap();
+    let report = j.report.expect("live pipeline succeeded");
+    // Live pacing rides the timer wheel, not a sleeping worker: the
+    // run must record timer parks whenever an executor waker exists
+    // (both dispatch modes — pacing is a source property).
+    assert!(
+        report.sched.parks_timer > 0,
+        "live source never parked on the timer wheel ({workers} workers, dispatch={dispatch}): {:?}",
+        report.sched
+    );
+    // Every wheel entry comes from exactly one park and fires at most
+    // once — the counters can never cross.
+    assert!(
+        report.sched.timer_fires <= report.sched.parks_timer,
+        "{:?}",
+        report.sched
+    );
+    let mut pipeline = j.pipeline;
+    collect(&mut pipeline, "out")
+}
+
+/// Timer-wheel pacing and the async device lane must not cost
+/// determinism: the live-paced e4 chain is bit-identical to the
+/// non-live reference across worker counts × dispatch modes.
+#[test]
+fn live_paced_e4_bit_identical_across_workers_and_dispatch() {
+    let reference = run_with_workers(1);
+    for workers in [1, 8] {
+        for dispatch in ["async", "block"] {
+            let live = run_live(workers, dispatch);
+            assert_eq!(live.len(), 6, "live pacing delivers every frame");
+            assert_eq!(
+                live, reference,
+                "live-paced output diverged at {workers} workers, dispatch={dispatch}"
+            );
+        }
+    }
+}
+
 /// Many identical deterministic pipelines racing on a small pool must
 /// each still produce the single-pipeline output bitwise — concurrency
 /// may interleave scheduling, never data.
