@@ -2,7 +2,7 @@
 # (checked in). `make artifacts` regenerates the manifest and the real
 # HLO programs through JAX when a Python environment is available.
 
-.PHONY: all test bench bench-smoke artifacts doc fmt lint
+.PHONY: all test bench bench-smoke artifacts doc fmt lint check unsafe-audit
 
 all:
 	cargo build --release
@@ -64,4 +64,29 @@ fmt:
 # Mirrors the CI `lint` job.
 lint:
 	cargo fmt --check
-	cargo clippy --all-targets -- -D warnings
+	cargo clippy --all-targets -- -D warnings -D clippy::mutex_atomic -D clippy::mutex_integer
+
+# nnscheck: explore the concurrency micro-models under the controlled
+# scheduler (tests/check.rs; seeded random walks + bounded-preemption
+# DFS), prove the executor's lost-wakeup guard is load-bearing by
+# mutation (`mutate-wake-pending` compiles it out and the suite must
+# then produce a replayable counterexample), and run the lock-order
+# suite (tests/lockdep.rs) in a debug build where lockdep is live.
+# Replay a failing interleaving: NNSCHECK_SEED=0x<seed> make check
+check:
+	cargo test --features check --test check
+	cargo test --features check,mutate-wake-pending --test check
+	cargo test --test lockdep
+
+# `deny(unsafe_code)` is crate-wide (see rust/src/lib.rs); only
+# tensor/buffer.rs and metrics/process.rs carry the audited opt-out.
+# Fail if the opt-out attribute shows up anywhere else.
+unsafe-audit:
+	@bad=$$(grep -rln "allow(unsafe_code)" rust/src \
+		| grep -v "^rust/src/tensor/buffer.rs$$" \
+		| grep -v "^rust/src/metrics/process.rs$$"); \
+	if [ -n "$$bad" ]; then \
+		echo "unsafe-audit: unexpected allow(unsafe_code) in:"; \
+		echo "$$bad"; exit 1; \
+	fi; \
+	echo "unsafe-audit: opt-outs confined to tensor/buffer.rs and metrics/process.rs"

@@ -32,9 +32,11 @@
 //! charged to the NPU domain, not the submitting element's CPU.
 
 use std::collections::{BinaryHeap, HashMap};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{thread, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use once_cell::sync::Lazy;
@@ -276,7 +278,7 @@ impl NpuSim {
         shared.parallelism.store(1, Ordering::Relaxed);
         let thread_stats = stats.clone();
         let thread_shared = shared.clone();
-        std::thread::Builder::new()
+        thread::Builder::new()
             .name("npu-sim".into())
             .spawn(move || service_loop(rx, thread_stats, thread_shared))
             .expect("spawn npu-sim");
@@ -457,7 +459,7 @@ fn service_loop(rx: Receiver<Job>, stats: Arc<NpuStats>, shared: Arc<SharedTimin
     while let Some(f) = heap.pop() {
         let now = Instant::now();
         if f.due > now {
-            std::thread::sleep(f.due - now);
+            thread::sleep(f.due - now);
         }
         fire(f, &stats);
     }
@@ -609,7 +611,7 @@ mod tests {
         let handles: Vec<_> = (0..4)
             .map(|_| {
                 let m = model.clone();
-                std::thread::spawn(move || {
+                thread::spawn(move || {
                     let input = Chunk::from_f32(&vec![0.2f32; n]);
                     NpuSim::global().submit(m, vec![input]).unwrap()
                 })

@@ -78,8 +78,17 @@
 //! # Ok(())
 //! # }
 //! ```
+
+// Non-safe code is confined to two audited modules — `tensor/buffer.rs`
+// (alignment casts) and `metrics/process.rs` (sysconf) — each carrying
+// a module-level opt-out attribute and `// SAFETY:` comments on every
+// site. CI greps that the opt-out appears nowhere else (see Makefile
+// `unsafe-audit`).
+#![deny(unsafe_code)]
+
 pub mod apps;
 pub mod baselines;
+pub mod sync;
 pub mod devices;
 pub mod element;
 pub mod elements;
@@ -93,3 +102,9 @@ pub mod tensor;
 pub mod video;
 
 pub use error::{Error, Fault, Result};
+
+/// The concurrency shim under its design-doc name: `nns_sync::Mutex`
+/// et al. compile to `std::sync` in normal builds and to the nnscheck
+/// controlled scheduler under `--features check` (see DESIGN.md
+/// "Concurrency contracts").
+pub use crate::sync as nns_sync;

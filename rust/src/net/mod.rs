@@ -27,7 +27,9 @@ pub mod registry;
 pub mod transport;
 pub mod wire;
 
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Weak};
+
+use crate::sync::Mutex;
 
 use once_cell::sync::Lazy;
 

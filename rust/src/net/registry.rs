@@ -17,9 +17,11 @@
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::Mutex;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
@@ -53,7 +55,7 @@ impl NetRegistry {
         let local = listener.local_addr()?;
         let state = Arc::new(RegistryState::default());
         let accept_state = Arc::clone(&state);
-        let accept = std::thread::Builder::new()
+        let accept = thread::Builder::new()
             .name("nns-net-registry".into())
             .spawn(move || {
                 let mut conns: Vec<JoinHandle<()>> = Vec::new();
@@ -68,7 +70,7 @@ impl NetRegistry {
                     if let Ok(peer) = stream.try_clone() {
                         lock(&conn_state.peers).push(peer);
                     }
-                    conns.push(std::thread::spawn(move || serve_conn(stream, conn_state)));
+                    conns.push(thread::spawn(move || serve_conn(stream, conn_state)));
                 }
                 for c in conns {
                     let _ = c.join();

@@ -39,10 +39,12 @@
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
-use std::thread::JoinHandle;
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::{Condvar, Mutex};
 
 use crate::error::{Error, Fault, Result};
 use crate::metrics::stats::{
@@ -144,8 +146,18 @@ struct ServeShared {
     peers: Mutex<Vec<TcpStream>>,
 }
 
-/// Per-connection credit window on the serve side.
-struct ServerConn {
+/// Per-connection credit window on the serve side: the wire-protocol
+/// invariant `sent - credited <= capacity` lives here. The writer
+/// consumes one credit per `Buffer` frame ([`take`](CreditWindow::take))
+/// and the reader banks grants ([`grant`](CreditWindow::grant)); a grant
+/// that would lift the balance over the subscriber's advertised capacity
+/// is a protocol violation and is refused, so the caller severs the
+/// connection instead of overrunning the remote queue.
+///
+/// Public (and free of socket types) so `tests/check.rs` can explore
+/// every writer/reader interleaving of the accounting under the model
+/// scheduler.
+pub struct CreditWindow {
     credits: Mutex<u64>,
     cv: Condvar,
     closed: AtomicBool,
@@ -154,15 +166,32 @@ struct ServerConn {
     cap: u64,
 }
 
-impl ServerConn {
-    fn close(&self) {
+impl CreditWindow {
+    /// A window with `initial` banked credits; callers validate
+    /// `initial <= cap` at the handshake before constructing.
+    pub fn new(cap: u64, initial: u64) -> CreditWindow {
+        CreditWindow {
+            credits: Mutex::new(initial.min(cap)),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            cap,
+        }
+    }
+
+    /// End the window: blocked takers return `false`, grants no-op.
+    pub fn close(&self) {
         self.closed.store(true, Ordering::Release);
         self.cv.notify_all();
     }
 
+    /// Currently banked credits.
+    pub fn balance(&self) -> u64 {
+        *lock(&self.credits)
+    }
+
     /// Block until one credit is available (consuming it) or the
     /// connection closed. `false` = closed.
-    fn take_credit(&self) -> bool {
+    pub fn take(&self) -> bool {
         let mut g = lock(&self.credits);
         loop {
             if self.closed.load(Ordering::Acquire) {
@@ -178,6 +207,22 @@ impl ServerConn {
                 .unwrap_or_else(|e| e.into_inner());
             g = g2;
         }
+    }
+
+    /// Bank `n` returned credits and wake the writer. `false` means the
+    /// grant would exceed the advertised capacity — an over-window
+    /// protocol violation; the balance is left untouched and the caller
+    /// must sever the connection.
+    pub fn grant(&self, n: u64) -> bool {
+        let mut g = lock(&self.credits);
+        let balance = g.saturating_add(n);
+        if balance > self.cap {
+            return false;
+        }
+        *g = balance;
+        drop(g);
+        self.cv.notify_all();
+        true
     }
 }
 
@@ -319,7 +364,7 @@ impl TcpTransport {
             .unwrap_or_else(|| local.ip().to_string());
         let advertised = format!("{host}:{}", local.port());
         let shared = Arc::clone(&self.serve);
-        let accept = std::thread::Builder::new()
+        let accept = thread::Builder::new()
             .name("nns-tcp-accept".into())
             .spawn(move || accept_loop(listener, shared))
             .expect("spawn tcp accept thread");
@@ -446,7 +491,7 @@ impl Transport for TcpTransport {
         lock(&self.subs).push(Arc::downgrade(&shared));
         let thread_shared = Arc::clone(&shared);
         let cfg = self.cfg.clone();
-        std::thread::Builder::new()
+        thread::Builder::new()
             .name(format!("nns-tcp-sub-{topic}"))
             .spawn(move || run_client(thread_shared, cfg))
             .expect("spawn tcp subscriber thread");
@@ -484,7 +529,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<ServeShared>) {
             lock(&shared.peers).push(peer);
         }
         let conn_shared = Arc::clone(&shared);
-        let _ = std::thread::Builder::new()
+        let _ = thread::Builder::new()
             .name("nns-tcp-conn".into())
             .spawn(move || serve_conn(conn_shared, stream));
     }
@@ -516,17 +561,12 @@ fn serve_conn(shared: Arc<ServeShared>, mut stream: TcpStream) {
     };
     let topic = shared.topics.topic(&topic_name);
     let ep = topic.subscribe(Some(cap as usize), qos);
-    let conn = Arc::new(ServerConn {
-        credits: Mutex::new(u64::from(credits)),
-        cv: Condvar::new(),
-        closed: AtomicBool::new(false),
-        cap,
-    });
+    let conn = Arc::new(CreditWindow::new(cap, u64::from(credits)));
     shared.conns.inc();
     let reader_conn = Arc::clone(&conn);
     let reader_topic = Arc::clone(&topic);
     let reader_ep = Arc::clone(&ep);
-    let reader = std::thread::Builder::new()
+    let reader = thread::Builder::new()
         .name("nns-tcp-credits".into())
         .spawn(move || server_reader(reader_conn, reader_topic, reader_ep, reader_stream))
         .ok();
@@ -542,7 +582,7 @@ fn serve_conn(shared: Arc<ServeShared>, mut stream: TcpStream) {
 /// close-reason (a `Closed` reason means the subscriber detached — no
 /// terminal frame owed).
 fn server_writer(
-    conn: &ServerConn,
+    conn: &CreditWindow,
     topic: &Arc<TopicInner>,
     ep: &Arc<Endpoint>,
     stream: TcpStream,
@@ -564,7 +604,7 @@ fn server_writer(
     loop {
         match ep.pop_blocking() {
             Some(buf) => {
-                if !conn.take_credit() {
+                if !conn.take() {
                     break;
                 }
                 if !send_caps(&mut w, &mut caps_sent)
@@ -601,7 +641,7 @@ fn server_writer(
 /// unsubscribes the queue so a dead subscriber never wedges the
 /// publisher.
 fn server_reader(
-    conn: Arc<ServerConn>,
+    conn: Arc<CreditWindow>,
     topic: Arc<TopicInner>,
     ep: Arc<Endpoint>,
     mut stream: TcpStream,
@@ -609,15 +649,10 @@ fn server_reader(
     loop {
         match read_msg(&mut stream) {
             Ok(Some(Msg::Credit(n))) => {
-                let mut g = lock(&conn.credits);
-                let balance = g.saturating_add(u64::from(n));
-                if balance > conn.cap {
+                if !conn.grant(u64::from(n)) {
                     // over-window grant: protocol violation, sever
                     break;
                 }
-                *g = balance;
-                drop(g);
-                conn.cv.notify_all();
             }
             // Detach, clean close, corrupt frame, unexpected type: the
             // subscriber is gone (or broken) either way

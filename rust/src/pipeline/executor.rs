@@ -34,11 +34,13 @@
 //! pipelines never starve.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use once_cell::sync::Lazy;
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{thread, Condvar, Mutex, MutexGuard};
 
 use crate::element::{Ctx, Element, Flow, Item};
 use crate::error::{Error, Fault};
@@ -416,7 +418,7 @@ impl Waker {
     pub(crate) fn is_runnable(&self) -> bool {
         match self.task.upgrade() {
             Some(t) => matches!(
-                lock(&t.sched).state,
+                lock(&t.sched).state(),
                 SchedState::Queued | SchedState::Running
             ),
             None => false,
@@ -448,9 +450,10 @@ impl SharedWaker {
     }
 }
 
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-enum SchedState {
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SchedState {
     /// On the run queue (or being handed to a worker).
+    #[default]
     Queued,
     /// A worker is inside this task's step.
     Running,
@@ -460,11 +463,97 @@ enum SchedState {
     Finished,
 }
 
-struct Sched {
+/// What [`SchedCell::on_wake`] decided; the caller owns the side effect.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum WakeVerdict {
+    /// The task was parked and is now `Queued`: the caller must put it
+    /// on the run queue.
+    Enqueue,
+    /// The task is mid-step: the wake was recorded in `wake_pending`
+    /// and step exit will requeue instead of parking.
+    Deferred,
+    /// Queued or finished: the wake is a no-op.
+    Ignored,
+}
+
+/// The park/wake state machine of one task — the protocol kernel behind
+/// [`wake_task`]/`park`. Extracted as a plain (lock-free, caller-locked)
+/// struct so `tests/check.rs` can model-check the exact production code:
+/// the model wraps a `Mutex<SchedCell>` and explores every interleaving
+/// of a parking consumer against a waking producer.
+///
+/// The load-bearing piece is `wake_pending`: a wake that lands while the
+/// task is `Running` cannot enqueue (the task is not parked yet) and
+/// must not be dropped (the park decision was made on state the wake
+/// just invalidated). Deferring it to the park transition is the
+/// lost-wakeup guard; `cargo test --features check,mutate-wake-pending`
+/// compiles the guard out and must produce a counterexample seed.
+#[derive(Debug, Default)]
+pub struct SchedCell {
     state: SchedState,
     /// A wake arrived while the task was mid-step: requeue instead of
     /// parking (the lost-wakeup guard of the state machine).
     wake_pending: bool,
+}
+
+impl SchedCell {
+    pub fn new() -> SchedCell {
+        SchedCell::default()
+    }
+
+    pub fn state(&self) -> SchedState {
+        self.state
+    }
+
+    /// A worker dequeued the task and is entering its step.
+    pub fn set_running(&mut self) {
+        self.state = SchedState::Running;
+    }
+
+    /// A wake from any thread (producer push, inbox drain, external
+    /// waker, timer fire). Returns what the caller must do.
+    pub fn on_wake(&mut self) -> WakeVerdict {
+        match self.state {
+            SchedState::Running => {
+                #[cfg(not(feature = "mutate-wake-pending"))]
+                {
+                    self.wake_pending = true;
+                }
+                WakeVerdict::Deferred
+            }
+            SchedState::Queued | SchedState::Finished => WakeVerdict::Ignored,
+            SchedState::ParkedInput | SchedState::ParkedOutput | SchedState::ParkedExternal => {
+                self.state = SchedState::Queued;
+                WakeVerdict::Enqueue
+            }
+        }
+    }
+
+    /// Transition `Running -> target` park state. Returns `false` when a
+    /// wake arrived mid-step: the cell went back to `Queued` instead and
+    /// the caller must enqueue the task rather than leave it parked.
+    pub fn try_park(&mut self, target: SchedState) -> bool {
+        if self.wake_pending {
+            self.wake_pending = false;
+            self.state = SchedState::Queued;
+            return false;
+        }
+        self.state = target;
+        true
+    }
+
+    /// The step verdict requeues the task directly (also clears a
+    /// pending wake — the requeue satisfies it).
+    pub fn requeued(&mut self) {
+        self.wake_pending = false;
+        self.state = SchedState::Queued;
+    }
+
+    /// Terminal: finished tasks ignore all wakes.
+    pub fn finish(&mut self) {
+        self.state = SchedState::Finished;
+        self.wake_pending = false;
+    }
 }
 
 #[derive(Clone, Copy)]
@@ -509,7 +598,7 @@ pub struct Task {
     /// branch's inbox without bound.
     blocked_on: Mutex<Vec<Arc<Inbox>>>,
     step: Mutex<StepCore>,
-    sched: Mutex<Sched>,
+    sched: Mutex<SchedCell>,
 }
 
 /// Wiring description of one task, assembled by the scheduler.
@@ -653,16 +742,26 @@ const WHEEL_TICK_NS: u64 = 1_000_000;
 /// cost zero workers. There is no dedicated timer thread — idle workers
 /// bound their run-queue condvar wait by the soonest armed deadline and
 /// fire due entries themselves (see [`worker_loop`]).
-struct TimerWheel {
+///
+/// Generic over the entry payload (the executor arms `Weak<Task>`) so
+/// the never-fires-early contract is model-checkable with plain values
+/// and virtual `now` probes in `tests/check.rs`.
+pub struct TimerWheel<T> {
     origin: Instant,
-    slots: Vec<Vec<(Instant, Weak<Task>)>>,
+    slots: Vec<Vec<(Instant, T)>>,
     len: usize,
     /// Cached soonest armed deadline (the condvar wait bound).
     soonest: Option<Instant>,
 }
 
-impl TimerWheel {
-    fn new() -> TimerWheel {
+impl<T> Default for TimerWheel<T> {
+    fn default() -> TimerWheel<T> {
+        TimerWheel::new()
+    }
+}
+
+impl<T> TimerWheel<T> {
+    pub fn new() -> TimerWheel<T> {
         TimerWheel {
             origin: Instant::now(),
             slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
@@ -676,9 +775,22 @@ impl TimerWheel {
         (tick % WHEEL_SLOTS as u64) as usize
     }
 
-    fn arm(&mut self, deadline: Instant, task: Weak<Task>) {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Soonest armed deadline, if any entry is armed.
+    pub fn soonest(&self) -> Option<Instant> {
+        self.soonest
+    }
+
+    pub fn arm(&mut self, deadline: Instant, entry: T) {
         let slot = self.slot_of(deadline);
-        self.slots[slot].push((deadline, task));
+        self.slots[slot].push((deadline, entry));
         self.len += 1;
         if self.soonest.map_or(true, |s| deadline < s) {
             self.soonest = Some(deadline);
@@ -689,7 +801,7 @@ impl TimerWheel {
     /// cached-`soonest` check; firing scans the (mostly empty) slots so
     /// entries armed in the past or left behind by coarse ticks are never
     /// missed.
-    fn take_due(&mut self, now: Instant) -> Vec<Weak<Task>> {
+    pub fn take_due(&mut self, now: Instant) -> Vec<T> {
         match self.soonest {
             Some(s) if s <= now => {}
             _ => return Vec::new(),
@@ -697,17 +809,19 @@ impl TimerWheel {
         let mut due = Vec::new();
         let mut soonest = None;
         for slot in &mut self.slots {
-            slot.retain(|(deadline, task)| {
-                if *deadline <= now {
-                    due.push(task.clone());
-                    false
+            if slot.is_empty() {
+                continue;
+            }
+            for (deadline, entry) in std::mem::take(slot) {
+                if deadline <= now {
+                    due.push(entry);
                 } else {
-                    if soonest.map_or(true, |s| *deadline < s) {
-                        soonest = Some(*deadline);
+                    if soonest.map_or(true, |s| deadline < s) {
+                        soonest = Some(deadline);
                     }
-                    true
+                    slot.push((deadline, entry));
                 }
-            });
+            }
         }
         self.len -= due.len();
         self.soonest = soonest;
@@ -723,7 +837,7 @@ pub(crate) struct ExecutorCore {
     /// Strong registry of unfinished tasks (parked tasks are not
     /// necessarily referenced by the run queue or any inbox).
     live: Mutex<Vec<Arc<Task>>>,
-    timers: Mutex<TimerWheel>,
+    timers: Mutex<TimerWheel<Weak<Task>>>,
     steps_total: AtomicU64,
     wakeups_total: AtomicU64,
     timer_parks_total: AtomicU64,
@@ -757,7 +871,7 @@ impl ExecutorCore {
     }
 
     fn next_timer_due(&self) -> Option<Instant> {
-        lock(&self.timers).soonest
+        lock(&self.timers).soonest()
     }
 
     /// Fire every due timer entry (idle-worker timer service). Wakes run
@@ -781,27 +895,18 @@ impl ExecutorCore {
 
 /// Requeue a task that a wake or a ready verdict made runnable.
 fn requeue(task: &Arc<Task>) {
-    {
-        let mut s = lock(&task.sched);
-        s.wake_pending = false;
-        s.state = SchedState::Queued;
-    }
+    lock(&task.sched).requeued();
     task.core.enqueue(task.clone());
 }
 
 /// Transition `Running -> parked` unless a wake arrived mid-step, in
 /// which case the task is requeued and `false` returned.
 fn park(task: &Arc<Task>, state: SchedState) -> bool {
-    let mut s = lock(&task.sched);
-    if s.wake_pending {
-        s.wake_pending = false;
-        s.state = SchedState::Queued;
-        drop(s);
+    let parked = lock(&task.sched).try_park(state);
+    if !parked {
         task.core.enqueue(task.clone());
-        return false;
     }
-    s.state = state;
-    true
+    parked
 }
 
 /// Make a task runnable from any thread. Safe against every state:
@@ -809,17 +914,11 @@ fn park(task: &Arc<Task>, state: SchedState) -> bool {
 /// ignore it, parked tasks are enqueued. Spurious wakes are harmless (a
 /// step with nothing to do re-parks).
 pub(crate) fn wake_task(task: &Arc<Task>) {
-    let mut s = lock(&task.sched);
-    match s.state {
-        SchedState::Running => s.wake_pending = true,
-        SchedState::Queued | SchedState::Finished => {}
-        SchedState::ParkedInput | SchedState::ParkedOutput | SchedState::ParkedExternal => {
-            s.state = SchedState::Queued;
-            drop(s);
-            task.stats.record_wakeup();
-            task.core.wakeups_total.fetch_add(1, Ordering::Relaxed);
-            task.core.enqueue(task.clone());
-        }
+    let verdict = lock(&task.sched).on_wake();
+    if verdict == WakeVerdict::Enqueue {
+        task.stats.record_wakeup();
+        task.core.wakeups_total.fetch_add(1, Ordering::Relaxed);
+        task.core.enqueue(task.clone());
     }
 }
 
@@ -919,7 +1018,7 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                     }
                     // an in-step stall (the watchdog's runnable-but-
                     // frozen signature) must actually wedge the worker
-                    FaultKind::StallMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
+                    FaultKind::StallMs(ms) => thread::sleep(Duration::from_millis(ms)),
                     FaultKind::Drop => return Outcome::Park(Verdict::Ready),
                 }
             }
@@ -1051,7 +1150,7 @@ fn drive(core: &mut StepCore, stats: &ElementStats) -> Outcome {
                                 }
                             }
                             FaultKind::StallMs(ms) => {
-                                std::thread::sleep(Duration::from_millis(ms));
+                                thread::sleep(Duration::from_millis(ms));
                             }
                             FaultKind::Drop => {
                                 cx.advance_injected_fault();
@@ -1181,11 +1280,7 @@ fn finish_task(task: &Arc<Task>, err: Option<Error>) {
     if let Some(ib) = &task.inbox {
         ib.close();
     }
-    {
-        let mut s = lock(&task.sched);
-        s.state = SchedState::Finished;
-        s.wake_pending = false;
-    }
+    lock(&task.sched).finish();
     task.core.remove_live(task);
     task.run.task_finished(task.index, element, err);
 }
@@ -1301,7 +1396,7 @@ fn worker_loop(core: Arc<ExecutorCore>) {
                 }
             }
         };
-        lock(&task.sched).state = SchedState::Running;
+        lock(&task.sched).set_running();
         // Output gate: a task woken out of park-on-output only steps
         // once every link it parked on drained below capacity; partial
         // wakes re-park on the still-full remainder. This keeps bounded
@@ -1413,7 +1508,7 @@ impl Executor {
         });
         for i in 0..workers {
             let c = core.clone();
-            std::thread::Builder::new()
+            thread::Builder::new()
                 .name(format!("nns-worker-{i}"))
                 .spawn(move || worker_loop(c))
                 .expect("spawn pool worker");
@@ -1505,10 +1600,7 @@ impl Executor {
                     early_eos: false,
                     waiting_external: false,
                 }),
-                sched: Mutex::new(Sched {
-                    state: SchedState::Queued,
-                    wake_pending: false,
-                }),
+                sched: Mutex::new(SchedCell::new()),
             });
             // hand the element a waker for external (appsrc-style) wakes
             if let Some(cx) = lock(&task.step).ctx.as_mut() {
@@ -1629,16 +1721,16 @@ mod tests {
 
     #[test]
     fn timer_wheel_fires_only_due_entries() {
-        let mut w = TimerWheel::new();
+        let mut w: TimerWheel<u32> = TimerWheel::new();
         let now = Instant::now();
         // entries on both sides of `now`, including one already past and
         // one a full wheel round away (same slot, later deadline)
-        w.arm(now - Duration::from_millis(5), Weak::new());
-        w.arm(now + Duration::from_millis(2), Weak::new());
+        w.arm(now - Duration::from_millis(5), 0);
+        w.arm(now + Duration::from_millis(2), 1);
         w.arm(
             now + Duration::from_millis(2)
                 + Duration::from_nanos(WHEEL_SLOTS as u64 * WHEEL_TICK_NS),
-            Weak::new(),
+            2,
         );
         assert_eq!(w.len, 3);
         assert_eq!(w.take_due(now).len(), 1, "only the past entry fires");

@@ -31,8 +31,10 @@
 //! ```
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::{thread, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -390,7 +392,7 @@ pub struct PipelineHub {
     /// supervisor thread.
     sup: Arc<Supervisor>,
     /// The supervisor thread handle (joined on hub drop).
-    sup_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    sup_thread: Mutex<Option<thread::JoinHandle<()>>>,
     /// Discovery registry served by [`serve_registry`]
     /// (PipelineHub::serve_registry); held so it lives (and its port
     /// stays bound) as long as the hub.
@@ -785,7 +787,7 @@ impl PipelineHub {
             g.thread_running = true;
         }
         let sup = self.sup.clone();
-        let handle = std::thread::Builder::new()
+        let handle = thread::Builder::new()
             .name("nns-supervisor".into())
             .spawn(move || sup.run())
             .expect("spawn supervisor thread");
@@ -1264,7 +1266,7 @@ mod tests {
         // stalled — so the watchdog must not fire
         let p = Pipeline::parse("appsrc name=in ! appsink name=out").unwrap();
         hub.launch("idle", p).unwrap();
-        std::thread::sleep(Duration::from_millis(120));
+        thread::sleep(Duration::from_millis(120));
         assert_eq!(hub.running_count(), 1, "idle pipeline still alive");
         hub.request_stop_all();
         for j in hub.join_all() {

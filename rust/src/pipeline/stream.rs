@@ -49,10 +49,12 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{RecvError, RecvTimeoutError, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use once_cell::sync::Lazy;
+
+use crate::sync::{Condvar, Mutex, MutexGuard};
 
 use crate::error::{Error, Fault, Result};
 use crate::metrics::stats::{
@@ -238,6 +240,21 @@ impl EpState {
         let ns = at.elapsed().as_nanos() as u64;
         self.hist[latency_bucket(ns)] += 1;
     }
+
+    /// The conservation identity of one subscriber queue, exact under
+    /// the endpoint mutex: every accepted buffer is still queued, was
+    /// delivered, or became a typed drop. Checked after every locked
+    /// mutation in debug builds — and therefore at every explored
+    /// instant of the `--features check` model suite.
+    fn assert_conserved(&self) {
+        debug_assert_eq!(
+            self.counters.pushed,
+            self.counters.delivered
+                + self.counters.dropped.subscriber_total()
+                + self.queue.len() as u64,
+            "endpoint conservation violated: pushed != delivered + drops + in_flight"
+        );
+    }
 }
 
 /// One bounded buffer queue shared by a producer side and a consumer
@@ -362,6 +379,7 @@ impl Endpoint {
             }
             g.counters.pushed += 1;
             g.queue.push_back((buf, Instant::now()));
+            g.assert_conserved();
             g.consumer_wakers.clone()
         };
         self.wake_consumers(wakers);
@@ -391,6 +409,7 @@ impl Endpoint {
                         // topic lock and cannot be full here; counting a
                         // defensive overflow as leaky keeps conservation.
                         g.counters.dropped.qos_leaky += 1;
+                        g.assert_conserved();
                         return;
                     }
                     Qos::LatestOnly => {
@@ -400,6 +419,7 @@ impl Endpoint {
                 }
             }
             g.queue.push_back((buf, Instant::now()));
+            g.assert_conserved();
             g.consumer_wakers.clone()
         };
         self.wake_consumers(wakers);
@@ -416,6 +436,7 @@ impl Endpoint {
             if g.queue.len() < self.cap {
                 g.counters.pushed += 1;
                 g.queue.push_back((buf, Instant::now()));
+                g.assert_conserved();
                 let wakers = g.consumer_wakers.clone();
                 drop(g);
                 self.wake_consumers(wakers);
@@ -435,6 +456,7 @@ impl Endpoint {
             match g.queue.pop_front() {
                 Some((b, at)) => {
                     g.record_pop(at);
+                    g.assert_conserved();
                     (b, g.producer_wakers.clone())
                 }
                 None => {
@@ -455,6 +477,7 @@ impl Endpoint {
             }
             if let Some((b, at)) = g.queue.pop_front() {
                 g.record_pop(at);
+                g.assert_conserved();
                 let wakers = g.producer_wakers.clone();
                 drop(g);
                 self.wake_producers(wakers);
@@ -477,6 +500,7 @@ impl Endpoint {
             }
             if let Some((b, at)) = g.queue.pop_front() {
                 g.record_pop(at);
+                g.assert_conserved();
                 let wakers = g.producer_wakers.clone();
                 drop(g);
                 self.wake_producers(wakers);
@@ -571,6 +595,7 @@ impl Endpoint {
             g.closed = true;
             g.counters.dropped.closed += g.queue.len() as u64;
             g.queue.clear();
+            g.assert_conserved();
         }
         let counters = g.counters;
         let hist = g.hist;
@@ -793,7 +818,7 @@ impl TopicInner {
     /// so full queues shed), the subscriber's own mode otherwise. The
     /// last subscriber takes the original buffer, the others clones —
     /// chunks are Arc-backed, so clones share payload storage.
-    fn deliver_locked(g: &mut std::sync::MutexGuard<'_, TopicState>, buf: Buffer, qos: Qos) {
+    fn deliver_locked(g: &mut MutexGuard<'_, TopicState>, buf: Buffer, qos: Qos) {
         let n = g.subs.len();
         let mut buf = Some(buf);
         for (i, ep) in g.subs.iter().enumerate() {
@@ -906,6 +931,15 @@ impl TopicInner {
             no_subscriber: g.no_sub_drops,
             ..agg.dropped
         };
+        // Aggregate conservation: summing the per-queue identity over
+        // live and retired queues (each exact under its own lock) and
+        // adding publisher-side no-subscriber discards to both sides.
+        debug_assert_eq!(
+            agg.pushed + g.no_sub_drops,
+            agg.delivered + drops.total() + agg.in_flight,
+            "topic {:?}: aggregate conservation violated",
+            self.name
+        );
         TopicSnapshot {
             name: self.name.clone(),
             publishers: g.open_publishers,

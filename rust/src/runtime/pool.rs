@@ -18,8 +18,10 @@
 //! up sharing the same `Arc<Model>`.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Mutex;
 
 use once_cell::sync::Lazy;
 

@@ -1,0 +1,258 @@
+//! `nnscheck` model-check front end (`--features check` only).
+//!
+//! [`explore`] runs a model closure under the controlled scheduler in
+//! [`super::sched`] many times — first a budget of seeded random walks,
+//! then a bounded-preemption DFS — and turns the first failing
+//! execution into a replayable [`Counterexample`]. The workflow:
+//!
+//! ```text
+//! explore(&Config::default(), model)      # CI: fixed seed budget
+//!   -> Outcome::Fail(cex)                 # cex prints its seed/trace
+//! replay(cex.seed.unwrap(), model)        # exact re-run under a
+//!                                         # debugger / with prints
+//! ```
+//!
+//! One seed determines one exact interleaving, so "attach the seed to
+//! the bug report" is a complete reproduction recipe. The DFS phase
+//! complements the random phase: with a preemption bound of k it
+//! systematically enumerates every schedule that context-switches at
+//! most k times at points where the running thread could have
+//! continued — most real concurrency bugs need only 1–2 forced
+//! preemptions (the bound is the classic CHESS observation), and the
+//! enumeration is deterministic, so CI does not depend on random luck.
+//!
+//! Models must be **closed**: every thread they spawn is spawned through
+//! [`crate::sync::thread`] and every blocking operation goes through the
+//! shim types — a model thread blocking on an uninstrumented primitive
+//! would stall the scheduler (the run would die on the decision budget).
+//! Models also must be **deterministic modulo scheduling**: same
+//! decisions ⇒ same behavior. Do not branch on wall-clock time or
+//! process-global counters inside a model.
+
+use std::fmt;
+use std::panic::AssertUnwindSafe;
+use std::sync::Mutex as StdMutex;
+
+use once_cell::sync::Lazy;
+
+use super::sched::{self, Decision, Failure, Mode, RunReport};
+
+/// Exploration budget. `Default` reads `NNSCHECK_SEED` and
+/// `NNSCHECK_ITERS` so CI can pin the budget without code changes.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Base seed for the random-walk phase; iteration `i` runs the
+    /// derived seed `base + i` (each is independently replayable).
+    pub seed: u64,
+    /// Number of random-walk executions.
+    pub iters: usize,
+    /// Per-execution decision budget (livelock/runaway guard).
+    pub max_decisions: usize,
+    /// Preemption bound for the DFS phase; `None` skips the phase.
+    pub preemption_bound: Option<usize>,
+    /// Ceiling on DFS executions (the bounded tree can still be large).
+    pub dfs_max_runs: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        let seed = std::env::var("NNSCHECK_SEED")
+            .ok()
+            .and_then(|v| parse_u64(&v))
+            .unwrap_or(0x5EED_0000_0001);
+        let iters = std::env::var("NNSCHECK_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(256);
+        Config {
+            seed,
+            iters,
+            max_decisions: 50_000,
+            preemption_bound: Some(2),
+            dfs_max_runs: 2_000,
+        }
+    }
+}
+
+fn parse_u64(v: &str) -> Option<u64> {
+    if let Some(hex) = v.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse().ok()
+    }
+}
+
+/// A failing execution, with everything needed to reproduce it.
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    /// Seed of the failing random walk (None when found by DFS).
+    pub seed: Option<u64>,
+    /// Full decision trace of the failing execution — replayable via
+    /// [`replay_trace`] regardless of how it was found.
+    pub trace: Vec<u32>,
+    pub failure: Failure,
+}
+
+impl fmt::Display for Counterexample {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "nnscheck counterexample: {}", self.failure.message)?;
+        match self.seed {
+            Some(s) => writeln!(
+                f,
+                "  replay: seed {s:#x} (NNSCHECK_SEED={s:#x}, or check::replay({s:#x}, model))"
+            )?,
+            None => writeln!(f, "  found by bounded-preemption DFS")?,
+        }
+        write!(f, "  trace ({} decisions): [", self.trace.len())?;
+        for (i, d) in self.trace.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Result of an [`explore`] run.
+#[derive(Debug)]
+pub enum Outcome {
+    /// Every explored execution satisfied the model's assertions.
+    Pass {
+        /// Executions explored (random + DFS).
+        runs: usize,
+    },
+    Fail(Box<Counterexample>),
+}
+
+impl Outcome {
+    pub fn is_pass(&self) -> bool {
+        matches!(self, Outcome::Pass { .. })
+    }
+
+    pub fn counterexample(&self) -> Option<&Counterexample> {
+        match self {
+            Outcome::Pass { .. } => None,
+            Outcome::Fail(cex) => Some(cex),
+        }
+    }
+}
+
+/// Model executions are process-global (the shim consults thread-locals
+/// of real OS threads): serialize them so `cargo test`'s parallel test
+/// threads cannot interleave two models.
+static MODEL_GATE: Lazy<StdMutex<()>> = Lazy::new(|| StdMutex::new(()));
+
+fn run_once<F: Fn()>(mode: Mode, max_decisions: usize, f: &F) -> RunReport {
+    sched::run_model(mode, max_decisions, AssertUnwindSafe(|| f()))
+}
+
+fn picks(trace: &[Decision]) -> Vec<u32> {
+    trace.iter().map(|d| d.picked).collect()
+}
+
+fn preemptions_before(trace: &[Decision], upto: usize) -> usize {
+    trace[..upto]
+        .iter()
+        .filter(|d| d.current_was_runnable && d.picked != 0)
+        .count()
+}
+
+/// Explore interleavings of `f` under the configured budget. Returns
+/// the first failure as a replayable counterexample (also printed to
+/// stderr so a failing CI log carries the seed).
+pub fn explore<F: Fn()>(cfg: &Config, f: F) -> Outcome {
+    let _gate = MODEL_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let mut runs = 0usize;
+
+    // Phase 1: seeded random walks.
+    for i in 0..cfg.iters {
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let report = run_once(Mode::Random(seed), cfg.max_decisions, &f);
+        runs += 1;
+        if let Some(failure) = report.failure {
+            let cex = Counterexample {
+                seed: Some(seed),
+                trace: picks(&report.trace),
+                failure,
+            };
+            eprintln!("{cex}");
+            return Outcome::Fail(Box::new(cex));
+        }
+    }
+
+    // Phase 2: bounded-preemption DFS. Prefixes force decisions; beyond
+    // a prefix the scheduler keeps the current thread running (choice
+    // 0), so the baseline is the preemption-free execution and each
+    // backtrack introduces exactly one more forced switch.
+    if let Some(bound) = cfg.preemption_bound {
+        let mut prefix: Vec<u32> = Vec::new();
+        for _ in 0..cfg.dfs_max_runs {
+            let report = run_once(
+                Mode::Replay(prefix.clone()),
+                cfg.max_decisions,
+                &f,
+            );
+            runs += 1;
+            if let Some(failure) = report.failure {
+                let cex = Counterexample {
+                    seed: None,
+                    trace: picks(&report.trace),
+                    failure,
+                };
+                eprintln!("{cex}");
+                return Outcome::Fail(Box::new(cex));
+            }
+            // Backtrack: deepest decision with an untried sibling that
+            // stays within the preemption bound.
+            let trace = report.trace;
+            let mut next: Option<Vec<u32>> = None;
+            let mut i = trace.len();
+            while i > 0 {
+                i -= 1;
+                let d = trace[i];
+                let base = preemptions_before(&trace, i);
+                let mut c = d.picked + 1;
+                while c < d.options {
+                    let cost = usize::from(d.current_was_runnable && c != 0);
+                    if base + cost <= bound {
+                        let mut p = picks(&trace[..i]);
+                        p.push(c);
+                        next = Some(p);
+                        break;
+                    }
+                    c += 1;
+                }
+                if next.is_some() {
+                    break;
+                }
+            }
+            match next {
+                Some(p) => prefix = p,
+                None => break, // bounded tree exhausted
+            }
+        }
+    }
+
+    Outcome::Pass { runs }
+}
+
+/// Re-run `f` under the exact interleaving of `seed`. Returns the
+/// failure if it reproduces (assertion panics inside the model are
+/// captured, not propagated — inspect the return value).
+pub fn replay<F: Fn()>(seed: u64, f: F) -> Option<Failure> {
+    let _gate = MODEL_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    run_once(Mode::Random(seed), Config::default().max_decisions, &f).failure
+}
+
+/// Re-run `f` forcing a recorded decision trace (counterexamples from
+/// the DFS phase, or traces shared from another machine).
+pub fn replay_trace<F: Fn()>(trace: &[u32], f: F) -> Option<Failure> {
+    let _gate = MODEL_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    run_once(
+        Mode::Replay(trace.to_vec()),
+        Config::default().max_decisions,
+        &f,
+    )
+    .failure
+}

@@ -1,0 +1,352 @@
+//! Lock-order analysis (the `nnscheck` analysis layer, part 2 of 3).
+//!
+//! Every [`super::Mutex`] / [`super::RwLock`] construction site is a
+//! lock *class* identified by a stable [`SiteId`] (`file:line:column`).
+//! Each thread keeps a stack of the classes it currently holds; when it
+//! acquires class `B` while the top of its stack is class `A`, the
+//! directed edge `A -> B` enters a process-global order graph. A cycle
+//! in that graph is a potential deadlock: two code paths that take the
+//! same classes in opposite orders (the classic AB/BA inversion) — even
+//! if this particular run never interleaved them fatally. The closing
+//! edge is detected the moment it is inserted and reported with both
+//! sites plus the path that completes the cycle.
+//!
+//! Design points, in the order they matter:
+//!
+//! * **Record, never panic.** A report is appended (and printed once to
+//!   stderr) but execution continues — an analysis layer must not turn
+//!   a latent hazard into a deterministic crash in the middle of the
+//!   ordinary test suite. Tests assert on [`global_cycles`] /
+//!   [`global_is_acyclic`] explicitly.
+//! * **Classes, not instances.** Two *different* topic locks acquired
+//!   in both orders by disjoint call paths still report: a discipline
+//!   stated per class ("hub map before topic state") is what reviewers
+//!   and the DESIGN.md contracts actually promise. Intentional
+//!   same-class nesting would need a lock-level annotation; the crate
+//!   has none today, so a self-edge also reports.
+//! * **Condvar waits release.** A wait pops the guard's class for its
+//!   duration (the lock really is released) and re-records it on wake.
+//!   If other classes are still held across the wait, that is recorded
+//!   as a [`WaitReport`] — waiting while holding an unrelated lock is
+//!   the shape of every convoy/missed-wakeup bug, but it is legitimate
+//!   in bounded-timeout form (the executor's `pop_timeout` under the
+//!   step lock), so wait reports are diagnostics, not failures.
+//! * **Debug builds only.** The callers in `super` compile these hooks
+//!   under `cfg(debug_assertions)`; release binaries carry zero
+//!   lockdep state. `NNS_LOCKDEP=0` disables at runtime.
+//!
+//! The AB/BA fixture test (`tests/lockdep.rs`) uses
+//! [`with_isolated_graph`] so its deliberate inversion lands in a
+//! thread-local graph instead of polluting the process-global one that
+//! the clean-suite acyclicity assertion reads.
+
+// Release builds compile the hooks but never call them (the shim gates
+// its calls on `cfg(debug_assertions)`); silence the resulting
+// dead-code analysis only there, so debug builds still flag real rot.
+#![cfg_attr(not(debug_assertions), allow(dead_code))]
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::panic::Location;
+use std::rc::Rc;
+use std::sync::Mutex as StdMutex;
+
+use once_cell::sync::Lazy;
+
+/// Stable identity of a lock class: the `#[track_caller]` construction
+/// site of the `Mutex`/`RwLock`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SiteId {
+    pub file: &'static str,
+    pub line: u32,
+    pub column: u32,
+}
+
+impl SiteId {
+    pub fn of(loc: &'static Location<'static>) -> SiteId {
+        SiteId {
+            file: loc.file(),
+            line: loc.line(),
+            column: loc.column(),
+        }
+    }
+}
+
+impl fmt::Display for SiteId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}", self.file, self.line, self.column)
+    }
+}
+
+/// One detected lock-order cycle: inserting `from -> to` closed a loop.
+/// `path` walks the pre-existing edges from `to` back to `from`, so the
+/// full inversion reads `from -> to -> ... -> from`.
+#[derive(Debug, Clone)]
+pub struct CycleReport {
+    pub from: SiteId,
+    pub to: SiteId,
+    pub path: Vec<SiteId>,
+}
+
+impl fmt::Display for CycleReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "lock-order cycle: {} -> {} closes [",
+            self.from, self.to
+        )?;
+        for (i, s) in self.path.iter().enumerate() {
+            if i > 0 {
+                write!(f, " -> ")?;
+            }
+            write!(f, "{s}")?;
+        }
+        write!(f, " -> {}]", self.from)
+    }
+}
+
+/// A condvar wait that happened while other lock classes were held.
+#[derive(Debug, Clone)]
+pub struct WaitReport {
+    /// Class of the mutex the wait released.
+    pub waited_at: SiteId,
+    /// Classes still held across the wait (innermost last).
+    pub held: Vec<SiteId>,
+}
+
+#[derive(Default)]
+struct Graph {
+    edges: HashMap<SiteId, HashSet<SiteId>>,
+    cycles: Vec<CycleReport>,
+    waits: Vec<WaitReport>,
+    /// Dedup for wait reports: (waited_at, innermost held).
+    wait_seen: HashSet<(SiteId, SiteId)>,
+}
+
+impl Graph {
+    /// Insert `from -> to`; on first insertion, check whether the new
+    /// edge closes a cycle and record a report if so.
+    fn add_edge(&mut self, from: SiteId, to: SiteId) {
+        if from == to {
+            // Same-class nesting: two instances of one class held at
+            // once. Report once per class.
+            if self.edges.entry(from).or_default().insert(to) {
+                let report = CycleReport {
+                    from,
+                    to,
+                    path: vec![to],
+                };
+                eprintln!("nnscheck lockdep: {report}");
+                self.cycles.push(report);
+            }
+            return;
+        }
+        if !self.edges.entry(from).or_default().insert(to) {
+            return; // already known
+        }
+        if let Some(path) = self.find_path(to, from) {
+            let report = CycleReport { from, to, path };
+            eprintln!("nnscheck lockdep: {report}");
+            self.cycles.push(report);
+        }
+    }
+
+    /// DFS path from `start` to `goal` over recorded edges (excluding
+    /// the just-inserted closing edge is unnecessary: a `to ->* from`
+    /// path plus `from -> to` is the cycle we want to show).
+    fn find_path(&self, start: SiteId, goal: SiteId) -> Option<Vec<SiteId>> {
+        let mut stack = vec![start];
+        let mut parent: HashMap<SiteId, SiteId> = HashMap::new();
+        let mut seen: HashSet<SiteId> = HashSet::new();
+        seen.insert(start);
+        while let Some(node) = stack.pop() {
+            if node == goal {
+                // Reconstruct start -> ... -> goal, then drop the goal
+                // (the caller appends `from` itself when printing).
+                let mut path = vec![node];
+                let mut cur = node;
+                while let Some(&p) = parent.get(&cur) {
+                    path.push(p);
+                    cur = p;
+                }
+                path.reverse();
+                path.pop();
+                return Some(path);
+            }
+            if let Some(next) = self.edges.get(&node) {
+                for &n in next {
+                    if seen.insert(n) {
+                        parent.insert(n, node);
+                        stack.push(n);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn record_wait(&mut self, waited_at: SiteId, held: &[SiteId]) {
+        let innermost = match held.last() {
+            Some(&s) => s,
+            None => return,
+        };
+        if self.wait_seen.insert((waited_at, innermost)) {
+            self.waits.push(WaitReport {
+                waited_at,
+                held: held.to_vec(),
+            });
+        }
+    }
+}
+
+static GLOBAL: Lazy<StdMutex<Graph>> = Lazy::new(|| StdMutex::new(Graph::default()));
+
+static ENABLED: Lazy<bool> =
+    Lazy::new(|| std::env::var("NNS_LOCKDEP").map_or(true, |v| v != "0"));
+
+thread_local! {
+    /// Lock classes this thread currently holds, outermost first.
+    static HELD: RefCell<Vec<SiteId>> = const { RefCell::new(Vec::new()) };
+    /// Fixture override: edges from this thread go to an isolated graph.
+    static ISOLATED: RefCell<Option<Rc<RefCell<Graph>>>> = const { RefCell::new(None) };
+}
+
+/// True when lock-order analysis is active (debug build, not disabled).
+pub fn enabled() -> bool {
+    *ENABLED
+}
+
+fn with_graph<R>(f: impl FnOnce(&mut Graph) -> R) -> R {
+    let isolated = ISOLATED.with(|g| g.borrow().clone());
+    match isolated {
+        Some(g) => f(&mut g.borrow_mut()),
+        None => f(&mut GLOBAL.lock().unwrap_or_else(|e| e.into_inner())),
+    }
+}
+
+/// Hook: `site`'s class is being acquired by this thread.
+pub(super) fn on_acquire(loc: &'static Location<'static>) {
+    if !enabled() {
+        return;
+    }
+    let site = SiteId::of(loc);
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(&top) = held.last() {
+            with_graph(|g| g.add_edge(top, site));
+        }
+        held.push(site);
+    });
+}
+
+/// Hook: a guard of `site`'s class was dropped by this thread.
+pub(super) fn on_release(loc: &'static Location<'static>) {
+    if !enabled() {
+        return;
+    }
+    let site = SiteId::of(loc);
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        // Guards may drop out of LIFO order; remove the innermost match.
+        if let Some(pos) = held.iter().rposition(|&s| s == site) {
+            held.remove(pos);
+        }
+    });
+}
+
+/// Hook: a condvar wait is releasing `site`'s class for its duration.
+/// Records a wait-while-holding diagnostic if other classes remain held.
+pub(super) fn on_wait(loc: &'static Location<'static>) {
+    if !enabled() {
+        return;
+    }
+    let site = SiteId::of(loc);
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&s| s == site) {
+            held.remove(pos);
+        }
+        if !held.is_empty() {
+            let snapshot: Vec<SiteId> = held.clone();
+            with_graph(|g| g.record_wait(site, &snapshot));
+        }
+    });
+}
+
+/// All lock-order cycles recorded in the process-global graph so far.
+pub fn global_cycles() -> Vec<CycleReport> {
+    GLOBAL
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .cycles
+        .clone()
+}
+
+/// All wait-while-holding diagnostics recorded globally so far.
+pub fn global_wait_reports() -> Vec<WaitReport> {
+    GLOBAL
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .waits
+        .clone()
+}
+
+/// True when the process-global order graph contains no cycle. Every
+/// edge insertion checks for cycles eagerly, so this is equivalent to
+/// `global_cycles().is_empty()`; recomputing keeps the assertion honest
+/// against future incremental-check bugs.
+pub fn global_is_acyclic() -> bool {
+    let g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    if !g.cycles.is_empty() {
+        return false;
+    }
+    // Kahn-style check over the recorded edges.
+    let mut indeg: HashMap<SiteId, usize> = HashMap::new();
+    for (from, tos) in &g.edges {
+        indeg.entry(*from).or_insert(0);
+        for to in tos {
+            *indeg.entry(*to).or_insert(0) += 1;
+        }
+    }
+    let mut queue: Vec<SiteId> = indeg
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&s, _)| s)
+        .collect();
+    let mut visited = 0usize;
+    let total = indeg.len();
+    while let Some(node) = queue.pop() {
+        visited += 1;
+        if let Some(next) = g.edges.get(&node) {
+            for n in next {
+                let d = indeg.get_mut(n).expect("edge target in indegree map");
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(*n);
+                }
+            }
+        }
+    }
+    visited == total
+}
+
+/// Number of distinct edges in the process-global order graph (test
+/// instrumentation: proves the analysis actually observed the suite).
+pub fn global_edge_count() -> usize {
+    let g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    g.edges.values().map(HashSet::len).sum()
+}
+
+/// Run `f` with this thread's lock-order edges recorded into a fresh
+/// isolated graph instead of the process-global one, and return the
+/// cycles and wait reports it produced. This is how the deliberate
+/// AB/BA fixture is tested without contaminating the global graph.
+pub fn with_isolated_graph<R>(f: impl FnOnce() -> R) -> (R, Vec<CycleReport>, Vec<WaitReport>) {
+    let graph = Rc::new(RefCell::new(Graph::default()));
+    ISOLATED.with(|g| *g.borrow_mut() = Some(graph.clone()));
+    let out = f();
+    ISOLATED.with(|g| *g.borrow_mut() = None);
+    let g = graph.borrow();
+    (out, g.cycles.clone(), g.waits.clone())
+}

@@ -1,0 +1,725 @@
+//! `nns_sync` — the crate-wide synchronization shim (the `nnscheck`
+//! analysis layer, part 1 of 3; see also [`lockdep`] and [`check`]).
+//!
+//! Every lock, condvar, atomic, and thread spawn in the concurrency core
+//! (`pipeline/executor.rs`, `pipeline/stream.rs`, `pipeline/hub.rs`,
+//! `net/transport.rs`, `devices/npu.rs`, `tensor/pool.rs`,
+//! `runtime/pool.rs`, `net/mod.rs`, `net/registry.rs`) goes through this
+//! module instead of `std::sync`. In a plain build the types below are
+//! `#[inline]` delegations to their `std` counterparts — no extra state
+//! is consulted on any acquire or release, so release-mode behavior and
+//! performance are those of `std::sync`. The shim earns its keep in two
+//! instrumented configurations:
+//!
+//! * **debug builds** (`cfg(debug_assertions)`) run the lock-order
+//!   analysis in [`lockdep`]: every `Mutex`/`RwLock` construction site
+//!   becomes a stable lock *class* (`file:line:column`, captured with
+//!   `#[track_caller]`), every acquisition made while another shim lock
+//!   is held records a directed order edge, and any cycle — an AB/BA
+//!   inversion — is reported with both sites the moment the closing
+//!   edge appears. On by default in every debug build, not just under
+//!   `check`; disable with `NNS_LOCKDEP=0`.
+//!
+//! * **`--features check`** additionally compiles the controlled
+//!   scheduler in [`sched`]: inside a [`check::explore`] /
+//!   [`check::replay`] model, every acquire/release/wait/notify/spawn
+//!   becomes a decision point of a deterministic seeded scheduler that
+//!   serializes the model's threads and explores their interleavings
+//!   (seeded random walks plus bounded-preemption DFS), replaying any
+//!   failure from its seed. Outside a model the shim still passes
+//!   straight through, so the ordinary suite runs unchanged with the
+//!   feature enabled.
+//!
+//! The API mirrors `std::sync` closely enough that migration is an
+//! import swap: `lock()` returns `LockResult` (reusing
+//! `std::sync::PoisonError`, so the crate's poison-tolerant
+//! `unwrap_or_else(|e| e.into_inner())` idiom keeps working), condvars
+//! rewrap guards, and `thread::Builder` mirrors `std::thread::Builder`.
+//! The one deliberate difference: [`WaitTimeoutResult`] is our own type
+//! (std's has no public constructor, and the model scheduler must be
+//! able to synthesize timeouts).
+
+pub mod lockdep;
+
+#[cfg(feature = "check")]
+pub mod sched;
+
+#[cfg(feature = "check")]
+pub mod check;
+
+use std::fmt;
+use std::panic::Location;
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, RwLock as StdRwLock};
+use std::sync::{LockResult, PoisonError};
+use std::time::Duration;
+
+/// Internal: unique object id for model-scheduler bookkeeping. Always
+/// assigned (a plain counter bump at construction) so `Mutex::new` has
+/// one shape in every build; only the model scheduler reads it.
+#[cfg(feature = "check")]
+#[inline]
+fn next_object_id() -> u64 {
+    sched::next_object_id()
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// Drop-in `std::sync::Mutex` with a stable lock-class identity.
+///
+/// The construction site (captured via `#[track_caller]`) is the lock's
+/// *class* for lock-order analysis: all instances born at one line form
+/// one class, which is exactly the granularity lock-ordering disciplines
+/// are stated at ("the topic lock before any endpoint lock").
+pub struct Mutex<T> {
+    site: &'static Location<'static>,
+    #[cfg(feature = "check")]
+    model_id: u64,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    #[track_caller]
+    pub fn new(value: T) -> Mutex<T> {
+        Mutex {
+            site: Location::caller(),
+            #[cfg(feature = "check")]
+            model_id: next_object_id(),
+            inner: StdMutex::new(value),
+        }
+    }
+
+    /// The construction site — the lock's class for order analysis.
+    pub fn site(&self) -> &'static Location<'static> {
+        self.site
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        lockdep::on_acquire(self.site);
+        #[cfg(feature = "check")]
+        if sched::in_model() {
+            sched::yield_point();
+            sched::lock_acquire(self.model_id);
+            // The model owner released the real lock before ceding
+            // ownership, so this never blocks.
+            let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return Ok(MutexGuard {
+                lock: self,
+                inner: Some(g),
+            });
+        }
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard {
+                lock: self,
+                inner: Some(g),
+            }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                lock: self,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").field("inner", &self.inner).finish()
+    }
+}
+
+/// Guard for [`Mutex`]. Releases in the right order on drop: the real
+/// guard first, then model ownership, then the lockdep held-stack entry.
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    /// `None` once the real guard has been handed off (condvar wait) —
+    /// the drop logic then has nothing left to release.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<'a, T> std::ops::Deref for MutexGuard<'a, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<'a, T> std::ops::DerefMut for MutexGuard<'a, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+impl<'a, T: fmt::Debug> fmt::Debug for MutexGuard<'a, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<'a, T> Drop for MutexGuard<'a, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.inner.take() {
+            drop(g);
+            #[cfg(feature = "check")]
+            if sched::in_model() {
+                sched::lock_release(self.lock.model_id);
+            }
+            #[cfg(debug_assertions)]
+            lockdep::on_release(self.lock.site);
+            #[cfg(all(not(debug_assertions), not(feature = "check")))]
+            let _ = self.lock;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Result of a [`Condvar::wait_timeout`]. Our own type rather than
+/// `std::sync::WaitTimeoutResult` because the model scheduler has to be
+/// able to construct one when it decides a timed wait "times out".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// Drop-in `std::sync::Condvar`. Waits release and re-acquire the
+/// guard's lock through the same instrumentation as [`Mutex::lock`], so
+/// the lockdep held-stack stays truthful across the wait and the model
+/// scheduler sees wait/notify as decision points.
+pub struct Condvar {
+    site: &'static Location<'static>,
+    #[cfg(feature = "check")]
+    model_id: u64,
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    #[track_caller]
+    pub fn new() -> Condvar {
+        Condvar {
+            site: Location::caller(),
+            #[cfg(feature = "check")]
+            model_id: next_object_id(),
+            inner: StdCondvar::new(),
+        }
+    }
+
+    /// The construction site of this condvar (reporting only).
+    pub fn site(&self) -> &'static Location<'static> {
+        self.site
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let mx = guard.lock;
+        #[cfg(debug_assertions)]
+        lockdep::on_wait(mx.site);
+        #[cfg(feature = "check")]
+        if sched::in_model() {
+            drop(guard.inner.take());
+            drop(guard);
+            sched::condvar_wait(self.model_id, mx.model_id, false);
+            #[cfg(debug_assertions)]
+            lockdep::on_acquire(mx.site);
+            let g = mx.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return Ok(MutexGuard {
+                lock: mx,
+                inner: Some(g),
+            });
+        }
+        let inner = guard.inner.take().expect("guard already released");
+        drop(guard);
+        let res = self.inner.wait(inner);
+        #[cfg(debug_assertions)]
+        lockdep::on_acquire(mx.site);
+        match res {
+            Ok(g) => Ok(MutexGuard {
+                lock: mx,
+                inner: Some(g),
+            }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                lock: mx,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let mx = guard.lock;
+        #[cfg(debug_assertions)]
+        lockdep::on_wait(mx.site);
+        #[cfg(feature = "check")]
+        if sched::in_model() {
+            let _ = dur; // virtual time: the scheduler decides timeouts
+            drop(guard.inner.take());
+            drop(guard);
+            let timed_out = sched::condvar_wait(self.model_id, mx.model_id, true);
+            #[cfg(debug_assertions)]
+            lockdep::on_acquire(mx.site);
+            let g = mx.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return Ok((
+                MutexGuard {
+                    lock: mx,
+                    inner: Some(g),
+                },
+                WaitTimeoutResult { timed_out },
+            ));
+        }
+        let inner = guard.inner.take().expect("guard already released");
+        drop(guard);
+        let res = self.inner.wait_timeout(inner, dur);
+        #[cfg(debug_assertions)]
+        lockdep::on_acquire(mx.site);
+        match res {
+            Ok((g, t)) => Ok((
+                MutexGuard {
+                    lock: mx,
+                    inner: Some(g),
+                },
+                WaitTimeoutResult {
+                    timed_out: t.timed_out(),
+                },
+            )),
+            Err(p) => {
+                let (g, t) = p.into_inner();
+                Err(PoisonError::new((
+                    MutexGuard {
+                        lock: mx,
+                        inner: Some(g),
+                    },
+                    WaitTimeoutResult {
+                        timed_out: t.timed_out(),
+                    },
+                )))
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        #[cfg(feature = "check")]
+        if sched::in_model() {
+            sched::condvar_notify(self.model_id, false);
+            return;
+        }
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        #[cfg(feature = "check")]
+        if sched::in_model() {
+            sched::condvar_notify(self.model_id, true);
+            return;
+        }
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RwLock
+// ---------------------------------------------------------------------------
+
+/// Drop-in `std::sync::RwLock` with a lock-class identity.
+///
+/// Under the model scheduler both `read` and `write` are treated as
+/// exclusive acquisitions of one resource — a sound over-approximation
+/// for deadlock/lost-wakeup checking (it removes reader-reader overlap,
+/// which can hide interleavings but never invents a blocked-forever
+/// state the real lock permits, as long as models do not rely on two
+/// readers being inside the lock simultaneously).
+pub struct RwLock<T> {
+    site: &'static Location<'static>,
+    #[cfg(feature = "check")]
+    model_id: u64,
+    inner: StdRwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    #[track_caller]
+    pub fn new(value: T) -> RwLock<T> {
+        RwLock {
+            site: Location::caller(),
+            #[cfg(feature = "check")]
+            model_id: next_object_id(),
+            inner: StdRwLock::new(value),
+        }
+    }
+
+    /// The construction site — the lock's class for order analysis.
+    pub fn site(&self) -> &'static Location<'static> {
+        self.site
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        lockdep::on_acquire(self.site);
+        #[cfg(feature = "check")]
+        if sched::in_model() {
+            sched::yield_point();
+            sched::lock_acquire(self.model_id);
+            let g = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+            return Ok(RwLockReadGuard {
+                lock: self,
+                inner: Some(g),
+            });
+        }
+        match self.inner.read() {
+            Ok(g) => Ok(RwLockReadGuard {
+                lock: self,
+                inner: Some(g),
+            }),
+            Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                lock: self,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        lockdep::on_acquire(self.site);
+        #[cfg(feature = "check")]
+        if sched::in_model() {
+            sched::yield_point();
+            sched::lock_acquire(self.model_id);
+            let g = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+            return Ok(RwLockWriteGuard {
+                lock: self,
+                inner: Some(g),
+            });
+        }
+        match self.inner.write() {
+            Ok(g) => Ok(RwLockWriteGuard {
+                lock: self,
+                inner: Some(g),
+            }),
+            Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                lock: self,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> RwLock<T> {
+        RwLock::new(T::default())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RwLock").field("inner", &self.inner).finish()
+    }
+}
+
+macro_rules! rw_guard {
+    ($name:ident, $std:ident) => {
+        pub struct $name<'a, T> {
+            lock: &'a RwLock<T>,
+            inner: Option<std::sync::$std<'a, T>>,
+        }
+
+        impl<'a, T> std::ops::Deref for $name<'a, T> {
+            type Target = T;
+
+            fn deref(&self) -> &T {
+                self.inner.as_ref().expect("guard already released")
+            }
+        }
+
+        impl<'a, T> Drop for $name<'a, T> {
+            fn drop(&mut self) {
+                if let Some(g) = self.inner.take() {
+                    drop(g);
+                    #[cfg(feature = "check")]
+                    if sched::in_model() {
+                        sched::lock_release(self.lock.model_id);
+                    }
+                    #[cfg(debug_assertions)]
+                    lockdep::on_release(self.lock.site);
+                    #[cfg(all(not(debug_assertions), not(feature = "check")))]
+                    let _ = self.lock;
+                }
+            }
+        }
+    };
+}
+
+rw_guard!(RwLockReadGuard, RwLockReadGuard);
+rw_guard!(RwLockWriteGuard, RwLockWriteGuard);
+
+impl<'a, T> std::ops::DerefMut for RwLockWriteGuard<'a, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+/// Shimmed atomics. Pass-through delegation in every build; under the
+/// model scheduler each operation is additionally a scheduling decision
+/// point, so flag/counter races (e.g. a `closed` flag checked against a
+/// condvar protocol) are explored like lock operations.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! atomic_int {
+        ($name:ident, $std:ident, $prim:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name {
+                inner: std::sync::atomic::$std,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> $name {
+                    $name {
+                        inner: std::sync::atomic::$std::new(v),
+                    }
+                }
+
+                #[inline]
+                fn touch(&self) {
+                    #[cfg(feature = "check")]
+                    if super::sched::in_model() {
+                        super::sched::yield_point();
+                    }
+                }
+
+                #[inline]
+                pub fn load(&self, order: Ordering) -> $prim {
+                    self.touch();
+                    self.inner.load(order)
+                }
+
+                #[inline]
+                pub fn store(&self, v: $prim, order: Ordering) {
+                    self.touch();
+                    self.inner.store(v, order)
+                }
+
+                #[inline]
+                pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                    self.touch();
+                    self.inner.swap(v, order)
+                }
+
+                #[inline]
+                pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                    self.touch();
+                    self.inner.fetch_add(v, order)
+                }
+
+                #[inline]
+                pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                    self.touch();
+                    self.inner.fetch_sub(v, order)
+                }
+
+                #[inline]
+                pub fn fetch_max(&self, v: $prim, order: Ordering) -> $prim {
+                    self.touch();
+                    self.inner.fetch_max(v, order)
+                }
+
+                #[inline]
+                pub fn fetch_min(&self, v: $prim, order: Ordering) -> $prim {
+                    self.touch();
+                    self.inner.fetch_min(v, order)
+                }
+            }
+        };
+    }
+
+    atomic_int!(AtomicU64, AtomicU64, u64);
+    atomic_int!(AtomicUsize, AtomicUsize, usize);
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        inner: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> AtomicBool {
+            AtomicBool {
+                inner: std::sync::atomic::AtomicBool::new(v),
+            }
+        }
+
+        #[inline]
+        fn touch(&self) {
+            #[cfg(feature = "check")]
+            if super::sched::in_model() {
+                super::sched::yield_point();
+            }
+        }
+
+        #[inline]
+        pub fn load(&self, order: Ordering) -> bool {
+            self.touch();
+            self.inner.load(order)
+        }
+
+        #[inline]
+        pub fn store(&self, v: bool, order: Ordering) {
+            self.touch();
+            self.inner.store(v, order)
+        }
+
+        #[inline]
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            self.touch();
+            self.inner.swap(v, order)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Shimmed thread API. Outside a model this is `std::thread`; inside a
+/// model, spawns register the child with the controlled scheduler (it
+/// runs only when scheduled), `sleep` is a pure yield (model time is
+/// virtual), and `join` is a blocking scheduling operation.
+pub mod thread {
+    use std::time::Duration;
+
+    enum Imp<T> {
+        Std(std::thread::JoinHandle<T>),
+        #[cfg(feature = "check")]
+        Model {
+            tid: usize,
+            inner: std::thread::JoinHandle<std::thread::Result<T>>,
+        },
+    }
+
+    /// Join handle mirroring `std::thread::JoinHandle`.
+    pub struct JoinHandle<T> {
+        imp: Imp<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.imp {
+                Imp::Std(h) => h.join(),
+                #[cfg(feature = "check")]
+                Imp::Model { tid, inner } => {
+                    super::sched::join_model(tid);
+                    match inner.join() {
+                        Ok(r) => r,
+                        Err(e) => Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        #[cfg(feature = "check")]
+        if super::sched::in_model() {
+            let (tid, inner) = super::sched::spawn_model(f, None);
+            return JoinHandle {
+                imp: Imp::Model { tid, inner },
+            };
+        }
+        JoinHandle {
+            imp: Imp::Std(std::thread::spawn(f)),
+        }
+    }
+
+    /// Mirror of `std::thread::Builder` (name only — that is all the
+    /// crate uses).
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        #[allow(clippy::new_without_default)]
+        pub fn new() -> Builder {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Builder {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            #[cfg(feature = "check")]
+            if super::sched::in_model() {
+                let (tid, inner) = super::sched::spawn_model(f, self.name);
+                return Ok(JoinHandle {
+                    imp: Imp::Model { tid, inner },
+                });
+            }
+            let mut b = std::thread::Builder::new();
+            if let Some(n) = self.name {
+                b = b.name(n);
+            }
+            Ok(JoinHandle {
+                imp: Imp::Std(b.spawn(f)?),
+            })
+        }
+    }
+
+    pub fn sleep(dur: Duration) {
+        #[cfg(feature = "check")]
+        if super::sched::in_model() {
+            // Model time is virtual: a sleep provides no ordering, only
+            // a scheduling decision point.
+            super::sched::yield_point();
+            return;
+        }
+        std::thread::sleep(dur)
+    }
+
+    pub fn yield_now() {
+        #[cfg(feature = "check")]
+        if super::sched::in_model() {
+            super::sched::yield_point();
+            return;
+        }
+        std::thread::yield_now()
+    }
+}

@@ -1,0 +1,620 @@
+//! Controlled scheduler for model checking (the `nnscheck` analysis
+//! layer, part 3 of 3; compiled only under `--features check`).
+//!
+//! Inside a model (entered via [`super::check::explore`] /
+//! [`super::check::replay`]) the shim routes every lock acquire,
+//! release, condvar wait/notify, atomic access, and thread spawn/join
+//! here. The model's threads are real OS threads, but exactly one is
+//! *current* at any instant: every other thread is blocked on the
+//! scheduler's condvar waiting for its turn. At each **decision point**
+//! (a shim operation) the current thread hands control to the scheduler,
+//! which picks the next runnable thread:
+//!
+//! * **Random mode** — a SplitMix64 walk from a seed. One seed ⇒ one
+//!   exact interleaving, so a failing seed is a complete reproduction
+//!   recipe (loom/shuttle's key property).
+//! * **Replay mode** — a forced decision prefix (from a recorded trace
+//!   or a DFS frontier); beyond the prefix, decision 0 is taken, which
+//!   by construction means "keep running the current thread" — i.e. the
+//!   continuation is preemption-free. Bounded-preemption DFS in
+//!   `check.rs` enumerates prefixes over this mode.
+//!
+//! What the scheduler understands:
+//!
+//! * **Mutexes** — ownership flags keyed by object id. A blocked
+//!   acquirer is descheduled without touching the real lock (the real
+//!   `std` lock is only taken once model ownership is won, when it is
+//!   guaranteed free — the previous owner drops the real guard before
+//!   ceding ownership), so the harness itself can never deadlock on a
+//!   real primitive.
+//! * **Condvars** — wait atomically releases the paired model mutex and
+//!   blocks; notify makes one/all waiters runnable (the "one" is itself
+//!   a recorded decision). A *timed* wait may be woken by the scheduler
+//!   with a synthesized timeout, but only when nothing else can run —
+//!   timeouts exist in these protocols as belt-and-braces recovery, and
+//!   scheduling them eagerly would mask lost-wakeup bugs behind their
+//!   own safety net.
+//! * **Threads** — spawned threads run only when scheduled; join blocks
+//!   until the target finishes. The model ends when every registered
+//!   thread has finished.
+//!
+//! **Failure detection.** If no thread is runnable, none can time out,
+//! and not all are finished — that is a deadlock (a lost wakeup is
+//! precisely a deadlock in a model whose producer has no more wakes to
+//! send). The failure, with a description of who is blocked on what, is
+//! recorded and every thread is unwound via a sentinel panic
+//! ([`CheckAbort`]) caught by the spawn wrappers. A panic inside model
+//! code (an assertion about an invariant) is captured the same way. A
+//! decision budget catches livelocks. The first failure wins; the
+//! explore loop in `check.rs` turns it into a replayable counterexample.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+/// Sentinel panic payload used to unwind model threads after a failure
+/// has been recorded. Spawn wrappers catch it and exit quietly.
+pub(crate) struct CheckAbort;
+
+static OBJECT_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// Unique id for every shim lock/condvar instance (model bookkeeping).
+pub(crate) fn next_object_id() -> u64 {
+    OBJECT_IDS.fetch_add(1, Ordering::Relaxed)
+}
+
+/// How the scheduler resolves decision points.
+#[derive(Debug, Clone)]
+pub enum Mode {
+    /// Seeded SplitMix64 random walk.
+    Random(u64),
+    /// Forced decision prefix; choice 0 ("stay on the current thread")
+    /// beyond it.
+    Replay(Vec<u32>),
+}
+
+/// One recorded scheduling decision (the unit of traces and of the
+/// bounded-preemption DFS frontier).
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    /// Number of options that were available.
+    pub options: u32,
+    /// Index picked (into the option order described below).
+    pub picked: u32,
+    /// The previously-current thread was among the options (so any
+    /// `picked != 0` was a preemption).
+    pub current_was_runnable: bool,
+}
+
+/// Why a model execution failed.
+#[derive(Debug, Clone)]
+pub enum FailureKind {
+    Deadlock,
+    Panic,
+    StepBudget,
+}
+
+#[derive(Debug, Clone)]
+pub struct Failure {
+    pub kind: FailureKind,
+    pub message: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Run {
+    Runnable,
+    BlockedLock(u64),
+    BlockedCv { cv: u64, timed: bool },
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct ThreadState {
+    run: Run,
+    /// Set when a condvar wake came from a notify (vs a synthesized
+    /// timeout) — read back by `condvar_wait`.
+    woke_by_notify: bool,
+    #[allow(dead_code)]
+    name: Option<String>,
+}
+
+struct State {
+    threads: Vec<ThreadState>,
+    current: usize,
+    /// Model-level mutex ownership, keyed by object id.
+    owners: HashMap<u64, usize>,
+    mode: Mode,
+    /// Position in the Replay prefix / decisions consumed so far.
+    cursor: usize,
+    trace: Vec<Decision>,
+    max_decisions: usize,
+    failure: Option<Failure>,
+    live: usize,
+}
+
+/// Shared scheduler handle for one model execution.
+pub(crate) struct Ctl {
+    m: StdMutex<State>,
+    cv: StdCondvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Ctl>, usize)>> = const { RefCell::new(None) };
+}
+
+/// True when the calling thread belongs to an active model.
+#[inline]
+pub(crate) fn in_model() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+fn current_model() -> Option<(Arc<Ctl>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+fn set_current(v: Option<(Arc<Ctl>, usize)>) {
+    CURRENT.with(|c| *c.borrow_mut() = v);
+}
+
+fn splitmix64(s: &mut u64) -> u64 {
+    *s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *s;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Ctl {
+    fn new(mode: Mode, max_decisions: usize) -> Arc<Ctl> {
+        Arc::new(Ctl {
+            m: StdMutex::new(State {
+                threads: Vec::new(),
+                current: 0,
+                owners: HashMap::new(),
+                mode,
+                cursor: 0,
+                trace: Vec::new(),
+                max_decisions,
+                failure: None,
+                live: 0,
+            }),
+            cv: StdCondvar::new(),
+        })
+    }
+
+    fn lock_state(&self) -> StdMutexGuard<'_, State> {
+        self.m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Resolve one decision among `options.len()` choices.
+    fn decide(&self, st: &mut State, options: u32, current_was_runnable: bool) -> u32 {
+        let cursor = st.cursor;
+        let picked = match st.mode {
+            Mode::Random(ref mut s) => (splitmix64(s) % options as u64) as u32,
+            Mode::Replay(ref forced) => {
+                let c = forced.get(cursor).copied().unwrap_or(0);
+                c.min(options - 1)
+            }
+        };
+        st.cursor += 1;
+        st.trace.push(Decision {
+            options,
+            picked,
+            current_was_runnable,
+        });
+        picked
+    }
+
+    /// Pick the next thread to run. `prev` is the thread that held the
+    /// token (it may be runnable — a voluntary yield — or blocked or
+    /// finished). Sets `st.current`; on dead ends records a failure.
+    fn advance(&self, st: &mut State) {
+        if st.failure.is_some() {
+            return;
+        }
+        if st.trace.len() >= st.max_decisions {
+            self.fail(
+                st,
+                FailureKind::StepBudget,
+                format!(
+                    "no verdict within the decision budget ({}) — livelock or runaway model",
+                    st.max_decisions
+                ),
+            );
+            return;
+        }
+        let prev = st.current;
+        let mut runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.run == Run::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        let current_was_runnable = runnable.contains(&prev);
+        if current_was_runnable {
+            // Option order: current-first, so choice 0 is always "no
+            // preemption" (the DFS baseline) and any other choice is a
+            // preemption.
+            runnable.retain(|&t| t != prev);
+            runnable.insert(0, prev);
+        }
+        if runnable.is_empty() {
+            // Nothing runnable: synthesize a timeout if a timed waiter
+            // exists, otherwise this is a terminal state.
+            let timed: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| matches!(t.run, Run::BlockedCv { timed: true, .. }))
+                .map(|(i, _)| i)
+                .collect();
+            if !timed.is_empty() {
+                let pick = self.decide(st, timed.len() as u32, false) as usize;
+                let tid = timed[pick];
+                st.threads[tid].run = Run::Runnable;
+                st.threads[tid].woke_by_notify = false;
+                st.current = tid;
+                return;
+            }
+            if st.threads.iter().all(|t| t.run == Run::Finished) {
+                st.current = usize::MAX; // model complete
+                return;
+            }
+            let who: Vec<String> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.run != Run::Finished)
+                .map(|(i, t)| format!("t{i} {:?}", t.run))
+                .collect();
+            self.fail(
+                st,
+                FailureKind::Deadlock,
+                format!("deadlock: no runnable thread [{}]", who.join(", ")),
+            );
+            return;
+        }
+        let pick = self.decide(st, runnable.len() as u32, current_was_runnable) as usize;
+        st.current = runnable[pick];
+    }
+
+    fn fail(&self, st: &mut State, kind: FailureKind, message: String) {
+        if st.failure.is_none() {
+            st.failure = Some(Failure { kind, message });
+        }
+        st.current = usize::MAX;
+    }
+
+    /// Block until it is `me`'s turn. Panics with [`CheckAbort`] if the
+    /// model failed in the meantime.
+    fn wait_turn<'a>(&'a self, mut st: StdMutexGuard<'a, State>, me: usize) -> StdMutexGuard<'a, State> {
+        loop {
+            if st.failure.is_some() {
+                drop(st);
+                std::panic::panic_any(CheckAbort);
+            }
+            if st.current == me {
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-panicking variant for thread startup: `Err(())` on abort.
+    fn wait_turn_soft<'a>(
+        &'a self,
+        mut st: StdMutexGuard<'a, State>,
+        me: usize,
+    ) -> Result<StdMutexGuard<'a, State>, ()> {
+        loop {
+            if st.failure.is_some() {
+                return Err(());
+            }
+            if st.current == me {
+                return Ok(st);
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Decision point: reschedule with the calling thread still runnable.
+pub(crate) fn yield_point() {
+    let Some((ctl, me)) = current_model() else {
+        return;
+    };
+    let mut st = ctl.lock_state();
+    if st.failure.is_some() {
+        drop(st);
+        std::panic::panic_any(CheckAbort);
+    }
+    ctl.advance(&mut st);
+    ctl.cv.notify_all();
+    let st = ctl.wait_turn(st, me);
+    drop(st);
+}
+
+/// Acquire model ownership of mutex `id`, blocking (in model terms)
+/// while another thread owns it. The caller takes the real lock only
+/// after this returns.
+pub(crate) fn lock_acquire(id: u64) {
+    let Some((ctl, me)) = current_model() else {
+        return;
+    };
+    let mut st = ctl.lock_state();
+    loop {
+        if st.failure.is_some() {
+            drop(st);
+            std::panic::panic_any(CheckAbort);
+        }
+        if !st.owners.contains_key(&id) {
+            st.owners.insert(id, me);
+            return;
+        }
+        st.threads[me].run = Run::BlockedLock(id);
+        ctl.advance(&mut st);
+        ctl.cv.notify_all();
+        st = ctl.wait_turn(st, me);
+    }
+}
+
+/// Release model ownership of mutex `id` and wake its waiters. Called
+/// from guard drops — which also run during abort unwinding, so this
+/// must never panic: after a failure it only releases and returns.
+pub(crate) fn lock_release(id: u64) {
+    let Some((ctl, me)) = current_model() else {
+        return;
+    };
+    let mut st = ctl.lock_state();
+    st.owners.remove(&id);
+    for t in st.threads.iter_mut() {
+        if t.run == Run::BlockedLock(id) {
+            t.run = Run::Runnable;
+        }
+    }
+    if st.failure.is_some() {
+        ctl.cv.notify_all();
+        return;
+    }
+    // The release is itself a decision point (release-then-reacquire
+    // races are a classic interleaving family).
+    ctl.advance(&mut st);
+    ctl.cv.notify_all();
+    let st = ctl.wait_turn(st, me);
+    drop(st);
+}
+
+/// Atomically release mutex `mx`, wait on condvar `cv`, then re-acquire
+/// `mx`. Returns true when the wake was a synthesized timeout.
+pub(crate) fn condvar_wait(cv: u64, mx: u64, timed: bool) -> bool {
+    let Some((ctl, me)) = current_model() else {
+        return false;
+    };
+    {
+        let mut st = ctl.lock_state();
+        if st.failure.is_some() {
+            drop(st);
+            std::panic::panic_any(CheckAbort);
+        }
+        st.owners.remove(&mx);
+        for t in st.threads.iter_mut() {
+            if t.run == Run::BlockedLock(mx) {
+                t.run = Run::Runnable;
+            }
+        }
+        st.threads[me].run = Run::BlockedCv { cv, timed };
+        st.threads[me].woke_by_notify = false;
+        ctl.advance(&mut st);
+        ctl.cv.notify_all();
+        let st = ctl.wait_turn(st, me);
+        drop(st);
+    }
+    let timed_out = {
+        let st = ctl.lock_state();
+        !st.threads[me].woke_by_notify
+    };
+    lock_acquire(mx);
+    timed_out
+}
+
+/// Notify one/all waiters of condvar `cv`. Choosing *which* single
+/// waiter wakes is a recorded decision.
+pub(crate) fn condvar_notify(cv: u64, all: bool) {
+    let Some((ctl, me)) = current_model() else {
+        return;
+    };
+    let mut st = ctl.lock_state();
+    if st.failure.is_some() {
+        drop(st);
+        std::panic::panic_any(CheckAbort);
+    }
+    let waiters: Vec<usize> = st
+        .threads
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| matches!(t.run, Run::BlockedCv { cv: c, .. } if c == cv))
+        .map(|(i, _)| i)
+        .collect();
+    if !waiters.is_empty() {
+        if all {
+            for &w in &waiters {
+                st.threads[w].run = Run::Runnable;
+                st.threads[w].woke_by_notify = true;
+            }
+        } else {
+            let pick = ctl.decide(&mut st, waiters.len() as u32, false) as usize;
+            let w = waiters[pick];
+            st.threads[w].run = Run::Runnable;
+            st.threads[w].woke_by_notify = true;
+        }
+    }
+    ctl.advance(&mut st);
+    ctl.cv.notify_all();
+    let st = ctl.wait_turn(st, me);
+    drop(st);
+}
+
+/// Spawn a model thread. The child registers with the scheduler, waits
+/// for its first turn, runs `f` under `catch_unwind`, and reports
+/// panics (other than [`CheckAbort`]) as model failures.
+pub(crate) fn spawn_model<F, T>(
+    f: F,
+    name: Option<String>,
+) -> (usize, std::thread::JoinHandle<std::thread::Result<T>>)
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (ctl, _me) = current_model().expect("spawn_model outside a model");
+    let tid = {
+        let mut st = ctl.lock_state();
+        st.threads.push(ThreadState {
+            run: Run::Runnable,
+            woke_by_notify: false,
+            name: name.clone(),
+        });
+        st.live += 1;
+        st.threads.len() - 1
+    };
+    let ctl_child = ctl.clone();
+    let handle = std::thread::Builder::new()
+        .name(name.unwrap_or_else(|| format!("nnscheck-{tid}")))
+        .spawn(move || {
+            set_current(Some((ctl_child.clone(), tid)));
+            let first = {
+                let st = ctl_child.lock_state();
+                ctl_child.wait_turn_soft(st, tid)
+            };
+            let result: std::thread::Result<T> = match first {
+                Err(()) => Err(Box::new(CheckAbort) as Box<dyn std::any::Any + Send>),
+                Ok(st) => {
+                    drop(st);
+                    match catch_unwind(AssertUnwindSafe(f)) {
+                        Ok(v) => Ok(v),
+                        Err(payload) => {
+                            if !payload.is::<CheckAbort>() {
+                                let msg = panic_message(&payload);
+                                let mut st = ctl_child.lock_state();
+                                ctl_child.fail(&mut st, FailureKind::Panic, msg);
+                                ctl_child.cv.notify_all();
+                            }
+                            Err(payload)
+                        }
+                    }
+                }
+            };
+            finish_thread(&ctl_child, tid);
+            set_current(None);
+            result
+        })
+        .expect("spawn model thread");
+    // Registering the child is a decision point for the parent: the
+    // child may run before the parent's next instruction, or not.
+    yield_point();
+    (tid, handle)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked".to_string()
+    }
+}
+
+/// Mark `tid` finished, wake its joiners, and hand the token onward.
+/// The exiting thread does not wait for a turn again.
+fn finish_thread(ctl: &Arc<Ctl>, tid: usize) {
+    let mut st = ctl.lock_state();
+    st.threads[tid].run = Run::Finished;
+    st.live = st.live.saturating_sub(1);
+    for t in st.threads.iter_mut() {
+        if t.run == Run::BlockedJoin(tid) {
+            t.run = Run::Runnable;
+        }
+    }
+    if st.failure.is_none() && st.current == tid {
+        ctl.advance(&mut st);
+    }
+    ctl.cv.notify_all();
+}
+
+/// Block (in model terms) until thread `tid` finishes.
+pub(crate) fn join_model(target: usize) {
+    let Some((ctl, me)) = current_model() else {
+        return;
+    };
+    let mut st = ctl.lock_state();
+    if st.failure.is_some() {
+        drop(st);
+        std::panic::panic_any(CheckAbort);
+    }
+    if st.threads[target].run == Run::Finished {
+        drop(st);
+        yield_point();
+        return;
+    }
+    st.threads[me].run = Run::BlockedJoin(target);
+    ctl.advance(&mut st);
+    ctl.cv.notify_all();
+    let st = ctl.wait_turn(st, me);
+    drop(st);
+}
+
+/// Outcome of one controlled execution.
+pub struct RunReport {
+    pub failure: Option<Failure>,
+    pub trace: Vec<Decision>,
+}
+
+/// Run `f` as the root thread (tid 0) of a fresh model and drive it to
+/// completion. Must not be called from inside another model; callers
+/// (`check::explore`) serialize executions process-wide.
+pub(crate) fn run_model<F>(mode: Mode, max_decisions: usize, f: F) -> RunReport
+where
+    F: FnOnce() + std::panic::UnwindSafe,
+{
+    assert!(
+        !in_model(),
+        "nested nnscheck models are not supported (explore inside explore)"
+    );
+    let ctl = Ctl::new(mode, max_decisions);
+    {
+        let mut st = ctl.lock_state();
+        st.threads.push(ThreadState {
+            run: Run::Runnable,
+            woke_by_notify: false,
+            name: Some("root".to_string()),
+        });
+        st.live += 1;
+        st.current = 0;
+    }
+    set_current(Some((ctl.clone(), 0)));
+    let result = catch_unwind(f);
+    if let Err(payload) = result {
+        if !payload.is::<CheckAbort>() {
+            let msg = panic_message(&*payload);
+            let mut st = ctl.lock_state();
+            ctl.fail(&mut st, FailureKind::Panic, msg);
+            ctl.cv.notify_all();
+        }
+    }
+    finish_thread(&ctl, 0);
+    set_current(None);
+    // Drain: keep the scheduler alive until every model thread exits
+    // (threads a failing model never joined included — a failure set
+    // above unwinds them at their next decision point).
+    let mut st = ctl.lock_state();
+    while st.live > 0 {
+        st = ctl.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+    RunReport {
+        failure: st.failure.clone(),
+        trace: st.trace.clone(),
+    }
+}

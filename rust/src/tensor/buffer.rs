@@ -15,6 +15,11 @@
 //! for the paper's perf-based "memory access" row in Table III and for
 //! `benches/e6_memory.rs`.
 
+// One of the two audited exceptions to the crate-root
+// `#![deny(unsafe_code)]`: byte-level views over f32 storage (raw-slice
+// casts and `align_to`). Every site carries a `// SAFETY:` comment.
+#![allow(unsafe_code)]
+
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
@@ -194,6 +199,9 @@ impl Chunk {
     /// practice; we verify instead of assuming.
     pub fn as_f32(&self) -> Result<&[f32]> {
         traffic::count_read(self.len());
+        // SAFETY: `align_to` itself is safe to call for any target type
+        // without invalid bit patterns (f32 accepts all); the unaligned
+        // pre/post remainders are rejected below rather than assumed empty.
         let (pre, body, post) = unsafe { self.0 .0.as_bytes().align_to::<f32>() };
         if !pre.is_empty() || !post.is_empty() {
             return Err(Error::Runtime("chunk not f32-aligned/sized".into()));
@@ -237,6 +245,8 @@ impl Chunk {
     /// verification as [`as_f32`](Chunk::as_f32)).
     pub fn make_mut_f32(&mut self) -> Result<&mut [f32]> {
         let bytes = self.make_mut();
+        // SAFETY: as in `as_f32` — f32 has no invalid bit patterns and the
+        // pre/post remainders are rejected, not assumed empty.
         let (pre, body, post) = unsafe { bytes.align_to_mut::<f32>() };
         if !pre.is_empty() || !post.is_empty() {
             return Err(Error::Runtime("chunk not f32-aligned/sized".into()));

@@ -23,8 +23,8 @@
 //! retention budget so an occasional large frame cannot pin memory
 //! forever, and a global enable switch for A/B measurement.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::Mutex;
 
 use once_cell::sync::Lazy;
 

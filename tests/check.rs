@@ -1,0 +1,432 @@
+//! nnscheck model suite (`--features check`; run via `make check`).
+//!
+//! Each test here is a *micro-model*: a closed concurrent protocol built
+//! from the same production types the streaming core runs on (the
+//! executor's [`SchedCell`] park/wake cell, the topic registry, the
+//! transport's [`CreditWindow`], the executor's [`TimerWheel`]),
+//! explored under the controlled scheduler in `nnstreamer::sync::check`.
+//! A failing test prints a replayable counterexample (seed or decision
+//! trace) — rerun with `NNSCHECK_SEED=<seed>` or feed the seed to
+//! `check::replay` to step through the exact interleaving.
+//!
+//! The wake-gate model doubles as a **mutation test**: building with
+//! `--features check,mutate-wake-pending` compiles out the lost-wakeup
+//! guard in `SchedCell::on_wake`, and the suite then *requires* the
+//! checker to produce a counterexample within the same budget — proof
+//! that the exploration actually reaches the buggy interleaving rather
+//! than passing vacuously.
+
+use std::sync::Arc;
+use std::sync::mpsc::TryRecvError;
+use std::time::{Duration, Instant};
+
+use nnstreamer::error::Fault;
+use nnstreamer::net::transport::CreditWindow;
+use nnstreamer::pipeline::executor::{SchedCell, SchedState, TimerWheel, WakeVerdict};
+use nnstreamer::pipeline::stream::InProcTransport;
+use nnstreamer::pipeline::{Qos, StreamEnd, StreamRegistry, Transport};
+use nnstreamer::sync::check::{self, Config, Outcome};
+use nnstreamer::sync::thread;
+use nnstreamer::sync::{Condvar, Mutex};
+use nnstreamer::tensor::Buffer;
+
+// ---------------------------------------------------------------------------
+// Model 1: the executor's park/wake protocol never loses a wakeup
+// ---------------------------------------------------------------------------
+
+/// The exact state machine `pipeline/executor.rs` runs per task, reduced
+/// to one worker and one producer: the worker steps the "task" (drains
+/// an inbox) and parks when the inbox is empty; the producer pushes
+/// items and wakes the task. The hazard is the window between the
+/// worker's last empty-inbox observation and its park: a wake landing
+/// there sees state `Running` and must be latched (`wake_pending`) so
+/// the park converts into a requeue — otherwise the item sits in the
+/// inbox with the task parked forever, which the checker reports as a
+/// deadlock.
+struct WakeRig {
+    sched: Mutex<SchedCell>,
+    /// Run-queue stand-in: tokens for "the task is queued".
+    queue: Mutex<u32>,
+    queued: Condvar,
+    inbox: Mutex<Vec<u32>>,
+}
+
+impl WakeRig {
+    fn new() -> WakeRig {
+        WakeRig {
+            sched: Mutex::new(SchedCell::new()),
+            // The task starts queued (SchedCell::default is Queued).
+            queue: Mutex::new(1),
+            queued: Condvar::new(),
+            inbox: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+const WAKE_ITEMS: u32 = 2;
+
+fn wake_worker(rig: Arc<WakeRig>) {
+    let mut consumed = 0;
+    while consumed < WAKE_ITEMS {
+        {
+            let mut q = rig.queue.lock().unwrap();
+            while *q == 0 {
+                q = rig.queued.wait(q).unwrap();
+            }
+            *q -= 1;
+        }
+        rig.sched.lock().unwrap().set_running();
+        loop {
+            let item = rig.inbox.lock().unwrap().pop();
+            match item {
+                Some(_) => consumed += 1,
+                None => {
+                    let parked = rig
+                        .sched
+                        .lock()
+                        .unwrap()
+                        .try_park(SchedState::ParkedInput);
+                    if !parked {
+                        // A wake arrived mid-step: requeue instead.
+                        *rig.queue.lock().unwrap() += 1;
+                        rig.queued.notify_one();
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn wake_producer(rig: Arc<WakeRig>) {
+    for i in 0..WAKE_ITEMS {
+        rig.inbox.lock().unwrap().push(i);
+        let verdict = rig.sched.lock().unwrap().on_wake();
+        if verdict == WakeVerdict::Enqueue {
+            *rig.queue.lock().unwrap() += 1;
+            rig.queued.notify_one();
+        }
+    }
+}
+
+fn wake_gate_model() {
+    let rig = Arc::new(WakeRig::new());
+    let w = {
+        let rig = rig.clone();
+        thread::spawn(move || wake_worker(rig))
+    };
+    let p = {
+        let rig = rig.clone();
+        thread::spawn(move || wake_producer(rig))
+    };
+    p.join().unwrap();
+    w.join().unwrap();
+}
+
+/// With the guard intact, no interleaving loses a wakeup.
+#[cfg(not(feature = "mutate-wake-pending"))]
+#[test]
+fn wake_gate_never_loses_a_wakeup() {
+    let outcome = check::explore(&Config::default(), wake_gate_model);
+    if let Some(cex) = outcome.counterexample() {
+        panic!("park/wake protocol lost a wakeup:\n{cex}");
+    }
+}
+
+/// Mutation kill: with `wake_pending` compiled out, the checker must
+/// find the lost wakeup within the same budget *and* the counterexample
+/// must replay — a seed or trace that does not reproduce is worthless
+/// as a bug report.
+#[cfg(feature = "mutate-wake-pending")]
+#[test]
+fn wake_gate_mutation_is_caught() {
+    let outcome = check::explore(&Config::default(), wake_gate_model);
+    let cex = outcome
+        .counterexample()
+        .expect("mutated guard must yield a counterexample within budget")
+        .clone();
+    let reproduced = match cex.seed {
+        Some(seed) => check::replay(seed, wake_gate_model),
+        None => check::replay_trace(&cex.trace, wake_gate_model),
+    };
+    assert!(
+        reproduced.is_some(),
+        "counterexample did not reproduce on replay:\n{cex}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: topic conservation across QoS modes
+// ---------------------------------------------------------------------------
+
+/// `pushed == delivered + dropped + in_flight` on a topic with all
+/// three subscriber QoS modes attached at once. The identity is also
+/// `debug_assert!`ed inside `stream.rs` after every locked mutation, so
+/// any interleaving that breaks it mid-stream panics right at the
+/// faulty transition, not just at the final snapshot.
+fn conservation_model() {
+    let reg = StreamRegistry::new();
+    let blocking = reg.subscribe_with("conserve", 2, Qos::Blocking);
+    let leaky = reg.subscribe_with("conserve", 1, Qos::Leaky);
+    let latest = reg.subscribe_with("conserve", 1, Qos::LatestOnly);
+    let publisher = reg.publish("conserve");
+
+    let p = thread::spawn(move || {
+        let mut publisher = publisher;
+        for i in 0..3u64 {
+            // Blocks while the blocking subscriber's queue is full —
+            // the leaky/latest-only queues shed instead.
+            publisher.push(Buffer::from_f32(i, &[i as f32, 0.5])).unwrap();
+        }
+        publisher.end();
+    });
+    let c = thread::spawn(move || {
+        let mut got = 0u64;
+        while blocking.recv().is_ok() {
+            got += 1;
+        }
+        assert_eq!(got, 3, "blocking QoS is lossless");
+    });
+    p.join().unwrap();
+    c.join().unwrap();
+
+    // The never-popped subscribers fold their counters into the topic
+    // on detach; the snapshot re-checks the aggregate identity under
+    // the topic lock (another in-crate debug_assert).
+    drop(leaky);
+    drop(latest);
+    let snaps = reg.snapshot();
+    let s = &snaps[0];
+    assert_eq!(
+        s.pushed,
+        s.delivered + s.dropped + s.in_flight,
+        "topic conservation violated in final snapshot: {s:?}"
+    );
+}
+
+#[test]
+fn topic_conservation_holds_across_qos_modes() {
+    let cfg = Config {
+        // The topic model has a larger per-run decision count; trim the
+        // DFS tail so the suite stays inside the CI budget.
+        dfs_max_runs: 300,
+        ..Config::default()
+    };
+    let outcome = check::explore(&cfg, conservation_model);
+    if let Some(cex) = outcome.counterexample() {
+        panic!("topic conservation violated:\n{cex}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 3: credit window accounting
+// ---------------------------------------------------------------------------
+
+/// The transport's flow-control wire invariant, `sent − credited ≤
+/// capacity`, modeled socket-free: a writer `take()`s until the window
+/// closes, a reader grants credits back and closes. In every
+/// interleaving the writer can send at most `initial + granted` frames,
+/// the balance never exceeds the capacity, and an over-window grant is
+/// refused without disturbing the balance.
+fn credit_model() {
+    let win = Arc::new(CreditWindow::new(4, 2));
+    let writer = {
+        let win = win.clone();
+        thread::spawn(move || {
+            let mut sent = 0u64;
+            while win.take() {
+                sent += 1;
+                assert!(win.balance() <= 4, "balance above capacity");
+            }
+            sent
+        })
+    };
+    let reader = {
+        let win = win.clone();
+        thread::spawn(move || {
+            for _ in 0..3 {
+                assert!(win.grant(1), "in-window grant refused");
+                assert!(win.balance() <= 4, "balance above capacity");
+            }
+            // A grant that would overflow the window is a protocol
+            // violation: refused, balance untouched (cap is 4, so +100
+            // can never fit no matter the interleaving).
+            assert!(!win.grant(100), "over-window grant accepted");
+            win.close();
+        })
+    };
+    reader.join().unwrap();
+    let sent = writer.join().unwrap();
+    assert!(
+        sent <= 2 + 3,
+        "writer sent {sent} frames on 2 initial + 3 granted credits"
+    );
+}
+
+#[test]
+fn credit_window_never_exceeds_capacity() {
+    let outcome = check::explore(&Config::default(), credit_model);
+    if let Some(cex) = outcome.counterexample() {
+        panic!("credit accounting violated:\n{cex}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 4: the timer wheel never fires early
+// ---------------------------------------------------------------------------
+
+/// Deterministic virtual-time probe of the executor's `TimerWheel` (no
+/// sleeping, no scheduler needed): entries must never be returned
+/// before their deadline, must all fire once due — including deadlines
+/// that alias the same slot after the wheel wraps — and `soonest()`
+/// must track the earliest armed deadline exactly.
+#[test]
+fn timer_wheel_never_fires_early() {
+    let base = Instant::now();
+    let mut w: TimerWheel<u32> = TimerWheel::new();
+
+    w.arm(base + Duration::from_millis(10), 1);
+    w.arm(base + Duration::from_millis(20), 2);
+    // 1ms ticks × 256 slots: +266ms wraps onto the +10ms slot.
+    w.arm(base + Duration::from_millis(266), 3);
+    assert_eq!(w.soonest(), Some(base + Duration::from_millis(10)));
+
+    assert!(
+        w.take_due(base + Duration::from_millis(9)).is_empty(),
+        "fired before any deadline"
+    );
+    let due = w.take_due(base + Duration::from_millis(10));
+    assert_eq!(due, vec![1], "exactly the 10ms entry is due, got {due:?}");
+    assert_eq!(w.soonest(), Some(base + Duration::from_millis(20)));
+
+    // The wrapped entry shares the 10ms slot but is not due yet.
+    let due = w.take_due(base + Duration::from_millis(25));
+    assert_eq!(due, vec![2], "slot-aliased entry fired 241ms early");
+    assert_eq!(w.len(), 1);
+
+    assert!(w.take_due(base + Duration::from_millis(265)).is_empty());
+    assert_eq!(w.take_due(base + Duration::from_millis(266)), vec![3]);
+    assert!(w.is_empty());
+    assert_eq!(w.soonest(), None);
+
+    // Entries armed in the past fire on the next probe, never silently
+    // linger.
+    w.arm(base, 4);
+    assert_eq!(w.take_due(base + Duration::from_millis(1)), vec![4]);
+}
+
+// ---------------------------------------------------------------------------
+// Model 5: stop/fault/EOS precedence is race-free
+// ---------------------------------------------------------------------------
+
+/// Two publishers end a shared topic concurrently — one cleanly, one
+/// with a fault. Whatever the detach order, every subscriber must
+/// observe `StreamEnd::Fault` (a recorded fault is sticky and outranks
+/// a clean EOS), so a fault can never be masked by a racing clean
+/// finish.
+fn fault_precedence_model() {
+    let reg = StreamRegistry::new();
+    let transport = InProcTransport::new(reg.clone());
+    let sub = reg.subscribe_with("faulty", 8, Qos::Blocking);
+    let clean = transport.advertise("faulty", Qos::Blocking).unwrap();
+    let faulty = transport.advertise("faulty", Qos::Blocking).unwrap();
+
+    let a = thread::spawn(move || {
+        let mut clean = clean;
+        let _ = clean.try_send(Buffer::from_f32(0, &[1.0]));
+        clean.finish();
+    });
+    let b = thread::spawn(move || {
+        let mut faulty = faulty;
+        faulty.fail(&Fault {
+            element: "model".into(),
+            message: "injected".into(),
+            panicked: false,
+        });
+    });
+    a.join().unwrap();
+    b.join().unwrap();
+
+    loop {
+        match sub.try_recv() {
+            Ok(_) => continue,
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    match sub.close_reason() {
+        Some(StreamEnd::Fault(f)) => assert_eq!(f.message, "injected"),
+        other => panic!("fault masked by racing clean EOS: close reason {other:?}"),
+    }
+}
+
+#[test]
+fn fault_outranks_clean_eos_in_every_interleaving() {
+    let cfg = Config {
+        dfs_max_runs: 300,
+        ..Config::default()
+    };
+    let outcome = check::explore(&cfg, fault_precedence_model);
+    if let Some(cex) = outcome.counterexample() {
+        panic!("stop/fault/EOS precedence raced:\n{cex}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Harness self-checks
+// ---------------------------------------------------------------------------
+
+/// A model that deadlocks by construction must be reported as such, and
+/// its counterexample must replay. This is the canary for the checker
+/// itself: if blocked-thread detection rots, this fails before any real
+/// model silently stops finding bugs.
+#[test]
+fn checker_detects_a_planted_deadlock() {
+    fn ab_ba_model() {
+        let a = Arc::new(Mutex::new(0u32));
+        let b = Arc::new(Mutex::new(0u32));
+        let t = {
+            let (a, b) = (a.clone(), b.clone());
+            thread::spawn(move || {
+                let ga = a.lock().unwrap();
+                let mut gb = b.lock().unwrap();
+                *gb += *ga;
+            })
+        };
+        {
+            let gb = b.lock().unwrap();
+            let mut ga = a.lock().unwrap();
+            *ga += *gb;
+        }
+        t.join().unwrap();
+    }
+
+    let outcome = check::explore(&Config::default(), ab_ba_model);
+    let cex = outcome
+        .counterexample()
+        .expect("AB/BA deadlock not found within budget")
+        .clone();
+    let reproduced = match cex.seed {
+        Some(seed) => check::replay(seed, ab_ba_model),
+        None => check::replay_trace(&cex.trace, ab_ba_model),
+    };
+    assert!(reproduced.is_some(), "deadlock did not replay:\n{cex}");
+}
+
+/// A race-free model passes and reports how much it explored.
+#[test]
+fn checker_passes_a_clean_model() {
+    let outcome = check::explore(&Config::default(), || {
+        let m = Arc::new(Mutex::new(0u32));
+        let t = {
+            let m = m.clone();
+            thread::spawn(move || *m.lock().unwrap() += 1)
+        };
+        t.join().unwrap();
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 2);
+    });
+    match outcome {
+        Outcome::Pass { runs } => assert!(runs > 0),
+        Outcome::Fail(cex) => panic!("clean model failed:\n{cex}"),
+    }
+}

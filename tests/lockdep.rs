@@ -1,0 +1,140 @@
+//! Lock-order analysis suite (debug builds; lockdep compiles to nothing
+//! in release, so this binary is empty there).
+//!
+//! Two halves, per the nnscheck design:
+//!
+//! * a **deliberate AB/BA fixture** must be flagged, with both lock
+//!   construction sites in the report — run against an isolated graph
+//!   so the planted inversion cannot pollute the process-global one;
+//! * a **representative clean workload** (a real pipeline run plus
+//!   topic pub/sub) must leave the process-global order graph acyclic
+//!   and non-trivial (edges were actually recorded — the analysis
+//!   observed the run, it did not just vacuously find nothing).
+
+#![cfg(debug_assertions)]
+
+use std::time::Duration;
+
+use nnstreamer::pipeline::{Pipeline, Qos, StreamRegistry};
+use nnstreamer::sync::lockdep::{self, SiteId};
+use nnstreamer::sync::{Condvar, Mutex};
+use nnstreamer::tensor::Buffer;
+
+/// The classic inversion: class A before class B on one path, B before
+/// A on another. Lock-order analysis needs no unlucky interleaving —
+/// both paths can run on one thread, sequentially, and the closing
+/// edge still reports (that is the point: latent deadlocks are found
+/// without ever deadlocking).
+#[test]
+fn ab_ba_inversion_is_flagged_with_both_sites() {
+    if !lockdep::enabled() {
+        eprintln!("NNS_LOCKDEP=0: skipping");
+        return;
+    }
+    let lock_a = Mutex::new(0u32);
+    let lock_b = Mutex::new(0u32);
+    let site_a = SiteId::of(lock_a.site());
+    let site_b = SiteId::of(lock_b.site());
+    assert_ne!(site_a, site_b, "distinct construction lines, distinct classes");
+
+    let ((), cycles, _waits) = lockdep::with_isolated_graph(|| {
+        {
+            let _ga = lock_a.lock().unwrap();
+            let _gb = lock_b.lock().unwrap();
+        }
+        {
+            let _gb = lock_b.lock().unwrap();
+            let _ga = lock_a.lock().unwrap();
+        }
+    });
+
+    assert_eq!(cycles.len(), 1, "exactly the planted inversion: {cycles:?}");
+    let cycle = &cycles[0];
+    let endpoints = [cycle.from, cycle.to];
+    assert!(
+        endpoints.contains(&site_a) && endpoints.contains(&site_b),
+        "report must carry both sites, got {} -> {}",
+        cycle.from,
+        cycle.to
+    );
+}
+
+/// Waiting on a condvar while still holding an unrelated lock is the
+/// shape of every convoy bug; lockdep records it as a diagnostic (not
+/// a failure — bounded-timeout forms are legitimate).
+#[test]
+fn wait_while_holding_is_recorded() {
+    if !lockdep::enabled() {
+        eprintln!("NNS_LOCKDEP=0: skipping");
+        return;
+    }
+    let outer = Mutex::new(0u32);
+    let inner = Mutex::new(0u32);
+    let cv = Condvar::new();
+    let outer_site = SiteId::of(outer.site());
+    let inner_site = SiteId::of(inner.site());
+
+    let ((), cycles, waits) = lockdep::with_isolated_graph(|| {
+        let _go = outer.lock().unwrap();
+        let gi = inner.lock().unwrap();
+        // Nobody notifies: the 1ms timeout returns promptly.
+        let _ = cv.wait_timeout(gi, Duration::from_millis(1)).unwrap();
+    });
+
+    assert!(cycles.is_empty(), "plain nesting is not an inversion");
+    assert_eq!(waits.len(), 1, "one wait-while-holding: {waits:?}");
+    assert_eq!(waits[0].waited_at, inner_site);
+    assert_eq!(waits[0].held, vec![outer_site]);
+}
+
+/// Drive the real streaming core — an executor-run pipeline and a
+/// topic with backpressure — and assert the global lock-order graph it
+/// leaves behind is acyclic. This is the suite-level promise DESIGN.md
+/// states: the production lock classes form a partial order.
+#[test]
+fn streaming_core_lock_order_graph_is_acyclic() {
+    if !lockdep::enabled() {
+        eprintln!("NNS_LOCKDEP=0: skipping");
+        return;
+    }
+
+    // A real pipeline run: run queue, sched cells, timers, inboxes.
+    let mut p = Pipeline::parse(
+        "videotestsrc num-buffers=8 ! videoconvert format=RGB ! \
+         tensor_converter ! tensor_transform mode=normalize ! \
+         tensor_sink name=out",
+    )
+    .expect("parse");
+    p.run().expect("pipeline run");
+
+    // Topic pub/sub with a small bound so the publisher parks at least
+    // conceptually through the same lock classes the serving path uses.
+    let reg = StreamRegistry::new();
+    let sub = reg.subscribe_with("lockdep-order", 2, Qos::Blocking);
+    let consumer = std::thread::spawn(move || {
+        let mut got = 0u32;
+        while sub.recv().is_ok() {
+            got += 1;
+        }
+        got
+    });
+    {
+        let mut publisher = reg.publish("lockdep-order");
+        for i in 0..16u64 {
+            publisher.push(Buffer::from_f32(i, &[i as f32])).unwrap();
+        }
+        publisher.end();
+    }
+    assert_eq!(consumer.join().unwrap(), 16);
+
+    assert!(
+        lockdep::global_edge_count() > 0,
+        "the workload must have recorded lock-order edges"
+    );
+    let cycles = lockdep::global_cycles();
+    assert!(
+        cycles.is_empty(),
+        "lock-order inversion in the streaming core: {cycles:?}"
+    );
+    assert!(lockdep::global_is_acyclic());
+}
